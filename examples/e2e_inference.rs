@@ -1,0 +1,166 @@
+//! END-TO-END DRIVER — proves all layers compose on a real workload.
+//!
+//! Pipeline exercised (no Python on the request path):
+//!   1. `make artifacts` (done beforehand) trained a tiny CNN in JAX,
+//!      quantized it, and AOT-lowered the golden model + the Pallas SAC
+//!      kernel to HLO text.
+//!   2. This binary validates all artifacts through PJRT (float golden
+//!      model, AOT SAC kernel, and the rust kneaded-SAC integer
+//!      pipeline — the last two bit-exactly).
+//!   3. It then serves batched inference requests through the
+//!      coordinator with the kneaded-SAC backend on the trained
+//!      weights, reporting latency/throughput and classification
+//!      agreement with the golden model.
+//!   4. Finally it reports the simulated Tetris vs DaDN cycles for the
+//!      served workload — the paper's headline metric on this model.
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_inference`
+
+use std::time::Duration;
+
+use tetris::config::{AccelConfig, CalibConfig};
+use tetris::coordinator::{
+    BatchPolicy, InferBackend, InferRequest, SacBackend, Server, ServerConfig,
+};
+use tetris::model::{zoo, Tensor};
+use tetris::runtime::{ArtifactDir, Engine};
+use tetris::sim::{dadn::DadnSim, sample::samples_from_loaded, simulate_network_with_samples};
+use tetris::util::cli::Args;
+use tetris::util::rng::Rng;
+
+fn main() {
+    let args = Args::new("end-to-end driver")
+        .opt("requests", "256", "requests to serve")
+        .opt("max-batch", "8", "dynamic batch bound")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("seed", "7", "load-generator seed")
+        .parse_env(1)
+        .unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2)
+        });
+    let dir = std::path::PathBuf::from(args.get("artifacts"));
+    let requests = args.get_usize("requests").expect("requests");
+    let max_batch = args.get_usize("max-batch").expect("max-batch");
+    let seed = args.get_u64("seed").expect("seed");
+
+    // ---- Stage 1: validate every artifact through the runtime. ----
+    println!("== stage 1: artifact validation (PJRT + bit-exactness) ==");
+    let artifacts = ArtifactDir::open(&dir).expect("artifacts (run `make artifacts`)");
+    let report = tetris::runtime::golden::validate(&artifacts).expect("golden validation");
+    println!(
+        "float golden max|err| {:.2e}; AOT Pallas SAC exact: {}; rust kneaded-SAC exact: {}",
+        report.golden_max_abs_err, report.sac_kernel_exact, report.quantized_exact
+    );
+
+    // ---- Stage 2: serve a batched load on the SAC backend. ----
+    println!("\n== stage 2: batched serving (kneaded-SAC backend, 2 workers) ==");
+    let weights = artifacts.load_weights().expect("weights");
+    let server = Server::start(
+        ServerConfig {
+            policy: BatchPolicy { max_batch, max_wait: Duration::from_millis(1) },
+            workers: 2,
+        },
+        {
+            let dir = dir.clone();
+            move |_| {
+                let w = tetris::model::read_weight_file(&dir.join("weights.bin"))?;
+                SacBackend::new(w)
+            }
+        },
+    )
+    .expect("server");
+
+    let mut rng = Rng::new(seed);
+    let mut images = Vec::new();
+    let mut true_classes = Vec::new();
+    for id in 0..requests as u64 {
+        let (t, class) = tetris::coordinator::demo::dataset_image(&mut rng);
+        images.push(t.clone());
+        true_classes.push(class);
+        server.submit(InferRequest::new(id, t)).expect("submit");
+    }
+    let mut responses: Vec<_> = (0..requests).map(|_| server.recv().expect("recv")).collect();
+    responses.sort_by_key(|r| r.id);
+    let metrics = server.shutdown();
+    println!("{}", metrics.render());
+    let correct = responses
+        .iter()
+        .filter(|r| r.argmax == true_classes[r.id as usize])
+        .count();
+    println!(
+        "served accuracy vs true labels: {correct}/{requests} ({:.1}%)",
+        correct as f64 / requests as f64 * 100.0
+    );
+
+    // ---- Stage 3: agreement with the PJRT golden model. ----
+    println!("\n== stage 3: classification agreement vs AOT golden model ==");
+    let engine = Engine::cpu().expect("pjrt");
+    let golden = engine.load_hlo_text(&dir.join("golden_cnn.hlo.txt")).expect("golden hlo");
+    let batch = artifacts.shape("golden", "input_shape").expect("shape")[0] as usize;
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    for chunk in responses.chunks(batch) {
+        if chunk.len() < batch {
+            break; // golden HLO has a fixed batch dimension
+        }
+        // Dequantize the Q8.8 images back to f32 for the float model.
+        let mut input = Vec::with_capacity(batch * 256);
+        for r in chunk {
+            input.extend(images[r.id as usize].data().iter().map(|&q| q as f32 / 256.0));
+        }
+        let logits = golden
+            .run_f32(&[(&input, &[batch as i64, 1, 16, 16])])
+            .expect("golden run");
+        for (i, r) in chunk.iter().enumerate() {
+            let row = &logits[i * 4..(i + 1) * 4];
+            let gold_argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(k, _)| k)
+                .unwrap();
+            agree += (gold_argmax == r.argmax) as usize;
+            total += 1;
+        }
+    }
+    println!(
+        "agreement: {agree}/{total} ({:.1}%) — quantized SAC vs float golden",
+        agree as f64 / total as f64 * 100.0
+    );
+
+    // ---- Stage 4: the paper's metric on this workload. ----
+    println!("\n== stage 4: simulated accelerator comparison (served workload) ==");
+    let net = zoo::tiny_cnn();
+    let cfg = AccelConfig::default();
+    let calib = CalibConfig::default();
+    let conv_only: Vec<_> =
+        weights.layers.iter().filter(|l| l.name != "fc").cloned().collect();
+    let conv_w = tetris::model::LoadedWeights { mode: weights.mode, layers: conv_only };
+    let samples = samples_from_loaded(&net, &conv_w).expect("samples");
+    let dadn = simulate_network_with_samples(&DadnSim, &net, &samples, &cfg, &calib);
+    let tetris_sim = simulate_network_with_samples(
+        &tetris::sim::tetris::TetrisSim,
+        &net,
+        &samples,
+        &cfg,
+        &calib,
+    );
+    let backend = SacBackend::new(weights).expect("backend");
+    let total_cycles = backend.sim_cycles(requests);
+    println!(
+        "per-image: DaDN {} cycles, Tetris {} cycles → {:.2}x speedup (real trained weights)",
+        dadn.total_cycles(),
+        tetris_sim.total_cycles(),
+        dadn.total_cycles() as f64 / tetris_sim.total_cycles() as f64
+    );
+    println!(
+        "served {} requests ≙ {} Tetris cycles = {:.3} ms @125 MHz",
+        requests,
+        total_cycles,
+        total_cycles as f64 / 125e6 * 1e3
+    );
+    println!("\nE2E OK — all layers composed.");
+}

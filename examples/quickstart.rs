@@ -1,0 +1,49 @@
+//! Quickstart: weight kneading + SAC in five minutes.
+//!
+//! Builds a synaptic lane, kneads it, runs split-and-accumulate, and
+//! shows (1) the partial sum is bit-exactly the MAC result and (2) the
+//! cycle count shrinks by the kneading ratio.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use tetris::config::Mode;
+use tetris::kneading::{knead_lane, Lane};
+use tetris::model::weights::{profile_with, DensityCalibration};
+use tetris::sac::SacUnit;
+use tetris::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(42);
+
+    // A lane: 64 (weight, activation) pairs like one conv reduction.
+    let profile = profile_with("vgg16", Mode::Fp16, DensityCalibration::Fig2).unwrap();
+    let weights = profile.generate(64, &mut rng);
+    let acts: Vec<i32> = (0..64).map(|_| rng.below(1 << 12) as i32).collect();
+    let lane = Lane::new(weights, acts);
+
+    // The accelerator's view: knead with stride 16 (the paper default).
+    let kneaded = knead_lane(&lane, 16, Mode::Fp16);
+    println!("lane weights:          {}", lane.len());
+    println!("kneaded weights:       {}", kneaded.kneaded_len());
+    println!(
+        "kneading ratio:        {:.2}x  (cycles saved: {:.0}%)",
+        kneaded.ratio().unwrap(),
+        (1.0 - kneaded.kneaded_len() as f64 / lane.len() as f64) * 100.0
+    );
+
+    // SAC: splitters route activations to segment adders; one rear
+    // shift-and-add finishes the partial sum.
+    let mut unit = SacUnit::new(Mode::Fp16);
+    let sac = unit.process_kneaded(&kneaded, &lane);
+    let mac = lane.mac_reference();
+    println!("SAC partial sum:       {sac}");
+    println!("MAC reference:         {mac}");
+    assert_eq!(sac, mac, "SAC must equal MAC bit-exactly");
+    println!("bit-exact:             true");
+
+    let a = unit.activity();
+    println!(
+        "activity: {} kneaded weights, {} segment adds, {} slot decodes, {} tree drain(s)",
+        a.kneaded_weights, a.segment_adds, a.slot_decodes, a.tree_drains
+    );
+}

@@ -1,0 +1,86 @@
+//! Serving-load example: drive the coordinator with an open-loop
+//! arrival process and study batching behaviour under load.
+//!
+//! Run: `cargo run --release --example serve -- --rps 2000 --seconds 3`
+
+use std::time::{Duration, Instant};
+
+use tetris::coordinator::{BatchPolicy, InferRequest, SacBackend, Server, ServerConfig};
+use tetris::model::Tensor;
+use tetris::util::cli::Args;
+use tetris::util::rng::Rng;
+
+fn main() {
+    let args = Args::new("open-loop serving load")
+        .opt("rps", "1000", "target arrival rate (requests/second)")
+        .opt("seconds", "2", "load duration")
+        .opt("max-batch", "8", "batcher bound")
+        .opt("max-wait-us", "2000", "batcher deadline in µs")
+        .opt("workers", "2", "worker threads")
+        .opt("seed", "1", "seed")
+        .parse_env(1)
+        .unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2)
+        });
+    let rps = args.get_f64("rps").expect("rps");
+    let seconds = args.get_f64("seconds").expect("seconds");
+    let max_batch = args.get_usize("max-batch").expect("max-batch");
+    let max_wait = Duration::from_micros(args.get_u64("max-wait-us").expect("wait"));
+    let workers = args.get_usize("workers").expect("workers");
+    let seed = args.get_u64("seed").expect("seed");
+
+    let use_artifacts = std::path::Path::new("artifacts/weights.bin").exists();
+    println!(
+        "open-loop load: {rps} req/s for {seconds}s, max_batch {max_batch}, \
+         {workers} workers, weights: {}",
+        if use_artifacts { "trained" } else { "synthetic" }
+    );
+    let server = Server::start(
+        ServerConfig { policy: BatchPolicy { max_batch, max_wait }, workers },
+        move |_| {
+            if use_artifacts {
+                SacBackend::new(tetris::model::read_weight_file(std::path::Path::new(
+                    "artifacts/weights.bin",
+                ))?)
+            } else {
+                SacBackend::synthetic(0xACC)
+            }
+        },
+    )
+    .expect("server");
+
+    // Open loop: submit on schedule from this thread, drain from a
+    // consumer thread so response backpressure never throttles arrivals.
+    let total = (rps * seconds) as u64;
+    let interval = Duration::from_secs_f64(1.0 / rps);
+    let start = Instant::now();
+    std::thread::scope(|scope| {
+        let server_ref = &server;
+        let consumer = scope.spawn(move || {
+            for _ in 0..total {
+                server_ref.recv().expect("recv");
+            }
+        });
+        let mut rng = Rng::new(seed);
+        for id in 0..total {
+            let target = start + interval.mul_f64(id as f64);
+            while Instant::now() < target {
+                std::thread::yield_now();
+            }
+            let mut t = Tensor::zeros(&[1, 16, 16]);
+            for v in t.data_mut() {
+                *v = rng.range_i64(-300, 300) as i32;
+            }
+            server_ref.submit(InferRequest::new(id, t)).expect("submit");
+        }
+        consumer.join().expect("consumer");
+    });
+    let wall = start.elapsed().as_secs_f64();
+    let metrics = server.shutdown();
+    println!("{}", metrics.render());
+    println!(
+        "offered {rps:.0} req/s → achieved {:.0} req/s over {wall:.2}s",
+        total as f64 / wall
+    );
+}

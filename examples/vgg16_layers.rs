@@ -1,0 +1,67 @@
+//! Per-layer VGG-16 study (the paper's Figure 9 scenario): simulate
+//! every conv layer on DaDN and Tetris, print cycles, speedups, and
+//! where the time goes.
+//!
+//! Run: `cargo run --release --example vgg16_layers [-- --ks 16 --mode fp16]`
+
+use tetris::config::{AccelConfig, CalibConfig, Mode};
+use tetris::energy::network_energy;
+use tetris::model::zoo;
+use tetris::sim::{dadn::DadnSim, simulate_network, tetris::TetrisSim};
+use tetris::util::cli::Args;
+
+fn main() {
+    let args = Args::new("vgg16 per-layer study")
+        .opt("ks", "16", "kneading stride")
+        .opt("mode", "fp16", "fp16|int8")
+        .opt("seed", "42", "sampling seed")
+        .parse_env(1)
+        .unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2)
+        });
+    let mode: Mode = args.get("mode").parse().expect("mode");
+    let ks = args.get_usize("ks").expect("ks");
+    let seed = args.get_u64("seed").expect("seed");
+
+    let net = zoo::vgg16();
+    let calib = CalibConfig::default();
+    let base_cfg = AccelConfig::default();
+    let cfg = AccelConfig { ks, mode, ..AccelConfig::default() };
+
+    let dadn = simulate_network(&DadnSim, &net, &base_cfg, &calib, seed).unwrap();
+    let tetris = simulate_network(&TetrisSim, &net, &cfg, &calib, seed).unwrap();
+
+    println!("VGG-16, Tetris {mode} ks={ks} vs DaDN @125 MHz\n");
+    println!(
+        "{:<10} {:>12} {:>14} {:>14} {:>9} {:>8}",
+        "layer", "MACs (M)", "DaDN cycles", "Tetris cycles", "speedup", "bound"
+    );
+    for (i, l) in net.layers.iter().enumerate() {
+        let d = &dadn.per_layer[i];
+        let t = &tetris.per_layer[i];
+        println!(
+            "{:<10} {:>12.1} {:>14} {:>14} {:>8.2}x {:>8}",
+            l.name,
+            l.macs() as f64 / 1e6,
+            d.cycles,
+            t.cycles,
+            d.cycles as f64 / t.cycles as f64,
+            if t.memory_bound { "memory" } else { "compute" },
+        );
+    }
+    let speedup = dadn.total_cycles() as f64 / tetris.total_cycles() as f64;
+    println!(
+        "\ntotal: DaDN {:.2} ms, Tetris {:.2} ms → {speedup:.2}x speedup",
+        dadn.time_s() * 1e3,
+        tetris.time_s() * 1e3
+    );
+    let ed = network_energy(&dadn, &calib);
+    let et = network_energy(&tetris, &calib);
+    println!(
+        "energy: DaDN {:.2} mJ, Tetris {:.2} mJ; power ratio {:.2}x (paper: 1.08x)",
+        ed.total_j() * 1e3,
+        et.total_j() * 1e3,
+        (et.total_j() / tetris.time_s()) / (ed.total_j() / dadn.time_s()),
+    );
+}

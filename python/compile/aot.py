@@ -1,0 +1,209 @@
+"""AOT artifact builder (build-time only; never on the request path).
+
+``python -m compile.aot --out-dir ../artifacts`` produces:
+
+* ``golden_cnn.hlo.txt``   — float forward of the trained tiny CNN with
+  weights baked in, input (BATCH,1,16,16) f32 → (BATCH,4) logits.
+* ``sac_matmul.hlo.txt``   — the Pallas SAC bit-plane matmul lowered to
+  HLO (interpret mode), inputs (A, planes) → product. Demonstrates the
+  L1 kernel surviving the full AOT → PJRT → rust round trip.
+* ``weights.bin``          — TTW1 quantized weights (fp16 Q1.15) for the
+  rust side (kneading, SAC functional path, timing sims).
+* ``weights_int8.bin``     — same in int8 Q1.7.
+* ``metadata.json``        — shapes, scales, training summary.
+* ``train_log.json``       — loss curve for EXPERIMENTS.md.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import struct
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref, sac_conv
+
+GOLDEN_BATCH = 8
+SAC_DEMO_M, SAC_DEMO_K, SAC_DEMO_N = 64, 72, 16
+SAC_DEMO_BITS = 16
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by parser).
+
+    `print_large_constants=True` is load-bearing: the default printer
+    elides big constants as `{...}`, which the HLO text parser silently
+    accepts as zeros — baked-in trained weights would vanish.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # jax 0.8's metadata attributes (source_end_line etc.) are unknown to
+    # the xla_extension 0.5.1 text parser on the rust side.
+    opts.print_metadata = False
+    text = comp.as_hlo_module().to_string(opts)
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text
+
+
+def write_ttw1(path: pathlib.Path, layers: list[tuple[str, np.ndarray, int]], mode: str):
+    """Write the TTW1 weight file (see rust/src/model/io.rs)."""
+    header_layers = []
+    payload = bytearray()
+    offset = 0
+    for name, w, frac_bits in layers:
+        w4 = w.reshape(w.shape[0], -1, 1, 1) if w.ndim == 2 else w
+        count = int(w4.size)
+        header_layers.append(
+            {
+                "name": name,
+                "shape": list(w4.shape),
+                "frac_bits": frac_bits,
+                "offset": offset,
+                "count": count,
+            }
+        )
+        payload += w4.astype("<i2").tobytes()
+        offset += count
+    header = json.dumps({"mode": mode, "layers": header_layers}).encode()
+    with open(path, "wb") as f:
+        f.write(b"TTW1")
+        f.write(struct.pack("<I", len(header)))
+        f.write(header)
+        f.write(bytes(payload))
+
+
+def build(out_dir: pathlib.Path, seed: int, steps: int) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    t0 = time.time()
+
+    # 1. Train the tiny CNN on synthetic data.
+    params, log = model.train(seed=seed, steps=steps)
+    train_s = time.time() - t0
+    print(f"[aot] trained tiny CNN: eval acc {log['eval_accuracy']:.3f} in {train_s:.1f}s")
+
+    # 2. Golden float model → HLO text (weights baked in).
+    spec = jax.ShapeDtypeStruct((GOLDEN_BATCH, 1, model.IMAGE_HW, model.IMAGE_HW), jnp.float32)
+    golden = lambda x: (model.forward_float(params, x),)
+    golden_hlo = to_hlo_text(jax.jit(golden).lower(spec))
+    (out_dir / "golden_cnn.hlo.txt").write_text(golden_hlo)
+
+    # 3. Pallas SAC matmul demo → HLO text.
+    a_spec = jax.ShapeDtypeStruct((SAC_DEMO_M, SAC_DEMO_K), jnp.int32)
+    p_spec = jax.ShapeDtypeStruct((SAC_DEMO_BITS, SAC_DEMO_K, SAC_DEMO_N), jnp.int8)
+    sac_fn = lambda a, p: (sac_conv.sac_matmul(a, p, block_m=64, block_n=16),)
+    sac_hlo = to_hlo_text(jax.jit(sac_fn).lower(a_spec, p_spec))
+    (out_dir / "sac_matmul.hlo.txt").write_text(sac_hlo)
+
+    # 4. Quantized weights for the rust side (per-layer frac bits).
+    for mode, fname in [("fp16", "weights.bin"), ("int8", "weights_int8.bin")]:
+        qw = model.quantize_weights(params, mode)
+        write_ttw1(
+            out_dir / fname,
+            [
+                ("conv1", qw["conv1"], qw["conv1_frac"]),
+                ("conv2", qw["conv2"], qw["conv2_frac"]),
+                ("conv3", qw["conv3"], qw["conv3_frac"]),
+                ("fc", qw["fc_w"].T, qw["fc_w_frac"]),  # (4,16) OI → OIHW
+            ],
+            mode,
+        )
+
+    # 5. Quantized-model agreement: SAC path vs float model (sanity) and
+    #    vs the integer oracle (exactness).
+    key = jax.random.PRNGKey(seed + 1)
+    x, y = model.make_dataset(key, 128)
+    x_q = model.quantize_acts(x)
+    qw16 = model.quantize_weights(params, "fp16")
+    logits_sac = model.forward_sac_quantized(qw16, x_q, "fp16")
+    logits_ref = model.forward_ref_quantized(qw16, x_q, "fp16")
+    assert (np.array(logits_sac) == np.array(logits_ref)).all(), "SAC != integer oracle"
+    q_acc = float((np.array(logits_sac).argmax(1) == np.array(y)).mean())
+    f_acc = float((np.array(model.forward_float(params, x)).argmax(1) == np.array(y)).mean())
+    print(f"[aot] quantized fp16 accuracy {q_acc:.3f} (float {f_acc:.3f})")
+
+    # 6. Golden-model reference vector for the rust runtime smoke test.
+    x_ref = np.array(x[:GOLDEN_BATCH], dtype=np.float32)
+    logits_ref_f = np.array(model.forward_float(params, jnp.asarray(x_ref)))
+    np.save(out_dir / "golden_input.npy", x_ref)
+    np.save(out_dir / "golden_logits.npy", logits_ref_f)
+    # Flat binary copies for the rust loader (no npy parser needed).
+    x_ref.astype("<f4").tofile(out_dir / "golden_input.f32")
+    logits_ref_f.astype("<f4").tofile(out_dir / "golden_logits.f32")
+
+    # 6b. Cross-language bit-exactness vectors: the rust integer SAC
+    #     pipeline must reproduce these logits *exactly* (invariant I3
+    #     across languages). Inputs are the quantized Q8.8 images.
+    x_q8 = np.array(model.quantize_acts(jnp.asarray(x_ref)), dtype=np.int32)
+    quant_logits = np.array(model.forward_sac_quantized(qw16, jnp.asarray(x_q8), "fp16"))
+    x_q8.astype("<i4").tofile(out_dir / "quant_input.i32")
+    quant_logits.astype("<i4").tofile(out_dir / "quant_logits.i32")
+
+    # 7. SAC demo reference vectors.
+    rng = np.random.default_rng(seed)
+    a_demo = rng.integers(0, 1 << 10, (SAC_DEMO_M, SAC_DEMO_K)).astype(np.int32)
+    w_demo = rng.integers(-(1 << 14), 1 << 14, (SAC_DEMO_K, SAC_DEMO_N)).astype(np.int32)
+    p_demo = ref.decompose_planes(w_demo, SAC_DEMO_BITS)
+    out_demo = np.array(a_demo.astype(np.int64) @ w_demo.astype(np.int64), dtype=np.int32)
+    a_demo.astype("<i4").tofile(out_dir / "sac_demo_a.i32")
+    p_demo.astype("<i1").tofile(out_dir / "sac_demo_planes.i8")
+    out_demo.astype("<i4").tofile(out_dir / "sac_demo_out.i32")
+
+    metadata = {
+        "seed": seed,
+        "train_steps": steps,
+        "train_seconds": round(train_s, 2),
+        "eval_accuracy": log["eval_accuracy"],
+        "quantized_fp16_accuracy": q_acc,
+        "float_accuracy_on_same_batch": f_acc,
+        "golden": {
+            "file": "golden_cnn.hlo.txt",
+            "input_shape": [GOLDEN_BATCH, 1, model.IMAGE_HW, model.IMAGE_HW],
+            "output_shape": [GOLDEN_BATCH, model.NUM_CLASSES],
+        },
+        "sac_demo": {
+            "file": "sac_matmul.hlo.txt",
+            "a_shape": [SAC_DEMO_M, SAC_DEMO_K],
+            "planes_shape": [SAC_DEMO_BITS, SAC_DEMO_K, SAC_DEMO_N],
+            "out_shape": [SAC_DEMO_M, SAC_DEMO_N],
+        },
+        "weights": {"fp16": "weights.bin", "int8": "weights_int8.bin"},
+        "quant": {
+            "input": "quant_input.i32",
+            "logits": "quant_logits.i32",
+            "input_shape": [GOLDEN_BATCH, 1, model.IMAGE_HW, model.IMAGE_HW],
+            "logits_shape": [GOLDEN_BATCH, model.NUM_CLASSES],
+            "act_frac_bits": model.ACT_FRAC_BITS,
+        },
+    }
+    (out_dir / "metadata.json").write_text(json.dumps(metadata, indent=2) + "\n")
+    (out_dir / "train_log.json").write_text(json.dumps(log, indent=2) + "\n")
+    print(f"[aot] artifacts written to {out_dir} in {time.time() - t0:.1f}s")
+    return metadata
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", type=pathlib.Path, default=pathlib.Path("../artifacts"))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--steps", type=int, default=400)
+    args = ap.parse_args()
+    build(args.out_dir, args.seed, args.steps)
+
+
+if __name__ == "__main__":
+    main()

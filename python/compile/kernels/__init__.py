@@ -1,0 +1,3 @@
+"""Layer-1 kernels: Pallas SAC (sac_conv) and pure-jnp oracles (ref)."""
+
+from . import ref, sac_conv  # noqa: F401

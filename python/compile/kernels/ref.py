@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for the SAC kernels.
+
+The correctness contract (invariant I5 in DESIGN.md): the bit-plane SAC
+computation must equal the plain quantized matmul / conv **exactly** in
+integer arithmetic — SAC is a re-association of the same sum, so there is
+no tolerance, only equality.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def decompose_planes(w: np.ndarray, bits: int) -> np.ndarray:
+    """Decompose signed integer weights into signed bit-planes.
+
+    ``w`` (K, N) int32 with |w| < 2**(bits-1)  →  planes (bits, K, N)
+    int8 in {-1, 0, +1} such that ``w == sum_b 2**b * planes[b]``.
+
+    This is the software image of weight kneading's input: plane ``b``
+    holds the essential bits at position ``b``, with the weight's sign
+    riding on the dispatched value (the splitter negates the routed
+    activation — sign-magnitude, §III.B of the paper).
+    """
+    w = np.asarray(w, dtype=np.int64)
+    if np.any(np.abs(w) >= 2 ** (bits - 1)):
+        raise ValueError(f"weight magnitude overflows {bits}-bit sign-magnitude")
+    mag = np.abs(w)
+    sign = np.sign(w)
+    planes = np.stack(
+        [((mag >> b) & 1).astype(np.int8) * sign.astype(np.int8) for b in range(bits)]
+    )
+    return planes
+
+
+def compose_planes(planes: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`decompose_planes` (losslessness check)."""
+    bits = planes.shape[0]
+    scale = (2 ** np.arange(bits, dtype=np.int64)).reshape(bits, 1, 1)
+    return (planes.astype(np.int64) * scale).sum(axis=0).astype(np.int32)
+
+
+def matmul_ref(a: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Exact integer matmul oracle: (M,K) i32 × (K,N) i32 → (M,N) i32."""
+    return jnp.matmul(a.astype(jnp.int32), w.astype(jnp.int32), preferred_element_type=jnp.int32)
+
+
+def sac_matmul_ref(a: jnp.ndarray, planes: jnp.ndarray) -> jnp.ndarray:
+    """SAC semantics in plain jnp: per-bit segment sums, one rear
+    shift-and-add (Eq. 2 of the paper)."""
+    bits = planes.shape[0]
+    # Segment S_b = A @ P_b — the per-bit-position accumulation.
+    segments = jnp.einsum(
+        "mk,bkn->bmn", a.astype(jnp.int32), planes.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    scale = (2 ** jnp.arange(bits, dtype=jnp.int32)).reshape(bits, 1, 1)
+    return (segments * scale).sum(axis=0).astype(jnp.int32)
+
+
+def conv2d_ref(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1, pad: int = 0) -> jnp.ndarray:
+    """Exact integer conv oracle: x (N,C,H,W) i32, w (O,C,kh,kw) i32."""
+    import jax
+
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.int32),
+        w.astype(jnp.int32),
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        preferred_element_type=jnp.int32,
+    )
+    return y.astype(jnp.int32)
+
+
+def im2col(x: jnp.ndarray, k: int, stride: int = 1, pad: int = 0) -> jnp.ndarray:
+    """Unfold (N,C,H,W) into (N*OH*OW, C*k*k) patches, NCHW/OIHW order
+    compatible with ``w.reshape(O, C*k*k).T``."""
+    n, c, h, w_ = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w_ + 2 * pad - k) // stride + 1
+    cols = []
+    for i in range(k):
+        for j in range(k):
+            cols.append(
+                xp[:, :, i : i + stride * oh : stride, j : j + stride * ow : stride]
+            )
+    # (k*k, N, C, OH, OW) → (N, OH, OW, C, k*k) → (N*OH*OW, C*k*k)
+    patches = jnp.stack(cols)  # (k*k, N, C, OH, OW)
+    patches = patches.transpose(1, 3, 4, 2, 0)  # N, OH, OW, C, k*k
+    return patches.reshape(n * oh * ow, c * k * k)

@@ -1,0 +1,146 @@
+"""Pallas SAC kernels — the paper's compute hot-spot re-architected for
+TPU (Layer 1).
+
+Hardware adaptation (DESIGN.md §3): the ASIC's per-bit splitter fabric
+becomes *bit-plane matmuls* on the MXU. A quantized matmul is computed
+as ``sum_b 2**b * (A @ P_b)`` where ``P_b`` is the signed {-1,0,1}
+bit-plane of the weights:
+
+* each plane matmul is the segment-adder array — the per-bit-position
+  accumulation S_b of Eq. (2);
+* the grid's plane dimension walks bit positions the way the splitter
+  walks kneaded slots;
+* the final ``<< b`` accumulation is the rear adder tree, performed once
+  per output block, off the per-pair critical path;
+* all-zero planes are skipped (``@pl.when``) — the MXU image of slack
+  elimination.
+
+Kernels run under ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; real-TPU efficiency is estimated from the BlockSpec
+footprint in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def sac_matmul(
+    a: jnp.ndarray,
+    planes: jnp.ndarray,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    skip_zero_planes: bool = True,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Bit-plane SAC matmul.
+
+    Args:
+      a: activations, (M, K) int32.
+      planes: signed weight bit-planes, (B, K, N) int8 in {-1, 0, 1}
+        (see ``ref.decompose_planes``).
+      block_m / block_n: VMEM tile sizes. 128×128 matches the MXU
+        systolic array; K is kept whole per tile (conv lanes are ≤ a few
+        thousand weights — they fit VMEM comfortably: a 128×2304 int32
+        tile is ~1.2 MB).
+      skip_zero_planes: skip the segment matmul for all-zero planes
+        (slack elimination).
+      interpret: must stay True on CPU-PJRT (see module docs).
+
+    Returns:
+      (M, N) int32, exactly equal to ``a @ compose(planes)``.
+    """
+    b_planes, k, n = planes.shape
+    m = a.shape[0]
+    if a.shape[1] != k:
+        raise ValueError(f"K mismatch: a {a.shape} vs planes {planes.shape}")
+    bm, bn = min(block_m, m), min(block_n, n)
+    # Pad M/N to tile multiples; sliced off at the end.
+    m_pad, n_pad = _cdiv(m, bm) * bm, _cdiv(n, bn) * bn
+    a_p = jnp.pad(a, ((0, m_pad - m), (0, 0)))
+    planes_p = jnp.pad(planes, ((0, 0), (0, 0), (0, n_pad - n)))
+
+    def kernel(a_ref, p_ref, o_ref):
+        b = pl.program_id(2)
+
+        @pl.when(b == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        plane = p_ref[0].astype(jnp.int32)
+
+        def segment():
+            # Segment adder array: S_b for this (M, N) tile.
+            seg = jnp.dot(a_ref[...], plane, preferred_element_type=jnp.int32)
+            # Rear adder tree contribution: shift once per plane.
+            o_ref[...] += seg << b
+
+        if skip_zero_planes:
+            @pl.when(jnp.any(plane != 0))
+            def _():
+                segment()
+        else:
+            segment()
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(m_pad // bm, n_pad // bn, b_planes),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j, b: (i, 0)),
+            pl.BlockSpec((1, k, bn), lambda i, j, b: (b, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, b: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), jnp.int32),
+        interpret=interpret,
+    )(a_p, planes_p)
+    return out[:m, :n]
+
+
+def sac_conv2d(
+    x: jnp.ndarray,
+    planes: jnp.ndarray,
+    *,
+    stride: int = 1,
+    pad: int = 0,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """SAC convolution via im2col + bit-plane matmul.
+
+    Args:
+      x: input feature map, (N, C, H, W) int32.
+      planes: signed bit-planes of OIHW weights, (B, O, C, kh, kw) int8.
+
+    Returns:
+      (N, O, OH, OW) int32, exactly equal to the integer convolution.
+    """
+    from . import ref
+
+    b_planes, o, c, kh, kw = planes.shape
+    if kh != kw:
+        raise ValueError("square kernels only")
+    n, c_in, h, w_ = x.shape
+    if c_in != c:
+        raise ValueError(f"channel mismatch: x {x.shape} vs planes {planes.shape}")
+    cols = ref.im2col(x, kh, stride=stride, pad=pad)  # (N*OH*OW, C*k*k)
+    w_planes = planes.reshape(b_planes, o, c * kh * kw).transpose(0, 2, 1)
+    out = sac_matmul(cols, w_planes, interpret=interpret)  # (N*OH*OW, O)
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w_ + 2 * pad - kw) // stride + 1
+    return out.reshape(n, oh, ow, o).transpose(0, 3, 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def decompose_planes_jnp(w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """jnp version of ``ref.decompose_planes`` for in-graph use."""
+    mag = jnp.abs(w)
+    sign = jnp.sign(w).astype(jnp.int8)
+    shifts = jnp.arange(bits, dtype=w.dtype)
+    planes = ((mag[None, ...] >> shifts.reshape(-1, *([1] * w.ndim))) & 1).astype(jnp.int8)
+    return planes * sign[None, ...]

@@ -1,0 +1,238 @@
+"""Layer 2 — the JAX model: a small CNN trained on synthetic data at
+build time, plus the quantized integer inference pipeline that calls the
+L1 SAC kernels.
+
+The CNN must stay in sync with ``rust/src/model/zoo.rs::tiny_cnn``:
+
+    conv1: 1→8  3×3 pad1 @16×16, relu, maxpool2   → 8×8
+    conv2: 8→16 3×3 pad1 @8×8,  relu, maxpool2    → 4×4
+    conv3: 16→16 3×3 pad1 @4×4, relu, global-mean → 16
+    fc:    16→4 logits
+
+The quantized path is integer-only and deterministic (activations Q8.8,
+weights Q1.15 or Q1.7), so the rust functional SAC pipeline can be
+checked bit-exactly against it.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref, sac_conv
+
+# Keep in sync with rust/src/model/zoo.rs::tiny_cnn.
+TINY_CNN_SPEC = (
+    ("conv1", 1, 8, 3, 1, 1, 16),
+    ("conv2", 8, 16, 3, 1, 1, 8),
+    ("conv3", 16, 16, 3, 1, 1, 4),
+)
+NUM_CLASSES = 4
+IMAGE_HW = 16
+
+# Q formats (match rust/src/quant/fixed.rs).
+ACT_FRAC_BITS = 8  # activations Q8.8
+W_FRAC_BITS = {"fp16": 15, "int8": 7}
+W_BITS = {"fp16": 16, "int8": 8}
+
+
+class Params(NamedTuple):
+    conv1: jnp.ndarray  # (8, 1, 3, 3)
+    conv2: jnp.ndarray  # (16, 8, 3, 3)
+    conv3: jnp.ndarray  # (16, 16, 3, 3)
+    fc_w: jnp.ndarray  # (16, 4)
+    fc_b: jnp.ndarray  # (4,)
+
+
+def init_params(key: jax.Array) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    he = lambda k, shape, fan_in: jax.random.normal(k, shape) * np.sqrt(2.0 / fan_in)
+    return Params(
+        conv1=he(k1, (8, 1, 3, 3), 9),
+        conv2=he(k2, (16, 8, 3, 3), 72),
+        conv3=he(k3, (16, 16, 3, 3), 144),
+        fc_w=he(k4, (16, NUM_CLASSES), 16),
+        fc_b=jnp.zeros((NUM_CLASSES,)),
+    )
+
+
+def _conv(x, w):
+    return jax.lax.conv_general_dilated(
+        x, w, (1, 1), [(1, 1), (1, 1)], dimension_numbers=("NCHW", "OIHW", "NCHW")
+    )
+
+
+def _pool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )
+
+
+def forward_float(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Float forward: (N,1,16,16) → (N,4) logits. The AOT golden model."""
+    h = _pool2(jax.nn.relu(_conv(x, params.conv1)))
+    h = _pool2(jax.nn.relu(_conv(h, params.conv2)))
+    h = jax.nn.relu(_conv(h, params.conv3))
+    feats = h.mean(axis=(2, 3))  # global average pool → (N, 16)
+    return feats @ params.fc_w + params.fc_b
+
+
+# ---------------------------------------------------------------------------
+# Synthetic dataset: four oriented-gradient classes + noise. Linearly
+# non-separable enough that the CNN must actually learn.
+# ---------------------------------------------------------------------------
+
+
+def make_dataset(key: jax.Array, n: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    k_label, k_noise, k_phase = jax.random.split(key, 3)
+    labels = jax.random.randint(k_label, (n,), 0, NUM_CLASSES)
+    yy, xx = jnp.mgrid[0:IMAGE_HW, 0:IMAGE_HW].astype(jnp.float32) / IMAGE_HW
+    phase = jax.random.uniform(k_phase, (n, 1, 1)) * 2.0
+    base = jnp.stack(
+        [
+            jnp.sin(2 * np.pi * (xx[None] + phase)),          # vertical stripes
+            jnp.sin(2 * np.pi * (yy[None] + phase)),          # horizontal stripes
+            jnp.sin(2 * np.pi * (xx[None] + yy[None] + phase)),  # diagonal
+            jnp.sin(4 * np.pi * ((xx - 0.5)[None] ** 2 + (yy - 0.5)[None] ** 2 + phase)),  # rings
+        ]
+    )  # (4, n, H, W)
+    imgs = base[labels, jnp.arange(n)]
+    noise = jax.random.normal(k_noise, imgs.shape) * 0.3
+    x = (imgs + noise)[:, None, :, :]  # (N, 1, H, W)
+    return x.astype(jnp.float32), labels
+
+
+# ---------------------------------------------------------------------------
+# Training (plain SGD + momentum; no external deps).
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params: Params, x, y):
+    logits = forward_float(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def train_step(params: Params, momentum: Params, x, y, lr: float = 0.05, beta: float = 0.9):
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+    momentum = jax.tree.map(lambda m, g: beta * m + g, momentum, grads)
+    params = jax.tree.map(lambda p, m: p - lr * m, params, momentum)
+    return params, momentum, loss
+
+
+def train(seed: int = 0, steps: int = 400, batch: int = 64):
+    """Train the tiny CNN; returns (params, log) where log records the
+    loss curve and final train/eval accuracy."""
+    key = jax.random.PRNGKey(seed)
+    k_init, k_data, k_eval = jax.random.split(key, 3)
+    params = init_params(k_init)
+    momentum = jax.tree.map(jnp.zeros_like, params)
+    log = {"loss": [], "step": []}
+    for step in range(steps):
+        k_data, k_batch = jax.random.split(k_data)
+        x, y = make_dataset(k_batch, batch)
+        params, momentum, loss = train_step(params, momentum, x, y)
+        if step % 10 == 0 or step == steps - 1:
+            log["loss"].append(float(loss))
+            log["step"].append(step)
+    # Final accuracies on held-out data.
+    xe, ye = make_dataset(k_eval, 512)
+    acc = float((forward_float(params, xe).argmax(1) == ye).mean())
+    log["eval_accuracy"] = acc
+    return params, log
+
+
+# ---------------------------------------------------------------------------
+# Quantization + integer SAC inference pipeline.
+# ---------------------------------------------------------------------------
+
+
+def quantize_weights(params: Params, mode: str = "fp16") -> dict[str, np.ndarray]:
+    """Quantize conv + fc weights to the mode's bit width with a
+    *per-layer* fractional-bit count chosen so the layer's max |w| does
+    not saturate (round-half-even) — mirrors rust/src/quant/fixed.rs and
+    the per-layer precision the paper notes DNNs need (§II.A).
+
+    Returns ``{name: qweights}`` plus ``{name + "_frac": frac_bits}``.
+    """
+    max_frac = W_FRAC_BITS[mode]
+    bound = 2 ** (W_BITS[mode] - 1) - 1
+
+    def q(w):
+        w = np.asarray(w, dtype=np.float64)
+        max_abs = np.abs(w).max()
+        frac = max_frac
+        while frac > 0 and max_abs * (1 << frac) > bound:
+            frac -= 1
+        r = np.rint(w * (1 << frac))
+        return np.clip(r, -bound, bound).astype(np.int32), frac
+
+    out: dict[str, np.ndarray | int] = {}
+    for name, w in [
+        ("conv1", params.conv1),
+        ("conv2", params.conv2),
+        ("conv3", params.conv3),
+        ("fc_w", params.fc_w),
+    ]:
+        out[name], out[name + "_frac"] = q(w)
+    return out
+
+
+def quantize_acts(x: jnp.ndarray) -> jnp.ndarray:
+    """Input images → Q8.8 integers (signed; inputs may be negative)."""
+    return jnp.clip(jnp.rint(x * (1 << ACT_FRAC_BITS)), -(1 << 15), (1 << 15) - 1).astype(
+        jnp.int32
+    )
+
+
+def _requantize(acc: jnp.ndarray, w_frac: int) -> jnp.ndarray:
+    """Conv accumulator (scale 2^(8+w_frac)) → Q8.8 by *rounding*
+    arithmetic right shift (add half-ulp then shift — deterministic,
+    mirrored by rust/src/runtime/golden.rs)."""
+    return jnp.right_shift(acc + (1 << (w_frac - 1)), w_frac)
+
+
+def _pool2_int(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.reduce_window(
+        x, jnp.iinfo(jnp.int32).min, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )
+
+
+def forward_sac_quantized(
+    qw: dict[str, np.ndarray], x_q: jnp.ndarray, mode: str = "fp16", interpret: bool = True
+) -> jnp.ndarray:
+    """Integer-only forward using the Pallas SAC conv for every layer.
+
+    Returns int32 logits in Q8.8 × 2^w_frac scale (argmax-compatible with
+    the float model after training). Bit-exactly reproducible in rust.
+    """
+    bits = W_BITS[mode]
+    h = x_q
+    for name in ("conv1", "conv2", "conv3"):
+        planes = jnp.asarray(ref.decompose_planes(qw[name], bits))
+        acc = sac_conv.sac_conv2d(h, planes, stride=1, pad=1, interpret=interpret)
+        h = jnp.maximum(_requantize(acc, qw[name + "_frac"]), 0)  # relu, Q8.8
+        if name != "conv3":
+            h = _pool2_int(h)
+    # Global average pool in integers: sum then floor-divide.
+    feats = h.sum(axis=(2, 3)) // (h.shape[2] * h.shape[3])  # (N, 16) Q8.8
+    planes_fc = jnp.asarray(ref.decompose_planes(qw["fc_w"], bits))
+    logits = sac_conv.sac_matmul(feats, planes_fc, interpret=interpret)
+    return logits
+
+
+def forward_ref_quantized(qw: dict[str, np.ndarray], x_q: jnp.ndarray, mode: str = "fp16"):
+    """Same integer pipeline with plain integer convs (oracle for I5)."""
+    h = x_q
+    for name in ("conv1", "conv2", "conv3"):
+        acc = ref.conv2d_ref(h, jnp.asarray(qw[name]), stride=1, pad=1)
+        h = jnp.maximum(_requantize(acc, qw[name + "_frac"]), 0)
+        if name != "conv3":
+            h = _pool2_int(h)
+    feats = h.sum(axis=(2, 3)) // (h.shape[2] * h.shape[3])
+    return ref.matmul_ref(feats, jnp.asarray(qw["fc_w"]))

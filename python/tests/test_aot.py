@@ -1,0 +1,72 @@
+"""AOT path: HLO text lowering and TTW1 weight-file format."""
+
+import json
+import pathlib
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+from compile.kernels import sac_conv
+
+
+def test_to_hlo_text_lowers_plain_jax():
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    fn = lambda x, y: (jnp.matmul(x, y) + 2.0,)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert "HloModule" in text
+    assert "dot" in text
+
+
+def test_to_hlo_text_lowers_pallas_interpret():
+    a_spec = jax.ShapeDtypeStruct((16, 8), jnp.int32)
+    p_spec = jax.ShapeDtypeStruct((8, 8, 8), jnp.int8)
+    fn = lambda a, p: (sac_conv.sac_matmul(a, p, block_m=16, block_n=8),)
+    text = aot.to_hlo_text(jax.jit(fn).lower(a_spec, p_spec))
+    assert "HloModule" in text
+    # interpret=True means no Mosaic custom-call survives into HLO.
+    assert "tpu_custom_call" not in text
+
+
+def test_write_ttw1_roundtrip(tmp_path: pathlib.Path):
+    w1 = np.arange(-9, 9).reshape(2, 1, 3, 3).astype(np.int32)
+    w2 = np.array([[1, -2], [3, -4]]).astype(np.int32)
+    path = tmp_path / "w.bin"
+    aot.write_ttw1(path, [("conv1", w1, 15), ("fc", w2, 12)], "fp16")
+    raw = path.read_bytes()
+    assert raw[:4] == b"TTW1"
+    (hdr_len,) = struct.unpack("<I", raw[4:8])
+    header = json.loads(raw[8 : 8 + hdr_len])
+    assert header["mode"] == "fp16"
+    assert header["layers"][0]["shape"] == [2, 1, 3, 3]
+    assert header["layers"][1]["shape"] == [2, 2, 1, 1]  # 2-D promoted to OIHW
+    assert header["layers"][1]["frac_bits"] == 12
+    payload = np.frombuffer(raw[8 + hdr_len :], dtype="<i2")
+    assert (payload[:18] == w1.flatten()).all()
+    assert (payload[18:] == w2.flatten()).all()
+
+
+def test_build_writes_all_artifacts(tmp_path: pathlib.Path):
+    meta = aot.build(tmp_path, seed=3, steps=60)
+    for f in [
+        "golden_cnn.hlo.txt",
+        "sac_matmul.hlo.txt",
+        "weights.bin",
+        "weights_int8.bin",
+        "metadata.json",
+        "train_log.json",
+        "golden_input.f32",
+        "golden_logits.f32",
+        "sac_demo_a.i32",
+        "sac_demo_planes.i8",
+        "sac_demo_out.i32",
+    ]:
+        assert (tmp_path / f).exists(), f
+    assert meta["eval_accuracy"] > 0.5
+    # Golden reference vectors are self-consistent with the HLO shapes.
+    x = np.fromfile(tmp_path / "golden_input.f32", dtype="<f4")
+    logits = np.fromfile(tmp_path / "golden_logits.f32", dtype="<f4")
+    assert x.size == aot.GOLDEN_BATCH * model.IMAGE_HW**2
+    assert logits.size == aot.GOLDEN_BATCH * model.NUM_CLASSES

@@ -1,0 +1,162 @@
+"""L1 correctness: Pallas SAC kernels vs the pure-jnp oracle.
+
+Invariant I5 (DESIGN.md): exact integer equality, no tolerances —
+SAC is a re-association of the same integer sum.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, sac_conv
+
+
+def rand_weights(rng, shape, bits):
+    bound = 2 ** (bits - 1)
+    return rng.integers(-(bound - 1), bound, shape).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Plane decomposition.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    k=st.integers(1, 40),
+    n=st.integers(1, 24),
+    bits=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decompose_compose_roundtrip(k, n, bits, seed):
+    rng = np.random.default_rng(seed)
+    w = rand_weights(rng, (k, n), bits)
+    planes = ref.decompose_planes(w, bits)
+    assert planes.shape == (bits, k, n)
+    assert planes.dtype == np.int8
+    assert set(np.unique(planes)) <= {-1, 0, 1}
+    assert (ref.compose_planes(planes) == w).all()
+
+
+def test_decompose_rejects_overflow():
+    with pytest.raises(ValueError):
+        ref.decompose_planes(np.array([[1 << 15]]), 16)
+    with pytest.raises(ValueError):
+        ref.decompose_planes(np.array([[-(1 << 7)]]), 8)
+
+
+def test_decompose_planes_jnp_matches_numpy():
+    rng = np.random.default_rng(7)
+    w = rand_weights(rng, (13, 5), 16)
+    a = np.array(sac_conv.decompose_planes_jnp(jnp.asarray(w), 16))
+    b = ref.decompose_planes(w, 16)
+    assert (a == b).all()
+
+
+# ---------------------------------------------------------------------------
+# SAC matmul vs oracle — the core kernel contract.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 64),
+    n=st.integers(1, 40),
+    bits=st.sampled_from([8, 16]),
+    block=st.sampled_from([8, 16, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sac_matmul_exact(m, k, n, bits, block, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 1 << 12, (m, k)).astype(np.int32)
+    w = rand_weights(rng, (k, n), bits)
+    planes = ref.decompose_planes(w, bits)
+    got = np.array(
+        sac_conv.sac_matmul(jnp.asarray(a), jnp.asarray(planes), block_m=block, block_n=block)
+    )
+    want = np.array(ref.matmul_ref(jnp.asarray(a), jnp.asarray(w)))
+    assert (got == want).all()
+
+
+def test_sac_matmul_negative_activations():
+    # FC layers may see signed activations.
+    rng = np.random.default_rng(3)
+    a = rng.integers(-(1 << 12), 1 << 12, (9, 17)).astype(np.int32)
+    w = rand_weights(rng, (17, 6), 16)
+    planes = ref.decompose_planes(w, 16)
+    got = np.array(sac_conv.sac_matmul(jnp.asarray(a), jnp.asarray(planes)))
+    assert (got == np.array(ref.matmul_ref(jnp.asarray(a), jnp.asarray(w)))).all()
+
+
+def test_sac_matmul_zero_plane_skip_equivalent():
+    # Skipping all-zero planes must not change results.
+    rng = np.random.default_rng(11)
+    a = rng.integers(0, 1 << 10, (16, 8)).astype(np.int32)
+    w = (rng.integers(0, 2, (8, 8)) * 5).astype(np.int32)  # only bits 0 and 2
+    planes = ref.decompose_planes(w, 16)  # planes 1, 3.. are all-zero
+    on = sac_conv.sac_matmul(jnp.asarray(a), jnp.asarray(planes), skip_zero_planes=True)
+    off = sac_conv.sac_matmul(jnp.asarray(a), jnp.asarray(planes), skip_zero_planes=False)
+    assert (np.array(on) == np.array(off)).all()
+
+
+def test_sac_matmul_shape_validation():
+    a = jnp.zeros((4, 5), jnp.int32)
+    p = jnp.zeros((16, 6, 3), jnp.int8)  # K mismatch
+    with pytest.raises(ValueError):
+        sac_conv.sac_matmul(a, p)
+
+
+def test_sac_ref_matches_matmul_ref():
+    # The jnp SAC oracle itself re-associates correctly.
+    rng = np.random.default_rng(5)
+    a = rng.integers(0, 1 << 10, (12, 20)).astype(np.int32)
+    w = rand_weights(rng, (20, 7), 16)
+    planes = ref.decompose_planes(w, 16)
+    got = np.array(ref.sac_matmul_ref(jnp.asarray(a), jnp.asarray(planes)))
+    assert (got == np.array(ref.matmul_ref(jnp.asarray(a), jnp.asarray(w)))).all()
+
+
+# ---------------------------------------------------------------------------
+# SAC conv2d vs oracle.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    c=st.integers(1, 8),
+    o=st.integers(1, 8),
+    hw=st.integers(3, 12),
+    k=st.sampled_from([1, 3]),
+    pad=st.sampled_from([0, 1]),
+    stride=st.sampled_from([1, 2]),
+    bits=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sac_conv2d_exact(n, c, o, hw, k, pad, stride, bits, seed):
+    if hw + 2 * pad < k:
+        return
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 1 << 9, (n, c, hw, hw)).astype(np.int32)
+    w = rand_weights(rng, (o, c, k, k), bits)
+    planes = ref.decompose_planes(w, bits)
+    got = np.array(
+        sac_conv.sac_conv2d(jnp.asarray(x), jnp.asarray(planes), stride=stride, pad=pad)
+    )
+    want = np.array(ref.conv2d_ref(jnp.asarray(x), jnp.asarray(w), stride=stride, pad=pad))
+    assert got.shape == want.shape
+    assert (got == want).all()
+
+
+def test_im2col_matches_conv():
+    # im2col × reshaped weights == conv (the bridge sac_conv2d relies on).
+    rng = np.random.default_rng(2)
+    x = rng.integers(0, 100, (2, 3, 7, 7)).astype(np.int32)
+    w = rand_weights(rng, (5, 3, 3, 3), 16)
+    cols = ref.im2col(jnp.asarray(x), 3, stride=1, pad=1)
+    flat = np.array(cols) @ w.reshape(5, -1).T
+    want = np.array(ref.conv2d_ref(jnp.asarray(x), jnp.asarray(w), stride=1, pad=1))
+    got = flat.reshape(2, 7, 7, 5).transpose(0, 3, 1, 2)
+    assert (got == want).all()

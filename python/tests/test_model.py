@@ -1,0 +1,84 @@
+"""L2 correctness: model shapes, quantization, training smoke, and the
+SAC-vs-oracle agreement of the full quantized pipeline."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def trained():
+    # Short training run shared across tests (smoke-level).
+    params, log = model.train(seed=1, steps=120, batch=32)
+    return params, log
+
+
+def test_forward_shapes():
+    params = model.init_params(jax.random.PRNGKey(0))
+    x = jnp.zeros((5, 1, 16, 16))
+    logits = model.forward_float(params, x)
+    assert logits.shape == (5, model.NUM_CLASSES)
+
+
+def test_dataset_shapes_and_labels():
+    x, y = model.make_dataset(jax.random.PRNGKey(3), 64)
+    assert x.shape == (64, 1, 16, 16)
+    assert y.shape == (64,)
+    assert set(np.unique(np.array(y))) <= set(range(model.NUM_CLASSES))
+    # All four classes appear in a reasonable batch.
+    assert len(np.unique(np.array(y))) == model.NUM_CLASSES
+
+
+def test_training_reduces_loss_and_learns(trained):
+    _, log = trained
+    assert log["loss"][0] > log["loss"][-1], "loss must decrease"
+    assert log["eval_accuracy"] > 0.7, f"eval acc {log['eval_accuracy']}"
+
+
+def test_quantize_weights_bounds(trained):
+    params, _ = trained
+    for mode, bits in [("fp16", 16), ("int8", 8)]:
+        qw = model.quantize_weights(params, mode)
+        bound = 2 ** (bits - 1)
+        for name in ("conv1", "conv2", "conv3", "fc_w"):
+            assert np.abs(qw[name]).max() < bound
+            frac = qw[name + "_frac"]
+            assert 0 < frac <= model.W_FRAC_BITS[mode]
+            # Dequantized weights approximate the originals.
+            w = np.asarray(getattr(params, name if name != "fc_w" else "fc_w"))
+            err = np.abs(qw[name] / (1 << frac) - w).max()
+            assert err <= 0.5 / (1 << frac) + 1e-9
+
+
+def test_sac_pipeline_equals_integer_oracle(trained):
+    params, _ = trained
+    x, _ = model.make_dataset(jax.random.PRNGKey(5), 16)
+    x_q = model.quantize_acts(x)
+    for mode in ("fp16", "int8"):
+        qw = model.quantize_weights(params, mode)
+        sac = np.array(model.forward_sac_quantized(qw, x_q, mode))
+        oracle = np.array(model.forward_ref_quantized(qw, x_q, mode))
+        assert (sac == oracle).all(), f"mode {mode}: SAC != oracle"
+
+
+def test_quantized_model_tracks_float(trained):
+    params, _ = trained
+    x, y = model.make_dataset(jax.random.PRNGKey(7), 256)
+    x_q = model.quantize_acts(x)
+    qw = model.quantize_weights(params, "fp16")
+    qacc = float(
+        (np.array(model.forward_ref_quantized(qw, x_q, "fp16")).argmax(1) == np.array(y)).mean()
+    )
+    facc = float((np.array(model.forward_float(params, x)).argmax(1) == np.array(y)).mean())
+    assert qacc >= facc - 0.05, f"quantized acc {qacc} vs float {facc}"
+
+
+def test_quantize_acts_is_saturating():
+    x = jnp.array([[300.0, -300.0, 0.5]])
+    q = np.array(model.quantize_acts(x))
+    assert q[0, 0] == (1 << 15) - 1
+    assert q[0, 1] == -(1 << 15)
+    assert q[0, 2] == 128

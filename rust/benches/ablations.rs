@@ -1,0 +1,94 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! * A1 — density calibration: Fig 8 speedups under the paper's two
+//!   (mutually inconsistent) bit-statistics claims.
+//! * A2 — eDRAM bandwidth: where the Tetris roofline flips from
+//!   compute-bound to memory-bound (the kneaded stream is wider).
+//! * A3 — kneading-stride pointer overhead: effective speedup after
+//!   charging the wider kneaded-stream traffic at each KS.
+//! * A4 — PE scaling: does the speedup survive chip scaling?
+//!
+//! Run: `cargo bench --bench ablations`
+
+use tetris::config::{AccelConfig, CalibConfig, Mode};
+use tetris::model::weights::DensityCalibration;
+use tetris::model::zoo;
+use tetris::sim::sample::sample_network_calibrated;
+use tetris::sim::{
+    dadn::DadnSim, simulate_network, simulate_network_with_samples, tetris::TetrisSim,
+};
+use tetris::util::bench::Harness;
+
+fn main() {
+    let mut h = Harness::new("ablations — calibration / bandwidth / stride / scaling");
+    let calib = CalibConfig::default();
+    let seed = 42;
+
+    // --- A1: density calibration --------------------------------------
+    for dc in [DensityCalibration::Fig2, DensityCalibration::Table1] {
+        let net = zoo::alexnet();
+        let cfg = AccelConfig::default();
+        let samples = sample_network_calibrated(&net, Mode::Fp16, seed, dc).unwrap();
+        let t = simulate_network_with_samples(&TetrisSim, &net, &samples, &cfg, &calib);
+        let d = simulate_network_with_samples(&DadnSim, &net, &samples, &cfg, &calib);
+        h.metric_row(
+            &format!("a1/density-{dc:?}"),
+            vec![(
+                "tetris_fp16_speedup".into(),
+                d.total_cycles() as f64 / t.total_cycles() as f64,
+            )],
+        );
+    }
+
+    // --- A2: eDRAM bandwidth sweep --------------------------------------
+    let net = zoo::vgg16();
+    for bw in [1usize, 2, 4, 8, 16, 32, 64] {
+        let cfg = AccelConfig { edram_words_per_cycle: bw, ..AccelConfig::default() };
+        let t = simulate_network(&TetrisSim, &net, &cfg, &calib, seed).unwrap();
+        let d = simulate_network(&DadnSim, &net, &cfg, &calib, seed).unwrap();
+        let mem_layers = t.per_layer.iter().filter(|l| l.memory_bound).count();
+        h.metric_row(
+            &format!("a2/bandwidth-{bw}w-per-cycle"),
+            vec![
+                ("speedup".into(), d.total_cycles() as f64 / t.total_cycles() as f64),
+                ("memory_bound_layers".into(), mem_layers as f64),
+            ],
+        );
+    }
+
+    // --- A3: stride vs pointer overhead ---------------------------------
+    let net = zoo::alexnet();
+    for ks in [4usize, 8, 16, 32, 64, 128] {
+        let cfg = AccelConfig { ks, ..AccelConfig::default() };
+        let t = simulate_network(&TetrisSim, &net, &cfg, &calib, seed).unwrap();
+        let d = simulate_network(&DadnSim, &net, &cfg, &calib, seed).unwrap();
+        h.metric_row(
+            &format!("a3/ks-{ks}"),
+            vec![
+                ("speedup".into(), d.total_cycles() as f64 / t.total_cycles() as f64),
+                ("pointer_bits".into(), cfg.pointer_bits() as f64),
+            ],
+        );
+    }
+
+    // --- A4: PE scaling ---------------------------------------------------
+    for pes in [4usize, 8, 16, 32, 64] {
+        let cfg = AccelConfig { pes, ..AccelConfig::default() };
+        let t = simulate_network(&TetrisSim, &net, &cfg, &calib, seed).unwrap();
+        let d = simulate_network(&DadnSim, &net, &cfg, &calib, seed).unwrap();
+        h.metric_row(
+            &format!("a4/pes-{pes}"),
+            vec![
+                ("speedup".into(), d.total_cycles() as f64 / t.total_cycles() as f64),
+                ("tetris_ms".into(), t.time_s() * 1e3),
+            ],
+        );
+    }
+
+    // Timed row so the ablation harness is regression-tracked too.
+    let cfg = AccelConfig::default();
+    h.bench("a0/simulate-alexnet-tetris", || {
+        simulate_network(&TetrisSim, &net, &cfg, &calib, 7).unwrap().total_cycles()
+    });
+    h.report();
+}

@@ -1,0 +1,52 @@
+//! Bench: regenerate Figure 10 (energy-delay-product efficiency
+//! normalized to DaDN).
+//!
+//! Run: `cargo bench --bench fig10_edp`
+
+use tetris::config::CalibConfig;
+use tetris::energy::{edp, network_energy};
+use tetris::model::zoo;
+use tetris::report::figures::design_points;
+use tetris::util::bench::Harness;
+
+fn main() {
+    let mut h = Harness::new("Figure 10 — EDP efficiency vs DaDN (higher is better)");
+    tetris::report::fig10(42, None).expect("fig10");
+
+    let calib = CalibConfig::default();
+    let mut geo = (0.0f64, 0.0f64, 0.0f64);
+    let nets = zoo::all();
+    for net in &nets {
+        let p = design_points(net, &calib, 42).expect("points");
+        let e = |s: &tetris::sim::NetworkSim| edp(network_energy(s, &calib).total_j(), s.time_s());
+        let d = e(&p.dadn);
+        let (ep, ef, ei) = (d / e(&p.pra), d / e(&p.tetris_fp16), d / e(&p.tetris_int8));
+        h.metric_row(
+            &format!("fig10/{}", net.name),
+            vec![
+                ("pra_eff".into(), ep),
+                ("tetris_fp16_eff".into(), ef),
+                ("tetris_int8_eff".into(), ei),
+            ],
+        );
+        geo.0 += ep.ln();
+        geo.1 += ef.ln();
+        geo.2 += ei.ln();
+    }
+    let n = nets.len() as f64;
+    h.metric_row(
+        "fig10/geomean (paper: PRA 0.35, fp16 1.24, int8 1.46; see EXPERIMENTS.md)",
+        vec![
+            ("pra_eff".into(), (geo.0 / n).exp()),
+            ("tetris_fp16_eff".into(), (geo.1 / n).exp()),
+            ("tetris_int8_eff".into(), (geo.2 / n).exp()),
+        ],
+    );
+
+    let net = zoo::alexnet();
+    h.bench("fig10/energy-model-alexnet", || {
+        let p = design_points(&net, &calib, 3).unwrap();
+        network_energy(&p.tetris_fp16, &calib).total_j()
+    });
+    h.report();
+}

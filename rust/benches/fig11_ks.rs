@@ -1,0 +1,42 @@
+//! Bench: regenerate Figure 11 (T_ks/T_base vs kneading stride for
+//! fp16 and int8) and time the kneading compiler across KS.
+//!
+//! Run: `cargo bench --bench fig11_ks`
+
+use tetris::config::Mode;
+use tetris::kneading::stats::KneadStats;
+use tetris::model::weights::{profile_with, DensityCalibration};
+use tetris::util::bench::Harness;
+use tetris::util::rng::Rng;
+
+fn main() {
+    let mut h = Harness::new("Figure 11 — T_ks/T_base under the KS sweep");
+    tetris::report::fig11(42, None).expect("fig11");
+
+    // Paper anchors: AlexNet fp16 0.751 @ KS=10 → 0.642 @ KS=32;
+    // int8 ≈ 0.49 flat (relative to the fp16 unkneaded base).
+    for mode in [Mode::Fp16, Mode::Int8] {
+        let profile = profile_with("alexnet", mode, DensityCalibration::Fig2).unwrap();
+        let mut rng = Rng::new(42);
+        let ws = profile.generate(256_000, &mut rng);
+        for ks in [10, 16, 24, 32] {
+            let s = KneadStats::measure(&ws, ks, mode);
+            let tf = s.time_fraction() / mode.kneaded_per_splitter() as f64;
+            h.metric_row(
+                &format!("fig11/{mode}-alexnet-ks{ks}"),
+                vec![("t_ks_over_t_base".into(), tf), ("ratio".into(), s.ratio())],
+            );
+        }
+    }
+
+    // Timed: kneading compiler throughput at several strides.
+    let profile = profile_with("vgg16", Mode::Fp16, DensityCalibration::Fig2).unwrap();
+    let mut rng = Rng::new(5);
+    let ws = profile.generate(256_000, &mut rng);
+    for ks in [8, 16, 32] {
+        h.bench(&format!("kneader/256k-weights-ks{ks}"), || {
+            KneadStats::measure(&ws, ks, Mode::Fp16).kneaded
+        });
+    }
+    h.report();
+}

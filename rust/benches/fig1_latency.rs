@@ -1,0 +1,32 @@
+//! Bench: regenerate Figure 1 (n-operand adder vs multiplier latency).
+//!
+//! Run: `cargo bench --bench fig1_latency`
+
+use tetris::latency;
+use tetris::util::bench::Harness;
+
+fn main() {
+    let mut h = Harness::new("Figure 1 — adder (2..16 operands) vs 16-bit multiplier");
+    tetris::report::fig1(None).expect("fig1");
+
+    let (adders, mult) = latency::fig1_series(16);
+    for (n, d) in &adders {
+        h.metric_row(
+            &format!("fig1/adder-{n}-operands"),
+            vec![("latency_ns".into(), *d), ("mult_over_adder".into(), mult / d)],
+        );
+    }
+    let overhead = mult / adders.last().unwrap().1 - 1.0;
+    h.metric_row(
+        "fig1/multiplier (paper overhead vs 16-op adder: 12.3%)",
+        vec![
+            ("latency_ns".into(), mult),
+            ("overhead_vs_16op_adder_pct".into(), overhead * 100.0),
+        ],
+    );
+
+    // Timed: the gate-delay evaluation itself (trivially fast; kept so
+    // the model stays regression-benchmarked).
+    h.bench("fig1/series-eval", || latency::fig1_series(16).0.len());
+    h.report();
+}

@@ -1,0 +1,37 @@
+//! Bench: regenerate Figure 2 (essential-bit distribution across bit
+//! positions, 500 kernels × 4 models).
+//!
+//! Run: `cargo bench --bench fig2_bits`
+
+use tetris::analysis;
+use tetris::model::weights::DensityCalibration;
+use tetris::util::bench::Harness;
+
+fn main() {
+    let mut h = Harness::new("Figure 2 — essential-bit (1s) distribution, bits 0..15");
+    tetris::report::fig2(42, None).expect("fig2");
+
+    for calib in [DensityCalibration::Fig2, DensityCalibration::Table1] {
+        let series = analysis::fig2(42, calib).expect("fig2 series");
+        for s in &series {
+            let plateau_mean = (0..15)
+                .filter(|b| ![3, 4, 5].contains(b))
+                .map(|b| s.density[b])
+                .sum::<f64>()
+                / 12.0;
+            let cliff_mean = [3, 4, 5].iter().map(|&b| s.density[b]).sum::<f64>() / 3.0;
+            h.metric_row(
+                &format!("fig2/{:?}/{}", calib, s.network),
+                vec![
+                    ("plateau_density".into(), plateau_mean),
+                    ("cliff_density".into(), cliff_mean),
+                ],
+            );
+        }
+    }
+
+    h.bench("fig2/measure-4-models-500-kernels", || {
+        analysis::fig2(7, DensityCalibration::Fig2).unwrap().len()
+    });
+    h.report();
+}

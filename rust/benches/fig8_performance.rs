@@ -1,0 +1,53 @@
+//! Bench: regenerate Figure 8 (end-to-end inference time, all four
+//! design points, five networks) and time the simulators.
+//!
+//! Run: `cargo bench --bench fig8_performance`
+
+use tetris::config::{AccelConfig, CalibConfig};
+use tetris::model::zoo;
+use tetris::report::figures::design_points;
+use tetris::sim::{simulate_network, tetris::TetrisSim};
+use tetris::util::bench::Harness;
+
+fn main() {
+    let mut h = Harness::new("Figure 8 — inference time & speedups over DaDN");
+    tetris::report::fig8(42, None).expect("fig8");
+
+    let calib = CalibConfig::default();
+    let mut geo = (0.0f64, 0.0f64, 0.0f64);
+    let nets = zoo::all();
+    for net in &nets {
+        let p = design_points(net, &calib, 42).expect("design points");
+        let d = p.dadn.time_s();
+        h.metric_row(
+            &format!("fig8/{}", net.name),
+            vec![
+                ("dadn_ms".into(), d * 1e3),
+                ("pra_x".into(), d / p.pra.time_s()),
+                ("tetris_fp16_x".into(), d / p.tetris_fp16.time_s()),
+                ("tetris_int8_x".into(), d / p.tetris_int8.time_s()),
+            ],
+        );
+        geo.0 += (d / p.pra.time_s()).ln();
+        geo.1 += (d / p.tetris_fp16.time_s()).ln();
+        geo.2 += (d / p.tetris_int8.time_s()).ln();
+    }
+    let n = nets.len() as f64;
+    h.metric_row(
+        "fig8/geomean (paper: PRA 1.15, fp16 1.30, int8 1.50)",
+        vec![
+            ("pra_x".into(), (geo.0 / n).exp()),
+            ("tetris_fp16_x".into(), (geo.1 / n).exp()),
+            ("tetris_int8_x".into(), (geo.2 / n).exp()),
+        ],
+    );
+
+    // Timed: the simulator itself (host cost of one full-network sim).
+    let cfg = AccelConfig::default();
+    for net in [zoo::alexnet(), zoo::vgg16()] {
+        h.bench(&format!("simulate/tetris-{}", net.name), || {
+            simulate_network(&TetrisSim, &net, &cfg, &calib, 9).unwrap().total_cycles()
+        });
+    }
+    h.report();
+}

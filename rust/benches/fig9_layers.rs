@@ -1,0 +1,36 @@
+//! Bench: regenerate Figure 9 (per-Conv-layer VGG-16 speedup over DaDN
+//! under two KS configurations).
+//!
+//! Run: `cargo bench --bench fig9_layers`
+
+use tetris::config::{AccelConfig, CalibConfig};
+use tetris::model::zoo;
+use tetris::sim::{dadn::DadnSim, simulate_network, tetris::TetrisSim};
+use tetris::util::bench::Harness;
+
+fn main() {
+    let mut h = Harness::new("Figure 9 — per-layer VGG-16 speedup (KS=8 vs KS=16)");
+    tetris::report::fig9(42, None).expect("fig9");
+
+    let calib = CalibConfig::default();
+    let net = zoo::vgg16();
+    let base = simulate_network(&DadnSim, &net, &AccelConfig::default(), &calib, 42).unwrap();
+    for ks in [8, 16] {
+        let cfg = AccelConfig { ks, ..AccelConfig::default() };
+        let sim = simulate_network(&TetrisSim, &net, &cfg, &calib, 42).unwrap();
+        for (i, l) in net.layers.iter().enumerate() {
+            h.metric_row(
+                &format!("fig9/ks{ks}/{}", l.name),
+                vec![(
+                    "speedup".into(),
+                    base.per_layer[i].cycles as f64 / sim.per_layer[i].cycles as f64,
+                )],
+            );
+        }
+    }
+    h.bench("fig9/full-vgg16-two-configs", || {
+        let cfg = AccelConfig { ks: 8, ..AccelConfig::default() };
+        simulate_network(&TetrisSim, &net, &cfg, &calib, 1).unwrap().total_cycles()
+    });
+    h.report();
+}

@@ -1,0 +1,81 @@
+//! Bench: hot-path microbenchmarks — the instrument for the §Perf
+//! optimization pass (EXPERIMENTS.md §Perf).
+//!
+//! Covers the kneading compiler, the SAC functional unit, the quantized
+//! inference pipeline, and the coordinator batch path.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use std::time::Duration;
+
+use tetris::config::Mode;
+use tetris::coordinator::{BatchPolicy, InferRequest, SacBackend, Server, ServerConfig};
+use tetris::kneading::{knead_group, knead_lane, Lane};
+use tetris::model::weights::{profile_with, DensityCalibration};
+use tetris::model::Tensor;
+use tetris::sac::SacUnit;
+use tetris::util::bench::Harness;
+use tetris::util::rng::Rng;
+
+fn main() {
+    let mut h = Harness::new("hot paths — kneader / SAC / pipeline / coordinator");
+    let profile = profile_with("vgg16", Mode::Fp16, DensityCalibration::Fig2).unwrap();
+    let mut rng = Rng::new(11);
+
+    // 1. Kneading compiler: one group and one conv lane.
+    let group: Vec<i32> = profile.generate(16, &mut rng);
+    h.bench("knead/group-16", || knead_group(&group, Mode::Fp16).len());
+
+    let lane_weights = profile.generate(2304, &mut rng); // VGG conv lane 256·3·3
+    let lane = Lane::new(lane_weights.clone(), vec![777; 2304]);
+    h.bench("knead/lane-2304", || knead_lane(&lane, 16, Mode::Fp16).kneaded_len());
+
+    // 2. SAC functional unit over a pre-kneaded lane.
+    let kneaded = knead_lane(&lane, 16, Mode::Fp16);
+    h.bench("sac/process-kneaded-lane-2304", || {
+        let mut unit = SacUnit::new(Mode::Fp16);
+        unit.process_kneaded(&kneaded, &lane)
+    });
+    h.bench("sac/knead+process-lane-2304", || {
+        let mut unit = SacUnit::new(Mode::Fp16);
+        unit.process_lane(&lane, 16)
+    });
+
+    // 3. Quantized tiny-CNN inference (the serving backend's unit of work).
+    let mut backend = SacBackend::synthetic(3).unwrap();
+    let mut img = Tensor::zeros(&[4, 1, 16, 16]);
+    for (i, v) in img.data_mut().iter_mut().enumerate() {
+        *v = (i as i32 % 509) - 250;
+    }
+    use tetris::coordinator::InferBackend;
+    h.bench("pipeline/tiny-cnn-batch4", || backend.infer_batch(&img).unwrap().len());
+
+    // 4. Coordinator round trip (16 requests through batcher + workers).
+    h.bench("coordinator/serve-16-requests", || {
+        let server = Server::start(
+            ServerConfig {
+                policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) },
+                workers: 2,
+            },
+            |_| SacBackend::synthetic(1),
+        )
+        .unwrap();
+        let mut r = Rng::new(1);
+        for id in 0..16u64 {
+            let mut t = Tensor::zeros(&[1, 16, 16]);
+            for v in t.data_mut() {
+                *v = r.range_i64(-300, 300) as i32;
+            }
+            server.submit(InferRequest::new(id, t)).unwrap();
+        }
+        for _ in 0..16 {
+            server.recv().unwrap();
+        }
+        server.shutdown().requests_done
+    });
+
+    h.report();
+    if let Ok(dir) = std::env::var("TETRIS_BENCH_CSV") {
+        h.write_csv(std::path::Path::new(&dir).join("hotpath.csv").as_path()).ok();
+    }
+}

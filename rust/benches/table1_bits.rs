@@ -1,0 +1,57 @@
+//! Bench: regenerate Table 1 (zero-weight / zero-bit fractions) and
+//! time the bit-statistics pass.
+//!
+//! Run: `cargo bench --bench table1_bits`
+
+use tetris::analysis;
+use tetris::config::Mode;
+use tetris::model::weights::{profile_with, DensityCalibration};
+use tetris::quant::stats::BitStats;
+use tetris::util::bench::Harness;
+use tetris::util::rng::Rng;
+
+fn main() {
+    let mut h = Harness::new("Table 1 — zero weights & zero bits in all weights");
+
+    // The measurement itself (prints the paper-style table).
+    tetris::report::table1(42, None).expect("table1");
+
+    // Metric rows: measured vs paper for machine consumption.
+    let rows = analysis::table1(42).expect("table1 rows");
+    for r in &rows {
+        h.metric_row(
+            &format!("table1/{}", r.network),
+            vec![
+                ("zero_weights_pct".into(), r.zero_weights_pct),
+                ("zero_bits_pct".into(), r.zero_bits_pct),
+            ],
+        );
+    }
+    let gm = analysis::table1_geomean(&rows);
+    h.metric_row(
+        "table1/geomean (paper: 0.135 / 68.88)",
+        vec![
+            ("zero_weights_pct".into(), gm.zero_weights_pct),
+            ("zero_bits_pct".into(), gm.zero_bits_pct),
+        ],
+    );
+
+    // Timed: BitStats accumulation throughput (the analysis hot loop).
+    let profile = profile_with("vgg16", Mode::Fp16, DensityCalibration::Table1).unwrap();
+    let mut rng = Rng::new(7);
+    let ws = profile.generate(1_000_000, &mut rng);
+    h.bench("bitstats/accumulate-1M-weights", || {
+        let mut s = BitStats::new(Mode::Fp16);
+        s.add_all(&ws);
+        s.zero_bit_fraction()
+    });
+    h.bench("generator/sample-100k-weights", || {
+        let mut r = Rng::new(3);
+        profile.generate(100_000, &mut r).len()
+    });
+
+    h.report();
+    if let Ok(dir) = std::env::var("TETRIS_BENCH_CSV") {
+        h.write_csv(std::path::Path::new(&dir).join("table1_bits.csv").as_path()).ok();
+    }
+}

@@ -1,0 +1,34 @@
+//! Bench: regenerate Table 2 (area overhead + per-PE breakdown).
+//!
+//! Run: `cargo bench --bench table2_area`
+
+use tetris::config::{AccelConfig, CalibConfig};
+use tetris::energy::chip_area;
+use tetris::util::bench::Harness;
+
+fn main() {
+    let mut h = Harness::new("Table 2 — area overhead (TSMC 65nm model)");
+    tetris::report::table2(None).expect("table2");
+
+    let cfg = AccelConfig::default();
+    let calib = CalibConfig::default();
+    let d = chip_area("dadn", &cfg, &calib).unwrap().total_mm2();
+    for (design, paper) in [("dadn", 79.36), ("pra", 153.65), ("tetris", 89.76)] {
+        let rep = chip_area(design, &cfg, &calib).unwrap();
+        h.metric_row(
+            &format!("table2/{design} (paper {paper} mm²)"),
+            vec![
+                ("total_mm2".into(), rep.total_mm2()),
+                ("vs_dadn".into(), rep.total_mm2() / d),
+            ],
+        );
+    }
+    let tetris = chip_area("tetris", &cfg, &calib).unwrap();
+    for (name, area) in tetris.per_pe(cfg.pes) {
+        h.metric_row(
+            &format!("table2/pe-breakdown/{}", name.replace(' ', "-")),
+            vec![("mm2".into(), area)],
+        );
+    }
+    h.report();
+}

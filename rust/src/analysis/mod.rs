@@ -1,0 +1,169 @@
+//! Bit-level statistics analysis — the measurements behind Table 1 and
+//! Figure 2.
+
+use crate::config::Mode;
+use crate::model::weights::{profile_with, DensityCalibration};
+use crate::model::zoo;
+use crate::quant::stats::BitStats;
+use crate::quant::QWeight;
+use crate::util::pool::par_map;
+use crate::util::rng::Rng;
+
+/// Table 1 row: measured zero-value and zero-bit fractions per network.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub network: String,
+    pub zero_weights_pct: f64,
+    pub zero_bits_pct: f64,
+}
+
+/// Weights sampled per network for the table (enough that sampling noise
+/// is below the displayed precision).
+pub const TABLE1_SAMPLE: usize = 400_000;
+
+/// Measure Table 1 over the calibrated generator (or any weight slice).
+pub fn table1(seed: u64) -> crate::Result<Vec<Table1Row>> {
+    let nets = zoo::all();
+    let rows = par_map(&nets, |i, net| {
+        let profile = profile_with(&net.name, Mode::Fp16, DensityCalibration::Table1)
+            .expect("zoo networks always have profiles");
+        let mut rng = Rng::new(seed ^ (i as u64) << 17);
+        let ws = profile.generate(TABLE1_SAMPLE, &mut rng);
+        let mut s = BitStats::new(Mode::Fp16);
+        s.add_all(&ws);
+        Table1Row {
+            network: net.name.clone(),
+            zero_weights_pct: s.zero_weight_fraction() * 100.0,
+            zero_bits_pct: s.zero_bit_fraction() * 100.0,
+        }
+    });
+    Ok(rows)
+}
+
+/// Measure Table 1 from explicit weights (real trained weights path).
+pub fn table1_from_weights(name: &str, ws: &[QWeight], mode: Mode) -> Table1Row {
+    let mut s = BitStats::new(mode);
+    s.add_all(ws);
+    Table1Row {
+        network: name.to_string(),
+        zero_weights_pct: s.zero_weight_fraction() * 100.0,
+        zero_bits_pct: s.zero_bit_fraction() * 100.0,
+    }
+}
+
+/// Geometric mean of Table 1 rows (the paper's GeoMean row).
+pub fn table1_geomean(rows: &[Table1Row]) -> Table1Row {
+    let n = rows.len() as f64;
+    let gm = |f: &dyn Fn(&Table1Row) -> f64| {
+        (rows.iter().map(|r| f(r).max(1e-12).ln()).sum::<f64>() / n).exp()
+    };
+    Table1Row {
+        network: "geomean".into(),
+        zero_weights_pct: gm(&|r| r.zero_weights_pct),
+        zero_bits_pct: gm(&|r| r.zero_bits_pct),
+    }
+}
+
+/// Figure 2: per-bit essential densities for the four models the paper
+/// plots (AlexNet, GoogleNet, VGG-16, NiN), 500 kernels each.
+#[derive(Debug, Clone)]
+pub struct Fig2Series {
+    pub network: String,
+    /// Essential-bit density at positions 0..16.
+    pub density: Vec<f64>,
+}
+
+/// Kernels sampled per network ("500 kernels", §II.B) and the kernel
+/// size used for sampling.
+pub const FIG2_KERNELS: usize = 500;
+pub const FIG2_KERNEL_WEIGHTS: usize = 3 * 3 * 64; // 3×3 kernels, 64 ch
+
+/// Measure Figure 2 under a chosen calibration.
+pub fn fig2(seed: u64, calib: DensityCalibration) -> crate::Result<Vec<Fig2Series>> {
+    let names = ["alexnet", "googlenet", "vgg16", "nin"];
+    let series = par_map(&names, |i, name| {
+        let profile = profile_with(name, Mode::Fp16, calib).expect("profiled network");
+        let mut rng = Rng::new(seed ^ (0xF16 + i as u64) << 13);
+        let mut s = BitStats::new(Mode::Fp16);
+        for _ in 0..FIG2_KERNELS {
+            let ws = profile.generate(FIG2_KERNEL_WEIGHTS, &mut rng);
+            s.add_all(&ws);
+        }
+        Fig2Series { network: name.to_string(), density: s.essential_density_per_bit() }
+    });
+    Ok(series)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper_anchors() {
+        let rows = table1(42).unwrap();
+        assert_eq!(rows.len(), 5);
+        for row in &rows {
+            let (_, zw, zb) = crate::model::weights::TABLE1_ANCHORS
+                .iter()
+                .find(|(n, _, _)| *n == row.network)
+                .unwrap();
+            assert!(
+                (row.zero_weights_pct - zw * 100.0).abs() < 0.15,
+                "{}: zero weights {} vs {}",
+                row.network,
+                row.zero_weights_pct,
+                zw * 100.0
+            );
+            assert!(
+                (row.zero_bits_pct - zb * 100.0).abs() < 2.0,
+                "{}: zero bits {} vs {}",
+                row.network,
+                row.zero_bits_pct,
+                zb * 100.0
+            );
+        }
+    }
+
+    #[test]
+    fn geomean_near_paper() {
+        let rows = table1(7).unwrap();
+        let gm = table1_geomean(&rows);
+        // Paper GeoMean: 0.135% zero weights, 68.88% zero bits.
+        assert!((gm.zero_bits_pct - 68.88).abs() < 2.0, "{}", gm.zero_bits_pct);
+        assert!((gm.zero_weights_pct - 0.135).abs() < 0.08, "{}", gm.zero_weights_pct);
+    }
+
+    #[test]
+    fn fig2_has_cliff_and_plateau() {
+        for calib in [DensityCalibration::Table1, DensityCalibration::Fig2] {
+            let series = fig2(3, calib).unwrap();
+            assert_eq!(series.len(), 4);
+            for s in &series {
+                assert_eq!(s.density.len(), 16);
+                // Observation (2): bits 3–5 are a cliff (<1% essential).
+                for b in [3, 4, 5] {
+                    assert!(s.density[b] < 0.01, "{} bit {b}: {}", s.network, s.density[b]);
+                }
+                // Observation (1): other bits form a plateau, no outlier
+                // position dominating. Bit 15 is the sign-magnitude MSB
+                // slot (always 0) — excluded like the cliff.
+                let plateau: Vec<f64> = (0..15)
+                    .filter(|b| ![3, 4, 5].contains(b))
+                    .map(|b| s.density[b])
+                    .collect();
+                let max = plateau.iter().cloned().fold(0.0, f64::max);
+                let min = plateau.iter().cloned().fold(1.0, f64::min);
+                assert!(max < 0.98 && min > 0.1, "{}: plateau [{min}, {max}]", s.network);
+                assert!(s.density[15] < 1e-9, "{}: MSB slot must be empty", s.network);
+            }
+        }
+    }
+
+    #[test]
+    fn table1_from_real_weights() {
+        let row = table1_from_weights("test", &[0, 1, 3, 0x7FFF], Mode::Fp16);
+        assert_eq!(row.zero_weights_pct, 25.0);
+        // essential bits: 0 + 1 + 2 + 15 = 18 of 64 → zero 71.875%.
+        assert!((row.zero_bits_pct - 71.875).abs() < 1e-9);
+    }
+}

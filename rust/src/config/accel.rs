@@ -1,0 +1,255 @@
+//! Accelerator configuration (§III of the paper + §IV experimental setup).
+
+use crate::util::json::Json;
+
+/// Precision mode of the accelerator (§III.C.3).
+///
+/// * [`Mode::Fp16`] — 16-bit fixed-point weights; each splitter consumes
+///   one kneaded weight per cycle and all 16 segment adders serve it.
+/// * [`Mode::Int8`]  — 8-bit weights; each splitter is halved and consumes
+///   *two* kneaded weights per cycle (upper 8 / lower 8 segment adders),
+///   doubling throughput at equal kneading stride.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Mode {
+    Fp16,
+    Int8,
+}
+
+impl std::str::FromStr for Mode {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "fp16" => Ok(Mode::Fp16),
+            "int8" => Ok(Mode::Int8),
+            other => Err(format!("unknown mode `{other}` (want fp16|int8)")),
+        }
+    }
+}
+
+impl Mode {
+    /// Number of magnitude bit positions a weight occupies.
+    ///
+    /// Weights are handled sign-magnitude (the sign rides with the
+    /// activation dispatch, see `sac::splitter`): fp16 → bits 0..16,
+    /// int8 → bits 0..8.
+    pub const fn weight_bits(self) -> usize {
+        match self {
+            Mode::Fp16 => 16,
+            Mode::Int8 => 8,
+        }
+    }
+
+    /// Kneaded weights consumed per splitter per cycle.
+    pub const fn kneaded_per_splitter(self) -> usize {
+        match self {
+            Mode::Fp16 => 1,
+            Mode::Int8 => 2,
+        }
+    }
+
+    /// Maximum representable magnitude (exclusive bound).
+    pub const fn magnitude_bound(self) -> i32 {
+        1 << (self.weight_bits() - 1) // keep one headroom bit: Q1.(B-1)
+    }
+}
+
+impl std::fmt::Display for Mode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Mode::Fp16 => write!(f, "fp16"),
+            Mode::Int8 => write!(f, "int8"),
+        }
+    }
+}
+
+/// Full accelerator configuration.
+///
+/// Defaults mirror the paper's evaluation setup (§IV): 16 PEs at 125 MHz,
+/// 16 splitters and 16 segment adders per SAC unit, kneading stride 16.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AccelConfig {
+    /// Number of processing elements (SAC units for Tetris).
+    pub pes: usize,
+    /// Splitters per SAC unit (== multiplier lanes per DaDN PE).
+    pub splitters_per_pe: usize,
+    /// Segment adders per SAC unit (16 for fp16 coverage).
+    pub segment_adders: usize,
+    /// Kneading stride — weights kneaded per group (§III.B, Fig 11).
+    pub ks: usize,
+    /// Precision mode.
+    pub mode: Mode,
+    /// Clock frequency in MHz (125 in the paper, Xilinx Z7020 reference).
+    pub freq_mhz: f64,
+    /// Throttle-buffer capacity in kneaded weights per PE (5 KB in Table 2;
+    /// a kneaded fp16 weight with KS=16 pointers is 16 slots × (1+4) bits
+    /// = 80 bits = 10 B → ~512 entries).
+    pub throttle_entries: usize,
+    /// eDRAM read bandwidth in weight-words per cycle per PE.
+    pub edram_words_per_cycle: usize,
+    /// eDRAM access latency in cycles (refill stall when buffer empties).
+    pub edram_latency: usize,
+}
+
+impl Default for AccelConfig {
+    fn default() -> Self {
+        Self {
+            pes: 16,
+            splitters_per_pe: 16,
+            segment_adders: 16,
+            ks: 16,
+            mode: Mode::Fp16,
+            freq_mhz: 125.0,
+            throttle_entries: 512,
+            edram_words_per_cycle: 32,
+            edram_latency: 4,
+        }
+    }
+}
+
+impl AccelConfig {
+    /// Pointer width in bits required by the kneading stride (the `p`
+    /// field of Fig 6): ⌈log2 KS⌉.
+    pub fn pointer_bits(&self) -> u32 {
+        usize::BITS - (self.ks - 1).leading_zeros()
+    }
+
+    /// Lane-level parallelism: kneaded weights the whole chip consumes
+    /// per cycle.
+    pub fn kneaded_throughput(&self) -> usize {
+        self.pes * self.splitters_per_pe * self.mode.kneaded_per_splitter()
+    }
+
+    /// MAC-equivalent throughput of the DaDN baseline with the same
+    /// multiplier allocation (pairs per cycle).
+    pub fn mac_throughput(&self) -> usize {
+        self.pes * self.splitters_per_pe
+    }
+
+    /// Seconds per cycle.
+    pub fn cycle_time_s(&self) -> f64 {
+        1.0 / (self.freq_mhz * 1.0e6)
+    }
+
+    /// Serialize to JSON (config files, artifact metadata).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("pes", Json::Num(self.pes as f64)),
+            ("splitters_per_pe", Json::Num(self.splitters_per_pe as f64)),
+            ("segment_adders", Json::Num(self.segment_adders as f64)),
+            ("ks", Json::Num(self.ks as f64)),
+            ("mode", Json::Str(self.mode.to_string())),
+            ("freq_mhz", Json::Num(self.freq_mhz)),
+            ("throttle_entries", Json::Num(self.throttle_entries as f64)),
+            ("edram_words_per_cycle", Json::Num(self.edram_words_per_cycle as f64)),
+            ("edram_latency", Json::Num(self.edram_latency as f64)),
+        ])
+    }
+
+    /// Deserialize from JSON; absent fields keep defaults.
+    pub fn from_json(v: &Json) -> crate::Result<Self> {
+        let d = AccelConfig::default();
+        let get_usize = |key: &str, dflt: usize| v.get(key).as_usize().unwrap_or(dflt);
+        let mode = match v.get("mode").as_str() {
+            Some(s) => s.parse::<Mode>().map_err(crate::Error::Config)?,
+            None => d.mode,
+        };
+        let cfg = AccelConfig {
+            pes: get_usize("pes", d.pes),
+            splitters_per_pe: get_usize("splitters_per_pe", d.splitters_per_pe),
+            segment_adders: get_usize("segment_adders", d.segment_adders),
+            ks: get_usize("ks", d.ks),
+            mode,
+            freq_mhz: v.get("freq_mhz").as_f64().unwrap_or(d.freq_mhz),
+            throttle_entries: get_usize("throttle_entries", d.throttle_entries),
+            edram_words_per_cycle: get_usize("edram_words_per_cycle", d.edram_words_per_cycle),
+            edram_latency: get_usize("edram_latency", d.edram_latency),
+        };
+        cfg.validate().map_err(crate::Error::Config)?;
+        Ok(cfg)
+    }
+
+    /// Validate invariants; returns an error string on nonsense configs.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.pes == 0 || self.splitters_per_pe == 0 {
+            return Err("pes and splitters_per_pe must be > 0".into());
+        }
+        if self.ks < 2 || self.ks > 256 {
+            return Err(format!("ks={} out of supported range 2..=256", self.ks));
+        }
+        if self.segment_adders < self.mode.weight_bits() {
+            return Err(format!(
+                "segment_adders={} cannot cover {}-bit weights",
+                self.segment_adders,
+                self.mode.weight_bits()
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_setup() {
+        let c = AccelConfig::default();
+        assert_eq!(c.pes, 16);
+        assert_eq!(c.splitters_per_pe, 16);
+        assert_eq!(c.ks, 16);
+        assert_eq!(c.freq_mhz, 125.0);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn pointer_bits_tracks_ks() {
+        let mut c = AccelConfig::default();
+        c.ks = 16;
+        assert_eq!(c.pointer_bits(), 4);
+        c.ks = 10;
+        assert_eq!(c.pointer_bits(), 4);
+        c.ks = 32;
+        assert_eq!(c.pointer_bits(), 5);
+        c.ks = 17;
+        assert_eq!(c.pointer_bits(), 5);
+        c.ks = 2;
+        assert_eq!(c.pointer_bits(), 1);
+    }
+
+    #[test]
+    fn int8_doubles_throughput() {
+        let fp = AccelConfig { mode: Mode::Fp16, ..AccelConfig::default() };
+        let i8 = AccelConfig { mode: Mode::Int8, ..AccelConfig::default() };
+        assert_eq!(i8.kneaded_throughput(), 2 * fp.kneaded_throughput());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = AccelConfig { ks: 24, mode: Mode::Int8, ..AccelConfig::default() };
+        let j = c.to_json().to_string_pretty();
+        let parsed = crate::util::json::parse(&j).unwrap();
+        let c2 = AccelConfig::from_json(&parsed).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn from_json_uses_defaults_for_missing() {
+        let v = crate::util::json::parse(r#"{"ks": 20}"#).unwrap();
+        let c = AccelConfig::from_json(&v).unwrap();
+        assert_eq!(c.ks, 20);
+        assert_eq!(c.pes, 16);
+        assert_eq!(c.mode, Mode::Fp16);
+    }
+
+    #[test]
+    fn validate_rejects_bad_configs() {
+        let mut c = AccelConfig::default();
+        c.ks = 1;
+        assert!(c.validate().is_err());
+        let mut c = AccelConfig::default();
+        c.segment_adders = 8; // cannot cover fp16
+        assert!(c.validate().is_err());
+        c.mode = Mode::Int8; // 8 segment adders cover int8
+        assert!(c.validate().is_ok());
+    }
+}

@@ -1,0 +1,241 @@
+//! Calibration constants for the timing / energy / area models.
+//!
+//! The paper's numbers come from Vivado HLS RTL simulation (cycles),
+//! Synopsys DC + PrimeTime on TSMC 65nm (power/area). We do not have that
+//! toolchain; instead every model in `sim/`, `energy/` and `latency/` is
+//! parameterized by the constants below. Each constant documents its
+//! provenance: either a published anchor (the paper's own Table 2 /
+//! Figure 1, Horowitz ISSCC'14 energy tables) or an explicit calibration
+//! to the paper's reported ratios. Changing these moves absolute numbers;
+//! the *orderings and crossovers* the benches check are robust across a
+//! wide range (see `rust/tests/calib_robustness.rs`).
+
+/// Per-component energy table, picojoules per operation.
+///
+/// Base numbers follow Horowitz, "Computing's energy problem" (ISSCC'14,
+/// 45 nm) scaled ×1.7 to 65 nm (capacitance/voltage scaling); they enter
+/// the power model of `energy::power`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyTable {
+    /// 16-bit fixed-point multiply (DaDN datapath).
+    pub mult16_pj: f64,
+    /// 16-bit fixed-point add (segment adders, adder trees).
+    pub add16_pj: f64,
+    /// 8-bit add.
+    pub add8_pj: f64,
+    /// Register file write (one 16-bit segment register).
+    pub reg_write_pj: f64,
+    /// SRAM read per 16-bit word (I/O activation/weight RAMs, 20KB/PE).
+    pub sram_read_pj: f64,
+    /// eDRAM read per 16-bit word.
+    pub edram_read_pj: f64,
+    /// Throttle-buffer / FIFO access per entry.
+    pub fifo_pj: f64,
+    /// Splitter decode (comparator + mux + pointer decode, Fig 6).
+    pub splitter_pj: f64,
+    /// Barrel shifter shift (PRA's multi-stage shifting).
+    pub shifter_pj: f64,
+    /// Static leakage per PE per cycle (all designs, same RAM macro).
+    pub leakage_pe_pj: f64,
+}
+
+impl Default for EnergyTable {
+    fn default() -> Self {
+        Self {
+            // Horowitz '14: 32b imul ≈ 3.1 pJ @45nm; 16b ≈ 1.0 pJ; ×1.7 → 65nm.
+            mult16_pj: 1.7,
+            // 16b add ≈ 0.05 pJ @45nm ×1.7.
+            add16_pj: 0.085,
+            add8_pj: 0.042,
+            reg_write_pj: 0.03,
+            // 8KB SRAM read ≈ 2.4 pJ/16b word @45nm ×1.7, 20KB macro.
+            sram_read_pj: 4.0,
+            edram_read_pj: 15.0,
+            fifo_pj: 1.8,
+            // comparator + 16:1 activation mux + 4b decode per slot.
+            splitter_pj: 0.25,
+            shifter_pj: 0.25,
+            leakage_pe_pj: 45.0,
+        }
+    }
+}
+
+/// Per-component area table, mm² in TSMC 65nm.
+///
+/// Anchored directly on the paper's Table 2 (per-PE breakdown for Tetris
+/// is given outright; DaDN/PRA compose from the shared components).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AreaTable {
+    /// I/O activation/weight RAMs, 20KB per PE (Table 2: 3.828 mm²).
+    pub io_rams_mm2: f64,
+    /// Throttle buffer, 5KB (Table 2: 0.957 mm²).
+    pub throttle_mm2: f64,
+    /// Splitter array, 16×16 (Table 2: 0.544 mm²).
+    pub splitter_array_mm2: f64,
+    /// Non-linear activation function unit (Table 2: 0.143 mm²).
+    pub act_fn_mm2: f64,
+    /// Segment adders, 16× (Table 2: 0.129 mm²).
+    pub segment_adders_mm2: f64,
+    /// Rear adder tree (Table 2: 0.008 mm²).
+    pub adder_tree_mm2: f64,
+    /// One 16-bit multiplier lane incl. its adder (DaDN datapath);
+    /// calibrated so 16 DaDN PEs total 79.36 mm² (Table 2).
+    pub mult_lane_mm2: f64,
+    /// PRA bit-serial lane: serial IP + multi-stage shifter; calibrated
+    /// with `pra_fifo_mm2` so 16 PRA PEs total 153.65 mm² (Table 2).
+    pub pra_lane_mm2: f64,
+    /// PRA's enlarged weight FIFOs ("16× more weight buffers", §IV.D).
+    pub pra_fifo_mm2: f64,
+}
+
+impl Default for AreaTable {
+    fn default() -> Self {
+        Self {
+            io_rams_mm2: 3.828,
+            throttle_mm2: 0.957,
+            splitter_array_mm2: 0.544,
+            act_fn_mm2: 0.143,
+            segment_adders_mm2: 0.129,
+            adder_tree_mm2: 0.008,
+            // DaDN PE = io_rams + act_fn + 16 mult lanes = 79.36/16 = 4.96
+            //   → 16 lanes = 4.96 - 3.828 - 0.143 = 0.989 → 0.0618 per lane.
+            mult_lane_mm2: 0.0618,
+            // PRA PE = io_rams + act_fn + 16 lanes + big FIFOs
+            //   = 153.65/16 = 9.603 → lanes+FIFOs = 5.632.
+            pra_lane_mm2: 0.052,
+            pra_fifo_mm2: 4.80,
+        }
+    }
+}
+
+/// Timing-model calibration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimingCalib {
+    /// Pipeline fill/drain cycles charged once per layer (all designs).
+    pub pipeline_fill: u64,
+    /// Rear-adder-tree drain charged once per lane completion on Tetris
+    /// (log2(16) = 4 stages; pipelined, so amortized per *lane*, not per
+    /// kneaded weight).
+    pub tree_drain: u64,
+    /// PRA synchronization-group width (weights that must finish their
+    /// serial essential bits before the group advances; PRA'17 §5).
+    pub pra_sync_group: usize,
+    /// PRA throughput de-rate: fraction of peak the bit-serial frontend
+    /// sustains once its weight FIFOs bandwidth-bound it. The paper's
+    /// PRA-fp16 lands at ~1.15× DaDN (§IV.A) although an unconstrained
+    /// essential-bit model would predict ~1.8×; the gap is FIFO refill
+    /// stalls ("large buffers must be introduced", §IV.D). 0.68 reproduces
+    /// the reported zone; see EXPERIMENTS.md.
+    pub pra_frontend_derate: f64,
+    /// Cycles for one fp16 MAC on DaDN (1 at 125 MHz — §IV setup).
+    pub dadn_mac_cycles: u64,
+    /// Tetris int8-mode frontend de-rate: halved splitters need twice
+    /// the activation-window reads per cycle from the throttle buffer,
+    /// whose ports don't double. The paper's int8 mode reaches 1.50×
+    /// DaDN (Fig 8) rather than the "doubled in theory" 2×·fp16
+    /// (§III.C.3); 0.74 reproduces that gap. See EXPERIMENTS.md §Fig8.
+    pub int8_supply_derate: f64,
+}
+
+impl Default for TimingCalib {
+    fn default() -> Self {
+        Self {
+            pipeline_fill: 8,
+            tree_drain: 4,
+            pra_sync_group: 16,
+            pra_frontend_derate: 0.68,
+            dadn_mac_cycles: 1,
+            int8_supply_derate: 0.74,
+        }
+    }
+}
+
+/// Top-level calibration bundle.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CalibConfig {
+    pub energy: EnergyTable,
+    pub area: AreaTable,
+    pub timing: TimingCalib,
+}
+
+impl CalibConfig {
+    /// Load from a JSON file (experiment overrides). Absent fields keep
+    /// their defaults so override files can be sparse.
+    pub fn from_json_file(path: &std::path::Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let v = crate::util::json::parse(&text)
+            .map_err(|e| crate::Error::Config(e.to_string()))?;
+        Ok(Self::from_json(&v))
+    }
+
+    /// Deserialize with per-field defaulting.
+    pub fn from_json(v: &crate::util::json::Json) -> Self {
+        let mut c = CalibConfig::default();
+        let e = v.get("energy");
+        let f = |field: &crate::util::json::Json, dflt: f64| field.as_f64().unwrap_or(dflt);
+        c.energy.mult16_pj = f(e.get("mult16_pj"), c.energy.mult16_pj);
+        c.energy.add16_pj = f(e.get("add16_pj"), c.energy.add16_pj);
+        c.energy.add8_pj = f(e.get("add8_pj"), c.energy.add8_pj);
+        c.energy.reg_write_pj = f(e.get("reg_write_pj"), c.energy.reg_write_pj);
+        c.energy.sram_read_pj = f(e.get("sram_read_pj"), c.energy.sram_read_pj);
+        c.energy.edram_read_pj = f(e.get("edram_read_pj"), c.energy.edram_read_pj);
+        c.energy.fifo_pj = f(e.get("fifo_pj"), c.energy.fifo_pj);
+        c.energy.splitter_pj = f(e.get("splitter_pj"), c.energy.splitter_pj);
+        c.energy.shifter_pj = f(e.get("shifter_pj"), c.energy.shifter_pj);
+        c.energy.leakage_pe_pj = f(e.get("leakage_pe_pj"), c.energy.leakage_pe_pj);
+        let a = v.get("area");
+        c.area.io_rams_mm2 = f(a.get("io_rams_mm2"), c.area.io_rams_mm2);
+        c.area.throttle_mm2 = f(a.get("throttle_mm2"), c.area.throttle_mm2);
+        c.area.splitter_array_mm2 = f(a.get("splitter_array_mm2"), c.area.splitter_array_mm2);
+        c.area.act_fn_mm2 = f(a.get("act_fn_mm2"), c.area.act_fn_mm2);
+        c.area.segment_adders_mm2 = f(a.get("segment_adders_mm2"), c.area.segment_adders_mm2);
+        c.area.adder_tree_mm2 = f(a.get("adder_tree_mm2"), c.area.adder_tree_mm2);
+        c.area.mult_lane_mm2 = f(a.get("mult_lane_mm2"), c.area.mult_lane_mm2);
+        c.area.pra_lane_mm2 = f(a.get("pra_lane_mm2"), c.area.pra_lane_mm2);
+        c.area.pra_fifo_mm2 = f(a.get("pra_fifo_mm2"), c.area.pra_fifo_mm2);
+        let t = v.get("timing");
+        c.timing.pipeline_fill = t.get("pipeline_fill").as_u64().unwrap_or(c.timing.pipeline_fill);
+        c.timing.tree_drain = t.get("tree_drain").as_u64().unwrap_or(c.timing.tree_drain);
+        c.timing.pra_sync_group =
+            t.get("pra_sync_group").as_usize().unwrap_or(c.timing.pra_sync_group);
+        c.timing.pra_frontend_derate =
+            f(t.get("pra_frontend_derate"), c.timing.pra_frontend_derate);
+        c.timing.dadn_mac_cycles =
+            t.get("dadn_mac_cycles").as_u64().unwrap_or(c.timing.dadn_mac_cycles);
+        c.timing.int8_supply_derate = f(t.get("int8_supply_derate"), c.timing.int8_supply_derate);
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tetris_pe_breakdown_sums_to_table2() {
+        let a = AreaTable::default();
+        let pe = a.io_rams_mm2
+            + a.throttle_mm2
+            + a.splitter_array_mm2
+            + a.act_fn_mm2
+            + a.segment_adders_mm2
+            + a.adder_tree_mm2;
+        // Table 2: 5.609 mm² per PE, ×16 = 89.76 mm².
+        assert!((pe * 16.0 - 89.76).abs() < 0.2, "got {}", pe * 16.0);
+    }
+
+    #[test]
+    fn sparse_json_overrides_only_named_fields() {
+        let v = crate::util::json::parse(
+            r#"{"timing": {"pra_frontend_derate": 0.5}, "energy": {"mult16_pj": 2.0}}"#,
+        )
+        .unwrap();
+        let c = CalibConfig::from_json(&v);
+        assert_eq!(c.timing.pra_frontend_derate, 0.5);
+        assert_eq!(c.energy.mult16_pj, 2.0);
+        // Untouched fields keep defaults.
+        let d = CalibConfig::default();
+        assert_eq!(c.timing.pra_sync_group, d.timing.pra_sync_group);
+        assert_eq!(c.area.io_rams_mm2, d.area.io_rams_mm2);
+    }
+}

@@ -1,0 +1,14 @@
+//! Configuration system: accelerator parameters, calibration constants,
+//! and sweep definitions.
+//!
+//! Everything the paper's evaluation varies is a field here, so benches,
+//! examples, and the CLI all drive the same structs. Configs serialize to
+//! JSON (`serde`) so experiment definitions can live in files.
+
+mod accel;
+mod calib;
+mod sweep;
+
+pub use accel::{AccelConfig, Mode};
+pub use calib::CalibConfig;
+pub use sweep::{KsSweep, SweepPoint};

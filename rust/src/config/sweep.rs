@@ -1,0 +1,56 @@
+//! Parameter-sweep definitions (Fig 11's KS sweep and general grids).
+
+use super::{AccelConfig, Mode};
+
+/// One point of a sweep: a fully resolved accelerator config plus the
+/// swept coordinate for labeling.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub label: String,
+    pub config: AccelConfig,
+}
+
+/// The paper's Figure 11 sweep: KS from 10 to 32 for both modes.
+#[derive(Debug, Clone)]
+pub struct KsSweep {
+    pub ks_values: Vec<usize>,
+    pub modes: Vec<Mode>,
+}
+
+impl Default for KsSweep {
+    fn default() -> Self {
+        Self {
+            // §IV.C: "We scale the KS from small (10 weights) to large (32)".
+            ks_values: vec![10, 12, 14, 16, 20, 24, 28, 32],
+            modes: vec![Mode::Fp16, Mode::Int8],
+        }
+    }
+}
+
+impl KsSweep {
+    /// Expand into concrete configuration points over a base config.
+    pub fn points(&self, base: &AccelConfig) -> Vec<SweepPoint> {
+        let mut out = Vec::with_capacity(self.ks_values.len() * self.modes.len());
+        for &mode in &self.modes {
+            for &ks in &self.ks_values {
+                let config = AccelConfig { ks, mode, ..base.clone() };
+                out.push(SweepPoint { label: format!("{mode}-ks{ks}"), config });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_expands_cross_product() {
+        let s = KsSweep::default();
+        let pts = s.points(&AccelConfig::default());
+        assert_eq!(pts.len(), s.ks_values.len() * 2);
+        assert!(pts.iter().all(|p| p.config.validate().is_ok()));
+        assert!(pts.iter().any(|p| p.label == "int8-ks32"));
+    }
+}

@@ -1,0 +1,128 @@
+//! Inference backends the workers run.
+//!
+//! * [`SacBackend`] — the pure-rust kneaded-SAC integer pipeline over
+//!   quantized weights (from `artifacts/weights.bin` or synthetic).
+//!   `Send`, so the server can shard it across worker threads.
+//! * `PjrtBackend` (constructed per-thread via
+//!   [`super::server::Server::serve_with_pjrt`]) — the AOT XLA golden
+//!   model; PJRT handles are thread-pinned.
+//!
+//! Both also report a *simulated* Tetris cycle cost per batch so the
+//! serving metrics reflect the accelerator, not the host.
+
+use crate::config::{AccelConfig, CalibConfig};
+use crate::model::{LoadedWeights, Tensor};
+use crate::model::zoo;
+use crate::runtime::quantized;
+use crate::sim::{simulate_network_with_samples, sample::samples_from_loaded, tetris::TetrisSim};
+
+/// A batch-inference backend.
+pub trait InferBackend {
+    /// Run a batch: images (N,C,H,W) Q8.8 → per-request logits.
+    fn infer_batch(&mut self, images: &Tensor<i32>) -> crate::Result<Vec<Vec<i32>>>;
+
+    /// Simulated accelerator cycles for a batch of `n` images.
+    fn sim_cycles(&self, n: usize) -> u64;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-rust kneaded-SAC backend.
+pub struct SacBackend {
+    weights: LoadedWeights,
+    /// Pre-simulated Tetris cycles for ONE image of the tiny CNN.
+    cycles_per_image: u64,
+}
+
+impl SacBackend {
+    /// Build from loaded weights (tiny-CNN shaped).
+    pub fn new(weights: LoadedWeights) -> crate::Result<Self> {
+        let net = zoo::tiny_cnn();
+        let cfg = AccelConfig::default();
+        let calib = CalibConfig::default();
+        // Timing from the real weights' bit statistics.
+        let conv_only: Vec<_> = weights
+            .layers
+            .iter()
+            .filter(|l| l.name != "fc")
+            .cloned()
+            .collect();
+        let conv_weights = LoadedWeights { mode: weights.mode, layers: conv_only };
+        let samples = samples_from_loaded(&net, &conv_weights)?;
+        let sim = simulate_network_with_samples(&TetrisSim, &net, &samples, &cfg, &calib);
+        Ok(Self { weights, cycles_per_image: sim.total_cycles() })
+    }
+
+    /// Synthetic-weight backend (no artifacts needed — demos/tests).
+    pub fn synthetic(seed: u64) -> crate::Result<Self> {
+        use crate::config::Mode;
+        use crate::model::weights::{profile_with, DensityCalibration};
+        use crate::model::LoadedLayer;
+        use crate::util::rng::Rng;
+        let net = zoo::tiny_cnn();
+        let mut rng = Rng::new(seed);
+        let profile = profile_with("tiny_cnn", Mode::Fp16, DensityCalibration::Fig2)?;
+        let mut layers = Vec::new();
+        for l in &net.layers {
+            layers.push(LoadedLayer {
+                name: l.name.clone(),
+                shape: [l.out_c, l.in_c, l.k, l.k],
+                frac_bits: 15,
+                weights: profile.generate(l.weight_count() as usize, &mut rng),
+            });
+        }
+        layers.push(LoadedLayer {
+            name: "fc".into(),
+            shape: [4, 16, 1, 1],
+            frac_bits: 15,
+            weights: profile.generate(64, &mut rng),
+        });
+        Self::new(LoadedWeights { mode: Mode::Fp16, layers })
+    }
+}
+
+impl InferBackend for SacBackend {
+    fn infer_batch(&mut self, images: &Tensor<i32>) -> crate::Result<Vec<Vec<i32>>> {
+        let logits = quantized::forward(&self.weights, images)?;
+        let [n, c] = match *logits.shape() {
+            [n, c] => [n, c],
+            _ => return Err(crate::Error::Shape("logits must be 2-D".into())),
+        };
+        Ok((0..n).map(|i| logits.data()[i * c..(i + 1) * c].to_vec()).collect())
+    }
+
+    fn sim_cycles(&self, n: usize) -> u64 {
+        self.cycles_per_image * n as u64
+    }
+
+    fn name(&self) -> &'static str {
+        "sac-rust"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_backend_infers() {
+        let mut b = SacBackend::synthetic(7).unwrap();
+        let images = Tensor::zeros(&[2, 1, 16, 16]);
+        let out = b.infer_batch(&images).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].len(), 4);
+        assert!(b.sim_cycles(2) > 0);
+        assert_eq!(b.sim_cycles(4), 2 * b.sim_cycles(2));
+    }
+
+    #[test]
+    fn deterministic_outputs() {
+        let mut a = SacBackend::synthetic(3).unwrap();
+        let mut b = SacBackend::synthetic(3).unwrap();
+        let mut img = Tensor::zeros(&[1, 1, 16, 16]);
+        for (i, v) in img.data_mut().iter_mut().enumerate() {
+            *v = (i as i32 % 61) - 30;
+        }
+        assert_eq!(a.infer_batch(&img).unwrap(), b.infer_batch(&img).unwrap());
+    }
+}

@@ -1,0 +1,137 @@
+//! Dynamic batcher: group queued requests up to `max_batch` or until
+//! `max_wait` elapses since the oldest queued request.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::request::InferRequest;
+
+/// Batching policy.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Accumulates requests and releases batches per policy.
+#[derive(Debug)]
+pub struct Batcher {
+    policy: BatchPolicy,
+    queue: VecDeque<InferRequest>,
+    /// Diagnostics: released batches and their sizes.
+    pub batches_released: u64,
+    pub requests_seen: u64,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch > 0, "max_batch must be positive");
+        Self { policy, queue: VecDeque::new(), batches_released: 0, requests_seen: 0 }
+    }
+
+    pub fn push(&mut self, req: InferRequest) {
+        self.requests_seen += 1;
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Oldest queued request's age, if any.
+    pub fn oldest_age(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|r| now.duration_since(r.enqueued))
+    }
+
+    /// Release a batch if the policy says so.
+    pub fn try_release(&mut self, now: Instant) -> Option<Vec<InferRequest>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let full = self.queue.len() >= self.policy.max_batch;
+        let expired = self
+            .oldest_age(now)
+            .map(|age| age >= self.policy.max_wait)
+            .unwrap_or(false);
+        if !full && !expired {
+            return None;
+        }
+        let n = self.queue.len().min(self.policy.max_batch);
+        let batch: Vec<InferRequest> = self.queue.drain(..n).collect();
+        self.batches_released += 1;
+        Some(batch)
+    }
+
+    /// Drain everything (shutdown path).
+    pub fn flush(&mut self) -> Vec<InferRequest> {
+        if !self.queue.is_empty() {
+            self.batches_released += 1;
+        }
+        self.queue.drain(..).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Tensor;
+
+    fn req(id: u64) -> InferRequest {
+        InferRequest::new(id, Tensor::zeros(&[1, 2, 2]))
+    }
+
+    #[test]
+    fn releases_when_full() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(60) });
+        b.push(req(1));
+        b.push(req(2));
+        assert!(b.try_release(Instant::now()).is_none());
+        b.push(req(3));
+        let batch = b.try_release(Instant::now()).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch[0].id, 1); // FIFO order
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn releases_on_deadline() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 100, max_wait: Duration::ZERO });
+        b.push(req(1));
+        let batch = b.try_release(Instant::now()).unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn batch_never_exceeds_max() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 4, max_wait: Duration::ZERO });
+        for i in 0..10 {
+            b.push(req(i));
+        }
+        let batch = b.try_release(Instant::now()).unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(b.pending(), 6);
+    }
+
+    #[test]
+    fn flush_drains_all() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        for i in 0..5 {
+            b.push(req(i));
+        }
+        assert_eq!(b.flush().len(), 5);
+        assert_eq!(b.pending(), 0);
+        assert!(b.flush().is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "max_batch must be positive")]
+    fn zero_batch_rejected() {
+        Batcher::new(BatchPolicy { max_batch: 0, max_wait: Duration::ZERO });
+    }
+}

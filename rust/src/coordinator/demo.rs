@@ -1,0 +1,106 @@
+//! Synthetic-load demo used by `tetris serve` and the serve example.
+
+use std::time::Duration;
+
+use super::backend::SacBackend;
+use super::batcher::BatchPolicy;
+use super::request::InferRequest;
+use super::server::{Server, ServerConfig};
+use crate::model::{Network, Tensor};
+use crate::util::rng::Rng;
+
+/// Generate a synthetic Q8.8 image for the tiny CNN input shape
+/// (uniform noise — worst case for class agreement).
+pub fn synthetic_image(rng: &mut Rng) -> Tensor<i32> {
+    let mut t = Tensor::zeros(&[1, 16, 16]);
+    for v in t.data_mut() {
+        // Q8.8 values in roughly [-1.5, 1.5].
+        *v = rng.range_i64(-384, 384) as i32;
+    }
+    t
+}
+
+/// Generate a dataset-distribution image (mirrors
+/// `python/compile/model.py::make_dataset`): one of four oriented
+/// sinusoid patterns + Gaussian noise, quantized to Q8.8. Returns the
+/// image and its true class.
+pub fn dataset_image(rng: &mut Rng) -> (Tensor<i32>, usize) {
+    let class = rng.below(4) as usize;
+    let phase = rng.f64() * 2.0;
+    let mut t = Tensor::zeros(&[1, 16, 16]);
+    let tau = 2.0 * std::f64::consts::PI;
+    for y in 0..16 {
+        for x in 0..16 {
+            let (xf, yf) = (x as f64 / 16.0, y as f64 / 16.0);
+            let v = match class {
+                0 => (tau * (xf + phase)).sin(),
+                1 => (tau * (yf + phase)).sin(),
+                2 => (tau * (xf + yf + phase)).sin(),
+                _ => {
+                    let r2 = (xf - 0.5).powi(2) + (yf - 0.5).powi(2);
+                    (2.0 * tau * (r2 + phase)).sin()
+                }
+            } + rng.gaussian() * 0.3;
+            t.data_mut()[y * 16 + x] = ((v * 256.0).round() as i32).clamp(-(1 << 15), (1 << 15) - 1);
+        }
+    }
+    (t, class)
+}
+
+/// Run `requests` synthetic requests through the coordinator with the
+/// SAC backend; prints metrics. (`network` is reported for context —
+/// the serving model is the tiny CNN whose weights come from artifacts
+/// if present, else a synthetic profile.)
+pub fn run_synthetic_load(
+    network: &Network,
+    requests: usize,
+    max_batch: usize,
+    seed: u64,
+) -> crate::Result<()> {
+    let artifacts = std::path::Path::new("artifacts/weights.bin");
+    let use_artifacts = artifacts.exists();
+    println!(
+        "serving tiny CNN ({} weights), context network {}, backend sac-rust, workers 2",
+        if use_artifacts { "trained" } else { "synthetic" },
+        network.name
+    );
+    let cfg = ServerConfig {
+        policy: BatchPolicy { max_batch, max_wait: Duration::from_millis(2) },
+        workers: 2,
+    };
+    let server = Server::start(cfg, move |_| {
+        if use_artifacts {
+            let w = crate::model::read_weight_file(std::path::Path::new("artifacts/weights.bin"))?;
+            SacBackend::new(w)
+        } else {
+            SacBackend::synthetic(0xACC)
+        }
+    })?;
+    let mut rng = Rng::new(seed);
+    for id in 0..requests as u64 {
+        server.submit(InferRequest::new(id, synthetic_image(&mut rng)))?;
+    }
+    let mut class_counts = [0usize; 16];
+    for _ in 0..requests {
+        let resp = server.recv()?;
+        class_counts[resp.argmax.min(15)] += 1;
+    }
+    let metrics = server.shutdown();
+    println!("{}", metrics.render());
+    println!(
+        "class distribution: {:?}",
+        &class_counts[..4]
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn demo_runs_end_to_end() {
+        run_synthetic_load(&zoo::tiny_cnn(), 12, 4, 9).unwrap();
+    }
+}

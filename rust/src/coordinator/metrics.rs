@@ -1,0 +1,92 @@
+//! Serving metrics: latency histograms, throughput, batch-size stats.
+
+use std::time::Instant;
+
+use crate::util::stats::{LatencyHistogram, Summary};
+
+/// Aggregated serving metrics (owned by the server; snapshot to read).
+#[derive(Debug, Clone)]
+pub struct Metrics {
+    pub latency: LatencyHistogram,
+    pub batch_sizes: Summary,
+    pub requests_done: u64,
+    pub batches_done: u64,
+    pub sim_cycles_total: u64,
+    started: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            latency: LatencyHistogram::new(),
+            batch_sizes: Summary::new(),
+            requests_done: 0,
+            batches_done: 0,
+            sim_cycles_total: 0,
+            started: Instant::now(),
+        }
+    }
+
+    pub fn record_batch(&mut self, batch_size: usize, latencies_us: &[f64], sim_cycles: u64) {
+        self.batches_done += 1;
+        self.requests_done += batch_size as u64;
+        self.batch_sizes.add(batch_size as f64);
+        self.sim_cycles_total += sim_cycles;
+        for &l in latencies_us {
+            self.latency.record_us(l);
+        }
+    }
+
+    /// Requests per second since construction.
+    pub fn throughput_rps(&self) -> f64 {
+        let elapsed = self.started.elapsed().as_secs_f64();
+        if elapsed <= 0.0 {
+            0.0
+        } else {
+            self.requests_done as f64 / elapsed
+        }
+    }
+
+    /// Human summary block.
+    pub fn render(&self) -> String {
+        format!(
+            "requests: {}  batches: {}  mean batch: {:.2}\n\
+             latency: mean {:.1} µs  p50 ≤ {:.0} µs  p99 ≤ {:.0} µs\n\
+             host throughput: {:.1} req/s\n\
+             simulated Tetris cycles: {} ({:.3} ms @125MHz)",
+            self.requests_done,
+            self.batches_done,
+            self.batch_sizes.mean(),
+            self.latency.mean_us(),
+            self.latency.approx_percentile_us(0.50),
+            self.latency.approx_percentile_us(0.99),
+            self.throughput_rps(),
+            self.sim_cycles_total,
+            self.sim_cycles_total as f64 / 125e6 * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_batches() {
+        let mut m = Metrics::new();
+        m.record_batch(4, &[10.0, 20.0, 30.0, 40.0], 1000);
+        m.record_batch(2, &[5.0, 15.0], 500);
+        assert_eq!(m.requests_done, 6);
+        assert_eq!(m.batches_done, 2);
+        assert_eq!(m.sim_cycles_total, 1500);
+        assert!((m.batch_sizes.mean() - 3.0).abs() < 1e-12);
+        assert_eq!(m.latency.count(), 6);
+        assert!(m.render().contains("requests: 6"));
+    }
+}

@@ -1,0 +1,26 @@
+//! Serving coordinator — the L3 request path.
+//!
+//! A vLLM-router-shaped engine scaled to this paper's system: requests
+//! enter a queue, the *dynamic batcher* groups them (max batch size or
+//! deadline, whichever first), the *scheduler* dispatches batches to PE
+//! workers, and each worker runs an [`InferBackend`] — either the
+//! AOT-compiled XLA golden model (PJRT) or the pure-rust kneaded-SAC
+//! integer pipeline. A timing model attaches simulated accelerator
+//! latency so the serving metrics reflect the paper's hardware, not the
+//! host CPU.
+//!
+//! Python is never on this path: backends consume `artifacts/` products
+//! only.
+
+pub mod backend;
+pub mod batcher;
+pub mod demo;
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use backend::{InferBackend, SacBackend};
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::Metrics;
+pub use request::{InferRequest, InferResponse, RequestId};
+pub use server::{Server, ServerConfig};

@@ -1,0 +1,52 @@
+//! Request/response types for the serving path.
+
+use std::time::Instant;
+
+use crate::model::Tensor;
+
+/// Monotonic request identifier.
+pub type RequestId = u64;
+
+/// One inference request: a quantized Q8.8 image (1×16×16 for the tiny
+/// CNN) plus bookkeeping.
+#[derive(Debug, Clone)]
+pub struct InferRequest {
+    pub id: RequestId,
+    /// (C, H, W) int32 Q8.8 image.
+    pub image: Tensor<i32>,
+    /// Enqueue timestamp (latency accounting).
+    pub enqueued: Instant,
+}
+
+impl InferRequest {
+    pub fn new(id: RequestId, image: Tensor<i32>) -> Self {
+        Self { id, image, enqueued: Instant::now() }
+    }
+}
+
+/// Response: logits + latency + the simulated accelerator cycle cost of
+/// the batch this request rode in.
+#[derive(Debug, Clone)]
+pub struct InferResponse {
+    pub id: RequestId,
+    pub logits: Vec<i32>,
+    pub argmax: usize,
+    /// Wall-clock time from enqueue to completion.
+    pub latency_us: f64,
+    /// Simulated Tetris cycles attributed to this request's batch.
+    pub sim_cycles: u64,
+    /// Batch size this request was served in.
+    pub batch_size: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_tracks_enqueue_time() {
+        let r = InferRequest::new(1, Tensor::zeros(&[1, 4, 4]));
+        assert!(r.enqueued.elapsed().as_secs() < 1);
+        assert_eq!(r.id, 1);
+    }
+}

@@ -1,0 +1,284 @@
+//! The serving loop: request channel → dynamic batcher → worker threads
+//! → response channel.
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::backend::InferBackend;
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::Metrics;
+use super::request::{InferRequest, InferResponse};
+use crate::model::Tensor;
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub policy: BatchPolicy,
+    /// Worker threads (each owns one backend instance).
+    pub workers: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { policy: BatchPolicy::default(), workers: 2 }
+    }
+}
+
+/// Handle to a running server: submit requests, receive responses.
+pub struct Server {
+    req_tx: Option<Sender<InferRequest>>,
+    /// Mutex so `recv` takes `&self` and `Server` stays `Sync` (drain
+    /// from a different thread than the submitter).
+    resp_rx: Mutex<Receiver<InferResponse>>,
+    metrics: Arc<Mutex<Metrics>>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the server. `make_backend` is called once per worker
+    /// thread (backends need not be `Sync`; they must be creatable per
+    /// thread — PJRT executables satisfy this).
+    pub fn start<B, F>(config: ServerConfig, make_backend: F) -> crate::Result<Self>
+    where
+        B: InferBackend + 'static,
+        F: Fn(usize) -> crate::Result<B> + Send + Sync + 'static,
+    {
+        assert!(config.workers > 0);
+        let (req_tx, req_rx) = channel::<InferRequest>();
+        let (resp_tx, resp_rx) = channel::<InferResponse>();
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+
+        // Worker pool: each worker pulls batches from its own channel.
+        let mut batch_txs = Vec::new();
+        let mut worker_handles = Vec::new();
+        let make_backend = Arc::new(make_backend);
+        for w in 0..config.workers {
+            let (btx, brx) = channel::<Vec<InferRequest>>();
+            batch_txs.push(btx);
+            let resp_tx = resp_tx.clone();
+            let metrics = Arc::clone(&metrics);
+            let make_backend = Arc::clone(&make_backend);
+            worker_handles.push(std::thread::spawn(move || {
+                let mut backend = match make_backend(w) {
+                    Ok(b) => b,
+                    Err(e) => {
+                        eprintln!("worker {w}: backend init failed: {e}");
+                        return;
+                    }
+                };
+                while let Ok(batch) = brx.recv() {
+                    if let Err(e) = run_batch(&mut backend, batch, &resp_tx, &metrics) {
+                        eprintln!("worker {w}: batch failed: {e}");
+                    }
+                }
+            }));
+        }
+
+        // Dispatcher: batch incoming requests, round-robin to workers.
+        let policy = config.policy.clone();
+        let dispatcher = std::thread::spawn(move || {
+            let mut batcher = Batcher::new(policy);
+            let mut next_worker = 0usize;
+            let mut open = true;
+            while open || batcher.pending() > 0 {
+                // Drain the request channel without blocking past the
+                // batching deadline.
+                loop {
+                    match req_rx.try_recv() {
+                        Ok(r) => batcher.push(r),
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => {
+                            open = false;
+                            break;
+                        }
+                    }
+                }
+                let release = if open {
+                    batcher.try_release(Instant::now())
+                } else {
+                    let all = batcher.flush();
+                    if all.is_empty() {
+                        None
+                    } else {
+                        Some(all)
+                    }
+                };
+                if let Some(batch) = release {
+                    // Flushes can exceed max_batch; split to respect it.
+                    for chunk in batch.chunks(16 * 1024) {
+                        let _ = batch_txs[next_worker % batch_txs.len()].send(chunk.to_vec());
+                        next_worker += 1;
+                    }
+                } else if open {
+                    std::thread::yield_now();
+                }
+            }
+            drop(batch_txs); // close workers
+            for h in worker_handles {
+                let _ = h.join();
+            }
+        });
+
+        Ok(Self { req_tx: Some(req_tx), resp_rx: Mutex::new(resp_rx), metrics, dispatcher: Some(dispatcher) })
+    }
+
+    /// Submit a request (non-blocking).
+    pub fn submit(&self, req: InferRequest) -> crate::Result<()> {
+        self.req_tx
+            .as_ref()
+            .ok_or_else(|| crate::Error::Coordinator("server stopping".into()))?
+            .send(req)
+            .map_err(|_| crate::Error::Coordinator("server stopped".into()))
+    }
+
+    /// Receive the next response (blocking).
+    pub fn recv(&self) -> crate::Result<InferResponse> {
+        self.resp_rx
+            .lock()
+            .unwrap()
+            .recv()
+            .map_err(|_| crate::Error::Coordinator("server stopped".into()))
+    }
+
+    /// Snapshot metrics.
+    pub fn metrics(&self) -> Metrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    /// Stop accepting requests, drain, and join all threads.
+    pub fn shutdown(mut self) -> Metrics {
+        self.req_tx.take(); // close the request channel
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        self.metrics.lock().unwrap().clone()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.req_tx.take();
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+    }
+}
+
+/// Execute one batch on a backend and fan out responses.
+fn run_batch<B: InferBackend>(
+    backend: &mut B,
+    batch: Vec<InferRequest>,
+    resp_tx: &Sender<InferResponse>,
+    metrics: &Arc<Mutex<Metrics>>,
+) -> crate::Result<()> {
+    let n = batch.len();
+    if n == 0 {
+        return Ok(());
+    }
+    // Stack images into (N, C, H, W).
+    let img_shape = batch[0].image.shape().to_vec();
+    let mut stacked_shape = vec![n];
+    stacked_shape.extend_from_slice(&img_shape);
+    let mut data = Vec::with_capacity(batch.iter().map(|r| r.image.len()).sum());
+    for r in &batch {
+        if r.image.shape() != img_shape.as_slice() {
+            return Err(crate::Error::Shape("heterogeneous image shapes in batch".into()));
+        }
+        data.extend_from_slice(r.image.data());
+    }
+    let images = Tensor::from_vec(&stacked_shape, data)?;
+    let logits = backend.infer_batch(&images)?;
+    if logits.len() != n {
+        return Err(crate::Error::Coordinator(format!(
+            "backend returned {} results for batch of {n}",
+            logits.len()
+        )));
+    }
+    let sim_cycles = backend.sim_cycles(n);
+    let done = Instant::now();
+    let mut latencies = Vec::with_capacity(n);
+    for (req, lg) in batch.into_iter().zip(logits) {
+        let latency_us = done.duration_since(req.enqueued).as_secs_f64() * 1e6;
+        latencies.push(latency_us);
+        let argmax = lg
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &v)| v)
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        let _ = resp_tx.send(InferResponse {
+            id: req.id,
+            logits: lg,
+            argmax,
+            latency_us,
+            sim_cycles: sim_cycles / n as u64,
+            batch_size: n,
+        });
+    }
+    metrics.lock().unwrap().record_batch(n, &latencies, sim_cycles);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::SacBackend;
+    use std::collections::HashSet;
+    use std::time::Duration;
+
+    fn image(seed: i32) -> Tensor<i32> {
+        let mut t = Tensor::zeros(&[1, 16, 16]);
+        for (i, v) in t.data_mut().iter_mut().enumerate() {
+            *v = ((i as i32).wrapping_mul(seed + 7)) % 256;
+        }
+        t
+    }
+
+    #[test]
+    fn serves_all_requests_exactly_once() {
+        let cfg = ServerConfig {
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            workers: 2,
+        };
+        let server = Server::start(cfg, |_| SacBackend::synthetic(1)).unwrap();
+        let total = 23;
+        for id in 0..total {
+            server.submit(InferRequest::new(id, image(id as i32))).unwrap();
+        }
+        let mut seen = HashSet::new();
+        for _ in 0..total {
+            let resp = server.recv().unwrap();
+            assert!(seen.insert(resp.id), "duplicate response {}", resp.id);
+            assert_eq!(resp.logits.len(), 4);
+            assert!(resp.batch_size >= 1 && resp.batch_size <= 4);
+        }
+        let m = server.shutdown();
+        assert_eq!(m.requests_done, total);
+        assert_eq!(seen.len(), total as usize);
+    }
+
+    #[test]
+    fn responses_match_direct_backend() {
+        // Routing/batching must not change values (invariant I6).
+        let cfg = ServerConfig {
+            policy: BatchPolicy { max_batch: 3, max_wait: Duration::from_millis(1) },
+            workers: 1,
+        };
+        let server = Server::start(cfg, |_| SacBackend::synthetic(42)).unwrap();
+        let mut direct = SacBackend::synthetic(42).unwrap();
+        for id in 0..7u64 {
+            server.submit(InferRequest::new(id, image(id as i32))).unwrap();
+        }
+        let mut responses: Vec<_> = (0..7).map(|_| server.recv().unwrap()).collect();
+        responses.sort_by_key(|r| r.id);
+        for resp in responses {
+            let mut img4 = image(resp.id as i32);
+            let s = img4.shape().to_vec();
+            img4.reshape(&[1, s[0], s[1], s[2]]).unwrap();
+            let want = direct.infer_batch(&img4).unwrap().remove(0);
+            assert_eq!(resp.logits, want, "request {}", resp.id);
+        }
+        server.shutdown();
+    }
+}

@@ -1,0 +1,107 @@
+//! Chip area composition — reproduces Table 2.
+
+use crate::config::{AccelConfig, CalibConfig};
+
+/// Area report for one design: total plus per-component breakdown.
+#[derive(Debug, Clone)]
+pub struct AreaReport {
+    pub design: &'static str,
+    /// (component name, mm² for the whole chip).
+    pub components: Vec<(&'static str, f64)>,
+}
+
+impl AreaReport {
+    pub fn total_mm2(&self) -> f64 {
+        self.components.iter().map(|(_, a)| a).sum()
+    }
+
+    /// Per-PE breakdown (Table 2's right half).
+    pub fn per_pe(&self, pes: usize) -> Vec<(&'static str, f64)> {
+        self.components.iter().map(|&(n, a)| (n, a / pes as f64)).collect()
+    }
+}
+
+/// Compose the chip area of a design from the component table.
+pub fn chip_area(design: &str, cfg: &AccelConfig, calib: &CalibConfig) -> crate::Result<AreaReport> {
+    let a = &calib.area;
+    let pes = cfg.pes as f64;
+    let lanes = cfg.splitters_per_pe as f64;
+    let report = match design {
+        "tetris" => AreaReport {
+            design: "tetris",
+            components: vec![
+                ("I/O RAMs", a.io_rams_mm2 * pes),
+                ("Throttle Buffer", a.throttle_mm2 * pes),
+                ("Splitter Array", a.splitter_array_mm2 * pes),
+                ("Activation Function", a.act_fn_mm2 * pes),
+                ("Segment Adders", a.segment_adders_mm2 * pes),
+                ("Rear Adder Tree", a.adder_tree_mm2 * pes),
+            ],
+        },
+        "dadn" => AreaReport {
+            design: "dadn",
+            components: vec![
+                ("I/O RAMs", a.io_rams_mm2 * pes),
+                ("Activation Function", a.act_fn_mm2 * pes),
+                ("Multiplier Lanes", a.mult_lane_mm2 * lanes * pes),
+            ],
+        },
+        "pra" => AreaReport {
+            design: "pra",
+            components: vec![
+                ("I/O RAMs", a.io_rams_mm2 * pes),
+                ("Activation Function", a.act_fn_mm2 * pes),
+                ("Bit-serial Lanes", a.pra_lane_mm2 * lanes * pes),
+                ("Weight FIFOs (16x)", a.pra_fifo_mm2 * pes),
+            ],
+        },
+        other => {
+            return Err(crate::Error::Config(format!("unknown design `{other}` for area model")))
+        }
+    };
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn defaults() -> (AccelConfig, CalibConfig) {
+        (AccelConfig::default(), CalibConfig::default())
+    }
+
+    /// Table 2 anchors: DaDN 79.36, PRA 153.65, Tetris 89.76 mm².
+    #[test]
+    fn totals_match_table2() {
+        let (cfg, calib) = defaults();
+        let t = chip_area("tetris", &cfg, &calib).unwrap().total_mm2();
+        let d = chip_area("dadn", &cfg, &calib).unwrap().total_mm2();
+        let p = chip_area("pra", &cfg, &calib).unwrap().total_mm2();
+        assert!((t - 89.76).abs() < 0.5, "tetris {t}");
+        assert!((d - 79.36).abs() < 0.5, "dadn {d}");
+        assert!((p - 153.65).abs() < 1.0, "pra {p}");
+        // Overheads over DaDN: 1.13× and 1.93×.
+        assert!(((t / d) - 1.131).abs() < 0.02);
+        assert!(((p / d) - 1.936).abs() < 0.05);
+    }
+
+    #[test]
+    fn tetris_breakdown_percentages() {
+        let (cfg, calib) = defaults();
+        let rep = chip_area("tetris", &cfg, &calib).unwrap();
+        let total = rep.total_mm2();
+        let pct = |name: &str| {
+            rep.components.iter().find(|(n, _)| *n == name).unwrap().1 / total * 100.0
+        };
+        // Table 2: I/O RAMs 68.24%, Throttle 17.06%, Splitters 9.70%.
+        assert!((pct("I/O RAMs") - 68.24).abs() < 1.0);
+        assert!((pct("Throttle Buffer") - 17.06).abs() < 0.5);
+        assert!((pct("Splitter Array") - 9.70).abs() < 0.5);
+    }
+
+    #[test]
+    fn unknown_design_errors() {
+        let (cfg, calib) = defaults();
+        assert!(chip_area("eyeriss", &cfg, &calib).is_err());
+    }
+}

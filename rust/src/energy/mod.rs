@@ -1,0 +1,26 @@
+//! Energy, power, area and EDP models (§IV.B, §IV.D).
+//!
+//! Replaces the paper's Synopsys DC + PrimeTime flow with an analytical
+//! model: per-component switching energies (`config::EnergyTable`,
+//! Horowitz-anchored) times the activity counts the simulators produce,
+//! plus leakage; areas compose from `config::AreaTable`, which is
+//! anchored directly on the paper's Table 2.
+
+mod area;
+mod power;
+
+pub use area::{chip_area, AreaReport};
+pub use power::{layer_energy, network_energy, EnergyBreakdown};
+
+/// Energy-delay product in J·s — the paper's efficiency proxy (§IV.B).
+pub fn edp(total_energy_j: f64, time_s: f64) -> f64 {
+    total_energy_j * time_s
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn edp_units() {
+        assert_eq!(super::edp(2.0, 3.0), 6.0);
+    }
+}

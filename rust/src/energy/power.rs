@@ -1,0 +1,138 @@
+//! Dynamic + leakage energy from simulator activity counts.
+
+use crate::config::{CalibConfig, Mode};
+use crate::sim::{ChipActivity, NetworkSim};
+
+/// Energy breakdown for a simulated workload, in joules.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub mults_j: f64,
+    pub adds_j: f64,
+    pub splitters_j: f64,
+    pub shifters_j: f64,
+    pub memory_j: f64,
+    pub fifo_j: f64,
+    pub regs_j: f64,
+    pub leakage_j: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_j(&self) -> f64 {
+        self.mults_j
+            + self.adds_j
+            + self.splitters_j
+            + self.shifters_j
+            + self.memory_j
+            + self.fifo_j
+            + self.regs_j
+            + self.leakage_j
+    }
+
+    pub fn add(&mut self, o: &EnergyBreakdown) {
+        self.mults_j += o.mults_j;
+        self.adds_j += o.adds_j;
+        self.splitters_j += o.splitters_j;
+        self.shifters_j += o.shifters_j;
+        self.memory_j += o.memory_j;
+        self.fifo_j += o.fifo_j;
+        self.regs_j += o.regs_j;
+        self.leakage_j += o.leakage_j;
+    }
+}
+
+const PJ: f64 = 1e-12;
+
+/// Energy of one layer's activity over `cycles` at the given mode.
+pub fn layer_energy(
+    activity: &ChipActivity,
+    cycles: u64,
+    mode: Mode,
+    pes: usize,
+    calib: &CalibConfig,
+) -> EnergyBreakdown {
+    let e = &calib.energy;
+    let add_pj = match mode {
+        Mode::Fp16 => e.add16_pj,
+        Mode::Int8 => e.add8_pj,
+    };
+    EnergyBreakdown {
+        mults_j: activity.mults * e.mult16_pj * PJ,
+        adds_j: (activity.adds + activity.tree_drains * 15.0) * add_pj * PJ,
+        splitters_j: activity.splitter_decodes * e.splitter_pj * PJ,
+        shifters_j: activity.shifts * e.shifter_pj * PJ,
+        memory_j: (activity.sram_reads * e.sram_read_pj + activity.edram_reads * e.edram_read_pj)
+            * PJ,
+        fifo_j: activity.fifo_ops * e.fifo_pj * PJ,
+        regs_j: activity.reg_writes * e.reg_write_pj * PJ,
+        leakage_j: cycles as f64 * pes as f64 * e.leakage_pe_pj * PJ,
+    }
+}
+
+/// Whole-network energy from a [`NetworkSim`].
+pub fn network_energy(sim: &NetworkSim, calib: &CalibConfig) -> EnergyBreakdown {
+    let mut total = EnergyBreakdown::default();
+    for l in &sim.per_layer {
+        total.add(&layer_energy(&l.activity, l.cycles, sim.config.mode, sim.config.pes, calib));
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AccelConfig, CalibConfig};
+    use crate::model::zoo;
+    use crate::sim::{dadn::DadnSim, pra::PraSim, simulate_network, tetris::TetrisSim};
+
+    /// §IV.B anchors: Tetris draws slightly more power than DaDN
+    /// (paper: 1.08×) but PRA draws much more (paper: 3.37×).
+    #[test]
+    fn power_ordering_matches_paper() {
+        let net = zoo::alexnet();
+        let cfg = AccelConfig::default();
+        let calib = CalibConfig::default();
+        let d = simulate_network(&DadnSim, &net, &cfg, &calib, 1).unwrap();
+        let t = simulate_network(&TetrisSim, &net, &cfg, &calib, 1).unwrap();
+        let p = simulate_network(&PraSim, &net, &cfg, &calib, 1).unwrap();
+        let power = |s: &crate::sim::NetworkSim| {
+            network_energy(s, &calib).total_j() / s.time_s()
+        };
+        let (pd, pt, pp) = (power(&d), power(&t), power(&p));
+        let tetris_rel = pt / pd;
+        let pra_rel = pp / pd;
+        assert!(
+            (0.9..1.7).contains(&tetris_rel),
+            "tetris power {tetris_rel}× DaDN (paper: 1.08×)"
+        );
+        assert!(
+            (1.8..6.0).contains(&pra_rel),
+            "PRA power {pra_rel}× DaDN (paper: 3.37×)"
+        );
+        assert!(pra_rel > tetris_rel);
+    }
+
+    /// §IV.B headline: Tetris EDP beats both baselines.
+    #[test]
+    fn edp_ordering_matches_paper() {
+        let net = zoo::vgg16();
+        let cfg = AccelConfig::default();
+        let calib = CalibConfig::default();
+        let edp_of = |a: &dyn crate::sim::Accelerator| {
+            let s = simulate_network(a, &net, &cfg, &calib, 2).unwrap();
+            crate::energy::edp(network_energy(&s, &calib).total_j(), s.time_s())
+        };
+        let d = edp_of(&DadnSim);
+        let t = edp_of(&TetrisSim);
+        let p = edp_of(&PraSim);
+        assert!(t < d, "tetris EDP {t} !< dadn {d}");
+        assert!(d < p, "dadn EDP {d} !< pra {p} (paper: PRA is 2.87× worse)");
+    }
+
+    #[test]
+    fn energy_breakdown_sums() {
+        let mut a = EnergyBreakdown { mults_j: 1.0, ..Default::default() };
+        let b = EnergyBreakdown { adds_j: 2.0, leakage_j: 3.0, ..Default::default() };
+        a.add(&b);
+        assert_eq!(a.total_j(), 6.0);
+    }
+}

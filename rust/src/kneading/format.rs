@@ -1,0 +1,156 @@
+//! The kneaded-weight representation: `<w'_i, p>` of Figure 6.
+//!
+//! A kneaded weight has one *slot* per bit position. A slot either is
+//! empty (the comparator in the splitter sees a zero bit and muxes out
+//! zero) or holds the pointer `p` of the source weight — within the
+//! kneading group — whose essential bit occupies this position. `p` is
+//! ⌈log2 KS⌉ bits in hardware; we store it in a byte (KS ≤ 256).
+
+use crate::quant::QWeight;
+
+/// Marker for an empty (slack) slot.
+pub const EMPTY_SLOT: u8 = 0xFF;
+
+/// One kneaded weight: `slots[b]` = source-weight pointer whose bit `b`
+/// is packed here, or [`EMPTY_SLOT`].
+///
+/// Slots are stored inline (`[u8; 16]`, the maximum bit width) with an
+/// explicit `width` — a kneaded weight is 17 bytes with no heap
+/// allocation, which matters in the kneading hot loop (§Perf).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KneadedWeight {
+    slots_buf: [u8; 16],
+    width: u8,
+    /// Bit `b` set ⇔ slot `b` occupied — lets the splitter walk only
+    /// essential slots (the comparator array's wired-OR, in software).
+    occ: u16,
+}
+
+impl KneadedWeight {
+    pub fn empty(bits: usize) -> Self {
+        debug_assert!(bits <= 16);
+        Self { slots_buf: [EMPTY_SLOT; 16], width: bits as u8, occ: 0 }
+    }
+
+    /// The slot array, one entry per bit position (LSB first).
+    #[inline]
+    pub fn slots(&self) -> &[u8] {
+        &self.slots_buf[..self.width as usize]
+    }
+
+    /// Occupied-slot bitmask (bit `b` ⇔ slot `b` holds a pointer).
+    #[inline]
+    pub fn occupied_mask(&self) -> u16 {
+        self.occ
+    }
+
+    /// Pointer in slot `b` (caller checked occupancy via the mask).
+    #[inline]
+    pub fn pointer(&self, b: usize) -> u8 {
+        self.slots_buf[b]
+    }
+
+    /// Set slot `b` to point at source weight `p`.
+    #[inline]
+    pub fn set_slot(&mut self, b: usize, p: u8) {
+        debug_assert!(b < self.width as usize);
+        debug_assert!(p != EMPTY_SLOT);
+        self.slots_buf[b] = p;
+        self.occ |= 1 << b;
+    }
+
+    /// Number of occupied slots (essential bits carried).
+    pub fn occupancy(&self) -> usize {
+        self.occ.count_ones() as usize
+    }
+
+    /// True if every slot is empty (can only happen for padding).
+    pub fn is_empty(&self) -> bool {
+        self.occupancy() == 0
+    }
+
+    /// Hardware footprint in bits: per slot, 1 valid bit + pointer.
+    pub fn storage_bits(&self, pointer_bits: u32) -> usize {
+        self.slots().len() * (1 + pointer_bits as usize)
+    }
+}
+
+/// A kneaded group: the kneaded weights produced from up to `KS`
+/// consecutive source weights, plus the per-source metadata the splitter
+/// needs (signs) and the pass-mark bookkeeping (§III.C.2).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KneadedGroup {
+    /// Kneaded weights, densest first (slot queues drain in lane order).
+    pub kneaded: Vec<KneadedWeight>,
+    /// Bit `p` set ⇒ source weight `p` is negative. Signs ride with the
+    /// activation dispatch, not with the packed magnitude bits.
+    /// 256 bits — one per possible pointer value (KS ≤ 256).
+    pub signs: [u64; 4],
+    /// Number of source weights this group covers (== KS except for the
+    /// lane tail).
+    pub source_len: usize,
+}
+
+impl KneadedGroup {
+    /// Empty group covering `source_len` sources.
+    pub fn with_sources(source_len: usize) -> Self {
+        Self { kneaded: Vec::new(), signs: [0; 4], source_len }
+    }
+
+    /// Kneaded length — the cycle cost of this group on one splitter.
+    pub fn len(&self) -> usize {
+        self.kneaded.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kneaded.is_empty()
+    }
+
+    /// Sign of source weight `p` as ±1.
+    #[inline]
+    pub fn sign_of(&self, p: u8) -> i64 {
+        if self.signs[(p >> 6) as usize] >> (p & 63) & 1 == 1 {
+            -1
+        } else {
+            1
+        }
+    }
+
+    /// Record the sign of a source weight during construction.
+    pub(crate) fn set_sign(&mut self, p: usize, w: QWeight) {
+        if w < 0 {
+            self.signs[p >> 6] |= 1 << (p & 63);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_weight_has_zero_occupancy() {
+        let k = KneadedWeight::empty(16);
+        assert!(k.is_empty());
+        assert_eq!(k.occupancy(), 0);
+        assert_eq!(k.slots().len(), 16);
+    }
+
+    #[test]
+    fn storage_bits_counts_pointer_width() {
+        let k = KneadedWeight::empty(16);
+        assert_eq!(k.storage_bits(4), 16 * 5); // KS=16 → 4-bit p
+        assert_eq!(k.storage_bits(5), 16 * 6); // KS=32
+    }
+
+    #[test]
+    fn signs_pack_into_bitmask() {
+        let mut g = KneadedGroup::with_sources(3);
+        g.set_sign(0, -5);
+        g.set_sign(1, 5);
+        g.set_sign(2, -1);
+        assert_eq!(g.sign_of(0), -1);
+        assert_eq!(g.sign_of(1), 1);
+        assert_eq!(g.sign_of(2), -1);
+    }
+}

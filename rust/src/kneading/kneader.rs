@@ -1,0 +1,229 @@
+//! The kneading algorithm (Fig 3) and its exact inverse.
+
+use super::format::{KneadedGroup, KneadedWeight, EMPTY_SLOT};
+use super::lane::Lane;
+use crate::config::Mode;
+use crate::quant::QWeight;
+
+/// A fully kneaded lane: one [`KneadedGroup`] per KS-sized chunk of the
+/// source lane, in order. Groups whose weights are all zero knead to
+/// zero kneaded weights and cost zero cycles — the automatic zero-value
+/// elimination the paper highlights (w6 in Fig 3).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KneadedLane {
+    pub groups: Vec<KneadedGroup>,
+    pub ks: usize,
+    pub bits: usize,
+}
+
+impl KneadedLane {
+    /// Total kneaded weights — the lane's cycle cost on one splitter.
+    pub fn kneaded_len(&self) -> usize {
+        self.groups.iter().map(KneadedGroup::len).sum()
+    }
+
+    /// Total source weights covered.
+    pub fn source_len(&self) -> usize {
+        self.groups.iter().map(|g| g.source_len).sum()
+    }
+
+    /// Compression ratio ≥ 1 (source / kneaded); `None` for empty lanes.
+    pub fn ratio(&self) -> Option<f64> {
+        let k = self.kneaded_len();
+        if k == 0 {
+            return None;
+        }
+        Some(self.source_len() as f64 / k as f64)
+    }
+}
+
+/// Knead one group of at most `KS` weights (Fig 3 a→c).
+///
+/// For each bit position `b`, the source indices whose bit `b` is
+/// essential form a queue in lane order; kneaded weight `k` takes the
+/// `k`-th entry of every queue. The group kneads to
+/// `max_b queue_len(b)` kneaded weights — the per-bit popcount bound.
+pub fn knead_group(weights: &[QWeight], mode: Mode) -> KneadedGroup {
+    let bits = mode.weight_bits();
+    debug_assert!(weights.len() <= 256, "KS > 256 unsupported (u8 pointers)");
+    debug_assert!(weights.iter().all(|&w| crate::quant::fits_mode(w, mode)));
+
+    // Two passes over the group, no per-bit queue allocation (§Perf):
+    // pass 1 counts essential bits per position (the kneaded length is
+    // their max); pass 2 drops each essential bit at its cursor — the
+    // cursors enforce the same lane-order "queue" semantics.
+    let mut group = KneadedGroup::with_sources(weights.len());
+    let mut counts = [0u16; 16];
+    for (i, &w) in weights.iter().enumerate() {
+        group.set_sign(i, w);
+        let mut mag = w.unsigned_abs();
+        if bits < 32 {
+            mag &= (1u32 << bits) - 1;
+        }
+        while mag != 0 {
+            counts[mag.trailing_zeros() as usize] += 1;
+            mag &= mag - 1;
+        }
+    }
+    let n_kneaded = counts[..bits].iter().copied().max().unwrap_or(0) as usize;
+    group.kneaded.resize(n_kneaded, KneadedWeight::empty(bits));
+    let mut cursor = [0u16; 16];
+    for (i, &w) in weights.iter().enumerate() {
+        let mut mag = w.unsigned_abs();
+        if bits < 32 {
+            mag &= (1u32 << bits) - 1;
+        }
+        while mag != 0 {
+            let b = mag.trailing_zeros() as usize;
+            group.kneaded[cursor[b] as usize].set_slot(b, i as u8);
+            cursor[b] += 1;
+            mag &= mag - 1;
+        }
+    }
+    debug_assert!(group.kneaded.iter().all(|kw| !kw.is_empty()));
+    group
+}
+
+/// Knead a whole lane with stride `ks`.
+pub fn knead_lane(lane: &Lane, ks: usize, mode: Mode) -> KneadedLane {
+    let groups = lane
+        .weights
+        .chunks(ks)
+        .map(|chunk| knead_group(chunk, mode))
+        .collect();
+    KneadedLane { groups, ks, bits: mode.weight_bits() }
+}
+
+/// Exact inverse of [`knead_group`]: reconstruct the source weights.
+///
+/// Proves losslessness (invariant I1 in DESIGN.md): every essential bit
+/// appears in exactly one slot, tagged with its source pointer, so the
+/// magnitudes rebuild bit-by-bit and the sign mask restores signs.
+pub fn unknead_group(group: &KneadedGroup, _mode: Mode) -> Vec<QWeight> {
+    let mut mags = vec![0u32; group.source_len];
+    for kw in &group.kneaded {
+        for (b, &slot) in kw.slots().iter().enumerate() {
+            if slot != EMPTY_SLOT {
+                let p = slot as usize;
+                debug_assert!(p < group.source_len, "pointer out of range");
+                debug_assert!(mags[p] >> b & 1 == 0, "duplicate bit");
+                mags[p] |= 1 << b;
+            }
+        }
+    }
+    mags.iter()
+        .enumerate()
+        .map(|(i, &m)| group.sign_of(i as u8) as i32 * m as i32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    /// The paper's Figure 3 example, transcribed: 6 weights where w6 is
+    /// zero-valued; kneading shrinks 6 cycles to ⌈max popcount⌉.
+    #[test]
+    fn fig3_style_example() {
+        // Bit patterns chosen so bit 0 is essential in w1, w2, w4:
+        let ws = [0b0101, 0b0011, 0b1000, 0b0001, 0b0110, 0b0000];
+        let g = knead_group(&ws, Mode::Fp16);
+        assert_eq!(g.source_len, 6);
+        // popcounts per bit: b0: w0,w1,w3 → 3; b1: w1,w4 → 2; b2: w0,w4 → 2; b3: w2 → 1
+        assert_eq!(g.len(), 3);
+        // First kneaded weight takes the head of every queue.
+        assert_eq!(g.kneaded[0].slots()[0], 0);
+        assert_eq!(g.kneaded[0].slots()[1], 1);
+        assert_eq!(g.kneaded[0].slots()[2], 0);
+        assert_eq!(g.kneaded[0].slots()[3], 2);
+        // Second takes the next entries.
+        assert_eq!(g.kneaded[1].slots()[0], 1);
+        assert_eq!(g.kneaded[1].slots()[1], 4);
+        assert_eq!(g.kneaded[1].slots()[2], 4);
+        assert_eq!(g.kneaded[1].slots()[3], EMPTY_SLOT);
+        // Third: only bit 0 remains (w3).
+        assert_eq!(g.kneaded[2].slots()[0], 3);
+        assert_eq!(g.kneaded[2].occupancy(), 1);
+    }
+
+    #[test]
+    fn all_zero_group_vanishes() {
+        let g = knead_group(&[0, 0, 0, 0], Mode::Fp16);
+        assert_eq!(g.len(), 0);
+        assert_eq!(g.source_len, 4);
+        assert_eq!(unknead_group(&g, Mode::Fp16), vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn kneaded_length_equals_max_popcount() {
+        prop::run(
+            "kneaded len == max per-bit popcount",
+            |r: &mut Rng| prop::gen::vec_of(r, 1, 16, |r| prop::gen::weight(r, 16)),
+            |ws| {
+                let g = knead_group(ws, Mode::Fp16);
+                let pc = crate::quant::popcount_per_position(ws, 16);
+                let want = *pc.iter().max().unwrap() as usize;
+                if g.len() == want {
+                    Ok(())
+                } else {
+                    Err(format!("kneaded {} != max popcount {want}", g.len()))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn unknead_is_exact_inverse_fp16_and_int8() {
+        for mode in [Mode::Fp16, Mode::Int8] {
+            let bits = mode.weight_bits() as u32;
+            prop::run(
+                "unknead(knead(ws)) == ws",
+                |r: &mut Rng| prop::gen::vec_of(r, 1, 32, |r| prop::gen::weight(r, bits)),
+                |ws| {
+                    let g = knead_group(ws, mode);
+                    let back = unknead_group(&g, mode);
+                    if &back == ws {
+                        Ok(())
+                    } else {
+                        Err(format!("got {back:?}"))
+                    }
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn lane_groups_respect_stride() {
+        let mut rng = Rng::new(1);
+        let ws: Vec<i32> = (0..50).map(|_| prop::gen::weight(&mut rng, 16)).collect();
+        let lane = Lane::new(ws.clone(), vec![1; 50]);
+        let kl = knead_lane(&lane, 16, Mode::Fp16);
+        assert_eq!(kl.groups.len(), 4); // 16+16+16+2
+        assert_eq!(kl.groups[3].source_len, 2);
+        assert_eq!(kl.source_len(), 50);
+        // Round-trip through all groups reconstructs the lane.
+        let mut back = Vec::new();
+        for g in &kl.groups {
+            back.extend(unknead_group(g, Mode::Fp16));
+        }
+        assert_eq!(back, ws);
+    }
+
+    #[test]
+    fn ratio_reflects_compression() {
+        // Dense weights (all bits set) cannot compress: ratio == 1.
+        let lane = Lane::new(vec![0x7FFF; 16], vec![1; 16]);
+        let kl = knead_lane(&lane, 16, Mode::Fp16);
+        assert_eq!(kl.kneaded_len(), 16);
+        assert!((kl.ratio().unwrap() - 1.0).abs() < 1e-12);
+        // One essential bit per weight, different positions: 16 → 1.
+        let ws: Vec<i32> = (0..16).map(|b| 1 << b).collect();
+        // Top bit folds? 1<<15 magnitude bound is 2^15 exclusive → use 15 bits.
+        let ws: Vec<i32> = ws.into_iter().map(|w| if w >= 1 << 15 { 1 << 14 } else { w }).collect();
+        let lane = Lane::new(ws, vec![1; 16]);
+        let kl = knead_lane(&lane, 16, Mode::Fp16);
+        // bits 0..14 unique + duplicate at 14 → max popcount 2.
+        assert_eq!(kl.kneaded_len(), 2);
+    }
+}

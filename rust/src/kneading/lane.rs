@@ -1,0 +1,94 @@
+//! Lanes: the weight/activation streams a PE consumes.
+//!
+//! A lane is one reduction — all (weight, activation) pairs that sum
+//! into one output-feature-map partial sum (a filter's receptive field
+//! across input channels, §III.C).
+
+use crate::quant::{QAct, QWeight};
+use crate::util::rng::Rng;
+
+/// One synaptic lane: parallel arrays of weights and activations.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Lane {
+    pub weights: Vec<QWeight>,
+    pub activations: Vec<QAct>,
+}
+
+impl Lane {
+    pub fn new(weights: Vec<QWeight>, activations: Vec<QAct>) -> Self {
+        assert_eq!(
+            weights.len(),
+            activations.len(),
+            "lane weight/activation length mismatch"
+        );
+        Self { weights, activations }
+    }
+
+    pub fn len(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.weights.is_empty()
+    }
+
+    /// Exact MAC reduction — the golden value every SAC path must match.
+    pub fn mac_reference(&self) -> i64 {
+        self.weights
+            .iter()
+            .zip(&self.activations)
+            .map(|(&w, &a)| w as i64 * a as i64)
+            .sum()
+    }
+
+    /// Random lane from a weight sampler + activation sampler.
+    pub fn random(
+        len: usize,
+        rng: &mut Rng,
+        mut weight: impl FnMut(&mut Rng) -> QWeight,
+        mut act: impl FnMut(&mut Rng) -> QAct,
+    ) -> Self {
+        let weights = (0..len).map(|_| weight(rng)).collect();
+        let activations = (0..len).map(|_| act(rng)).collect();
+        Self { weights, activations }
+    }
+
+    /// Activation slice for group `g` of stride `ks` (what the splitter's
+    /// KS-wide activation window sees).
+    pub fn group_acts(&self, g: usize, ks: usize) -> &[QAct] {
+        let start = g * ks;
+        let end = (start + ks).min(self.activations.len());
+        &self.activations[start..end]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mac_reference_simple() {
+        let lane = Lane::new(vec![2, -3, 0], vec![10, 5, 999]);
+        assert_eq!(lane.mac_reference(), 20 - 15);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn mismatched_lengths_panic() {
+        Lane::new(vec![1], vec![1, 2]);
+    }
+
+    #[test]
+    fn group_acts_windows() {
+        let lane = Lane::new(vec![0; 10], (0..10).collect());
+        assert_eq!(lane.group_acts(0, 4), &[0, 1, 2, 3]);
+        assert_eq!(lane.group_acts(2, 4), &[8, 9]); // tail
+    }
+
+    #[test]
+    fn mac_reference_no_overflow_at_extremes() {
+        // 256 max-magnitude pairs stay well inside i64.
+        let lane = Lane::new(vec![32767; 256], vec![32767; 256]);
+        assert_eq!(lane.mac_reference(), 256 * 32767i64 * 32767i64);
+    }
+}

@@ -1,0 +1,19 @@
+//! Weight kneading (§III.B) — the paper's core compile-time transform.
+//!
+//! Within a group of `KS` consecutive lane weights, the essential bits of
+//! later weights "bubble up" into the zero-bit slack positions of earlier
+//! ones (Fig 3). Each bit slot of a kneaded weight carries the pointer
+//! `p` of the source weight it came from (Fig 6), so the splitter can
+//! reference the right activation. Kneading is lossless: `unknead`
+//! reproduces the original weights exactly, and SAC over kneaded weights
+//! produces bit-identical partial sums (see `sac::unit` tests and
+//! `rust/tests/invariants.rs`).
+
+mod format;
+mod kneader;
+mod lane;
+pub mod stats;
+
+pub use format::{KneadedGroup, KneadedWeight, EMPTY_SLOT};
+pub use kneader::{knead_group, knead_lane, unknead_group, KneadedLane};
+pub use lane::Lane;

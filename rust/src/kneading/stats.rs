@@ -1,0 +1,143 @@
+//! Kneading statistics: compression ratios and group-length
+//! distributions — the quantities behind Fig 11's T_ks/T_base curves.
+
+use super::kneader::knead_group;
+use crate::config::Mode;
+use crate::quant::QWeight;
+
+/// Aggregate kneading outcome over a weight population.
+#[derive(Debug, Clone, Default)]
+pub struct KneadStats {
+    /// Source weights observed.
+    pub source: u64,
+    /// Kneaded weights produced.
+    pub kneaded: u64,
+    /// Groups processed.
+    pub groups: u64,
+    /// Groups that vanished entirely (all-zero weights).
+    pub empty_groups: u64,
+    /// Histogram of kneaded group lengths (index = length).
+    pub group_len_hist: Vec<u64>,
+}
+
+impl KneadStats {
+    /// Measure kneading of `weights` with stride `ks`.
+    pub fn measure(weights: &[QWeight], ks: usize, mode: Mode) -> Self {
+        let mut s = KneadStats::default();
+        for chunk in weights.chunks(ks) {
+            let g = knead_group(chunk, mode);
+            s.source += chunk.len() as u64;
+            s.kneaded += g.len() as u64;
+            s.groups += 1;
+            if g.is_empty() {
+                s.empty_groups += 1;
+            }
+            if s.group_len_hist.len() <= g.len() {
+                s.group_len_hist.resize(g.len() + 1, 0);
+            }
+            s.group_len_hist[g.len()] += 1;
+        }
+        s
+    }
+
+    /// Merge partial measurements (parallel accumulation).
+    pub fn merge(&mut self, o: &KneadStats) {
+        self.source += o.source;
+        self.kneaded += o.kneaded;
+        self.groups += o.groups;
+        self.empty_groups += o.empty_groups;
+        if self.group_len_hist.len() < o.group_len_hist.len() {
+            self.group_len_hist.resize(o.group_len_hist.len(), 0);
+        }
+        for (i, &c) in o.group_len_hist.iter().enumerate() {
+            self.group_len_hist[i] += c;
+        }
+    }
+
+    /// Compression ratio source/kneaded (≥ 1); 1.0 for empty input.
+    pub fn ratio(&self) -> f64 {
+        if self.kneaded == 0 {
+            return 1.0;
+        }
+        self.source as f64 / self.kneaded as f64
+    }
+
+    /// The paper's Fig 11 y-axis: T_ks / T_base = kneaded / source
+    /// (cycle count is proportional to weights consumed per splitter).
+    pub fn time_fraction(&self) -> f64 {
+        if self.source == 0 {
+            return 1.0;
+        }
+        self.kneaded as f64 / self.source as f64
+    }
+
+    /// Mean kneaded group length.
+    pub fn mean_group_len(&self) -> f64 {
+        if self.groups == 0 {
+            return 0.0;
+        }
+        self.kneaded as f64 / self.groups as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::profile_for;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dense_weights_do_not_compress() {
+        let ws = vec![0x7FFF; 64];
+        let s = KneadStats::measure(&ws, 16, Mode::Fp16);
+        assert_eq!(s.ratio(), 1.0);
+        assert_eq!(s.kneaded, 64);
+        assert_eq!(s.empty_groups, 0);
+    }
+
+    #[test]
+    fn zero_weights_compress_infinitely() {
+        let ws = vec![0; 64];
+        let s = KneadStats::measure(&ws, 16, Mode::Fp16);
+        assert_eq!(s.kneaded, 0);
+        assert_eq!(s.empty_groups, 4);
+        assert_eq!(s.time_fraction(), 0.0);
+    }
+
+    #[test]
+    fn calibrated_profile_lands_in_paper_zone() {
+        // With Table-1 bit statistics and KS=16, the paper's Fig 11
+        // implies T_ks/T_base around 0.6–0.8 for fp16. Our generator
+        // should land inside a generous version of that band.
+        let mut rng = Rng::new(42);
+        let p = profile_for("alexnet", Mode::Fp16).unwrap();
+        let ws = p.generate(64_000, &mut rng);
+        let s = KneadStats::measure(&ws, 16, Mode::Fp16);
+        let tf = s.time_fraction();
+        assert!((0.45..0.9).contains(&tf), "T_ks/T_base = {tf}");
+    }
+
+    #[test]
+    fn larger_ks_kneads_harder() {
+        let mut rng = Rng::new(7);
+        let p = profile_for("vgg16", Mode::Fp16).unwrap();
+        let ws = p.generate(64_000, &mut rng);
+        let t10 = KneadStats::measure(&ws, 10, Mode::Fp16).time_fraction();
+        let t32 = KneadStats::measure(&ws, 32, Mode::Fp16).time_fraction();
+        assert!(t32 < t10, "KS=32 ({t32}) should beat KS=10 ({t10})");
+    }
+
+    #[test]
+    fn merge_equals_whole() {
+        let mut rng = Rng::new(3);
+        let p = profile_for("nin", Mode::Fp16).unwrap();
+        let ws = p.generate(3_200, &mut rng);
+        let whole = KneadStats::measure(&ws, 16, Mode::Fp16);
+        let mut a = KneadStats::measure(&ws[..1600], 16, Mode::Fp16);
+        let b = KneadStats::measure(&ws[1600..], 16, Mode::Fp16);
+        a.merge(&b);
+        assert_eq!(a.source, whole.source);
+        assert_eq!(a.kneaded, whole.kneaded);
+        assert_eq!(a.group_len_hist, whole.group_len_hist);
+    }
+}

@@ -1,0 +1,110 @@
+//! Gate-delay latency models — the substrate behind the paper's
+//! Figure 1 (multi-operand adder vs multiplier RTL latency).
+//!
+//! The paper measured a Xilinx Z7020 via Vivado HLS; we use standard
+//! logic-depth formulas in units of one full-adder delay τ:
+//!
+//! * n-operand adder: a carry-save (3:2 compressor) tree reduces n
+//!   addends to 2 in ⌈log₁.₅(n/2)⌉ CSA levels (1τ each), then one final
+//!   carry-propagate adder of ⌈log₂ w⌉τ (carry-lookahead).
+//! * w-bit array multiplier: partial-product generation (1τ) + a CSA
+//!   reduction over w partial products + the final w-bit CPA — i.e. the
+//!   *same* tree as a w-operand adder plus the PP stage. That structural
+//!   relationship is exactly why Fig 1 finds a 16-operand adder slightly
+//!   *faster* than the 2-operand 16-bit multiplier (by ~12.3%).
+
+/// Full-adder delay τ in nanoseconds. Z7020-class fabric at the paper's
+/// 125 MHz: one 16-bit multiply fits in one 8 ns cycle, so τ ≈ 0.55 ns
+/// puts the multiplier at ~7.2 ns. Only *ratios* matter for Fig 1.
+pub const TAU_NS: f64 = 0.55;
+
+/// CSA (3:2 compressor) tree depth to reduce `n` addends to 2.
+pub fn csa_levels(n: usize) -> u32 {
+    // Each level maps groups of 3 addends to 2: n → ceil(2n/3).
+    let mut n = n;
+    let mut levels = 0;
+    while n > 2 {
+        n = (2 * n).div_ceil(3);
+        levels += 1;
+    }
+    levels
+}
+
+/// Final carry-propagate adder delay in τ (carry-lookahead, log depth).
+pub fn cpa_delay_tau(width_bits: usize) -> f64 {
+    (width_bits as f64).log2().ceil()
+}
+
+/// Latency of an `n`-operand, `w`-bit adder in ns.
+pub fn adder_delay_ns(operands: usize, width_bits: usize) -> f64 {
+    assert!(operands >= 2);
+    (csa_levels(operands) as f64 + cpa_delay_tau(width_bits)) * TAU_NS
+}
+
+/// Latency of a 2-operand `w`×`w` array multiplier in ns: PP generation
+/// + CSA tree over `w` partial products + final 2w-bit CPA.
+pub fn multiplier_delay_ns(width_bits: usize) -> f64 {
+    let pp_gen = 1.0;
+    let tree = csa_levels(width_bits) as f64;
+    let cpa = cpa_delay_tau(2 * width_bits);
+    (pp_gen + tree + cpa) * TAU_NS
+}
+
+/// Figure 1 series: adder latency for 2..=16 operands plus the
+/// 16-bit multiplier reference line.
+pub fn fig1_series(width_bits: usize) -> (Vec<(usize, f64)>, f64) {
+    let adders = (2..=16).map(|n| (n, adder_delay_ns(n, width_bits))).collect();
+    (adders, multiplier_delay_ns(width_bits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csa_levels_known_values() {
+        assert_eq!(csa_levels(2), 0);
+        assert_eq!(csa_levels(3), 1);
+        assert_eq!(csa_levels(4), 2);
+        assert_eq!(csa_levels(16), 6);
+    }
+
+    #[test]
+    fn adder_monotone_in_operands() {
+        let mut prev = 0.0;
+        for n in 2..=16 {
+            let d = adder_delay_ns(n, 16);
+            assert!(d >= prev, "n={n}");
+            prev = d;
+        }
+    }
+
+    /// The paper's Figure 1 headline: the 16-bit multiplier takes ~12.3%
+    /// more time than even the 16-operand adder.
+    #[test]
+    fn multiplier_slower_than_16_operand_adder() {
+        let add16 = adder_delay_ns(16, 16);
+        let mult = multiplier_delay_ns(16);
+        let overhead = mult / add16 - 1.0;
+        assert!(
+            (0.05..0.25).contains(&overhead),
+            "multiplier overhead {overhead:.3} (paper: 0.123)"
+        );
+    }
+
+    /// 125 MHz feasibility (§IV): the multiplier must fit in one 8 ns
+    /// cycle — the constraint that pinned the paper's frequency.
+    #[test]
+    fn multiplier_fits_125mhz_cycle() {
+        assert!(multiplier_delay_ns(16) < 8.0);
+    }
+
+    #[test]
+    fn fig1_series_shape() {
+        let (adders, mult) = fig1_series(16);
+        assert_eq!(adders.len(), 15);
+        assert_eq!(adders[0].0, 2);
+        // All adders in the series beat the multiplier.
+        assert!(adders.iter().all(|&(_, d)| d < mult));
+    }
+}

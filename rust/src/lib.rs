@@ -1,0 +1,74 @@
+//! # Tetris — re-architected CNN computation for ML accelerators
+//!
+//! Full-system reproduction of *Tetris: Re-architecting Convolutional
+//! Neural Network Computation for Machine Learning Accelerators*
+//! (Lu et al., 2018): the weight-kneading compiler, the SAC
+//! (split-and-accumulate) computing pattern, a cycle-level model of the
+//! Tetris accelerator plus the DaDianNao and PRA (bit-pragmatic)
+//! baselines, the energy/area model behind the paper's evaluation, and a
+//! serving coordinator that drives batched inference through either the
+//! timing simulators or an AOT-compiled XLA golden model.
+//!
+//! ## Layer map
+//!
+//! * [`quant`] — fixed-point formats (fp16 Q-format / int8) and bit tools.
+//! * [`model`] — network zoo (AlexNet, GoogleNet, VGG-16/19, NiN),
+//!   tensors, synthetic + trained weight sources.
+//! * [`kneading`] — the paper's §III.B weight-kneading compiler.
+//! * [`sac`] — the paper's §III.C SAC functional units (bit-exact).
+//! * [`sim`] — cycle-level simulators: Tetris, DaDianNao, PRA.
+//! * [`energy`] — 65nm component energy/area tables, power + EDP model.
+//! * [`latency`] — gate-delay model behind the paper's Figure 1.
+//! * [`analysis`] — bit-level statistics (Table 1, Figure 2).
+//! * [`coordinator`] — serving engine (router, batcher, workers).
+//! * [`runtime`] — PJRT/XLA runtime that loads `artifacts/*.hlo.txt`.
+//! * [`report`] — regenerates every table and figure of the paper.
+//! * [`util`] — in-repo substrates (RNG, JSON, CLI, bench harness,
+//!   thread pool, property testing) — this environment is offline, so
+//!   these are built from scratch rather than pulled from crates.io.
+
+pub mod analysis;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod kneading;
+pub mod latency;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sac;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("I/O error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("XLA error: {0}")]
+    Xla(String),
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("artifact error: {0}")]
+    Artifact(String),
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+    #[error("shape error: {0}")]
+    Shape(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl From<crate::util::json::ParseError> for Error {
+    fn from(e: crate::util::json::ParseError) -> Self {
+        Error::Config(e.to_string())
+    }
+}

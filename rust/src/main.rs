@@ -1,0 +1,115 @@
+//! Tetris CLI — leader entrypoint.
+//!
+//! ```text
+//! tetris report <table1|fig1|fig2|fig8|fig9|fig10|fig11|table2|all> [--csv-dir D]
+//! tetris simulate --network vgg16 --accel tetris --mode fp16 --ks 16
+//! tetris knead    --network alexnet --ks 16 --mode fp16
+//! tetris serve    --requests 64 --max-batch 8 --network vgg16
+//! tetris golden   --dir artifacts
+//! ```
+
+use tetris::config::{AccelConfig, Mode};
+use tetris::model::zoo;
+use tetris::util::cli::Args;
+
+const USAGE: &str = "\
+tetris — Tetris accelerator reproduction (weight kneading + SAC)
+
+Subcommands:
+  report <which>   regenerate a paper table/figure (table1, fig1, fig2,
+                   fig8, fig9, fig10, fig11, table2, all)
+  simulate         run one network through one accelerator timing model
+  knead            print kneading statistics for a network
+  serve            start the serving coordinator with a synthetic load
+  golden           execute the AOT golden model from artifacts/ via PJRT
+
+Run `tetris <subcommand> --help` for options.
+";
+
+fn main() {
+    if let Err(msg) = run() {
+        eprintln!("{msg}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<(), String> {
+    let argv: Vec<String> = std::env::args().collect();
+    let sub = argv.get(1).map(String::as_str);
+    match sub {
+        Some("report") => {
+            let args = Args::new("tetris report — regenerate paper tables/figures")
+                .opt("csv-dir", "", "directory for CSV output (empty = none)")
+                .opt("seed", "0x7e7215", "random seed for synthetic weights")
+                .parse_env(2)?;
+            let which = args
+                .positional()
+                .first()
+                .cloned()
+                .ok_or_else(|| format!("report: missing <which>\n\n{USAGE}"))?;
+            let csv_dir = match args.get("csv-dir") {
+                "" => None,
+                d => Some(std::path::PathBuf::from(d)),
+            };
+            let seed = args.get_u64("seed")?;
+            tetris::report::run(&which, seed, csv_dir.as_deref()).map_err(|e| e.to_string())
+        }
+        Some("simulate") => {
+            let args = Args::new("tetris simulate — one network, one accelerator")
+                .opt("network", "vgg16", "alexnet|googlenet|vgg16|vgg19|nin")
+                .opt("accel", "tetris", "tetris|dadn|pra")
+                .opt("mode", "fp16", "fp16|int8")
+                .opt("ks", "16", "kneading stride")
+                .opt("seed", "0x7e7215", "random seed")
+                .parse_env(2)?;
+            let net = zoo::by_name(args.get("network")).map_err(|e| e.to_string())?;
+            let mode: Mode = args.get("mode").parse()?;
+            let cfg = AccelConfig { ks: args.get_usize("ks")?, mode, ..AccelConfig::default() };
+            cfg.validate()?;
+            let rep = tetris::report::simulate_one(&net, args.get("accel"), &cfg, args.get_u64("seed")?)
+                .map_err(|e| e.to_string())?;
+            println!("{rep}");
+            Ok(())
+        }
+        Some("knead") => {
+            let args = Args::new("tetris knead — kneading statistics")
+                .opt("network", "alexnet", "network name")
+                .opt("ks", "16", "kneading stride")
+                .opt("mode", "fp16", "fp16|int8")
+                .opt("seed", "0x7e7215", "random seed")
+                .parse_env(2)?;
+            let net = zoo::by_name(args.get("network")).map_err(|e| e.to_string())?;
+            let mode: Mode = args.get("mode").parse()?;
+            tetris::report::knead_stats(&net, args.get_usize("ks")?, mode, args.get_u64("seed")?)
+                .map_err(|e| e.to_string())
+        }
+        Some("serve") => {
+            let args = Args::new("tetris serve — coordinator with synthetic load")
+                .opt("requests", "64", "number of requests to issue")
+                .opt("max-batch", "8", "dynamic batcher upper bound")
+                .opt("network", "vgg16", "network name")
+                .opt("seed", "0x7e7215", "random seed")
+                .parse_env(2)?;
+            let net = zoo::by_name(args.get("network")).map_err(|e| e.to_string())?;
+            tetris::coordinator::demo::run_synthetic_load(
+                &net,
+                args.get_usize("requests")?,
+                args.get_usize("max-batch")?,
+                args.get_u64("seed")?,
+            )
+            .map_err(|e| e.to_string())
+        }
+        Some("golden") => {
+            let args = Args::new("tetris golden — run AOT model via PJRT")
+                .opt("dir", "artifacts", "artifacts directory")
+                .parse_env(2)?;
+            tetris::runtime::golden::run_from_dir(std::path::Path::new(args.get("dir")))
+                .map_err(|e| e.to_string())
+        }
+        Some("--help") | Some("-h") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => Err(format!("unknown subcommand `{other}`\n\n{USAGE}")),
+    }
+}

@@ -1,0 +1,225 @@
+//! Weight-file I/O — the `TTW1` interchange format written by
+//! `python/compile/aot.py` (JAX-trained, quantized weights) and read by
+//! the rust side for end-to-end inference.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic   4 B   b"TTW1"
+//! hdr_len u32   length of the JSON header in bytes
+//! header  JSON  {"layers": [{"name", "shape": [o,i,kh,kw],
+//!                            "frac_bits", "offset", "count"}, ...],
+//!                "mode": "fp16"|"int8"}
+//! data    i16[] concatenated per-layer weight payloads (raw quantized)
+//! ```
+
+use std::io::Read;
+use std::path::Path;
+
+use crate::config::Mode;
+use crate::quant::QWeight;
+use crate::util::json::{parse, Json};
+
+/// One layer's loaded weights.
+#[derive(Debug, Clone)]
+pub struct LoadedLayer {
+    pub name: String,
+    /// OIHW shape.
+    pub shape: [usize; 4],
+    /// Fractional bits of the Q-format.
+    pub frac_bits: u32,
+    /// Quantized weights, row-major OIHW.
+    pub weights: Vec<QWeight>,
+}
+
+/// A full weight file.
+#[derive(Debug, Clone)]
+pub struct LoadedWeights {
+    pub mode: Mode,
+    pub layers: Vec<LoadedLayer>,
+}
+
+impl LoadedWeights {
+    pub fn layer(&self, name: &str) -> Option<&LoadedLayer> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+
+    pub fn total_weights(&self) -> usize {
+        self.layers.iter().map(|l| l.weights.len()).sum()
+    }
+}
+
+/// Read a `TTW1` file.
+pub fn read_weight_file(path: &Path) -> crate::Result<LoadedWeights> {
+    let mut f = std::fs::File::open(path)?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != b"TTW1" {
+        return Err(crate::Error::Artifact(format!(
+            "{}: bad magic {:?} (want TTW1)",
+            path.display(),
+            magic
+        )));
+    }
+    let mut len_bytes = [0u8; 4];
+    f.read_exact(&mut len_bytes)?;
+    let hdr_len = u32::from_le_bytes(len_bytes) as usize;
+    let mut hdr = vec![0u8; hdr_len];
+    f.read_exact(&mut hdr)?;
+    let header = parse(
+        std::str::from_utf8(&hdr)
+            .map_err(|_| crate::Error::Artifact("header is not UTF-8".into()))?,
+    )?;
+    let mut data = Vec::new();
+    f.read_to_end(&mut data)?;
+    if data.len() % 2 != 0 {
+        return Err(crate::Error::Artifact("odd payload length".into()));
+    }
+    let values: Vec<i16> = data
+        .chunks_exact(2)
+        .map(|c| i16::from_le_bytes([c[0], c[1]]))
+        .collect();
+
+    let mode: Mode = header
+        .require("mode")?
+        .as_str()
+        .ok_or_else(|| crate::Error::Artifact("mode must be a string".into()))?
+        .parse()
+        .map_err(crate::Error::Artifact)?;
+
+    let mut layers = Vec::new();
+    for l in header
+        .require("layers")?
+        .as_arr()
+        .ok_or_else(|| crate::Error::Artifact("layers must be an array".into()))?
+    {
+        let name = l.require("name")?.as_str().unwrap_or_default().to_string();
+        let shape_v = l.require("shape")?;
+        let dims = shape_v
+            .as_arr()
+            .ok_or_else(|| crate::Error::Artifact("shape must be an array".into()))?;
+        if dims.len() != 4 {
+            return Err(crate::Error::Artifact(format!("{name}: shape must be OIHW")));
+        }
+        let mut shape = [0usize; 4];
+        for (i, d) in dims.iter().enumerate() {
+            shape[i] = d
+                .as_usize()
+                .ok_or_else(|| crate::Error::Artifact(format!("{name}: bad shape dim")))?;
+        }
+        let offset = l.require("offset")?.as_usize().unwrap_or(0);
+        let count = l.require("count")?.as_usize().unwrap_or(0);
+        if shape.iter().product::<usize>() != count {
+            return Err(crate::Error::Artifact(format!(
+                "{name}: shape {:?} disagrees with count {count}",
+                shape
+            )));
+        }
+        if offset + count > values.len() {
+            return Err(crate::Error::Artifact(format!(
+                "{name}: payload overruns file ({} values total)",
+                values.len()
+            )));
+        }
+        let weights: Vec<QWeight> = values[offset..offset + count].iter().map(|&v| v as i32).collect();
+        // Validate against the declared mode.
+        for &w in &weights {
+            if !crate::quant::fits_mode(w, mode) {
+                return Err(crate::Error::Artifact(format!(
+                    "{name}: weight {w} exceeds {mode} magnitude bound"
+                )));
+            }
+        }
+        let frac_bits = l.get("frac_bits").as_u64().unwrap_or(match mode {
+            Mode::Fp16 => 15,
+            Mode::Int8 => 7,
+        }) as u32;
+        layers.push(LoadedLayer { name, shape, frac_bits, weights });
+    }
+    Ok(LoadedWeights { mode, layers })
+}
+
+/// Write a `TTW1` file (used by tests and by rust-side weight dumping).
+pub fn write_weight_file(path: &Path, w: &LoadedWeights) -> crate::Result<()> {
+    use std::io::Write;
+    let mut layer_objs = Vec::new();
+    let mut payload: Vec<u8> = Vec::new();
+    let mut offset = 0usize;
+    for l in &w.layers {
+        layer_objs.push(Json::obj([
+            ("name", Json::Str(l.name.clone())),
+            (
+                "shape",
+                Json::arr(l.shape.iter().map(|&d| Json::Num(d as f64))),
+            ),
+            ("frac_bits", Json::Num(l.frac_bits as f64)),
+            ("offset", Json::Num(offset as f64)),
+            ("count", Json::Num(l.weights.len() as f64)),
+        ]));
+        for &q in &l.weights {
+            payload.extend_from_slice(&(q as i16).to_le_bytes());
+        }
+        offset += l.weights.len();
+    }
+    let header = Json::obj([
+        ("mode", Json::Str(w.mode.to_string())),
+        ("layers", Json::Arr(layer_objs)),
+    ])
+    .to_string_compact();
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(b"TTW1")?;
+    f.write_all(&(header.len() as u32).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    f.write_all(&payload)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> LoadedWeights {
+        LoadedWeights {
+            mode: Mode::Fp16,
+            layers: vec![
+                LoadedLayer {
+                    name: "conv1".into(),
+                    shape: [2, 1, 3, 3],
+                    frac_bits: 15,
+                    weights: (0..18).map(|i| i * 100 - 900).collect(),
+                },
+                LoadedLayer {
+                    name: "conv2".into(),
+                    shape: [1, 2, 1, 1],
+                    frac_bits: 15,
+                    weights: vec![-32767, 32767],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("ttw_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        let w = sample();
+        write_weight_file(&path, &w).unwrap();
+        let r = read_weight_file(&path).unwrap();
+        assert_eq!(r.mode, Mode::Fp16);
+        assert_eq!(r.layers.len(), 2);
+        assert_eq!(r.layer("conv1").unwrap().weights, w.layers[0].weights);
+        assert_eq!(r.layer("conv2").unwrap().shape, [1, 2, 1, 1]);
+        assert_eq!(r.total_weights(), 20);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join(format!("ttw_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(read_weight_file(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,120 @@
+//! Convolution layer descriptors and networks.
+//!
+//! The paper's evaluation is conv-only ("convolutions take nearly 98% of
+//! the computations", §I), so the zoo describes each network as its
+//! ordered conv layers; pooling only enters via each layer's recorded
+//! input spatial size.
+
+/// One convolution layer's shape parameters.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConvLayer {
+    /// Layer name, e.g. `conv3_1` or `inception_4a/3x3`.
+    pub name: String,
+    /// Input channels.
+    pub in_c: usize,
+    /// Output channels (filters).
+    pub out_c: usize,
+    /// Kernel height/width (square kernels throughout the zoo).
+    pub k: usize,
+    /// Stride.
+    pub stride: usize,
+    /// Zero padding on each side.
+    pub pad: usize,
+    /// Input spatial size (square), *after* any preceding pooling.
+    pub in_hw: usize,
+}
+
+impl ConvLayer {
+    /// Output spatial size (square).
+    pub fn out_hw(&self) -> usize {
+        (self.in_hw + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    /// Weights in this layer (no bias — biases don't enter MAC lanes).
+    pub fn weight_count(&self) -> u64 {
+        (self.out_c * self.in_c * self.k * self.k) as u64
+    }
+
+    /// Multiply-accumulates for one input image.
+    pub fn macs(&self) -> u64 {
+        self.weight_count() * (self.out_hw() * self.out_hw()) as u64
+    }
+
+    /// Reduction ("lane") length for one output pixel of one filter:
+    /// in_c × k × k weight/activation pairs summed into one partial sum.
+    pub fn lane_len(&self) -> usize {
+        self.in_c * self.k * self.k
+    }
+
+    /// Number of lanes per image (output pixels × filters).
+    pub fn lane_count(&self) -> u64 {
+        (self.out_c * self.out_hw() * self.out_hw()) as u64
+    }
+}
+
+/// A network = named ordered list of conv layers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<ConvLayer>,
+}
+
+impl Network {
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(ConvLayer::macs).sum()
+    }
+
+    pub fn total_weights(&self) -> u64 {
+        self.layers.iter().map(ConvLayer::weight_count).sum()
+    }
+
+    pub fn layer(&self, name: &str) -> Option<&ConvLayer> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vgg_conv1_1() -> ConvLayer {
+        ConvLayer {
+            name: "conv1_1".into(),
+            in_c: 3,
+            out_c: 64,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            in_hw: 224,
+        }
+    }
+
+    #[test]
+    fn out_hw_same_padding() {
+        assert_eq!(vgg_conv1_1().out_hw(), 224);
+    }
+
+    #[test]
+    fn out_hw_strided() {
+        // AlexNet conv1: 227x227, 11x11, stride 4, pad 0 → 55.
+        let l = ConvLayer {
+            name: "conv1".into(),
+            in_c: 3,
+            out_c: 96,
+            k: 11,
+            stride: 4,
+            pad: 0,
+            in_hw: 227,
+        };
+        assert_eq!(l.out_hw(), 55);
+    }
+
+    #[test]
+    fn macs_and_lanes_consistent() {
+        let l = vgg_conv1_1();
+        // total MACs == lanes × lane length
+        assert_eq!(l.macs(), l.lane_count() * l.lane_len() as u64);
+        // known value: 64*3*3*3*224*224 = 86,704,128
+        assert_eq!(l.macs(), 86_704_128);
+    }
+}

@@ -1,0 +1,13 @@
+//! Network model substrate: layer shapes, the five-network zoo the paper
+//! evaluates, tensors, and weight sources (synthetic calibrated
+//! generators + JAX-trained weight files).
+
+mod io;
+mod layer;
+mod tensor;
+pub mod weights;
+pub mod zoo;
+
+pub use io::{read_weight_file, write_weight_file, LoadedLayer, LoadedWeights};
+pub use layer::{ConvLayer, Network};
+pub use tensor::Tensor;

@@ -1,0 +1,115 @@
+//! Minimal dense tensor (NCHW) used by the functional inference path and
+//! the runtime golden-model comparison.
+
+/// Dense row-major tensor over `T`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor<T> {
+    shape: Vec<usize>,
+    data: Vec<T>,
+}
+
+impl<T: Copy + Default> Tensor<T> {
+    /// Zero-initialized tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![T::default(); n] }
+    }
+
+    /// Wrap existing data; errors if the element count mismatches.
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> crate::Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(crate::Error::Shape(format!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            )));
+        }
+        Ok(Self { shape: shape.to_vec(), data })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Flat index for a 4-D (NCHW) coordinate.
+    #[inline]
+    pub fn idx4(&self, n: usize, c: usize, h: usize, w: usize) -> usize {
+        debug_assert_eq!(self.shape.len(), 4);
+        ((n * self.shape[1] + c) * self.shape[2] + h) * self.shape[3] + w
+    }
+
+    #[inline]
+    pub fn get4(&self, n: usize, c: usize, h: usize, w: usize) -> T {
+        self.data[self.idx4(n, c, h, w)]
+    }
+
+    #[inline]
+    pub fn set4(&mut self, n: usize, c: usize, h: usize, w: usize, v: T) {
+        let i = self.idx4(n, c, h, w);
+        self.data[i] = v;
+    }
+
+    /// Reshape in place (same element count).
+    pub fn reshape(&mut self, shape: &[usize]) -> crate::Result<()> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            return Err(crate::Error::Shape(format!(
+                "cannot reshape {} elements into {:?}",
+                self.data.len(),
+                shape
+            )));
+        }
+        self.shape = shape.to_vec();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_indexing() {
+        let mut t: Tensor<i32> = Tensor::zeros(&[1, 2, 3, 4]);
+        assert_eq!(t.len(), 24);
+        t.set4(0, 1, 2, 3, 7);
+        assert_eq!(t.get4(0, 1, 2, 3), 7);
+        assert_eq!(t.data()[23], 7); // last element in row-major NCHW
+    }
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(Tensor::from_vec(&[2, 3], vec![0i32; 6]).is_ok());
+        assert!(Tensor::from_vec(&[2, 3], vec![0i32; 5]).is_err());
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let mut t: Tensor<f32> = Tensor::zeros(&[4, 4]);
+        assert!(t.reshape(&[2, 8]).is_ok());
+        assert_eq!(t.shape(), &[2, 8]);
+        assert!(t.reshape(&[3, 3]).is_err());
+    }
+}

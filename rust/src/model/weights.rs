@@ -1,0 +1,326 @@
+//! Weight sources: calibrated synthetic generators and trained-weight
+//! files.
+//!
+//! The paper's kneading/SAC results depend only on the *bit-level
+//! statistics* of the quantized weights (zero-value fraction, per-bit
+//! essential density — Table 1 / Figure 2), not on classification
+//! semantics. Since the Caffe Model Zoo checkpoints are unavailable
+//! offline, [`BitProfile`] generates weight populations whose statistics
+//! are calibrated to the paper's published measurements per network.
+//! [`laplacian`] generates value-realistic weights (trained conv weights
+//! are empirically Laplace-distributed), used for cross-checks, and real
+//! trained weights flow in from `artifacts/weights.bin` via `model::io`.
+//!
+//! NOTE on the paper's internal inconsistency: Table 1 reports 68.9%
+//! zero bits (⇒ ~31% essential density) while Figure 2's prose claims
+//! 50–60% essential density per position. Both cannot hold; we calibrate
+//! to Table 1 (the quantitative anchor for kneading gains) and keep
+//! Figure 2's *shape* (near-uniform density with a cliff at bits 3–5).
+//! See EXPERIMENTS.md.
+
+use crate::config::Mode;
+use crate::quant::{quantize_q, QFormat, QWeight};
+use crate::util::rng::Rng;
+
+/// Per-bit essential-density profile for one (network, mode) pair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BitProfile {
+    /// Network this profile models.
+    pub network: &'static str,
+    /// Probability a weight is exactly zero (Table 1 column 1).
+    pub zero_weight_frac: f64,
+    /// Essential-bit probability at each bit position, LSB first.
+    /// Length = mode weight bits.
+    pub density: Vec<f64>,
+}
+
+impl BitProfile {
+    /// Build a profile from the Table 1 anchors: overall zero-bit
+    /// fraction + the Figure 2 cliff at bits 3–5.
+    ///
+    /// The MSB position never carries an essential bit (sign-magnitude:
+    /// bit `B-1` is the sign's slot, magnitudes keep one headroom bit).
+    /// The remaining per-position density is near-uniform with a mild
+    /// downward slope toward the MSB (small-magnitude weights), and bits
+    /// 3–5 pinned to <1% ("the cliff", Fig 2 observation (2)).
+    pub fn from_anchors(
+        network: &'static str,
+        zero_weight_frac: f64,
+        zero_bit_frac: f64,
+        mode: Mode,
+    ) -> Self {
+        let bits = mode.weight_bits();
+        let msb = bits - 1;
+        let mean_density = 1.0 - zero_bit_frac;
+        let cliff: &[usize] = if bits == 16 { &[3, 4, 5] } else { &[3] };
+        let cliff_density = 0.005;
+        let active: Vec<usize> =
+            (0..bits).filter(|b| !cliff.contains(b) && *b != msb).collect();
+        // Solve for the active-position base density preserving the mean:
+        //   mean*bits = cliff_density*|cliff| + 0·msb + base_total
+        let base_total = mean_density * bits as f64 - cliff_density * cliff.len() as f64;
+        let base = base_total / active.len() as f64;
+        // Mild slope: +20% at LSB tapering to -20% near the MSB.
+        let mut density = vec![0.0; bits];
+        for (idx, &b) in active.iter().enumerate() {
+            let t = idx as f64 / (active.len() - 1).max(1) as f64;
+            density[b] = base * (1.2 - 0.4 * t);
+        }
+        for &b in cliff {
+            density[b] = cliff_density;
+        }
+        // Renormalize active positions to restore the exact mean.
+        let cur: f64 = active.iter().map(|&b| density[b]).sum();
+        let fix = base_total / cur;
+        for &b in &active {
+            density[b] = (density[b] * fix).clamp(0.0, 0.98);
+        }
+        Self { network, zero_weight_frac, density }
+    }
+
+    /// Number of bit positions this profile covers.
+    pub fn bits(&self) -> usize {
+        self.density.len()
+    }
+
+    /// Expected zero-bit fraction of generated weights (sanity check —
+    /// should match the Table 1 anchor up to the zero-weight correction).
+    pub fn expected_zero_bit_frac(&self) -> f64 {
+        let mean: f64 = self.density.iter().sum::<f64>() / self.bits() as f64;
+        // Zero-valued weights contribute all-zero bits.
+        1.0 - mean * (1.0 - self.zero_weight_frac)
+    }
+
+    /// Draw one weight: bits sampled independently per position, sign
+    /// uniform. Zero weights injected at `zero_weight_frac`.
+    pub fn sample(&self, rng: &mut Rng) -> QWeight {
+        if rng.chance(self.zero_weight_frac) {
+            return 0;
+        }
+        let mut mag: u32 = 0;
+        for (b, &d) in self.density.iter().enumerate() {
+            if rng.chance(d) {
+                mag |= 1 << b;
+            }
+        }
+        if mag == 0 {
+            // Conditioned on non-zero: give it one essential bit at a
+            // non-cliff position (keeps zero_weight_frac exact).
+            mag = 1 << (rng.below(3) as u32); // bits 0..2 are non-cliff
+        }
+        debug_assert!(mag < 1 << (self.bits() - 1), "MSB density must be 0");
+        let sign = if rng.chance(0.5) { -1 } else { 1 };
+        sign * mag as i32
+    }
+
+    /// Generate `n` weights.
+    pub fn generate(&self, n: usize, rng: &mut Rng) -> Vec<QWeight> {
+        (0..n).map(|_| self.sample(rng)).collect()
+    }
+}
+
+/// Table 1 of the paper: (network, zero-weight %, zero-bit % of fp16
+/// weights).
+pub const TABLE1_ANCHORS: [(&str, f64, f64); 5] = [
+    ("alexnet", 0.093e-2, 70.52e-2),
+    ("googlenet", 0.050e-2, 65.23e-2),
+    ("vgg16", 0.156e-2, 70.52e-2),
+    ("vgg19", 0.182e-2, 71.09e-2),
+    ("nin", 0.193e-2, 67.02e-2),
+];
+
+/// int8 anchors under the Table 1 calibration: requantizing to 8 bits
+/// concentrates essential bits, so the zero-bit fraction drops.
+pub const INT8_ZERO_BIT_FRAC: f64 = 0.52;
+
+/// Which of the paper's two mutually inconsistent bit-statistics claims
+/// to calibrate the generator against (see module docs + EXPERIMENTS.md):
+///
+/// * [`Table1`](DensityCalibration::Table1) — 68.9% zero bits ⇒ ~31%
+///   essential density. Reproduces the paper's Table 1 exactly; kneads
+///   *harder* than the paper's own speedups (Fig 8/11) imply.
+/// * [`Fig2`](DensityCalibration::Fig2) — 50–60% essential density per
+///   position. Reproduces Fig 11's T_ks/T_base curve (0.75 @ KS=10 →
+///   0.64 @ KS=32 for AlexNet) and therefore the Fig 8 speedups. The
+///   performance figures default to this calibration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DensityCalibration {
+    Table1,
+    Fig2,
+}
+
+/// Fig 2-calibration essential densities (fp16) per network. 0.50 makes
+/// E[max_b Binom(KS, d)] reproduce Fig 11's AlexNet curve; small per-
+/// network offsets give Fig 8's spread across models.
+const FIG2_FP16_DENSITY: [(&str, f64); 6] = [
+    ("alexnet", 0.50),
+    ("googlenet", 0.57),
+    ("vgg16", 0.55),
+    ("vgg19", 0.55),
+    ("nin", 0.53),
+    ("tiny_cnn", 0.54),
+];
+
+/// Fig 2-calibration int8 density: the paper's Fig 11 int8 curve is
+/// nearly flat at T_ks/T_base ≈ 0.49 (relative to the fp16 unkneaded
+/// base), i.e. kneading adds only ~2% on top of the 2× mode throughput —
+/// implying near-saturated essential density after 8-bit requantization.
+const FIG2_INT8_DENSITY: f64 = 0.93;
+
+/// Profile for a (network, mode) pair calibrated to the paper's Table 1
+/// (bit-statistics experiments).
+pub fn profile_for(network: &str, mode: Mode) -> crate::Result<BitProfile> {
+    profile_with(network, mode, DensityCalibration::Table1)
+}
+
+/// Profile under an explicit density calibration.
+pub fn profile_with(
+    network: &str,
+    mode: Mode,
+    calib: DensityCalibration,
+) -> crate::Result<BitProfile> {
+    let (name, zw, zb_fp16) = TABLE1_ANCHORS
+        .iter()
+        .find(|(n, _, _)| *n == network)
+        .copied()
+        .or(if network == "tiny_cnn" {
+            // The tiny CNN's real weights replace this profile at run
+            // time; the synthetic fallback uses the geo-mean anchors.
+            Some(("tiny_cnn", 0.135e-2, 68.88e-2))
+        } else {
+            None
+        })
+        .ok_or_else(|| crate::Error::Config(format!("no bit profile for `{network}`")))?;
+    match calib {
+        DensityCalibration::Table1 => {
+            let zb = match mode {
+                Mode::Fp16 => zb_fp16,
+                Mode::Int8 => INT8_ZERO_BIT_FRAC,
+            };
+            Ok(BitProfile::from_anchors(name, zw, zb, mode))
+        }
+        DensityCalibration::Fig2 => {
+            let density = match mode {
+                Mode::Fp16 => {
+                    FIG2_FP16_DENSITY
+                        .iter()
+                        .find(|(n, _)| *n == name)
+                        .map(|(_, d)| *d)
+                        .unwrap_or(0.50)
+                }
+                Mode::Int8 => FIG2_INT8_DENSITY,
+            };
+            // Mean density = d over active (non-cliff, non-MSB) bits
+            // ⇒ zero-bit fraction handed to from_anchors.
+            let bits = mode.weight_bits() as f64;
+            let cliff_n = if mode == Mode::Fp16 { 3.0 } else { 1.0 };
+            let active = bits - cliff_n - 1.0;
+            let zb = 1.0 - (density * active + 0.005 * cliff_n) / bits;
+            Ok(BitProfile::from_anchors(name, zw, zb, mode))
+        }
+    }
+}
+
+/// Value-realistic generator: Laplace(0, b) quantized to the mode's
+/// Q-format. Trained conv weights are empirically Laplacian with
+/// scale ≈ 0.03–0.06 of the weight range.
+pub fn laplacian(n: usize, scale: f64, mode: Mode, rng: &mut Rng) -> Vec<QWeight> {
+    let fmt = QFormat::for_mode(mode);
+    (0..n).map(|_| quantize_q(rng.laplace(scale) as f32, fmt)).collect()
+}
+
+/// Activations: post-ReLU feature-map values. Empirically ~half are
+/// exactly zero and the rest follow a truncated exponential-ish tail; we
+/// model Bernoulli(1-sparsity) × Exp quantized to Q8.8.
+pub fn activations(n: usize, sparsity: f64, rng: &mut Rng) -> Vec<crate::quant::QAct> {
+    (0..n)
+        .map(|_| {
+            if rng.chance(sparsity) {
+                0
+            } else {
+                // Exponential tail, mean 0.25, clipped to [0, 8).
+                let v = (-rng.f64().max(1e-12).ln() * 0.25).min(7.99);
+                (v * 256.0) as i32
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::stats::BitStats;
+
+    #[test]
+    fn profile_reproduces_table1_anchors() {
+        let mut rng = Rng::new(42);
+        for (name, zw, zb) in TABLE1_ANCHORS {
+            let p = profile_for(name, Mode::Fp16).unwrap();
+            let ws = p.generate(200_000, &mut rng);
+            let mut s = BitStats::new(Mode::Fp16);
+            s.add_all(&ws);
+            assert!(
+                (s.zero_weight_fraction() - zw).abs() < 0.0015,
+                "{name}: zero-weight {} vs anchor {zw}",
+                s.zero_weight_fraction()
+            );
+            assert!(
+                (s.zero_bit_fraction() - zb).abs() < 0.02,
+                "{name}: zero-bit {} vs anchor {zb}",
+                s.zero_bit_fraction()
+            );
+        }
+    }
+
+    #[test]
+    fn profile_has_fig2_cliff() {
+        let mut rng = Rng::new(7);
+        let p = profile_for("vgg16", Mode::Fp16).unwrap();
+        let ws = p.generate(100_000, &mut rng);
+        let mut s = BitStats::new(Mode::Fp16);
+        s.add_all(&ws);
+        let d = s.essential_density_per_bit();
+        for b in [3, 4, 5] {
+            assert!(d[b] < 0.01, "bit {b} density {} not a cliff", d[b]);
+        }
+        // Non-cliff positions stay well above the cliff.
+        assert!(d[0] > 0.2 && d[8] > 0.2);
+    }
+
+    #[test]
+    fn generated_weights_fit_mode() {
+        let mut rng = Rng::new(3);
+        for mode in [Mode::Fp16, Mode::Int8] {
+            let p = profile_for("alexnet", mode).unwrap();
+            for w in p.generate(10_000, &mut rng) {
+                assert!(crate::quant::fits_mode(w, mode), "weight {w:#x} overflows {mode}");
+            }
+        }
+    }
+
+    #[test]
+    fn laplacian_quantizes_to_small_values() {
+        let mut rng = Rng::new(11);
+        let ws = laplacian(50_000, 0.04, Mode::Fp16, &mut rng);
+        let mut s = BitStats::new(Mode::Fp16);
+        s.add_all(&ws);
+        // Laplace(0.04) in Q1.15: mean |w| ≈ 0.04*32768 ≈ 1311 → high
+        // bits mostly zero → zero-bit fraction well above 60%.
+        assert!(s.zero_bit_fraction() > 0.6, "zero-bit {}", s.zero_bit_fraction());
+        assert!(ws.iter().any(|&w| w < 0) && ws.iter().any(|&w| w > 0));
+    }
+
+    #[test]
+    fn activations_respect_sparsity() {
+        let mut rng = Rng::new(5);
+        let acts = activations(100_000, 0.5, &mut rng);
+        let zeros = acts.iter().filter(|&&a| a == 0).count() as f64 / 1e5;
+        assert!((zeros - 0.5).abs() < 0.02, "sparsity {zeros}");
+        assert!(acts.iter().all(|&a| (0..1 << 15).contains(&a)));
+    }
+
+    #[test]
+    fn unknown_network_is_error() {
+        assert!(profile_for("resnet", Mode::Fp16).is_err());
+    }
+}

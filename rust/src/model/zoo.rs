@@ -1,0 +1,212 @@
+//! The five-network zoo of the paper's evaluation (§IV): AlexNet,
+//! GoogleNet, VGG-16, VGG-19 and NiN — conv layers only, with the input
+//! spatial sizes that follow each network's pooling schedule.
+//!
+//! Shapes follow the canonical Caffe Model Zoo prototxts the paper cites.
+
+use super::layer::{ConvLayer, Network};
+
+fn conv(name: &str, in_c: usize, out_c: usize, k: usize, stride: usize, pad: usize, in_hw: usize) -> ConvLayer {
+    ConvLayer { name: name.to_string(), in_c, out_c, k, stride, pad, in_hw }
+}
+
+/// AlexNet (single-tower Caffe variant): 5 conv layers.
+pub fn alexnet() -> Network {
+    Network {
+        name: "alexnet".into(),
+        layers: vec![
+            conv("conv1", 3, 96, 11, 4, 0, 227),
+            conv("conv2", 96, 256, 5, 1, 2, 27),
+            conv("conv3", 256, 384, 3, 1, 1, 13),
+            conv("conv4", 384, 384, 3, 1, 1, 13),
+            conv("conv5", 384, 256, 3, 1, 1, 13),
+        ],
+    }
+}
+
+/// VGG-16: 13 conv layers, all 3×3 pad 1.
+pub fn vgg16() -> Network {
+    let mut layers = Vec::new();
+    // (block, convs, in_c, out_c, in_hw)
+    let blocks = [
+        (1, 2, 3, 64, 224),
+        (2, 2, 64, 128, 112),
+        (3, 3, 128, 256, 56),
+        (4, 3, 256, 512, 28),
+        (5, 3, 512, 512, 14),
+    ];
+    for (b, n, in_c, out_c, hw) in blocks {
+        for i in 1..=n {
+            let ic = if i == 1 { in_c } else { out_c };
+            layers.push(conv(&format!("conv{b}_{i}"), ic, out_c, 3, 1, 1, hw));
+        }
+    }
+    Network { name: "vgg16".into(), layers }
+}
+
+/// VGG-19: 16 conv layers (blocks 3–5 have four convs).
+pub fn vgg19() -> Network {
+    let mut layers = Vec::new();
+    let blocks = [
+        (1, 2, 3, 64, 224),
+        (2, 2, 64, 128, 112),
+        (3, 4, 128, 256, 56),
+        (4, 4, 256, 512, 28),
+        (5, 4, 512, 512, 14),
+    ];
+    for (b, n, in_c, out_c, hw) in blocks {
+        for i in 1..=n {
+            let ic = if i == 1 { in_c } else { out_c };
+            layers.push(conv(&format!("conv{b}_{i}"), ic, out_c, 3, 1, 1, hw));
+        }
+    }
+    Network { name: "vgg19".into(), layers }
+}
+
+/// Network-in-Network (ImageNet): 4 conv + 8 cccp (1×1 conv) layers.
+pub fn nin() -> Network {
+    Network {
+        name: "nin".into(),
+        layers: vec![
+            conv("conv1", 3, 96, 11, 4, 0, 227),
+            conv("cccp1", 96, 96, 1, 1, 0, 55),
+            conv("cccp2", 96, 96, 1, 1, 0, 55),
+            conv("conv2", 96, 256, 5, 1, 2, 27),
+            conv("cccp3", 256, 256, 1, 1, 0, 27),
+            conv("cccp4", 256, 256, 1, 1, 0, 27),
+            conv("conv3", 256, 384, 3, 1, 1, 13),
+            conv("cccp5", 384, 384, 1, 1, 0, 13),
+            conv("cccp6", 384, 384, 1, 1, 0, 13),
+            conv("conv4-1024", 384, 1024, 3, 1, 1, 6),
+            conv("cccp7", 1024, 1024, 1, 1, 0, 6),
+            conv("cccp8", 1024, 1000, 1, 1, 0, 6),
+        ],
+    }
+}
+
+/// GoogleNet (Inception v1): stem + 9 inception modules = 57 conv layers.
+pub fn googlenet() -> Network {
+    let mut layers = vec![
+        conv("conv1/7x7_s2", 3, 64, 7, 2, 3, 224),
+        conv("conv2/3x3_reduce", 64, 64, 1, 1, 0, 56),
+        conv("conv2/3x3", 64, 192, 3, 1, 1, 56),
+    ];
+    // (name, in_c, hw, n1x1, n3x3r, n3x3, n5x5r, n5x5, pool_proj)
+    let modules: [(&str, usize, usize, usize, usize, usize, usize, usize, usize); 9] = [
+        ("3a", 192, 28, 64, 96, 128, 16, 32, 32),
+        ("3b", 256, 28, 128, 128, 192, 32, 96, 64),
+        ("4a", 480, 14, 192, 96, 208, 16, 48, 64),
+        ("4b", 512, 14, 160, 112, 224, 24, 64, 64),
+        ("4c", 512, 14, 128, 128, 256, 24, 64, 64),
+        ("4d", 512, 14, 112, 144, 288, 32, 64, 64),
+        ("4e", 528, 14, 256, 160, 320, 32, 128, 128),
+        ("5a", 832, 7, 256, 160, 320, 32, 128, 128),
+        ("5b", 832, 7, 384, 192, 384, 48, 128, 128),
+    ];
+    for (m, in_c, hw, n1, n3r, n3, n5r, n5, pp) in modules {
+        layers.push(conv(&format!("inception_{m}/1x1"), in_c, n1, 1, 1, 0, hw));
+        layers.push(conv(&format!("inception_{m}/3x3_reduce"), in_c, n3r, 1, 1, 0, hw));
+        layers.push(conv(&format!("inception_{m}/3x3"), n3r, n3, 3, 1, 1, hw));
+        layers.push(conv(&format!("inception_{m}/5x5_reduce"), in_c, n5r, 1, 1, 0, hw));
+        layers.push(conv(&format!("inception_{m}/5x5"), n5r, n5, 5, 1, 2, hw));
+        layers.push(conv(&format!("inception_{m}/pool_proj"), in_c, pp, 1, 1, 0, hw));
+    }
+    Network { name: "googlenet".into(), layers }
+}
+
+/// All five networks of the evaluation, in the paper's order.
+pub fn all() -> Vec<Network> {
+    vec![alexnet(), googlenet(), vgg16(), vgg19(), nin()]
+}
+
+/// Look up by CLI name.
+pub fn by_name(name: &str) -> crate::Result<Network> {
+    match name {
+        "alexnet" => Ok(alexnet()),
+        "googlenet" => Ok(googlenet()),
+        "vgg16" => Ok(vgg16()),
+        "vgg19" => Ok(vgg19()),
+        "nin" => Ok(nin()),
+        other => Err(crate::Error::Config(format!(
+            "unknown network `{other}` (want alexnet|googlenet|vgg16|vgg19|nin)"
+        ))),
+    }
+}
+
+/// The tiny CNN trained by `python/compile/aot.py` for the end-to-end
+/// driver: 3 conv layers over 16×16 synthetic images. Must stay in sync
+/// with `python/compile/model.py::TINY_CNN_SPEC`.
+pub fn tiny_cnn() -> Network {
+    Network {
+        name: "tiny_cnn".into(),
+        layers: vec![
+            conv("conv1", 1, 8, 3, 1, 1, 16),
+            conv("conv2", 8, 16, 3, 1, 1, 8),
+            conv("conv3", 16, 16, 3, 1, 1, 4),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_counts_match_architectures() {
+        assert_eq!(alexnet().layers.len(), 5);
+        assert_eq!(vgg16().layers.len(), 13);
+        assert_eq!(vgg19().layers.len(), 16);
+        assert_eq!(nin().layers.len(), 12);
+        assert_eq!(googlenet().layers.len(), 3 + 9 * 6);
+    }
+
+    #[test]
+    fn vgg16_macs_close_to_published() {
+        // VGG-16 conv MACs ≈ 15.3 G (published figure for 224×224).
+        let g = vgg16().total_macs() as f64 / 1e9;
+        assert!((15.0..15.7).contains(&g), "VGG-16 GMACs = {g}");
+    }
+
+    #[test]
+    fn alexnet_macs_close_to_published() {
+        // AlexNet conv MACs ≈ 0.66 G (single-tower).
+        let g = alexnet().total_macs() as f64 / 1e9;
+        assert!((0.6..1.2).contains(&g), "AlexNet GMACs = {g}");
+    }
+
+    #[test]
+    fn googlenet_channels_chain() {
+        // Each inception module's 3x3 path input must match its reduce.
+        let net = googlenet();
+        for m in ["3a", "3b", "4a", "4b", "4c", "4d", "4e", "5a", "5b"] {
+            let reduce = net.layer(&format!("inception_{m}/3x3_reduce")).unwrap();
+            let three = net.layer(&format!("inception_{m}/3x3")).unwrap();
+            assert_eq!(reduce.out_c, three.in_c, "module {m}");
+        }
+    }
+
+    #[test]
+    fn vgg_spatial_sizes_halve() {
+        let net = vgg16();
+        assert_eq!(net.layer("conv1_1").unwrap().out_hw(), 224);
+        assert_eq!(net.layer("conv5_3").unwrap().out_hw(), 14);
+    }
+
+    #[test]
+    fn by_name_roundtrip_and_errors() {
+        for n in ["alexnet", "googlenet", "vgg16", "vgg19", "nin"] {
+            assert_eq!(by_name(n).unwrap().name, n);
+        }
+        assert!(by_name("resnet50").is_err());
+    }
+
+    #[test]
+    fn tiny_cnn_shapes_chain() {
+        let t = tiny_cnn();
+        assert_eq!(t.layers[0].out_hw(), 16);
+        // conv2 input is 8 after 2× pooling recorded in in_hw.
+        assert_eq!(t.layers[1].in_hw, 8);
+        assert_eq!(t.layers[1].in_c, t.layers[0].out_c);
+        assert_eq!(t.layers[2].in_c, t.layers[1].out_c);
+    }
+}

@@ -1,0 +1,131 @@
+//! Bit-position utilities over weight magnitudes.
+//!
+//! The kneading compiler and the bit-statistics analysis both reason
+//! about "which bit positions of which weights are essential (1)".
+
+use super::QWeight;
+
+/// Is bit `b` of `w`'s magnitude set?
+#[inline]
+pub fn bit_is_set(w: QWeight, b: u32) -> bool {
+    (w.unsigned_abs() >> b) & 1 == 1
+}
+
+/// Number of essential bits (1s) in the magnitude, restricted to the
+/// low `bits` positions.
+#[inline]
+pub fn essential_bits(w: QWeight, bits: u32) -> u32 {
+    let mask = if bits >= 32 { u32::MAX } else { (1u32 << bits) - 1 };
+    (w.unsigned_abs() & mask).count_ones()
+}
+
+/// Per-bit-position popcount across a slice of weights: `out[b]` = how
+/// many weights have an essential bit at position `b`. This is the
+/// quantity that bounds kneaded-lane length (§III.B): a group kneads to
+/// `max_b out[b]` kneaded weights.
+pub fn popcount_per_position(weights: &[QWeight], bits: u32) -> Vec<u32> {
+    let mut out = vec![0u32; bits as usize];
+    for &w in weights {
+        let mut mag = w.unsigned_abs();
+        // Only low `bits` positions participate.
+        if bits < 32 {
+            mag &= (1u32 << bits) - 1;
+        }
+        while mag != 0 {
+            let b = mag.trailing_zeros();
+            out[b as usize] += 1;
+            mag &= mag - 1;
+        }
+    }
+    out
+}
+
+/// Iterator over the set bit positions of a weight's magnitude,
+/// ascending. Allocation-free — used in the kneader's hot loop.
+#[derive(Debug, Clone)]
+pub struct BitIter {
+    mag: u32,
+}
+
+impl BitIter {
+    pub fn new(w: QWeight, bits: u32) -> Self {
+        let mut mag = w.unsigned_abs();
+        if bits < 32 {
+            mag &= (1u32 << bits) - 1;
+        }
+        Self { mag }
+    }
+}
+
+impl Iterator for BitIter {
+    type Item = u32;
+
+    #[inline]
+    fn next(&mut self) -> Option<u32> {
+        if self.mag == 0 {
+            return None;
+        }
+        let b = self.mag.trailing_zeros();
+        self.mag &= self.mag - 1;
+        Some(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn bit_is_set_uses_magnitude() {
+        assert!(bit_is_set(0b101, 0));
+        assert!(!bit_is_set(0b101, 1));
+        assert!(bit_is_set(-0b101, 2)); // negative: magnitude bits
+    }
+
+    #[test]
+    fn essential_bits_counts_and_masks() {
+        assert_eq!(essential_bits(0b1011, 16), 3);
+        assert_eq!(essential_bits(-0b1011, 16), 3);
+        assert_eq!(essential_bits(0b1_0000_0001, 8), 1); // bit 8 masked off
+        assert_eq!(essential_bits(0, 16), 0);
+    }
+
+    #[test]
+    fn popcount_matches_manual() {
+        let ws = [0b0011, 0b0101, -0b0001, 0b1000];
+        let pc = popcount_per_position(&ws, 4);
+        assert_eq!(pc, vec![3, 1, 1, 1]);
+    }
+
+    #[test]
+    fn bit_iter_matches_essential_count() {
+        prop::run(
+            "BitIter yields exactly the set bits",
+            |r: &mut Rng| prop::gen::weight(r, 16),
+            |&w| {
+                let via_iter: Vec<u32> = BitIter::new(w, 16).collect();
+                if via_iter.len() != essential_bits(w, 16) as usize {
+                    return Err("count mismatch".into());
+                }
+                for &b in &via_iter {
+                    if !bit_is_set(w, b) {
+                        return Err(format!("bit {b} reported but not set"));
+                    }
+                }
+                if via_iter.windows(2).any(|p| p[0] >= p[1]) {
+                    return Err("not ascending".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn popcount_max_bounds_kneaded_length() {
+        // The kneading invariant this quantity feeds (sanity anchor).
+        let ws = [0x7FFF, 0x0001, 0x0003];
+        let pc = popcount_per_position(&ws, 16);
+        assert_eq!(*pc.iter().max().unwrap(), 3); // bit 0 set in all three
+    }
+}

@@ -1,0 +1,128 @@
+//! Q-format fixed-point conversion.
+//!
+//! Conv weights live in roughly [-1, 1], so fp16 weights use Q1.15
+//! (15 fractional bits) and int8 weights Q1.7 — matching the paper's
+//! "quantize the initial floating point 32 weights into fixed point 16
+//! and integer 8 precision" (§IV).
+
+use crate::config::Mode;
+
+/// A fixed-point format: `frac_bits` fractional bits within the mode's
+/// magnitude budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QFormat {
+    pub frac_bits: u32,
+    pub mode: Mode,
+}
+
+impl QFormat {
+    /// The formats the paper evaluates.
+    pub fn for_mode(mode: Mode) -> Self {
+        match mode {
+            Mode::Fp16 => QFormat { frac_bits: 15, mode },
+            Mode::Int8 => QFormat { frac_bits: 7, mode },
+        }
+    }
+
+    /// Scale factor 2^frac_bits.
+    pub fn scale(&self) -> f64 {
+        (1u64 << self.frac_bits) as f64
+    }
+
+    /// Largest representable magnitude in value space.
+    pub fn max_value(&self) -> f64 {
+        (self.mode.magnitude_bound() - 1) as f64 / self.scale()
+    }
+}
+
+/// Quantize an fp32 value: round-to-nearest-even, saturate.
+pub fn quantize_q(x: f32, fmt: QFormat) -> i32 {
+    let scaled = (x as f64) * fmt.scale();
+    let rounded = round_half_even(scaled);
+    let bound = (fmt.mode.magnitude_bound() - 1) as f64;
+    rounded.clamp(-bound, bound) as i32
+}
+
+/// Back to value space.
+pub fn dequantize(q: i32, fmt: QFormat) -> f64 {
+    q as f64 / fmt.scale()
+}
+
+fn round_half_even(x: f64) -> f64 {
+    let floor = x.floor();
+    let diff = x - floor;
+    if diff > 0.5 {
+        floor + 1.0
+    } else if diff < 0.5 {
+        floor
+    } else if (floor as i64) % 2 == 0 {
+        floor
+    } else {
+        floor + 1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn quantize_zero_and_signs() {
+        let f = QFormat::for_mode(Mode::Fp16);
+        assert_eq!(quantize_q(0.0, f), 0);
+        assert!(quantize_q(0.5, f) > 0);
+        assert!(quantize_q(-0.5, f) < 0);
+        assert_eq!(quantize_q(0.5, f), 1 << 14);
+    }
+
+    #[test]
+    fn saturation_at_bounds() {
+        for mode in [Mode::Fp16, Mode::Int8] {
+            let f = QFormat::for_mode(mode);
+            assert_eq!(quantize_q(10.0, f), mode.magnitude_bound() - 1);
+            assert_eq!(quantize_q(-10.0, f), -(mode.magnitude_bound() - 1));
+        }
+    }
+
+    #[test]
+    fn round_half_even_ties() {
+        assert_eq!(round_half_even(2.5), 2.0);
+        assert_eq!(round_half_even(3.5), 4.0);
+        assert_eq!(round_half_even(-2.5), -2.0);
+        assert_eq!(round_half_even(2.4), 2.0);
+        assert_eq!(round_half_even(2.6), 3.0);
+    }
+
+    #[test]
+    fn quantization_error_bounded_by_half_ulp() {
+        for mode in [Mode::Fp16, Mode::Int8] {
+            let fmt = QFormat::for_mode(mode);
+            prop::run(
+                "quant error ≤ 0.5 ulp",
+                |r: &mut Rng| (r.f64() * 1.9 - 0.95) as f32,
+                |&x| {
+                    if (x as f64).abs() > fmt.max_value() {
+                        return Ok(()); // saturation region
+                    }
+                    let q = quantize_q(x, fmt);
+                    let err = (dequantize(q, fmt) - x as f64).abs();
+                    let half_ulp = 0.5 / fmt.scale() + 1e-12;
+                    if err <= half_ulp {
+                        Ok(())
+                    } else {
+                        Err(format!("err {err} > half ulp {half_ulp}"))
+                    }
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_identity_on_grid() {
+        let fmt = QFormat::for_mode(Mode::Int8);
+        for q in -127..=127 {
+            assert_eq!(quantize_q(dequantize(q, fmt) as f32, fmt), q);
+        }
+    }
+}

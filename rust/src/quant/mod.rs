@@ -1,0 +1,79 @@
+//! Fixed-point quantization and bit-level utilities (§II of the paper).
+//!
+//! The paper quantizes fp32 Caffe weights to 16-bit fixed point ("fp16"
+//! in the paper's vocabulary — *fixed* point, not IEEE half) and int8.
+//! All SAC/kneading machinery operates sign-magnitude: the sign rides
+//! with the activation dispatch (the splitter negates the routed
+//! activation), while the magnitude's bits are what kneading packs.
+
+mod bits;
+mod fixed;
+pub mod stats;
+
+pub use bits::{bit_is_set, essential_bits, popcount_per_position, BitIter};
+pub use fixed::{dequantize, quantize_q, QFormat};
+
+use crate::config::Mode;
+
+/// A quantized weight: signed integer whose magnitude fits the mode's
+/// bit width (`|w| < 2^(bits-1)`, one headroom bit reserved so Q1.(B-1)
+/// magnitudes never alias the sign).
+pub type QWeight = i32;
+
+/// A quantized activation (post-ReLU ⇒ non-negative in real layers, but
+/// all machinery accepts signed values so FC / pre-activation paths work).
+pub type QAct = i32;
+
+/// Assert a weight is representable in `mode`; used at lane-construction
+/// time (debug) and by the property tests.
+#[inline]
+pub fn fits_mode(w: QWeight, mode: Mode) -> bool {
+    w.unsigned_abs() < mode.magnitude_bound() as u32
+}
+
+/// The paper's Eq. (1): decompose one multiplication into shift-and-adds
+/// over the weight's essential bits. Reference implementation used by
+/// tests to cross-check the SAC units.
+pub fn shift_add_mul(a: QAct, w: QWeight) -> i64 {
+    let sign = if w < 0 { -1i64 } else { 1i64 };
+    let mag = w.unsigned_abs();
+    let mut acc = 0i64;
+    for b in 0..32 {
+        if mag & (1 << b) != 0 {
+            acc += (a as i64) << b;
+        }
+    }
+    sign * acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn shift_add_mul_equals_multiplication() {
+        prop::run(
+            "shift_add_mul == a*w",
+            |r: &mut Rng| (prop::gen::activation(r), prop::gen::weight(r, 16)),
+            |&(a, w)| {
+                let got = shift_add_mul(a, w);
+                let want = a as i64 * w as i64;
+                if got == want {
+                    Ok(())
+                } else {
+                    Err(format!("got {got}, want {want}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn fits_mode_boundaries() {
+        assert!(fits_mode(0x7FFE, Mode::Fp16));
+        assert!(!fits_mode(0x8000, Mode::Fp16));
+        assert!(fits_mode(-0x7FFF, Mode::Fp16));
+        assert!(fits_mode(127, Mode::Int8));
+        assert!(!fits_mode(128, Mode::Int8));
+    }
+}

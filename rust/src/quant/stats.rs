@@ -1,0 +1,147 @@
+//! Bit-level distribution measurement over weight populations.
+//!
+//! Produces the quantities behind the paper's Table 1 (zero-value and
+//! zero-bit fractions) and Figure 2 (essential-bit density per bit
+//! position).
+
+use super::QWeight;
+use crate::config::Mode;
+
+/// Aggregated bit statistics for a weight population.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BitStats {
+    /// Total weights observed.
+    pub total: u64,
+    /// Weights whose quantized value is exactly zero.
+    pub zero_weights: u64,
+    /// Per-bit-position essential (1) counts, length = mode bits.
+    pub essential_per_bit: Vec<u64>,
+    /// Bit width used.
+    pub bits: u32,
+}
+
+impl BitStats {
+    pub fn new(mode: Mode) -> Self {
+        let bits = mode.weight_bits() as u32;
+        Self { total: 0, zero_weights: 0, essential_per_bit: vec![0; bits as usize], bits }
+    }
+
+    /// Accumulate one weight.
+    #[inline]
+    pub fn add(&mut self, w: QWeight) {
+        self.total += 1;
+        if w == 0 {
+            self.zero_weights += 1;
+        }
+        let mut mag = w.unsigned_abs();
+        if self.bits < 32 {
+            mag &= (1u32 << self.bits) - 1;
+        }
+        while mag != 0 {
+            let b = mag.trailing_zeros();
+            self.essential_per_bit[b as usize] += 1;
+            mag &= mag - 1;
+        }
+    }
+
+    pub fn add_all(&mut self, ws: &[QWeight]) {
+        for &w in ws {
+            self.add(w);
+        }
+    }
+
+    /// Merge two populations (parallel accumulation).
+    pub fn merge(&mut self, other: &BitStats) {
+        assert_eq!(self.bits, other.bits, "mode mismatch in BitStats::merge");
+        self.total += other.total;
+        self.zero_weights += other.zero_weights;
+        for (a, b) in self.essential_per_bit.iter_mut().zip(&other.essential_per_bit) {
+            *a += b;
+        }
+    }
+
+    /// Table 1 column: fraction of exactly-zero weights.
+    pub fn zero_weight_fraction(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.zero_weights as f64 / self.total as f64
+    }
+
+    /// Table 1 column: fraction of zero bits over all (weight, position)
+    /// pairs.
+    pub fn zero_bit_fraction(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let total_bits = self.total * self.bits as u64;
+        let essential: u64 = self.essential_per_bit.iter().sum();
+        1.0 - essential as f64 / total_bits as f64
+    }
+
+    /// Figure 2 series: essential-bit density at each bit position.
+    pub fn essential_density_per_bit(&self) -> Vec<f64> {
+        if self.total == 0 {
+            return vec![0.0; self.bits as usize];
+        }
+        self.essential_per_bit.iter().map(|&c| c as f64 / self.total as f64).collect()
+    }
+
+    /// Mean essential bits per weight — the quantity PRA's serial cycles
+    /// track.
+    pub fn mean_essential_bits(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.essential_per_bit.iter().sum::<u64>() as f64 / self.total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_zero_weights_and_bits() {
+        let mut s = BitStats::new(Mode::Fp16);
+        s.add_all(&[0, 0b1, -0b11, 0]);
+        assert_eq!(s.total, 4);
+        assert_eq!(s.zero_weights, 2);
+        assert_eq!(s.zero_weight_fraction(), 0.5);
+        // essential bits: 1 + 2 = 3 of 4*16 = 64 → zero-bit frac 61/64
+        assert!((s.zero_bit_fraction() - 61.0 / 64.0).abs() < 1e-12);
+        assert_eq!(s.essential_per_bit[0], 2);
+        assert_eq!(s.essential_per_bit[1], 1);
+    }
+
+    #[test]
+    fn density_per_bit() {
+        let mut s = BitStats::new(Mode::Int8);
+        s.add_all(&[0b1, 0b1, 0b10, 0b11]);
+        let d = s.essential_density_per_bit();
+        assert_eq!(d.len(), 8);
+        assert!((d[0] - 0.75).abs() < 1e-12);
+        assert!((d[1] - 0.5).abs() < 1e-12);
+        assert_eq!(d[7], 0.0);
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let ws: Vec<i32> = (0..100).map(|i| (i * 37) % 256 - 128).collect();
+        let mut all = BitStats::new(Mode::Fp16);
+        all.add_all(&ws);
+        let mut a = BitStats::new(Mode::Fp16);
+        let mut b = BitStats::new(Mode::Fp16);
+        a.add_all(&ws[..50]);
+        b.add_all(&ws[50..]);
+        a.merge(&b);
+        assert_eq!(a, all);
+    }
+
+    #[test]
+    fn mean_essential_bits_simple() {
+        let mut s = BitStats::new(Mode::Fp16);
+        s.add_all(&[0b111, 0b1]);
+        assert!((s.mean_essential_bits() - 2.0).abs() < 1e-12);
+    }
+}

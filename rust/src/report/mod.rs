@@ -1,0 +1,122 @@
+//! Paper table/figure regeneration.
+//!
+//! Every table and figure of the paper's evaluation (§IV) has a
+//! generator here that prints the same rows/series the paper reports
+//! and optionally writes CSV. The `cargo bench` targets call the same
+//! functions, so `tetris report all` and the bench suite always agree.
+
+mod fmt;
+pub mod figures;
+mod tables;
+
+pub use figures::{fig1, fig10, fig11, fig2, fig8, fig9};
+pub use fmt::Table;
+pub use tables::{table1, table2};
+
+use crate::config::{AccelConfig, CalibConfig, Mode};
+use crate::kneading::stats::KneadStats;
+use crate::model::weights::{profile_with, DensityCalibration};
+use crate::model::Network;
+use crate::sim::{accel_by_name, simulate_network};
+use crate::util::rng::Rng;
+
+/// Dispatch a report by name (`table1|fig1|fig2|fig8|fig9|fig10|fig11|
+/// table2|all`).
+pub fn run(which: &str, seed: u64, csv_dir: Option<&std::path::Path>) -> crate::Result<()> {
+    if let Some(dir) = csv_dir {
+        std::fs::create_dir_all(dir)?;
+    }
+    match which {
+        "table1" => table1(seed, csv_dir),
+        "table2" => table2(csv_dir),
+        "fig1" => fig1(csv_dir),
+        "fig2" => fig2(seed, csv_dir),
+        "fig8" => fig8(seed, csv_dir),
+        "fig9" => fig9(seed, csv_dir),
+        "fig10" => fig10(seed, csv_dir),
+        "fig11" => fig11(seed, csv_dir),
+        "all" => {
+            for w in ["table1", "fig1", "fig2", "fig8", "fig9", "fig10", "fig11", "table2"] {
+                run(w, seed, csv_dir)?;
+            }
+            Ok(())
+        }
+        other => Err(crate::Error::Config(format!(
+            "unknown report `{other}` (want table1|fig1|fig2|fig8|fig9|fig10|fig11|table2|all)"
+        ))),
+    }
+}
+
+/// One-off simulation for the `simulate` subcommand.
+pub fn simulate_one(
+    net: &Network,
+    accel: &str,
+    cfg: &AccelConfig,
+    seed: u64,
+) -> crate::Result<String> {
+    let calib = CalibConfig::default();
+    let a = accel_by_name(accel)?;
+    let sim = simulate_network(a.as_ref(), net, cfg, &calib, seed)?;
+    let energy = crate::energy::network_energy(&sim, &calib);
+    let mut out = String::new();
+    use std::fmt::Write;
+    writeln!(
+        out,
+        "network={} accel={} mode={} ks={}",
+        sim.network, sim.accel, cfg.mode, cfg.ks
+    )
+    .ok();
+    writeln!(
+        out,
+        "cycles={} time={:.3} ms macs={}",
+        sim.total_cycles(),
+        sim.time_s() * 1e3,
+        sim.total_macs()
+    )
+    .ok();
+    writeln!(
+        out,
+        "energy={:.3} mJ power={:.3} W edp={:.6e} J*s",
+        energy.total_j() * 1e3,
+        energy.total_j() / sim.time_s(),
+        crate::energy::edp(energy.total_j(), sim.time_s()),
+    )
+    .ok();
+    let mut table = fmt::Table::new(&["layer", "cycles", "macs", "bound"]);
+    for l in &sim.per_layer {
+        table.row(&[
+            l.layer.clone(),
+            l.cycles.to_string(),
+            l.macs.to_string(),
+            if l.memory_bound { "memory" } else { "compute" }.to_string(),
+        ]);
+    }
+    out.push_str(&table.render());
+    Ok(out)
+}
+
+/// Kneading statistics for the `knead` subcommand.
+pub fn knead_stats(net: &Network, ks: usize, mode: Mode, seed: u64) -> crate::Result<()> {
+    let mut rng = Rng::new(seed);
+    let mut table = fmt::Table::new(&[
+        "layer", "weights", "kneaded", "ratio", "T_ks/T_base", "empty groups",
+    ]);
+    for (i, layer) in net.layers.iter().enumerate() {
+        let profile = profile_with(&net.name, mode, DensityCalibration::Fig2)?;
+        let mut lrng = rng.fork(i as u64);
+        let sample_n = (layer.lane_len() * layer.out_c.min(16)).max(1024);
+        let ws = profile.generate(sample_n, &mut lrng);
+        let s = KneadStats::measure(&ws, ks, mode);
+        table.row(&[
+            layer.name.clone(),
+            s.source.to_string(),
+            s.kneaded.to_string(),
+            format!("{:.3}", s.ratio()),
+            format!("{:.3}", s.time_fraction()),
+            s.empty_groups.to_string(),
+        ]);
+    }
+    println!("== kneading stats: {} (ks={ks}, {mode}) ==", net.name);
+    print!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! Table 1 (bit statistics) and Table 2 (area) generators.
+
+use std::path::Path;
+
+use super::fmt::Table;
+use crate::analysis;
+use crate::config::{AccelConfig, CalibConfig};
+use crate::energy::chip_area;
+
+/// Table 1: fraction of zero-valued weights & zero bits in all weights.
+pub fn table1(seed: u64, csv_dir: Option<&Path>) -> crate::Result<()> {
+    let rows = analysis::table1(seed)?;
+    let gm = analysis::table1_geomean(&rows);
+    let mut t = Table::new(&["Model", "Zero Weights (%)", "Zero BITs in Weights (%)"]);
+    // Paper's reported values for side-by-side comparison.
+    let paper: &[(&str, f64, f64)] = &[
+        ("alexnet", 0.093, 70.52),
+        ("googlenet", 0.050, 65.23),
+        ("vgg16", 0.156, 70.52),
+        ("vgg19", 0.182, 71.09),
+        ("nin", 0.193, 67.02),
+    ];
+    for r in &rows {
+        let p = paper.iter().find(|(n, _, _)| *n == r.network);
+        let note = p
+            .map(|(_, zw, zb)| format!(" (paper {zw:.3} / {zb:.2})"))
+            .unwrap_or_default();
+        t.row(&[
+            r.network.clone(),
+            format!("{:.3}", r.zero_weights_pct),
+            format!("{:.2}{note}", r.zero_bits_pct),
+        ]);
+    }
+    t.row(&[
+        gm.network.clone(),
+        format!("{:.3}", gm.zero_weights_pct),
+        format!("{:.2} (paper 0.135 / 68.88)", gm.zero_bits_pct),
+    ]);
+    t.emit(
+        "Table 1: zero-valued weights & zero bits (measured vs paper)",
+        "table1",
+        csv_dir,
+    )
+}
+
+/// Table 2: area overhead comparison + Tetris per-PE breakdown.
+pub fn table2(csv_dir: Option<&Path>) -> crate::Result<()> {
+    let cfg = AccelConfig::default();
+    let calib = CalibConfig::default();
+    let tetris = chip_area("tetris", &cfg, &calib)?;
+    let dadn = chip_area("dadn", &cfg, &calib)?;
+    let pra = chip_area("pra", &cfg, &calib)?;
+
+    let mut t = Table::new(&["Design (16 PEs)", "Area mm²", "vs DaDN", "paper"]);
+    let d_total = dadn.total_mm2();
+    for (rep, paper) in [(&dadn, 79.36), (&pra, 153.65), (&tetris, 89.76)] {
+        t.row(&[
+            rep.design.to_string(),
+            format!("{:.2}", rep.total_mm2()),
+            format!("{:.3}x", rep.total_mm2() / d_total),
+            format!("{paper:.2}"),
+        ]);
+    }
+    t.emit("Table 2: total area (measured vs paper)", "table2_total", csv_dir)?;
+
+    let mut b = Table::new(&["Tetris PE component", "Area mm²", "Percentage"]);
+    let total = tetris.total_mm2();
+    for (name, area) in tetris.per_pe(cfg.pes) {
+        b.row(&[
+            name.to_string(),
+            format!("{area:.3}"),
+            format!("{:.2}%", area * cfg.pes as f64 / total * 100.0),
+        ]);
+    }
+    b.emit("Table 2 (cont.): area breakdown for 1 PE of Tetris", "table2_breakdown", csv_dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_render_without_error() {
+        table1(123, None).unwrap();
+        table2(None).unwrap();
+    }
+
+    #[test]
+    fn tables_write_csv() {
+        let dir = std::env::temp_dir().join(format!("tbl_csv_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        table2(Some(&dir)).unwrap();
+        assert!(dir.join("table2_total.csv").exists());
+        assert!(dir.join("table2_breakdown.csv").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,95 @@
+//! Artifact directory: metadata + reference-vector loading.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{parse, Json};
+
+/// A parsed `artifacts/` directory.
+pub struct ArtifactDir {
+    pub root: PathBuf,
+    pub metadata: Json,
+}
+
+impl ArtifactDir {
+    pub fn open(root: &Path) -> crate::Result<Self> {
+        let meta_path = root.join("metadata.json");
+        if !meta_path.exists() {
+            return Err(crate::Error::Artifact(format!(
+                "{} not found — run `make artifacts` first",
+                meta_path.display()
+            )));
+        }
+        let metadata = parse(&std::fs::read_to_string(&meta_path)?)?;
+        Ok(Self { root: root.to_path_buf(), metadata })
+    }
+
+    pub fn path(&self, name: &str) -> PathBuf {
+        self.root.join(name)
+    }
+
+    /// Load a raw little-endian f32 vector.
+    pub fn read_f32(&self, name: &str) -> crate::Result<Vec<f32>> {
+        let bytes = std::fs::read(self.path(name))?;
+        if bytes.len() % 4 != 0 {
+            return Err(crate::Error::Artifact(format!("{name}: length not /4")));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Load a raw little-endian i32 vector.
+    pub fn read_i32(&self, name: &str) -> crate::Result<Vec<i32>> {
+        let bytes = std::fs::read(self.path(name))?;
+        if bytes.len() % 4 != 0 {
+            return Err(crate::Error::Artifact(format!("{name}: length not /4")));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Load a raw i8 vector.
+    pub fn read_i8(&self, name: &str) -> crate::Result<Vec<i8>> {
+        Ok(std::fs::read(self.path(name))?.into_iter().map(|b| b as i8).collect())
+    }
+
+    /// Shape helper from metadata, e.g. `metadata.golden.input_shape`.
+    pub fn shape(&self, section: &str, key: &str) -> crate::Result<Vec<i64>> {
+        self.metadata
+            .get(section)
+            .get(key)
+            .as_arr()
+            .ok_or_else(|| crate::Error::Artifact(format!("metadata missing {section}.{key}")))?
+            .iter()
+            .map(|v| {
+                v.as_u64()
+                    .map(|u| u as i64)
+                    .ok_or_else(|| crate::Error::Artifact("bad shape dim".into()))
+            })
+            .collect()
+    }
+
+    /// The quantized tiny-CNN weights (fp16 file).
+    pub fn load_weights(&self) -> crate::Result<crate::model::LoadedWeights> {
+        crate::model::read_weight_file(&self.path("weights.bin"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_dir_is_clean_error() {
+        match ArtifactDir::open(Path::new("/nonexistent")) {
+            Err(e) => assert!(e.to_string().contains("make artifacts")),
+            Ok(_) => panic!("expected error"),
+        }
+    }
+
+    // Real-artifact tests live in rust/tests/runtime_hlo.rs (they need
+    // `make artifacts` to have run — the Makefile guarantees ordering).
+}

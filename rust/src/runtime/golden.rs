@@ -1,0 +1,106 @@
+//! Golden-model validation: execute the AOT artifacts through PJRT and
+//! check every reference vector.
+//!
+//! Three checks, in order of increasing depth:
+//! 1. `golden_cnn.hlo.txt` (float model) reproduces the training-time
+//!    logits to f32 tolerance.
+//! 2. `sac_matmul.hlo.txt` (the *Pallas SAC kernel*, AOT-lowered)
+//!    reproduces the integer product exactly.
+//! 3. The pure-rust quantized SAC pipeline (`runtime::quantized`)
+//!    reproduces `quant_logits.i32` exactly — cross-language
+//!    bit-exactness of kneading + SAC.
+
+use std::path::Path;
+
+use super::artifacts::ArtifactDir;
+use super::pjrt::{literal_i32, literal_i8, Engine};
+use crate::model::Tensor;
+
+/// Summary of a golden validation run.
+#[derive(Debug, Clone, Default)]
+pub struct GoldenReport {
+    pub golden_max_abs_err: f32,
+    pub sac_kernel_exact: bool,
+    pub quantized_exact: bool,
+    pub batch: usize,
+}
+
+/// Run all three checks; error on any failure.
+pub fn validate(dir: &ArtifactDir) -> crate::Result<GoldenReport> {
+    let engine = Engine::cpu()?;
+    let mut report = GoldenReport::default();
+
+    // --- 1. Float golden model ------------------------------------------
+    let model = engine.load_hlo_text(&dir.path("golden_cnn.hlo.txt"))?;
+    let input = dir.read_f32("golden_input.f32")?;
+    let want = dir.read_f32("golden_logits.f32")?;
+    let in_shape = dir.shape("golden", "input_shape")?;
+    report.batch = in_shape[0] as usize;
+    let got = model.run_f32(&[(&input, &in_shape)])?;
+    if got.len() != want.len() {
+        return Err(crate::Error::Artifact(format!(
+            "golden output length {} != reference {}",
+            got.len(),
+            want.len()
+        )));
+    }
+    report.golden_max_abs_err = got
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    if report.golden_max_abs_err > 1e-3 {
+        return Err(crate::Error::Artifact(format!(
+            "golden logits diverge: max |err| = {}",
+            report.golden_max_abs_err
+        )));
+    }
+
+    // --- 2. AOT Pallas SAC kernel ----------------------------------------
+    let sac = engine.load_hlo_text(&dir.path("sac_matmul.hlo.txt"))?;
+    let a = dir.read_i32("sac_demo_a.i32")?;
+    let planes = dir.read_i8("sac_demo_planes.i8")?;
+    let want_out = dir.read_i32("sac_demo_out.i32")?;
+    let a_shape = dir.shape("sac_demo", "a_shape")?;
+    let p_shape = dir.shape("sac_demo", "planes_shape")?;
+    let out = sac.run(&[literal_i32(&a, &a_shape)?, literal_i8(&planes, &p_shape)?])?;
+    let got_out = out.to_vec::<i32>()?;
+    report.sac_kernel_exact = got_out == want_out;
+    if !report.sac_kernel_exact {
+        return Err(crate::Error::Artifact(
+            "AOT SAC kernel output != integer reference".into(),
+        ));
+    }
+
+    // --- 3. Rust quantized SAC pipeline ----------------------------------
+    let weights = dir.load_weights()?;
+    let q_in = dir.read_i32("quant_input.i32")?;
+    let q_want = dir.read_i32("quant_logits.i32")?;
+    let q_shape: Vec<usize> = dir.shape("quant", "input_shape")?.iter().map(|&d| d as usize).collect();
+    let x = Tensor::from_vec(&q_shape, q_in)?;
+    let logits = super::quantized::forward(&weights, &x)?;
+    report.quantized_exact = logits.data() == &q_want[..];
+    if !report.quantized_exact {
+        let diffs = logits.data().iter().zip(&q_want).filter(|(a, b)| a != b).count();
+        return Err(crate::Error::Artifact(format!(
+            "rust SAC pipeline != python reference ({diffs}/{} logits differ)",
+            q_want.len()
+        )));
+    }
+    Ok(report)
+}
+
+/// CLI entry: validate and print the report.
+pub fn run_from_dir(dir: &Path) -> crate::Result<()> {
+    let artifacts = ArtifactDir::open(dir)?;
+    let report = validate(&artifacts)?;
+    println!("platform: cpu (PJRT)");
+    println!(
+        "golden float model:     max |err| = {:.2e} over batch {}",
+        report.golden_max_abs_err, report.batch
+    );
+    println!("AOT Pallas SAC kernel:  exact ({})", report.sac_kernel_exact);
+    println!("rust kneaded-SAC path:  exact ({})", report.quantized_exact);
+    println!("golden OK");
+    Ok(())
+}

@@ -1,0 +1,15 @@
+//! Runtime layer: PJRT/XLA execution of AOT artifacts and the
+//! rust-side quantized SAC inference pipeline.
+//!
+//! `make artifacts` (Python, build time) writes `artifacts/*.hlo.txt`
+//! plus quantized weights and reference vectors; everything in this
+//! module is pure rust + the `xla` crate — Python is never on the
+//! request path.
+
+pub mod artifacts;
+pub mod golden;
+pub mod pjrt;
+pub mod quantized;
+
+pub use artifacts::ArtifactDir;
+pub use pjrt::{Engine, LoadedModel};

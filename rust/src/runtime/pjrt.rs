@@ -1,0 +1,110 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! Interchange format is HLO **text** (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+
+use std::path::Path;
+
+/// A PJRT client (one per thread that executes models — the underlying
+/// handles are not `Sync`).
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// CPU PJRT client.
+    pub fn cpu() -> crate::Result<Self> {
+        Ok(Self { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file.
+    pub fn load_hlo_text(&self, path: &Path) -> crate::Result<LoadedModel> {
+        if !path.exists() {
+            return Err(crate::Error::Artifact(format!(
+                "HLO file {} not found — run `make artifacts` first",
+                path.display()
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "model".into());
+        Ok(LoadedModel { exe, name })
+    }
+}
+
+/// A compiled executable (jax lowers with `return_tuple=True`, so every
+/// model returns a 1-tuple).
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl LoadedModel {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with literal inputs; returns the untupled first output.
+    pub fn run(&self, inputs: &[xla::Literal]) -> crate::Result<xla::Literal> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple1()?)
+    }
+
+    /// Execute with f32 input tensors, returning the f32 output.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> crate::Result<Vec<f32>> {
+        let literals = inputs
+            .iter()
+            .map(|(data, dims)| Ok(xla::Literal::vec1(data).reshape(dims)?))
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(self.run(&literals)?.to_vec::<f32>()?)
+    }
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> crate::Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build an i8 literal of the given shape (no `NativeType` impl for i8
+/// in the crate — go through the untyped-data constructor).
+pub fn literal_i8(data: &[i8], dims: &[i64]) -> crate::Result<xla::Literal> {
+    let dims_usize: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S8,
+        &dims_usize,
+        bytes,
+    )?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT runtime tests that need artifacts live in
+    // rust/tests/runtime_hlo.rs (integration). Here: client liveness.
+    #[test]
+    fn cpu_client_starts() {
+        let e = Engine::cpu().unwrap();
+        assert!(!e.platform().is_empty());
+    }
+
+    #[test]
+    fn missing_hlo_is_artifact_error() {
+        let e = Engine::cpu().unwrap();
+        match e.load_hlo_text(Path::new("/nonexistent/x.hlo.txt")) {
+            Err(err) => assert!(matches!(err, crate::Error::Artifact(_))),
+            Ok(_) => panic!("expected error"),
+        }
+    }
+}

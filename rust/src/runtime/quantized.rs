@@ -1,0 +1,246 @@
+//! The rust-side integer SAC inference pipeline for the tiny CNN.
+//!
+//! Mirrors `python/compile/model.py::forward_sac_quantized` **exactly**:
+//! Q8.8 activations, per-layer Q1.f weights, rounding right-shift
+//! requantization, integer max-pool, floor-divide global average pool.
+//! Every convolution lane is computed through the kneading compiler +
+//! SAC unit, so a logit match against `artifacts/quant_logits.i32`
+//! certifies the full rust stack (kneading → splitters → segment adders
+//! → rear adder tree) bit-for-bit against the Pallas kernel path.
+
+use crate::config::Mode;
+use crate::kneading::{knead_lane, Lane};
+use crate::model::{LoadedLayer, LoadedWeights, Tensor};
+use crate::sac::{rear_adder_tree, split_kneaded, SacUnit, SegmentRegisters};
+
+/// Kneading stride used by the functional pipeline (any value is
+/// correct — values are invariant to KS; 16 matches the paper setup).
+pub const PIPELINE_KS: usize = 16;
+
+/// Integer conv through kneaded SAC lanes: x (N,C,H,W) Q8.8,
+/// weights OIHW Q1.f → accumulator (N,O,OH,OW) at scale 2^(8+f).
+pub fn sac_conv2d(
+    x: &Tensor<i32>,
+    layer: &LoadedLayer,
+    pad: usize,
+    mode: Mode,
+) -> crate::Result<Tensor<i32>> {
+    let [o, c, kh, kw] = layer.shape;
+    let (n, cx, h, w) = match *x.shape() {
+        [n, c2, h, w] => (n, c2, h, w),
+        _ => return Err(crate::Error::Shape("conv input must be 4-D".into())),
+    };
+    if cx != c {
+        return Err(crate::Error::Shape(format!(
+            "{}: input channels {cx} != weight channels {c}",
+            layer.name
+        )));
+    }
+    let oh = h + 2 * pad - kh + 1;
+    let ow = w + 2 * pad - kw + 1;
+    let mut out: Tensor<i32> = Tensor::zeros(&[n, o, oh, ow]);
+
+    // Pre-knead each filter's lane once (weights are reused at every
+    // output pixel — same reuse the accelerator exploits).
+    let lane_len = c * kh * kw;
+    let filters: Vec<Lane> = (0..o)
+        .map(|f| {
+            let ws = layer.weights[f * lane_len..(f + 1) * lane_len].to_vec();
+            Lane::new(ws, vec![0; lane_len])
+        })
+        .collect();
+    let kneaded: Vec<_> = filters
+        .iter()
+        .map(|lane| knead_lane(lane, PIPELINE_KS, mode))
+        .collect();
+
+    // Hot loop (§Perf): the activation window is gathered once per
+    // output pixel and shared by every filter; each filter's pre-kneaded
+    // groups stream straight into one reused set of segment registers —
+    // no per-(pixel, filter) allocation.
+    let mut acts = vec![0i32; lane_len];
+    let mut segs = SegmentRegisters::new(mode.weight_bits());
+    for b in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                // Gather the activation window (im2col row) in OIHW
+                // weight order: (c, ky, kx).
+                let mut idx = 0;
+                for cc in 0..c {
+                    for ky in 0..kh {
+                        for kx in 0..kw {
+                            let iy = oy + ky;
+                            let ix = ox + kx;
+                            acts[idx] = if iy < pad || ix < pad || iy - pad >= h || ix - pad >= w {
+                                0
+                            } else {
+                                x.get4(b, cc, iy - pad, ix - pad)
+                            };
+                            idx += 1;
+                        }
+                    }
+                }
+                for (f, klane) in kneaded.iter().enumerate() {
+                    for (g, group) in klane.groups.iter().enumerate() {
+                        let start = g * PIPELINE_KS;
+                        let end = (start + PIPELINE_KS).min(lane_len);
+                        split_kneaded(group, &acts[start..end], &mut segs);
+                    }
+                    let acc = rear_adder_tree(segs.values());
+                    segs.reset();
+                    out.set4(b, f, oy, ox, acc as i32);
+                }
+            }
+        }
+    }
+    let _ = &filters; // lanes kept alive for shape asserts in debug builds
+    Ok(out)
+}
+
+/// Rounding right shift — mirror of python `_requantize`.
+#[inline]
+pub fn requantize(acc: i32, frac_bits: u32) -> i32 {
+    (acc + (1 << (frac_bits - 1))) >> frac_bits
+}
+
+fn relu_requantize(t: &mut Tensor<i32>, frac_bits: u32) {
+    for v in t.data_mut() {
+        *v = requantize(*v, frac_bits).max(0);
+    }
+}
+
+fn maxpool2(x: &Tensor<i32>) -> Tensor<i32> {
+    let [n, c, h, w] = match *x.shape() {
+        [n, c, h, w] => [n, c, h, w],
+        _ => panic!("pool input must be 4-D"),
+    };
+    let mut out: Tensor<i32> = Tensor::zeros(&[n, c, h / 2, w / 2]);
+    for b in 0..n {
+        for cc in 0..c {
+            for y in 0..h / 2 {
+                for xph in 0..w / 2 {
+                    let m = x
+                        .get4(b, cc, 2 * y, 2 * xph)
+                        .max(x.get4(b, cc, 2 * y, 2 * xph + 1))
+                        .max(x.get4(b, cc, 2 * y + 1, 2 * xph))
+                        .max(x.get4(b, cc, 2 * y + 1, 2 * xph + 1));
+                    out.set4(b, cc, y, xph, m);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Full tiny-CNN integer forward: Q8.8 input (N,1,16,16) → int32 logits
+/// (N,4). Exact mirror of the python SAC pipeline.
+pub fn forward(weights: &LoadedWeights, x: &Tensor<i32>) -> crate::Result<Tensor<i32>> {
+    let mode = weights.mode;
+    let mut h = x.clone();
+    for name in ["conv1", "conv2", "conv3"] {
+        let layer = weights
+            .layer(name)
+            .ok_or_else(|| crate::Error::Artifact(format!("missing layer {name}")))?;
+        let acc = sac_conv2d(&h, layer, 1, mode)?;
+        h = acc;
+        relu_requantize(&mut h, layer.frac_bits);
+        if name != "conv3" {
+            h = maxpool2(&h);
+        }
+    }
+    // Global average pool: sum then floor-divide (matches jnp `//`).
+    let [n, c, hh, ww] = match *h.shape() {
+        [n, c, hh, ww] => [n, c, hh, ww],
+        _ => unreachable!(),
+    };
+    let mut feats: Tensor<i32> = Tensor::zeros(&[n, c]);
+    for b in 0..n {
+        for cc in 0..c {
+            let mut s: i64 = 0;
+            for y in 0..hh {
+                for xx in 0..ww {
+                    s += h.get4(b, cc, y, xx) as i64;
+                }
+            }
+            feats.data_mut()[b * c + cc] = (s.div_euclid((hh * ww) as i64)) as i32;
+        }
+    }
+    // FC via SAC lanes: fc stored as (4, 16, 1, 1) OIHW.
+    let fc = weights
+        .layer("fc")
+        .ok_or_else(|| crate::Error::Artifact("missing layer fc".into()))?;
+    let classes = fc.shape[0];
+    let feat_dim = fc.shape[1];
+    let mut unit = SacUnit::new(mode);
+    let mut logits: Tensor<i32> = Tensor::zeros(&[n, classes]);
+    for b in 0..n {
+        let acts: Vec<i32> = (0..feat_dim).map(|i| feats.data()[b * feat_dim + i]).collect();
+        for k in 0..classes {
+            let ws = fc.weights[k * feat_dim..(k + 1) * feat_dim].to_vec();
+            let lane = Lane::new(ws, acts.clone());
+            logits.data_mut()[b * classes + k] = unit.process_lane(&lane, PIPELINE_KS) as i32;
+        }
+    }
+    Ok(logits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::LoadedLayer;
+
+    fn identity_layer() -> LoadedLayer {
+        // 1×1 conv, single channel, weight = 2^8 (0.5 in Q1.9 … pick
+        // frac 9 so requantize halves then scales).
+        LoadedLayer {
+            name: "conv".into(),
+            shape: [1, 1, 1, 1],
+            frac_bits: 8,
+            weights: vec![256], // 1.0 in Q8
+        }
+    }
+
+    #[test]
+    fn conv1x1_identity() {
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![10, -3, 7, 0]).unwrap();
+        let acc = sac_conv2d(&x, &identity_layer(), 0, Mode::Fp16).unwrap();
+        // acc = x * 256; requantize by 8 → x.
+        let back: Vec<i32> = acc.data().iter().map(|&v| requantize(v, 8)).collect();
+        assert_eq!(back, vec![10, -3, 7, 0]);
+    }
+
+    #[test]
+    fn conv_padding_zero_extends() {
+        let layer = LoadedLayer {
+            name: "c".into(),
+            shape: [1, 1, 3, 3],
+            frac_bits: 0,
+            weights: vec![1; 9],
+        };
+        let x = Tensor::from_vec(&[1, 1, 1, 1], vec![5]).unwrap();
+        let acc = sac_conv2d(&x, &layer, 1, Mode::Fp16).unwrap();
+        // 3×3 all-ones kernel over a single 5 with pad 1 → every output
+        // position sums just the 5.
+        assert_eq!(acc.shape(), &[1, 1, 1, 1]);
+        assert_eq!(acc.data()[0], 5);
+    }
+
+    #[test]
+    fn requantize_rounds_half_up() {
+        assert_eq!(requantize(255, 8), 1);
+        assert_eq!(requantize(127, 8), 0);
+        assert_eq!(requantize(128, 8), 1);
+        assert_eq!(requantize(-128, 8), 0); // (-128+128)>>8
+        assert_eq!(requantize(-129, 8), -1);
+    }
+
+    #[test]
+    fn maxpool_picks_max() {
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1, 9, -4, 3]).unwrap();
+        let p = maxpool2(&x);
+        assert_eq!(p.data(), &[9]);
+    }
+
+    // Cross-language exactness vs quant_logits.i32 lives in
+    // rust/tests/runtime_hlo.rs (needs artifacts).
+}

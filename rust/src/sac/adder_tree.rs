@@ -1,0 +1,75 @@
+//! The rear adder tree: the single final shift-and-add (§III.C).
+//!
+//! `Σ_b 2^b · S_b`, evaluated as a balanced binary tree in hardware
+//! (log2(16) = 4 levels). Functionally it is one weighted reduction; the
+//! tree structure only matters for the latency/energy models.
+
+/// Final partial sum from drained segment values.
+pub fn rear_adder_tree(segments: &[i64]) -> i64 {
+    segments
+        .iter()
+        .enumerate()
+        .map(|(b, &s)| s << b)
+        .sum()
+}
+
+/// Tree-structured evaluation (pairwise reduction) — used by tests to
+/// show associativity holds and by the latency model to count levels.
+pub fn rear_adder_tree_levels(segments: &[i64]) -> (i64, u32) {
+    let mut vals: Vec<i64> = segments.iter().enumerate().map(|(b, &s)| s << b).collect();
+    let mut levels = 0;
+    while vals.len() > 1 {
+        vals = vals.chunks(2).map(|c| c.iter().sum()).collect();
+        levels += 1;
+    }
+    (vals.first().copied().unwrap_or(0), levels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn weighted_sum_simple() {
+        let mut segs = vec![0i64; 16];
+        segs[0] = 3;
+        segs[4] = 1;
+        assert_eq!(rear_adder_tree(&segs), 3 + 16);
+    }
+
+    #[test]
+    fn tree_matches_flat_sum_and_has_log_levels() {
+        prop::run(
+            "tree reduction == flat reduction",
+            |r: &mut Rng| {
+                (0..16).map(|_| r.range_i64(-1 << 40, 1 << 40)).collect::<Vec<i64>>()
+            },
+            |segs| {
+                let flat = rear_adder_tree(segs);
+                let (tree, levels) = rear_adder_tree_levels(segs);
+                if flat != tree {
+                    return Err(format!("flat {flat} != tree {tree}"));
+                }
+                if levels != 4 {
+                    return Err(format!("16 segments must take 4 levels, got {levels}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(rear_adder_tree(&[]), 0);
+        assert_eq!(rear_adder_tree(&[7]), 7);
+        assert_eq!(rear_adder_tree_levels(&[]).0, 0);
+    }
+
+    #[test]
+    fn int8_width_shifts() {
+        let mut segs = vec![0i64; 8];
+        segs[7] = 2;
+        assert_eq!(rear_adder_tree(&segs), 2 << 7);
+    }
+}

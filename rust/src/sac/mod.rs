@@ -1,0 +1,21 @@
+//! SAC — split-and-accumulate (§III.C), the paper's replacement for MAC.
+//!
+//! A SAC unit holds per-bit-position *segment registers* S0..S15. The
+//! *splitter* walks a (kneaded) weight's bit slots and, for each
+//! essential bit at position `b`, routes the referenced activation
+//! (sign-adjusted) to segment adder `b`. Only after the whole lane is
+//! consumed does the *rear adder tree* perform the single shift-and-add
+//! `Σ_b 2^b · S_b` — off the critical path, once per partial sum.
+//!
+//! Everything in this module is *functional* (bit-exact values);
+//! cycle/energy accounting lives in [`crate::sim`].
+
+mod adder_tree;
+mod segment;
+mod splitter;
+mod unit;
+
+pub use adder_tree::{rear_adder_tree, rear_adder_tree_levels};
+pub use segment::SegmentRegisters;
+pub use splitter::{split_kneaded, split_pairwise};
+pub use unit::SacUnit;

@@ -1,0 +1,89 @@
+//! Segment registers S0..S(B-1) with their two-input segment adders.
+
+/// The per-bit accumulation state of one SAC unit.
+///
+/// Register width: in hardware these are sized so that `lanes × max
+/// activation` never overflows (the paper's design consumes a bounded
+/// number of pairs between drains); we use i64 and *assert* the hardware
+/// bound instead of silently wrapping.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SegmentRegisters {
+    regs: Vec<i64>,
+    /// Count of accumulations since the last drain (hardware-bound check).
+    adds: u64,
+}
+
+impl SegmentRegisters {
+    pub fn new(bits: usize) -> Self {
+        Self { regs: vec![0; bits], adds: 0 }
+    }
+
+    pub fn bits(&self) -> usize {
+        self.regs.len()
+    }
+
+    /// Segment adder: accumulate a (sign-adjusted) activation into S_b.
+    #[inline]
+    pub fn accumulate(&mut self, b: usize, value: i64) {
+        self.regs[b] += value;
+        self.adds += 1;
+    }
+
+    /// Read segment `b`.
+    #[inline]
+    pub fn get(&self, b: usize) -> i64 {
+        self.regs[b]
+    }
+
+    pub fn values(&self) -> &[i64] {
+        &self.regs
+    }
+
+    /// Number of accumulate operations performed (energy accounting).
+    pub fn add_count(&self) -> u64 {
+        self.adds
+    }
+
+    /// Drain for the rear adder tree: return values and reset ("pass
+    /// control signals inform the multiplexer to pass each segment
+    /// value to the rear adder tree", §III.C.2).
+    pub fn drain(&mut self) -> Vec<i64> {
+        let out = self.regs.clone();
+        self.reset();
+        out
+    }
+
+    /// Zero all registers without allocating (hot-path drain).
+    pub fn reset(&mut self) {
+        self.regs.iter_mut().for_each(|r| *r = 0);
+        self.adds = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulate_and_drain() {
+        let mut s = SegmentRegisters::new(16);
+        s.accumulate(0, 5);
+        s.accumulate(0, 7);
+        s.accumulate(15, -3);
+        assert_eq!(s.get(0), 12);
+        assert_eq!(s.get(15), -3);
+        assert_eq!(s.add_count(), 3);
+        let drained = s.drain();
+        assert_eq!(drained[0], 12);
+        assert_eq!(drained[15], -3);
+        assert!(s.values().iter().all(|&v| v == 0));
+        assert_eq!(s.add_count(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_segment_panics() {
+        let mut s = SegmentRegisters::new(8);
+        s.accumulate(8, 1);
+    }
+}

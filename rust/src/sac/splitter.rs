@@ -1,0 +1,113 @@
+//! The splitter (Fig 6): decode a (kneaded) weight's bit slots and route
+//! activations to segment adders.
+
+use super::segment::SegmentRegisters;
+use crate::kneading::KneadedGroup;
+use crate::quant::{QAct, QWeight};
+
+/// Pair-wise SAC (Fig 4): split a *plain* weight — each essential bit of
+/// `w` routes `a` (sign-adjusted) into its segment. Conceptual mode; the
+/// accelerator uses [`split_kneaded`].
+pub fn split_pairwise(w: QWeight, a: QAct, segs: &mut SegmentRegisters) {
+    let sign = if w < 0 { -1i64 } else { 1i64 };
+    let mut mag = w.unsigned_abs();
+    let bits = segs.bits();
+    if bits < 32 {
+        mag &= (1u32 << bits) - 1;
+    }
+    while mag != 0 {
+        let b = mag.trailing_zeros() as usize;
+        segs.accumulate(b, sign * a as i64);
+        mag &= mag - 1;
+    }
+}
+
+/// Kneaded-weight SAC over one group: for each kneaded weight, decode
+/// every occupied slot `<b, p>` and route activation `acts[p]`
+/// (sign-adjusted by the group's sign mask) to segment adder `b`.
+///
+/// `acts` is the KS-wide activation window of this group ("the splitter
+/// only needs to fetch the target activation in the throttle buffer when
+/// necessary", §III.C.2).
+///
+/// Returns the number of slot decodes performed (splitter activity, for
+/// energy accounting).
+pub fn split_kneaded(group: &KneadedGroup, acts: &[QAct], segs: &mut SegmentRegisters) -> u64 {
+    debug_assert!(
+        acts.len() >= group.source_len,
+        "activation window shorter than group"
+    );
+    let mut decodes = 0u64;
+    for kw in &group.kneaded {
+        // The comparator array examines every slot in hardware (Fig 6);
+        // in software we walk only the occupied-slot mask (§Perf) and
+        // charge the full decode count for the energy model.
+        decodes += kw.slots().len() as u64;
+        let mut mask = kw.occupied_mask();
+        while mask != 0 {
+            let b = mask.trailing_zeros() as usize;
+            mask &= mask - 1;
+            let slot = kw.pointer(b);
+            let a = acts[slot as usize] as i64;
+            segs.accumulate(b, group.sign_of(slot) * a);
+        }
+    }
+    decodes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Mode;
+    use crate::kneading::knead_group;
+    use crate::sac::rear_adder_tree;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn pairwise_split_equals_multiply() {
+        prop::run(
+            "pairwise SAC == a*w",
+            |r: &mut Rng| (prop::gen::weight(r, 16), prop::gen::activation(r)),
+            |&(w, a)| {
+                let mut segs = SegmentRegisters::new(16);
+                split_pairwise(w, a, &mut segs);
+                let got = rear_adder_tree(segs.values());
+                let want = w as i64 * a as i64;
+                if got == want {
+                    Ok(())
+                } else {
+                    Err(format!("got {got}, want {want}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn kneaded_split_references_right_activations() {
+        // w0 = 0b01 (bit 0), w1 = 0b10 (bit 1), acts 100/200:
+        // segment 0 must get 100 (from w0), segment 1 must get 200 (w1).
+        let g = knead_group(&[0b01, 0b10], Mode::Fp16);
+        assert_eq!(g.len(), 1);
+        let mut segs = SegmentRegisters::new(16);
+        split_kneaded(&g, &[100, 200], &mut segs);
+        assert_eq!(segs.get(0), 100);
+        assert_eq!(segs.get(1), 200);
+        assert_eq!(rear_adder_tree(segs.values()), 100 + 2 * 200);
+    }
+
+    #[test]
+    fn signs_ride_with_activations() {
+        let g = knead_group(&[-0b1, 0b1], Mode::Fp16);
+        let mut segs = SegmentRegisters::new(16);
+        split_kneaded(&g, &[10, 30], &mut segs);
+        assert_eq!(segs.get(0), -10 + 30);
+    }
+
+    #[test]
+    fn decode_count_is_kneaded_times_bits() {
+        let g = knead_group(&[0b111, 0b1, 0b1], Mode::Fp16);
+        let mut segs = SegmentRegisters::new(16);
+        let decodes = split_kneaded(&g, &[1, 1, 1], &mut segs);
+        assert_eq!(decodes, g.len() as u64 * 16);
+    }
+}

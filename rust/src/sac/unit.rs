@@ -1,0 +1,158 @@
+//! A SAC unit: splitter array + segment adders + rear adder tree
+//! (Fig 5), functional level.
+//!
+//! Processes whole lanes and produces bit-exact partial sums along with
+//! activity counters the energy model consumes. Cycle-accurate behaviour
+//! (throttle buffer occupancy, pass-mark synchronization) lives in
+//! `sim::tetris` — this type answers "what value, how many operations".
+
+use super::segment::SegmentRegisters;
+use super::splitter::split_kneaded;
+use crate::config::Mode;
+use crate::kneading::{knead_lane, KneadedLane, Lane};
+
+/// Activity counters for one lane's worth of SAC processing.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SacActivity {
+    /// Kneaded weights consumed.
+    pub kneaded_weights: u64,
+    /// Slot decodes performed by splitters (comparator+mux activations).
+    pub slot_decodes: u64,
+    /// Segment-adder accumulations.
+    pub segment_adds: u64,
+    /// Rear-adder-tree invocations (one per lane drain).
+    pub tree_drains: u64,
+}
+
+/// One SAC unit.
+#[derive(Debug, Clone)]
+pub struct SacUnit {
+    mode: Mode,
+    segs: SegmentRegisters,
+    activity: SacActivity,
+}
+
+impl SacUnit {
+    pub fn new(mode: Mode) -> Self {
+        Self {
+            mode,
+            segs: SegmentRegisters::new(mode.weight_bits()),
+            activity: SacActivity::default(),
+        }
+    }
+
+    pub fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    pub fn activity(&self) -> SacActivity {
+        self.activity
+    }
+
+    /// Process an already-kneaded lane against its activations; returns
+    /// the final partial sum (rear adder tree output).
+    pub fn process_kneaded(&mut self, kneaded: &KneadedLane, lane: &Lane) -> i64 {
+        assert_eq!(
+            kneaded.bits,
+            self.mode.weight_bits(),
+            "kneaded lane width does not match unit mode"
+        );
+        for (g, group) in kneaded.groups.iter().enumerate() {
+            let acts = lane.group_acts(g, kneaded.ks);
+            let before = self.segs.add_count();
+            let decodes = split_kneaded(group, acts, &mut self.segs);
+            self.activity.kneaded_weights += group.len() as u64;
+            self.activity.slot_decodes += decodes;
+            self.activity.segment_adds += self.segs.add_count() - before;
+        }
+        self.activity.tree_drains += 1;
+        let drained = self.segs.drain();
+        super::adder_tree::rear_adder_tree(&drained)
+    }
+
+    /// Knead + process in one step.
+    pub fn process_lane(&mut self, lane: &Lane, ks: usize) -> i64 {
+        let kneaded = knead_lane(lane, ks, self.mode);
+        self.process_kneaded(&kneaded, lane)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    fn random_lane(r: &mut Rng, bits: u32, max_len: usize) -> Lane {
+        let len = 1 + r.below(max_len as u64) as usize;
+        Lane::random(
+            len,
+            r,
+            |r| prop::gen::weight(r, bits),
+            |r| prop::gen::activation(r),
+        )
+    }
+
+    /// DESIGN.md invariant I2/I3: kneaded SAC ≡ MAC, any KS, both modes.
+    #[test]
+    fn kneaded_sac_equals_mac_all_modes_and_strides() {
+        for mode in [Mode::Fp16, Mode::Int8] {
+            let bits = mode.weight_bits() as u32;
+            for ks in [2, 3, 10, 16, 32] {
+                prop::run_with(
+                    crate::util::prop::PropConfig { cases: 128, seed: 0xABCD ^ ks as u64 },
+                    "SAC == MAC",
+                    |r: &mut Rng| random_lane(r, bits, 100),
+                    |lane| {
+                        let mut unit = SacUnit::new(mode);
+                        let got = unit.process_lane(lane, ks);
+                        let want = lane.mac_reference();
+                        if got == want {
+                            Ok(())
+                        } else {
+                            Err(format!("{mode} ks={ks}: SAC {got} != MAC {want}"))
+                        }
+                    },
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn activity_counters_accumulate() {
+        let mut rng = Rng::new(5);
+        let lane = random_lane(&mut rng, 16, 64);
+        let mut unit = SacUnit::new(Mode::Fp16);
+        unit.process_lane(&lane, 16);
+        let a = unit.activity();
+        assert!(a.kneaded_weights > 0);
+        assert_eq!(a.slot_decodes, a.kneaded_weights * 16);
+        assert_eq!(a.tree_drains, 1);
+        // Segment adds == total essential bits in the lane.
+        let essential: u64 = lane
+            .weights
+            .iter()
+            .map(|&w| crate::quant::essential_bits(w, 16) as u64)
+            .sum();
+        assert_eq!(a.segment_adds, essential);
+    }
+
+    #[test]
+    fn unit_is_reusable_across_lanes() {
+        let mut rng = Rng::new(9);
+        let mut unit = SacUnit::new(Mode::Fp16);
+        for _ in 0..10 {
+            let lane = random_lane(&mut rng, 16, 40);
+            assert_eq!(unit.process_lane(&lane, 16), lane.mac_reference());
+        }
+        assert_eq!(unit.activity().tree_drains, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "width does not match")]
+    fn mode_mismatch_panics() {
+        let lane = Lane::new(vec![1, 2], vec![3, 4]);
+        let kneaded = knead_lane(&lane, 16, Mode::Fp16);
+        let mut unit = SacUnit::new(Mode::Int8);
+        unit.process_kneaded(&kneaded, &lane);
+    }
+}

@@ -1,0 +1,97 @@
+//! DaDianNao baseline timing model (Chen et al., MICRO'14) — the
+//! de-facto reference design the paper normalizes against (§IV).
+//!
+//! Each PE holds 16 multiplier lanes; the chip retires
+//! `pes × splitters_per_pe` MAC pairs per cycle regardless of operand
+//! values — every zero value and zero bit costs a full cycle slot, which
+//! is exactly the ineffectual computation Tetris attacks.
+
+use super::edram::{memory_cycles, Traffic};
+use super::{Accelerator, ChipActivity, LayerSample, LayerSim};
+use crate::config::{AccelConfig, CalibConfig};
+use crate::model::ConvLayer;
+
+/// DaDianNao timing model.
+pub struct DadnSim;
+
+impl Accelerator for DadnSim {
+    fn name(&self) -> &'static str {
+        "dadn"
+    }
+
+    fn simulate_layer(
+        &self,
+        layer: &ConvLayer,
+        _sample: &LayerSample,
+        cfg: &AccelConfig,
+        calib: &CalibConfig,
+    ) -> LayerSim {
+        let macs = layer.macs();
+        let throughput = cfg.mac_throughput() as u64; // pairs / cycle
+        let compute = macs.div_ceil(throughput) * calib.timing.dadn_mac_cycles;
+
+        // Memory: weights + input feature map enter once per layer (the
+        // PE SRAMs capture reuse); DaDN is compute-bound on every conv
+        // layer of the zoo at the paper's bandwidth.
+        let traffic = Traffic {
+            weight_words: layer.weight_count() as f64,
+            act_words: (layer.in_c * layer.in_hw * layer.in_hw) as f64,
+        };
+        let memory = memory_cycles(&traffic, cfg);
+        let cycles = compute.max(memory) + calib.timing.pipeline_fill;
+
+        let macs_f = macs as f64;
+        let activity = ChipActivity {
+            mults: macs_f,
+            adds: macs_f,
+            // Weight + activation operand reads per MAC from PE SRAM.
+            sram_reads: 2.0 * macs_f,
+            edram_reads: traffic.total(),
+            reg_writes: macs_f, // pipeline register per MAC
+            ..ChipActivity::default()
+        };
+        LayerSim {
+            layer: layer.name.clone(),
+            cycles,
+            macs,
+            activity,
+            memory_bound: memory > compute,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Mode;
+    use crate::model::zoo;
+    use crate::sim::sample::sample_network;
+
+    #[test]
+    fn cycles_track_macs_over_throughput() {
+        let net = zoo::vgg16();
+        let cfg = AccelConfig::default();
+        let calib = CalibConfig::default();
+        let samples = sample_network(&net, Mode::Fp16, 1).unwrap();
+        let l = &net.layers[2]; // conv2_1
+        let sim = DadnSim.simulate_layer(l, &samples[2], &cfg, &calib);
+        let expect = l.macs().div_ceil(256) + calib.timing.pipeline_fill;
+        assert_eq!(sim.cycles, expect);
+        assert!(!sim.memory_bound);
+    }
+
+    #[test]
+    fn dadn_insensitive_to_weight_values() {
+        // DaDN must cost the same whether weights are dense or sparse —
+        // that's the point of the baseline.
+        let net = zoo::alexnet();
+        let cfg = AccelConfig::default();
+        let calib = CalibConfig::default();
+        let s1 = sample_network(&net, Mode::Fp16, 1).unwrap();
+        let s2 = sample_network(&net, Mode::Fp16, 2).unwrap();
+        let l = &net.layers[1];
+        let a = DadnSim.simulate_layer(l, &s1[1], &cfg, &calib);
+        let b = DadnSim.simulate_layer(l, &s2[1], &cfg, &calib);
+        assert_eq!(a.cycles, b.cycles);
+    }
+}

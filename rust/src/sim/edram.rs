@@ -1,0 +1,56 @@
+//! eDRAM / on-chip memory bandwidth model.
+//!
+//! All three designs stream weights from on-chip eDRAM into per-PE
+//! buffers (DaDN's NBin/SB, Tetris' throttle buffer, PRA's weight
+//! FIFOs). The timing models race compute cycles against the cycles the
+//! memory system needs to deliver the layer's weight + activation
+//! traffic — a roofline: `cycles = max(compute, memory) + fixed`.
+
+use crate::config::AccelConfig;
+
+/// Traffic demand of one layer, in 16-bit words.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Traffic {
+    /// Weight-stream words (kneaded streams are wider; see
+    /// `KneadedWeight::storage_bits`).
+    pub weight_words: f64,
+    /// Activation words.
+    pub act_words: f64,
+}
+
+impl Traffic {
+    pub fn total(&self) -> f64 {
+        self.weight_words + self.act_words
+    }
+}
+
+/// Cycles the eDRAM needs to deliver `traffic` to `pes` PEs.
+pub fn memory_cycles(traffic: &Traffic, cfg: &AccelConfig) -> u64 {
+    // Aggregate bandwidth: words/cycle/PE × PEs.
+    let bw = (cfg.edram_words_per_cycle * cfg.pes) as f64;
+    let cycles = traffic.total() / bw;
+    cycles.ceil() as u64 + cfg.edram_latency as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_cycles_scale_with_traffic() {
+        let cfg = AccelConfig::default(); // 32 w/c × 16 PEs = 512 words/cycle
+        let t1 = Traffic { weight_words: 512.0 * 100.0, act_words: 0.0 };
+        let t2 = Traffic { weight_words: 512.0 * 200.0, act_words: 0.0 };
+        let c1 = memory_cycles(&t1, &cfg);
+        let c2 = memory_cycles(&t2, &cfg);
+        assert_eq!(c1, 100 + cfg.edram_latency as u64);
+        assert_eq!(c2 - c1, 100);
+    }
+
+    #[test]
+    fn latency_charged_once() {
+        let cfg = AccelConfig::default();
+        let t = Traffic { weight_words: 1.0, act_words: 0.0 };
+        assert_eq!(memory_cycles(&t, &cfg), 1 + cfg.edram_latency as u64);
+    }
+}

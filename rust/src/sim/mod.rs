@@ -1,0 +1,216 @@
+//! Cycle-level timing models of the three accelerators the paper
+//! evaluates: Tetris (ours), DaDianNao (`dadn`, the de-facto baseline)
+//! and PRA (`pra`, bit-pragmatic).
+//!
+//! ## Modeling approach (see DESIGN.md §2)
+//!
+//! The paper's cycle counts come from Vivado HLS RTL simulation. Our
+//! substitute is a *sampled, lane-exact* model:
+//!
+//! * For every conv layer we materialize a sample of per-filter weight
+//!   lanes (`in_c·k·k` weights each) from the calibrated bit-profile
+//!   generator — or from real trained weights for the tiny CNN.
+//! * Each accelerator model computes the **exact** cycle cost of the
+//!   sampled lanes (kneaded lengths for Tetris, essential-bit serial
+//!   schedules for PRA, pair counts for DaDN), then scales to the
+//!   layer's full filter count and output extent. Because convolution
+//!   reuses one filter's weights at every output pixel, the per-filter
+//!   cost is exact and only the filter sampling introduces (measured,
+//!   small) variance.
+//! * Compute cycles race memory cycles roofline-style against the
+//!   eDRAM bandwidth model (`edram`), and fixed pipeline overheads are
+//!   charged per layer.
+
+pub mod dadn;
+pub mod edram;
+pub mod pra;
+pub mod sample;
+pub mod tetris;
+pub mod throttle;
+
+use crate::config::{AccelConfig, CalibConfig};
+use crate::model::{ConvLayer, Network};
+
+pub use sample::LayerSample;
+
+/// Per-component operation counts for one layer (inputs to the energy
+/// model). All counts are for the whole layer (one input image).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ChipActivity {
+    /// 16-bit multiplies (DaDN only).
+    pub mults: f64,
+    /// Segment / MAC adder operations.
+    pub adds: f64,
+    /// Splitter slot decodes (Tetris only).
+    pub splitter_decodes: f64,
+    /// Rear-adder-tree drains (Tetris) / final reductions.
+    pub tree_drains: f64,
+    /// Barrel-shifter operations (PRA only).
+    pub shifts: f64,
+    /// SRAM word reads (weights + activations).
+    pub sram_reads: f64,
+    /// eDRAM word reads.
+    pub edram_reads: f64,
+    /// FIFO/throttle-buffer accesses.
+    pub fifo_ops: f64,
+    /// Register writes (segment registers, pipeline regs).
+    pub reg_writes: f64,
+}
+
+impl ChipActivity {
+    pub fn add(&mut self, o: &ChipActivity) {
+        self.mults += o.mults;
+        self.adds += o.adds;
+        self.splitter_decodes += o.splitter_decodes;
+        self.tree_drains += o.tree_drains;
+        self.shifts += o.shifts;
+        self.sram_reads += o.sram_reads;
+        self.edram_reads += o.edram_reads;
+        self.fifo_ops += o.fifo_ops;
+        self.reg_writes += o.reg_writes;
+    }
+}
+
+/// Result of simulating one layer.
+#[derive(Debug, Clone)]
+pub struct LayerSim {
+    pub layer: String,
+    pub cycles: u64,
+    pub macs: u64,
+    pub activity: ChipActivity,
+    /// Compute-bound vs memory-bound (diagnostics / ablation benches).
+    pub memory_bound: bool,
+}
+
+/// Result of simulating a whole network.
+#[derive(Debug, Clone)]
+pub struct NetworkSim {
+    pub network: String,
+    pub accel: String,
+    pub per_layer: Vec<LayerSim>,
+    pub config: AccelConfig,
+}
+
+impl NetworkSim {
+    pub fn total_cycles(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.cycles).sum()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.macs).sum()
+    }
+
+    /// Wall-clock inference time at the configured frequency.
+    pub fn time_s(&self) -> f64 {
+        self.total_cycles() as f64 * self.config.cycle_time_s()
+    }
+
+    pub fn total_activity(&self) -> ChipActivity {
+        let mut a = ChipActivity::default();
+        for l in &self.per_layer {
+            a.add(&l.activity);
+        }
+        a
+    }
+}
+
+/// An accelerator timing model.
+pub trait Accelerator: Sync {
+    fn name(&self) -> &'static str;
+
+    /// Cycle + activity model for one layer given its sampled lanes.
+    fn simulate_layer(
+        &self,
+        layer: &ConvLayer,
+        sample: &LayerSample,
+        cfg: &AccelConfig,
+        calib: &CalibConfig,
+    ) -> LayerSim;
+}
+
+/// Simulate every layer of a network (parallel over layers).
+///
+/// `seed` drives the per-layer weight sampling; the same seed gives the
+/// same sampled lanes to every accelerator, so comparisons are paired.
+pub fn simulate_network(
+    accel: &dyn Accelerator,
+    net: &Network,
+    cfg: &AccelConfig,
+    calib: &CalibConfig,
+    seed: u64,
+) -> crate::Result<NetworkSim> {
+    let samples = sample::sample_network(net, cfg.mode, seed)?;
+    let per_layer = crate::util::pool::par_map(&net.layers, |i, layer| {
+        accel.simulate_layer(layer, &samples[i], cfg, calib)
+    });
+    Ok(NetworkSim {
+        network: net.name.clone(),
+        accel: accel.name().to_string(),
+        per_layer,
+        config: cfg.clone(),
+    })
+}
+
+/// Simulate with externally supplied samples (real weights path).
+pub fn simulate_network_with_samples(
+    accel: &dyn Accelerator,
+    net: &Network,
+    samples: &[LayerSample],
+    cfg: &AccelConfig,
+    calib: &CalibConfig,
+) -> NetworkSim {
+    assert_eq!(samples.len(), net.layers.len());
+    let per_layer = crate::util::pool::par_map(&net.layers, |i, layer| {
+        accel.simulate_layer(layer, &samples[i], cfg, calib)
+    });
+    NetworkSim {
+        network: net.name.clone(),
+        accel: accel.name().to_string(),
+        per_layer,
+        config: cfg.clone(),
+    }
+}
+
+/// Look up an accelerator model by CLI name.
+pub fn accel_by_name(name: &str) -> crate::Result<Box<dyn Accelerator>> {
+    match name {
+        "tetris" => Ok(Box::new(tetris::TetrisSim)),
+        "dadn" => Ok(Box::new(dadn::DadnSim)),
+        "pra" => Ok(Box::new(pra::PraSim)),
+        other => Err(crate::Error::Config(format!(
+            "unknown accelerator `{other}` (want tetris|dadn|pra)"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Mode;
+    use crate::model::zoo;
+
+    #[test]
+    fn paired_simulation_speedup_ordering() {
+        // The paper's headline ordering (Fig 8): DaDN ≤ PRA ≤ Tetris-fp16
+        // ≤ Tetris-int8 in speed (≥ in cycles).
+        let net = zoo::alexnet();
+        let calib = CalibConfig::default();
+        let fp16 = AccelConfig::default();
+        let int8 = AccelConfig { mode: Mode::Int8, ..AccelConfig::default() };
+        let dadn = simulate_network(&dadn::DadnSim, &net, &fp16, &calib, 1).unwrap();
+        let pra = simulate_network(&pra::PraSim, &net, &fp16, &calib, 1).unwrap();
+        let tet = simulate_network(&tetris::TetrisSim, &net, &fp16, &calib, 1).unwrap();
+        let tet8 = simulate_network(&tetris::TetrisSim, &net, &int8, &calib, 1).unwrap();
+        assert!(tet.total_cycles() < pra.total_cycles(), "tetris must beat PRA");
+        assert!(pra.total_cycles() < dadn.total_cycles(), "PRA must beat DaDN");
+        assert!(tet8.total_cycles() < tet.total_cycles(), "int8 must beat fp16");
+    }
+
+    #[test]
+    fn accel_by_name_roundtrip() {
+        for n in ["tetris", "dadn", "pra"] {
+            assert_eq!(accel_by_name(n).unwrap().name(), n);
+        }
+        assert!(accel_by_name("eyeriss").is_err());
+    }
+}

@@ -1,0 +1,165 @@
+//! PRA (bit-pragmatic) baseline timing model (Albericio et al.,
+//! MICRO'17), as enrolled by the paper: the fp16 design applied to
+//! weight essential bits (§IV).
+//!
+//! PRA serializes over *essential bits only*: a lane-group of
+//! `pra_sync_group` weights advances once every weight in the group has
+//! streamed all of its essential bits — the group costs
+//! `max_i popcount(w_i)` cycles (the synchronization the paper calls
+//! "traverse the entire weight to probe essential bits"). The
+//! bit-serial frontend needs 16× wider weight buffering to keep the
+//! units fed ("large buffers must be introduced", §IV.D); the sustained
+//! fraction of peak is `pra_frontend_derate`.
+
+use super::edram::{memory_cycles, Traffic};
+use super::{Accelerator, ChipActivity, LayerSample, LayerSim};
+use crate::config::{AccelConfig, CalibConfig};
+use crate::model::ConvLayer;
+use crate::quant::essential_bits;
+
+/// PRA timing model.
+pub struct PraSim;
+
+/// Mean serial cycles per sync group measured on the sampled lanes.
+pub fn measure_serial(sample: &LayerSample, sync_group: usize) -> SerialMeasure {
+    let bits = sample.mode.weight_bits() as u32;
+    let mut group_cycles = 0u64;
+    let mut groups = 0u64;
+    let mut essential = 0u64;
+    for lane in &sample.filter_lanes {
+        for chunk in lane.chunks(sync_group) {
+            let max_pop = chunk
+                .iter()
+                .map(|&w| essential_bits(w, bits))
+                .max()
+                .unwrap_or(0)
+                .max(1); // a group never advances in zero cycles
+            group_cycles += max_pop as u64;
+            groups += 1;
+            essential += chunk.iter().map(|&w| essential_bits(w, bits) as u64).sum::<u64>();
+        }
+    }
+    let lanes = sample.filter_lanes.len().max(1) as f64;
+    SerialMeasure {
+        mean_serial_per_lane: group_cycles as f64 / lanes,
+        mean_essential_per_lane: essential as f64 / lanes,
+        mean_group_cycles: group_cycles as f64 / groups.max(1) as f64,
+    }
+}
+
+/// Serial-schedule measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct SerialMeasure {
+    /// Σ over groups of max-popcount, per filter lane.
+    pub mean_serial_per_lane: f64,
+    pub mean_essential_per_lane: f64,
+    pub mean_group_cycles: f64,
+}
+
+impl Accelerator for PraSim {
+    fn name(&self) -> &'static str {
+        "pra"
+    }
+
+    fn simulate_layer(
+        &self,
+        layer: &ConvLayer,
+        sample: &LayerSample,
+        cfg: &AccelConfig,
+        calib: &CalibConfig,
+    ) -> LayerSim {
+        let sync = calib.timing.pra_sync_group;
+        let m = measure_serial(sample, sync);
+        let out_pix = (layer.out_hw() * layer.out_hw()) as f64;
+        let filters = layer.out_c as f64;
+
+        // Each PE runs `splitters_per_pe` lane-groups concurrently; a
+        // group retires `sync` pairs in `max popcount` cycles.
+        let lane_groups = (cfg.pes * cfg.splitters_per_pe) as f64;
+        let serial_total = m.mean_serial_per_lane * filters * out_pix;
+        let compute =
+            (serial_total / (lane_groups * calib.timing.pra_frontend_derate)).ceil() as u64;
+
+        // Memory: weights stream bit-serially from 16×-deep FIFOs.
+        let traffic = Traffic {
+            weight_words: layer.weight_count() as f64,
+            act_words: (layer.in_c * layer.in_hw * layer.in_hw) as f64,
+        };
+        let memory = memory_cycles(&traffic, cfg);
+        let cycles = compute.max(memory) + calib.timing.pipeline_fill;
+
+        let lanes = filters * out_pix;
+        let essential_total = m.mean_essential_per_lane * lanes;
+        let activity = ChipActivity {
+            adds: essential_total,
+            shifts: essential_total, // one multi-stage shift per essential bit
+            sram_reads: layer.macs() as f64,
+            edram_reads: traffic.total(),
+            // The compensating 16× weight buffers: the serial frontend
+            // keeps `sync`-deep FIFO slices in flight per pair — the
+            // dominant power term the paper blames for PRA's 3.37×
+            // draw ("large buffers must be introduced", §IV.D).
+            fifo_ops: layer.macs() as f64 * sync as f64,
+            reg_writes: essential_total,
+            ..ChipActivity::default()
+        };
+        LayerSim {
+            layer: layer.name.clone(),
+            cycles,
+            macs: layer.macs(),
+            activity,
+            memory_bound: memory > compute,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Mode;
+    use crate::model::zoo;
+    use crate::sim::dadn::DadnSim;
+    use crate::sim::sample::sample_network;
+
+    #[test]
+    fn pra_between_dadn_and_ideal() {
+        let net = zoo::vgg16();
+        let cfg = AccelConfig::default();
+        let calib = CalibConfig::default();
+        let samples = sample_network(&net, Mode::Fp16, 11).unwrap();
+        let mut pra_total = 0u64;
+        let mut dadn_total = 0u64;
+        for (i, l) in net.layers.iter().enumerate() {
+            pra_total += PraSim.simulate_layer(l, &samples[i], &cfg, &calib).cycles;
+            dadn_total += DadnSim.simulate_layer(l, &samples[i], &cfg, &calib).cycles;
+        }
+        let speedup = dadn_total as f64 / pra_total as f64;
+        // Paper zone: ~1.15×. Allow a generous band; the report bench
+        // checks the exact value.
+        assert!((1.02..1.6).contains(&speedup), "PRA speedup {speedup}");
+    }
+
+    #[test]
+    fn serial_measure_max_popcount_bound() {
+        let net = zoo::alexnet();
+        let samples = sample_network(&net, Mode::Fp16, 13).unwrap();
+        let m = measure_serial(&samples[0], 16);
+        // Group cycles are between 1 and the full bit width.
+        assert!(m.mean_group_cycles >= 1.0 && m.mean_group_cycles <= 16.0);
+        // Serial cycles ≥ essential/16 (can't beat perfect bit packing).
+        assert!(m.mean_serial_per_lane >= m.mean_essential_per_lane / 16.0);
+    }
+
+    #[test]
+    fn dense_weights_serialize_to_full_width() {
+        use crate::sim::LayerSample;
+        let sample = LayerSample {
+            filter_lanes: vec![vec![0x7FFF; 32]],
+            total_filters: 1,
+            mode: Mode::Fp16,
+        };
+        let m = measure_serial(&sample, 16);
+        // All 15 low bits set → every group costs 15 cycles.
+        assert_eq!(m.mean_group_cycles, 15.0);
+    }
+}

@@ -1,0 +1,142 @@
+//! Layer weight sampling for the timing models.
+//!
+//! A [`LayerSample`] holds per-filter weight lanes. Convolution reuses a
+//! filter's weights at every output pixel, so the per-filter lane cost is
+//! exact; sampling only subsets the *filters* of very wide layers.
+
+use crate::config::Mode;
+use crate::model::weights::{profile_with, DensityCalibration};
+use crate::model::{ConvLayer, LoadedWeights, Network};
+use crate::quant::QWeight;
+use crate::util::rng::Rng;
+
+/// Cap on filters materialized per layer. Wide layers (≥512 filters)
+/// have i.i.d. filter statistics, so 64 filters bound the sampling error
+/// on mean kneaded length to well under 1% (see
+/// `rust/tests/sampling_error.rs`).
+pub const MAX_SAMPLED_FILTERS: usize = 64;
+
+/// Sampled weight lanes for one layer.
+#[derive(Debug, Clone)]
+pub struct LayerSample {
+    /// One lane (length `in_c·k·k`) per sampled filter.
+    pub filter_lanes: Vec<Vec<QWeight>>,
+    /// Total filters in the real layer (scaling factor numerator).
+    pub total_filters: usize,
+    /// Precision the weights were drawn in.
+    pub mode: Mode,
+}
+
+impl LayerSample {
+    /// Scale factor from sampled filters to the full layer.
+    pub fn filter_scale(&self) -> f64 {
+        self.total_filters as f64 / self.filter_lanes.len() as f64
+    }
+
+    /// All sampled weights, flattened (bit-statistics input).
+    pub fn flat(&self) -> Vec<QWeight> {
+        self.filter_lanes.iter().flatten().copied().collect()
+    }
+}
+
+/// Draw a layer's sample from the bit profile of `network` under the
+/// given density calibration.
+pub fn sample_layer(
+    network: &str,
+    layer: &ConvLayer,
+    mode: Mode,
+    calib: DensityCalibration,
+    rng: &mut Rng,
+) -> crate::Result<LayerSample> {
+    let profile = profile_with(network, mode, calib)?;
+    let n_filters = layer.out_c.min(MAX_SAMPLED_FILTERS);
+    let lane_len = layer.lane_len();
+    let filter_lanes = (0..n_filters)
+        .map(|_| profile.generate(lane_len, rng))
+        .collect();
+    Ok(LayerSample { filter_lanes, total_filters: layer.out_c, mode })
+}
+
+/// Samples for every layer of a network, deterministically seeded.
+///
+/// Uses the **Fig 2** density calibration — the one that reproduces the
+/// paper's performance evaluation (Figs 8–11). Table 1 experiments call
+/// `profile_with(.., DensityCalibration::Table1)` directly; see
+/// `model::weights` docs for the inconsistency discussion.
+pub fn sample_network(net: &Network, mode: Mode, seed: u64) -> crate::Result<Vec<LayerSample>> {
+    sample_network_calibrated(net, mode, seed, DensityCalibration::Fig2)
+}
+
+/// Samples under an explicit density calibration (ablation benches).
+pub fn sample_network_calibrated(
+    net: &Network,
+    mode: Mode,
+    seed: u64,
+    calib: DensityCalibration,
+) -> crate::Result<Vec<LayerSample>> {
+    let mut root = Rng::new(seed ^ 0x7e7215);
+    let mut out = Vec::with_capacity(net.layers.len());
+    for (i, layer) in net.layers.iter().enumerate() {
+        let mut rng = root.fork(i as u64);
+        out.push(sample_layer(&net.name, layer, mode, calib, &mut rng)?);
+    }
+    Ok(out)
+}
+
+/// Build samples from *real* trained weights (the tiny-CNN E2E path):
+/// every filter is included, no sampling.
+pub fn samples_from_loaded(net: &Network, loaded: &LoadedWeights) -> crate::Result<Vec<LayerSample>> {
+    let mut out = Vec::with_capacity(net.layers.len());
+    for layer in &net.layers {
+        let ll = loaded.layer(&layer.name).ok_or_else(|| {
+            crate::Error::Artifact(format!("weight file missing layer `{}`", layer.name))
+        })?;
+        let [o, i, kh, kw] = ll.shape;
+        if o != layer.out_c || i != layer.in_c || kh != layer.k || kw != layer.k {
+            return Err(crate::Error::Shape(format!(
+                "layer `{}`: file shape {:?} != zoo shape [{},{},{},{}]",
+                layer.name, ll.shape, layer.out_c, layer.in_c, layer.k, layer.k
+            )));
+        }
+        let lane_len = layer.lane_len();
+        let filter_lanes = ll.weights.chunks(lane_len).map(|c| c.to_vec()).collect();
+        out.push(LayerSample { filter_lanes, total_filters: o, mode: loaded.mode });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn sample_shapes_match_layer() {
+        let net = zoo::alexnet();
+        let samples = sample_network(&net, Mode::Fp16, 1).unwrap();
+        assert_eq!(samples.len(), 5);
+        // conv1: 96 filters → capped at 64; lane = 3*11*11 = 363.
+        assert_eq!(samples[0].filter_lanes.len(), 64);
+        assert_eq!(samples[0].filter_lanes[0].len(), 363);
+        assert_eq!(samples[0].total_filters, 96);
+        assert!((samples[0].filter_scale() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seed() {
+        let net = zoo::nin();
+        let a = sample_network(&net, Mode::Fp16, 99).unwrap();
+        let b = sample_network(&net, Mode::Fp16, 99).unwrap();
+        assert_eq!(a[3].filter_lanes, b[3].filter_lanes);
+        let c = sample_network(&net, Mode::Fp16, 100).unwrap();
+        assert_ne!(a[3].filter_lanes, c[3].filter_lanes);
+    }
+
+    #[test]
+    fn narrow_layers_keep_all_filters() {
+        let net = zoo::tiny_cnn();
+        let samples = sample_network(&net, Mode::Fp16, 1).unwrap();
+        assert_eq!(samples[0].filter_lanes.len(), 8); // conv1 has 8 filters
+        assert_eq!(samples[0].filter_scale(), 1.0);
+    }
+}

@@ -1,0 +1,219 @@
+//! Throttle buffer + pass-mark micro-model (§III.C.2, Fig 5).
+//!
+//! The throttle buffer feeds kneaded weights from eDRAM to the splitter
+//! array. A *pass mark* sits after the last kneaded weight of each
+//! addable lane; the *pass detector* fires when every splitter's stream
+//! has reached its mark, which validates the rear adder tree for the
+//! final summation. This fine-grained model backs the analytic cycle
+//! counts in [`super::tetris`] (see `rust/tests/microsim.rs` for the
+//! cross-validation) and exercises the asynchronous-pass-mark behaviour
+//! the paper describes ("the pass marks, for most of the time, are not
+//! synchronized").
+
+use std::collections::VecDeque;
+
+use crate::kneading::KneadedLane;
+
+/// One entry in a splitter's stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Entry {
+    /// One kneaded weight's worth of work (1 cycle on the splitter,
+    /// or ½ cycle in int8 mode — handled by the consumer).
+    Kneaded,
+    /// End of an addable lane: drain segment registers to the tree.
+    PassMark,
+}
+
+/// Per-splitter stream with refill from "eDRAM".
+#[derive(Debug, Clone)]
+pub struct ThrottleBuffer {
+    queue: VecDeque<Entry>,
+    capacity: usize,
+    /// Entries still waiting in eDRAM.
+    backlog: VecDeque<Entry>,
+    /// Refill latency in cycles when the buffer runs dry.
+    refill_latency: usize,
+    stall_until: u64,
+    /// Total refill stall cycles observed (diagnostics).
+    pub stalls: u64,
+}
+
+impl ThrottleBuffer {
+    pub fn new(capacity: usize, refill_latency: usize) -> Self {
+        Self {
+            queue: VecDeque::new(),
+            capacity,
+            backlog: VecDeque::new(),
+            refill_latency,
+            stall_until: 0,
+            stalls: 0,
+        }
+    }
+
+    /// Enqueue a lane's kneaded stream followed by its pass mark.
+    pub fn push_lane(&mut self, lane: &KneadedLane) {
+        for g in &lane.groups {
+            for _ in 0..g.len() {
+                self.backlog.push_back(Entry::Kneaded);
+            }
+        }
+        self.backlog.push_back(Entry::PassMark);
+    }
+
+    /// Number of buffered + pending entries.
+    pub fn pending(&self) -> usize {
+        self.queue.len() + self.backlog.len()
+    }
+
+    /// Advance refill by one cycle: move entries from backlog while
+    /// capacity allows (bandwidth: `words` entries per cycle). Entries
+    /// delivered now become poppable `refill_latency` cycles later when
+    /// the buffer had run dry (the eDRAM access latency).
+    pub fn refill(&mut self, now: u64, words: usize) {
+        for _ in 0..words {
+            if self.queue.len() >= self.capacity {
+                break;
+            }
+            match self.backlog.pop_front() {
+                Some(e) => {
+                    if self.queue.is_empty() && self.stall_until <= now {
+                        // Dry buffer: this delivery pays the access latency.
+                        self.stall_until = now + self.refill_latency as u64;
+                    }
+                    self.queue.push_back(e);
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Pop the next entry if available and its delivery latency has
+    /// elapsed; records a stall otherwise.
+    pub fn pop(&mut self, now: u64) -> Option<Entry> {
+        if now < self.stall_until {
+            // In-flight refill has not landed yet.
+            if self.pending() > 0 {
+                self.stalls += 1;
+            }
+            return None;
+        }
+        match self.queue.pop_front() {
+            Some(e) => Some(e),
+            None => {
+                if !self.backlog.is_empty() {
+                    self.stalls += 1;
+                }
+                None
+            }
+        }
+    }
+}
+
+/// Pass detector over `n` splitter streams: all marks must arrive before
+/// the adder tree is validated.
+#[derive(Debug, Clone)]
+pub struct PassDetector {
+    seen: Vec<bool>,
+}
+
+impl PassDetector {
+    pub fn new(n: usize) -> Self {
+        Self { seen: vec![false; n] }
+    }
+
+    /// Splitter `i` reached its pass mark.
+    pub fn mark(&mut self, i: usize) {
+        self.seen[i] = true;
+    }
+
+    /// All marks in? (validates the rear adder tree, then resets).
+    pub fn all_passed(&mut self) -> bool {
+        if self.seen.iter().all(|&s| s) {
+            self.seen.iter_mut().for_each(|s| *s = false);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.seen.iter().filter(|&&s| !s).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Mode;
+    use crate::kneading::{knead_lane, Lane};
+
+    fn lane_of(ws: Vec<i32>) -> KneadedLane {
+        let n = ws.len();
+        knead_lane(&Lane::new(ws, vec![1; n]), 16, Mode::Fp16)
+    }
+
+    #[test]
+    fn streams_lane_then_pass_mark() {
+        let kl = lane_of(vec![0b1, 0b10, 0b100]);
+        let mut tb = ThrottleBuffer::new(8, 2);
+        tb.push_lane(&kl);
+        assert_eq!(tb.pending(), kl.kneaded_len() + 1);
+        let mut seen_kneaded = 0;
+        let mut now = 0u64;
+        loop {
+            tb.refill(now, 8);
+            match tb.pop(now) {
+                Some(Entry::Kneaded) => seen_kneaded += 1,
+                Some(Entry::PassMark) => break,
+                None => {}
+            }
+            now += 1;
+            assert!(now < 1000, "test runaway");
+        }
+        assert_eq!(seen_kneaded, kl.kneaded_len());
+    }
+
+    #[test]
+    fn empty_buffer_records_stall_and_pays_latency() {
+        let kl = lane_of(vec![0x7FFF; 4]);
+        let mut tb = ThrottleBuffer::new(2, 3);
+        tb.push_lane(&kl);
+        // No refill yet: pop must stall.
+        assert_eq!(tb.pop(0), None);
+        assert_eq!(tb.stalls, 1);
+        // A dry-buffer refill pays the access latency before delivery.
+        tb.refill(1, 2);
+        assert_eq!(tb.pop(1), None); // in flight (lands at cycle 4)
+        assert_eq!(tb.pop(3), None);
+        assert!(tb.pop(4).is_some());
+        assert!(tb.stalls >= 3);
+    }
+
+    #[test]
+    fn pass_detector_waits_for_all() {
+        let mut pd = PassDetector::new(3);
+        pd.mark(0);
+        pd.mark(2);
+        assert!(!pd.all_passed());
+        assert_eq!(pd.pending(), 1);
+        pd.mark(1);
+        assert!(pd.all_passed());
+        // Resets after firing.
+        assert_eq!(pd.pending(), 3);
+    }
+
+    #[test]
+    fn capacity_bounds_refill() {
+        let kl = lane_of(vec![0b1; 64]);
+        let mut tb = ThrottleBuffer::new(4, 1);
+        tb.push_lane(&kl);
+        tb.refill(0, 100);
+        // Only `capacity` entries enter the buffer (pop after the
+        // delivery latency has elapsed).
+        let mut in_buffer = 0;
+        while tb.pop(10).is_some() {
+            in_buffer += 1;
+        }
+        assert_eq!(in_buffer, 4);
+    }
+}

@@ -1,0 +1,215 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup, repeated timed samples, outlier-robust statistics and
+//! a human-readable + CSV report. Every `benches/*.rs` target (declared
+//! with `harness = false`) drives this.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use super::stats::percentile;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// Per-iteration wall time, seconds, sorted ascending.
+    pub samples_s: Vec<f64>,
+    /// Optional user metric (e.g. simulated cycles) attached via
+    /// [`Bencher::metric`].
+    pub metrics: Vec<(String, f64)>,
+}
+
+impl Measurement {
+    pub fn median_s(&self) -> f64 {
+        percentile(&self.samples_s, 0.5)
+    }
+
+    pub fn p05_s(&self) -> f64 {
+        percentile(&self.samples_s, 0.05)
+    }
+
+    pub fn p95_s(&self) -> f64 {
+        percentile(&self.samples_s, 0.95)
+    }
+
+    pub fn metric(&self, name: &str) -> Option<f64> {
+        self.metrics.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_samples: usize,
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        // Fast enough that the full paper-figure suite completes in
+        // minutes; override with TETRIS_BENCH_SECONDS for longer runs.
+        let secs: f64 = std::env::var("TETRIS_BENCH_SECONDS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0.6);
+        Self {
+            warmup: Duration::from_secs_f64(secs * 0.33),
+            measure: Duration::from_secs_f64(secs),
+            min_samples: 10,
+            max_samples: 2_000,
+        }
+    }
+}
+
+/// Collects measurements and renders the report.
+pub struct Harness {
+    pub config: BenchConfig,
+    pub title: String,
+    results: Vec<Measurement>,
+}
+
+impl Harness {
+    pub fn new(title: &str) -> Self {
+        Self { config: BenchConfig::default(), title: title.to_string(), results: Vec::new() }
+    }
+
+    /// Time `f` repeatedly; the closure returns a value that is
+    /// black-boxed to keep the optimizer honest.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Measurement {
+        // Warmup.
+        let start = Instant::now();
+        let mut iters_hint = 1u64;
+        while start.elapsed() < self.config.warmup {
+            for _ in 0..iters_hint {
+                black_box(f());
+            }
+            iters_hint = (iters_hint * 2).min(1 << 20);
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let begin = Instant::now();
+        while (begin.elapsed() < self.config.measure || samples.len() < self.config.min_samples)
+            && samples.len() < self.config.max_samples
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(f64::total_cmp);
+        self.results.push(Measurement { name: name.to_string(), samples_s: samples, metrics: Vec::new() });
+        self.results.last().unwrap()
+    }
+
+    /// Record an analytic (non-timed) metric row — used for simulated
+    /// cycles, energy, area: quantities the paper reports that are
+    /// computed, not wall-clock timed.
+    pub fn metric_row(&mut self, name: &str, metrics: Vec<(String, f64)>) {
+        self.results.push(Measurement { name: name.to_string(), samples_s: vec![0.0], metrics });
+    }
+
+    /// Attach a metric to the most recent measurement.
+    pub fn metric(&mut self, key: &str, value: f64) {
+        if let Some(last) = self.results.last_mut() {
+            last.metrics.push((key.to_string(), value));
+        }
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Render the human-readable report to stdout and optionally CSV.
+    pub fn report(&self) {
+        println!("\n== {} ==", self.title);
+        let timed: Vec<_> = self.results.iter().filter(|m| m.samples_s.len() > 1).collect();
+        if !timed.is_empty() {
+            println!("{:<44} {:>12} {:>12} {:>12} {:>8}", "benchmark", "median", "p05", "p95", "n");
+            for m in &timed {
+                println!(
+                    "{:<44} {:>12} {:>12} {:>12} {:>8}",
+                    m.name,
+                    fmt_time(m.median_s()),
+                    fmt_time(m.p05_s()),
+                    fmt_time(m.p95_s()),
+                    m.samples_s.len()
+                );
+            }
+        }
+        let metric_rows: Vec<_> = self.results.iter().filter(|m| !m.metrics.is_empty()).collect();
+        if !metric_rows.is_empty() {
+            println!("-- metrics --");
+            for m in metric_rows {
+                let kv: Vec<String> =
+                    m.metrics.iter().map(|(k, v)| format!("{k}={v:.4}")).collect();
+                println!("{:<44} {}", m.name, kv.join("  "));
+            }
+        }
+    }
+
+    /// Write a CSV file of all samples + metrics.
+    pub fn write_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "name,median_s,p05_s,p95_s,n,metrics")?;
+        for m in &self.results {
+            let kv: Vec<String> = m.metrics.iter().map(|(k, v)| format!("{k}={v}")).collect();
+            writeln!(
+                f,
+                "{},{},{},{},{},{}",
+                m.name,
+                m.median_s(),
+                m.p05_s(),
+                m.p95_s(),
+                m.samples_s.len(),
+                kv.join(";")
+            )?;
+        }
+        Ok(())
+    }
+}
+
+fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut h = Harness::new("test");
+        h.config.warmup = Duration::from_millis(5);
+        h.config.measure = Duration::from_millis(20);
+        let m = h.bench("noop-ish", || (0..100).sum::<u64>());
+        assert!(m.samples_s.len() >= 10);
+        assert!(m.median_s() >= 0.0);
+    }
+
+    #[test]
+    fn metric_rows_and_lookup() {
+        let mut h = Harness::new("t");
+        h.metric_row("row", vec![("cycles".into(), 123.0)]);
+        assert_eq!(h.results()[0].metric("cycles"), Some(123.0));
+        assert_eq!(h.results()[0].metric("nope"), None);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2e-6).ends_with("µs"));
+        assert!(fmt_time(2e-9).ends_with("ns"));
+    }
+}

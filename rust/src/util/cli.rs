@@ -1,0 +1,211 @@
+//! Tiny declarative CLI flag parser (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+/// Declared option.
+#[derive(Debug, Clone)]
+struct Opt {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_bool: bool,
+}
+
+/// Declarative argument specification + parse result.
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: Vec<Opt>,
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+    about: &'static str,
+}
+
+impl Args {
+    pub fn new(about: &'static str) -> Self {
+        Self { about, ..Default::default() }
+    }
+
+    /// Declare a value option with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: Some(default.to_string()), is_bool: false });
+        self
+    }
+
+    /// Declare a required value option (no default).
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_bool: false });
+        self
+    }
+
+    /// Declare a boolean switch (default false).
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: Some("false".into()), is_bool: true });
+        self
+    }
+
+    /// Parse from an explicit token list. Returns Err(help_or_error_text)
+    /// on `--help` or invalid input.
+    pub fn parse_from<I: IntoIterator<Item = String>>(mut self, argv: I) -> Result<Self, String> {
+        // Seed defaults.
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                self.values.insert(o.name.to_string(), d.clone());
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(self.help_text());
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.help_text()))?
+                    .clone();
+                let value = if opt.is_bool {
+                    inline.unwrap_or_else(|| "true".to_string())
+                } else {
+                    match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("option --{name} requires a value"))?,
+                    }
+                };
+                self.values.insert(name, value);
+            } else {
+                self.positional.push(tok);
+            }
+        }
+        for o in &self.opts {
+            if !self.values.contains_key(o.name) {
+                return Err(format!("missing required option --{}", o.name));
+            }
+        }
+        Ok(self)
+    }
+
+    /// Parse from `std::env::args()` skipping `skip` leading tokens
+    /// (program name + already-consumed subcommands).
+    pub fn parse_env(self, skip: usize) -> Result<Self, String> {
+        self.parse_from(std::env::args().skip(skip))
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{}\n\nOptions:\n", self.about);
+        for o in &self.opts {
+            let d = match (&o.default, o.is_bool) {
+                (_, true) => " (flag)".to_string(),
+                (Some(d), _) => format!(" (default: {d})"),
+                (None, _) => " (required)".to_string(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", o.name, o.help, d));
+        }
+        s
+    }
+
+    // ---------- typed getters ----------
+
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} was not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("option --{name}: expected integer, got `{}`", self.get(name)))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, String> {
+        let raw = self.get(name);
+        let parsed = if let Some(hex) = raw.strip_prefix("0x") {
+            u64::from_str_radix(hex, 16)
+        } else {
+            raw.parse()
+        };
+        parsed.map_err(|_| format!("option --{name}: expected u64, got `{raw}`"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("option --{name}: expected float, got `{}`", self.get(name)))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.get(name) == "true"
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(toks: &[&str]) -> Vec<String> {
+        toks.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = Args::new("t")
+            .opt("ks", "16", "kneading stride")
+            .opt("network", "vgg16", "net")
+            .flag("verbose", "chatty")
+            .parse_from(argv(&["--ks", "32", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.get_usize("ks").unwrap(), 32);
+        assert_eq!(a.get("network"), "vgg16");
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_positional() {
+        let a = Args::new("t")
+            .opt("mode", "fp16", "mode")
+            .parse_from(argv(&["report", "--mode=int8", "fig8"]))
+            .unwrap();
+        assert_eq!(a.get("mode"), "int8");
+        assert_eq!(a.positional(), &["report".to_string(), "fig8".to_string()]);
+    }
+
+    #[test]
+    fn unknown_flag_is_error_and_help_works() {
+        let r = Args::new("t").parse_from(argv(&["--nope"]));
+        assert!(r.is_err());
+        let h = Args::new("about me")
+            .opt("x", "1", "an x")
+            .parse_from(argv(&["--help"]))
+            .unwrap_err();
+        assert!(h.contains("about me") && h.contains("--x"));
+    }
+
+    #[test]
+    fn required_option_enforced() {
+        let r = Args::new("t").req("path", "p").parse_from(argv(&[]));
+        assert!(r.unwrap_err().contains("--path"));
+    }
+
+    #[test]
+    fn hex_u64() {
+        let a = Args::new("t")
+            .opt("seed", "0x7e7215", "seed")
+            .parse_from(argv(&[]))
+            .unwrap();
+        assert_eq!(a.get_u64("seed").unwrap(), 0x7e7215);
+    }
+}

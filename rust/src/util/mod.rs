@@ -1,0 +1,16 @@
+//! In-repo substrates for facilities this offline environment cannot pull
+//! from crates.io: deterministic RNG, JSON, CLI parsing, a micro-benchmark
+//! harness, a scoped thread pool, descriptive statistics, and a small
+//! property-testing runner.
+//!
+//! These are *production code paths* for the library (the simulators and
+//! the coordinator use [`rng`], [`pool`] and [`stats`]; configs and
+//! artifacts use [`json`]), not test-only shims.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

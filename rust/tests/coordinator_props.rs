@@ -1,0 +1,139 @@
+//! Coordinator invariants (DESIGN.md I6): routing/batching preserve the
+//! request→response mapping, respect batch bounds, and starve nothing —
+//! property-tested over random load shapes.
+
+use std::collections::HashSet;
+use std::time::Duration;
+
+use tetris::coordinator::{
+    BatchPolicy, InferBackend, InferRequest, SacBackend, Server, ServerConfig,
+};
+use tetris::model::Tensor;
+use tetris::util::prop::{run_with, PropConfig};
+use tetris::util::rng::Rng;
+
+fn image(rng: &mut Rng) -> Tensor<i32> {
+    let mut t = Tensor::zeros(&[1, 16, 16]);
+    for v in t.data_mut() {
+        *v = rng.range_i64(-400, 400) as i32;
+    }
+    t
+}
+
+/// Every submitted request gets exactly one response with valid fields,
+/// across random batch policies / worker counts / load sizes.
+#[test]
+fn exactly_once_any_policy() {
+    run_with(
+        PropConfig { cases: 12, seed: 0x60 },
+        "exactly-once delivery",
+        |r| {
+            (
+                1 + r.below(16) as usize,       // max_batch
+                1 + r.below(3) as usize,        // workers
+                1 + r.below(40) as usize,       // requests
+                r.below(1500),                  // max_wait µs
+            )
+        },
+        |&(max_batch, workers, n, wait_us)| {
+            let server = Server::start(
+                ServerConfig {
+                    policy: BatchPolicy {
+                        max_batch,
+                        max_wait: Duration::from_micros(wait_us),
+                    },
+                    workers,
+                },
+                |_| SacBackend::synthetic(5),
+            )
+            .map_err(|e| e.to_string())?;
+            let mut rng = Rng::new(42);
+            for id in 0..n as u64 {
+                server.submit(InferRequest::new(id, image(&mut rng))).map_err(|e| e.to_string())?;
+            }
+            let mut seen = HashSet::new();
+            for _ in 0..n {
+                let resp = server.recv().map_err(|e| e.to_string())?;
+                if !seen.insert(resp.id) {
+                    return Err(format!("duplicate response id {}", resp.id));
+                }
+                if resp.id >= n as u64 {
+                    return Err(format!("unknown id {}", resp.id));
+                }
+                if resp.batch_size == 0 || resp.batch_size > max_batch {
+                    return Err(format!("batch size {} out of bounds", resp.batch_size));
+                }
+                if resp.logits.len() != 4 || resp.argmax >= 4 {
+                    return Err("malformed response".into());
+                }
+            }
+            let m = server.shutdown();
+            if m.requests_done != n as u64 {
+                return Err(format!("metrics counted {} != {n}", m.requests_done));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Batching must not change values: server responses equal direct
+/// backend inference for the same images (paired by id).
+#[test]
+fn batching_is_value_transparent() {
+    let server = Server::start(
+        ServerConfig {
+            policy: BatchPolicy { max_batch: 5, max_wait: Duration::from_micros(300) },
+            workers: 3,
+        },
+        |_| SacBackend::synthetic(77),
+    )
+    .unwrap();
+    let mut direct = SacBackend::synthetic(77).unwrap();
+    let mut rng = Rng::new(9);
+    let images: Vec<Tensor<i32>> = (0..31).map(|_| image(&mut rng)).collect();
+    for (id, img) in images.iter().enumerate() {
+        server.submit(InferRequest::new(id as u64, img.clone())).unwrap();
+    }
+    let mut responses: Vec<_> = (0..31).map(|_| server.recv().unwrap()).collect();
+    server.shutdown();
+    responses.sort_by_key(|r| r.id);
+    for r in responses {
+        let mut img = images[r.id as usize].clone();
+        let s = img.shape().to_vec();
+        img.reshape(&[1, s[0], s[1], s[2]]).unwrap();
+        let want = direct.infer_batch(&img).unwrap().remove(0);
+        assert_eq!(r.logits, want, "id {}", r.id);
+    }
+}
+
+/// Metrics stay consistent under concurrent submit/drain.
+#[test]
+fn metrics_consistent_under_concurrency() {
+    let server = Server::start(
+        ServerConfig {
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) },
+            workers: 2,
+        },
+        |_| SacBackend::synthetic(1),
+    )
+    .unwrap();
+    let n = 64u64;
+    std::thread::scope(|scope| {
+        let srv = &server;
+        scope.spawn(move || {
+            let mut rng = Rng::new(1);
+            for id in 0..n {
+                srv.submit(InferRequest::new(id, image(&mut rng))).unwrap();
+            }
+        });
+        let mut got = 0;
+        while got < n {
+            server.recv().unwrap();
+            got += 1;
+        }
+    });
+    let m = server.shutdown();
+    assert_eq!(m.requests_done, n);
+    assert!(m.batches_done >= (n / 8) as u64);
+    assert!(m.latency.count() == n);
+}

@@ -1,0 +1,130 @@
+//! Int8-mode integration: the paper's §III.C.3 precision-tunable path,
+//! exercised end to end on the int8 artifact weights and on synthetic
+//! populations.
+
+use std::path::Path;
+
+use tetris::config::Mode;
+use tetris::kneading::Lane;
+use tetris::model::{read_weight_file, Tensor};
+use tetris::sac::SacUnit;
+use tetris::util::prop::{gen, run_with, PropConfig};
+use tetris::util::rng::Rng;
+
+fn int8_weights() -> Option<tetris::model::LoadedWeights> {
+    let p = Path::new("../artifacts/weights_int8.bin");
+    if !p.exists() {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        return None;
+    }
+    Some(read_weight_file(p).expect("int8 weight file"))
+}
+
+/// Every loaded int8 weight fits the mode and the per-layer frac bits
+/// are sane.
+#[test]
+fn int8_file_fits_mode() {
+    let Some(w) = int8_weights() else { return };
+    assert_eq!(w.mode, Mode::Int8);
+    for layer in &w.layers {
+        assert!(layer.frac_bits <= 7, "{}: frac {}", layer.name, layer.frac_bits);
+        for &q in &layer.weights {
+            assert!(tetris::quant::fits_mode(q, Mode::Int8), "{}: {q}", layer.name);
+        }
+    }
+}
+
+/// SAC ≡ MAC over the *real* int8 trained weights (per-filter lanes).
+#[test]
+fn int8_sac_equals_mac_on_trained_weights() {
+    let Some(w) = int8_weights() else { return };
+    let mut rng = Rng::new(0x18);
+    let mut unit = SacUnit::new(Mode::Int8);
+    for layer in &w.layers {
+        let lane_len = layer.shape[1] * layer.shape[2] * layer.shape[3];
+        for f in 0..layer.shape[0].min(8) {
+            let ws = layer.weights[f * lane_len..(f + 1) * lane_len].to_vec();
+            let acts: Vec<i32> = (0..lane_len).map(|_| gen::activation(&mut rng)).collect();
+            let lane = Lane::new(ws, acts);
+            assert_eq!(
+                unit.process_lane(&lane, 16),
+                lane.mac_reference(),
+                "{} filter {f}",
+                layer.name
+            );
+        }
+    }
+}
+
+/// The full rust int8 pipeline runs and is deterministic; outputs stay
+/// in plausible logit range (no overflow wrap).
+#[test]
+fn int8_pipeline_runs_and_is_deterministic() {
+    let Some(w) = int8_weights() else { return };
+    let mut rng = Rng::new(5);
+    let (img, _) = tetris::coordinator::demo::dataset_image(&mut rng);
+    let mut x = img;
+    let s = x.shape().to_vec();
+    x.reshape(&[1, s[0], s[1], s[2]]).unwrap();
+    let a = tetris::runtime::quantized::forward(&w, &x).unwrap();
+    let b = tetris::runtime::quantized::forward(&w, &x).unwrap();
+    assert_eq!(a, b);
+    assert_eq!(a.shape(), &[1, 4]);
+    for &v in a.data() {
+        assert!(v.unsigned_abs() < 1 << 28, "logit {v} suspiciously large");
+    }
+}
+
+/// Int8 vs fp16 pipelines agree on argmax for dataset images (graceful
+/// degradation claim of §III.C.3).
+#[test]
+fn int8_and_fp16_agree_on_argmax() {
+    let Some(w8) = int8_weights() else { return };
+    let w16 = read_weight_file(Path::new("../artifacts/weights.bin")).unwrap();
+    let mut rng = Rng::new(21);
+    let mut agree = 0;
+    let n = 32;
+    for _ in 0..n {
+        let (img, _) = tetris::coordinator::demo::dataset_image(&mut rng);
+        let mut x = img;
+        let s = x.shape().to_vec();
+        x.reshape(&[1, s[0], s[1], s[2]]).unwrap();
+        let argmax = |t: &Tensor<i32>| {
+            t.data().iter().enumerate().max_by_key(|(_, &v)| v).map(|(i, _)| i).unwrap()
+        };
+        let a8 = argmax(&tetris::runtime::quantized::forward(&w8, &x).unwrap());
+        let a16 = argmax(&tetris::runtime::quantized::forward(&w16, &x).unwrap());
+        agree += (a8 == a16) as usize;
+    }
+    assert!(
+        agree * 100 >= n * 90,
+        "int8/fp16 argmax agreement {agree}/{n} below 90%"
+    );
+}
+
+/// Synthetic int8 populations: SAC == MAC under heavy randomization
+/// (contract independent of artifacts).
+#[test]
+fn int8_sac_mac_property() {
+    run_with(
+        PropConfig { cases: 300, seed: 0x88 },
+        "int8 SAC == MAC",
+        |r| {
+            let len = 1 + r.below(200) as usize;
+            let ks = 2 + r.below(62) as usize;
+            (
+                Lane::random(len, r, |r| gen::weight(r, 8), |r| gen::activation(r)),
+                ks,
+            )
+        },
+        |(lane, ks)| {
+            let mut unit = SacUnit::new(Mode::Int8);
+            let got = unit.process_lane(lane, *ks);
+            if got == lane.mac_reference() {
+                Ok(())
+            } else {
+                Err(format!("{got} != {}", lane.mac_reference()))
+            }
+        },
+    );
+}

@@ -1,0 +1,146 @@
+//! Cross-module property tests of the DESIGN.md invariants I1–I4.
+
+use tetris::config::Mode;
+use tetris::kneading::{knead_group, knead_lane, unknead_group, Lane};
+use tetris::quant::popcount_per_position;
+use tetris::sac::SacUnit;
+use tetris::util::prop::{self, gen, PropConfig};
+use tetris::util::rng::Rng;
+
+fn lane_like_conv(r: &mut Rng, bits: u32) -> Lane {
+    // Conv-lane shapes: in_c·k² for k ∈ {1,3,5,7,11}, small channel counts.
+    let k = *r.choose(&[1usize, 3, 5, 7, 11]);
+    let in_c = 1 + r.below(8) as usize;
+    let len = in_c * k * k;
+    Lane::random(len, r, |r| gen::weight(r, bits), |r| gen::activation(r))
+}
+
+/// I1 — kneading is lossless for conv-shaped lanes at every stride.
+#[test]
+fn i1_kneading_lossless_at_scale() {
+    prop::run_with(
+        PropConfig { cases: 300, seed: 0x11 },
+        "unknead(knead(lane)) == lane",
+        |r| {
+            let ks = 2 + r.below(63) as usize;
+            (lane_like_conv(r, 16), ks)
+        },
+        |(lane, ks)| {
+            let kneaded = knead_lane(lane, *ks, Mode::Fp16);
+            let mut rebuilt = Vec::new();
+            for g in &kneaded.groups {
+                rebuilt.extend(unknead_group(g, Mode::Fp16));
+            }
+            if rebuilt == lane.weights {
+                Ok(())
+            } else {
+                Err("weights not reconstructed".into())
+            }
+        },
+    );
+}
+
+/// I1b — every essential bit appears exactly once across kneaded slots.
+#[test]
+fn i1_every_essential_bit_exactly_once() {
+    prop::run_with(
+        PropConfig { cases: 200, seed: 0x12 },
+        "slot multiset == essential bit multiset",
+        |r| gen::vec_of(r, 1, 64, |r| gen::weight(r, 16)),
+        |ws| {
+            let g = knead_group(ws, Mode::Fp16);
+            let mut seen = vec![0u32; ws.len()];
+            for kw in &g.kneaded {
+                for (b, &slot) in kw.slots().iter().enumerate() {
+                    if slot != tetris::kneading::EMPTY_SLOT {
+                        seen[slot as usize] |= 1 << b;
+                    }
+                }
+            }
+            for (i, &w) in ws.iter().enumerate() {
+                if seen[i] != w.unsigned_abs() & 0xFFFF {
+                    return Err(format!("weight {i} bits {:#x} != seen {:#x}", w, seen[i]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// I2/I3 — kneaded SAC == MAC for conv-shaped lanes, both modes, many KS.
+#[test]
+fn i2_sac_equals_mac_conv_lanes() {
+    for mode in [Mode::Fp16, Mode::Int8] {
+        let bits = mode.weight_bits() as u32;
+        prop::run_with(
+            PropConfig { cases: 200, seed: 0x13 ^ bits as u64 },
+            "SAC == MAC",
+            |r| {
+                let ks = 2 + r.below(31) as usize;
+                (lane_like_conv(r, bits), ks)
+            },
+            |(lane, ks)| {
+                let mut unit = SacUnit::new(mode);
+                let sac = unit.process_lane(lane, *ks);
+                if sac == lane.mac_reference() {
+                    Ok(())
+                } else {
+                    Err(format!("SAC {sac} != MAC {}", lane.mac_reference()))
+                }
+            },
+        );
+    }
+}
+
+/// I4 — kneaded length equals the max per-bit popcount bound, per group;
+/// and kneading never expands a lane.
+#[test]
+fn i4_kneaded_length_bound() {
+    prop::run_with(
+        PropConfig { cases: 300, seed: 0x14 },
+        "kneaded length == Σ max-popcount ≤ source",
+        |r| {
+            let ks = 2 + r.below(31) as usize;
+            (gen::vec_of(r, 1, 256, |r| gen::weight(r, 16)), ks)
+        },
+        |(ws, ks)| {
+            let lane = Lane::new(ws.clone(), vec![0; ws.len()]);
+            let kneaded = knead_lane(&lane, *ks, Mode::Fp16);
+            let expect: usize = ws
+                .chunks(*ks)
+                .map(|c| *popcount_per_position(c, 16).iter().max().unwrap() as usize)
+                .sum();
+            if kneaded.kneaded_len() != expect {
+                return Err(format!("kneaded {} != bound {expect}", kneaded.kneaded_len()));
+            }
+            if kneaded.kneaded_len() > ws.len() {
+                return Err("kneading expanded the lane".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Monotonicity: larger KS never yields more kneaded weights (on the
+/// same lane) when strides nest (ks and 2ks).
+#[test]
+fn nesting_strides_monotone() {
+    prop::run_with(
+        PropConfig { cases: 150, seed: 0x15 },
+        "kneaded(2ks) <= kneaded(ks)",
+        |r| {
+            let ks = 2 + r.below(16) as usize;
+            (gen::vec_of(r, 2, 256, |r| gen::weight(r, 16)), ks)
+        },
+        |(ws, ks)| {
+            let lane = Lane::new(ws.clone(), vec![0; ws.len()]);
+            let a = knead_lane(&lane, *ks, Mode::Fp16).kneaded_len();
+            let b = knead_lane(&lane, 2 * ks, Mode::Fp16).kneaded_len();
+            if b <= a {
+                Ok(())
+            } else {
+                Err(format!("ks={ks}: {a} → 2ks: {b}"))
+            }
+        },
+    );
+}

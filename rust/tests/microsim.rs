@@ -1,0 +1,117 @@
+//! Fine-grained throttle-buffer/pass-mark micro-simulation
+//! cross-validating the analytic Tetris cycle model (sim::tetris) on a
+//! small workload: the event-level cycle count must track the analytic
+//! kneaded-weight count within the modeled overheads.
+
+use tetris::config::Mode;
+use tetris::kneading::{knead_lane, Lane};
+use tetris::model::weights::{profile_with, DensityCalibration};
+use tetris::sim::throttle::{Entry, PassDetector, ThrottleBuffer};
+use tetris::util::rng::Rng;
+
+/// Event-level simulation of one SAC unit: `n_splitters` streams with
+/// refill bandwidth, pass-mark synchronization, one kneaded weight per
+/// splitter per cycle. Returns total cycles.
+fn microsim(lanes: &[Lane], ks: usize, n_splitters: usize, bandwidth: usize) -> u64 {
+    let mut buffers: Vec<ThrottleBuffer> =
+        (0..n_splitters).map(|_| ThrottleBuffer::new(64, 4)).collect();
+    // Distribute lanes round-robin across splitters.
+    let mut lanes_per_splitter = vec![0usize; n_splitters];
+    for (i, lane) in lanes.iter().enumerate() {
+        let k = knead_lane(lane, ks, Mode::Fp16);
+        buffers[i % n_splitters].push_lane(&k);
+        lanes_per_splitter[i % n_splitters] += 1;
+    }
+    let mut detector = PassDetector::new(n_splitters);
+    let mut done = vec![false; n_splitters];
+    let mut cycle: u64 = 0;
+    let mut drains = 0u64;
+    let mut rr = 0usize; // round-robin refill pointer (shared eDRAM port)
+    loop {
+        // Refill phase: `bandwidth` entries per cycle total, shared
+        // across all splitter streams (the eDRAM port model).
+        for _ in 0..bandwidth {
+            buffers[rr % n_splitters].refill(cycle, 1);
+            rr += 1;
+        }
+        // Each splitter consumes one entry per cycle.
+        for (i, b) in buffers.iter_mut().enumerate() {
+            if done[i] {
+                detector.mark(i);
+                continue;
+            }
+            match b.pop(cycle) {
+                Some(Entry::Kneaded) => {}
+                Some(Entry::PassMark) => {
+                    detector.mark(i);
+                    if b.pending() == 0 {
+                        done[i] = true;
+                    }
+                }
+                None => {
+                    if b.pending() == 0 {
+                        done[i] = true;
+                        detector.mark(i);
+                    }
+                }
+            }
+        }
+        if detector.all_passed() {
+            drains += 1;
+        }
+        cycle += 1;
+        if done.iter().all(|&d| d) {
+            break;
+        }
+        assert!(cycle < 10_000_000, "microsim runaway");
+    }
+    let _ = drains;
+    cycle
+}
+
+#[test]
+fn microsim_tracks_analytic_cycles() {
+    let profile = profile_with("alexnet", Mode::Fp16, DensityCalibration::Fig2).unwrap();
+    let mut rng = Rng::new(77);
+    let n_splitters = 16;
+    let lanes: Vec<Lane> = (0..n_splitters * 4)
+        .map(|_| {
+            let ws = profile.generate(128, &mut rng);
+            Lane::new(ws, vec![1; 128])
+        })
+        .collect();
+    // Analytic bound: total kneaded weights / splitters.
+    let total_kneaded: usize = lanes
+        .iter()
+        .map(|l| knead_lane(l, 16, Mode::Fp16).kneaded_len())
+        .sum();
+    let analytic = (total_kneaded as f64 / n_splitters as f64).ceil() as u64;
+
+    // Generous bandwidth → compute-bound: event sim within 20% + pass
+    // overhead of the analytic count.
+    let cycles = microsim(&lanes, 16, n_splitters, 64);
+    assert!(
+        cycles >= analytic,
+        "event sim {cycles} can't beat the analytic bound {analytic}"
+    );
+    let overhead = cycles as f64 / analytic as f64;
+    assert!(
+        overhead < 1.25,
+        "event sim {cycles} vs analytic {analytic}: overhead {overhead:.2} too large"
+    );
+}
+
+#[test]
+fn starved_bandwidth_stalls_microsim() {
+    let profile = profile_with("vgg16", Mode::Fp16, DensityCalibration::Fig2).unwrap();
+    let mut rng = Rng::new(3);
+    let lanes: Vec<Lane> = (0..16)
+        .map(|_| Lane::new(profile.generate(64, &mut rng), vec![1; 64]))
+        .collect();
+    let fast = microsim(&lanes, 16, 16, 64);
+    let slow = microsim(&lanes, 16, 16, 1); // 1 entry/cycle for 16 splitters
+    assert!(
+        slow > fast * 3,
+        "bandwidth starvation must dominate: fast {fast}, slow {slow}"
+    );
+}

@@ -1,0 +1,123 @@
+//! Paper-zone checks: the quantitative claims of §IV must land in the
+//! right zone with the default calibration (see EXPERIMENTS.md for the
+//! measured values and the documented paper inconsistencies).
+
+use tetris::config::{AccelConfig, CalibConfig, Mode};
+use tetris::energy::{chip_area, edp, network_energy};
+use tetris::kneading::stats::KneadStats;
+use tetris::model::weights::{profile_with, DensityCalibration};
+use tetris::model::zoo;
+use tetris::report::figures::design_points;
+use tetris::sim::NetworkSim;
+use tetris::util::rng::Rng;
+
+fn geomeans(seed: u64) -> (f64, f64, f64, f64, f64, f64) {
+    let calib = CalibConfig::default();
+    let nets = zoo::all();
+    let mut sp = (0.0, 0.0, 0.0); // speedups: pra, fp16, int8
+    let mut ef = (0.0, 0.0, 0.0); // edp efficiency
+    for net in &nets {
+        let p = design_points(net, &calib, seed).unwrap();
+        let t = |s: &NetworkSim| s.time_s();
+        let e = |s: &NetworkSim| edp(network_energy(s, &calib).total_j(), s.time_s());
+        sp.0 += (t(&p.dadn) / t(&p.pra)).ln();
+        sp.1 += (t(&p.dadn) / t(&p.tetris_fp16)).ln();
+        sp.2 += (t(&p.dadn) / t(&p.tetris_int8)).ln();
+        ef.0 += (e(&p.dadn) / e(&p.pra)).ln();
+        ef.1 += (e(&p.dadn) / e(&p.tetris_fp16)).ln();
+        ef.2 += (e(&p.dadn) / e(&p.tetris_int8)).ln();
+    }
+    let n = nets.len() as f64;
+    (
+        (sp.0 / n).exp(),
+        (sp.1 / n).exp(),
+        (sp.2 / n).exp(),
+        (ef.0 / n).exp(),
+        (ef.1 / n).exp(),
+        (ef.2 / n).exp(),
+    )
+}
+
+/// Fig 8: paper 1.15 / 1.30 / 1.50.
+#[test]
+fn fig8_speedup_zones() {
+    let (pra, fp16, int8, _, _, _) = geomeans(42);
+    assert!((1.05..1.30).contains(&pra), "PRA speedup {pra} (paper 1.15)");
+    assert!((1.20..1.45).contains(&fp16), "fp16 speedup {fp16} (paper 1.30)");
+    assert!((1.35..1.65).contains(&int8), "int8 speedup {int8} (paper 1.50)");
+    assert!(int8 > fp16 && fp16 > pra, "ordering must hold");
+}
+
+/// Fig 10 shape: Tetris better than DaDN, PRA worse; int8 best.
+#[test]
+fn fig10_edp_zones() {
+    let (_, _, _, pra, fp16, int8) = geomeans(42);
+    assert!(pra < 0.7, "PRA efficiency {pra} must be well below 1 (paper 0.35)");
+    assert!(fp16 > 1.1, "fp16 efficiency {fp16} must beat DaDN (paper 1.24)");
+    assert!(int8 > fp16, "int8 {int8} must beat fp16 {fp16} (paper 1.46 vs 1.24)");
+}
+
+/// Fig 11 anchors: AlexNet fp16 ≈ 0.75 @ KS=10 → ≈ 0.64 @ KS=32;
+/// int8 ≈ 0.49 (relative to the fp16 unkneaded base), nearly flat.
+#[test]
+fn fig11_anchor_zones() {
+    let mut rng = Rng::new(42);
+    let p16 = profile_with("alexnet", Mode::Fp16, DensityCalibration::Fig2).unwrap();
+    let ws16 = p16.generate(400_000, &mut rng);
+    let tf = |ks: usize| KneadStats::measure(&ws16, ks, Mode::Fp16).time_fraction();
+    let (t10, t32) = (tf(10), tf(32));
+    assert!((0.70..0.85).contains(&t10), "fp16 KS=10: {t10} (paper 0.751)");
+    assert!((0.60..0.75).contains(&t32), "fp16 KS=32: {t32} (paper 0.642)");
+    assert!(t32 < t10, "monotone in KS");
+
+    let p8 = profile_with("alexnet", Mode::Int8, DensityCalibration::Fig2).unwrap();
+    let ws8 = p8.generate(400_000, &mut rng);
+    for ks in [10, 32] {
+        let t = KneadStats::measure(&ws8, ks, Mode::Int8).time_fraction() / 2.0;
+        assert!((0.42..0.52).contains(&t), "int8 KS={ks}: {t} (paper ≈0.49)");
+    }
+}
+
+/// Table 2 anchors: totals within 1% of the paper.
+#[test]
+fn table2_area_anchors() {
+    let cfg = AccelConfig::default();
+    let calib = CalibConfig::default();
+    for (design, paper) in [("dadn", 79.36), ("pra", 153.65), ("tetris", 89.76)] {
+        let got = chip_area(design, &cfg, &calib).unwrap().total_mm2();
+        assert!(
+            (got - paper).abs() / paper < 0.01,
+            "{design}: {got} vs paper {paper}"
+        );
+    }
+}
+
+/// Table 1 anchors: geomean zero bits ≈ 68.9%.
+#[test]
+fn table1_geomean_anchor() {
+    let rows = tetris::analysis::table1(42).unwrap();
+    let gm = tetris::analysis::table1_geomean(&rows);
+    assert!((gm.zero_bits_pct - 68.88).abs() < 2.0, "{}", gm.zero_bits_pct);
+}
+
+/// Fig 1 anchor: multiplier 5–25% slower than the 16-operand adder
+/// (paper: 12.3%).
+#[test]
+fn fig1_overhead_zone() {
+    let (adders, mult) = tetris::latency::fig1_series(16);
+    let overhead = mult / adders.last().unwrap().1 - 1.0;
+    assert!((0.05..0.25).contains(&overhead), "overhead {overhead}");
+}
+
+/// §IV.B power anchors: Tetris ~1.08× DaDN, PRA ~3.37×.
+#[test]
+fn power_ratio_zones() {
+    let calib = CalibConfig::default();
+    let net = zoo::vgg16();
+    let p = design_points(&net, &calib, 42).unwrap();
+    let power = |s: &NetworkSim| network_energy(s, &calib).total_j() / s.time_s();
+    let tetris_rel = power(&p.tetris_fp16) / power(&p.dadn);
+    let pra_rel = power(&p.pra) / power(&p.dadn);
+    assert!((0.95..1.45).contains(&tetris_rel), "tetris power {tetris_rel} (paper 1.08)");
+    assert!((2.2..4.5).contains(&pra_rel), "pra power {pra_rel} (paper 3.37)");
+}

@@ -1,0 +1,113 @@
+//! Artifact-dependent integration tests: PJRT round trip, golden
+//! validation, cross-language bit-exactness, serving on trained weights.
+//!
+//! These need `make artifacts` to have run (the Makefile's `test`
+//! target guarantees it). When artifacts are absent (bare `cargo test`
+//! in a fresh clone) they skip with a notice rather than fail.
+
+use std::path::Path;
+
+use tetris::runtime::{ArtifactDir, Engine};
+
+fn artifacts() -> Option<ArtifactDir> {
+    let root = Path::new("../artifacts");
+    match ArtifactDir::open(root) {
+        Ok(a) => Some(a),
+        Err(_) => {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn golden_validation_passes() {
+    let Some(dir) = artifacts() else { return };
+    let report = tetris::runtime::golden::validate(&dir).expect("validation");
+    assert!(report.golden_max_abs_err < 1e-3);
+    assert!(report.sac_kernel_exact);
+    assert!(report.quantized_exact);
+}
+
+#[test]
+fn hlo_round_trip_is_deterministic() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::cpu().expect("pjrt");
+    let model = engine.load_hlo_text(&dir.path("golden_cnn.hlo.txt")).expect("load");
+    let input = dir.read_f32("golden_input.f32").unwrap();
+    let shape = dir.shape("golden", "input_shape").unwrap();
+    let a = model.run_f32(&[(&input, &shape)]).unwrap();
+    let b = model.run_f32(&[(&input, &shape)]).unwrap();
+    assert_eq!(a, b, "PJRT execution must be deterministic");
+}
+
+#[test]
+fn weight_file_matches_zoo_shapes() {
+    let Some(dir) = artifacts() else { return };
+    let w = dir.load_weights().expect("weights");
+    let net = tetris::model::zoo::tiny_cnn();
+    for layer in &net.layers {
+        let ll = w.layer(&layer.name).expect("layer present");
+        assert_eq!(ll.shape, [layer.out_c, layer.in_c, layer.k, layer.k], "{}", layer.name);
+    }
+    assert!(w.layer("fc").is_some());
+    // int8 file parses too and has the same layer set.
+    let w8 = tetris::model::read_weight_file(&dir.path("weights_int8.bin")).unwrap();
+    assert_eq!(w8.layers.len(), w.layers.len());
+    assert_eq!(w8.mode, tetris::config::Mode::Int8);
+}
+
+#[test]
+fn sac_kernel_rejects_wrong_shape_inputs() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::cpu().expect("pjrt");
+    let sac = engine.load_hlo_text(&dir.path("sac_matmul.hlo.txt")).expect("load");
+    // Wrong input shape must error, not crash.
+    let bad = tetris::runtime::pjrt::literal_i32(&[0; 4], &[2, 2]).unwrap();
+    let planes = {
+        let p = dir.read_i8("sac_demo_planes.i8").unwrap();
+        let shape = dir.shape("sac_demo", "planes_shape").unwrap();
+        tetris::runtime::pjrt::literal_i8(&p, &shape).unwrap()
+    };
+    assert!(sac.run(&[bad, planes]).is_err());
+}
+
+#[test]
+fn serving_on_trained_weights_matches_direct_inference() {
+    let Some(dir) = artifacts() else { return };
+    use std::time::Duration;
+    use tetris::coordinator::*;
+    use tetris::model::Tensor;
+
+    let weights = dir.load_weights().unwrap();
+    let mut direct = SacBackend::new(weights).unwrap();
+    let server = Server::start(
+        ServerConfig {
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            workers: 2,
+        },
+        move |_| {
+            SacBackend::new(
+                tetris::model::read_weight_file(Path::new("../artifacts/weights.bin")).unwrap(),
+            )
+        },
+    )
+    .unwrap();
+    let mut rng = tetris::util::rng::Rng::new(5);
+    let mut images = Vec::new();
+    for id in 0..10u64 {
+        let (img, _) = demo::dataset_image(&mut rng);
+        images.push(img.clone());
+        server.submit(InferRequest::new(id, img)).unwrap();
+    }
+    let mut responses: Vec<_> = (0..10).map(|_| server.recv().unwrap()).collect();
+    responses.sort_by_key(|r| r.id);
+    server.shutdown();
+    for r in responses {
+        let mut img = images[r.id as usize].clone();
+        let s = img.shape().to_vec();
+        img.reshape(&[1, s[0], s[1], s[2]]).unwrap();
+        let want = direct.infer_batch(&img).unwrap().remove(0);
+        assert_eq!(r.logits, want, "request {}", r.id);
+    }
+}

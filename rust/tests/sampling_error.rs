@@ -1,0 +1,60 @@
+//! Filter-sampling error bound for the timing models (referenced from
+//! `sim/sample.rs`): capping wide layers at 64 sampled filters must not
+//! move the mean kneaded-lane length by more than ~1%.
+
+use tetris::config::Mode;
+use tetris::model::weights::{profile_with, DensityCalibration};
+use tetris::model::zoo;
+use tetris::sim::tetris::measure_kneading;
+use tetris::sim::LayerSample;
+use tetris::util::rng::Rng;
+
+#[test]
+fn filter_cap_error_below_one_percent() {
+    // VGG-16 conv5_1: 512 filters of lane length 4608 — the widest
+    // sampled-vs-full gap in the zoo.
+    let layer = zoo::vgg16().layer("conv5_1").unwrap().clone();
+    let profile = profile_with("vgg16", Mode::Fp16, DensityCalibration::Fig2).unwrap();
+    let mut rng = Rng::new(1234);
+
+    let full: Vec<Vec<i32>> = (0..layer.out_c)
+        .map(|_| profile.generate(layer.lane_len(), &mut rng))
+        .collect();
+    let full_sample = LayerSample {
+        filter_lanes: full.clone(),
+        total_filters: layer.out_c,
+        mode: Mode::Fp16,
+    };
+    let capped_sample = LayerSample {
+        filter_lanes: full[..64].to_vec(),
+        total_filters: layer.out_c,
+        mode: Mode::Fp16,
+    };
+    let m_full = measure_kneading(&full_sample, 16);
+    let m_capped = measure_kneading(&capped_sample, 16);
+    let rel = (m_full.mean_kneaded_per_lane - m_capped.mean_kneaded_per_lane).abs()
+        / m_full.mean_kneaded_per_lane;
+    assert!(
+        rel < 0.01,
+        "sampling error {rel:.4} (full {} vs capped {})",
+        m_full.mean_kneaded_per_lane,
+        m_capped.mean_kneaded_per_lane
+    );
+}
+
+#[test]
+fn seed_to_seed_variation_is_small() {
+    let layer = zoo::alexnet().layer("conv3").unwrap().clone();
+    let profile = profile_with("alexnet", Mode::Fp16, DensityCalibration::Fig2).unwrap();
+    let mut means = Vec::new();
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(seed);
+        let lanes: Vec<Vec<i32>> =
+            (0..64).map(|_| profile.generate(layer.lane_len(), &mut rng)).collect();
+        let s = LayerSample { filter_lanes: lanes, total_filters: layer.out_c, mode: Mode::Fp16 };
+        means.push(measure_kneading(&s, 16).mean_kneaded_per_lane);
+    }
+    let mean = means.iter().sum::<f64>() / means.len() as f64;
+    let spread = means.iter().map(|m| (m - mean).abs()).fold(0.0, f64::max) / mean;
+    assert!(spread < 0.01, "seed spread {spread:.4}");
+}
