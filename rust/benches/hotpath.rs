@@ -11,8 +11,10 @@ use std::time::Duration;
 use tetris::config::Mode;
 use tetris::coordinator::{BatchPolicy, InferRequest, SacBackend, Server, ServerConfig};
 use tetris::kneading::{knead_group, knead_lane, Lane};
-use tetris::model::weights::{profile_with, DensityCalibration};
-use tetris::model::Tensor;
+use tetris::model::weights::{profile_with, synthetic_loaded, DensityCalibration};
+use tetris::model::{zoo, Tensor};
+use tetris::plan::CompiledNetwork;
+use tetris::runtime::quantized;
 use tetris::sac::SacUnit;
 use tetris::util::bench::Harness;
 use tetris::util::rng::Rng;
@@ -73,6 +75,73 @@ fn main() {
         }
         server.shutdown().requests_done
     });
+
+    // 5. Compile-once plan vs the legacy re-knead-per-call scalar path
+    //    (ISSUE 1 acceptance: ≥2× on a batch of ≥8 images). Same
+    //    weights, same images, same logits — only the execution
+    //    strategy differs: the plan kneads every lane once at build and
+    //    fans the conv hot loop over (image, row) stripes, while the
+    //    legacy path re-kneads per call on one thread.
+    let w = SacBackend::synthetic_weights(3).unwrap();
+    let plan = quantized::compile_tiny_cnn(&w).unwrap();
+    let mut batch8 = Tensor::zeros(&[8, 1, 16, 16]);
+    for (i, v) in batch8.data_mut().iter_mut().enumerate() {
+        *v = (i as i32 % 509) - 250;
+    }
+    assert_eq!(
+        plan.execute(&batch8).unwrap(),
+        quantized::forward_scalar(&w, &batch8).unwrap(),
+        "plan and legacy paths must agree before being compared on speed"
+    );
+    h.bench("plan/execute-batch8", || plan.execute(&batch8).unwrap().len());
+    h.bench("legacy/reknead-scalar-batch8", || {
+        quantized::forward_scalar(&w, &batch8).unwrap().len()
+    });
+    h.bench("plan/compile-tiny-cnn", || {
+        quantized::compile_tiny_cnn(&w).unwrap().kneads_at_build
+    });
+    let plan_median = h
+        .results()
+        .iter()
+        .find(|m| m.name == "plan/execute-batch8")
+        .map(|m| m.median_s())
+        .unwrap();
+    let legacy_median = h
+        .results()
+        .iter()
+        .find(|m| m.name == "legacy/reknead-scalar-batch8")
+        .map(|m| m.median_s())
+        .unwrap();
+    h.metric_row(
+        "plan/speedup-vs-reknead-batch8",
+        vec![
+            ("speedup_x".into(), legacy_median / plan_median),
+            ("plan_ms".into(), plan_median * 1e3),
+            ("legacy_ms".into(), legacy_median * 1e3),
+        ],
+    );
+
+    // 6. A non-tiny zoo topology through the plan executor: VGG-16
+    //    block 3, channels ÷8, at 16×16 — compile once, execute many.
+    let block = zoo::vgg16_block(3).unwrap().scaled(8, 16);
+    let bw = synthetic_loaded(&block, Mode::Fp16, 12, "vgg16", DensityCalibration::Fig2, 11)
+        .unwrap();
+    let bplan = CompiledNetwork::compile(&block, &bw, 16, Mode::Fp16).unwrap();
+    let mut bimg = Tensor::zeros(&[1, block.layers[0].in_c, 16, 16]);
+    for (i, v) in bimg.data_mut().iter_mut().enumerate() {
+        *v = (i as i32 % 401) - 200;
+    }
+    h.bench("plan/compile-vgg16-block3-div8", || {
+        CompiledNetwork::compile(&block, &bw, 16, Mode::Fp16).unwrap().kneads_at_build
+    });
+    h.bench("plan/execute-vgg16-block3-div8", || bplan.execute(&bimg).unwrap().len());
+    h.metric_row(
+        "plan/vgg16-block3-div8-footprint",
+        vec![
+            ("source_weights".into(), bplan.source_weights() as f64),
+            ("kneaded_weights".into(), bplan.kneaded_weights() as f64),
+        ],
+    );
 
     h.report();
     if let Ok(dir) = std::env::var("TETRIS_BENCH_CSV") {

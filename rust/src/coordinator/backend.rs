@@ -2,7 +2,12 @@
 //!
 //! * [`SacBackend`] — the pure-rust kneaded-SAC integer pipeline over
 //!   quantized weights (from `artifacts/weights.bin` or synthetic).
-//!   `Send`, so the server can shard it across worker threads.
+//!   Construction compiles the weights into a
+//!   [`plan::CompiledNetwork`](crate::plan::CompiledNetwork) — every
+//!   lane is kneaded exactly once, up front — so the per-batch serving
+//!   path performs **zero** kneading (pinned by
+//!   `rust/tests/plan_zero_knead.rs`). `Send`, so the server can shard
+//!   it across worker threads.
 //! * `PjrtBackend` (constructed per-thread via
 //!   [`super::server::Server::serve_with_pjrt`]) — the AOT XLA golden
 //!   model; PJRT handles are thread-pinned.
@@ -11,10 +16,11 @@
 //! serving metrics reflect the accelerator, not the host.
 
 use crate::config::{AccelConfig, CalibConfig};
-use crate::model::{LoadedWeights, Tensor};
 use crate::model::zoo;
+use crate::model::{LoadedWeights, Tensor};
+use crate::plan::CompiledNetwork;
 use crate::runtime::quantized;
-use crate::sim::{simulate_network_with_samples, sample::samples_from_loaded, tetris::TetrisSim};
+use crate::sim::{sample::samples_from_loaded, simulate_network_with_samples, tetris::TetrisSim};
 
 /// A batch-inference backend.
 pub trait InferBackend {
@@ -27,15 +33,17 @@ pub trait InferBackend {
     fn name(&self) -> &'static str;
 }
 
-/// Pure-rust kneaded-SAC backend.
+/// Pure-rust kneaded-SAC backend over a compile-once execution plan.
 pub struct SacBackend {
-    weights: LoadedWeights,
+    /// Pre-kneaded network — built once, reused for every batch.
+    plan: CompiledNetwork,
     /// Pre-simulated Tetris cycles for ONE image of the tiny CNN.
     cycles_per_image: u64,
 }
 
 impl SacBackend {
-    /// Build from loaded weights (tiny-CNN shaped).
+    /// Build from loaded weights (tiny-CNN shaped). Kneading happens
+    /// here, once; `infer_batch` only streams the kneaded lanes.
     pub fn new(weights: LoadedWeights) -> crate::Result<Self> {
         let net = zoo::tiny_cnn();
         let cfg = AccelConfig::default();
@@ -50,11 +58,18 @@ impl SacBackend {
         let conv_weights = LoadedWeights { mode: weights.mode, layers: conv_only };
         let samples = samples_from_loaded(&net, &conv_weights)?;
         let sim = simulate_network_with_samples(&TetrisSim, &net, &samples, &cfg, &calib);
-        Ok(Self { weights, cycles_per_image: sim.total_cycles() })
+        let plan = quantized::compile_tiny_cnn(&weights)?;
+        Ok(Self { plan, cycles_per_image: sim.total_cycles() })
     }
 
     /// Synthetic-weight backend (no artifacts needed — demos/tests).
     pub fn synthetic(seed: u64) -> crate::Result<Self> {
+        Self::new(Self::synthetic_weights(seed)?)
+    }
+
+    /// Synthetic tiny-CNN weight set (conv1..conv3 + fc) calibrated to
+    /// the Fig 2 bit profile — shared by demos, benches and tests.
+    pub fn synthetic_weights(seed: u64) -> crate::Result<LoadedWeights> {
         use crate::config::Mode;
         use crate::model::weights::{profile_with, DensityCalibration};
         use crate::model::LoadedLayer;
@@ -77,13 +92,20 @@ impl SacBackend {
             frac_bits: 15,
             weights: profile.generate(64, &mut rng),
         });
-        Self::new(LoadedWeights { mode: Mode::Fp16, layers })
+        Ok(LoadedWeights { mode: Mode::Fp16, layers })
+    }
+
+    /// The backend's compiled plan (introspection: kneaded footprint,
+    /// op graph).
+    pub fn plan(&self) -> &CompiledNetwork {
+        &self.plan
     }
 }
 
 impl InferBackend for SacBackend {
     fn infer_batch(&mut self, images: &Tensor<i32>) -> crate::Result<Vec<Vec<i32>>> {
-        let logits = quantized::forward(&self.weights, images)?;
+        // Zero kneading here: the plan streams lanes kneaded at build.
+        let logits = self.plan.execute(images)?;
         let [n, c] = match *logits.shape() {
             [n, c] => [n, c],
             _ => return Err(crate::Error::Shape("logits must be 2-D".into())),
@@ -124,5 +146,29 @@ mod tests {
             *v = (i as i32 % 61) - 30;
         }
         assert_eq!(a.infer_batch(&img).unwrap(), b.infer_batch(&img).unwrap());
+    }
+
+    #[test]
+    fn backend_matches_legacy_scalar_pipeline() {
+        // The plan-backed serving path must be bit-identical to the
+        // seed's re-knead-per-call forward (invariant I5).
+        let w = SacBackend::synthetic_weights(11).unwrap();
+        let mut backend = SacBackend::new(w.clone()).unwrap();
+        let mut img = Tensor::zeros(&[2, 1, 16, 16]);
+        for (i, v) in img.data_mut().iter_mut().enumerate() {
+            *v = (i as i32 % 251) - 125;
+        }
+        let got = backend.infer_batch(&img).unwrap();
+        let want = quantized::forward_scalar(&w, &img).unwrap();
+        for (i, row) in got.iter().enumerate() {
+            assert_eq!(row[..], want.data()[i * 4..(i + 1) * 4]);
+        }
+    }
+
+    #[test]
+    fn plan_is_exposed_for_introspection() {
+        let b = SacBackend::synthetic(2).unwrap();
+        assert_eq!(b.plan().kneads_at_build, 8 + 16 + 16 + 4);
+        assert!(b.plan().kneaded_weights() > 0);
     }
 }

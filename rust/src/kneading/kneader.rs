@@ -1,9 +1,24 @@
 //! The kneading algorithm (Fig 3) and its exact inverse.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use super::format::{KneadedGroup, KneadedWeight, EMPTY_SLOT};
 use super::lane::Lane;
 use crate::config::Mode;
 use crate::quant::QWeight;
+
+/// Process-wide count of [`knead_group`] invocations.
+///
+/// Observability hook for the compile/execute split (DESIGN.md §I5):
+/// kneading is a *compile-time* step, so the serving hot path must not
+/// move this counter after a `plan::CompiledNetwork` is built — see
+/// `rust/tests/plan_zero_knead.rs`.
+static KNEAD_GROUP_CALLS: AtomicU64 = AtomicU64::new(0);
+
+/// Total [`knead_group`] calls made by this process so far.
+pub fn knead_call_count() -> u64 {
+    KNEAD_GROUP_CALLS.load(Ordering::Relaxed)
+}
 
 /// A fully kneaded lane: one [`KneadedGroup`] per KS-sized chunk of the
 /// source lane, in order. Groups whose weights are all zero knead to
@@ -44,6 +59,7 @@ impl KneadedLane {
 /// `k`-th entry of every queue. The group kneads to
 /// `max_b queue_len(b)` kneaded weights — the per-bit popcount bound.
 pub fn knead_group(weights: &[QWeight], mode: Mode) -> KneadedGroup {
+    KNEAD_GROUP_CALLS.fetch_add(1, Ordering::Relaxed);
     let bits = mode.weight_bits();
     debug_assert!(weights.len() <= 256, "KS > 256 unsupported (u8 pointers)");
     debug_assert!(weights.iter().all(|&w| crate::quant::fits_mode(w, mode)));

@@ -15,5 +15,5 @@ mod lane;
 pub mod stats;
 
 pub use format::{KneadedGroup, KneadedWeight, EMPTY_SLOT};
-pub use kneader::{knead_group, knead_lane, unknead_group, KneadedLane};
+pub use kneader::{knead_call_count, knead_group, knead_lane, unknead_group, KneadedLane};
 pub use lane::Lane;

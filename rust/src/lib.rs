@@ -16,12 +16,17 @@
 //!   tensors, synthetic + trained weight sources.
 //! * [`kneading`] — the paper's §III.B weight-kneading compiler.
 //! * [`sac`] — the paper's §III.C SAC functional units (bit-exact).
+//! * [`plan`] — compile-once execution plans: a [`plan::CompiledNetwork`]
+//!   kneads every layer's filter lanes exactly once and records a
+//!   generic op graph derived from `model::zoo` topology; its executor
+//!   parallelizes the conv hot loop (see DESIGN.md §Compile/execute).
 //! * [`sim`] — cycle-level simulators: Tetris, DaDianNao, PRA.
 //! * [`energy`] — 65nm component energy/area tables, power + EDP model.
 //! * [`latency`] — gate-delay model behind the paper's Figure 1.
 //! * [`analysis`] — bit-level statistics (Table 1, Figure 2).
 //! * [`coordinator`] — serving engine (router, batcher, workers).
-//! * [`runtime`] — PJRT/XLA runtime that loads `artifacts/*.hlo.txt`.
+//! * [`runtime`] — PJRT/XLA runtime that loads `artifacts/*.hlo.txt`
+//!   (behind the `xla` feature) plus the quantized SAC pipeline.
 //! * [`report`] — regenerates every table and figure of the paper.
 //! * [`util`] — in-repo substrates (RNG, JSON, CLI, bench harness,
 //!   thread pool, property testing) — this environment is offline, so
@@ -34,6 +39,7 @@ pub mod energy;
 pub mod kneading;
 pub mod latency;
 pub mod model;
+pub mod plan;
 pub mod quant;
 pub mod report;
 pub mod runtime;
@@ -44,23 +50,47 @@ pub mod util;
 /// Crate-wide result alias.
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
-/// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Crate-wide error type (hand-rolled — `thiserror` is unavailable
+/// offline; the `Display` strings match the previous derive output).
+#[derive(Debug)]
 pub enum Error {
-    #[error("I/O error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("XLA error: {0}")]
+    Io(std::io::Error),
     Xla(String),
-    #[error("config error: {0}")]
     Config(String),
-    #[error("artifact error: {0}")]
     Artifact(String),
-    #[error("coordinator error: {0}")]
     Coordinator(String),
-    #[error("shape error: {0}")]
     Shape(String),
 }
 
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "I/O error: {e}"),
+            Error::Xla(msg) => write!(f, "XLA error: {msg}"),
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Artifact(msg) => write!(f, "artifact error: {msg}"),
+            Error::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
+            Error::Shape(msg) => write!(f, "shape error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
@@ -70,5 +100,21 @@ impl From<xla::Error> for Error {
 impl From<crate::util::json::ParseError> for Error {
     fn from(e: crate::util::json::ParseError) -> Self {
         Error::Config(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_display_matches_previous_derive() {
+        assert_eq!(Error::Config("x".into()).to_string(), "config error: x");
+        assert_eq!(Error::Shape("bad".into()).to_string(), "shape error: bad");
+        let io = Error::from(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        assert!(io.to_string().starts_with("I/O error: "));
+        use std::error::Error as _;
+        assert!(io.source().is_some());
+        assert!(Error::Xla("x".into()).source().is_none());
     }
 }

@@ -71,6 +71,50 @@ impl Network {
     pub fn layer(&self, name: &str) -> Option<&ConvLayer> {
         self.layers.iter().find(|l| l.name == name)
     }
+
+    /// Shrunk copy for tests/benches: divide every channel count by
+    /// `channel_div` (floor, min 1 — the chain stays consistent because
+    /// all counts scale by the same divisor) and rescale spatial sizes
+    /// so the first layer's input becomes `in_hw` (later layers keep
+    /// their pooling ratio to the first). Kernel/stride/pad unchanged.
+    ///
+    /// Panics if `in_hw` is too small to keep the pooling schedule:
+    /// scaling must not collapse two layers with *different* original
+    /// spatial sizes onto the same value, or the derived plan graph
+    /// would silently lose a pool stage.
+    pub fn scaled(&self, channel_div: usize, in_hw: usize) -> Network {
+        assert!(channel_div >= 1 && in_hw >= 1);
+        let base_hw = match self.layers.first() {
+            Some(l) => l.in_hw,
+            None => return self.clone(),
+        };
+        let scale = |hw: usize| (hw * in_hw / base_hw).max(1);
+        for pair in self.layers.windows(2) {
+            assert!(
+                pair[0].in_hw == pair[1].in_hw || scale(pair[0].in_hw) != scale(pair[1].in_hw),
+                "{}: in_hw={in_hw} collapses the {}→{} pool stage ({}→{}); pick a larger in_hw",
+                self.name,
+                pair[0].name,
+                pair[1].name,
+                pair[0].in_hw,
+                pair[1].in_hw,
+            );
+        }
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| ConvLayer {
+                name: l.name.clone(),
+                in_c: (l.in_c / channel_div).max(1),
+                out_c: (l.out_c / channel_div).max(1),
+                k: l.k,
+                stride: l.stride,
+                pad: l.pad,
+                in_hw: scale(l.in_hw),
+            })
+            .collect();
+        Network { name: format!("{}_div{channel_div}_hw{in_hw}", self.name), layers }
+    }
 }
 
 #[cfg(test)]
@@ -107,6 +151,39 @@ mod tests {
             in_hw: 227,
         };
         assert_eq!(l.out_hw(), 55);
+    }
+
+    #[test]
+    fn scaled_keeps_chain_and_pool_ratios() {
+        let net = Network {
+            name: "two".into(),
+            layers: vec![
+                ConvLayer { name: "a".into(), in_c: 16, out_c: 32, k: 3, stride: 1, pad: 1, in_hw: 32 },
+                ConvLayer { name: "b".into(), in_c: 32, out_c: 64, k: 3, stride: 1, pad: 1, in_hw: 16 },
+            ],
+        };
+        let s = net.scaled(8, 8);
+        assert_eq!(s.layers[0].in_c, 2);
+        assert_eq!(s.layers[0].out_c, s.layers[1].in_c);
+        // Pool ratio preserved: 32→16 becomes 8→4.
+        assert_eq!(s.layers[0].in_hw, 8);
+        assert_eq!(s.layers[1].in_hw, 4);
+        // Divisor larger than a channel count floors to 1.
+        assert_eq!(net.scaled(1000, 8).layers[0].in_c, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "collapses")]
+    fn scaled_rejects_pool_collapsing_sizes() {
+        // Target in_hw 1 maps both 32 and 16 to 1, losing the pool.
+        let net = Network {
+            name: "two".into(),
+            layers: vec![
+                ConvLayer { name: "a".into(), in_c: 4, out_c: 4, k: 3, stride: 1, pad: 1, in_hw: 32 },
+                ConvLayer { name: "b".into(), in_c: 4, out_c: 4, k: 3, stride: 1, pad: 1, in_hw: 16 },
+            ],
+        };
+        let _ = net.scaled(1, 1);
     }
 
     #[test]

@@ -221,6 +221,35 @@ pub fn profile_with(
     }
 }
 
+/// Synthetic [`LoadedWeights`](super::LoadedWeights) for an arbitrary
+/// chain network, drawn from the bit profile of `profile_name` (one of
+/// the Table 1 networks or `tiny_cnn`). Every layer gets `frac_bits`;
+/// generation is deterministic in `seed`. Conv-only — append an `fc`
+/// layer yourself for classifier heads (see
+/// `coordinator::SacBackend::synthetic_weights`).
+pub fn synthetic_loaded(
+    net: &super::Network,
+    mode: Mode,
+    frac_bits: u32,
+    profile_name: &str,
+    calib: DensityCalibration,
+    seed: u64,
+) -> crate::Result<super::LoadedWeights> {
+    let profile = profile_with(profile_name, mode, calib)?;
+    let mut rng = Rng::new(seed);
+    let layers = net
+        .layers
+        .iter()
+        .map(|l| super::LoadedLayer {
+            name: l.name.clone(),
+            shape: [l.out_c, l.in_c, l.k, l.k],
+            frac_bits,
+            weights: profile.generate(l.weight_count() as usize, &mut rng),
+        })
+        .collect();
+    Ok(super::LoadedWeights { mode, layers })
+}
+
 /// Value-realistic generator: Laplace(0, b) quantized to the mode's
 /// Q-format. Trained conv weights are empirically Laplacian with
 /// scale ≈ 0.03–0.06 of the weight range.
@@ -322,5 +351,25 @@ mod tests {
     #[test]
     fn unknown_network_is_error() {
         assert!(profile_for("resnet", Mode::Fp16).is_err());
+    }
+
+    #[test]
+    fn synthetic_loaded_matches_topology_and_is_deterministic() {
+        let net = crate::model::zoo::tiny_cnn();
+        let a = synthetic_loaded(&net, Mode::Fp16, 12, "tiny_cnn", DensityCalibration::Fig2, 7)
+            .unwrap();
+        let b = synthetic_loaded(&net, Mode::Fp16, 12, "tiny_cnn", DensityCalibration::Fig2, 7)
+            .unwrap();
+        assert_eq!(a.layers.len(), net.layers.len());
+        for (wl, l) in a.layers.iter().zip(&net.layers) {
+            assert_eq!(wl.shape, [l.out_c, l.in_c, l.k, l.k]);
+            assert_eq!(wl.frac_bits, 12);
+            assert_eq!(wl.weights.len() as u64, l.weight_count());
+        }
+        for (wa, wb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(wa.weights, wb.weights);
+        }
+        assert!(synthetic_loaded(&net, Mode::Fp16, 12, "nope", DensityCalibration::Fig2, 7)
+            .is_err());
     }
 }

@@ -44,6 +44,24 @@ pub fn vgg16() -> Network {
     Network { name: "vgg16".into(), layers }
 }
 
+/// One pooling block of VGG-16 as a standalone chain network — the
+/// plan executor's canonical non-tiny workload (`conv{b}_1..` layers,
+/// all 3×3 stride-1 pad-1, same spatial size within the block).
+pub fn vgg16_block(block: usize) -> crate::Result<Network> {
+    let prefix = format!("conv{block}_");
+    let layers: Vec<ConvLayer> = vgg16()
+        .layers
+        .into_iter()
+        .filter(|l| l.name.starts_with(&prefix))
+        .collect();
+    if layers.is_empty() {
+        return Err(crate::Error::Config(format!(
+            "vgg16 has no block {block} (want 1..=5)"
+        )));
+    }
+    Ok(Network { name: format!("vgg16_block{block}"), layers })
+}
+
 /// VGG-19: 16 conv layers (blocks 3–5 have four convs).
 pub fn vgg19() -> Network {
     let mut layers = Vec::new();
@@ -190,6 +208,16 @@ mod tests {
         let net = vgg16();
         assert_eq!(net.layer("conv1_1").unwrap().out_hw(), 224);
         assert_eq!(net.layer("conv5_3").unwrap().out_hw(), 14);
+    }
+
+    #[test]
+    fn vgg16_block_extracts_chain() {
+        let b3 = vgg16_block(3).unwrap();
+        assert_eq!(b3.name, "vgg16_block3");
+        assert_eq!(b3.layers.len(), 3);
+        assert_eq!(b3.layers[0].in_c, 128);
+        assert!(b3.layers.iter().all(|l| l.out_c == 256 && l.in_hw == 56));
+        assert!(vgg16_block(6).is_err());
     }
 
     #[test]

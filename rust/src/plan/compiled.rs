@@ -1,0 +1,277 @@
+//! [`CompiledNetwork`] — the compile-time half of the split.
+//!
+//! Building a plan kneads every conv filter lane and every FC class
+//! lane exactly once (in parallel across filters), then stores only the
+//! kneaded form — exactly what the accelerator keeps in eDRAM. The
+//! executor (`plan::exec`) streams these lanes; it never calls back
+//! into the kneading compiler.
+
+use crate::config::Mode;
+use crate::kneading::{knead_lane, KneadedLane, Lane};
+use crate::model::{LoadedLayer, LoadedWeights, Network, Tensor};
+use crate::util::pool::par_map;
+
+use super::graph::{derive_graph, PlanOp};
+
+/// One conv layer's compile-time product: per-filter pre-kneaded lanes
+/// plus the shape metadata the executor needs (weights themselves are
+/// dropped — the kneaded form is lossless, DESIGN.md §I1).
+#[derive(Debug, Clone)]
+pub struct CompiledConv {
+    pub name: String,
+    pub out_c: usize,
+    pub in_c: usize,
+    pub kh: usize,
+    pub kw: usize,
+    /// One kneaded weight lane per output filter, OIHW filter order.
+    pub lanes: Vec<KneadedLane>,
+}
+
+impl CompiledConv {
+    /// Reduction length of one filter lane: `in_c × kh × kw`.
+    pub fn lane_len(&self) -> usize {
+        self.in_c * self.kh * self.kw
+    }
+}
+
+/// The classifier head: one pre-kneaded lane per class.
+#[derive(Debug, Clone)]
+pub struct CompiledFc {
+    pub classes: usize,
+    pub feat_dim: usize,
+    pub lanes: Vec<KneadedLane>,
+}
+
+/// A compile-once execution plan for one network.
+///
+/// Build with [`CompiledNetwork::compile`]; run batches with
+/// [`CompiledNetwork::execute`](super::exec). Reusing one plan across
+/// calls never changes logits (losslessness invariant I5) and performs
+/// zero kneading after construction.
+#[derive(Debug, Clone)]
+pub struct CompiledNetwork {
+    pub(crate) ops: Vec<PlanOp>,
+    pub(crate) convs: Vec<CompiledConv>,
+    pub(crate) fc: Option<CompiledFc>,
+    pub mode: Mode,
+    /// Kneading stride the lanes were compiled with. Values are
+    /// invariant to KS (SAC ≡ MAC for any stride); KS only moves the
+    /// simulated cycle cost.
+    pub ks: usize,
+    /// `knead_lane` invocations performed at build time — one per conv
+    /// filter plus one per FC class. The execute path adds zero more.
+    pub kneads_at_build: u64,
+}
+
+/// Knead the per-filter lanes of one weight layer (parallel across
+/// filters; output order is deterministic).
+fn knead_filter_lanes(wl: &LoadedLayer, lane_len: usize, ks: usize, mode: Mode) -> Vec<KneadedLane> {
+    let filters: Vec<usize> = (0..wl.shape[0]).collect();
+    par_map(&filters, |_, &f| {
+        let ws = wl.weights[f * lane_len..(f + 1) * lane_len].to_vec();
+        knead_lane(&Lane::new(ws, vec![0; lane_len]), ks, mode)
+    })
+}
+
+impl CompiledNetwork {
+    /// Compile `weights` against the topology of `net`.
+    ///
+    /// Errors if the weight set does not match the topology, the
+    /// topology's pooling schedule cannot be derived (see
+    /// [`derive_graph`]), or `ks` is out of the supported 2..=256.
+    pub fn compile(
+        net: &Network,
+        weights: &LoadedWeights,
+        ks: usize,
+        mode: Mode,
+    ) -> crate::Result<Self> {
+        if !(2..=256).contains(&ks) {
+            return Err(crate::Error::Config(format!(
+                "ks={ks} out of supported range 2..=256"
+            )));
+        }
+        let ops = derive_graph(net, weights)?;
+        let mut kneads_at_build = 0u64;
+        let mut convs = Vec::with_capacity(net.layers.len());
+        for l in &net.layers {
+            let wl = weights.layer(&l.name).expect("derive_graph validated layers");
+            let lane_len = l.in_c * l.k * l.k;
+            kneads_at_build += l.out_c as u64;
+            convs.push(CompiledConv {
+                name: l.name.clone(),
+                out_c: l.out_c,
+                in_c: l.in_c,
+                kh: l.k,
+                kw: l.k,
+                lanes: knead_filter_lanes(wl, lane_len, ks, mode),
+            });
+        }
+        let fc = match weights.layer("fc") {
+            Some(fl) => {
+                let classes = fl.shape[0];
+                let feat_dim = fl.shape[1] * fl.shape[2] * fl.shape[3];
+                kneads_at_build += classes as u64;
+                Some(CompiledFc {
+                    classes,
+                    feat_dim,
+                    lanes: knead_filter_lanes(fl, feat_dim, ks, mode),
+                })
+            }
+            None => None,
+        };
+        Ok(Self { ops, convs, fc, mode, ks, kneads_at_build })
+    }
+
+    /// The derived op graph (read-only view).
+    pub fn ops(&self) -> &[PlanOp] {
+        &self.ops
+    }
+
+    /// Compiled conv layers, topology order.
+    pub fn convs(&self) -> &[CompiledConv] {
+        &self.convs
+    }
+
+    /// The classifier head, if the weight set carried an `fc` layer.
+    pub fn fc(&self) -> Option<&CompiledFc> {
+        self.fc.as_ref()
+    }
+
+    /// Total kneaded weights across all lanes — the plan's resident
+    /// "eDRAM" footprint in kneaded-weight units.
+    pub fn kneaded_weights(&self) -> usize {
+        let conv: usize = self
+            .convs
+            .iter()
+            .flat_map(|c| c.lanes.iter())
+            .map(KneadedLane::kneaded_len)
+            .sum();
+        let fc: usize = self
+            .fc
+            .iter()
+            .flat_map(|f| f.lanes.iter())
+            .map(KneadedLane::kneaded_len)
+            .sum();
+        conv + fc
+    }
+
+    /// Source weights covered by all lanes (compression denominator).
+    pub fn source_weights(&self) -> usize {
+        let conv: usize = self
+            .convs
+            .iter()
+            .flat_map(|c| c.lanes.iter())
+            .map(KneadedLane::source_len)
+            .sum();
+        let fc: usize = self
+            .fc
+            .iter()
+            .flat_map(|f| f.lanes.iter())
+            .map(KneadedLane::source_len)
+            .sum();
+        conv + fc
+    }
+
+    /// Logit count per image (classifier plans only).
+    pub fn output_classes(&self) -> Option<usize> {
+        self.fc.as_ref().map(|f| f.classes)
+    }
+
+    /// Validate that `x` is a plausible (N, C, H, W) input batch for
+    /// this plan's first conv layer; returns the batch size.
+    pub fn check_input(&self, x: &Tensor<i32>) -> crate::Result<usize> {
+        let first = self.convs.first().ok_or_else(|| {
+            crate::Error::Config("plan has no conv layers".into())
+        })?;
+        match *x.shape() {
+            [n, c, _, _] if c == first.in_c => Ok(n),
+            [_, c, _, _] => Err(crate::Error::Shape(format!(
+                "input channels {c} != plan `{}` channels {}",
+                first.name, first.in_c
+            ))),
+            _ => Err(crate::Error::Shape("plan input must be 4-D NCHW".into())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kneading::unknead_group;
+    use crate::model::zoo;
+
+    fn tiny_weights(seed: u64) -> LoadedWeights {
+        crate::coordinator::SacBackend::synthetic_weights(seed).unwrap()
+    }
+
+    #[test]
+    fn compile_kneads_once_per_lane() {
+        let net = zoo::tiny_cnn();
+        let w = tiny_weights(1);
+        let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+        // One lane per conv filter + one per class.
+        assert_eq!(plan.convs.len(), 3);
+        assert_eq!(plan.convs[0].lanes.len(), 8);
+        assert_eq!(plan.convs[1].lanes.len(), 16);
+        assert_eq!(plan.convs[2].lanes.len(), 16);
+        let fc = plan.fc.as_ref().unwrap();
+        assert_eq!((fc.classes, fc.feat_dim), (4, 16));
+        assert_eq!(plan.kneads_at_build, 8 + 16 + 16 + 4);
+        assert!(plan.kneaded_weights() > 0);
+        assert!(plan.kneaded_weights() <= plan.source_weights());
+    }
+
+    #[test]
+    fn compiled_lanes_are_lossless() {
+        // Unkneading every stored group reproduces the source weights
+        // bit-for-bit (invariant I1 held through the plan cache).
+        let net = zoo::tiny_cnn();
+        let w = tiny_weights(9);
+        let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+        for (conv, wl) in plan.convs.iter().zip(&w.layers) {
+            let lane_len = conv.lane_len();
+            for (f, lane) in conv.lanes.iter().enumerate() {
+                let mut back = Vec::with_capacity(lane_len);
+                for g in &lane.groups {
+                    back.extend(unknead_group(g, Mode::Fp16));
+                }
+                assert_eq!(
+                    back,
+                    &wl.weights[f * lane_len..(f + 1) * lane_len],
+                    "{} filter {f}",
+                    conv.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bad_ks_rejected() {
+        let net = zoo::tiny_cnn();
+        let w = tiny_weights(2);
+        assert!(CompiledNetwork::compile(&net, &w, 1, Mode::Fp16).is_err());
+        assert!(CompiledNetwork::compile(&net, &w, 257, Mode::Fp16).is_err());
+    }
+
+    #[test]
+    fn check_input_validates_channels() {
+        let net = zoo::tiny_cnn();
+        let w = tiny_weights(3);
+        let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+        assert_eq!(plan.check_input(&Tensor::zeros(&[2, 1, 16, 16])).unwrap(), 2);
+        assert!(plan.check_input(&Tensor::zeros(&[2, 3, 16, 16])).is_err());
+        assert!(plan.check_input(&Tensor::zeros(&[16, 16])).is_err());
+    }
+
+    #[test]
+    fn compile_is_deterministic_across_thread_counts() {
+        let net = zoo::tiny_cnn();
+        let w = tiny_weights(4);
+        let a = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+        let b = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+        // par_map preserves order, so lane vectors must be identical.
+        for (ca, cb) in a.convs.iter().zip(&b.convs) {
+            assert_eq!(ca.lanes, cb.lanes);
+        }
+    }
+}

@@ -1,0 +1,276 @@
+//! The run-time half of the split: walk the op graph, stream the
+//! pre-kneaded lanes through SAC, never knead.
+//!
+//! Parallelism (§Perf): the conv hot loop fans out over (image,
+//! output-row) stripes via `util::pool::par_map` — each stripe gathers
+//! the activation window once per output pixel and shares it across
+//! every filter (the same reuse the legacy scalar path exploited), and
+//! `par_map`'s striped assignment keeps the output order deterministic,
+//! so results are bit-identical for any `TETRIS_THREADS` setting.
+//! The FC head fans out over batch rows.
+//!
+//! Every arithmetic step mirrors `runtime::quantized::forward_scalar`
+//! exactly (same gather order, same group windows, same `i64 → i32`
+//! casts), which is what makes invariant I5 — plan ≡ scalar, bit for
+//! bit — hold by construction and testable by equality.
+
+use crate::model::Tensor;
+use crate::quant::requantize;
+use crate::sac::{rear_adder_tree, split_kneaded, SegmentRegisters};
+use crate::util::pool::par_map;
+
+use super::compiled::{CompiledConv, CompiledFc, CompiledNetwork};
+use super::graph::PlanOp;
+
+impl CompiledNetwork {
+    /// Execute the plan on a Q8.8 input batch (N, C, H, W).
+    ///
+    /// Returns int32 logits (N, classes) for classifier plans, or the
+    /// final feature map (N, C', H', W') for conv-only plans. The input
+    /// spatial size may differ from the zoo's recorded `in_hw` — the
+    /// executor derives all spatial extents from the tensor itself
+    /// (used by tests/benches to run scaled workloads).
+    pub fn execute(&self, x: &Tensor<i32>) -> crate::Result<Tensor<i32>> {
+        self.check_input(x)?;
+        let mut h = x.clone();
+        for op in &self.ops {
+            match *op {
+                PlanOp::Conv { layer, pad, stride } => {
+                    h = conv_parallel(&self.convs[layer], &h, pad, stride, self.mode)?;
+                }
+                PlanOp::ReluRequant { frac_bits } => {
+                    for v in h.data_mut() {
+                        *v = requantize(*v, frac_bits).max(0);
+                    }
+                }
+                PlanOp::MaxPool2 => h = maxpool2(&h)?,
+                PlanOp::GlobalAvgPool => h = global_avg_pool(&h)?,
+                PlanOp::Fc => {
+                    let fc = self.fc.as_ref().ok_or_else(|| {
+                        crate::Error::Config("plan has an Fc op but no compiled head".into())
+                    })?;
+                    h = fc_parallel(fc, &h, self.mode)?;
+                }
+            }
+        }
+        Ok(h)
+    }
+}
+
+/// Integer conv over pre-kneaded filter lanes, parallel across
+/// (image, output-row) stripes.
+fn conv_parallel(
+    conv: &CompiledConv,
+    x: &Tensor<i32>,
+    pad: usize,
+    stride: usize,
+    mode: crate::config::Mode,
+) -> crate::Result<Tensor<i32>> {
+    let (n, c, h, w) = match *x.shape() {
+        [n, c, h, w] => (n, c, h, w),
+        _ => return Err(crate::Error::Shape("conv input must be 4-D".into())),
+    };
+    if c != conv.in_c {
+        return Err(crate::Error::Shape(format!(
+            "{}: input channels {c} != weight channels {}",
+            conv.name, conv.in_c
+        )));
+    }
+    if stride == 0 {
+        return Err(crate::Error::Config(format!("{}: stride 0", conv.name)));
+    }
+    let (kh, kw) = (conv.kh, conv.kw);
+    if h + 2 * pad < kh || w + 2 * pad < kw {
+        return Err(crate::Error::Shape(format!(
+            "{}: {h}×{w} input (pad {pad}) smaller than {kh}×{kw} kernel",
+            conv.name
+        )));
+    }
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (w + 2 * pad - kw) / stride + 1;
+    let o = conv.out_c;
+    let lane_len = conv.lane_len();
+
+    // One work item per (image, output row): coarse enough that the
+    // im2col gather is amortized across all filters of the row, fine
+    // enough that a batch of 8 tiny-CNN images yields n·oh ≥ 128 items.
+    let rows: Vec<(usize, usize)> = (0..n)
+        .flat_map(|b| (0..oh).map(move |oy| (b, oy)))
+        .collect();
+    let row_vals: Vec<Vec<i32>> = par_map(&rows, |_, &(b, oy)| {
+        let mut acts = vec![0i32; lane_len];
+        let mut segs = SegmentRegisters::new(mode.weight_bits());
+        let mut out_row = vec![0i32; o * ow];
+        for ox in 0..ow {
+            // Gather the activation window (im2col row) in OIHW weight
+            // order: (c, ky, kx) — once, shared by every filter.
+            let mut idx = 0;
+            for cc in 0..c {
+                for ky in 0..kh {
+                    for kx in 0..kw {
+                        let iy = oy * stride + ky;
+                        let ix = ox * stride + kx;
+                        acts[idx] = if iy < pad || ix < pad || iy - pad >= h || ix - pad >= w {
+                            0
+                        } else {
+                            x.get4(b, cc, iy - pad, ix - pad)
+                        };
+                        idx += 1;
+                    }
+                }
+            }
+            for (f, klane) in conv.lanes.iter().enumerate() {
+                for (g, group) in klane.groups.iter().enumerate() {
+                    let start = g * klane.ks;
+                    let end = (start + klane.ks).min(lane_len);
+                    split_kneaded(group, &acts[start..end], &mut segs);
+                }
+                out_row[f * ow + ox] = rear_adder_tree(segs.values()) as i32;
+                segs.reset();
+            }
+        }
+        out_row
+    });
+
+    let mut out: Tensor<i32> = Tensor::zeros(&[n, o, oh, ow]);
+    for (&(b, oy), row) in rows.iter().zip(&row_vals) {
+        for f in 0..o {
+            for ox in 0..ow {
+                out.set4(b, f, oy, ox, row[f * ow + ox]);
+            }
+        }
+    }
+    Ok(out)
+}
+
+// The pool/GAP/relu bodies below duplicate the private helpers in
+// `runtime::quantized` ON PURPOSE: that module is the frozen legacy
+// *reference*, and invariant I5 compares two independent
+// implementations — sharing the code would blind the property tests
+// to a bug in the shared half. The tiny-CNN I5 suite exercises every
+// one of these ops on both paths, so any drift fails loudly.
+
+/// 2×2 stride-2 integer max pool (truncates odd extents, like the
+/// legacy pipeline).
+fn maxpool2(x: &Tensor<i32>) -> crate::Result<Tensor<i32>> {
+    let [n, c, h, w] = match *x.shape() {
+        [n, c, h, w] => [n, c, h, w],
+        _ => return Err(crate::Error::Shape("pool input must be 4-D".into())),
+    };
+    let mut out: Tensor<i32> = Tensor::zeros(&[n, c, h / 2, w / 2]);
+    for b in 0..n {
+        for cc in 0..c {
+            for y in 0..h / 2 {
+                for xph in 0..w / 2 {
+                    let m = x
+                        .get4(b, cc, 2 * y, 2 * xph)
+                        .max(x.get4(b, cc, 2 * y, 2 * xph + 1))
+                        .max(x.get4(b, cc, 2 * y + 1, 2 * xph))
+                        .max(x.get4(b, cc, 2 * y + 1, 2 * xph + 1));
+                    out.set4(b, cc, y, xph, m);
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Global average pool: i64 sum then floor division (matches jnp `//`).
+fn global_avg_pool(x: &Tensor<i32>) -> crate::Result<Tensor<i32>> {
+    let [n, c, h, w] = match *x.shape() {
+        [n, c, h, w] => [n, c, h, w],
+        _ => return Err(crate::Error::Shape("GAP input must be 4-D".into())),
+    };
+    let mut feats: Tensor<i32> = Tensor::zeros(&[n, c]);
+    for b in 0..n {
+        for cc in 0..c {
+            let mut s: i64 = 0;
+            for y in 0..h {
+                for xx in 0..w {
+                    s += x.get4(b, cc, y, xx) as i64;
+                }
+            }
+            feats.data_mut()[b * c + cc] = s.div_euclid((h * w) as i64) as i32;
+        }
+    }
+    Ok(feats)
+}
+
+/// FC head over pre-kneaded class lanes, parallel across batch rows.
+fn fc_parallel(
+    fc: &CompiledFc,
+    x: &Tensor<i32>,
+    mode: crate::config::Mode,
+) -> crate::Result<Tensor<i32>> {
+    let [n, d] = match *x.shape() {
+        [n, d] => [n, d],
+        _ => return Err(crate::Error::Shape("FC input must be 2-D (N, feat)".into())),
+    };
+    if d != fc.feat_dim {
+        return Err(crate::Error::Shape(format!(
+            "FC feature dim {d} != compiled {}",
+            fc.feat_dim
+        )));
+    }
+    let items: Vec<usize> = (0..n).collect();
+    let rows: Vec<Vec<i32>> = par_map(&items, |_, &b| {
+        let acts = &x.data()[b * d..(b + 1) * d];
+        let mut segs = SegmentRegisters::new(mode.weight_bits());
+        let mut logits = vec![0i32; fc.classes];
+        for (k, klane) in fc.lanes.iter().enumerate() {
+            for (g, group) in klane.groups.iter().enumerate() {
+                let start = g * klane.ks;
+                let end = (start + klane.ks).min(d);
+                split_kneaded(group, &acts[start..end], &mut segs);
+            }
+            logits[k] = rear_adder_tree(segs.values()) as i32;
+            segs.reset();
+        }
+        logits
+    });
+    let mut out: Tensor<i32> = Tensor::zeros(&[n, fc.classes]);
+    for (b, row) in rows.iter().enumerate() {
+        out.data_mut()[b * fc.classes..(b + 1) * fc.classes].copy_from_slice(row);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Mode;
+    use crate::coordinator::SacBackend;
+    use crate::model::zoo;
+    use crate::plan::CompiledNetwork;
+    use crate::util::rng::Rng;
+
+    fn image_batch(n: usize, seed: u64) -> Tensor<i32> {
+        let mut t = Tensor::zeros(&[n, 1, 16, 16]);
+        let mut rng = Rng::new(seed);
+        for v in t.data_mut() {
+            *v = rng.range_i64(-400, 400) as i32;
+        }
+        t
+    }
+
+    #[test]
+    fn execute_produces_logits_and_is_deterministic() {
+        let w = SacBackend::synthetic_weights(5).unwrap();
+        let plan = CompiledNetwork::compile(&zoo::tiny_cnn(), &w, 16, Mode::Fp16).unwrap();
+        let x = image_batch(3, 1);
+        let a = plan.execute(&x).unwrap();
+        let b = plan.execute(&x).unwrap();
+        assert_eq!(a.shape(), &[3, 4]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn execute_rejects_wrong_channels() {
+        let w = SacBackend::synthetic_weights(5).unwrap();
+        let plan = CompiledNetwork::compile(&zoo::tiny_cnn(), &w, 16, Mode::Fp16).unwrap();
+        assert!(plan.execute(&Tensor::zeros(&[1, 2, 16, 16])).is_err());
+    }
+
+    // Plan ≡ scalar-forward equivalence (invariant I5) lives in
+    // rust/tests/plan_exec.rs; zero-rekneading in plan_zero_knead.rs.
+}

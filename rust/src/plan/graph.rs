@@ -1,0 +1,172 @@
+//! The generic layer-graph IR and its derivation from zoo topology.
+//!
+//! A plan is a flat op list (sequential chains only — inception-style
+//! branching is out of scope and rejected with a config error). Pooling
+//! is not stored anywhere in the zoo explicitly; it is *recovered* from
+//! each layer's recorded input spatial size: a 2× drop between one
+//! layer's output and the next layer's input means a 2×2 stride-2 max
+//! pool sits between them (the VGG/tiny-CNN schedule). Any other ratio
+//! (AlexNet/NiN's 3×3 stride-2 pools) cannot be expressed yet.
+
+use crate::model::{LoadedWeights, Network};
+
+/// One node of an execution plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanOp {
+    /// Convolution of compiled conv layer `layer` (index into
+    /// `CompiledNetwork::convs`), zero-padded by `pad`, with `stride`.
+    Conv { layer: usize, pad: usize, stride: usize },
+    /// ReLU fused with the rounding right-shift requantization by
+    /// `frac_bits` (see `quant::requantize`).
+    ReluRequant { frac_bits: u32 },
+    /// 2×2 stride-2 integer max pool (truncating on odd extents).
+    MaxPool2,
+    /// Global average pool: i64 sum then floor division (matches the
+    /// Python pipeline's `jnp` floor-divide).
+    GlobalAvgPool,
+    /// Fully connected head over the pre-kneaded class lanes.
+    Fc,
+}
+
+/// Derive the op graph for `net` given the weight file's layer set.
+///
+/// * every conv layer must have a weight entry of matching OIHW shape;
+/// * consecutive layers must either chain directly (`next.in_hw ==
+///   out_hw`) or through one 2×2 pool (`next.in_hw * 2 == out_hw`);
+/// * a weight layer named `fc` (absent from the zoo topology, which is
+///   conv-only) appends `GlobalAvgPool → Fc` as the classifier head.
+pub fn derive_graph(net: &Network, weights: &LoadedWeights) -> crate::Result<Vec<PlanOp>> {
+    if net.layers.is_empty() {
+        return Err(crate::Error::Config(format!(
+            "network `{}` has no conv layers to plan",
+            net.name
+        )));
+    }
+    let mut ops = Vec::with_capacity(3 * net.layers.len() + 2);
+    for (i, l) in net.layers.iter().enumerate() {
+        let wl = weights.layer(&l.name).ok_or_else(|| {
+            crate::Error::Artifact(format!(
+                "{}: no weights for layer `{}`",
+                net.name, l.name
+            ))
+        })?;
+        let want = [l.out_c, l.in_c, l.k, l.k];
+        if wl.shape != want {
+            return Err(crate::Error::Shape(format!(
+                "{}: weight shape {:?} != topology {:?}",
+                l.name, wl.shape, want
+            )));
+        }
+        ops.push(PlanOp::Conv { layer: i, pad: l.pad, stride: l.stride });
+        ops.push(PlanOp::ReluRequant { frac_bits: wl.frac_bits });
+        if let Some(next) = net.layers.get(i + 1) {
+            let out = l.out_hw();
+            if next.in_hw * 2 == out {
+                ops.push(PlanOp::MaxPool2);
+            } else if next.in_hw != out {
+                return Err(crate::Error::Config(format!(
+                    "{}: cannot derive pooling between `{}` (out {out}×{out}) and \
+                     `{}` (in {hw}×{hw}) — only 2×2 stride-2 pools are expressible",
+                    net.name,
+                    l.name,
+                    next.name,
+                    hw = next.in_hw,
+                )));
+            }
+        }
+    }
+    if weights.layer("fc").is_some() {
+        ops.push(PlanOp::GlobalAvgPool);
+        ops.push(PlanOp::Fc);
+    }
+    Ok(ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Mode;
+    use crate::model::{zoo, LoadedLayer};
+
+    /// Minimal weight set matching a network's topology (+optional fc).
+    fn weights_for(net: &Network, fc_classes: Option<usize>) -> LoadedWeights {
+        let mut layers: Vec<LoadedLayer> = net
+            .layers
+            .iter()
+            .map(|l| LoadedLayer {
+                name: l.name.clone(),
+                shape: [l.out_c, l.in_c, l.k, l.k],
+                frac_bits: 8,
+                weights: vec![1; l.weight_count() as usize],
+            })
+            .collect();
+        if let Some(classes) = fc_classes {
+            let feat = net.layers.last().unwrap().out_c;
+            layers.push(LoadedLayer {
+                name: "fc".into(),
+                shape: [classes, feat, 1, 1],
+                frac_bits: 8,
+                weights: vec![1; classes * feat],
+            });
+        }
+        LoadedWeights { mode: Mode::Fp16, layers }
+    }
+
+    #[test]
+    fn tiny_cnn_graph_matches_legacy_pipeline() {
+        let net = zoo::tiny_cnn();
+        let w = weights_for(&net, Some(4));
+        let ops = derive_graph(&net, &w).unwrap();
+        assert_eq!(
+            ops,
+            vec![
+                PlanOp::Conv { layer: 0, pad: 1, stride: 1 },
+                PlanOp::ReluRequant { frac_bits: 8 },
+                PlanOp::MaxPool2,
+                PlanOp::Conv { layer: 1, pad: 1, stride: 1 },
+                PlanOp::ReluRequant { frac_bits: 8 },
+                PlanOp::MaxPool2,
+                PlanOp::Conv { layer: 2, pad: 1, stride: 1 },
+                PlanOp::ReluRequant { frac_bits: 8 },
+                PlanOp::GlobalAvgPool,
+                PlanOp::Fc,
+            ]
+        );
+    }
+
+    #[test]
+    fn vgg16_graph_places_four_pools() {
+        let net = zoo::vgg16();
+        let w = weights_for(&net, None);
+        let ops = derive_graph(&net, &w).unwrap();
+        let pools = ops.iter().filter(|o| **o == PlanOp::MaxPool2).count();
+        // 5 blocks → 4 *internal* pool transitions (the pool after
+        // block 5 has no following conv layer to betray it).
+        assert_eq!(pools, 4);
+        // Conv-only weight set → no classifier head.
+        assert!(!ops.contains(&PlanOp::Fc));
+        assert!(!ops.contains(&PlanOp::GlobalAvgPool));
+    }
+
+    #[test]
+    fn underivable_pooling_is_config_error() {
+        // AlexNet pools 3×3 stride 2 (55 → 27): not expressible.
+        let net = zoo::alexnet();
+        let w = weights_for(&net, None);
+        match derive_graph(&net, &w) {
+            Err(crate::Error::Config(msg)) => assert!(msg.contains("pooling")),
+            other => panic!("expected Config error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn missing_or_misshapen_weights_rejected() {
+        let net = zoo::tiny_cnn();
+        let mut w = weights_for(&net, None);
+        w.layers.remove(1);
+        assert!(matches!(derive_graph(&net, &w), Err(crate::Error::Artifact(_))));
+        let mut w = weights_for(&net, None);
+        w.layers[0].shape = [9, 9, 9, 9];
+        assert!(matches!(derive_graph(&net, &w), Err(crate::Error::Shape(_))));
+    }
+}

@@ -1,0 +1,33 @@
+//! Compile-once execution plans — the compile/execute split of the
+//! paper, lifted from a single hardcoded pipeline to any sequential
+//! zoo topology.
+//!
+//! In the paper, weight kneading (§III.B) is a *compile-time* step: the
+//! accelerator streams pre-kneaded weights from eDRAM and never
+//! re-derives them per inference. The seed implementation instead
+//! re-kneaded every filter lane on every `forward` call and hardcoded
+//! the tiny CNN's layer names. This module restores the paper's split:
+//!
+//! * [`graph`] — a generic op graph (`Conv { pad, stride } →
+//!   ReluRequant → MaxPool2 → GlobalAvgPool → Fc`) *derived* from
+//!   `model::zoo` topology plus the weight file's layer set, instead of
+//!   hardcoded `"conv1".."conv3"/"fc"` names.
+//! * [`compiled`] — [`CompiledNetwork`]: kneads every conv filter lane
+//!   and every FC class lane exactly once, at build time, in parallel.
+//! * [`exec`] — the executor: walks the op graph and parallelizes the
+//!   conv hot loop over (image, output-row) stripes with
+//!   `util::pool::par_map`, preserving deterministic output order.
+//!
+//! Losslessness invariant (DESIGN.md §I5): reusing kneaded lanes across
+//! calls never changes logits — the executor is bit-identical to the
+//! legacy scalar `runtime::quantized::forward_scalar` for every mode,
+//! kneading stride, and thread count. Verified by
+//! `rust/tests/plan_exec.rs`; the zero-rekneading property is pinned by
+//! `rust/tests/plan_zero_knead.rs` via `kneading::knead_call_count`.
+
+pub mod compiled;
+pub mod exec;
+pub mod graph;
+
+pub use compiled::{CompiledConv, CompiledFc, CompiledNetwork};
+pub use graph::{derive_graph, PlanOp};

@@ -31,6 +31,18 @@ pub fn fits_mode(w: QWeight, mode: Mode) -> bool {
     w.unsigned_abs() < mode.magnitude_bound() as u32
 }
 
+/// Rounding right shift — mirror of python `_requantize`. Shifting by
+/// zero is the identity: the naive `1 << (frac_bits - 1)` rounding bias
+/// underflows (debug panic) when `frac_bits == 0`, so that case is
+/// guarded explicitly.
+#[inline]
+pub fn requantize(acc: i32, frac_bits: u32) -> i32 {
+    if frac_bits == 0 {
+        return acc;
+    }
+    (acc + (1 << (frac_bits - 1))) >> frac_bits
+}
+
 /// The paper's Eq. (1): decompose one multiplication into shift-and-adds
 /// over the weight's essential bits. Reference implementation used by
 /// tests to cross-check the SAC units.
@@ -66,6 +78,14 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn requantize_zero_shift_is_identity() {
+        // Regression: `1 << (frac_bits - 1)` underflowed for frac 0.
+        for v in [0, 1, -1, 255, -255, i32::MAX, i32::MIN] {
+            assert_eq!(requantize(v, 0), v);
+        }
     }
 
     #[test]

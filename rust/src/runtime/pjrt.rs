@@ -3,89 +3,175 @@
 //! Interchange format is HLO **text** (see `python/compile/aot.py` and
 //! /opt/xla-example/README.md): `HloModuleProto::from_text_file` →
 //! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//!
+//! The real client requires the `xla` crate and its XLA C library,
+//! which are unavailable offline — so the whole implementation sits
+//! behind the `xla` cargo feature. Without it this module compiles to a
+//! typed stub with the identical API whose constructors return
+//! [`crate::Error::Xla`]; since [`Engine::cpu`] is the only way to
+//! obtain an `Engine` (and from it a `LoadedModel` or `Literal`), the
+//! remaining stub methods are statically unreachable.
 
-use std::path::Path;
+#[cfg(feature = "xla")]
+mod real {
+    use std::path::Path;
 
-/// A PJRT client (one per thread that executes models — the underlying
-/// handles are not `Sync`).
-pub struct Engine {
-    client: xla::PjRtClient,
-}
-
-impl Engine {
-    /// CPU PJRT client.
-    pub fn cpu() -> crate::Result<Self> {
-        Ok(Self { client: xla::PjRtClient::cpu()? })
+    /// A PJRT client (one per thread that executes models — the
+    /// underlying handles are not `Sync`).
+    pub struct Engine {
+        client: xla::PjRtClient,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an HLO text file.
-    pub fn load_hlo_text(&self, path: &Path) -> crate::Result<LoadedModel> {
-        if !path.exists() {
-            return Err(crate::Error::Artifact(format!(
-                "HLO file {} not found — run `make artifacts` first",
-                path.display()
-            )));
+    impl Engine {
+        /// CPU PJRT client.
+        pub fn cpu() -> crate::Result<Self> {
+            Ok(Self { client: xla::PjRtClient::cpu()? })
         }
-        let proto = xla::HloModuleProto::from_text_file(path)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        let name = path
-            .file_stem()
-            .map(|s| s.to_string_lossy().into_owned())
-            .unwrap_or_else(|| "model".into());
-        Ok(LoadedModel { exe, name })
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an HLO text file.
+        pub fn load_hlo_text(&self, path: &Path) -> crate::Result<LoadedModel> {
+            if !path.exists() {
+                return Err(crate::Error::Artifact(format!(
+                    "HLO file {} not found — run `make artifacts` first",
+                    path.display()
+                )));
+            }
+            let proto = xla::HloModuleProto::from_text_file(path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            let name = path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| "model".into());
+            Ok(LoadedModel { exe, name })
+        }
+    }
+
+    /// A compiled executable (jax lowers with `return_tuple=True`, so
+    /// every model returns a 1-tuple).
+    pub struct LoadedModel {
+        exe: xla::PjRtLoadedExecutable,
+        name: String,
+    }
+
+    impl LoadedModel {
+        pub fn name(&self) -> &str {
+            &self.name
+        }
+
+        /// Execute with literal inputs; returns the untupled first output.
+        pub fn run(&self, inputs: &[xla::Literal]) -> crate::Result<xla::Literal> {
+            let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+            Ok(result.to_tuple1()?)
+        }
+
+        /// Execute with f32 input tensors, returning the f32 output.
+        pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> crate::Result<Vec<f32>> {
+            let literals = inputs
+                .iter()
+                .map(|(data, dims)| Ok(xla::Literal::vec1(data).reshape(dims)?))
+                .collect::<crate::Result<Vec<_>>>()?;
+            Ok(self.run(&literals)?.to_vec::<f32>()?)
+        }
+    }
+
+    /// Build an i32 literal of the given shape.
+    pub fn literal_i32(data: &[i32], dims: &[i64]) -> crate::Result<xla::Literal> {
+        Ok(xla::Literal::vec1(data).reshape(dims)?)
+    }
+
+    /// Build an i8 literal of the given shape (no `NativeType` impl for
+    /// i8 in the crate — go through the untyped-data constructor).
+    pub fn literal_i8(data: &[i8], dims: &[i64]) -> crate::Result<xla::Literal> {
+        let dims_usize: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+        let bytes: &[u8] =
+            unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S8,
+            &dims_usize,
+            bytes,
+        )?)
     }
 }
 
-/// A compiled executable (jax lowers with `return_tuple=True`, so every
-/// model returns a 1-tuple).
-pub struct LoadedModel {
-    exe: xla::PjRtLoadedExecutable,
-    name: String,
-}
+#[cfg(feature = "xla")]
+pub use real::{literal_i32, literal_i8, Engine, LoadedModel};
 
-impl LoadedModel {
-    pub fn name(&self) -> &str {
-        &self.name
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use std::path::Path;
+
+    /// Uninhabited carrier: stub handles can never be constructed, so
+    /// their methods are `match`-on-never and need no implementations.
+    #[derive(Debug, Clone, Copy)]
+    enum Never {}
+
+    fn unavailable() -> crate::Error {
+        crate::Error::Xla(
+            "PJRT runtime unavailable: built without the `xla` cargo feature".into(),
+        )
     }
 
-    /// Execute with literal inputs; returns the untupled first output.
-    pub fn run(&self, inputs: &[xla::Literal]) -> crate::Result<xla::Literal> {
-        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
-        Ok(result.to_tuple1()?)
+    /// Stub literal — mirrors `xla::Literal` at the type level only.
+    #[derive(Debug)]
+    pub struct Literal(Never);
+
+    impl Literal {
+        pub fn to_vec<T>(&self) -> crate::Result<Vec<T>> {
+            match self.0 {}
+        }
     }
 
-    /// Execute with f32 input tensors, returning the f32 output.
-    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> crate::Result<Vec<f32>> {
-        let literals = inputs
-            .iter()
-            .map(|(data, dims)| Ok(xla::Literal::vec1(data).reshape(dims)?))
-            .collect::<crate::Result<Vec<_>>>()?;
-        Ok(self.run(&literals)?.to_vec::<f32>()?)
+    /// Stub PJRT client.
+    pub struct Engine(Never);
+
+    impl Engine {
+        /// Always errors: the `xla` feature is off.
+        pub fn cpu() -> crate::Result<Self> {
+            Err(unavailable())
+        }
+
+        pub fn platform(&self) -> String {
+            match self.0 {}
+        }
+
+        pub fn load_hlo_text(&self, _path: &Path) -> crate::Result<LoadedModel> {
+            match self.0 {}
+        }
+    }
+
+    /// Stub compiled executable.
+    pub struct LoadedModel(Never);
+
+    impl LoadedModel {
+        pub fn name(&self) -> &str {
+            match self.0 {}
+        }
+
+        pub fn run(&self, _inputs: &[Literal]) -> crate::Result<Literal> {
+            match self.0 {}
+        }
+
+        pub fn run_f32(&self, _inputs: &[(&[f32], &[i64])]) -> crate::Result<Vec<f32>> {
+            match self.0 {}
+        }
+    }
+
+    pub fn literal_i32(_data: &[i32], _dims: &[i64]) -> crate::Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn literal_i8(_data: &[i8], _dims: &[i64]) -> crate::Result<Literal> {
+        Err(unavailable())
     }
 }
 
-/// Build an i32 literal of the given shape.
-pub fn literal_i32(data: &[i32], dims: &[i64]) -> crate::Result<xla::Literal> {
-    Ok(xla::Literal::vec1(data).reshape(dims)?)
-}
-
-/// Build an i8 literal of the given shape (no `NativeType` impl for i8
-/// in the crate — go through the untyped-data constructor).
-pub fn literal_i8(data: &[i8], dims: &[i64]) -> crate::Result<xla::Literal> {
-    let dims_usize: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
-    let bytes: &[u8] =
-        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
-    Ok(xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::S8,
-        &dims_usize,
-        bytes,
-    )?)
-}
+#[cfg(not(feature = "xla"))]
+pub use stub::{literal_i32, literal_i8, Engine, LoadedModel};
 
 #[cfg(test)]
 mod tests {
@@ -93,18 +179,30 @@ mod tests {
 
     // PJRT runtime tests that need artifacts live in
     // rust/tests/runtime_hlo.rs (integration). Here: client liveness.
+    #[cfg(feature = "xla")]
     #[test]
     fn cpu_client_starts() {
         let e = Engine::cpu().unwrap();
         assert!(!e.platform().is_empty());
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn missing_hlo_is_artifact_error() {
         let e = Engine::cpu().unwrap();
-        match e.load_hlo_text(Path::new("/nonexistent/x.hlo.txt")) {
+        match e.load_hlo_text(std::path::Path::new("/nonexistent/x.hlo.txt")) {
             Err(err) => assert!(matches!(err, crate::Error::Artifact(_))),
             Ok(_) => panic!("expected error"),
         }
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_reports_feature_disabled() {
+        match Engine::cpu() {
+            Err(crate::Error::Xla(msg)) => assert!(msg.contains("xla")),
+            other => panic!("expected Xla error, got {:?}", other.map(|_| ())),
+        }
+        assert!(matches!(literal_i32(&[1], &[1]), Err(crate::Error::Xla(_))));
     }
 }

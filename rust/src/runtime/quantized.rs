@@ -7,11 +7,25 @@
 //! SAC unit, so a logit match against `artifacts/quant_logits.i32`
 //! certifies the full rust stack (kneading → splitters → segment adders
 //! → rear adder tree) bit-for-bit against the Pallas kernel path.
+//!
+//! Since ISSUE 1 this module is a thin wrapper over the `plan`
+//! subsystem: [`forward`] compiles the tiny-CNN topology into a
+//! [`CompiledNetwork`] (kneading every lane once) and executes it. The
+//! original single-threaded, re-knead-per-call implementation survives
+//! as [`forward_scalar`] / [`sac_conv2d`] — the bit-exactness reference
+//! the plan executor is property-tested against (DESIGN.md §I5) and the
+//! baseline `benches/hotpath.rs` measures the compile-once speedup
+//! over. Serving callers should hold a [`CompiledNetwork`] (as
+//! `coordinator::SacBackend` does) instead of calling [`forward`] in a
+//! loop, which re-compiles per call.
 
 use crate::config::Mode;
 use crate::kneading::{knead_lane, Lane};
-use crate::model::{LoadedLayer, LoadedWeights, Tensor};
+use crate::model::{zoo, LoadedLayer, LoadedWeights, Tensor};
+use crate::plan::CompiledNetwork;
 use crate::sac::{rear_adder_tree, split_kneaded, SacUnit, SegmentRegisters};
+
+pub use crate::quant::requantize;
 
 /// Kneading stride used by the functional pipeline (any value is
 /// correct — values are invariant to KS; 16 matches the paper setup).
@@ -19,6 +33,11 @@ pub const PIPELINE_KS: usize = 16;
 
 /// Integer conv through kneaded SAC lanes: x (N,C,H,W) Q8.8,
 /// weights OIHW Q1.f → accumulator (N,O,OH,OW) at scale 2^(8+f).
+///
+/// Legacy scalar path: re-kneads the layer's lanes on every call and
+/// walks output pixels on one thread. Kept as the reference for the
+/// plan executor (`plan::exec` is bit-identical; see
+/// `rust/tests/plan_exec.rs`).
 pub fn sac_conv2d(
     x: &Tensor<i32>,
     layer: &LoadedLayer,
@@ -43,15 +62,11 @@ pub fn sac_conv2d(
     // Pre-knead each filter's lane once (weights are reused at every
     // output pixel — same reuse the accelerator exploits).
     let lane_len = c * kh * kw;
-    let filters: Vec<Lane> = (0..o)
+    let kneaded: Vec<_> = (0..o)
         .map(|f| {
             let ws = layer.weights[f * lane_len..(f + 1) * lane_len].to_vec();
-            Lane::new(ws, vec![0; lane_len])
+            knead_lane(&Lane::new(ws, vec![0; lane_len]), PIPELINE_KS, mode)
         })
-        .collect();
-    let kneaded: Vec<_> = filters
-        .iter()
-        .map(|lane| knead_lane(lane, PIPELINE_KS, mode))
         .collect();
 
     // Hot loop (§Perf): the activation window is gathered once per
@@ -93,14 +108,7 @@ pub fn sac_conv2d(
             }
         }
     }
-    let _ = &filters; // lanes kept alive for shape asserts in debug builds
     Ok(out)
-}
-
-/// Rounding right shift — mirror of python `_requantize`.
-#[inline]
-pub fn requantize(acc: i32, frac_bits: u32) -> i32 {
-    (acc + (1 << (frac_bits - 1))) >> frac_bits
 }
 
 fn relu_requantize(t: &mut Tensor<i32>, frac_bits: u32) {
@@ -133,8 +141,27 @@ fn maxpool2(x: &Tensor<i32>) -> Tensor<i32> {
 }
 
 /// Full tiny-CNN integer forward: Q8.8 input (N,1,16,16) → int32 logits
-/// (N,4). Exact mirror of the python SAC pipeline.
+/// (N,4).
+///
+/// Thin wrapper over the plan subsystem: compiles the `zoo::tiny_cnn`
+/// topology (kneading each lane exactly once) and executes the plan.
+/// Bit-identical to [`forward_scalar`]. One-shot convenience — serving
+/// paths should build the [`CompiledNetwork`] once and reuse it.
 pub fn forward(weights: &LoadedWeights, x: &Tensor<i32>) -> crate::Result<Tensor<i32>> {
+    compile_tiny_cnn(weights)?.execute(x)
+}
+
+/// Compile the tiny-CNN topology against `weights` with the pipeline's
+/// default stride — the plan `coordinator::SacBackend` holds.
+pub fn compile_tiny_cnn(weights: &LoadedWeights) -> crate::Result<CompiledNetwork> {
+    CompiledNetwork::compile(&zoo::tiny_cnn(), weights, PIPELINE_KS, weights.mode)
+}
+
+/// Legacy scalar forward — the seed implementation, byte-for-byte
+/// semantics: re-kneads every lane on each call, single-threaded,
+/// hardcoded to the tiny CNN's layer names. Retained as the reference
+/// half of invariant I5 and as the baseline for `benches/hotpath.rs`.
+pub fn forward_scalar(weights: &LoadedWeights, x: &Tensor<i32>) -> crate::Result<Tensor<i32>> {
     let mode = weights.mode;
     let mut h = x.clone();
     for name in ["conv1", "conv2", "conv3"] {
@@ -190,8 +217,8 @@ mod tests {
     use crate::model::LoadedLayer;
 
     fn identity_layer() -> LoadedLayer {
-        // 1×1 conv, single channel, weight = 2^8 (0.5 in Q1.9 … pick
-        // frac 9 so requantize halves then scales).
+        // 1×1 conv, single channel, weight 256 = 1.0 in Q8 (frac_bits 8),
+        // so requantizing the accumulator by 8 recovers the input.
         LoadedLayer {
             name: "conv".into(),
             shape: [1, 1, 1, 1],
@@ -235,10 +262,30 @@ mod tests {
     }
 
     #[test]
+    fn requantize_zero_frac_bits_is_identity() {
+        // Regression: the seed's `1 << (frac_bits - 1)` underflowed
+        // (debug panic) for frac_bits == 0.
+        assert_eq!(requantize(12345, 0), 12345);
+        assert_eq!(requantize(-12345, 0), -12345);
+    }
+
+    #[test]
     fn maxpool_picks_max() {
         let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1, 9, -4, 3]).unwrap();
         let p = maxpool2(&x);
         assert_eq!(p.data(), &[9]);
+    }
+
+    #[test]
+    fn forward_wrapper_matches_scalar_reference() {
+        let w = crate::coordinator::SacBackend::synthetic_weights(17).unwrap();
+        let mut x = Tensor::zeros(&[2, 1, 16, 16]);
+        for (i, v) in x.data_mut().iter_mut().enumerate() {
+            *v = (i as i32 % 613) - 300;
+        }
+        let plan_logits = forward(&w, &x).unwrap();
+        let scalar_logits = forward_scalar(&w, &x).unwrap();
+        assert_eq!(plan_logits, scalar_logits);
     }
 
     // Cross-language exactness vs quant_logits.i32 lives in

@@ -1,0 +1,52 @@
+//! ISSUE 1 acceptance: `SacBackend::infer_batch` performs **zero**
+//! kneading calls after construction — kneading happens once, inside
+//! the `CompiledNetwork` build.
+//!
+//! This is the only test in this binary on purpose: the knead counter
+//! (`kneading::knead_call_count`) is process-wide, and cargo runs the
+//! tests *within* one binary on concurrent threads. Isolating the test
+//! keeps the counter free of unrelated kneading traffic, so the
+//! assertion can be an exact equality instead of a tolerance.
+
+use tetris::coordinator::{InferBackend, SacBackend};
+use tetris::kneading::knead_call_count;
+use tetris::model::Tensor;
+use tetris::util::rng::Rng;
+
+#[test]
+fn infer_batch_performs_zero_kneading_calls() {
+    let mut backend = SacBackend::synthetic(7).expect("backend");
+    let built = knead_call_count();
+    // Construction must have kneaded something (8+16+16 filters + 4
+    // classes worth of lanes, one knead_group call per KS-chunk).
+    assert!(built > 0, "compile performed no kneading");
+    assert_eq!(backend.plan().kneads_at_build, 8 + 16 + 16 + 4);
+
+    let mut rng = Rng::new(1);
+    let mut images = Tensor::zeros(&[4, 1, 16, 16]);
+    for v in images.data_mut() {
+        *v = rng.range_i64(-400, 400) as i32;
+    }
+    let first = backend.infer_batch(&images).expect("infer");
+    assert_eq!(first.len(), 4);
+
+    let before = knead_call_count();
+    assert_eq!(before, built, "first infer_batch kneaded");
+    for _ in 0..3 {
+        backend.infer_batch(&images).expect("infer");
+    }
+    assert_eq!(
+        knead_call_count(),
+        before,
+        "serving path re-kneaded after construction"
+    );
+
+    // The legacy scalar path, by contrast, re-kneads on every call —
+    // the very cost the plan subsystem removed from serving.
+    let w = SacBackend::synthetic_weights(7).expect("weights");
+    tetris::runtime::quantized::forward_scalar(&w, &images).expect("scalar");
+    assert!(
+        knead_call_count() > before,
+        "scalar reference unexpectedly stopped kneading"
+    );
+}

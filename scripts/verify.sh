@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Tier-1 verification: offline build + tests, plus clippy when present.
+# Run from anywhere: `scripts/verify.sh`
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy (all targets, -D warnings) =="
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "== clippy unavailable — skipped =="
+fi
+
+echo "verify OK"
