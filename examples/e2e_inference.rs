@@ -58,18 +58,12 @@ fn main() {
     // ---- Stage 2: serve a batched load on the SAC backend. ----
     println!("\n== stage 2: batched serving (kneaded-SAC backend, 2 workers) ==");
     let weights = artifacts.load_weights().expect("weights");
-    let server = Server::start(
+    let server = Server::start_shared(
         ServerConfig {
             policy: BatchPolicy { max_batch, max_wait: Duration::from_millis(1) },
             workers: 2,
         },
-        {
-            let dir = dir.clone();
-            move |_| {
-                let w = tetris::model::read_weight_file(&dir.join("weights.bin"))?;
-                SacBackend::new(w)
-            }
-        },
+        SacBackend::new(weights.clone()).expect("backend"),
     )
     .expect("server");
 

@@ -36,17 +36,20 @@ fn main() {
          {workers} workers, weights: {}",
         if use_artifacts { "trained" } else { "synthetic" }
     );
-    let server = Server::start(
+    // Compile the plan once; every worker clones the shared backend,
+    // so startup kneading is paid once regardless of `--workers`.
+    let prototype = if use_artifacts {
+        SacBackend::new(
+            tetris::model::read_weight_file(std::path::Path::new("artifacts/weights.bin"))
+                .expect("weights"),
+        )
+        .expect("backend")
+    } else {
+        SacBackend::synthetic(0xACC).expect("backend")
+    };
+    let server = Server::start_shared(
         ServerConfig { policy: BatchPolicy { max_batch, max_wait }, workers },
-        move |_| {
-            if use_artifacts {
-                SacBackend::new(tetris::model::read_weight_file(std::path::Path::new(
-                    "artifacts/weights.bin",
-                ))?)
-            } else {
-                SacBackend::synthetic(0xACC)
-            }
-        },
+        prototype,
     )
     .expect("server");
 

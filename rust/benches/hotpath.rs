@@ -11,6 +11,7 @@ use std::time::Duration;
 use tetris::config::Mode;
 use tetris::coordinator::{BatchPolicy, InferRequest, SacBackend, Server, ServerConfig};
 use tetris::kneading::{knead_group, knead_lane, Lane};
+use tetris::model::reference::forward_reference;
 use tetris::model::weights::{profile_with, synthetic_loaded, DensityCalibration};
 use tetris::model::{zoo, Tensor};
 use tetris::plan::CompiledNetwork;
@@ -52,14 +53,15 @@ fn main() {
     use tetris::coordinator::InferBackend;
     h.bench("pipeline/tiny-cnn-batch4", || backend.infer_batch(&img).unwrap().len());
 
-    // 4. Coordinator round trip (16 requests through batcher + workers).
+    // 4. Coordinator round trip (16 requests through batcher + workers;
+    //    both workers clone one shared-plan prototype).
     h.bench("coordinator/serve-16-requests", || {
-        let server = Server::start(
+        let server = Server::start_shared(
             ServerConfig {
                 policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) },
                 workers: 2,
             },
-            |_| SacBackend::synthetic(1),
+            SacBackend::synthetic(1).unwrap(),
         )
         .unwrap();
         let mut r = Rng::new(1);
@@ -140,6 +142,56 @@ fn main() {
         vec![
             ("source_weights".into(), bplan.source_weights() as f64),
             ("kneaded_weights".into(), bplan.kneaded_weights() as f64),
+        ],
+    );
+
+    // 7. ISSUE 2: the declared-topology executor on the rest of the
+    //    zoo — scaled AlexNet (3×3 stride-2 pools) and a standalone
+    //    inception module (four-arm branch + channel concat) — vs the
+    //    plain-MAC scalar reference, bit-exactness asserted first.
+    let anet = zoo::alexnet().scaled(16, 64);
+    let aw = synthetic_loaded(&anet, Mode::Fp16, 12, "alexnet", DensityCalibration::Fig2, 21)
+        .unwrap();
+    let aplan = CompiledNetwork::compile(&anet, &aw, 16, Mode::Fp16).unwrap();
+    let mut aimg = Tensor::zeros(&[2, anet.layers[0].in_c, 64, 64]);
+    for (i, v) in aimg.data_mut().iter_mut().enumerate() {
+        *v = (i as i32 % 409) - 200;
+    }
+    assert_eq!(
+        aplan.execute(&aimg).unwrap(),
+        forward_reference(&anet, &aw, &aimg),
+        "alexnet plan must be bit-exact vs the MAC reference before speed comparison"
+    );
+    h.bench("plan/execute-alexnet-div16-hw64", || aplan.execute(&aimg).unwrap().len());
+    h.bench("ref/mac-alexnet-div16-hw64", || forward_reference(&anet, &aw, &aimg).len());
+
+    let inet = zoo::inception_module("3a").unwrap().scaled(4, 16);
+    let iw = synthetic_loaded(&inet, Mode::Fp16, 12, "googlenet", DensityCalibration::Fig2, 22)
+        .unwrap();
+    let iplan = CompiledNetwork::compile(&inet, &iw, 16, Mode::Fp16).unwrap();
+    let mut iimg = Tensor::zeros(&[2, inet.layers[0].in_c, 16, 16]);
+    for (i, v) in iimg.data_mut().iter_mut().enumerate() {
+        *v = (i as i32 % 389) - 190;
+    }
+    assert_eq!(
+        iplan.execute(&iimg).unwrap(),
+        forward_reference(&inet, &iw, &iimg),
+        "inception plan must be bit-exact vs the MAC reference before speed comparison"
+    );
+    h.bench("plan/execute-inception3a-div4-hw16", || iplan.execute(&iimg).unwrap().len());
+    h.bench("ref/mac-inception3a-div4-hw16", || forward_reference(&inet, &iw, &iimg).len());
+    let median = |results: &[tetris::util::bench::Measurement], name: &str| {
+        results.iter().find(|m| m.name == name).map(|m| m.median_s()).unwrap()
+    };
+    let alex_speedup = median(h.results(), "ref/mac-alexnet-div16-hw64")
+        / median(h.results(), "plan/execute-alexnet-div16-hw64");
+    let incep_speedup = median(h.results(), "ref/mac-inception3a-div4-hw16")
+        / median(h.results(), "plan/execute-inception3a-div4-hw16");
+    h.metric_row(
+        "plan/zoo-vs-mac-reference",
+        vec![
+            ("alexnet_speedup_x".into(), alex_speedup),
+            ("inception_speedup_x".into(), incep_speedup),
         ],
     );
 

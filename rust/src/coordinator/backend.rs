@@ -6,14 +6,19 @@
 //!   [`plan::CompiledNetwork`](crate::plan::CompiledNetwork) — every
 //!   lane is kneaded exactly once, up front — so the per-batch serving
 //!   path performs **zero** kneading (pinned by
-//!   `rust/tests/plan_zero_knead.rs`). `Send`, so the server can shard
-//!   it across worker threads.
+//!   `rust/tests/plan_zero_knead.rs`). The plan is held behind an
+//!   [`Arc`], so cloning the backend *shares* it: a server with W
+//!   workers cloning one prototype (see
+//!   [`Server::start_shared`](super::server::Server::start_shared))
+//!   kneads one network total, not W.
 //! * `PjrtBackend` (constructed per-thread via
 //!   [`super::server::Server::serve_with_pjrt`]) — the AOT XLA golden
 //!   model; PJRT handles are thread-pinned.
 //!
 //! Both also report a *simulated* Tetris cycle cost per batch so the
 //! serving metrics reflect the accelerator, not the host.
+
+use std::sync::Arc;
 
 use crate::config::{AccelConfig, CalibConfig};
 use crate::model::zoo;
@@ -34,9 +39,15 @@ pub trait InferBackend {
 }
 
 /// Pure-rust kneaded-SAC backend over a compile-once execution plan.
+///
+/// Cloning is cheap and *shares* the compiled plan (an `Arc`): clones
+/// never re-knead. Hand one prototype to
+/// [`Server::start_shared`](super::server::Server::start_shared) and
+/// every worker streams the same resident lanes.
+#[derive(Clone)]
 pub struct SacBackend {
-    /// Pre-kneaded network — built once, reused for every batch.
-    plan: CompiledNetwork,
+    /// Pre-kneaded network — built once, shared by every clone.
+    plan: Arc<CompiledNetwork>,
     /// Pre-simulated Tetris cycles for ONE image of the tiny CNN.
     cycles_per_image: u64,
 }
@@ -58,7 +69,7 @@ impl SacBackend {
         let conv_weights = LoadedWeights { mode: weights.mode, layers: conv_only };
         let samples = samples_from_loaded(&net, &conv_weights)?;
         let sim = simulate_network_with_samples(&TetrisSim, &net, &samples, &cfg, &calib);
-        let plan = quantized::compile_tiny_cnn(&weights)?;
+        let plan = Arc::new(quantized::compile_tiny_cnn(&weights)?);
         Ok(Self { plan, cycles_per_image: sim.total_cycles() })
     }
 
@@ -99,6 +110,12 @@ impl SacBackend {
     /// op graph).
     pub fn plan(&self) -> &CompiledNetwork {
         &self.plan
+    }
+
+    /// The shared handle to the compiled plan — clone count reveals how
+    /// many workers currently share it.
+    pub fn shared_plan(&self) -> Arc<CompiledNetwork> {
+        Arc::clone(&self.plan)
     }
 }
 
@@ -170,5 +187,18 @@ mod tests {
         let b = SacBackend::synthetic(2).unwrap();
         assert_eq!(b.plan().kneads_at_build, 8 + 16 + 16 + 4);
         assert!(b.plan().kneaded_weights() > 0);
+    }
+
+    #[test]
+    fn clones_share_one_compiled_plan() {
+        // The clone must alias the prototype's plan, not re-compile it
+        // (what makes `Server::start_shared` knead once for W workers).
+        let proto = SacBackend::synthetic(4).unwrap();
+        let clone = proto.clone();
+        assert!(Arc::ptr_eq(&proto.shared_plan(), &clone.shared_plan()));
+        let mut a = proto.clone();
+        let mut b = clone.clone();
+        let img = Tensor::zeros(&[1, 1, 16, 16]);
+        assert_eq!(a.infer_batch(&img).unwrap(), b.infer_batch(&img).unwrap());
     }
 }

@@ -68,14 +68,13 @@ pub fn run_synthetic_load(
         policy: BatchPolicy { max_batch, max_wait: Duration::from_millis(2) },
         workers: 2,
     };
-    let server = Server::start(cfg, move |_| {
-        if use_artifacts {
-            let w = crate::model::read_weight_file(std::path::Path::new("artifacts/weights.bin"))?;
-            SacBackend::new(w)
-        } else {
-            SacBackend::synthetic(0xACC)
-        }
-    })?;
+    // Compile (knead) once; both workers clone the shared plan.
+    let prototype = if use_artifacts {
+        SacBackend::new(crate::model::read_weight_file(artifacts)?)?
+    } else {
+        SacBackend::synthetic(0xACC)?
+    };
+    let server = Server::start_shared(cfg, prototype)?;
     let mut rng = Rng::new(seed);
     for id in 0..requests as u64 {
         server.submit(InferRequest::new(id, synthetic_image(&mut rng)))?;

@@ -36,9 +36,24 @@ pub struct Server {
 }
 
 impl Server {
+    /// Start the server with one prototype backend cloned into every
+    /// worker. For backends whose clone shares compiled state — e.g.
+    /// [`SacBackend`](super::backend::SacBackend), whose
+    /// `Arc<CompiledNetwork>` plan is aliased by clones — W workers
+    /// cost exactly one network compile (one knead per lane total,
+    /// pinned by `rust/tests/plan_zero_knead.rs`), not W.
+    pub fn start_shared<B>(config: ServerConfig, prototype: B) -> crate::Result<Self>
+    where
+        B: InferBackend + Clone + Send + Sync + 'static,
+    {
+        Self::start(config, move |_| Ok(prototype.clone()))
+    }
+
     /// Start the server. `make_backend` is called once per worker
     /// thread (backends need not be `Sync`; they must be creatable per
-    /// thread — PJRT executables satisfy this).
+    /// thread — PJRT executables satisfy this). Backends that *are*
+    /// cheaply clonable should go through [`Server::start_shared`]
+    /// instead, so workers share one compiled plan.
     pub fn start<B, F>(config: ServerConfig, make_backend: F) -> crate::Result<Self>
     where
         B: InferBackend + 'static,
@@ -241,7 +256,9 @@ mod tests {
             policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
             workers: 2,
         };
-        let server = Server::start(cfg, |_| SacBackend::synthetic(1)).unwrap();
+        // Shared-plan serving: both workers clone one prototype.
+        let server =
+            Server::start_shared(cfg, SacBackend::synthetic(1).unwrap()).unwrap();
         let total = 23;
         for id in 0..total {
             server.submit(InferRequest::new(id, image(id as i32))).unwrap();

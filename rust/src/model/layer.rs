@@ -1,9 +1,14 @@
 //! Convolution layer descriptors and networks.
 //!
 //! The paper's evaluation is conv-only ("convolutions take nearly 98% of
-//! the computations", §I), so the zoo describes each network as its
-//! ordered conv layers; pooling only enters via each layer's recorded
-//! input spatial size.
+//! the computations", §I), so MAC/weight accounting sums over each
+//! network's ordered conv layers. The *execution order* — including
+//! pooling stages and inception branching — is declared explicitly as a
+//! [`TopoOp`] schedule (see [`topology`](super::topology)); each layer's
+//! recorded `in_hw` is the spatial size the declared schedule delivers
+//! to it, which the plan compiler cross-checks at lowering time.
+
+use super::topology::TopoOp;
 
 /// One convolution layer's shape parameters.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -52,14 +57,35 @@ impl ConvLayer {
     }
 }
 
-/// A network = named ordered list of conv layers.
+/// A network: named conv layers plus the declared execution schedule
+/// ([`TopoOp`]s referencing layers by index).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Network {
     pub name: String,
     pub layers: Vec<ConvLayer>,
+    /// Declared topology: the order convs, pools and branches execute
+    /// in. `TopoOp::Conv(i)` indexes into `layers`.
+    pub schedule: Vec<TopoOp>,
 }
 
 impl Network {
+    /// A plain sequential chain: every conv feeds the next directly,
+    /// with no pooling stages (consecutive layers must share spatial
+    /// sizes — the plan compiler rejects the schedule otherwise).
+    pub fn sequential(name: impl Into<String>, layers: Vec<ConvLayer>) -> Network {
+        let schedule = (0..layers.len()).map(TopoOp::Conv).collect();
+        Network { name: name.into(), layers, schedule }
+    }
+
+    /// A network with an explicitly declared schedule.
+    pub fn with_schedule(
+        name: impl Into<String>,
+        layers: Vec<ConvLayer>,
+        schedule: Vec<TopoOp>,
+    ) -> Network {
+        Network { name: name.into(), layers, schedule }
+    }
+
     pub fn total_macs(&self) -> u64 {
         self.layers.iter().map(ConvLayer::macs).sum()
     }
@@ -72,54 +98,113 @@ impl Network {
         self.layers.iter().find(|l| l.name == name)
     }
 
-    /// Shrunk copy for tests/benches: divide every channel count by
-    /// `channel_div` (floor, min 1 — the chain stays consistent because
-    /// all counts scale by the same divisor) and rescale spatial sizes
-    /// so the first layer's input becomes `in_hw` (later layers keep
-    /// their pooling ratio to the first). Kernel/stride/pad unchanged.
+    /// Shrunk copy for tests/benches: divide every conv's *output*
+    /// channel count by `channel_div` (floor, min 1), then
+    /// *re-propagate* both spatial sizes and input channel counts
+    /// through the declared schedule — the first executed conv sees
+    /// `in_hw` (and its original input channels divided), every later
+    /// layer's recorded shape is exactly what the preceding convs,
+    /// pools and branch concats produce. Propagating `in_c` (rather
+    /// than flooring it independently) keeps branch networks
+    /// consistent for *any* divisor: an inception concat of floored
+    /// arm widths can sum to less than the floored original, and the
+    /// consumer inherits the true sum. Kernel/stride/pad unchanged.
     ///
-    /// Panics if `in_hw` is too small to keep the pooling schedule:
-    /// scaling must not collapse two layers with *different* original
-    /// spatial sizes onto the same value, or the derived plan graph
-    /// would silently lose a pool stage.
+    /// Panics if `in_hw` is too small for the schedule — i.e. some conv
+    /// or pool window would not fit its (padded) input.
     pub fn scaled(&self, channel_div: usize, in_hw: usize) -> Network {
         assert!(channel_div >= 1 && in_hw >= 1);
-        let base_hw = match self.layers.first() {
-            Some(l) => l.in_hw,
-            None => return self.clone(),
-        };
-        let scale = |hw: usize| (hw * in_hw / base_hw).max(1);
-        for pair in self.layers.windows(2) {
-            assert!(
-                pair[0].in_hw == pair[1].in_hw || scale(pair[0].in_hw) != scale(pair[1].in_hw),
-                "{}: in_hw={in_hw} collapses the {}→{} pool stage ({}→{}); pick a larger in_hw",
-                self.name,
-                pair[0].name,
-                pair[1].name,
-                pair[0].in_hw,
-                pair[1].in_hw,
-            );
-        }
-        let layers = self
+        let mut layers: Vec<ConvLayer> = self
             .layers
             .iter()
             .map(|l| ConvLayer {
                 name: l.name.clone(),
-                in_c: (l.in_c / channel_div).max(1),
+                in_c: l.in_c, // overwritten by propagation below
                 out_c: (l.out_c / channel_div).max(1),
                 k: l.k,
                 stride: l.stride,
                 pad: l.pad,
-                in_hw: scale(l.in_hw),
+                in_hw: l.in_hw, // overwritten by propagation below
             })
             .collect();
-        Network { name: format!("{}_div{channel_div}_hw{in_hw}", self.name), layers }
+        let entry = self
+            .schedule
+            .iter()
+            .find_map(|op| match op {
+                TopoOp::Conv(i) => Some(*i),
+                _ => None,
+            })
+            .unwrap_or(0);
+        let in_c = (self.layers.get(entry).map_or(1, |l| l.in_c) / channel_div).max(1);
+        propagate(&self.schedule, &mut layers, in_c, in_hw, &self.name);
+        Network {
+            name: format!("{}_div{channel_div}_hw{in_hw}", self.name),
+            layers,
+            schedule: self.schedule.clone(),
+        }
     }
+}
+
+/// Walk `ops` assigning each conv layer the input shape the schedule
+/// delivers to it, starting from `c` channels at `hw`×`hw`; returns
+/// the schedule's output shape. Panics (test/bench helper semantics)
+/// on windows that don't fit.
+fn propagate(
+    ops: &[TopoOp],
+    layers: &mut [ConvLayer],
+    mut c: usize,
+    mut hw: usize,
+    net: &str,
+) -> (usize, usize) {
+    for op in ops {
+        match op {
+            TopoOp::Conv(i) => {
+                let l = &mut layers[*i];
+                assert!(
+                    hw + 2 * l.pad >= l.k,
+                    "{net}: {hw}×{hw} input (pad {}) smaller than `{}`'s {}×{} kernel — pick a larger in_hw",
+                    l.pad,
+                    l.name,
+                    l.k,
+                    l.k,
+                );
+                l.in_c = c;
+                l.in_hw = hw;
+                c = l.out_c;
+                hw = l.out_hw();
+            }
+            TopoOp::Pool(p) => {
+                hw = p
+                    .out_hw(hw)
+                    .unwrap_or_else(|e| panic!("{net}: {e} — pick a larger in_hw"));
+            }
+            TopoOp::Branch(arms) => {
+                let mut out_c = 0usize;
+                let mut out_hw: Option<usize> = None;
+                for arm in arms {
+                    let (ac, ahw) = propagate(arm, layers, c, hw, net);
+                    out_c += ac;
+                    match out_hw {
+                        None => out_hw = Some(ahw),
+                        Some(h) => assert_eq!(
+                            h, ahw,
+                            "{net}: branch arms disagree on output spatial size"
+                        ),
+                    }
+                }
+                c = out_c;
+                hw = out_hw.expect("branch has at least one arm");
+            }
+            TopoOp::GlobalAvgPool | TopoOp::Fc => hw = 1,
+        }
+    }
+    (c, hw)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::topology::PoolSpec;
 
     fn vgg_conv1_1() -> ConvLayer {
         ConvLayer {
@@ -153,37 +238,55 @@ mod tests {
         assert_eq!(l.out_hw(), 55);
     }
 
-    #[test]
-    fn scaled_keeps_chain_and_pool_ratios() {
-        let net = Network {
-            name: "two".into(),
-            layers: vec![
+    fn two_layer_pooled() -> Network {
+        Network::with_schedule(
+            "two",
+            vec![
                 ConvLayer { name: "a".into(), in_c: 16, out_c: 32, k: 3, stride: 1, pad: 1, in_hw: 32 },
                 ConvLayer { name: "b".into(), in_c: 32, out_c: 64, k: 3, stride: 1, pad: 1, in_hw: 16 },
             ],
-        };
+            vec![TopoOp::Conv(0), TopoOp::Pool(PoolSpec::max(2, 2, 0)), TopoOp::Conv(1)],
+        )
+    }
+
+    #[test]
+    fn scaled_keeps_chain_and_pool_ratios() {
+        let net = two_layer_pooled();
         let s = net.scaled(8, 8);
         assert_eq!(s.layers[0].in_c, 2);
         assert_eq!(s.layers[0].out_c, s.layers[1].in_c);
-        // Pool ratio preserved: 32→16 becomes 8→4.
+        // Pool stage re-propagated: 32→16 becomes 8→4.
         assert_eq!(s.layers[0].in_hw, 8);
         assert_eq!(s.layers[1].in_hw, 4);
+        // The declared schedule survives scaling untouched.
+        assert_eq!(s.schedule, net.schedule);
         // Divisor larger than a channel count floors to 1.
         assert_eq!(net.scaled(1000, 8).layers[0].in_c, 1);
     }
 
     #[test]
-    #[should_panic(expected = "collapses")]
-    fn scaled_rejects_pool_collapsing_sizes() {
-        // Target in_hw 1 maps both 32 and 16 to 1, losing the pool.
-        let net = Network {
-            name: "two".into(),
-            layers: vec![
-                ConvLayer { name: "a".into(), in_c: 4, out_c: 4, k: 3, stride: 1, pad: 1, in_hw: 32 },
-                ConvLayer { name: "b".into(), in_c: 4, out_c: 4, k: 3, stride: 1, pad: 1, in_hw: 16 },
+    fn scaled_propagates_strided_and_ceil_pools() {
+        // AlexNet-shaped head: 11×11 stride-4 conv + 3×3 stride-2 pool.
+        let net = Network::with_schedule(
+            "mini_alex",
+            vec![
+                ConvLayer { name: "c1".into(), in_c: 3, out_c: 8, k: 11, stride: 4, pad: 0, in_hw: 227 },
+                ConvLayer { name: "c2".into(), in_c: 8, out_c: 8, k: 5, stride: 1, pad: 2, in_hw: 27 },
             ],
-        };
-        let _ = net.scaled(1, 1);
+            vec![TopoOp::Conv(0), TopoOp::Pool(PoolSpec::max(3, 2, 0)), TopoOp::Conv(1)],
+        );
+        let s = net.scaled(1, 63);
+        // (63-11)/4+1 = 14, pool ceil((14-3)/2)+1 = 7.
+        assert_eq!(s.layers[0].in_hw, 63);
+        assert_eq!(s.layers[0].out_hw(), 14);
+        assert_eq!(s.layers[1].in_hw, 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "smaller than")]
+    fn scaled_rejects_windows_larger_than_input() {
+        // Target in_hw 1 leaves the 2×2 pool without a full window.
+        let _ = two_layer_pooled().scaled(1, 1);
     }
 
     #[test]
@@ -193,5 +296,14 @@ mod tests {
         assert_eq!(l.macs(), l.lane_count() * l.lane_len() as u64);
         // known value: 64*3*3*3*224*224 = 86,704,128
         assert_eq!(l.macs(), 86_704_128);
+    }
+
+    #[test]
+    fn sequential_schedules_every_layer_in_order() {
+        let net = Network::sequential(
+            "chain",
+            vec![vgg_conv1_1(), ConvLayer { name: "conv1_2".into(), in_c: 64, out_c: 64, k: 3, stride: 1, pad: 1, in_hw: 224 }],
+        );
+        assert_eq!(net.schedule, vec![TopoOp::Conv(0), TopoOp::Conv(1)]);
     }
 }

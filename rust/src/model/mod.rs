@@ -1,13 +1,17 @@
-//! Network model substrate: layer shapes, the five-network zoo the paper
+//! Network model substrate: layer shapes, the explicit topology IR
+//! (conv/pool/branch schedules), the five-network zoo the paper
 //! evaluates, tensors, and weight sources (synthetic calibrated
 //! generators + JAX-trained weight files).
 
 mod io;
 mod layer;
+pub mod reference;
 mod tensor;
+pub mod topology;
 pub mod weights;
 pub mod zoo;
 
 pub use io::{read_weight_file, write_weight_file, LoadedLayer, LoadedWeights};
 pub use layer::{ConvLayer, Network};
 pub use tensor::Tensor;
+pub use topology::{PoolKind, PoolSpec, TopoOp};

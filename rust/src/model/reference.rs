@@ -1,0 +1,199 @@
+//! Naive scalar reference interpreter of a declared topology — the
+//! MAC-side baseline of invariant I5 (DESIGN.md).
+//!
+//! Walks `Network::schedule` with plain i64 MAC loops, per-window pool
+//! scans, an element-wise channel concat and a floor-divide global
+//! average pool. It deliberately shares **no** execution code with
+//! `plan::exec` (different gather strategy, no kneading, no SAC, no
+//! slice-copy concat): the plan executor is property-tested bit-exact
+//! against this independent implementation across the full zoo
+//! (`rust/tests/plan_topology.rs`) and benchmarked against it as the
+//! `forward_scalar`-style baseline (`benches/hotpath.rs`). Keeping one
+//! shared reference for both consumers means the definition of
+//! "correct" cannot drift between the test suite and the bench.
+//!
+//! Conv-only scope: every conv fuses ReLU + requantization (matching
+//! the lowered `Conv → ReluRequant` pair), pools follow the Caffe
+//! ceil-mode geometry, and a schedule-declared `Fc` panics — weight
+//! files with classifier heads are exercised through the tiny-CNN
+//! legacy reference (`runtime::quantized::forward_scalar`) instead.
+
+use crate::quant::requantize;
+
+use super::layer::Network;
+use super::io::{LoadedLayer, LoadedWeights};
+use super::tensor::Tensor;
+use super::topology::{PoolKind, PoolSpec, TopoOp};
+
+/// Plain integer MAC conv: i64 accumulate, one truncating `as i32`
+/// cast per output — the exact contract SAC lanes must reproduce.
+fn ref_conv(x: &Tensor<i32>, wl: &LoadedLayer, pad: usize, stride: usize) -> Tensor<i32> {
+    let [o, c, kh, kw] = wl.shape;
+    let (n, h, w) = match *x.shape() {
+        [n, cx, h, w] => {
+            assert_eq!(cx, c, "{}: channel mismatch", wl.name);
+            (n, h, w)
+        }
+        _ => panic!("4-D input"),
+    };
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (w + 2 * pad - kw) / stride + 1;
+    let mut out: Tensor<i32> = Tensor::zeros(&[n, o, oh, ow]);
+    let lane = c * kh * kw;
+    for b in 0..n {
+        for f in 0..o {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0i64;
+                    for cc in 0..c {
+                        for ky in 0..kh {
+                            for kx in 0..kw {
+                                let (iy, ix) = (oy * stride + ky, ox * stride + kx);
+                                if iy < pad || ix < pad || iy - pad >= h || ix - pad >= w {
+                                    continue;
+                                }
+                                let wv = wl.weights[f * lane + (cc * kh + ky) * kw + kx] as i64;
+                                acc += wv * x.get4(b, cc, iy - pad, ix - pad) as i64;
+                            }
+                        }
+                    }
+                    out.set4(b, f, oy, ox, acc as i32);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Caffe ceil-mode pool extent (same arithmetic `PoolSpec::out_hw`
+/// pins — re-stated here so the reference stands alone).
+fn ref_pool_extent(in_hw: usize, k: usize, stride: usize, pad: usize) -> usize {
+    let padded = in_hw + 2 * pad;
+    assert!(padded >= k && pad < k, "degenerate pool window");
+    let mut out = (padded - k).div_ceil(stride) + 1;
+    if (out - 1) * stride >= in_hw + pad {
+        out -= 1;
+    }
+    out
+}
+
+/// Naive pool: per-window scan over the in-bounds taps (max ignores
+/// padding; avg floor-divides by the in-bounds tap count).
+fn ref_pool(x: &Tensor<i32>, spec: PoolSpec) -> Tensor<i32> {
+    let [n, c, h, w] = match *x.shape() {
+        [n, c, h, w] => [n, c, h, w],
+        _ => panic!("4-D input"),
+    };
+    let (k, s, p) = (spec.k, spec.stride, spec.pad);
+    let (oh, ow) = (ref_pool_extent(h, k, s, p), ref_pool_extent(w, k, s, p));
+    let mut out: Tensor<i32> = Tensor::zeros(&[n, c, oh, ow]);
+    for b in 0..n {
+        for cc in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc: Option<i64> = None;
+                    let mut taps = 0i64;
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let (iy, ix) = (oy * s + ky, ox * s + kx);
+                            if iy < p || ix < p || iy - p >= h || ix - p >= w {
+                                continue; // padding tap: excluded
+                            }
+                            let v = x.get4(b, cc, iy - p, ix - p) as i64;
+                            taps += 1;
+                            acc = Some(match (spec.kind, acc) {
+                                (PoolKind::Max, None) => v,
+                                (PoolKind::Max, Some(m)) => m.max(v),
+                                (PoolKind::Avg, None) => v,
+                                (PoolKind::Avg, Some(sum)) => sum + v,
+                            });
+                        }
+                    }
+                    let v = match spec.kind {
+                        PoolKind::Max => acc.expect("non-empty window"),
+                        PoolKind::Avg => acc.expect("non-empty window").div_euclid(taps),
+                    };
+                    out.set4(b, cc, oy, ox, v as i32);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Element-wise channel concat (the plan executor uses slice copies).
+fn ref_concat(parts: &[Tensor<i32>]) -> Tensor<i32> {
+    let [n, _, h, w] = match *parts[0].shape() {
+        [n, c, h, w] => [n, c, h, w],
+        _ => panic!("4-D input"),
+    };
+    let total_c: usize = parts.iter().map(|p| p.shape()[1]).sum();
+    let mut out: Tensor<i32> = Tensor::zeros(&[n, total_c, h, w]);
+    let mut c_off = 0;
+    for p in parts {
+        let pc = p.shape()[1];
+        for b in 0..n {
+            for cc in 0..pc {
+                for y in 0..h {
+                    for xx in 0..w {
+                        out.set4(b, c_off + cc, y, xx, p.get4(b, cc, y, xx));
+                    }
+                }
+            }
+        }
+        c_off += pc;
+    }
+    out
+}
+
+/// Global average pool: i64 sum, floor division, (N,C,H,W) → (N,C).
+fn ref_gap(x: &Tensor<i32>) -> Tensor<i32> {
+    let [n, c, h, w] = match *x.shape() {
+        [n, c, h, w] => [n, c, h, w],
+        _ => panic!("4-D input"),
+    };
+    let mut out: Tensor<i32> = Tensor::zeros(&[n, c]);
+    for b in 0..n {
+        for cc in 0..c {
+            let mut s = 0i64;
+            for y in 0..h {
+                for xx in 0..w {
+                    s += x.get4(b, cc, y, xx) as i64;
+                }
+            }
+            out.data_mut()[b * c + cc] = s.div_euclid((h * w) as i64) as i32;
+        }
+    }
+    out
+}
+
+fn ref_ops(ops: &[TopoOp], net: &Network, w: &LoadedWeights, mut h: Tensor<i32>) -> Tensor<i32> {
+    for op in ops {
+        h = match op {
+            TopoOp::Conv(i) => {
+                let l = &net.layers[*i];
+                let wl = w.layer(&l.name).expect("weights for scheduled layer");
+                let mut acc = ref_conv(&h, wl, l.pad, l.stride);
+                for v in acc.data_mut() {
+                    *v = requantize(*v, wl.frac_bits).max(0);
+                }
+                acc
+            }
+            TopoOp::Pool(p) => ref_pool(&h, *p),
+            TopoOp::Branch(arms) => {
+                let parts: Vec<Tensor<i32>> =
+                    arms.iter().map(|a| ref_ops(a, net, w, h.clone())).collect();
+                ref_concat(&parts)
+            }
+            TopoOp::GlobalAvgPool => ref_gap(&h),
+            TopoOp::Fc => panic!("conv-only reference has no Fc"),
+        };
+    }
+    h
+}
+
+/// Interpret `net`'s declared schedule naively over a Q8.8 batch.
+/// Conv-only weight sets (the zoo carries no `fc` layer).
+pub fn forward_reference(net: &Network, w: &LoadedWeights, x: &Tensor<i32>) -> Tensor<i32> {
+    ref_ops(&net.schedule, net, w, x.clone())
+}

@@ -1,0 +1,159 @@
+//! The explicit topology IR the zoo declares and the plan compiler
+//! lowers.
+//!
+//! Earlier revisions stored *only* conv layers and tried to recover the
+//! pooling schedule from spatial-size ratios between consecutive layers
+//! (a 2× drop ⇒ 2×2 stride-2 pool), which could not express AlexNet's
+//! and NiN's 3×3 stride-2 pools or GoogleNet's inception branching. A
+//! [`Network`](super::Network) now carries an explicit op schedule:
+//!
+//! * [`TopoOp::Conv`] — one conv layer, referenced by index into
+//!   `Network::layers` (shape metadata stays in [`ConvLayer`]).
+//! * [`TopoOp::Pool`] — an inter-layer pool with explicit kind, kernel,
+//!   stride and padding ([`PoolSpec`]); Caffe ceil-mode output sizing.
+//! * [`TopoOp::Branch`] — inception-style parallel arms over one input,
+//!   implicitly concatenated along the channel axis in arm order.
+//! * [`TopoOp::GlobalAvgPool`] / [`TopoOp::Fc`] — the classifier head
+//!   (NiN ends in a global average pool with no FC; chains whose weight
+//!   file carries an `fc` layer get the head appended at lowering).
+//!
+//! The IR is *declared* topology only — validation (shape chaining,
+//! weight availability, one use per layer) happens when
+//! `plan::graph::derive_graph` lowers it into an execution plan.
+//!
+//! [`ConvLayer`]: super::ConvLayer
+
+/// Pooling operator kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolKind {
+    /// Max over the window's in-bounds taps (padding never wins).
+    Max,
+    /// Floor-divided mean over the window's in-bounds taps
+    /// (padding excluded from the count).
+    Avg,
+}
+
+/// One pooling stage: kind + square kernel, stride, zero padding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolSpec {
+    pub kind: PoolKind,
+    /// Kernel height/width (square windows throughout the zoo).
+    pub k: usize,
+    pub stride: usize,
+    /// Padding on each side. Must be `< k` so no window lies entirely
+    /// in the padding.
+    pub pad: usize,
+}
+
+impl PoolSpec {
+    /// Max pool of the given geometry.
+    pub fn max(k: usize, stride: usize, pad: usize) -> Self {
+        Self { kind: PoolKind::Max, k, stride, pad }
+    }
+
+    /// Average pool of the given geometry.
+    pub fn avg(k: usize, stride: usize, pad: usize) -> Self {
+        Self { kind: PoolKind::Avg, k, stride, pad }
+    }
+
+    /// Output spatial size under Caffe's ceil-mode convention: the last
+    /// window may hang off the padded edge (it gets clipped to the
+    /// in-bounds taps), but every window must *start* inside
+    /// `input + pad`. This reproduces the published schedules exactly —
+    /// e.g. GoogleNet's 3×3 stride-2 pool maps 56 → 28 (ceil), while
+    /// AlexNet's maps 55 → 27 and VGG's 2×2 stride-2 maps 224 → 112
+    /// (both exact).
+    pub fn out_hw(&self, in_hw: usize) -> crate::Result<usize> {
+        if self.k == 0 || self.stride == 0 {
+            return Err(crate::Error::Config(format!(
+                "pool kernel/stride must be non-zero (k={}, stride={})",
+                self.k, self.stride
+            )));
+        }
+        if self.pad >= self.k {
+            return Err(crate::Error::Config(format!(
+                "pool pad {} must be smaller than kernel {}",
+                self.pad, self.k
+            )));
+        }
+        let padded = in_hw + 2 * self.pad;
+        if padded < self.k {
+            return Err(crate::Error::Shape(format!(
+                "{in_hw}×{in_hw} input (pad {}) smaller than {}×{} pool window",
+                self.pad, self.k, self.k
+            )));
+        }
+        // ceil((padded - k) / stride) + 1 …
+        let mut out = (padded - self.k).div_ceil(self.stride) + 1;
+        // … clipped so the last window starts inside input + pad.
+        if (out - 1) * self.stride >= in_hw + self.pad {
+            out -= 1;
+        }
+        Ok(out)
+    }
+}
+
+/// One node of a declared network schedule. See the module docs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TopoOp {
+    /// Convolution of `Network::layers[i]` (ReLU + requantization are
+    /// implicit — every conv in the zoo is activation-fused).
+    Conv(usize),
+    Pool(PoolSpec),
+    /// Parallel arms over one input, concatenated along channels in arm
+    /// order. Arms may not contain `GlobalAvgPool`/`Fc`.
+    Branch(Vec<Vec<TopoOp>>),
+    /// Global average pool: i64 sum then floor division, collapsing
+    /// (N, C, H, W) → (N, C).
+    GlobalAvgPool,
+    /// Fully connected classifier head over an `fc` weight layer.
+    /// Only valid after `GlobalAvgPool`.
+    Fc,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_mode_matches_published_schedules() {
+        let p3s2 = PoolSpec::max(3, 2, 0);
+        // AlexNet: 55 → 27 → 13 → 6 (exact divisions).
+        assert_eq!(p3s2.out_hw(55).unwrap(), 27);
+        assert_eq!(p3s2.out_hw(27).unwrap(), 13);
+        assert_eq!(p3s2.out_hw(13).unwrap(), 6);
+        // GoogleNet: 112 → 56, 56 → 28, 28 → 14, 14 → 7 (ceil mode).
+        assert_eq!(p3s2.out_hw(112).unwrap(), 56);
+        assert_eq!(p3s2.out_hw(56).unwrap(), 28);
+        assert_eq!(p3s2.out_hw(28).unwrap(), 14);
+        assert_eq!(p3s2.out_hw(14).unwrap(), 7);
+        // VGG / tiny CNN: 2×2 stride-2 halves even extents exactly.
+        let p2s2 = PoolSpec::max(2, 2, 0);
+        assert_eq!(p2s2.out_hw(224).unwrap(), 112);
+        assert_eq!(p2s2.out_hw(16).unwrap(), 8);
+    }
+
+    #[test]
+    fn clip_keeps_windows_starting_inside() {
+        // 13 with k=3 s=2: naive ceil((13-3)/2)+1 = 6 and the window at
+        // oy=5 starts at 10 < 13 — no clip needed, stays 6 (a start-
+        // inside-only rule would wrongly allow a 7th window at 12).
+        assert_eq!(PoolSpec::max(3, 2, 0).out_hw(13).unwrap(), 6);
+        // Same-size pool: 3×3 stride-1 pad-1 preserves any extent
+        // (the inception pool-proj arm's geometry).
+        let same = PoolSpec::max(3, 1, 1);
+        for hw in [2usize, 7, 14, 28] {
+            assert_eq!(same.out_hw(hw).unwrap(), hw);
+        }
+    }
+
+    #[test]
+    fn degenerate_pools_rejected() {
+        assert!(PoolSpec::max(3, 2, 0).out_hw(2).is_err()); // window > input
+        assert!(PoolSpec::max(0, 2, 0).out_hw(8).is_err()); // k = 0
+        assert!(PoolSpec { kind: PoolKind::Max, k: 2, stride: 0, pad: 0 }
+            .out_hw(8)
+            .is_err()); // stride = 0
+        assert!(PoolSpec::max(2, 2, 2).out_hw(8).is_err()); // pad ≥ k
+    }
+}

@@ -1,52 +1,84 @@
 //! The five-network zoo of the paper's evaluation (§IV): AlexNet,
-//! GoogleNet, VGG-16, VGG-19 and NiN — conv layers only, with the input
-//! spatial sizes that follow each network's pooling schedule.
+//! GoogleNet, VGG-16, VGG-19 and NiN — conv layers plus each network's
+//! *declared* execution schedule (pooling stages, inception branching,
+//! NiN's global-average head).
 //!
-//! Shapes follow the canonical Caffe Model Zoo prototxts the paper cites.
+//! Shapes and schedules follow the canonical Caffe Model Zoo prototxts
+//! the paper cites: AlexNet/NiN pool 3×3 stride 2, VGG pools 2×2
+//! stride 2 after every block, GoogleNet interleaves 3×3 stride-2
+//! pools (ceil mode) with its nine four-arm inception modules.
 
 use super::layer::{ConvLayer, Network};
+use super::topology::{PoolSpec, TopoOp};
 
 fn conv(name: &str, in_c: usize, out_c: usize, k: usize, stride: usize, pad: usize, in_hw: usize) -> ConvLayer {
     ConvLayer { name: name.to_string(), in_c, out_c, k, stride, pad, in_hw }
 }
 
-/// AlexNet (single-tower Caffe variant): 5 conv layers.
+/// The max-pool geometry shared by AlexNet, NiN and GoogleNet.
+fn pool3s2() -> TopoOp {
+    TopoOp::Pool(PoolSpec::max(3, 2, 0))
+}
+
+/// AlexNet (single-tower Caffe variant): 5 conv layers, 3×3 stride-2
+/// max pools after conv1, conv2 and conv5.
 pub fn alexnet() -> Network {
-    Network {
-        name: "alexnet".into(),
-        layers: vec![
+    Network::with_schedule(
+        "alexnet",
+        vec![
             conv("conv1", 3, 96, 11, 4, 0, 227),
             conv("conv2", 96, 256, 5, 1, 2, 27),
             conv("conv3", 256, 384, 3, 1, 1, 13),
             conv("conv4", 384, 384, 3, 1, 1, 13),
             conv("conv5", 384, 256, 3, 1, 1, 13),
         ],
-    }
+        vec![
+            TopoOp::Conv(0), // 227 → 55
+            pool3s2(),       // 55 → 27
+            TopoOp::Conv(1),
+            pool3s2(), // 27 → 13
+            TopoOp::Conv(2),
+            TopoOp::Conv(3),
+            TopoOp::Conv(4),
+            pool3s2(), // 13 → 6
+        ],
+    )
 }
 
-/// VGG-16: 13 conv layers, all 3×3 pad 1.
-pub fn vgg16() -> Network {
+/// The VGG conv stack shared by VGG-16 and VGG-19: `n` convs per block,
+/// a 2×2 stride-2 max pool after every block.
+fn vgg(name: &str, blocks: &[(usize, usize, usize, usize, usize)]) -> Network {
     let mut layers = Vec::new();
-    // (block, convs, in_c, out_c, in_hw)
-    let blocks = [
-        (1, 2, 3, 64, 224),
-        (2, 2, 64, 128, 112),
-        (3, 3, 128, 256, 56),
-        (4, 3, 256, 512, 28),
-        (5, 3, 512, 512, 14),
-    ];
-    for (b, n, in_c, out_c, hw) in blocks {
+    let mut schedule = Vec::new();
+    for &(b, n, in_c, out_c, hw) in blocks {
         for i in 1..=n {
             let ic = if i == 1 { in_c } else { out_c };
+            schedule.push(TopoOp::Conv(layers.len()));
             layers.push(conv(&format!("conv{b}_{i}"), ic, out_c, 3, 1, 1, hw));
         }
+        schedule.push(TopoOp::Pool(PoolSpec::max(2, 2, 0)));
     }
-    Network { name: "vgg16".into(), layers }
+    Network::with_schedule(name, layers, schedule)
+}
+
+/// VGG-16: 13 conv layers, all 3×3 pad 1; 5 pools.
+pub fn vgg16() -> Network {
+    // (block, convs, in_c, out_c, in_hw)
+    vgg(
+        "vgg16",
+        &[
+            (1, 2, 3, 64, 224),
+            (2, 2, 64, 128, 112),
+            (3, 3, 128, 256, 56),
+            (4, 3, 256, 512, 28),
+            (5, 3, 512, 512, 14),
+        ],
+    )
 }
 
 /// One pooling block of VGG-16 as a standalone chain network — the
-/// plan executor's canonical non-tiny workload (`conv{b}_1..` layers,
-/// all 3×3 stride-1 pad-1, same spatial size within the block).
+/// plan executor's canonical non-tiny sequential workload (`conv{b}_1..`
+/// layers, all 3×3 stride-1 pad-1, same spatial size within the block).
 pub fn vgg16_block(block: usize) -> crate::Result<Network> {
     let prefix = format!("conv{block}_");
     let layers: Vec<ConvLayer> = vgg16()
@@ -59,77 +91,143 @@ pub fn vgg16_block(block: usize) -> crate::Result<Network> {
             "vgg16 has no block {block} (want 1..=5)"
         )));
     }
-    Ok(Network { name: format!("vgg16_block{block}"), layers })
+    Ok(Network::sequential(format!("vgg16_block{block}"), layers))
 }
 
-/// VGG-19: 16 conv layers (blocks 3–5 have four convs).
+/// VGG-19: 16 conv layers (blocks 3–5 have four convs); 5 pools.
 pub fn vgg19() -> Network {
-    let mut layers = Vec::new();
-    let blocks = [
-        (1, 2, 3, 64, 224),
-        (2, 2, 64, 128, 112),
-        (3, 4, 128, 256, 56),
-        (4, 4, 256, 512, 28),
-        (5, 4, 512, 512, 14),
+    vgg(
+        "vgg19",
+        &[
+            (1, 2, 3, 64, 224),
+            (2, 2, 64, 128, 112),
+            (3, 4, 128, 256, 56),
+            (4, 4, 256, 512, 28),
+            (5, 4, 512, 512, 14),
+        ],
+    )
+}
+
+/// Network-in-Network (ImageNet): 4 conv + 8 cccp (1×1 conv) layers,
+/// 3×3 stride-2 max pools between the mlpconv stacks and a global
+/// average pool head (no FC — cccp8's 1000 channels are the logits).
+pub fn nin() -> Network {
+    let layers = vec![
+        conv("conv1", 3, 96, 11, 4, 0, 227),
+        conv("cccp1", 96, 96, 1, 1, 0, 55),
+        conv("cccp2", 96, 96, 1, 1, 0, 55),
+        conv("conv2", 96, 256, 5, 1, 2, 27),
+        conv("cccp3", 256, 256, 1, 1, 0, 27),
+        conv("cccp4", 256, 256, 1, 1, 0, 27),
+        conv("conv3", 256, 384, 3, 1, 1, 13),
+        conv("cccp5", 384, 384, 1, 1, 0, 13),
+        conv("cccp6", 384, 384, 1, 1, 0, 13),
+        conv("conv4-1024", 384, 1024, 3, 1, 1, 6),
+        conv("cccp7", 1024, 1024, 1, 1, 0, 6),
+        conv("cccp8", 1024, 1000, 1, 1, 0, 6),
     ];
-    for (b, n, in_c, out_c, hw) in blocks {
-        for i in 1..=n {
-            let ic = if i == 1 { in_c } else { out_c };
-            layers.push(conv(&format!("conv{b}_{i}"), ic, out_c, 3, 1, 1, hw));
+    let mut schedule = Vec::new();
+    for (stack, end) in [(0usize..3, true), (3..6, true), (6..9, true), (9..12, false)] {
+        for i in stack {
+            schedule.push(TopoOp::Conv(i));
+        }
+        if end {
+            schedule.push(pool3s2()); // 55 → 27 → 13 → 6
         }
     }
-    Network { name: "vgg19".into(), layers }
+    schedule.push(TopoOp::GlobalAvgPool); // Caffe pool4: 6×6 global ave
+    Network::with_schedule("nin", layers, schedule)
 }
 
-/// Network-in-Network (ImageNet): 4 conv + 8 cccp (1×1 conv) layers.
-pub fn nin() -> Network {
-    Network {
-        name: "nin".into(),
-        layers: vec![
-            conv("conv1", 3, 96, 11, 4, 0, 227),
-            conv("cccp1", 96, 96, 1, 1, 0, 55),
-            conv("cccp2", 96, 96, 1, 1, 0, 55),
-            conv("conv2", 96, 256, 5, 1, 2, 27),
-            conv("cccp3", 256, 256, 1, 1, 0, 27),
-            conv("cccp4", 256, 256, 1, 1, 0, 27),
-            conv("conv3", 256, 384, 3, 1, 1, 13),
-            conv("cccp5", 384, 384, 1, 1, 0, 13),
-            conv("cccp6", 384, 384, 1, 1, 0, 13),
-            conv("conv4-1024", 384, 1024, 3, 1, 1, 6),
-            conv("cccp7", 1024, 1024, 1, 1, 0, 6),
-            conv("cccp8", 1024, 1000, 1, 1, 0, 6),
-        ],
-    }
+/// One inception module's spec:
+/// (name, in_c, hw, n1x1, n3x3r, n3x3, n5x5r, n5x5, pool_proj).
+type InceptionSpec = (&'static str, usize, usize, usize, usize, usize, usize, usize, usize);
+
+/// GoogleNet's nine inception modules.
+const INCEPTION_MODULES: [InceptionSpec; 9] = [
+    ("3a", 192, 28, 64, 96, 128, 16, 32, 32),
+    ("3b", 256, 28, 128, 128, 192, 32, 96, 64),
+    ("4a", 480, 14, 192, 96, 208, 16, 48, 64),
+    ("4b", 512, 14, 160, 112, 224, 24, 64, 64),
+    ("4c", 512, 14, 128, 128, 256, 24, 64, 64),
+    ("4d", 512, 14, 112, 144, 288, 32, 64, 64),
+    ("4e", 528, 14, 256, 160, 320, 32, 128, 128),
+    ("5a", 832, 7, 256, 160, 320, 32, 128, 128),
+    ("5b", 832, 7, 384, 192, 384, 48, 128, 128),
+];
+
+/// Push one inception module's six conv layers; returns the index of
+/// its first layer (the 1×1 arm).
+fn push_inception_layers(
+    layers: &mut Vec<ConvLayer>,
+    (m, in_c, hw, n1, n3r, n3, n5r, n5, pp): InceptionSpec,
+) -> usize {
+    let base = layers.len();
+    layers.push(conv(&format!("inception_{m}/1x1"), in_c, n1, 1, 1, 0, hw));
+    layers.push(conv(&format!("inception_{m}/3x3_reduce"), in_c, n3r, 1, 1, 0, hw));
+    layers.push(conv(&format!("inception_{m}/3x3"), n3r, n3, 3, 1, 1, hw));
+    layers.push(conv(&format!("inception_{m}/5x5_reduce"), in_c, n5r, 1, 1, 0, hw));
+    layers.push(conv(&format!("inception_{m}/5x5"), n5r, n5, 5, 1, 2, hw));
+    layers.push(conv(&format!("inception_{m}/pool_proj"), in_c, pp, 1, 1, 0, hw));
+    base
 }
 
-/// GoogleNet (Inception v1): stem + 9 inception modules = 57 conv layers.
+/// The four-arm branch of an inception module whose first layer sits at
+/// `base`: 1×1 | 1×1→3×3 | 1×1→5×5 | 3×3-s1-pool→1×1, concatenated
+/// along channels in that (Caffe concat) order.
+fn inception_branch(base: usize) -> TopoOp {
+    TopoOp::Branch(vec![
+        vec![TopoOp::Conv(base)],
+        vec![TopoOp::Conv(base + 1), TopoOp::Conv(base + 2)],
+        vec![TopoOp::Conv(base + 3), TopoOp::Conv(base + 4)],
+        vec![TopoOp::Pool(PoolSpec::max(3, 1, 1)), TopoOp::Conv(base + 5)],
+    ])
+}
+
+/// GoogleNet (Inception v1): stem + 9 inception modules = 57 conv
+/// layers; 3×3 stride-2 ceil-mode pools after the stem, after module
+/// 3b and after module 4e; global average pool head.
 pub fn googlenet() -> Network {
     let mut layers = vec![
         conv("conv1/7x7_s2", 3, 64, 7, 2, 3, 224),
         conv("conv2/3x3_reduce", 64, 64, 1, 1, 0, 56),
         conv("conv2/3x3", 64, 192, 3, 1, 1, 56),
     ];
-    // (name, in_c, hw, n1x1, n3x3r, n3x3, n5x5r, n5x5, pool_proj)
-    let modules: [(&str, usize, usize, usize, usize, usize, usize, usize, usize); 9] = [
-        ("3a", 192, 28, 64, 96, 128, 16, 32, 32),
-        ("3b", 256, 28, 128, 128, 192, 32, 96, 64),
-        ("4a", 480, 14, 192, 96, 208, 16, 48, 64),
-        ("4b", 512, 14, 160, 112, 224, 24, 64, 64),
-        ("4c", 512, 14, 128, 128, 256, 24, 64, 64),
-        ("4d", 512, 14, 112, 144, 288, 32, 64, 64),
-        ("4e", 528, 14, 256, 160, 320, 32, 128, 128),
-        ("5a", 832, 7, 256, 160, 320, 32, 128, 128),
-        ("5b", 832, 7, 384, 192, 384, 48, 128, 128),
+    let mut schedule = vec![
+        TopoOp::Conv(0), // 224 → 112
+        pool3s2(),       // 112 → 56
+        TopoOp::Conv(1),
+        TopoOp::Conv(2),
+        pool3s2(), // 56 → 28
     ];
-    for (m, in_c, hw, n1, n3r, n3, n5r, n5, pp) in modules {
-        layers.push(conv(&format!("inception_{m}/1x1"), in_c, n1, 1, 1, 0, hw));
-        layers.push(conv(&format!("inception_{m}/3x3_reduce"), in_c, n3r, 1, 1, 0, hw));
-        layers.push(conv(&format!("inception_{m}/3x3"), n3r, n3, 3, 1, 1, hw));
-        layers.push(conv(&format!("inception_{m}/5x5_reduce"), in_c, n5r, 1, 1, 0, hw));
-        layers.push(conv(&format!("inception_{m}/5x5"), n5r, n5, 5, 1, 2, hw));
-        layers.push(conv(&format!("inception_{m}/pool_proj"), in_c, pp, 1, 1, 0, hw));
+    for module in INCEPTION_MODULES {
+        let base = push_inception_layers(&mut layers, module);
+        schedule.push(inception_branch(base));
+        if module.0 == "3b" || module.0 == "4e" {
+            schedule.push(pool3s2()); // 28 → 14, 14 → 7
+        }
     }
-    Network { name: "googlenet".into(), layers }
+    schedule.push(TopoOp::GlobalAvgPool); // Caffe pool5: 7×7 global ave
+    Network::with_schedule("googlenet", layers, schedule)
+}
+
+/// One GoogleNet inception module as a standalone network: a 1×1
+/// identity-shaped stem conv feeding the module's four arms. The
+/// plan executor's canonical branching workload for tests/benches.
+pub fn inception_module(m: &str) -> crate::Result<Network> {
+    let module = INCEPTION_MODULES
+        .into_iter()
+        .find(|spec| spec.0 == m)
+        .ok_or_else(|| {
+            crate::Error::Config(format!(
+                "unknown inception module `{m}` (want 3a|3b|4a|4b|4c|4d|4e|5a|5b)"
+            ))
+        })?;
+    let (_, in_c, hw, ..) = module;
+    let mut layers = vec![conv(&format!("inception_{m}/stem_1x1"), in_c, in_c, 1, 1, 0, hw)];
+    let base = push_inception_layers(&mut layers, module);
+    let schedule = vec![TopoOp::Conv(0), inception_branch(base)];
+    Ok(Network::with_schedule(format!("inception_{m}"), layers, schedule))
 }
 
 /// All five networks of the evaluation, in the paper's order.
@@ -152,17 +250,25 @@ pub fn by_name(name: &str) -> crate::Result<Network> {
 }
 
 /// The tiny CNN trained by `python/compile/aot.py` for the end-to-end
-/// driver: 3 conv layers over 16×16 synthetic images. Must stay in sync
-/// with `python/compile/model.py::TINY_CNN_SPEC`.
+/// driver: 3 conv layers over 16×16 synthetic images with 2×2 stride-2
+/// pools after conv1 and conv2. Must stay in sync with
+/// `python/compile/model.py::TINY_CNN_SPEC`.
 pub fn tiny_cnn() -> Network {
-    Network {
-        name: "tiny_cnn".into(),
-        layers: vec![
+    Network::with_schedule(
+        "tiny_cnn",
+        vec![
             conv("conv1", 1, 8, 3, 1, 1, 16),
             conv("conv2", 8, 16, 3, 1, 1, 8),
             conv("conv3", 16, 16, 3, 1, 1, 4),
         ],
-    }
+        vec![
+            TopoOp::Conv(0),
+            TopoOp::Pool(PoolSpec::max(2, 2, 0)), // 16 → 8
+            TopoOp::Conv(1),
+            TopoOp::Pool(PoolSpec::max(2, 2, 0)), // 8 → 4
+            TopoOp::Conv(2),
+        ],
+    )
 }
 
 #[cfg(test)]
@@ -203,11 +309,56 @@ mod tests {
         }
     }
 
+    /// The declared schedules reproduce each layer's recorded `in_hw`
+    /// when propagated from the network's true input size — i.e. the
+    /// schedule and the per-layer spatial bookkeeping agree exactly.
+    #[test]
+    fn declared_schedules_reproduce_recorded_spatial_sizes() {
+        for net in all().into_iter().chain([tiny_cnn()]) {
+            let first_hw = net.layers[0].in_hw;
+            let re = net.scaled(1, first_hw);
+            for (orig, prop) in net.layers.iter().zip(&re.layers) {
+                assert_eq!(
+                    orig.in_hw, prop.in_hw,
+                    "{}: `{}` declares in_hw {} but its schedule delivers {}",
+                    net.name, orig.name, orig.in_hw, prop.in_hw
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn schedules_cover_every_layer_exactly_once() {
+        fn count(ops: &[TopoOp], used: &mut [u32]) {
+            for op in ops {
+                match op {
+                    TopoOp::Conv(i) => used[*i] += 1,
+                    TopoOp::Branch(arms) => arms.iter().for_each(|a| count(a, used)),
+                    _ => {}
+                }
+            }
+        }
+        for net in all().into_iter().chain([tiny_cnn()]) {
+            let mut used = vec![0u32; net.layers.len()];
+            count(&net.schedule, &mut used);
+            for (l, n) in net.layers.iter().zip(&used) {
+                assert_eq!(*n, 1, "{}: layer `{}` scheduled {} times", net.name, l.name, n);
+            }
+        }
+    }
+
     #[test]
     fn vgg_spatial_sizes_halve() {
         let net = vgg16();
         assert_eq!(net.layer("conv1_1").unwrap().out_hw(), 224);
         assert_eq!(net.layer("conv5_3").unwrap().out_hw(), 14);
+        // Five blocks ⇒ five declared pools.
+        let pools = net
+            .schedule
+            .iter()
+            .filter(|op| matches!(op, TopoOp::Pool(_)))
+            .count();
+        assert_eq!(pools, 5);
     }
 
     #[test]
@@ -217,7 +368,47 @@ mod tests {
         assert_eq!(b3.layers.len(), 3);
         assert_eq!(b3.layers[0].in_c, 128);
         assert!(b3.layers.iter().all(|l| l.out_c == 256 && l.in_hw == 56));
+        // Pool-free sequential schedule.
+        assert_eq!(b3.schedule, vec![TopoOp::Conv(0), TopoOp::Conv(1), TopoOp::Conv(2)]);
         assert!(vgg16_block(6).is_err());
+    }
+
+    #[test]
+    fn scaled_branch_concat_channels_stay_consistent() {
+        // Divisor 3 divides none of the inception arm widths: the
+        // floored arm sum (64/3 + 128/3 + 32/3 + 32/3 = 83) is less
+        // than the floored original concat (256/3 = 85). `scaled`
+        // propagates channels, so the consumers inherit the true sum
+        // and the chain still lowers.
+        let g = googlenet().scaled(3, 224);
+        let arm_sum = 64 / 3 + 128 / 3 + 32 / 3 + 32 / 3;
+        for name in [
+            "inception_3b/1x1",
+            "inception_3b/3x3_reduce",
+            "inception_3b/5x5_reduce",
+            "inception_3b/pool_proj",
+        ] {
+            assert_eq!(g.layer(name).unwrap().in_c, arm_sum, "{name}");
+        }
+        // Within-arm chaining propagates too: 3b's 3×3 consumes its
+        // reduce's floored output.
+        assert_eq!(
+            g.layer("inception_3b/3x3").unwrap().in_c,
+            g.layer("inception_3b/3x3_reduce").unwrap().out_c,
+        );
+    }
+
+    #[test]
+    fn inception_module_is_stem_plus_branch() {
+        let m = inception_module("3a").unwrap();
+        assert_eq!(m.layers.len(), 7);
+        assert_eq!(m.layers[0].in_c, 192);
+        assert_eq!(m.layers[0].out_c, 192);
+        match &m.schedule[1] {
+            TopoOp::Branch(arms) => assert_eq!(arms.len(), 4),
+            other => panic!("expected a branch, got {other:?}"),
+        }
+        assert!(inception_module("9z").is_err());
     }
 
     #[test]
@@ -232,7 +423,7 @@ mod tests {
     fn tiny_cnn_shapes_chain() {
         let t = tiny_cnn();
         assert_eq!(t.layers[0].out_hw(), 16);
-        // conv2 input is 8 after 2× pooling recorded in in_hw.
+        // conv2 input is 8 after the declared 2× pool.
         assert_eq!(t.layers[1].in_hw, 8);
         assert_eq!(t.layers[1].in_c, t.layers[0].out_c);
         assert_eq!(t.layers[2].in_c, t.layers[1].out_c);

@@ -74,11 +74,12 @@ fn knead_filter_lanes(wl: &LoadedLayer, lane_len: usize, ks: usize, mode: Mode) 
 }
 
 impl CompiledNetwork {
-    /// Compile `weights` against the topology of `net`.
+    /// Compile `weights` against the declared topology of `net`.
     ///
     /// Errors if the weight set does not match the topology, the
-    /// topology's pooling schedule cannot be derived (see
-    /// [`derive_graph`]), or `ks` is out of the supported 2..=256.
+    /// declared schedule does not validate (shape chaining, branch arm
+    /// agreement, one use per layer — see [`derive_graph`]), or `ks`
+    /// is out of the supported 2..=256.
     pub fn compile(
         net: &Network,
         weights: &LoadedWeights,
@@ -178,11 +179,17 @@ impl CompiledNetwork {
     }
 
     /// Validate that `x` is a plausible (N, C, H, W) input batch for
-    /// this plan's first conv layer; returns the batch size.
+    /// the first conv layer the plan *executes* (the schedule need not
+    /// open with layer 0); returns the batch size.
     pub fn check_input(&self, x: &Tensor<i32>) -> crate::Result<usize> {
-        let first = self.convs.first().ok_or_else(|| {
-            crate::Error::Config("plan has no conv layers".into())
-        })?;
+        let first = self
+            .ops
+            .iter()
+            .find_map(|op| match op {
+                PlanOp::Conv { layer, .. } => self.convs.get(*layer),
+                _ => None,
+            })
+            .ok_or_else(|| crate::Error::Config("plan has no conv layers".into()))?;
         match *x.shape() {
             [n, c, _, _] if c == first.in_c => Ok(n),
             [_, c, _, _] => Err(crate::Error::Shape(format!(

@@ -7,14 +7,22 @@
 //! every filter (the same reuse the legacy scalar path exploited), and
 //! `par_map`'s striped assignment keeps the output order deterministic,
 //! so results are bit-identical for any `TETRIS_THREADS` setting.
-//! The FC head fans out over batch rows.
+//! The FC head fans out over batch rows. Branch arms run in sequence —
+//! each arm's convs already saturate the worker pool — and concatenate
+//! along the channel axis in arm order.
 //!
-//! Every arithmetic step mirrors `runtime::quantized::forward_scalar`
-//! exactly (same gather order, same group windows, same `i64 → i32`
-//! casts), which is what makes invariant I5 — plan ≡ scalar, bit for
-//! bit — hold by construction and testable by equality.
+//! Every arithmetic step mirrors a plain scalar reference exactly (same
+//! gather order, same group windows, same `i64 → i32` casts): the
+//! legacy `runtime::quantized::forward_scalar` pipeline for the tiny
+//! CNN, and the naive MAC interpreter `model::reference` for the full
+//! declared-topology zoo. That is what makes invariant I5
+//! — plan ≡ scalar, bit for bit — hold by construction and testable by
+//! equality. Pool windows use Caffe ceil-mode sizing
+//! ([`PoolSpec::out_hw`]); max pools take the window's in-bounds
+//! maximum (padding never wins), average pools floor-divide the i64 sum
+//! by the in-bounds tap count.
 
-use crate::model::Tensor;
+use crate::model::{PoolKind, PoolSpec, Tensor};
 use crate::quant::requantize;
 use crate::sac::{rear_adder_tree, split_kneaded, SegmentRegisters};
 use crate::util::pool::par_map;
@@ -26,32 +34,49 @@ impl CompiledNetwork {
     /// Execute the plan on a Q8.8 input batch (N, C, H, W).
     ///
     /// Returns int32 logits (N, classes) for classifier plans, or the
-    /// final feature map (N, C', H', W') for conv-only plans. The input
-    /// spatial size may differ from the zoo's recorded `in_hw` — the
-    /// executor derives all spatial extents from the tensor itself
-    /// (used by tests/benches to run scaled workloads).
+    /// final feature map — (N, C', H', W'), or (N, C') after a declared
+    /// global-average head — for conv-only plans. The input spatial
+    /// size may differ from the zoo's recorded `in_hw` — the executor
+    /// derives all spatial extents from the tensor itself (used by
+    /// tests/benches to run scaled workloads).
     pub fn execute(&self, x: &Tensor<i32>) -> crate::Result<Tensor<i32>> {
         self.check_input(x)?;
-        let mut h = x.clone();
-        for op in &self.ops {
-            match *op {
+        self.run_ops(&self.ops, x.clone())
+    }
+
+    /// Walk one op list (the whole plan, or one branch arm).
+    fn run_ops(&self, ops: &[PlanOp], mut h: Tensor<i32>) -> crate::Result<Tensor<i32>> {
+        for op in ops {
+            h = match op {
                 PlanOp::Conv { layer, pad, stride } => {
-                    h = conv_parallel(&self.convs[layer], &h, pad, stride, self.mode)?;
+                    conv_parallel(&self.convs[*layer], &h, *pad, *stride, self.mode)?
                 }
                 PlanOp::ReluRequant { frac_bits } => {
                     for v in h.data_mut() {
-                        *v = requantize(*v, frac_bits).max(0);
+                        *v = requantize(*v, *frac_bits).max(0);
                     }
+                    h
                 }
-                PlanOp::MaxPool2 => h = maxpool2(&h)?,
-                PlanOp::GlobalAvgPool => h = global_avg_pool(&h)?,
+                PlanOp::Pool(spec) => pool(&h, *spec)?,
+                PlanOp::Branch { arms } => {
+                    // derive_graph guarantees ≥2 arms; the last arm
+                    // takes `h` by move instead of one more clone.
+                    let (last, init) = arms.split_last().expect("branch has arms");
+                    let mut parts = Vec::with_capacity(arms.len());
+                    for arm in init {
+                        parts.push(self.run_ops(arm, h.clone())?);
+                    }
+                    parts.push(self.run_ops(last, h)?);
+                    concat_channels(&parts)?
+                }
+                PlanOp::GlobalAvgPool => global_avg_pool(&h)?,
                 PlanOp::Fc => {
                     let fc = self.fc.as_ref().ok_or_else(|| {
                         crate::Error::Config("plan has an Fc op but no compiled head".into())
                     })?;
-                    h = fc_parallel(fc, &h, self.mode)?;
+                    fc_parallel(fc, &h, self.mode)?
                 }
-            }
+            };
         }
         Ok(h)
     }
@@ -143,34 +168,89 @@ fn conv_parallel(
     Ok(out)
 }
 
-// The pool/GAP/relu bodies below duplicate the private helpers in
-// `runtime::quantized` ON PURPOSE: that module is the frozen legacy
-// *reference*, and invariant I5 compares two independent
-// implementations — sharing the code would blind the property tests
-// to a bug in the shared half. The tiny-CNN I5 suite exercises every
-// one of these ops on both paths, so any drift fails loudly.
+// The pool/GAP/relu bodies below duplicate the scalar reference paths
+// (`runtime::quantized` and the naive interpreter `model::reference`)
+// ON PURPOSE: invariant I5 compares two independent implementations —
+// sharing the code would blind the property tests to a bug in the
+// shared half. The I5 suites exercise every one of these ops on both
+// paths, so any drift fails loudly.
 
-/// 2×2 stride-2 integer max pool (truncates odd extents, like the
-/// legacy pipeline).
-fn maxpool2(x: &Tensor<i32>) -> crate::Result<Tensor<i32>> {
+/// Parameterized integer pool (Caffe ceil-mode geometry).
+fn pool(x: &Tensor<i32>, spec: PoolSpec) -> crate::Result<Tensor<i32>> {
     let [n, c, h, w] = match *x.shape() {
         [n, c, h, w] => [n, c, h, w],
         _ => return Err(crate::Error::Shape("pool input must be 4-D".into())),
     };
-    let mut out: Tensor<i32> = Tensor::zeros(&[n, c, h / 2, w / 2]);
+    let (oh, ow) = (spec.out_hw(h)?, spec.out_hw(w)?);
+    let (k, stride, pad) = (spec.k, spec.stride, spec.pad);
+    let mut out: Tensor<i32> = Tensor::zeros(&[n, c, oh, ow]);
     for b in 0..n {
         for cc in 0..c {
-            for y in 0..h / 2 {
-                for xph in 0..w / 2 {
-                    let m = x
-                        .get4(b, cc, 2 * y, 2 * xph)
-                        .max(x.get4(b, cc, 2 * y, 2 * xph + 1))
-                        .max(x.get4(b, cc, 2 * y + 1, 2 * xph))
-                        .max(x.get4(b, cc, 2 * y + 1, 2 * xph + 1));
-                    out.set4(b, cc, y, xph, m);
+            for oy in 0..oh {
+                // Window rows clipped to the input (pad taps excluded).
+                let y0 = (oy * stride).saturating_sub(pad);
+                let y1 = (oy * stride + k - pad).min(h);
+                for ox in 0..ow {
+                    let x0 = (ox * stride).saturating_sub(pad);
+                    let x1 = (ox * stride + k - pad).min(w);
+                    let v = match spec.kind {
+                        PoolKind::Max => {
+                            let mut m = i32::MIN;
+                            for y in y0..y1 {
+                                for xx in x0..x1 {
+                                    m = m.max(x.get4(b, cc, y, xx));
+                                }
+                            }
+                            m
+                        }
+                        PoolKind::Avg => {
+                            let mut s: i64 = 0;
+                            for y in y0..y1 {
+                                for xx in x0..x1 {
+                                    s += x.get4(b, cc, y, xx) as i64;
+                                }
+                            }
+                            let taps = ((y1 - y0) * (x1 - x0)) as i64;
+                            s.div_euclid(taps) as i32
+                        }
+                    };
+                    out.set4(b, cc, oy, ox, v);
                 }
             }
         }
+    }
+    Ok(out)
+}
+
+/// Concatenate feature maps along the channel axis (branch arm order).
+fn concat_channels(parts: &[Tensor<i32>]) -> crate::Result<Tensor<i32>> {
+    let [n, _, h, w] = match parts.first().map(|p| p.shape()) {
+        Some(&[n, c, h, w]) => [n, c, h, w],
+        _ => return Err(crate::Error::Shape("concat needs 4-D inputs".into())),
+    };
+    let mut total_c = 0usize;
+    for p in parts {
+        match *p.shape() {
+            [pn, pc, ph, pw] if pn == n && ph == h && pw == w => total_c += pc,
+            _ => {
+                return Err(crate::Error::Shape(format!(
+                    "concat arm shape {:?} incompatible with (N={n}, H={h}, W={w})",
+                    p.shape()
+                )))
+            }
+        }
+    }
+    let plane = h * w;
+    let mut out: Tensor<i32> = Tensor::zeros(&[n, total_c, h, w]);
+    let mut c_off = 0usize;
+    for p in parts {
+        let pc = p.shape()[1];
+        for b in 0..n {
+            let src = &p.data()[b * pc * plane..(b + 1) * pc * plane];
+            let dst = (b * total_c + c_off) * plane;
+            out.data_mut()[dst..dst + pc * plane].copy_from_slice(src);
+        }
+        c_off += pc;
     }
     Ok(out)
 }
@@ -271,6 +351,54 @@ mod tests {
         assert!(plan.execute(&Tensor::zeros(&[1, 2, 16, 16])).is_err());
     }
 
+    #[test]
+    fn pool_2x2_matches_legacy_truncating_maxpool_on_even_extents() {
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1, 9, -4, 3]).unwrap();
+        let p = pool(&x, PoolSpec::max(2, 2, 0)).unwrap();
+        assert_eq!(p.shape(), &[1, 1, 1, 1]);
+        assert_eq!(p.data(), &[9]);
+    }
+
+    #[test]
+    fn pool_3x3_stride2_uses_ceil_windows() {
+        // 1×8 row, k=3 s=2 pad=1 (the pad keeps the 1-tall height
+        // legal). Width: ceil((8+2-3)/2)+1 = 5 windows, the last one
+        // clipped to the single in-bounds tap at index 7 — padding
+        // never wins a max, so a negative value survives there.
+        let x = Tensor::from_vec(&[1, 1, 1, 8], vec![0, 1, 2, 3, 4, 5, 6, -7]).unwrap();
+        let p = pool(&x, PoolSpec::max(3, 2, 1)).unwrap();
+        assert_eq!(p.shape(), &[1, 1, 1, 5]);
+        assert_eq!(p.data(), &[1, 3, 5, 6, -7]);
+    }
+
+    #[test]
+    fn avg_pool_floor_divides_inbounds_taps() {
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1, 2, 3, -5]).unwrap();
+        let p = pool(&x, PoolSpec::avg(2, 2, 0)).unwrap();
+        // (1+2+3-5) = 1, 4 taps → 1.div_euclid(4) = 0.
+        assert_eq!(p.data(), &[0]);
+        // Padded window clips to in-bounds taps: pad 1, k 2, stride 2 →
+        // out 2×2, each window holds exactly one in-bounds value.
+        let p = pool(&x, PoolSpec::avg(2, 2, 1)).unwrap();
+        assert_eq!(p.shape(), &[1, 1, 2, 2]);
+        assert_eq!(p.data(), &[1, 2, 3, -5]);
+    }
+
+    #[test]
+    fn concat_stacks_channel_slices_in_arm_order() {
+        let a = Tensor::from_vec(&[2, 1, 1, 2], vec![1, 2, 3, 4]).unwrap();
+        let b = Tensor::from_vec(&[2, 2, 1, 2], vec![5, 6, 7, 8, 9, 10, 11, 12]).unwrap();
+        let cat = concat_channels(&[a, b]).unwrap();
+        assert_eq!(cat.shape(), &[2, 3, 1, 2]);
+        assert_eq!(cat.data(), &[1, 2, 5, 6, 7, 8, 3, 4, 9, 10, 11, 12]);
+        // Mismatched spatial sizes are rejected.
+        let c = Tensor::from_vec(&[2, 1, 2, 1], vec![0; 4]).unwrap();
+        let d = Tensor::from_vec(&[2, 1, 1, 2], vec![0; 4]).unwrap();
+        assert!(concat_channels(&[c, d]).is_err());
+    }
+
     // Plan ≡ scalar-forward equivalence (invariant I5) lives in
-    // rust/tests/plan_exec.rs; zero-rekneading in plan_zero_knead.rs.
+    // rust/tests/plan_exec.rs (tiny CNN / VGG block) and
+    // rust/tests/plan_topology.rs (full declared-topology zoo);
+    // zero-rekneading in plan_zero_knead.rs.
 }

@@ -1,17 +1,22 @@
-//! The generic layer-graph IR and its derivation from zoo topology.
+//! The generic layer-graph IR and its lowering from declared zoo
+//! topology.
 //!
-//! A plan is a flat op list (sequential chains only — inception-style
-//! branching is out of scope and rejected with a config error). Pooling
-//! is not stored anywhere in the zoo explicitly; it is *recovered* from
-//! each layer's recorded input spatial size: a 2× drop between one
-//! layer's output and the next layer's input means a 2×2 stride-2 max
-//! pool sits between them (the VGG/tiny-CNN schedule). Any other ratio
-//! (AlexNet/NiN's 3×3 stride-2 pools) cannot be expressed yet.
+//! A plan is the lowered form of a `Network`'s explicit
+//! [`TopoOp`] schedule: every conv expands to `Conv → ReluRequant`,
+//! pools carry their declared geometry ([`PoolSpec`]), and
+//! inception-style branching lowers to a [`PlanOp::Branch`] whose arms
+//! execute over one input and concatenate along channels. Nothing is
+//! *inferred* — earlier revisions recovered pooling from spatial-size
+//! ratios between consecutive layers (and could only express the
+//! VGG-style 2×2 stride-2 schedule); the declared IR expresses the
+//! whole zoo, and lowering only *validates* that the declared shapes
+//! chain (channels and spatial sizes, weight availability, one use per
+//! layer).
 
-use crate::model::{LoadedWeights, Network};
+use crate::model::{LoadedLayer, LoadedWeights, Network, PoolSpec, TopoOp};
 
 /// One node of an execution plan.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum PlanOp {
     /// Convolution of compiled conv layer `layer` (index into
     /// `CompiledNetwork::convs`), zero-padded by `pad`, with `stride`.
@@ -19,22 +24,242 @@ pub enum PlanOp {
     /// ReLU fused with the rounding right-shift requantization by
     /// `frac_bits` (see `quant::requantize`).
     ReluRequant { frac_bits: u32 },
-    /// 2×2 stride-2 integer max pool (truncating on odd extents).
-    MaxPool2,
+    /// Pooling stage with its declared geometry (Caffe ceil-mode
+    /// output sizing; see [`PoolSpec::out_hw`]).
+    Pool(PoolSpec),
+    /// Parallel arms over one input, concatenated along the channel
+    /// axis in arm order (inception modules).
+    Branch { arms: Vec<Vec<PlanOp>> },
     /// Global average pool: i64 sum then floor division (matches the
-    /// Python pipeline's `jnp` floor-divide).
+    /// Python pipeline's `jnp` floor-divide), (N,C,H,W) → (N,C).
     GlobalAvgPool,
     /// Fully connected head over the pre-kneaded class lanes.
     Fc,
 }
 
-/// Derive the op graph for `net` given the weight file's layer set.
+/// Shape state threaded through lowering: (channels, spatial size)
+/// after the most recent op.
+type ShapeState = Option<(usize, usize)>;
+
+/// Validate an `fc` weight layer's reduction dim against the trunk's
+/// pooled channel count — shared by the declared-Fc lowering arm and
+/// the implicit-head append, so both reject mismatched heads at
+/// compile time with one error shape.
+fn check_fc_fits(net: &Network, fl: &LoadedLayer, state: ShapeState) -> crate::Result<()> {
+    if let Some((c, _)) = state {
+        let feat = fl.shape[1] * fl.shape[2] * fl.shape[3];
+        if feat != c {
+            return Err(crate::Error::Shape(format!(
+                "{}: fc weights reduce {feat} features but the \
+                 pooled trunk delivers {c}",
+                net.name
+            )));
+        }
+    }
+    Ok(())
+}
+
+struct Lowering<'a> {
+    net: &'a Network,
+    weights: &'a LoadedWeights,
+    used: Vec<bool>,
+    saw_gap: bool,
+    saw_fc: bool,
+}
+
+impl Lowering<'_> {
+    /// Lower `ops` starting from `state`; returns the lowered ops and
+    /// the shape state after the last op. `depth > 0` inside branch
+    /// arms (where heads and nested branches are rejected).
+    fn lower(
+        &mut self,
+        ops: &[TopoOp],
+        mut state: ShapeState,
+        depth: usize,
+    ) -> crate::Result<(Vec<PlanOp>, ShapeState)> {
+        let mut out = Vec::with_capacity(3 * ops.len());
+        for op in ops {
+            if self.saw_fc || (self.saw_gap && !matches!(op, TopoOp::Fc)) {
+                return Err(crate::Error::Config(format!(
+                    "{}: schedule continues after its classifier head",
+                    self.net.name
+                )));
+            }
+            match op {
+                TopoOp::Conv(i) => {
+                    let l = self.net.layers.get(*i).ok_or_else(|| {
+                        crate::Error::Config(format!(
+                            "{}: schedule references conv #{i} but the network has {} layers",
+                            self.net.name,
+                            self.net.layers.len()
+                        ))
+                    })?;
+                    if std::mem::replace(&mut self.used[*i], true) {
+                        return Err(crate::Error::Config(format!(
+                            "{}: layer `{}` appears twice in the schedule",
+                            self.net.name, l.name
+                        )));
+                    }
+                    if l.stride == 0 {
+                        return Err(crate::Error::Config(format!("{}: stride 0", l.name)));
+                    }
+                    if let Some((c, hw)) = state {
+                        if l.in_c != c {
+                            return Err(crate::Error::Config(format!(
+                                "{}: `{}` declares {} input channels but the schedule delivers {c}",
+                                self.net.name, l.name, l.in_c
+                            )));
+                        }
+                        if l.in_hw != hw {
+                            return Err(crate::Error::Config(format!(
+                                "{}: `{}` declares a {}×{} input but the schedule delivers {hw}×{hw}",
+                                self.net.name, l.name, l.in_hw, l.in_hw
+                            )));
+                        }
+                    }
+                    if l.in_hw + 2 * l.pad < l.k {
+                        return Err(crate::Error::Shape(format!(
+                            "{}: {hw}×{hw} input (pad {}) smaller than {}×{} kernel",
+                            l.name,
+                            l.pad,
+                            l.k,
+                            l.k,
+                            hw = l.in_hw,
+                        )));
+                    }
+                    let wl = self.weights.layer(&l.name).ok_or_else(|| {
+                        crate::Error::Artifact(format!(
+                            "{}: no weights for layer `{}`",
+                            self.net.name, l.name
+                        ))
+                    })?;
+                    let want = [l.out_c, l.in_c, l.k, l.k];
+                    if wl.shape != want {
+                        return Err(crate::Error::Shape(format!(
+                            "{}: weight shape {:?} != topology {:?}",
+                            l.name, wl.shape, want
+                        )));
+                    }
+                    out.push(PlanOp::Conv { layer: *i, pad: l.pad, stride: l.stride });
+                    out.push(PlanOp::ReluRequant { frac_bits: wl.frac_bits });
+                    state = Some((l.out_c, l.out_hw()));
+                }
+                TopoOp::Pool(p) => {
+                    let (c, hw) = state.ok_or_else(|| {
+                        crate::Error::Config(format!(
+                            "{}: schedule must open with a conv layer, not a pool",
+                            self.net.name
+                        ))
+                    })?;
+                    let out_hw = p.out_hw(hw)?;
+                    out.push(PlanOp::Pool(*p));
+                    state = Some((c, out_hw));
+                }
+                TopoOp::Branch(arms) => {
+                    if depth > 0 {
+                        return Err(crate::Error::Config(format!(
+                            "{}: nested branches are not supported",
+                            self.net.name
+                        )));
+                    }
+                    let start = state.ok_or_else(|| {
+                        crate::Error::Config(format!(
+                            "{}: schedule must open with a conv layer, not a branch",
+                            self.net.name
+                        ))
+                    })?;
+                    if arms.len() < 2 {
+                        return Err(crate::Error::Config(format!(
+                            "{}: a branch needs at least two arms",
+                            self.net.name
+                        )));
+                    }
+                    let mut lowered = Vec::with_capacity(arms.len());
+                    let mut total_c = 0usize;
+                    let mut out_hw: Option<usize> = None;
+                    for arm in arms {
+                        if arm.is_empty() {
+                            return Err(crate::Error::Config(format!(
+                                "{}: empty branch arm",
+                                self.net.name
+                            )));
+                        }
+                        let (arm_ops, end) = self.lower(arm, Some(start), depth + 1)?;
+                        let (ac, ahw) = end.expect("arm state flows from a Some start");
+                        match out_hw {
+                            None => out_hw = Some(ahw),
+                            Some(h) if h == ahw => {}
+                            Some(h) => {
+                                return Err(crate::Error::Config(format!(
+                                    "{}: branch arms disagree on output spatial size ({h} vs {ahw})",
+                                    self.net.name
+                                )));
+                            }
+                        }
+                        total_c += ac;
+                        lowered.push(arm_ops);
+                    }
+                    out.push(PlanOp::Branch { arms: lowered });
+                    state = Some((total_c, out_hw.expect("≥2 arms")));
+                }
+                TopoOp::GlobalAvgPool => {
+                    if depth > 0 {
+                        return Err(crate::Error::Config(format!(
+                            "{}: GlobalAvgPool inside a branch arm",
+                            self.net.name
+                        )));
+                    }
+                    state.ok_or_else(|| {
+                        crate::Error::Config(format!(
+                            "{}: GlobalAvgPool before any conv layer",
+                            self.net.name
+                        ))
+                    })?;
+                    out.push(PlanOp::GlobalAvgPool);
+                    self.saw_gap = true;
+                }
+                TopoOp::Fc => {
+                    if depth > 0 {
+                        return Err(crate::Error::Config(format!(
+                            "{}: Fc inside a branch arm",
+                            self.net.name
+                        )));
+                    }
+                    if !self.saw_gap {
+                        return Err(crate::Error::Config(format!(
+                            "{}: a declared Fc must follow a GlobalAvgPool",
+                            self.net.name
+                        )));
+                    }
+                    let fl = self.weights.layer("fc").ok_or_else(|| {
+                        crate::Error::Artifact(format!(
+                            "{}: no weights for layer `fc`",
+                            self.net.name
+                        ))
+                    })?;
+                    check_fc_fits(self.net, fl, state)?;
+                    out.push(PlanOp::Fc);
+                    self.saw_fc = true;
+                }
+            }
+        }
+        Ok((out, state))
+    }
+}
+
+/// Lower the declared schedule of `net` into an executable op graph,
+/// validating it against the weight file's layer set:
 ///
-/// * every conv layer must have a weight entry of matching OIHW shape;
-/// * consecutive layers must either chain directly (`next.in_hw ==
-///   out_hw`) or through one 2×2 pool (`next.in_hw * 2 == out_hw`);
+/// * every scheduled conv layer must have a weight entry of matching
+///   OIHW shape, and every layer must be scheduled exactly once;
+/// * declared shapes must chain: each conv's recorded `in_c`/`in_hw`
+///   must equal what the preceding ops deliver (pool output sizes use
+///   [`PoolSpec::out_hw`]'s ceil-mode arithmetic), and branch arms must
+///   agree on their output spatial size;
 /// * a weight layer named `fc` (absent from the zoo topology, which is
-///   conv-only) appends `GlobalAvgPool → Fc` as the classifier head.
+///   conv-only) appends `GlobalAvgPool → Fc` as the classifier head —
+///   reusing a schedule-declared trailing `GlobalAvgPool` (NiN) rather
+///   than pooling twice.
 pub fn derive_graph(net: &Network, weights: &LoadedWeights) -> crate::Result<Vec<PlanOp>> {
     if net.layers.is_empty() {
         return Err(crate::Error::Config(format!(
@@ -42,42 +267,34 @@ pub fn derive_graph(net: &Network, weights: &LoadedWeights) -> crate::Result<Vec
             net.name
         )));
     }
-    let mut ops = Vec::with_capacity(3 * net.layers.len() + 2);
-    for (i, l) in net.layers.iter().enumerate() {
-        let wl = weights.layer(&l.name).ok_or_else(|| {
-            crate::Error::Artifact(format!(
-                "{}: no weights for layer `{}`",
-                net.name, l.name
-            ))
-        })?;
-        let want = [l.out_c, l.in_c, l.k, l.k];
-        if wl.shape != want {
-            return Err(crate::Error::Shape(format!(
-                "{}: weight shape {:?} != topology {:?}",
-                l.name, wl.shape, want
-            )));
-        }
-        ops.push(PlanOp::Conv { layer: i, pad: l.pad, stride: l.stride });
-        ops.push(PlanOp::ReluRequant { frac_bits: wl.frac_bits });
-        if let Some(next) = net.layers.get(i + 1) {
-            let out = l.out_hw();
-            if next.in_hw * 2 == out {
-                ops.push(PlanOp::MaxPool2);
-            } else if next.in_hw != out {
-                return Err(crate::Error::Config(format!(
-                    "{}: cannot derive pooling between `{}` (out {out}×{out}) and \
-                     `{}` (in {hw}×{hw}) — only 2×2 stride-2 pools are expressible",
-                    net.name,
-                    l.name,
-                    next.name,
-                    hw = next.in_hw,
-                )));
-            }
-        }
+    if net.schedule.is_empty() {
+        return Err(crate::Error::Config(format!(
+            "network `{}` declares no schedule to lower",
+            net.name
+        )));
     }
-    if weights.layer("fc").is_some() {
-        ops.push(PlanOp::GlobalAvgPool);
-        ops.push(PlanOp::Fc);
+    let mut lo = Lowering {
+        net,
+        weights,
+        used: vec![false; net.layers.len()],
+        saw_gap: false,
+        saw_fc: false,
+    };
+    let (mut ops, state) = lo.lower(&net.schedule, None, 0)?;
+    if let Some(i) = lo.used.iter().position(|u| !u) {
+        return Err(crate::Error::Config(format!(
+            "{}: layer `{}` never appears in the schedule",
+            net.name, net.layers[i].name
+        )));
+    }
+    if let Some(fl) = weights.layer("fc") {
+        if !lo.saw_fc {
+            check_fc_fits(net, fl, state)?;
+            if !lo.saw_gap {
+                ops.push(PlanOp::GlobalAvgPool);
+            }
+            ops.push(PlanOp::Fc);
+        }
     }
     Ok(ops)
 }
@@ -86,7 +303,7 @@ pub fn derive_graph(net: &Network, weights: &LoadedWeights) -> crate::Result<Vec
 mod tests {
     use super::*;
     use crate::config::Mode;
-    use crate::model::{zoo, LoadedLayer};
+    use crate::model::{zoo, LoadedLayer, PoolKind};
 
     /// Minimal weight set matching a network's topology (+optional fc).
     fn weights_for(net: &Network, fc_classes: Option<usize>) -> LoadedWeights {
@@ -112,6 +329,20 @@ mod tests {
         LoadedWeights { mode: Mode::Fp16, layers }
     }
 
+    fn pools_of(ops: &[PlanOp]) -> Vec<PoolSpec> {
+        let mut out = Vec::new();
+        for op in ops {
+            match op {
+                PlanOp::Pool(p) => out.push(*p),
+                PlanOp::Branch { arms } => {
+                    arms.iter().for_each(|a| out.extend(pools_of(a)))
+                }
+                _ => {}
+            }
+        }
+        out
+    }
+
     #[test]
     fn tiny_cnn_graph_matches_legacy_pipeline() {
         let net = zoo::tiny_cnn();
@@ -122,10 +353,10 @@ mod tests {
             vec![
                 PlanOp::Conv { layer: 0, pad: 1, stride: 1 },
                 PlanOp::ReluRequant { frac_bits: 8 },
-                PlanOp::MaxPool2,
+                PlanOp::Pool(PoolSpec::max(2, 2, 0)),
                 PlanOp::Conv { layer: 1, pad: 1, stride: 1 },
                 PlanOp::ReluRequant { frac_bits: 8 },
-                PlanOp::MaxPool2,
+                PlanOp::Pool(PoolSpec::max(2, 2, 0)),
                 PlanOp::Conv { layer: 2, pad: 1, stride: 1 },
                 PlanOp::ReluRequant { frac_bits: 8 },
                 PlanOp::GlobalAvgPool,
@@ -135,26 +366,113 @@ mod tests {
     }
 
     #[test]
-    fn vgg16_graph_places_four_pools() {
+    fn vgg16_graph_places_five_declared_pools() {
         let net = zoo::vgg16();
         let w = weights_for(&net, None);
         let ops = derive_graph(&net, &w).unwrap();
-        let pools = ops.iter().filter(|o| **o == PlanOp::MaxPool2).count();
-        // 5 blocks → 4 *internal* pool transitions (the pool after
-        // block 5 has no following conv layer to betray it).
-        assert_eq!(pools, 4);
+        // All five pools are declared now — including the one after
+        // block 5 the old spatial-ratio inference could never see.
+        assert_eq!(pools_of(&ops).len(), 5);
+        assert!(pools_of(&ops).iter().all(|p| *p == PoolSpec::max(2, 2, 0)));
         // Conv-only weight set → no classifier head.
         assert!(!ops.contains(&PlanOp::Fc));
         assert!(!ops.contains(&PlanOp::GlobalAvgPool));
     }
 
     #[test]
-    fn underivable_pooling_is_config_error() {
-        // AlexNet pools 3×3 stride 2 (55 → 27): not expressible.
+    fn alexnet_graph_lowers_3x3_stride2_pools() {
+        // AlexNet pools 3×3 stride 2 (55 → 27) — inexpressible under
+        // the old ratio inference, a plain declared op now.
         let net = zoo::alexnet();
         let w = weights_for(&net, None);
+        let ops = derive_graph(&net, &w).unwrap();
+        let pools = pools_of(&ops);
+        assert_eq!(pools.len(), 3);
+        assert!(pools.iter().all(|p| *p == PoolSpec::max(3, 2, 0)));
+    }
+
+    #[test]
+    fn nin_graph_ends_in_declared_global_pool() {
+        let net = zoo::nin();
+        let w = weights_for(&net, None);
+        let ops = derive_graph(&net, &w).unwrap();
+        assert_eq!(ops.last(), Some(&PlanOp::GlobalAvgPool));
+        assert_eq!(pools_of(&ops).len(), 3);
+    }
+
+    #[test]
+    fn googlenet_graph_lowers_inception_branches() {
+        let net = zoo::googlenet();
+        let w = weights_for(&net, None);
+        let ops = derive_graph(&net, &w).unwrap();
+        let branches: Vec<&Vec<Vec<PlanOp>>> = ops
+            .iter()
+            .filter_map(|op| match op {
+                PlanOp::Branch { arms } => Some(arms),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(branches.len(), 9);
+        for arms in &branches {
+            assert_eq!(arms.len(), 4);
+            // 1×1 | reduce→3×3 | reduce→5×5 | pool→proj: 1/2/2 convs
+            // and a 3×3 stride-1 pool opening the fourth arm.
+            let convs = |a: &[PlanOp]| {
+                a.iter().filter(|o| matches!(o, PlanOp::Conv { .. })).count()
+            };
+            assert_eq!(convs(&arms[0]), 1);
+            assert_eq!(convs(&arms[1]), 2);
+            assert_eq!(convs(&arms[2]), 2);
+            assert_eq!(convs(&arms[3]), 1);
+            assert_eq!(arms[3][0], PlanOp::Pool(PoolSpec::max(3, 1, 1)));
+        }
+        // Stem + inter-module pools: 3 outside the branches, all 3×3
+        // stride-2; one declared global-average head.
+        let top_pools: Vec<&PoolSpec> = ops
+            .iter()
+            .filter_map(|op| match op {
+                PlanOp::Pool(p) => Some(p),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(top_pools.len(), 3);
+        assert!(top_pools.iter().all(|p| **p == PoolSpec::max(3, 2, 0)));
+        assert_eq!(ops.last(), Some(&PlanOp::GlobalAvgPool));
+    }
+
+    #[test]
+    fn mismatched_declared_shapes_rejected() {
+        // Tamper with a declared input size: lowering must refuse.
+        let mut net = zoo::tiny_cnn();
+        net.layers[1].in_hw = 9;
+        let w = weights_for(&net, None);
         match derive_graph(&net, &w) {
-            Err(crate::Error::Config(msg)) => assert!(msg.contains("pooling")),
+            Err(crate::Error::Config(msg)) => {
+                assert!(msg.contains("schedule delivers"), "{msg}")
+            }
+            other => panic!("expected Config error, got {other:?}"),
+        }
+        // Tamper with channels: same refusal.
+        let mut net = zoo::tiny_cnn();
+        net.layers[1].in_c = 9;
+        let w = weights_for(&net, None);
+        assert!(matches!(derive_graph(&net, &w), Err(crate::Error::Config(_))));
+    }
+
+    #[test]
+    fn unscheduled_or_doubly_scheduled_layers_rejected() {
+        let mut net = zoo::tiny_cnn();
+        net.schedule.pop(); // conv3 never runs
+        let w = weights_for(&net, None);
+        match derive_graph(&net, &w) {
+            Err(crate::Error::Config(msg)) => assert!(msg.contains("never appears"), "{msg}"),
+            other => panic!("expected Config error, got {other:?}"),
+        }
+        let mut net = zoo::tiny_cnn();
+        net.schedule.push(TopoOp::Conv(2));
+        let w = weights_for(&net, None);
+        match derive_graph(&net, &w) {
+            Err(crate::Error::Config(msg)) => assert!(msg.contains("twice"), "{msg}"),
             other => panic!("expected Config error, got {other:?}"),
         }
     }
@@ -168,5 +486,39 @@ mod tests {
         let mut w = weights_for(&net, None);
         w.layers[0].shape = [9, 9, 9, 9];
         assert!(matches!(derive_graph(&net, &w), Err(crate::Error::Shape(_))));
+    }
+
+    #[test]
+    fn misfit_fc_head_rejected_at_lowering() {
+        // The implicit head path validates the fc feature dim against
+        // the trunk's pooled channels — compile-time, not execute-time.
+        let net = zoo::tiny_cnn();
+        let mut w = weights_for(&net, Some(4));
+        w.layers.last_mut().unwrap().shape = [4, 32, 1, 1]; // trunk is 16
+        match derive_graph(&net, &w) {
+            Err(crate::Error::Shape(msg)) => assert!(msg.contains("pooled trunk"), "{msg}"),
+            other => panic!("expected Shape error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn nin_with_fc_weights_reuses_declared_gap() {
+        // A weight file carrying `fc` on a net whose schedule already
+        // ends in GlobalAvgPool must not pool twice.
+        let net = zoo::nin();
+        let w = weights_for(&net, Some(10));
+        let ops = derive_graph(&net, &w).unwrap();
+        assert_eq!(ops.last(), Some(&PlanOp::Fc));
+        let gaps = ops.iter().filter(|o| **o == PlanOp::GlobalAvgPool).count();
+        assert_eq!(gaps, 1);
+    }
+
+    #[test]
+    fn avg_pool_kind_flows_through_lowering() {
+        let mut net = zoo::tiny_cnn();
+        net.schedule[1] = TopoOp::Pool(PoolSpec::avg(2, 2, 0));
+        let w = weights_for(&net, None);
+        let ops = derive_graph(&net, &w).unwrap();
+        assert!(pools_of(&ops).iter().any(|p| p.kind == PoolKind::Avg));
     }
 }

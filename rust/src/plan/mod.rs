@@ -9,20 +9,31 @@
 //! the tiny CNN's layer names. This module restores the paper's split:
 //!
 //! * [`graph`] — a generic op graph (`Conv { pad, stride } →
-//!   ReluRequant → MaxPool2 → GlobalAvgPool → Fc`) *derived* from
-//!   `model::zoo` topology plus the weight file's layer set, instead of
-//!   hardcoded `"conv1".."conv3"/"fc"` names.
+//!   ReluRequant → Pool { Max|Avg, k, stride, pad } → Branch →
+//!   GlobalAvgPool → Fc`) *lowered* from the explicit `TopoOp`
+//!   schedule each `model::zoo` network declares, validated against
+//!   the weight file's layer set. The whole evaluation zoo lowers —
+//!   AlexNet/NiN's 3×3 stride-2 pools, NiN's global-average head,
+//!   GoogleNet's four-arm inception branches — where earlier revisions
+//!   *inferred* pooling from spatial-size ratios and could only
+//!   express VGG-style chains.
 //! * [`compiled`] — [`CompiledNetwork`]: kneads every conv filter lane
 //!   and every FC class lane exactly once, at build time, in parallel.
-//! * [`exec`] — the executor: walks the op graph and parallelizes the
-//!   conv hot loop over (image, output-row) stripes with
+//! * [`exec`] — the executor: walks the op graph (recursing into
+//!   branch arms and concatenating along channels) and parallelizes
+//!   the conv hot loop over (image, output-row) stripes with
 //!   `util::pool::par_map`, preserving deterministic output order.
 //!
 //! Losslessness invariant (DESIGN.md §I5): reusing kneaded lanes across
-//! calls never changes logits — the executor is bit-identical to the
-//! legacy scalar `runtime::quantized::forward_scalar` for every mode,
-//! kneading stride, and thread count. Verified by
-//! `rust/tests/plan_exec.rs`; the zero-rekneading property is pinned by
+//! calls never changes logits — the executor is bit-identical to a
+//! plain scalar MAC reference for every mode, kneading stride, and
+//! thread count: the legacy `runtime::quantized::forward_scalar` on
+//! the tiny CNN (`rust/tests/plan_exec.rs`) and the naive
+//! declared-topology interpreter `model::reference` across the full
+//! scaled zoo, inception branching included
+//! (`rust/tests/plan_topology.rs`). The
+//! zero-rekneading property — including one compile total across W
+//! serving workers sharing an `Arc<CompiledNetwork>` — is pinned by
 //! `rust/tests/plan_zero_knead.rs` via `kneading::knead_call_count`.
 
 pub mod compiled;

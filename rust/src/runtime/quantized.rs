@@ -9,15 +9,18 @@
 //! → rear adder tree) bit-for-bit against the Pallas kernel path.
 //!
 //! Since ISSUE 1 this module is a thin wrapper over the `plan`
-//! subsystem: [`forward`] compiles the tiny-CNN topology into a
-//! [`CompiledNetwork`] (kneading every lane once) and executes it. The
-//! original single-threaded, re-knead-per-call implementation survives
-//! as [`forward_scalar`] / [`sac_conv2d`] — the bit-exactness reference
-//! the plan executor is property-tested against (DESIGN.md §I5) and the
-//! baseline `benches/hotpath.rs` measures the compile-once speedup
-//! over. Serving callers should hold a [`CompiledNetwork`] (as
-//! `coordinator::SacBackend` does) instead of calling [`forward`] in a
-//! loop, which re-compiles per call.
+//! subsystem: [`forward`] compiles the tiny CNN's declared topology
+//! (`zoo::tiny_cnn`'s conv/pool schedule) into a [`CompiledNetwork`]
+//! (kneading every lane once) and executes it. The original
+//! single-threaded, re-knead-per-call implementation survives as
+//! [`forward_scalar`] / [`sac_conv2d`] — the tiny-CNN half of the
+//! bit-exactness reference the plan executor is property-tested
+//! against (DESIGN.md §I5; the declared-topology zoo half lives in
+//! `rust/tests/plan_topology.rs`) and the baseline `benches/hotpath.rs`
+//! measures the compile-once speedup over. Serving callers should hold
+//! a [`CompiledNetwork`] (as `coordinator::SacBackend` does — one
+//! `Arc`-shared plan across all workers) instead of calling [`forward`]
+//! in a loop, which re-compiles per call.
 
 use crate::config::Mode;
 use crate::kneading::{knead_lane, Lane};

@@ -3,6 +3,8 @@
 //! kneading stride and thread count, and it runs a non-tiny zoo
 //! topology (a VGG-16 block) end-to-end against a plain MAC reference.
 
+use std::sync::Mutex;
+
 use tetris::config::Mode;
 use tetris::coordinator::SacBackend;
 use tetris::model::weights::{synthetic_loaded, DensityCalibration};
@@ -12,6 +14,12 @@ use tetris::quant::requantize;
 use tetris::runtime::quantized;
 use tetris::util::prop::gen;
 use tetris::util::rng::Rng;
+
+/// Serializes every test in this binary: the thread-count test mutates
+/// the process-global `TETRIS_THREADS` that `util::pool::par_map`
+/// reads, and glibc `setenv` racing `getenv` from concurrent tests is
+/// undefined behavior.
+static ENV_LOCK: Mutex<()> = Mutex::new(());
 
 /// Random tiny-CNN weight set: mode-bounded magnitudes, randomized
 /// per-layer frac_bits (including 0, the requantize regression case).
@@ -56,6 +64,7 @@ fn random_images(n: usize, rng: &mut Rng) -> Tensor<i32> {
 /// must reproduce it exactly.)
 #[test]
 fn plan_matches_scalar_forward_across_modes_and_strides() {
+    let _serial = ENV_LOCK.lock().unwrap();
     let net = zoo::tiny_cnn();
     for mode in [Mode::Fp16, Mode::Int8] {
         for ks in [4usize, 16, 64] {
@@ -77,6 +86,7 @@ fn plan_matches_scalar_forward_across_modes_and_strides() {
 /// independent.
 #[test]
 fn thread_count_does_not_change_logits() {
+    let _serial = ENV_LOCK.lock().unwrap();
     let w = SacBackend::synthetic_weights(23).unwrap();
     let plan = quantized::compile_tiny_cnn(&w).unwrap();
     let mut rng = Rng::new(99);
@@ -134,6 +144,7 @@ fn ref_conv(x: &Tensor<i32>, wl: &LoadedLayer, pad: usize) -> Tensor<i32> {
 /// is not married to the tiny CNN's layer names or shapes.
 #[test]
 fn vgg16_block_matches_mac_reference() {
+    let _serial = ENV_LOCK.lock().unwrap();
     // Block 3 of VGG-16 (conv3_1..conv3_3), channels ÷16 (8→16→16),
     // run at 8×8 so the debug-build test stays fast. Conv-only weight
     // set → the derived graph is Conv→ReluRequant ×3, no head.
@@ -172,6 +183,7 @@ fn vgg16_block_matches_mac_reference() {
 /// call changes cost, never values).
 #[test]
 fn wrapper_and_reused_plan_agree() {
+    let _serial = ENV_LOCK.lock().unwrap();
     let w = SacBackend::synthetic_weights(31).unwrap();
     let plan = quantized::compile_tiny_cnn(&w).unwrap();
     let mut rng = Rng::new(3);

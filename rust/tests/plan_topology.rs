@@ -1,0 +1,210 @@
+//! ISSUE 2 tentpole tests: the declared-topology plan executor runs
+//! the paper's whole evaluation zoo — AlexNet/NiN's 3×3 stride-2
+//! pools, NiN's global-average head, GoogleNet's four-arm inception
+//! branching — bit-identical to the naive scalar MAC interpreter of
+//! the same declared schedule (`model::reference`, which shares no
+//! execution code with `plan::exec`). This extends DESIGN.md invariant
+//! I5 from the tiny CNN / VGG chains of `plan_exec.rs` to the full zoo
+//! at scaled channel counts.
+//!
+//! All tests in this binary serialize on `ENV_LOCK`: the thread-count
+//! test mutates the process-global `TETRIS_THREADS` variable that
+//! `util::pool::par_map` reads, and glibc `setenv` racing `getenv`
+//! from concurrently running tests is undefined behavior.
+
+use std::sync::Mutex;
+
+use tetris::config::Mode;
+use tetris::model::reference::forward_reference;
+use tetris::model::weights::{synthetic_loaded, DensityCalibration};
+use tetris::model::{
+    zoo, ConvLayer, LoadedLayer, LoadedWeights, Network, PoolKind, PoolSpec, Tensor, TopoOp,
+};
+use tetris::plan::CompiledNetwork;
+use tetris::util::prop::gen;
+use tetris::util::rng::Rng;
+
+/// Serializes every test here (see module docs).
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+// ---------- shared generators ----------
+
+fn random_input(net: &Network, n: usize, hw: usize, rng: &mut Rng) -> Tensor<i32> {
+    let mut x = Tensor::zeros(&[n, net.layers[0].in_c, hw, hw]);
+    for v in x.data_mut() {
+        *v = rng.range_i64(-512, 512) as i32;
+    }
+    x
+}
+
+/// Random weights for an arbitrary chain/branch net: mode-bounded
+/// magnitudes, randomized per-layer frac_bits (including 0).
+fn random_weights(net: &Network, mode: Mode, rng: &mut Rng) -> LoadedWeights {
+    let bits = mode.weight_bits() as u32;
+    let frac_choices: [u32; 4] = match mode {
+        Mode::Fp16 => [0, 6, 8, 10],
+        Mode::Int8 => [0, 3, 5, 7],
+    };
+    let layers = net
+        .layers
+        .iter()
+        .map(|l| LoadedLayer {
+            name: l.name.clone(),
+            shape: [l.out_c, l.in_c, l.k, l.k],
+            frac_bits: frac_choices[rng.below(4) as usize],
+            weights: (0..l.weight_count()).map(|_| gen::weight(rng, bits)).collect(),
+        })
+        .collect();
+    LoadedWeights { mode, layers }
+}
+
+// ---------- ISSUE 2 acceptance: the whole zoo, one shared plan path ----------
+
+/// Every network of the paper's evaluation — channel-scaled so debug
+/// builds stay fast, spatial sizes re-propagated through the declared
+/// schedule — compiles and executes bit-identical to the naive
+/// reference. This is invariant I5 over the full zoo: 3×3 stride-2
+/// pools (AlexNet, NiN, GoogleNet), ceil-mode extents (GoogleNet),
+/// inception branching, and NiN's global-average head all included.
+#[test]
+fn full_zoo_matches_naive_reference() {
+    let _serial = ENV_LOCK.lock().unwrap();
+    let cases: [(Network, &str, usize); 5] = [
+        (zoo::alexnet().scaled(16, 64), "alexnet", 64),
+        (zoo::googlenet().scaled(16, 64), "googlenet", 64),
+        (zoo::vgg16().scaled(16, 32), "vgg16", 32),
+        (zoo::vgg19().scaled(16, 32), "vgg19", 32),
+        (zoo::nin().scaled(16, 64), "nin", 64),
+    ];
+    for (net, profile, hw) in cases {
+        let w = synthetic_loaded(&net, Mode::Fp16, 12, profile, DensityCalibration::Fig2, 0x5EED)
+            .unwrap();
+        let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+        let mut rng = Rng::new(7);
+        let x = random_input(&net, 2, hw, &mut rng);
+        let got = plan.execute(&x).unwrap();
+        let want = forward_reference(&net, &w, &x);
+        assert_eq!(got.shape(), want.shape(), "{}: shape drift", net.name);
+        assert_eq!(got, want, "{}: plan executor diverged from MAC reference", net.name);
+        assert!(
+            got.data().iter().any(|&v| v != 0),
+            "{}: degenerate all-zero output",
+            net.name
+        );
+    }
+}
+
+// ---------- satellite: Pool{Max/Avg, k=3, s=2} property test ----------
+
+/// Two-conv chain around a 3×3 stride-2 pool (the AlexNet/NiN/GoogleNet
+/// geometry, with a non-exact extent so ceil windows clip).
+fn pooled_chain(kind: PoolKind) -> Network {
+    Network::with_schedule(
+        match kind {
+            PoolKind::Max => "pool3s2_max_chain",
+            PoolKind::Avg => "pool3s2_avg_chain",
+        },
+        vec![
+            ConvLayer { name: "c1".into(), in_c: 2, out_c: 3, k: 3, stride: 1, pad: 1, in_hw: 8 },
+            ConvLayer { name: "c2".into(), in_c: 3, out_c: 2, k: 3, stride: 1, pad: 1, in_hw: 4 },
+        ],
+        vec![
+            TopoOp::Conv(0),
+            TopoOp::Pool(PoolSpec { kind, k: 3, stride: 2, pad: 0 }), // 8 → 4, last window clipped
+            TopoOp::Conv(1),
+        ],
+    )
+}
+
+/// Invariant I5 for the parameterized pool kernel: plan ≡ naive
+/// reference, bit for bit, across both modes, kneading strides 4/16/64
+/// and both pool kinds, on random weights and images.
+#[test]
+fn pool_3x3_stride2_matches_reference_across_modes_and_strides() {
+    let _serial = ENV_LOCK.lock().unwrap();
+    for kind in [PoolKind::Max, PoolKind::Avg] {
+        let net = pooled_chain(kind);
+        for mode in [Mode::Fp16, Mode::Int8] {
+            for ks in [4usize, 16, 64] {
+                for seed in [1u64, 2] {
+                    let mut rng = Rng::new(0xF00D ^ seed ^ ((ks as u64) << 8));
+                    let w = random_weights(&net, mode, &mut rng);
+                    let x = random_input(&net, 2, 8, &mut rng);
+                    let plan = CompiledNetwork::compile(&net, &w, ks, mode).unwrap();
+                    let got = plan.execute(&x).unwrap();
+                    let want = forward_reference(&net, &w, &x);
+                    assert_eq!(got, want, "{kind:?} {mode} ks={ks} seed={seed}");
+                }
+            }
+        }
+    }
+}
+
+// ---------- satellite: Branch/Concat property test ----------
+
+/// Invariant I5 for branch/concat execution: a standalone inception
+/// module (stem → four arms → channel concat) is bit-identical to the
+/// naive reference across modes and kneading strides.
+#[test]
+fn inception_branch_matches_reference_across_modes_and_strides() {
+    let _serial = ENV_LOCK.lock().unwrap();
+    let net = zoo::inception_module("3a").unwrap().scaled(8, 8);
+    for mode in [Mode::Fp16, Mode::Int8] {
+        for ks in [4usize, 16, 64] {
+            for seed in [1u64, 2] {
+                let mut rng = Rng::new(0xB7A ^ seed ^ ((ks as u64) << 8));
+                let w = random_weights(&net, mode, &mut rng);
+                let x = random_input(&net, 2, 8, &mut rng);
+                let plan = CompiledNetwork::compile(&net, &w, ks, mode).unwrap();
+                let got = plan.execute(&x).unwrap();
+                let want = forward_reference(&net, &w, &x);
+                // Concat order is part of the contract: 1x1 | 3x3 |
+                // 5x5 | pool_proj channels, in arm order.
+                assert_eq!(got.shape(), want.shape());
+                assert_eq!(got, want, "{mode} ks={ks} seed={seed}");
+            }
+        }
+    }
+}
+
+/// Thread count must never change logits on branching + strided-pool
+/// topologies: `par_map`'s striped assignment is order-deterministic
+/// and branch arms run in a fixed sequence.
+#[test]
+fn thread_count_does_not_change_branching_outputs() {
+    let _serial = ENV_LOCK.lock().unwrap();
+    // Divisor 16 keeps every inception concat sum consistent (all of
+    // GoogleNet's branch output counts are multiples of 16).
+    let net = zoo::googlenet().scaled(16, 64);
+    let w = synthetic_loaded(&net, Mode::Fp16, 12, "googlenet", DensityCalibration::Fig2, 3)
+        .unwrap();
+    let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+    let mut rng = Rng::new(11);
+    let x = random_input(&net, 2, 64, &mut rng);
+    std::env::set_var("TETRIS_THREADS", "1");
+    let single = plan.execute(&x).unwrap();
+    std::env::set_var("TETRIS_THREADS", "8");
+    let eight = plan.execute(&x).unwrap();
+    std::env::remove_var("TETRIS_THREADS");
+    let free = plan.execute(&x).unwrap();
+    assert_eq!(single, eight);
+    assert_eq!(single, free);
+}
+
+/// Executing a scaled plan at a spatial size other than the declared
+/// one still works (the executor derives extents from the tensor) and
+/// still matches the reference — pools and branches included.
+#[test]
+fn off_topology_spatial_sizes_still_match_reference() {
+    let _serial = ENV_LOCK.lock().unwrap();
+    let net = zoo::alexnet().scaled(16, 64);
+    let w = synthetic_loaded(&net, Mode::Fp16, 12, "alexnet", DensityCalibration::Fig2, 9)
+        .unwrap();
+    let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+    let mut rng = Rng::new(13);
+    // Declared 64×64; run 80×80.
+    let x = random_input(&net, 1, 80, &mut rng);
+    let got = plan.execute(&x).unwrap();
+    let want = forward_reference(&net, &w, &x);
+    assert_eq!(got, want);
+}

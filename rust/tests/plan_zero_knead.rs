@@ -1,20 +1,38 @@
-//! ISSUE 1 acceptance: `SacBackend::infer_batch` performs **zero**
-//! kneading calls after construction — kneading happens once, inside
-//! the `CompiledNetwork` build.
+//! ISSUE 1 + ISSUE 2 acceptance: the serving path performs **zero**
+//! kneading after plan construction — and a server with W workers
+//! sharing one `Arc<CompiledNetwork>` (via `Server::start_shared`)
+//! performs exactly *one compile's worth* of knead calls, not W.
 //!
-//! This is the only test in this binary on purpose: the knead counter
-//! (`kneading::knead_call_count`) is process-wide, and cargo runs the
-//! tests *within* one binary on concurrent threads. Isolating the test
-//! keeps the counter free of unrelated kneading traffic, so the
-//! assertion can be an exact equality instead of a tolerance.
+//! These are the only tests in this binary on purpose: the knead
+//! counter (`kneading::knead_call_count`) is process-wide, and cargo
+//! runs a binary's tests on concurrent threads. Isolating them here —
+//! and serializing the two through `KNEAD_LOCK` — keeps the counter
+//! free of unrelated kneading traffic, so every assertion can be an
+//! exact equality instead of a tolerance.
 
-use tetris::coordinator::{InferBackend, SacBackend};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use tetris::coordinator::{BatchPolicy, InferBackend, InferRequest, SacBackend, Server, ServerConfig};
 use tetris::kneading::knead_call_count;
 use tetris::model::Tensor;
 use tetris::util::rng::Rng;
 
+/// Serializes the two counter-sensitive tests in this binary.
+static KNEAD_LOCK: Mutex<()> = Mutex::new(());
+
+fn image_batch(n: usize, seed: u64) -> Tensor<i32> {
+    let mut rng = Rng::new(seed);
+    let mut images = Tensor::zeros(&[n, 1, 16, 16]);
+    for v in images.data_mut() {
+        *v = rng.range_i64(-400, 400) as i32;
+    }
+    images
+}
+
 #[test]
 fn infer_batch_performs_zero_kneading_calls() {
+    let _serial = KNEAD_LOCK.lock().unwrap();
     let mut backend = SacBackend::synthetic(7).expect("backend");
     let built = knead_call_count();
     // Construction must have kneaded something (8+16+16 filters + 4
@@ -22,11 +40,7 @@ fn infer_batch_performs_zero_kneading_calls() {
     assert!(built > 0, "compile performed no kneading");
     assert_eq!(backend.plan().kneads_at_build, 8 + 16 + 16 + 4);
 
-    let mut rng = Rng::new(1);
-    let mut images = Tensor::zeros(&[4, 1, 16, 16]);
-    for v in images.data_mut() {
-        *v = rng.range_i64(-400, 400) as i32;
-    }
+    let images = image_batch(4, 1);
     let first = backend.infer_batch(&images).expect("infer");
     assert_eq!(first.len(), 4);
 
@@ -48,5 +62,58 @@ fn infer_batch_performs_zero_kneading_calls() {
     assert!(
         knead_call_count() > before,
         "scalar reference unexpectedly stopped kneading"
+    );
+}
+
+/// ISSUE 2 satellite: W workers ⇒ exactly one compile's worth of knead
+/// calls. `Server::start_shared` clones one prototype `SacBackend`
+/// into every worker; the clones alias its `Arc<CompiledNetwork>`, so
+/// worker count must not appear anywhere in the knead accounting.
+#[test]
+fn w_workers_share_exactly_one_compile_of_kneading() {
+    let _serial = KNEAD_LOCK.lock().unwrap();
+
+    // Measure what ONE compile costs, in knead calls, for this seed.
+    let before_solo = knead_call_count();
+    let solo = SacBackend::synthetic(21).expect("solo backend");
+    let per_compile = knead_call_count() - before_solo;
+    assert!(per_compile > 0, "compile performed no kneading");
+    drop(solo);
+
+    // Build the shared prototype: exactly one more compile.
+    let before_proto = knead_call_count();
+    let prototype = SacBackend::synthetic(21).expect("prototype");
+    let after_build = knead_call_count();
+    assert_eq!(after_build - before_proto, per_compile);
+
+    // Serve through 4 workers. Every batch, on every worker, must
+    // stream the shared pre-kneaded lanes — zero further kneading.
+    let workers = 4;
+    let server = Server::start_shared(
+        ServerConfig {
+            policy: BatchPolicy { max_batch: 3, max_wait: Duration::from_millis(1) },
+            workers,
+        },
+        prototype,
+    )
+    .expect("server");
+    let total = 4 * workers as u64;
+    let mut rng = Rng::new(5);
+    for id in 0..total {
+        let mut img = Tensor::zeros(&[1, 16, 16]);
+        for v in img.data_mut() {
+            *v = rng.range_i64(-300, 300) as i32;
+        }
+        server.submit(InferRequest::new(id, img)).expect("submit");
+    }
+    for _ in 0..total {
+        server.recv().expect("recv");
+    }
+    let metrics = server.shutdown();
+    assert_eq!(metrics.requests_done, total);
+    assert_eq!(
+        knead_call_count(),
+        after_build,
+        "{workers} workers kneaded beyond the one shared compile"
     );
 }

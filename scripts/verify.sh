@@ -1,12 +1,31 @@
 #!/usr/bin/env bash
 # Tier-1 verification: offline build + tests, plus clippy when present.
-# Run from anywhere: `scripts/verify.sh`
+# Run from anywhere: `scripts/verify.sh [--quick]`
+#
+#   --quick   skip the release build (debug tests + clippy only) —
+#             for doc-only or comment-only changes where the release
+#             codegen pass adds nothing but wall time.
 set -euo pipefail
+
+QUICK=0
+for arg in "$@"; do
+    case "$arg" in
+        --quick) QUICK=1 ;;
+        *)
+            echo "usage: scripts/verify.sh [--quick]" >&2
+            exit 2
+            ;;
+    esac
+done
 
 cd "$(dirname "$0")/../rust"
 
-echo "== cargo build --release =="
-cargo build --release
+if [ "$QUICK" -eq 1 ]; then
+    echo "== release build skipped (--quick) =="
+else
+    echo "== cargo build --release =="
+    cargo build --release
+fi
 
 echo "== cargo test -q =="
 cargo test -q
