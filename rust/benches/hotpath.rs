@@ -14,7 +14,7 @@ use tetris::kneading::{knead_group, knead_lane, Lane};
 use tetris::model::reference::forward_reference;
 use tetris::model::weights::{profile_with, synthetic_loaded, DensityCalibration};
 use tetris::model::{zoo, Tensor};
-use tetris::plan::CompiledNetwork;
+use tetris::plan::{CompiledNetwork, ExecOpts};
 use tetris::runtime::quantized;
 use tetris::sac::SacUnit;
 use tetris::util::bench::Harness;
@@ -195,7 +195,34 @@ fn main() {
         ],
     );
 
-    h.report();
+    // 8. ISSUE 3: the tiled fused walk vs its own materializing
+    //    baseline on the same plan — wall time per mode plus the
+    //    measured peak feature-map bytes (the memory the fusion is
+    //    for). Bit-exactness across tilings is pinned in
+    //    tests/plan_tiling.rs; asserted here too before timing.
+    assert_eq!(
+        aplan.execute_opts(&aimg, ExecOpts::tiled(4)).unwrap(),
+        aplan.execute_opts(&aimg, ExecOpts::materializing()).unwrap(),
+        "tiled and materializing walks must agree before being timed"
+    );
+    h.bench("plan/execute-alexnet-tiled4", || {
+        aplan.execute_opts(&aimg, ExecOpts::tiled(4)).unwrap().len()
+    });
+    h.bench("plan/execute-alexnet-materializing", || {
+        aplan.execute_opts(&aimg, ExecOpts::materializing()).unwrap().len()
+    });
+    let (_, peak_tiled) = aplan.execute_traced(&aimg, ExecOpts::tiled(4)).unwrap();
+    let (_, peak_full) = aplan.execute_traced(&aimg, ExecOpts::materializing()).unwrap();
+    h.metric_row(
+        "plan/alexnet-peak-feature-bytes",
+        vec![
+            ("tiled4".into(), peak_tiled as f64),
+            ("materializing".into(), peak_full as f64),
+            ("ratio".into(), peak_tiled as f64 / peak_full as f64),
+        ],
+    );
+
+    h.emit();
     if let Ok(dir) = std::env::var("TETRIS_BENCH_CSV") {
         h.write_csv(std::path::Path::new(&dir).join("hotpath.csv").as_path()).ok();
     }

@@ -26,6 +26,22 @@ use crate::model::{LoadedWeights, Tensor};
 use crate::plan::CompiledNetwork;
 use crate::runtime::quantized;
 use crate::sim::{sample::samples_from_loaded, simulate_network_with_samples, tetris::TetrisSim};
+use crate::util::pool::worker_count;
+
+/// Per-worker feature-map memory budget for serving, in bytes:
+/// `TETRIS_MEM_BUDGET_MB` (default 256). Construction-time knob — the
+/// backend turns it into a fused-tile height via
+/// [`CompiledNetwork::tile_rows_for_budget`], so a tighter budget
+/// trades halo recompute for a lower resident peak instead of OOMing.
+fn serving_mem_budget_bytes() -> u64 {
+    std::env::var("TETRIS_MEM_BUDGET_MB")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(256)
+        .max(1)
+        * 1024
+        * 1024
+}
 
 /// A batch-inference backend.
 pub trait InferBackend {
@@ -69,7 +85,12 @@ impl SacBackend {
         let conv_weights = LoadedWeights { mode: weights.mode, layers: conv_only };
         let samples = samples_from_loaded(&net, &conv_weights)?;
         let sim = simulate_network_with_samples(&TetrisSim, &net, &samples, &cfg, &calib);
-        let plan = Arc::new(quantized::compile_tiny_cnn(&weights)?);
+        let mut plan = quantized::compile_tiny_cnn(&weights)?;
+        // Serving picks its fused-tile height from the memory budget:
+        // the largest tile whose estimated peak (per image, at the
+        // worker fan-out) stays inside TETRIS_MEM_BUDGET_MB.
+        plan.tile_rows = plan.tile_rows_for_budget(serving_mem_budget_bytes(), worker_count());
+        let plan = Arc::new(plan);
         Ok(Self { plan, cycles_per_image: sim.total_cycles() })
     }
 
@@ -187,6 +208,15 @@ mod tests {
         let b = SacBackend::synthetic(2).unwrap();
         assert_eq!(b.plan().kneads_at_build, 8 + 16 + 16 + 4);
         assert!(b.plan().kneaded_weights() > 0);
+        // Serving picked a tile height the default budget can hold.
+        let rows = b.plan().tile_rows;
+        assert!(rows >= 1);
+        assert!(
+            b.plan().peak_bytes_estimate(rows, crate::util::pool::worker_count())
+                <= serving_mem_budget_bytes()
+                || rows == 1,
+            "serving tile height blows the memory budget"
+        );
     }
 
     #[test]

@@ -90,7 +90,7 @@ impl From<std::io::Error> for Error {
     }
 }
 
-#[cfg(feature = "xla")]
+#[cfg(all(feature = "xla", feature = "xla-vendored"))]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

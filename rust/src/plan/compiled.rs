@@ -9,9 +9,15 @@
 use crate::config::Mode;
 use crate::kneading::{knead_lane, KneadedLane, Lane};
 use crate::model::{LoadedLayer, LoadedWeights, Network, Tensor};
-use crate::util::pool::par_map;
+use crate::util::pool::{par_map, split_budget};
 
-use super::graph::{derive_graph, PlanOp};
+use super::graph::{derive_graph, segment_plan, PlanOp, Segment};
+
+/// Default output rows per fused tile (see [`CompiledNetwork::tile_rows`]).
+/// Small enough that conv→pool rings stay a few rows tall, large enough
+/// that the per-tile halo recompute (≤ `pool.k − pool.stride` conv rows
+/// per boundary) stays a small fraction of the tile.
+pub const DEFAULT_TILE_ROWS: usize = 4;
 
 /// One conv layer's compile-time product: per-filter pre-kneaded lanes
 /// plus the shape metadata the executor needs (weights themselves are
@@ -51,8 +57,20 @@ pub struct CompiledFc {
 #[derive(Debug, Clone)]
 pub struct CompiledNetwork {
     pub(crate) ops: Vec<PlanOp>,
+    /// Tile schedule: the op graph grouped into fused
+    /// `Conv → ReluRequant [→ Pool]` walks and materialization points
+    /// (see [`segment_plan`]).
+    pub(crate) schedule: Vec<Segment>,
     pub(crate) convs: Vec<CompiledConv>,
     pub(crate) fc: Option<CompiledFc>,
+    /// Declared (channels, spatial size) of the first executed conv —
+    /// the shape basis for [`Self::peak_bytes_estimate`].
+    pub(crate) declared_in: (usize, usize),
+    /// Output rows per fused tile for the default `execute` path
+    /// (0 = full height, i.e. materialize every stage of a fused
+    /// chain at once). Overridable per call via `ExecOpts`; serving
+    /// picks it from a memory budget ([`Self::tile_rows_for_budget`]).
+    pub tile_rows: usize,
     pub mode: Mode,
     /// Kneading stride the lanes were compiled with. Values are
     /// invariant to KS (SAC ≡ MAC for any stride); KS only moves the
@@ -65,7 +83,12 @@ pub struct CompiledNetwork {
 
 /// Knead the per-filter lanes of one weight layer (parallel across
 /// filters; output order is deterministic).
-fn knead_filter_lanes(wl: &LoadedLayer, lane_len: usize, ks: usize, mode: Mode) -> Vec<KneadedLane> {
+fn knead_filter_lanes(
+    wl: &LoadedLayer,
+    lane_len: usize,
+    ks: usize,
+    mode: Mode,
+) -> Vec<KneadedLane> {
     let filters: Vec<usize> = (0..wl.shape[0]).collect();
     par_map(&filters, |_, &f| {
         let ws = wl.weights[f * lane_len..(f + 1) * lane_len].to_vec();
@@ -120,12 +143,37 @@ impl CompiledNetwork {
             }
             None => None,
         };
-        Ok(Self { ops, convs, fc, mode, ks, kneads_at_build })
+        let schedule = segment_plan(&ops, &net.layers);
+        let declared_in = ops
+            .iter()
+            .find_map(|op| match op {
+                PlanOp::Conv { layer, .. } => {
+                    net.layers.get(*layer).map(|l| (l.in_c, l.in_hw))
+                }
+                _ => None,
+            })
+            .unwrap_or((0, 0));
+        Ok(Self {
+            ops,
+            schedule,
+            convs,
+            fc,
+            declared_in,
+            tile_rows: DEFAULT_TILE_ROWS,
+            mode,
+            ks,
+            kneads_at_build,
+        })
     }
 
     /// The derived op graph (read-only view).
     pub fn ops(&self) -> &[PlanOp] {
         &self.ops
+    }
+
+    /// The tile schedule the executor walks (read-only view).
+    pub fn schedule(&self) -> &[Segment] {
+        &self.schedule
     }
 
     /// Compiled conv layers, topology order.
@@ -176,6 +224,156 @@ impl CompiledNetwork {
     /// Logit count per image (classifier plans only).
     pub fn output_classes(&self) -> Option<usize> {
         self.fc.as_ref().map(|f| f.classes)
+    }
+
+    /// Coarse peak feature-map bytes for ONE image at the declared
+    /// topology sizes, under a fused walk with `tile_rows` output rows
+    /// per tile (0 = full height) and a `workers` thread budget.
+    ///
+    /// Per fused segment this counts input map + output map + one
+    /// worst-case (first-tile) ring per concurrently live tile; branch
+    /// arms add up because they run concurrently. Weights, per-thread
+    /// scratch and allocator overhead are excluded — this is a
+    /// planning heuristic for [`Self::tile_rows_for_budget`], not an
+    /// accounting guarantee (the measured counterpart is
+    /// `execute_traced`).
+    pub fn peak_bytes_estimate(&self, tile_rows: usize, workers: usize) -> u64 {
+        let mut peak = 0u64;
+        let (c, hw) = self.declared_in;
+        if c == 0 || hw == 0 {
+            return 0;
+        }
+        self.estimate_segs(&self.schedule, c, hw, hw, tile_rows, workers.max(1), &mut peak);
+        peak
+    }
+
+    /// Walk `segs` from an input of shape (c, h, w), folding each
+    /// segment's peak-bytes candidate into `peak`; returns the output
+    /// shape. Shapes mirror the executor's arithmetic; the declared
+    /// topology already validated at compile time, so degenerate
+    /// windows simply contribute zero here instead of erroring.
+    #[allow(clippy::too_many_arguments)]
+    fn estimate_segs(
+        &self,
+        segs: &[Segment],
+        mut c: usize,
+        mut h: usize,
+        mut w: usize,
+        tile_rows: usize,
+        workers: usize,
+        peak: &mut u64,
+    ) -> (usize, usize, usize) {
+        const BYTES: u64 = 4; // i32 feature maps
+        let map_bytes = |c: usize, h: usize, w: usize| (c * h * w) as u64 * BYTES;
+        for seg in segs {
+            match seg {
+                Segment::Fused(stages) => {
+                    let in_bytes = map_bytes(c, h, w);
+                    // (in_c, in_h, in_w, out_c, out_w) per stage; row
+                    // extents re-derived per tile below.
+                    let mut dims = Vec::with_capacity(stages.len());
+                    let (mut cc, mut hh, mut ww) = (c, h, w);
+                    for st in stages {
+                        let (oc, oh, ow) = match &st.op {
+                            PlanOp::Conv { layer, pad, stride } => {
+                                let cv = &self.convs[*layer];
+                                let oh = (hh + 2 * pad)
+                                    .checked_sub(cv.kh)
+                                    .map_or(0, |d| d / stride + 1);
+                                let ow = (ww + 2 * pad)
+                                    .checked_sub(cv.kw)
+                                    .map_or(0, |d| d / stride + 1);
+                                (cv.out_c, oh, ow)
+                            }
+                            PlanOp::Pool(spec) => (
+                                cc,
+                                spec.out_hw(hh).unwrap_or(0),
+                                spec.out_hw(ww).unwrap_or(0),
+                            ),
+                            _ => (cc, hh, ww),
+                        };
+                        dims.push((cc, hh, ww, oc, ow));
+                        (cc, hh, ww) = (oc, oh, ow);
+                    }
+                    let out_bytes = map_bytes(cc, hh, ww);
+                    let oh_final = hh;
+                    let tile = if tile_rows == 0 { oh_final } else { tile_rows.min(oh_final) };
+                    let mut ring = 0u64;
+                    if tile > 0 {
+                        // First-tile spans, walked backward through the
+                        // contracts (the first tile carries the tallest
+                        // top halo clip-free span).
+                        let m = stages.len();
+                        let mut spans = vec![(0usize, 0usize); m + 1];
+                        spans[m] = (0, tile);
+                        for i in (0..m).rev() {
+                            let (o0, o1) = spans[i + 1];
+                            spans[i] = stages[i].contract.in_span(o0, o1, dims[i].1);
+                        }
+                        for i in 0..m {
+                            let (ic, _, iw, oc, ow) = dims[i];
+                            // Stage 0 reads the materialized input map
+                            // in place (already counted as in_bytes);
+                            // later stages read the previous ring.
+                            let in_rows =
+                                if i == 0 { 0 } else { spans[i].1 - spans[i].0 };
+                            let out_rows = spans[i + 1].1 - spans[i + 1].0;
+                            ring = ring
+                                .max((ic * in_rows * iw + oc * out_rows * ow) as u64 * BYTES);
+                        }
+                        let tiles_total = oh_final.div_ceil(tile).max(1);
+                        ring *= workers.clamp(1, tiles_total) as u64;
+                    }
+                    *peak = (*peak).max(in_bytes + out_bytes + ring);
+                    (c, h, w) = (cc, hh, ww);
+                }
+                Segment::Branch(arms) => {
+                    let in_bytes = map_bytes(c, h, w);
+                    let budgets = split_budget(workers, arms.len());
+                    let mut arm_sum = 0u64;
+                    let mut total_c = 0usize;
+                    let (mut oh, mut ow) = (h, w);
+                    for (a, arm) in arms.iter().enumerate() {
+                        let mut arm_peak = 0u64;
+                        let (ac, ah, aw) = self.estimate_segs(
+                            arm, c, h, w, tile_rows, budgets[a], &mut arm_peak,
+                        );
+                        arm_sum += arm_peak;
+                        total_c += ac;
+                        (oh, ow) = (ah, aw);
+                    }
+                    let out_bytes = map_bytes(total_c, oh, ow);
+                    *peak = (*peak).max(in_bytes + arm_sum + out_bytes);
+                    (c, h, w) = (total_c, oh, ow);
+                }
+                Segment::GlobalAvgPool => {
+                    *peak = (*peak).max(map_bytes(c, h, w) + c as u64 * BYTES);
+                    (h, w) = (1, 1);
+                }
+                Segment::Fc => {
+                    if let Some(fc) = &self.fc {
+                        *peak = (*peak)
+                            .max((c + fc.classes) as u64 * BYTES);
+                        c = fc.classes;
+                    }
+                }
+            }
+        }
+        (c, h, w)
+    }
+
+    /// Largest tile height whose estimated peak fits `budget_bytes`
+    /// (per image, `workers` concurrent tiles) — how serving turns a
+    /// memory budget into a tile size. Falls back to single-row tiles
+    /// when even they exceed the budget: the estimate then simply
+    /// reports the floor the topology imposes.
+    pub fn tile_rows_for_budget(&self, budget_bytes: u64, workers: usize) -> usize {
+        for t in [64usize, 32, 16, 8, 4, 2] {
+            if self.peak_bytes_estimate(t, workers) <= budget_bytes {
+                return t;
+            }
+        }
+        1
     }
 
     /// Validate that `x` is a plausible (N, C, H, W) input batch for
@@ -268,6 +466,52 @@ mod tests {
         assert_eq!(plan.check_input(&Tensor::zeros(&[2, 1, 16, 16])).unwrap(), 2);
         assert!(plan.check_input(&Tensor::zeros(&[2, 3, 16, 16])).is_err());
         assert!(plan.check_input(&Tensor::zeros(&[16, 16])).is_err());
+    }
+
+    #[test]
+    fn peak_estimate_grows_with_tile_height() {
+        let net = zoo::tiny_cnn();
+        let w = tiny_weights(6);
+        let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+        let small = plan.peak_bytes_estimate(1, 1);
+        let big = plan.peak_bytes_estimate(8, 1);
+        let full = plan.peak_bytes_estimate(0, 1);
+        assert!(small > 0);
+        assert!(small <= big, "1-row tiles {small} > 8-row tiles {big}");
+        assert!(big <= full, "8-row tiles {big} > materializing {full}");
+        // More concurrent tiles → more live rings.
+        assert!(plan.peak_bytes_estimate(2, 8) >= plan.peak_bytes_estimate(2, 1));
+    }
+
+    #[test]
+    fn tile_rows_for_budget_tracks_the_budget() {
+        let net = zoo::tiny_cnn();
+        let w = tiny_weights(8);
+        let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+        // A huge budget takes the largest candidate tile, a zero
+        // budget falls back to single-row tiles.
+        assert_eq!(plan.tile_rows_for_budget(u64::MAX, 4), 64);
+        assert_eq!(plan.tile_rows_for_budget(0, 4), 1);
+        // The chosen tile's own estimate honors the budget.
+        let budget = plan.peak_bytes_estimate(4, 4);
+        let rows = plan.tile_rows_for_budget(budget, 4);
+        assert!(rows >= 4, "budget sized for 4-row tiles picked {rows}");
+        assert!(plan.peak_bytes_estimate(rows, 4) <= budget);
+    }
+
+    #[test]
+    fn schedule_records_fused_segments() {
+        let net = zoo::tiny_cnn();
+        let w = tiny_weights(5);
+        let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+        assert_eq!(plan.tile_rows, DEFAULT_TILE_ROWS);
+        assert_eq!(plan.declared_in, (1, 16));
+        let fused = plan
+            .schedule()
+            .iter()
+            .filter(|s| matches!(s, Segment::Fused(_)))
+            .count();
+        assert_eq!(fused, 3, "one fused walk per conv");
     }
 
     #[test]

@@ -1,37 +1,137 @@
-//! The run-time half of the split: walk the op graph, stream the
+//! The run-time half of the split: walk the tile schedule, stream the
 //! pre-kneaded lanes through SAC, never knead.
 //!
-//! Parallelism (§Perf): the conv hot loop fans out over (image,
-//! output-row) stripes via `util::pool::par_map` — each stripe gathers
-//! the activation window once per output pixel and shares it across
-//! every filter (the same reuse the legacy scalar path exploited), and
-//! `par_map`'s striped assignment keeps the output order deterministic,
-//! so results are bit-identical for any `TETRIS_THREADS` setting.
-//! The FC head fans out over batch rows. Branch arms run in sequence —
-//! each arm's convs already saturate the worker pool — and concatenate
-//! along the channel axis in arm order.
+//! Tiled fused execution (§Perf, DESIGN.md §Tiled fused execution):
+//! each `Conv → ReluRequant [→ Pool]` segment runs as one fused walk
+//! over row tiles of its *final* stage — a work item computes one
+//! (image, tile) stripe end to end through ring buffers holding only
+//! the tile's live rows (tile + halo, [`RowContract::in_span`]), so
+//! the conv's full-size pre-pool map never materializes. Halo rows at
+//! tile boundaries are recomputed (overlapped tiling); fusion stops at
+//! each pool on purpose — chaining walks across pools would grow the
+//! halo with the receptive field and turn the recompute quadratic.
+//!
+//! Parallelism: (image, tile) stripes fan out via
+//! `util::pool::par_map_with`, and `Branch` arms run **concurrently**,
+//! each arm handed a slice of the thread budget
+//! (`util::pool::split_budget`) so inception reduce convs overlap
+//! without oversubscribing the host. Striped assignment plus
+//! write-disjoint stitching keeps the output order deterministic: for
+//! any `TETRIS_THREADS`, any budget, and any tile height, results are
+//! bit-identical (invariant I5 extended over tilings).
 //!
 //! Every arithmetic step mirrors a plain scalar reference exactly (same
 //! gather order, same group windows, same `i64 → i32` casts): the
 //! legacy `runtime::quantized::forward_scalar` pipeline for the tiny
 //! CNN, and the naive MAC interpreter `model::reference` for the full
-//! declared-topology zoo. That is what makes invariant I5
-//! — plan ≡ scalar, bit for bit — hold by construction and testable by
-//! equality. Pool windows use Caffe ceil-mode sizing
+//! declared-topology zoo. Pool windows use Caffe ceil-mode sizing
 //! ([`PoolSpec::out_hw`]); max pools take the window's in-bounds
 //! maximum (padding never wins), average pools floor-divide the i64 sum
 //! by the in-bounds tap count.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::model::{PoolKind, PoolSpec, Tensor};
 use crate::quant::requantize;
 use crate::sac::{rear_adder_tree, split_kneaded, SegmentRegisters};
-use crate::util::pool::par_map;
+use crate::util::pool::{par_map_with, split_budget, worker_count};
 
 use super::compiled::{CompiledConv, CompiledFc, CompiledNetwork};
-use super::graph::PlanOp;
+use super::graph::{FusedStage, PlanOp, Segment};
+
+/// Execution-time knobs for [`CompiledNetwork::execute_opts`].
+/// `None` fields fall back to the plan's compiled defaults.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecOpts {
+    /// Output rows per fused tile. `Some(0)` materializes — one tile
+    /// spans each fused chain's full height, so every stage's whole
+    /// map lives at once. `None` uses the plan's `tile_rows` and lets
+    /// the executor shrink tiles to keep every worker fed on small
+    /// batches (results are tile-invariant either way).
+    pub tile_rows: Option<usize>,
+    /// Thread budget. `None` uses `util::pool::worker_count()`.
+    pub workers: Option<usize>,
+}
+
+impl ExecOpts {
+    /// Exact tile height — no adaptive shrinking (tests and sweeps).
+    pub fn tiled(tile_rows: usize) -> Self {
+        Self { tile_rows: Some(tile_rows), workers: None }
+    }
+
+    /// One tile per fused chain: the materializing baseline the
+    /// peak-allocation tests compare the tiled walk against.
+    pub fn materializing() -> Self {
+        Self::tiled(0)
+    }
+
+    /// Cap the thread budget (branch arms split whatever this is).
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = Some(workers);
+        self
+    }
+}
+
+/// Peak intermediate-buffer accounting for one
+/// [`CompiledNetwork::execute_traced`] call: feature maps, branch-arm
+/// input clones and tile ring buffers enter `current` when allocated
+/// and leave when retired; `peak` is the high-water mark. Per-thread
+/// fixed scratch (the im2col gather row, segment registers) is
+/// excluded — it is O(lane length) and independent of tiling.
+#[derive(Debug, Default)]
+pub struct AllocStats {
+    current: AtomicU64,
+    peak: AtomicU64,
+}
+
+impl AllocStats {
+    fn alloc(&self, bytes: u64) {
+        let now = self.current.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    fn free(&self, bytes: u64) {
+        self.current.fetch_sub(bytes, Ordering::Relaxed);
+    }
+
+    /// High-water mark of live feature-map bytes.
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+}
+
+/// Per-call execution context threaded through the segment walk.
+struct Ctx<'a> {
+    plan: &'a CompiledNetwork,
+    /// Output rows per fused tile; 0 = full height (materializing).
+    tile_rows: usize,
+    /// Whether tiles may shrink for load balance (default path only —
+    /// explicit `ExecOpts::tiled` sizes are honored exactly).
+    adaptive: bool,
+    stats: Option<&'a AllocStats>,
+}
+
+impl Ctx<'_> {
+    fn alloc(&self, bytes: u64) {
+        if let Some(s) = self.stats {
+            s.alloc(bytes);
+        }
+    }
+
+    fn free(&self, bytes: u64) {
+        if let Some(s) = self.stats {
+            s.free(bytes);
+        }
+    }
+}
+
+fn tensor_bytes(t: &Tensor<i32>) -> u64 {
+    (t.len() * std::mem::size_of::<i32>()) as u64
+}
 
 impl CompiledNetwork {
-    /// Execute the plan on a Q8.8 input batch (N, C, H, W).
+    /// Execute the plan on a Q8.8 input batch (N, C, H, W) with the
+    /// plan's default tile height and the global worker count.
     ///
     /// Returns int32 logits (N, classes) for classifier plans, or the
     /// final feature map — (N, C', H', W'), or (N, C') after a declared
@@ -40,105 +140,415 @@ impl CompiledNetwork {
     /// derives all spatial extents from the tensor itself (used by
     /// tests/benches to run scaled workloads).
     pub fn execute(&self, x: &Tensor<i32>) -> crate::Result<Tensor<i32>> {
-        self.check_input(x)?;
-        self.run_ops(&self.ops, x.clone())
+        self.execute_opts(x, ExecOpts::default())
     }
 
-    /// Walk one op list (the whole plan, or one branch arm).
-    fn run_ops(&self, ops: &[PlanOp], mut h: Tensor<i32>) -> crate::Result<Tensor<i32>> {
-        for op in ops {
-            h = match op {
-                PlanOp::Conv { layer, pad, stride } => {
-                    conv_parallel(&self.convs[*layer], &h, *pad, *stride, self.mode)?
-                }
-                PlanOp::ReluRequant { frac_bits } => {
-                    for v in h.data_mut() {
-                        *v = requantize(*v, *frac_bits).max(0);
-                    }
-                    h
-                }
-                PlanOp::Pool(spec) => pool(&h, *spec)?,
-                PlanOp::Branch { arms } => {
-                    // derive_graph guarantees ≥2 arms; the last arm
-                    // takes `h` by move instead of one more clone.
-                    let (last, init) = arms.split_last().expect("branch has arms");
-                    let mut parts = Vec::with_capacity(arms.len());
-                    for arm in init {
-                        parts.push(self.run_ops(arm, h.clone())?);
-                    }
-                    parts.push(self.run_ops(last, h)?);
-                    concat_channels(&parts)?
-                }
-                PlanOp::GlobalAvgPool => global_avg_pool(&h)?,
-                PlanOp::Fc => {
-                    let fc = self.fc.as_ref().ok_or_else(|| {
-                        crate::Error::Config("plan has an Fc op but no compiled head".into())
-                    })?;
-                    fc_parallel(fc, &h, self.mode)?
-                }
-            };
-        }
-        Ok(h)
+    /// [`Self::execute`] with explicit tile height / thread budget.
+    /// Results are bit-identical for every option combination
+    /// (invariant I5); the options only move wall time and peak
+    /// memory.
+    pub fn execute_opts(&self, x: &Tensor<i32>, opts: ExecOpts) -> crate::Result<Tensor<i32>> {
+        self.execute_inner(x, opts, None)
+    }
+
+    /// [`Self::execute_opts`] plus measured peak feature-map bytes —
+    /// the accounting the peak-allocation tests pin fused-vs-
+    /// materializing claims with.
+    pub fn execute_traced(
+        &self,
+        x: &Tensor<i32>,
+        opts: ExecOpts,
+    ) -> crate::Result<(Tensor<i32>, u64)> {
+        let stats = AllocStats::default();
+        let out = self.execute_inner(x, opts, Some(&stats))?;
+        Ok((out, stats.peak_bytes()))
+    }
+
+    fn execute_inner(
+        &self,
+        x: &Tensor<i32>,
+        opts: ExecOpts,
+        stats: Option<&AllocStats>,
+    ) -> crate::Result<Tensor<i32>> {
+        self.check_input(x)?;
+        let (tile_rows, adaptive) = match opts.tile_rows {
+            Some(t) => (t, false),
+            None => (self.tile_rows, true),
+        };
+        let ctx = Ctx { plan: self, tile_rows, adaptive, stats };
+        let workers = opts.workers.unwrap_or_else(worker_count).max(1);
+        let input = x.clone();
+        ctx.alloc(tensor_bytes(&input));
+        run_segments(&ctx, &self.schedule, input, workers)
     }
 }
 
-/// Integer conv over pre-kneaded filter lanes, parallel across
-/// (image, output-row) stripes.
-fn conv_parallel(
-    conv: &CompiledConv,
+/// Walk one segment list (the whole plan, or one branch arm).
+fn run_segments(
+    ctx: &Ctx,
+    segs: &[Segment],
+    mut h: Tensor<i32>,
+    workers: usize,
+) -> crate::Result<Tensor<i32>> {
+    for seg in segs {
+        let prev_bytes = tensor_bytes(&h);
+        h = match seg {
+            Segment::Fused(stages) => run_fused(ctx, stages, &h, workers)?,
+            Segment::Branch(arms) => run_branch(ctx, arms, &h, workers)?,
+            Segment::GlobalAvgPool => {
+                let g = global_avg_pool(&h)?;
+                ctx.alloc(tensor_bytes(&g));
+                g
+            }
+            Segment::Fc => {
+                let fc = ctx.plan.fc.as_ref().ok_or_else(|| {
+                    crate::Error::Config("plan has an Fc op but no compiled head".into())
+                })?;
+                let logits = fc_parallel(fc, &h, ctx.plan.mode, workers)?;
+                ctx.alloc(tensor_bytes(&logits));
+                logits
+            }
+        };
+        // The consumed input retires once its consumer produced.
+        ctx.free(prev_bytes);
+    }
+    Ok(h)
+}
+
+/// Branch arms under a shared thread budget: up to `workers` scoped
+/// arm threads (they mostly sleep in their inner fan-out joins), each
+/// walking its segments with a `split_budget` slice — so the arms'
+/// (image, tile) stripes overlap without oversubscribing the host.
+/// With fewer workers than arms, striping makes one arm thread walk
+/// several arms in sequence, so live compute threads never exceed the
+/// budget. Outputs concatenate along channels in arm order, exactly
+/// as before.
+fn run_branch(
+    ctx: &Ctx,
+    arms: &[Vec<Segment>],
     x: &Tensor<i32>,
+    workers: usize,
+) -> crate::Result<Tensor<i32>> {
+    let outer = workers.clamp(1, arms.len());
+    let budgets = split_budget(workers, outer);
+    let idx: Vec<usize> = (0..arms.len()).collect();
+    let parts = par_map_with(outer, &idx, |i, &a| {
+        ctx.alloc(tensor_bytes(x));
+        run_segments(ctx, &arms[a], x.clone(), budgets[i % outer])
+    });
+    let mut tensors = Vec::with_capacity(parts.len());
+    for p in parts {
+        tensors.push(p?);
+    }
+    let cat = concat_channels(&tensors)?;
+    ctx.alloc(tensor_bytes(&cat));
+    for t in &tensors {
+        ctx.free(tensor_bytes(t));
+    }
+    Ok(cat)
+}
+
+/// Resolved geometry of one fused stage against the actual input.
+#[derive(Debug, Clone, Copy)]
+struct StageDims {
+    in_c: usize,
+    in_h: usize,
+    in_w: usize,
+    out_c: usize,
+    out_h: usize,
+    out_w: usize,
+}
+
+/// One fused `Conv → ReluRequant [→ Pool]` walk over row tiles of its
+/// final stage.
+fn run_fused(
+    ctx: &Ctx,
+    stages: &[FusedStage],
+    x: &Tensor<i32>,
+    workers: usize,
+) -> crate::Result<Tensor<i32>> {
+    let (n, c0, h0, w0) = match *x.shape() {
+        [n, c, h, w] => (n, c, h, w),
+        _ => return Err(crate::Error::Shape("fused segment input must be 4-D".into())),
+    };
+    // Resolve every stage's geometry from the tensor (not the declared
+    // topology — scaled/off-topology inputs are supported).
+    let mut dims: Vec<StageDims> = Vec::with_capacity(stages.len());
+    let (mut c, mut h, mut w) = (c0, h0, w0);
+    for st in stages {
+        let (oc, oh, ow) = match &st.op {
+            PlanOp::Conv { layer, pad, stride } => {
+                let conv = &ctx.plan.convs[*layer];
+                if c != conv.in_c {
+                    return Err(crate::Error::Shape(format!(
+                        "{}: input channels {c} != weight channels {}",
+                        conv.name, conv.in_c
+                    )));
+                }
+                if *stride == 0 {
+                    return Err(crate::Error::Config(format!("{}: stride 0", conv.name)));
+                }
+                if h + 2 * pad < conv.kh || w + 2 * pad < conv.kw {
+                    return Err(crate::Error::Shape(format!(
+                        "{}: {h}×{w} input (pad {pad}) smaller than {}×{} kernel",
+                        conv.name, conv.kh, conv.kw
+                    )));
+                }
+                (
+                    conv.out_c,
+                    (h + 2 * pad - conv.kh) / stride + 1,
+                    (w + 2 * pad - conv.kw) / stride + 1,
+                )
+            }
+            PlanOp::ReluRequant { .. } => (c, h, w),
+            PlanOp::Pool(spec) => (c, spec.out_hw(h)?, spec.out_hw(w)?),
+            other => {
+                return Err(crate::Error::Config(format!(
+                    "non-fusable op {other:?} in a fused segment"
+                )))
+            }
+        };
+        dims.push(StageDims { in_c: c, in_h: h, in_w: w, out_c: oc, out_h: oh, out_w: ow });
+        (c, h, w) = (oc, oh, ow);
+    }
+    let last = dims.last().expect("fused segments are non-empty");
+    let (oc, oh, ow) = (last.out_c, last.out_h, last.out_w);
+
+    let mut tile = if ctx.tile_rows == 0 { oh } else { ctx.tile_rows.clamp(1, oh) };
+    if ctx.adaptive && ctx.tile_rows != 0 {
+        // Results are tile-invariant (I5), so the default path may
+        // shrink tiles until (images × tiles) covers the budget.
+        while tile > 1 && n * oh.div_ceil(tile) < workers {
+            tile = tile.div_ceil(2);
+        }
+    }
+
+    // One work item per (image, output-row tile) of the final stage.
+    let mut items: Vec<(usize, usize, usize)> = Vec::with_capacity(n * oh.div_ceil(tile));
+    for b in 0..n {
+        let mut t0 = 0;
+        while t0 < oh {
+            let t1 = (t0 + tile).min(oh);
+            items.push((b, t0, t1));
+            t0 = t1;
+        }
+    }
+    let tiles = par_map_with(workers, &items, |_, &(b, t0, t1)| {
+        run_tile(ctx, stages, &dims, x, b, t0, t1)
+    });
+
+    let mut out: Tensor<i32> = Tensor::zeros(&[n, oc, oh, ow]);
+    ctx.alloc(tensor_bytes(&out));
+    for (&(b, t0, t1), res) in items.iter().zip(tiles) {
+        let buf = res?;
+        for f in 0..oc {
+            for y in t0..t1 {
+                let src = buf.index(f, y, 0);
+                let dst = out.idx4(b, f, y, 0);
+                out.data_mut()[dst..dst + ow].copy_from_slice(&buf.data[src..src + ow]);
+            }
+        }
+        ctx.free(buf.bytes());
+    }
+    Ok(out)
+}
+
+/// Rows `[y0, y1)` of a single image's (C, H, W) feature map — the
+/// live ring of a tile walk, addressed in global row coordinates.
+struct RowBuf {
+    c: usize,
+    y0: usize,
+    y1: usize,
+    w: usize,
+    data: Vec<i32>,
+}
+
+impl RowBuf {
+    fn new(c: usize, y0: usize, y1: usize, w: usize) -> Self {
+        Self { c, y0, y1, w, data: vec![0; c * (y1 - y0) * w] }
+    }
+
+    fn rows(&self) -> usize {
+        self.y1 - self.y0
+    }
+
+    #[inline]
+    fn index(&self, c: usize, y: usize, x: usize) -> usize {
+        debug_assert!(
+            y >= self.y0 && y < self.y1,
+            "row {y} outside ring [{}, {})",
+            self.y0,
+            self.y1
+        );
+        (c * self.rows() + (y - self.y0)) * self.w + x
+    }
+
+    #[inline]
+    fn get(&self, c: usize, y: usize, x: usize) -> i32 {
+        self.data[self.index(c, y, x)]
+    }
+
+    fn bytes(&self) -> u64 {
+        (self.data.len() * std::mem::size_of::<i32>()) as u64
+    }
+}
+
+/// Where a stage reads its input rows: stage 0 reads straight from
+/// the (already materialized) input tensor — no seed copy — and later
+/// stages read the previous stage's ring.
+enum RowSrc<'a> {
+    Tensor { x: &'a Tensor<i32>, b: usize },
+    Ring(&'a RowBuf),
+}
+
+impl RowSrc<'_> {
+    #[inline]
+    fn get(&self, c: usize, y: usize, xx: usize) -> i32 {
+        match self {
+            RowSrc::Tensor { x, b } => x.get4(*b, c, y, xx),
+            RowSrc::Ring(r) => r.get(c, y, xx),
+        }
+    }
+}
+
+fn row_src<'a>(buf: &'a Option<RowBuf>, x: &'a Tensor<i32>, b: usize) -> RowSrc<'a> {
+    match buf {
+        Some(r) => RowSrc::Ring(r),
+        None => RowSrc::Tensor { x, b },
+    }
+}
+
+/// Retire the previous ring (if any) in favor of its consumer's output.
+fn retire(ctx: &Ctx, buf: &mut Option<RowBuf>, next: RowBuf) {
+    ctx.alloc(next.bytes());
+    if let Some(old) = buf.replace(next) {
+        ctx.free(old.bytes());
+    }
+}
+
+/// One (image, tile) work item: produce final-stage rows `[t0, t1)` by
+/// walking the fused stages over ring buffers. The backward pass
+/// derives each stage's needed input span (tile + halo); the forward
+/// pass computes exactly those rows — stage 0 reading the input tensor
+/// in place, every later stage reading the previous ring — retiring
+/// each ring as its consumer finishes.
+fn run_tile(
+    ctx: &Ctx,
+    stages: &[FusedStage],
+    dims: &[StageDims],
+    x: &Tensor<i32>,
+    b: usize,
+    t0: usize,
+    t1: usize,
+) -> crate::Result<RowBuf> {
+    let m = stages.len();
+    // spans[i] = rows of stage i's INPUT this tile needs; spans[m] is
+    // the tile itself. (spans[0] is the tile's read window on the
+    // input tensor — read in place, never copied.)
+    let mut spans = vec![(0usize, 0usize); m + 1];
+    spans[m] = (t0, t1);
+    for i in (0..m).rev() {
+        let (o0, o1) = spans[i + 1];
+        spans[i] = stages[i].contract.in_span(o0, o1, dims[i].in_h);
+    }
+
+    let mut buf: Option<RowBuf> = None;
+    for (i, st) in stages.iter().enumerate() {
+        let (o0, o1) = spans[i + 1];
+        let d = &dims[i];
+        match &st.op {
+            PlanOp::Conv { layer, pad, stride } => {
+                let next = {
+                    let src = row_src(&buf, x, b);
+                    conv_rows(
+                        &ctx.plan.convs[*layer],
+                        &src,
+                        d,
+                        *pad,
+                        *stride,
+                        o0,
+                        o1,
+                        ctx.plan.mode,
+                    )
+                };
+                retire(ctx, &mut buf, next);
+            }
+            PlanOp::ReluRequant { frac_bits } => {
+                if buf.is_none() {
+                    // Lone elementwise segment (never produced by the
+                    // zoo's lowering, but kept total): seed its rows
+                    // from the input tensor once.
+                    let mut seeded = RowBuf::new(d.in_c, o0, o1, d.in_w);
+                    for cc in 0..d.in_c {
+                        for y in o0..o1 {
+                            let src = x.idx4(b, cc, y, 0);
+                            let dst = seeded.index(cc, y, 0);
+                            seeded.data[dst..dst + d.in_w]
+                                .copy_from_slice(&x.data()[src..src + d.in_w]);
+                        }
+                    }
+                    ctx.alloc(seeded.bytes());
+                    buf = Some(seeded);
+                }
+                let r = buf.as_mut().expect("seeded above");
+                // Elementwise: same span, mutate the ring in place.
+                for v in r.data.iter_mut() {
+                    *v = requantize(*v, *frac_bits).max(0);
+                }
+            }
+            PlanOp::Pool(spec) => {
+                let next = {
+                    let src = row_src(&buf, x, b);
+                    pool_rows(*spec, &src, d, o0, o1)
+                };
+                retire(ctx, &mut buf, next);
+            }
+            _ => unreachable!("run_fused validated the stage ops"),
+        }
+    }
+    Ok(buf.expect("fused segments are non-empty"))
+}
+
+/// Integer conv over pre-kneaded filter lanes, producing output rows
+/// `[o0, o1)` from its source (input tensor in place, or the previous
+/// ring). Identical arithmetic to the scalar references: same
+/// (c, ky, kx) gather order, same group windows, same `i64 → i32`
+/// cast.
+#[allow(clippy::too_many_arguments)]
+fn conv_rows(
+    conv: &CompiledConv,
+    input: &RowSrc,
+    d: &StageDims,
     pad: usize,
     stride: usize,
+    o0: usize,
+    o1: usize,
     mode: crate::config::Mode,
-) -> crate::Result<Tensor<i32>> {
-    let (n, c, h, w) = match *x.shape() {
-        [n, c, h, w] => (n, c, h, w),
-        _ => return Err(crate::Error::Shape("conv input must be 4-D".into())),
-    };
-    if c != conv.in_c {
-        return Err(crate::Error::Shape(format!(
-            "{}: input channels {c} != weight channels {}",
-            conv.name, conv.in_c
-        )));
-    }
-    if stride == 0 {
-        return Err(crate::Error::Config(format!("{}: stride 0", conv.name)));
-    }
+) -> RowBuf {
     let (kh, kw) = (conv.kh, conv.kw);
-    if h + 2 * pad < kh || w + 2 * pad < kw {
-        return Err(crate::Error::Shape(format!(
-            "{}: {h}×{w} input (pad {pad}) smaller than {kh}×{kw} kernel",
-            conv.name
-        )));
-    }
-    let oh = (h + 2 * pad - kh) / stride + 1;
-    let ow = (w + 2 * pad - kw) / stride + 1;
-    let o = conv.out_c;
     let lane_len = conv.lane_len();
-
-    // One work item per (image, output row): coarse enough that the
-    // im2col gather is amortized across all filters of the row, fine
-    // enough that a batch of 8 tiny-CNN images yields n·oh ≥ 128 items.
-    let rows: Vec<(usize, usize)> = (0..n)
-        .flat_map(|b| (0..oh).map(move |oy| (b, oy)))
-        .collect();
-    let row_vals: Vec<Vec<i32>> = par_map(&rows, |_, &(b, oy)| {
-        let mut acts = vec![0i32; lane_len];
-        let mut segs = SegmentRegisters::new(mode.weight_bits());
-        let mut out_row = vec![0i32; o * ow];
+    let ow = d.out_w;
+    let mut out = RowBuf::new(conv.out_c, o0, o1, ow);
+    let mut acts = vec![0i32; lane_len];
+    let mut segs = SegmentRegisters::new(mode.weight_bits());
+    for oy in o0..o1 {
         for ox in 0..ow {
             // Gather the activation window (im2col row) in OIHW weight
             // order: (c, ky, kx) — once, shared by every filter.
             let mut idx = 0;
-            for cc in 0..c {
+            for cc in 0..d.in_c {
                 for ky in 0..kh {
                     for kx in 0..kw {
                         let iy = oy * stride + ky;
                         let ix = ox * stride + kx;
-                        acts[idx] = if iy < pad || ix < pad || iy - pad >= h || ix - pad >= w {
+                        acts[idx] = if iy < pad
+                            || ix < pad
+                            || iy - pad >= d.in_h
+                            || ix - pad >= d.in_w
+                        {
                             0
                         } else {
-                            x.get4(b, cc, iy - pad, ix - pad)
+                            input.get(cc, iy - pad, ix - pad)
                         };
                         idx += 1;
                     }
@@ -150,22 +560,13 @@ fn conv_parallel(
                     let end = (start + klane.ks).min(lane_len);
                     split_kneaded(group, &acts[start..end], &mut segs);
                 }
-                out_row[f * ow + ox] = rear_adder_tree(segs.values()) as i32;
+                let oi = out.index(f, oy, ox);
+                out.data[oi] = rear_adder_tree(segs.values()) as i32;
                 segs.reset();
             }
         }
-        out_row
-    });
-
-    let mut out: Tensor<i32> = Tensor::zeros(&[n, o, oh, ow]);
-    for (&(b, oy), row) in rows.iter().zip(&row_vals) {
-        for f in 0..o {
-            for ox in 0..ow {
-                out.set4(b, f, oy, ox, row[f * ow + ox]);
-            }
-        }
     }
-    Ok(out)
+    out
 }
 
 // The pool/GAP/relu bodies below duplicate the scalar reference paths
@@ -175,51 +576,47 @@ fn conv_parallel(
 // shared half. The I5 suites exercise every one of these ops on both
 // paths, so any drift fails loudly.
 
-/// Parameterized integer pool (Caffe ceil-mode geometry).
-fn pool(x: &Tensor<i32>, spec: PoolSpec) -> crate::Result<Tensor<i32>> {
-    let [n, c, h, w] = match *x.shape() {
-        [n, c, h, w] => [n, c, h, w],
-        _ => return Err(crate::Error::Shape("pool input must be 4-D".into())),
-    };
-    let (oh, ow) = (spec.out_hw(h)?, spec.out_hw(w)?);
+/// Parameterized integer pool (Caffe ceil-mode geometry) over a ring,
+/// producing output rows `[o0, o1)`.
+fn pool_rows(spec: PoolSpec, input: &RowSrc, d: &StageDims, o0: usize, o1: usize) -> RowBuf {
     let (k, stride, pad) = (spec.k, spec.stride, spec.pad);
-    let mut out: Tensor<i32> = Tensor::zeros(&[n, c, oh, ow]);
-    for b in 0..n {
-        for cc in 0..c {
-            for oy in 0..oh {
-                // Window rows clipped to the input (pad taps excluded).
-                let y0 = (oy * stride).saturating_sub(pad);
-                let y1 = (oy * stride + k - pad).min(h);
-                for ox in 0..ow {
-                    let x0 = (ox * stride).saturating_sub(pad);
-                    let x1 = (ox * stride + k - pad).min(w);
-                    let v = match spec.kind {
-                        PoolKind::Max => {
-                            let mut m = i32::MIN;
-                            for y in y0..y1 {
-                                for xx in x0..x1 {
-                                    m = m.max(x.get4(b, cc, y, xx));
-                                }
+    let ow = d.out_w;
+    let mut out = RowBuf::new(d.in_c, o0, o1, ow);
+    for cc in 0..d.in_c {
+        for oy in o0..o1 {
+            // Window rows clipped to the input (pad taps excluded).
+            let wy0 = (oy * stride).saturating_sub(pad);
+            let wy1 = (oy * stride + k - pad).min(d.in_h);
+            for ox in 0..ow {
+                let wx0 = (ox * stride).saturating_sub(pad);
+                let wx1 = (ox * stride + k - pad).min(d.in_w);
+                let v = match spec.kind {
+                    PoolKind::Max => {
+                        let mut m = i32::MIN;
+                        for y in wy0..wy1 {
+                            for xx in wx0..wx1 {
+                                m = m.max(input.get(cc, y, xx));
                             }
-                            m
                         }
-                        PoolKind::Avg => {
-                            let mut s: i64 = 0;
-                            for y in y0..y1 {
-                                for xx in x0..x1 {
-                                    s += x.get4(b, cc, y, xx) as i64;
-                                }
+                        m
+                    }
+                    PoolKind::Avg => {
+                        let mut s: i64 = 0;
+                        for y in wy0..wy1 {
+                            for xx in wx0..wx1 {
+                                s += input.get(cc, y, xx) as i64;
                             }
-                            let taps = ((y1 - y0) * (x1 - x0)) as i64;
-                            s.div_euclid(taps) as i32
                         }
-                    };
-                    out.set4(b, cc, oy, ox, v);
-                }
+                        let taps = ((wy1 - wy0) * (wx1 - wx0)) as i64;
+                        s.div_euclid(taps) as i32
+                    }
+                };
+                let oi = out.index(cc, oy, ox);
+                out.data[oi] = v;
             }
         }
     }
-    Ok(out)
+    out
 }
 
 /// Concatenate feature maps along the channel axis (branch arm order).
@@ -276,11 +673,13 @@ fn global_avg_pool(x: &Tensor<i32>) -> crate::Result<Tensor<i32>> {
     Ok(feats)
 }
 
-/// FC head over pre-kneaded class lanes, parallel across batch rows.
+/// FC head over pre-kneaded class lanes, parallel across batch rows
+/// within the caller's thread budget.
 fn fc_parallel(
     fc: &CompiledFc,
     x: &Tensor<i32>,
     mode: crate::config::Mode,
+    workers: usize,
 ) -> crate::Result<Tensor<i32>> {
     let [n, d] = match *x.shape() {
         [n, d] => [n, d],
@@ -293,7 +692,7 @@ fn fc_parallel(
         )));
     }
     let items: Vec<usize> = (0..n).collect();
-    let rows: Vec<Vec<i32>> = par_map(&items, |_, &b| {
+    let rows: Vec<Vec<i32>> = par_map_with(workers, &items, |_, &b| {
         let acts = &x.data()[b * d..(b + 1) * d];
         let mut segs = SegmentRegisters::new(mode.weight_bits());
         let mut logits = vec![0i32; fc.classes];
@@ -333,6 +732,27 @@ mod tests {
         t
     }
 
+    /// Wrap a single-image NCHW tensor as a full-height ring.
+    fn buf_of(x: &Tensor<i32>) -> RowBuf {
+        let [n, c, h, w] = match *x.shape() {
+            [n, c, h, w] => [n, c, h, w],
+            _ => panic!("4-D input"),
+        };
+        assert_eq!(n, 1, "single image");
+        RowBuf { c, y0: 0, y1: h, w, data: x.data().to_vec() }
+    }
+
+    fn pool_dims(c: usize, h: usize, w: usize, spec: PoolSpec) -> StageDims {
+        StageDims {
+            in_c: c,
+            in_h: h,
+            in_w: w,
+            out_c: c,
+            out_h: spec.out_hw(h).unwrap(),
+            out_w: spec.out_hw(w).unwrap(),
+        }
+    }
+
     #[test]
     fn execute_produces_logits_and_is_deterministic() {
         let w = SacBackend::synthetic_weights(5).unwrap();
@@ -352,36 +772,90 @@ mod tests {
     }
 
     #[test]
-    fn pool_2x2_matches_legacy_truncating_maxpool_on_even_extents() {
-        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1, 9, -4, 3]).unwrap();
-        let p = pool(&x, PoolSpec::max(2, 2, 0)).unwrap();
-        assert_eq!(p.shape(), &[1, 1, 1, 1]);
-        assert_eq!(p.data(), &[9]);
+    fn tile_height_and_budget_never_change_logits() {
+        // Invariant I5 over tilings: every tile height (dividing the
+        // output rows or not), the materializing baseline, and every
+        // thread budget produce bit-identical logits.
+        let w = SacBackend::synthetic_weights(9).unwrap();
+        let plan = CompiledNetwork::compile(&zoo::tiny_cnn(), &w, 16, Mode::Fp16).unwrap();
+        let x = image_batch(2, 3);
+        let want = plan.execute_opts(&x, ExecOpts::materializing()).unwrap();
+        for tile in [1usize, 2, 3, 5, 7, 100] {
+            for workers in [1usize, 3, 8] {
+                let got = plan
+                    .execute_opts(&x, ExecOpts::tiled(tile).with_workers(workers))
+                    .unwrap();
+                assert_eq!(got, want, "tile={tile} workers={workers}");
+            }
+        }
+        assert_eq!(plan.execute(&x).unwrap(), want, "default path drifted");
     }
 
     #[test]
-    fn pool_3x3_stride2_uses_ceil_windows() {
+    fn traced_tiled_peak_is_below_materializing_peak() {
+        let w = SacBackend::synthetic_weights(4).unwrap();
+        let plan = CompiledNetwork::compile(&zoo::tiny_cnn(), &w, 16, Mode::Fp16).unwrap();
+        let x = image_batch(1, 7);
+        let (full, peak_full) = plan
+            .execute_traced(&x, ExecOpts::materializing().with_workers(1))
+            .unwrap();
+        let (tiled, peak_tiled) = plan
+            .execute_traced(&x, ExecOpts::tiled(1).with_workers(1))
+            .unwrap();
+        assert_eq!(full, tiled);
+        assert!(
+            peak_tiled < peak_full,
+            "tiled peak {peak_tiled} not below materializing peak {peak_full}"
+        );
+    }
+
+    #[test]
+    fn pool_rows_2x2_matches_legacy_truncating_maxpool_on_even_extents() {
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1, 9, -4, 3]).unwrap();
+        let spec = PoolSpec::max(2, 2, 0);
+        let buf = buf_of(&x);
+        let p = pool_rows(spec, &RowSrc::Ring(&buf), &pool_dims(1, 2, 2, spec), 0, 1);
+        assert_eq!((p.c, p.rows(), p.w), (1, 1, 1));
+        assert_eq!(p.data, &[9]);
+        // Stage 0 reads the tensor in place — same values either way.
+        let q = pool_rows(
+            spec,
+            &RowSrc::Tensor { x: &x, b: 0 },
+            &pool_dims(1, 2, 2, spec),
+            0,
+            1,
+        );
+        assert_eq!(p.data, q.data);
+    }
+
+    #[test]
+    fn pool_rows_3x3_stride2_uses_ceil_windows() {
         // 1×8 row, k=3 s=2 pad=1 (the pad keeps the 1-tall height
         // legal). Width: ceil((8+2-3)/2)+1 = 5 windows, the last one
         // clipped to the single in-bounds tap at index 7 — padding
         // never wins a max, so a negative value survives there.
         let x = Tensor::from_vec(&[1, 1, 1, 8], vec![0, 1, 2, 3, 4, 5, 6, -7]).unwrap();
-        let p = pool(&x, PoolSpec::max(3, 2, 1)).unwrap();
-        assert_eq!(p.shape(), &[1, 1, 1, 5]);
-        assert_eq!(p.data(), &[1, 3, 5, 6, -7]);
+        let spec = PoolSpec::max(3, 2, 1);
+        let buf = buf_of(&x);
+        let p = pool_rows(spec, &RowSrc::Ring(&buf), &pool_dims(1, 1, 8, spec), 0, 1);
+        assert_eq!((p.c, p.rows(), p.w), (1, 1, 5));
+        assert_eq!(p.data, &[1, 3, 5, 6, -7]);
     }
 
     #[test]
-    fn avg_pool_floor_divides_inbounds_taps() {
+    fn avg_pool_rows_floor_divides_inbounds_taps() {
         let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1, 2, 3, -5]).unwrap();
-        let p = pool(&x, PoolSpec::avg(2, 2, 0)).unwrap();
+        let buf = buf_of(&x);
+        let spec = PoolSpec::avg(2, 2, 0);
+        let p = pool_rows(spec, &RowSrc::Ring(&buf), &pool_dims(1, 2, 2, spec), 0, 1);
         // (1+2+3-5) = 1, 4 taps → 1.div_euclid(4) = 0.
-        assert_eq!(p.data(), &[0]);
+        assert_eq!(p.data, &[0]);
         // Padded window clips to in-bounds taps: pad 1, k 2, stride 2 →
         // out 2×2, each window holds exactly one in-bounds value.
-        let p = pool(&x, PoolSpec::avg(2, 2, 1)).unwrap();
-        assert_eq!(p.shape(), &[1, 1, 2, 2]);
-        assert_eq!(p.data(), &[1, 2, 3, -5]);
+        let spec = PoolSpec::avg(2, 2, 1);
+        let p = pool_rows(spec, &RowSrc::Ring(&buf), &pool_dims(1, 2, 2, spec), 0, 2);
+        assert_eq!((p.c, p.rows(), p.w), (1, 2, 2));
+        assert_eq!(p.data, &[1, 2, 3, -5]);
     }
 
     #[test]
@@ -399,6 +873,7 @@ mod tests {
 
     // Plan ≡ scalar-forward equivalence (invariant I5) lives in
     // rust/tests/plan_exec.rs (tiny CNN / VGG block) and
-    // rust/tests/plan_topology.rs (full declared-topology zoo);
+    // rust/tests/plan_topology.rs (full declared-topology zoo); the
+    // tile-sweep extension in rust/tests/plan_tiling.rs;
     // zero-rekneading in plan_zero_knead.rs.
 }

@@ -13,7 +13,7 @@
 //! chain (channels and spatial sizes, weight availability, one use per
 //! layer).
 
-use crate::model::{LoadedLayer, LoadedWeights, Network, PoolSpec, TopoOp};
+use crate::model::{ConvLayer, LoadedLayer, LoadedWeights, Network, PoolSpec, TopoOp};
 
 /// One node of an execution plan.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -35,6 +35,138 @@ pub enum PlanOp {
     GlobalAvgPool,
     /// Fully connected head over the pre-kneaded class lanes.
     Fc,
+}
+
+/// Per-op row-tile contract: how many input rows a span of output rows
+/// needs. `k`/`stride`/`pad` describe the op's window geometry along
+/// the row axis — a conv's kernel height, a pool's window, or the
+/// 1×1 identity for elementwise ops. The same clipped-window formula
+/// serves convs (out-of-span rows are zero padding) and ceil-mode
+/// pools (out-of-span rows are excluded taps), so one contract type
+/// covers every fusable op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RowContract {
+    /// Window height (1 for elementwise ops).
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl RowContract {
+    /// Contract of an elementwise op (ReluRequant): rows map 1:1.
+    pub fn elementwise() -> Self {
+        Self { k: 1, stride: 1, pad: 0 }
+    }
+
+    /// Input rows `[lo, hi)` needed to produce output rows `[o0, o1)`
+    /// (the tile plus its halo), clipped to the real input extent
+    /// `in_h`. Rows the unclipped window would read outside `[lo, hi)`
+    /// are padding: zeros for a conv gather, excluded taps for a pool
+    /// window — neither lives in any buffer.
+    pub fn in_span(&self, o0: usize, o1: usize, in_h: usize) -> (usize, usize) {
+        debug_assert!(o0 < o1, "empty output span");
+        let lo = (o0 * self.stride).saturating_sub(self.pad).min(in_h);
+        let hi = ((o1 - 1) * self.stride + self.k)
+            .saturating_sub(self.pad)
+            .clamp(lo, in_h);
+        (lo, hi)
+    }
+}
+
+/// One stage of a fused tile walk: a fusable op plus the row contract
+/// lowering computed for it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FusedStage {
+    /// `Conv`, `ReluRequant` or `Pool` only — the ops whose output
+    /// rows depend on a bounded row window of their input.
+    pub op: PlanOp,
+    pub contract: RowContract,
+}
+
+/// One segment of the tile-scheduled execution plan. Fused segments
+/// walk row tiles end to end (ring buffers, no intermediate maps);
+/// the others are materialization points — their output is a whole
+/// feature map (or feature vector) by nature.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Segment {
+    /// A `Conv → ReluRequant [→ Pool]` chain (or a lone pool opening a
+    /// branch arm) executed as one fused walk over output row tiles.
+    Fused(Vec<FusedStage>),
+    /// Branch arms — each its own segmented schedule — executed
+    /// concurrently under a shared thread budget and concatenated
+    /// along channels in arm order.
+    Branch(Vec<Vec<Segment>>),
+    GlobalAvgPool,
+    Fc,
+}
+
+/// Group a lowered op list into the tile schedule the executor walks:
+/// every conv absorbs its fused ReluRequant and, when one follows
+/// immediately, the pool it feeds — so the conv's full-size output map
+/// never materializes; only the (stride²-smaller) pool output does.
+/// Chains are deliberately NOT fused past a pool: overlapped row tiling
+/// recomputes halo rows, and a halo that crosses k-row windows at
+/// every fused stage grows with the receptive field — one conv (+pool)
+/// per walk keeps the recompute bounded by `pool.k − pool.stride` rows
+/// per tile boundary while already eliminating the dominant buffer.
+pub fn segment_plan(ops: &[PlanOp], layers: &[ConvLayer]) -> Vec<Segment> {
+    let mut segs = Vec::new();
+    let mut i = 0;
+    while i < ops.len() {
+        match &ops[i] {
+            PlanOp::Conv { layer, pad, stride } => {
+                let mut stages = vec![FusedStage {
+                    op: ops[i].clone(),
+                    contract: RowContract { k: layers[*layer].k, stride: *stride, pad: *pad },
+                }];
+                i += 1;
+                if let Some(PlanOp::ReluRequant { .. }) = ops.get(i) {
+                    stages.push(FusedStage {
+                        op: ops[i].clone(),
+                        contract: RowContract::elementwise(),
+                    });
+                    i += 1;
+                }
+                if let Some(PlanOp::Pool(spec)) = ops.get(i) {
+                    stages.push(FusedStage {
+                        op: ops[i].clone(),
+                        contract: RowContract { k: spec.k, stride: spec.stride, pad: spec.pad },
+                    });
+                    i += 1;
+                }
+                segs.push(Segment::Fused(stages));
+            }
+            PlanOp::ReluRequant { .. } => {
+                segs.push(Segment::Fused(vec![FusedStage {
+                    op: ops[i].clone(),
+                    contract: RowContract::elementwise(),
+                }]));
+                i += 1;
+            }
+            PlanOp::Pool(spec) => {
+                segs.push(Segment::Fused(vec![FusedStage {
+                    op: ops[i].clone(),
+                    contract: RowContract { k: spec.k, stride: spec.stride, pad: spec.pad },
+                }]));
+                i += 1;
+            }
+            PlanOp::Branch { arms } => {
+                segs.push(Segment::Branch(
+                    arms.iter().map(|a| segment_plan(a, layers)).collect(),
+                ));
+                i += 1;
+            }
+            PlanOp::GlobalAvgPool => {
+                segs.push(Segment::GlobalAvgPool);
+                i += 1;
+            }
+            PlanOp::Fc => {
+                segs.push(Segment::Fc);
+                i += 1;
+            }
+        }
+    }
+    segs
 }
 
 /// Shape state threaded through lowering: (channels, spatial size)
@@ -520,5 +652,75 @@ mod tests {
         let w = weights_for(&net, None);
         let ops = derive_graph(&net, &w).unwrap();
         assert!(pools_of(&ops).iter().any(|p| p.kind == PoolKind::Avg));
+    }
+
+    #[test]
+    fn row_contract_halo_math() {
+        // AlexNet conv1 geometry: k=11, stride=4, pad=0. Output rows
+        // [0, 2) need input rows [0, 15); rows [2, 4) need [8, 23).
+        let c = RowContract { k: 11, stride: 4, pad: 0 };
+        assert_eq!(c.in_span(0, 2, 64), (0, 15));
+        assert_eq!(c.in_span(2, 4, 64), (8, 23));
+        // Padded 3×3 stride-1 conv: the first tile's top halo is
+        // clipped at the image edge, interior tiles reach one row up
+        // and one row down.
+        let c = RowContract { k: 3, stride: 1, pad: 1 };
+        assert_eq!(c.in_span(0, 4, 16), (0, 6));
+        assert_eq!(c.in_span(4, 8, 16), (3, 10));
+        assert_eq!(c.in_span(12, 16, 16), (11, 16)); // bottom clip
+        // Ceil-mode pool window hanging off the input: k=3 s=2 on 8
+        // rows yields 4 windows; the last (rows 6..9) clips to 8.
+        let c = RowContract { k: 3, stride: 2, pad: 0 };
+        assert_eq!(c.in_span(3, 4, 8), (6, 8));
+        // Elementwise: rows map 1:1.
+        assert_eq!(RowContract::elementwise().in_span(5, 9, 16), (5, 9));
+    }
+
+    #[test]
+    fn segment_plan_fuses_conv_relu_pool_chains() {
+        let net = zoo::tiny_cnn();
+        let w = weights_for(&net, Some(4));
+        let ops = derive_graph(&net, &w).unwrap();
+        let segs = segment_plan(&ops, &net.layers);
+        // conv1+relu+pool | conv2+relu+pool | conv3+relu | GAP | Fc.
+        assert_eq!(segs.len(), 5);
+        match (&segs[0], &segs[2]) {
+            (Segment::Fused(a), Segment::Fused(b)) => {
+                assert_eq!(a.len(), 3, "conv absorbs relu and pool");
+                assert_eq!(b.len(), 2, "headless conv absorbs relu only");
+                assert_eq!(a[0].contract, RowContract { k: 3, stride: 1, pad: 1 });
+                assert_eq!(a[1].contract, RowContract::elementwise());
+                assert_eq!(a[2].contract, RowContract { k: 2, stride: 2, pad: 0 });
+            }
+            other => panic!("expected fused segments, got {other:?}"),
+        }
+        assert_eq!(segs[3], Segment::GlobalAvgPool);
+        assert_eq!(segs[4], Segment::Fc);
+    }
+
+    #[test]
+    fn segment_plan_recurses_into_branch_arms() {
+        let net = zoo::inception_module("3a").unwrap();
+        let w = weights_for(&net, None);
+        let ops = derive_graph(&net, &w).unwrap();
+        let segs = segment_plan(&ops, &net.layers);
+        let arms = segs
+            .iter()
+            .find_map(|s| match s {
+                Segment::Branch(arms) => Some(arms),
+                _ => None,
+            })
+            .expect("inception module lowers to a branch");
+        assert_eq!(arms.len(), 4);
+        // Pool-proj arm: a lone pool segment, then conv+relu.
+        let pool_arm = &arms[3];
+        assert_eq!(pool_arm.len(), 2);
+        match &pool_arm[0] {
+            Segment::Fused(stages) => {
+                assert_eq!(stages.len(), 1);
+                assert_eq!(stages[0].contract, RowContract { k: 3, stride: 1, pad: 1 });
+            }
+            other => panic!("expected lone pool segment, got {other:?}"),
+        }
     }
 }

@@ -18,11 +18,18 @@
 //!   *inferred* pooling from spatial-size ratios and could only
 //!   express VGG-style chains.
 //! * [`compiled`] — [`CompiledNetwork`]: kneads every conv filter lane
-//!   and every FC class lane exactly once, at build time, in parallel.
-//! * [`exec`] — the executor: walks the op graph (recursing into
-//!   branch arms and concatenating along channels) and parallelizes
-//!   the conv hot loop over (image, output-row) stripes with
-//!   `util::pool::par_map`, preserving deterministic output order.
+//!   and every FC class lane exactly once, at build time, in parallel;
+//!   records the tile schedule ([`graph::segment_plan`]) plus a
+//!   peak-bytes estimate serving uses to pick a tile height from a
+//!   memory budget.
+//! * [`exec`] — the tile-scheduled executor: every
+//!   `Conv → ReluRequant [→ Pool]` segment runs as one fused walk over
+//!   (image, row-tile) stripes through ring buffers holding only each
+//!   tile's live rows ([`graph::RowContract`] halo math), so the
+//!   conv's full-size pre-pool map never materializes; `Branch` arms
+//!   run concurrently, each handed a slice of the thread budget
+//!   (`util::pool::split_budget`). Output order is deterministic for
+//!   any tile height and any budget.
 //!
 //! Losslessness invariant (DESIGN.md §I5): reusing kneaded lanes across
 //! calls never changes logits — the executor is bit-identical to a
@@ -40,5 +47,6 @@ pub mod compiled;
 pub mod exec;
 pub mod graph;
 
-pub use compiled::{CompiledConv, CompiledFc, CompiledNetwork};
-pub use graph::{derive_graph, PlanOp};
+pub use compiled::{CompiledConv, CompiledFc, CompiledNetwork, DEFAULT_TILE_ROWS};
+pub use exec::{AllocStats, ExecOpts};
+pub use graph::{derive_graph, segment_plan, FusedStage, PlanOp, RowContract, Segment};

@@ -5,14 +5,16 @@
 //! `XlaComputation::from_proto` → `client.compile` → `execute`.
 //!
 //! The real client requires the `xla` crate and its XLA C library,
-//! which are unavailable offline — so the whole implementation sits
-//! behind the `xla` cargo feature. Without it this module compiles to a
-//! typed stub with the identical API whose constructors return
+//! which are unavailable offline — so the real implementation sits
+//! behind `xla` **and** `xla-vendored` together (see `Cargo.toml`).
+//! Any other combination — including `--features xla` alone, which
+//! CI's feature-matrix job builds — compiles this module to a typed
+//! stub with the identical API whose constructors return
 //! [`crate::Error::Xla`]; since [`Engine::cpu`] is the only way to
 //! obtain an `Engine` (and from it a `LoadedModel` or `Literal`), the
 //! remaining stub methods are statically unreachable.
 
-#[cfg(feature = "xla")]
+#[cfg(all(feature = "xla", feature = "xla-vendored"))]
 mod real {
     use std::path::Path;
 
@@ -98,10 +100,10 @@ mod real {
     }
 }
 
-#[cfg(feature = "xla")]
+#[cfg(all(feature = "xla", feature = "xla-vendored"))]
 pub use real::{literal_i32, literal_i8, Engine, LoadedModel};
 
-#[cfg(not(feature = "xla"))]
+#[cfg(not(all(feature = "xla", feature = "xla-vendored")))]
 mod stub {
     use std::path::Path;
 
@@ -112,7 +114,9 @@ mod stub {
 
     fn unavailable() -> crate::Error {
         crate::Error::Xla(
-            "PJRT runtime unavailable: built without the `xla` cargo feature".into(),
+            "PJRT runtime unavailable: built without the `xla` + `xla-vendored` \
+             cargo features (vendor the xla crate to enable the real client)"
+                .into(),
         )
     }
 
@@ -170,7 +174,7 @@ mod stub {
     }
 }
 
-#[cfg(not(feature = "xla"))]
+#[cfg(not(all(feature = "xla", feature = "xla-vendored")))]
 pub use stub::{literal_i32, literal_i8, Engine, LoadedModel};
 
 #[cfg(test)]
@@ -179,14 +183,14 @@ mod tests {
 
     // PJRT runtime tests that need artifacts live in
     // rust/tests/runtime_hlo.rs (integration). Here: client liveness.
-    #[cfg(feature = "xla")]
+    #[cfg(all(feature = "xla", feature = "xla-vendored"))]
     #[test]
     fn cpu_client_starts() {
         let e = Engine::cpu().unwrap();
         assert!(!e.platform().is_empty());
     }
 
-    #[cfg(feature = "xla")]
+    #[cfg(all(feature = "xla", feature = "xla-vendored"))]
     #[test]
     fn missing_hlo_is_artifact_error() {
         let e = Engine::cpu().unwrap();
@@ -196,7 +200,7 @@ mod tests {
         }
     }
 
-    #[cfg(not(feature = "xla"))]
+    #[cfg(not(all(feature = "xla", feature = "xla-vendored")))]
     #[test]
     fn stub_reports_feature_disabled() {
         match Engine::cpu() {

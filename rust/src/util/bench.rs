@@ -1,12 +1,17 @@
 //! Micro-benchmark harness (criterion is unavailable offline).
 //!
 //! Provides warmup, repeated timed samples, outlier-robust statistics and
-//! a human-readable + CSV report. Every `benches/*.rs` target (declared
-//! with `harness = false`) drives this.
+//! a human-readable + CSV + JSON report. Every `benches/*.rs` target
+//! (declared with `harness = false`) drives this. The JSON form
+//! (`--json <path>` after `--`, or `TETRIS_BENCH_JSON=<path>`) feeds
+//! the CI bench-regression gate: `scripts/bench_compare.py` diffs a
+//! fresh report against the committed `BENCH_baseline.json` and fails
+//! on hot-path median regressions beyond tolerance.
 
 use std::hint::black_box;
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats::percentile;
 
 /// One benchmark measurement.
@@ -99,7 +104,11 @@ impl Harness {
             samples.push(t0.elapsed().as_secs_f64());
         }
         samples.sort_by(f64::total_cmp);
-        self.results.push(Measurement { name: name.to_string(), samples_s: samples, metrics: Vec::new() });
+        self.results.push(Measurement {
+            name: name.to_string(),
+            samples_s: samples,
+            metrics: Vec::new(),
+        });
         self.results.last().unwrap()
     }
 
@@ -145,6 +154,73 @@ impl Harness {
                 let kv: Vec<String> =
                     m.metrics.iter().map(|(k, v)| format!("{k}={v:.4}")).collect();
                 println!("{:<44} {}", m.name, kv.join("  "));
+            }
+        }
+    }
+
+    /// Machine-readable report (the `--json` bench output mode): one
+    /// entry per measurement with robust stats plus attached metrics.
+    /// Deterministic key order (BTreeMap-backed objects) keeps diffs
+    /// and baseline comparisons stable.
+    pub fn to_json(&self) -> Json {
+        let results: Vec<Json> = self
+            .results
+            .iter()
+            .map(|m| {
+                Json::obj([
+                    ("name", Json::Str(m.name.clone())),
+                    ("median_s", Json::Num(m.median_s())),
+                    ("p05_s", Json::Num(m.p05_s())),
+                    ("p95_s", Json::Num(m.p95_s())),
+                    ("samples", Json::Num(m.samples_s.len() as f64)),
+                    (
+                        "metrics",
+                        Json::Obj(
+                            m.metrics
+                                .iter()
+                                .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj([
+            ("title", Json::Str(self.title.clone())),
+            ("results", Json::Arr(results)),
+        ])
+    }
+
+    /// Write the JSON report to `path`.
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty() + "\n")
+    }
+
+    /// The JSON sink this bench invocation asked for, if any:
+    /// `cargo bench --bench <name> -- --json <path>` (or
+    /// `--json=<path>`), else the `TETRIS_BENCH_JSON` env var.
+    pub fn json_target() -> Option<std::path::PathBuf> {
+        let mut args = std::env::args().skip(1);
+        while let Some(a) = args.next() {
+            if a == "--json" {
+                if let Some(p) = args.next() {
+                    return Some(p.into());
+                }
+            } else if let Some(p) = a.strip_prefix("--json=") {
+                return Some(p.into());
+            }
+        }
+        std::env::var("TETRIS_BENCH_JSON").ok().map(Into::into)
+    }
+
+    /// Render the human report and honor the `--json` output mode —
+    /// the one-call tail every bench target wants.
+    pub fn emit(&self) {
+        self.report();
+        if let Some(path) = Self::json_target() {
+            match self.write_json(&path) {
+                Ok(()) => eprintln!("bench JSON written to {}", path.display()),
+                Err(e) => eprintln!("bench JSON write to {} failed: {e}", path.display()),
             }
         }
     }
@@ -203,6 +279,33 @@ mod tests {
         h.metric_row("row", vec![("cycles".into(), 123.0)]);
         assert_eq!(h.results()[0].metric("cycles"), Some(123.0));
         assert_eq!(h.results()[0].metric("nope"), None);
+    }
+
+    #[test]
+    fn json_report_carries_stats_and_metrics() {
+        let mut h = Harness::new("json-mode");
+        h.config.warmup = Duration::from_millis(1);
+        h.config.measure = Duration::from_millis(5);
+        h.bench("fast-op", || 1 + 1);
+        h.metric("extra", 2.5);
+        h.metric_row("cycles-row", vec![("cycles".into(), 42.0)]);
+        let j = h.to_json();
+        assert_eq!(j.get("title").as_str(), Some("json-mode"));
+        let results = j.get("results").as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].get("name").as_str(), Some("fast-op"));
+        assert!(results[0].get("median_s").as_f64().unwrap() >= 0.0);
+        assert_eq!(
+            results[0].get("metrics").get("extra").as_f64(),
+            Some(2.5)
+        );
+        assert_eq!(
+            results[1].get("metrics").get("cycles").as_f64(),
+            Some(42.0)
+        );
+        // Round-trips through the parser (what bench_compare.py reads).
+        let text = j.to_string_pretty();
+        assert_eq!(crate::util::json::parse(&text).unwrap(), j);
     }
 
     #[test]

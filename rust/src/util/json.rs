@@ -20,13 +20,21 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-/// Parse error with byte offset for diagnostics.
-#[derive(Debug, thiserror::Error)]
-#[error("JSON parse error at byte {offset}: {msg}")]
+/// Parse error with byte offset for diagnostics (hand-rolled impls —
+/// `thiserror` is unavailable offline, see `rust/Cargo.toml`).
+#[derive(Debug)]
 pub struct ParseError {
     pub offset: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "JSON parse error at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 impl Json {
     // ---------- constructors ----------

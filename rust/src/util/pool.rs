@@ -3,6 +3,13 @@
 //! [`par_map`] fans a slice out over `std::thread::scope` workers with
 //! striped assignment; deterministic output order. Used by the simulators
 //! (per-layer parallelism) and the weight generator.
+//!
+//! Nested fan-out: [`par_map_with`] takes an explicit worker budget and
+//! [`split_budget`] divides one budget across concurrent consumers —
+//! the plan executor runs inception branch arms in parallel, handing
+//! each arm a slice of the session's thread budget so the arms' inner
+//! (image, tile) fan-outs never oversubscribe the host (DESIGN.md
+//! §Tiled fused execution).
 
 /// Number of worker threads to use: `TETRIS_THREADS` env var or the
 /// available parallelism, capped at 16.
@@ -20,11 +27,24 @@ pub fn worker_count() -> usize {
 /// handles items w, w+W, w+2W, …) so no synchronization beyond the scope
 /// join is needed.
 pub fn par_map<T: Sync, R: Send>(items: &[T], f: impl Fn(usize, &T) -> R + Sync) -> Vec<R> {
+    par_map_with(worker_count(), items, f)
+}
+
+/// [`par_map`] with an explicit worker budget instead of the global
+/// [`worker_count`]. Striped assignment is a function of `(workers,
+/// item index)` only, and each item's result is written to its own
+/// slot, so the output is identical for every budget — parallelism
+/// never changes values, only wall time.
+pub fn par_map_with<T: Sync, R: Send>(
+    workers: usize,
+    items: &[T],
+    f: impl Fn(usize, &T) -> R + Sync,
+) -> Vec<R> {
     let n = items.len();
     if n == 0 {
         return Vec::new();
     }
-    let workers = worker_count().min(n);
+    let workers = workers.clamp(1, n);
     if workers <= 1 {
         return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
     }
@@ -66,6 +86,21 @@ impl<T> SendPtr<T> {
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 
+/// Divide a thread budget across `parts` concurrent consumers: every
+/// part gets at least one worker (an idle arm would deadlock a
+/// pipeline), and when the budget covers all parts the slices sum to
+/// exactly `total` — the nested fan-outs collectively stay inside the
+/// budget instead of each claiming all of it.
+pub fn split_budget(total: usize, parts: usize) -> Vec<usize> {
+    if parts == 0 {
+        return Vec::new();
+    }
+    let total = total.max(1);
+    let base = total / parts;
+    let rem = total % parts;
+    (0..parts).map(|i| (base + usize::from(i < rem)).max(1)).collect()
+}
+
 /// Parallel fold: map each item then combine with `merge` (associative).
 pub fn par_fold<T: Sync, R: Send>(
     items: &[T],
@@ -106,5 +141,28 @@ mod tests {
     #[test]
     fn worker_count_positive() {
         assert!(worker_count() >= 1);
+    }
+
+    #[test]
+    fn par_map_with_is_budget_invariant() {
+        let items: Vec<u64> = (0..257).collect();
+        let want: Vec<u64> = items.iter().map(|x| x * 3 + 1).collect();
+        for budget in [1usize, 2, 5, 16, 1000] {
+            assert_eq!(par_map_with(budget, &items, |_, &x| x * 3 + 1), want);
+        }
+        // A zero budget is clamped to one worker, not a panic.
+        assert_eq!(par_map_with(0, &[1u32, 2], |_, &x| x), vec![1, 2]);
+    }
+
+    #[test]
+    fn split_budget_covers_every_part() {
+        assert_eq!(split_budget(8, 4), vec![2, 2, 2, 2]);
+        assert_eq!(split_budget(10, 4), vec![3, 3, 2, 2]);
+        // Budget smaller than the part count: everyone still gets one.
+        assert_eq!(split_budget(2, 4), vec![1, 1, 1, 1]);
+        assert_eq!(split_budget(0, 3), vec![1, 1, 1]);
+        assert!(split_budget(5, 0).is_empty());
+        // Exact split preserves the total when it covers all parts.
+        assert_eq!(split_budget(16, 4).iter().sum::<usize>(), 16);
     }
 }

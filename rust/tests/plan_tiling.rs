@@ -1,0 +1,255 @@
+//! ISSUE 3 tentpole tests: the tiled fused executor — row-tile walks
+//! with halo rings over `Conv → ReluRequant [→ Pool]` segments, and
+//! branch arms running under split thread budgets — is bit-identical
+//! to the naive scalar MAC interpreter (`model::reference`) for every
+//! tile height, every thread budget, and the materializing baseline.
+//! This extends DESIGN.md invariant I5 over tilings.
+//!
+//! Edge cases pinned here: tile heights that do not divide the output
+//! rows, AlexNet-conv1-style k=11 stride-4 halos, ceil-mode pool
+//! windows straddling a tile boundary, and the peak-allocation claim
+//! that the fused walk allocates less than the materializing path.
+
+use tetris::config::Mode;
+use tetris::model::reference::forward_reference;
+use tetris::model::weights::{synthetic_loaded, DensityCalibration};
+use tetris::model::{
+    zoo, ConvLayer, LoadedLayer, LoadedWeights, Network, PoolSpec, Tensor, TopoOp,
+};
+use tetris::plan::{CompiledNetwork, ExecOpts};
+use tetris::util::prop::gen;
+use tetris::util::rng::Rng;
+
+fn random_input(net: &Network, n: usize, hw: usize, rng: &mut Rng) -> Tensor<i32> {
+    let mut x = Tensor::zeros(&[n, net.layers[0].in_c, hw, hw]);
+    for v in x.data_mut() {
+        *v = rng.range_i64(-512, 512) as i32;
+    }
+    x
+}
+
+fn random_weights(net: &Network, mode: Mode, rng: &mut Rng) -> LoadedWeights {
+    let bits = mode.weight_bits() as u32;
+    let layers = net
+        .layers
+        .iter()
+        .map(|l| LoadedLayer {
+            name: l.name.clone(),
+            shape: [l.out_c, l.in_c, l.k, l.k],
+            frac_bits: [0u32, 6, 8, 10][rng.below(4) as usize],
+            weights: (0..l.weight_count()).map(|_| gen::weight(rng, bits)).collect(),
+        })
+        .collect();
+    LoadedWeights { mode, layers }
+}
+
+/// Assert `plan` matches `want` for a sweep of tile heights and thread
+/// budgets, plus the materializing baseline and the default path.
+fn assert_tile_invariant(
+    plan: &CompiledNetwork,
+    x: &Tensor<i32>,
+    want: &Tensor<i32>,
+    tiles: &[usize],
+    label: &str,
+) {
+    for &tile in tiles {
+        for workers in [1usize, 4] {
+            let got = plan
+                .execute_opts(x, ExecOpts::tiled(tile).with_workers(workers))
+                .unwrap();
+            assert_eq!(&got, want, "{label}: tile={tile} workers={workers}");
+        }
+    }
+    let mat = plan.execute_opts(x, ExecOpts::materializing()).unwrap();
+    assert_eq!(&mat, want, "{label}: materializing baseline");
+    let dflt = plan.execute(x).unwrap();
+    assert_eq!(&dflt, want, "{label}: default adaptive path");
+}
+
+// ---------- ISSUE 3 acceptance: the whole zoo through the tiled walk ----------
+
+/// Every network of the paper's evaluation, channel-scaled, runs
+/// bit-exact through the tiled fused executor across tile heights
+/// (dividing and non-dividing), the materializing baseline, and
+/// different thread budgets — all against one naive-reference output.
+#[test]
+fn full_zoo_bit_exact_across_tile_heights_and_budgets() {
+    let cases: [(Network, &str, usize); 5] = [
+        (zoo::alexnet().scaled(16, 64), "alexnet", 64),
+        (zoo::googlenet().scaled(16, 64), "googlenet", 64),
+        (zoo::vgg16().scaled(16, 32), "vgg16", 32),
+        (zoo::vgg19().scaled(16, 32), "vgg19", 32),
+        (zoo::nin().scaled(16, 64), "nin", 64),
+    ];
+    for (net, profile, hw) in cases {
+        let w = synthetic_loaded(&net, Mode::Fp16, 12, profile, DensityCalibration::Fig2, 0x7117)
+            .unwrap();
+        let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+        let mut rng = Rng::new(31);
+        let x = random_input(&net, 1, hw, &mut rng);
+        let want = forward_reference(&net, &w, &x);
+        assert_tile_invariant(&plan, &x, &want, &[1, 5], &net.name);
+    }
+}
+
+// ---------- satellite: tile edge cases ----------
+
+fn conv(
+    name: &str,
+    in_c: usize,
+    out_c: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    in_hw: usize,
+) -> ConvLayer {
+    ConvLayer { name: name.into(), in_c, out_c, k, stride, pad, in_hw }
+}
+
+/// Tile heights that do not divide the segment's output rows: conv
+/// (k3 p1, 15→15) into a 3×3 stride-2 pool (15→7, odd) — tiles of 2
+/// and 3 leave a short last tile, and every height must agree.
+#[test]
+fn tile_height_not_dividing_output_rows() {
+    let net = Network::with_schedule(
+        "odd_rows",
+        vec![conv("c1", 2, 3, 3, 1, 1, 15), conv("c2", 3, 2, 3, 1, 1, 7)],
+        vec![
+            TopoOp::Conv(0),
+            TopoOp::Pool(PoolSpec::max(3, 2, 0)), // 15 → 7
+            TopoOp::Conv(1),
+        ],
+    );
+    for seed in [1u64, 2] {
+        let mut rng = Rng::new(0x0DD ^ seed);
+        let w = random_weights(&net, Mode::Fp16, &mut rng);
+        let x = random_input(&net, 2, 15, &mut rng);
+        let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+        let want = forward_reference(&net, &w, &x);
+        assert_tile_invariant(&plan, &x, &want, &[1, 2, 3, 4, 6, 7, 100], "odd_rows");
+    }
+}
+
+/// AlexNet-conv1 geometry: k=11 stride-4 halos. A 2-row tile needs a
+/// 15-row input span and adjacent tiles' spans overlap by 7 rows —
+/// the widest halo in the zoo, all recomputed per tile.
+#[test]
+fn k11_stride4_halos_match_reference() {
+    let net = Network::with_schedule(
+        "wide_halo",
+        vec![conv("c1", 1, 4, 11, 4, 0, 35)],
+        vec![TopoOp::Conv(0)], // 35 → 7 output rows
+    );
+    for seed in [1u64, 2] {
+        let mut rng = Rng::new(0xA1E ^ seed);
+        let w = random_weights(&net, Mode::Fp16, &mut rng);
+        let x = random_input(&net, 2, 35, &mut rng);
+        let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+        let want = forward_reference(&net, &w, &x);
+        assert_tile_invariant(&plan, &x, &want, &[1, 2, 3, 5, 7], "wide_halo");
+    }
+}
+
+/// Ceil-mode pool windows straddling a tile boundary: k=3 stride-2 on
+/// 8 rows yields 4 output rows, the last window (rows 6..9) clipped to
+/// the input. A 3-row tile puts that clipped window alone in the
+/// second tile; every split must agree with the reference.
+#[test]
+fn ceil_mode_pool_window_straddles_tile_boundary() {
+    let net = Network::with_schedule(
+        "ceil_straddle",
+        vec![conv("c1", 2, 3, 3, 1, 1, 8)],
+        vec![
+            TopoOp::Conv(0),
+            TopoOp::Pool(PoolSpec::max(3, 2, 0)), // 8 → 4, last window clipped
+        ],
+    );
+    for seed in [1u64, 2] {
+        let mut rng = Rng::new(0xCE1 ^ seed);
+        let w = random_weights(&net, Mode::Fp16, &mut rng);
+        let x = random_input(&net, 2, 8, &mut rng);
+        let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+        let want = forward_reference(&net, &w, &x);
+        assert_tile_invariant(&plan, &x, &want, &[1, 2, 3, 4], "ceil_straddle");
+    }
+}
+
+/// Average pools take the same tiled path as max pools — floor
+/// division over in-bounds taps must survive tiling too.
+#[test]
+fn avg_pool_tiles_match_reference() {
+    let net = Network::with_schedule(
+        "avg_tiled",
+        vec![conv("c1", 2, 3, 3, 1, 1, 9)],
+        vec![
+            TopoOp::Conv(0),
+            TopoOp::Pool(PoolSpec::avg(3, 2, 1)), // padded avg, 9 → 5
+        ],
+    );
+    let mut rng = Rng::new(0xAF6);
+    let w = random_weights(&net, Mode::Fp16, &mut rng);
+    let x = random_input(&net, 2, 9, &mut rng);
+    let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+    let want = forward_reference(&net, &w, &x);
+    assert_tile_invariant(&plan, &x, &want, &[1, 2, 3, 5], "avg_tiled");
+}
+
+// ---------- satellite: peak-allocation counter ----------
+
+/// The point of the fusion: the conv's full-size pre-pool map never
+/// materializes, so the tiled walk's measured peak feature-map bytes
+/// stay strictly below the materializing baseline's — on a
+/// conv→pool segment whose conv output dominates.
+#[test]
+fn fused_walk_allocates_less_than_materializing_path() {
+    let net = Network::with_schedule(
+        "peak_probe",
+        vec![conv("c1", 4, 16, 3, 1, 1, 32)],
+        vec![
+            TopoOp::Conv(0),
+            TopoOp::Pool(PoolSpec::max(2, 2, 0)), // 16ch 32×32 map → 16×16
+        ],
+    );
+    let mut rng = Rng::new(0x9EA4);
+    let w = random_weights(&net, Mode::Fp16, &mut rng);
+    let x = random_input(&net, 1, 32, &mut rng);
+    let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+    let (full, peak_full) = plan
+        .execute_traced(&x, ExecOpts::materializing().with_workers(1))
+        .unwrap();
+    let (tiled, peak_tiled) = plan
+        .execute_traced(&x, ExecOpts::tiled(2).with_workers(1))
+        .unwrap();
+    assert_eq!(full, tiled, "peak probe paths diverged");
+    assert!(
+        peak_tiled < peak_full,
+        "fused peak {peak_tiled} not below materializing peak {peak_full}"
+    );
+    // The compile-time estimate agrees on the direction (it is the
+    // knob tile_rows_for_budget turns).
+    assert!(plan.peak_bytes_estimate(2, 1) < plan.peak_bytes_estimate(0, 1));
+}
+
+// ---------- satellite: arm-level parallelism ----------
+
+/// Branch arms run concurrently under split budgets; logits must be
+/// identical for any budget × tile-height combination — the nested
+/// fan-out only moves wall time.
+#[test]
+fn branch_arm_budgets_never_change_outputs() {
+    let net = zoo::inception_module("3a").unwrap().scaled(8, 8);
+    let w = synthetic_loaded(&net, Mode::Fp16, 12, "googlenet", DensityCalibration::Fig2, 77)
+        .unwrap();
+    let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+    let mut rng = Rng::new(5);
+    let x = random_input(&net, 2, 8, &mut rng);
+    let want = forward_reference(&net, &w, &x);
+    for workers in [1usize, 2, 3, 5, 16] {
+        for tile in [1usize, 2, 0] {
+            let got = plan
+                .execute_opts(&x, ExecOpts::tiled(tile).with_workers(workers))
+                .unwrap();
+            assert_eq!(got, want, "workers={workers} tile={tile}");
+        }
+    }
+}

@@ -1,0 +1,116 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: diff a fresh hot-path bench JSON against the
+committed baseline and fail on median regressions beyond tolerance.
+
+Usage:
+    scripts/bench_compare.py BASELINE.json FRESH.json [--tolerance 0.30]
+
+Both files are `util::bench::Harness` JSON reports
+(`cargo bench --bench hotpath -- --json <path>`). The baseline may
+additionally carry:
+
+    "provisional": true   # bootstrap mode: report, never fail
+    "tolerance": 0.30     # default tolerance (CLI flag overrides)
+
+Rules, per baseline entry with a positive median (metric-only rows have
+median 0 and are skipped):
+
+  * fresh median  >  baseline * (1 + tolerance)  ->  REGRESSION (fails)
+  * entry missing from the fresh report          ->  MISSING    (fails)
+  * fresh-only entries                           ->  listed as new, pass
+
+Exit codes: 0 ok / 1 regressions or missing entries / 2 usage or parse
+errors. Timing gates are inherently noisy — the tolerance is the knob;
+keep it generous (>=0.25) for shared CI runners.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_report(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench_compare: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+    results = doc.get("results")
+    if not isinstance(results, list):
+        print(f"bench_compare: {path} has no 'results' array", file=sys.stderr)
+        sys.exit(2)
+    medians = {}
+    for entry in results:
+        name = entry.get("name")
+        median = entry.get("median_s")
+        if isinstance(name, str) and isinstance(median, (int, float)):
+            medians[name] = float(median)
+    return doc, medians
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=None,
+        help="allowed fractional slowdown (default: baseline's "
+        "'tolerance' field, else 0.30)",
+    )
+    args = ap.parse_args()
+
+    base_doc, base = load_report(args.baseline)
+    _, fresh = load_report(args.fresh)
+    provisional = bool(base_doc.get("provisional", False))
+    tolerance = args.tolerance
+    if tolerance is None:
+        tolerance = float(base_doc.get("tolerance", 0.30))
+
+    timed = {n: m for n, m in base.items() if m > 0.0}
+    regressions, missing, ok = [], [], []
+    for name, base_median in sorted(timed.items()):
+        if name not in fresh:
+            missing.append(name)
+            continue
+        fresh_median = fresh[name]
+        ratio = fresh_median / base_median if base_median else float("inf")
+        line = f"{name:<48} base {base_median * 1e3:9.3f} ms  fresh {fresh_median * 1e3:9.3f} ms  x{ratio:5.2f}"
+        if fresh_median > base_median * (1.0 + tolerance):
+            regressions.append(line)
+        else:
+            ok.append(line)
+
+    new = sorted(n for n, m in fresh.items() if m > 0.0 and n not in timed)
+
+    print(f"bench_compare: {len(timed)} baseline entries, tolerance {tolerance:.0%}" + (" (provisional baseline: never fails)" if provisional else ""))
+    for line in ok:
+        print(f"  ok          {line}")
+    for line in regressions:
+        print(f"  REGRESSION  {line}")
+    for name in missing:
+        print(f"  MISSING     {name} (in baseline, absent from fresh run)")
+    for name in new:
+        print(f"  new         {name} (no baseline yet)")
+
+    if not timed:
+        print(
+            "bench_compare: baseline has no timed entries yet — populate it "
+            "from a trusted runner:\n  cd rust && cargo bench --bench hotpath "
+            "-- --json ../BENCH_baseline.json\nthen set \"provisional\": false."
+        )
+
+    if (regressions or missing) and not provisional:
+        print(
+            f"bench_compare: FAIL — {len(regressions)} regression(s), "
+            f"{len(missing)} missing hot path(s)",
+            file=sys.stderr,
+        )
+        sys.exit(1)
+    print("bench_compare: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -37,4 +37,11 @@ else
     echo "== clippy unavailable — skipped =="
 fi
 
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check =="
+    cargo fmt --all -- --check
+else
+    echo "== rustfmt unavailable — skipped =="
+fi
+
 echo "verify OK"
