@@ -21,10 +21,8 @@
 use std::time::Duration;
 
 use tetris::config::{AccelConfig, CalibConfig};
-use tetris::coordinator::{
-    BatchPolicy, InferBackend, InferRequest, SacBackend, Server, ServerConfig,
-};
-use tetris::model::{zoo, Tensor};
+use tetris::coordinator::{InferBackend, SacBackend};
+use tetris::model::zoo;
 use tetris::runtime::{ArtifactDir, Engine};
 use tetris::sim::{dadn::DadnSim, sample::samples_from_loaded, simulate_network_with_samples};
 use tetris::util::cli::Args;
@@ -55,30 +53,32 @@ fn main() {
         report.golden_max_abs_err, report.sac_kernel_exact, report.quantized_exact
     );
 
-    // ---- Stage 2: serve a batched load on the SAC backend. ----
-    println!("\n== stage 2: batched serving (kneaded-SAC backend, 2 workers) ==");
+    // ---- Stage 2: serve a batched load through the engine. ----
+    println!("\n== stage 2: batched serving (engine, kneaded-SAC backend, 2 workers) ==");
     let weights = artifacts.load_weights().expect("weights");
-    let server = Server::start_shared(
-        ServerConfig {
-            policy: BatchPolicy { max_batch, max_wait: Duration::from_millis(1) },
-            workers: 2,
-        },
-        SacBackend::new(weights.clone()).expect("backend"),
-    )
-    .expect("server");
+    let serving = tetris::engine::Engine::builder()
+        .workers(2)
+        .max_batch(max_batch)
+        .max_wait(Duration::from_millis(1))
+        .register("tiny", zoo::tiny_cnn(), weights.clone())
+        .build()
+        .expect("engine");
+    let session = serving.session();
 
     let mut rng = Rng::new(seed);
     let mut images = Vec::new();
     let mut true_classes = Vec::new();
-    for id in 0..requests as u64 {
+    let mut tickets = Vec::new();
+    for _ in 0..requests {
         let (t, class) = tetris::coordinator::demo::dataset_image(&mut rng);
         images.push(t.clone());
         true_classes.push(class);
-        server.submit(InferRequest::new(id, t)).expect("submit");
+        tickets.push(session.submit("tiny", t).expect("submit"));
     }
-    let mut responses: Vec<_> = (0..requests).map(|_| server.recv().expect("recv")).collect();
+    let mut responses: Vec<_> =
+        tickets.iter().map(|t| session.wait(t).expect("wait")).collect();
     responses.sort_by_key(|r| r.id);
-    let metrics = server.shutdown();
+    let metrics = serving.shutdown();
     println!("{}", metrics.render());
     let correct = responses
         .iter()

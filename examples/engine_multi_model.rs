@@ -1,0 +1,93 @@
+//! Multi-model sessions: register several networks in ONE engine —
+//! compiled once each — and serve them concurrently from one shared
+//! worker pool through the uniform submit/poll surface.
+//!
+//! Run: `cargo run --release --example engine_multi_model`
+
+use std::time::Duration;
+
+use tetris::config::Mode;
+use tetris::coordinator::demo::synthetic_image_shaped as noise;
+use tetris::coordinator::SacBackend;
+use tetris::engine::Engine;
+use tetris::model::weights::{synthetic_loaded, DensityCalibration};
+use tetris::model::zoo;
+use tetris::util::rng::Rng;
+
+fn main() {
+    // Three models, three shapes: the tiny CNN, a channel-scaled NiN
+    // (global-average head → 1000/16 classes), and a scaled GoogleNet
+    // inception module (branching topology).
+    let nin = zoo::nin().scaled(16, 64);
+    let inception = zoo::inception_module("3a").expect("module").scaled(8, 16);
+    let nin_w = synthetic_loaded(&nin, Mode::Fp16, 10, "nin", DensityCalibration::Fig2, 3)
+        .expect("nin weights");
+    let inc_w =
+        synthetic_loaded(&inception, Mode::Fp16, 10, "googlenet", DensityCalibration::Fig2, 4)
+            .expect("inception weights");
+
+    let engine = Engine::builder()
+        .workers(4)
+        .max_batch(8)
+        .max_wait(Duration::from_micros(500))
+        .register("tiny", zoo::tiny_cnn(), SacBackend::synthetic_weights(1).expect("w"))
+        .register("nin", nin.clone(), nin_w)
+        .register("inception_3a", inception.clone(), inc_w)
+        .build()
+        .expect("engine");
+
+    for m in engine.models() {
+        let plan = m.plan().expect("sac");
+        println!(
+            "registered `{}` [{}]: {} lanes kneaded once, {} kneaded weights resident, \
+             tile height {}, {} sim cycles/image",
+            m.name(),
+            m.backend(),
+            plan.kneads_at_build,
+            plan.kneaded_weights(),
+            plan.tile_rows,
+            m.cycles_per_image(),
+        );
+    }
+
+    // Interleave submissions across all three models from one session.
+    let session = engine.session();
+    let mut rng = Rng::new(9);
+    let mut tickets = Vec::new();
+    for i in 0..24 {
+        let ticket = match i % 3 {
+            0 => session.submit("tiny", noise(&mut rng, 1, 16)),
+            1 => session.submit("nin", noise(&mut rng, nin.layers[0].in_c, 64)),
+            _ => session
+                .submit("inception_3a", noise(&mut rng, inception.layers[0].in_c, 16)),
+        }
+        .expect("submit");
+        tickets.push(ticket);
+    }
+
+    // Poll a bit (non-blocking), then wait out the rest.
+    let mut done = 0usize;
+    while done < tickets.len() {
+        let mut progressed = false;
+        for t in &tickets {
+            if let Some(resp) = session.poll(t).expect("poll") {
+                println!(
+                    "ticket (model {}, id {:>2}): {} logits, class {}, {:.0} µs",
+                    t.model,
+                    t.id,
+                    resp.logits.len(),
+                    resp.argmax,
+                    resp.latency_us
+                );
+                done += 1;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    let metrics = engine.shutdown();
+    println!("{}", metrics.render());
+}

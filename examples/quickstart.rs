@@ -1,49 +1,76 @@
-//! Quickstart: weight kneading + SAC in five minutes.
+//! Quickstart: the engine façade in five minutes.
 //!
-//! Builds a synaptic lane, kneads it, runs split-and-accumulate, and
-//! shows (1) the partial sum is bit-exactly the MAC result and (2) the
-//! cycle count shrinks by the kneading ratio.
+//! Builds a serving [`Engine`] — typed options, one registered model,
+//! compiled (kneaded) exactly once — then submits images through an
+//! [`InferSession`] and shows
+//!
+//!   1. the uniform submit/wait surface and its serving metrics
+//!      (exact p50/p95/p99 latency percentiles);
+//!   2. the compile-once plan behind it: kneaded footprint and the
+//!      kneading compression ratio the accelerator exploits;
+//!   3. bit-exactness: engine-served logits equal the legacy
+//!      re-knead-per-call scalar pipeline (invariant I5).
+//!
+//! [`Engine`]: tetris::engine::Engine
+//! [`InferSession`]: tetris::engine::InferSession
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use tetris::config::Mode;
-use tetris::kneading::{knead_lane, Lane};
-use tetris::model::weights::{profile_with, DensityCalibration};
-use tetris::sac::SacUnit;
+use tetris::coordinator::demo::synthetic_image;
+use tetris::coordinator::SacBackend;
+use tetris::engine::Engine;
+use tetris::model::{zoo, Tensor};
+use tetris::runtime::quantized;
 use tetris::util::rng::Rng;
 
 fn main() {
-    let mut rng = Rng::new(42);
+    // One typed builder call configures what used to be scattered
+    // across env vars and raw handles.
+    let weights = SacBackend::synthetic_weights(42).expect("weights");
+    let engine = Engine::builder()
+        .workers(2)
+        .mem_budget_mb(128)
+        .max_batch(8)
+        .register("tiny", zoo::tiny_cnn(), weights.clone())
+        .build()
+        .expect("engine");
+    let session = engine.session();
 
-    // A lane: 64 (weight, activation) pairs like one conv reduction.
-    let profile = profile_with("vgg16", Mode::Fp16, DensityCalibration::Fig2).unwrap();
-    let weights = profile.generate(64, &mut rng);
-    let acts: Vec<i32> = (0..64).map(|_| rng.below(1 << 12) as i32).collect();
-    let lane = Lane::new(weights, acts);
+    // Submit a small batch and wait for ordered results.
+    let mut rng = Rng::new(7);
+    let images: Vec<Tensor<i32>> = (0..8).map(|_| synthetic_image(&mut rng)).collect();
+    let responses = session.infer_batch("tiny", &images).expect("infer");
+    for (i, r) in responses.iter().enumerate() {
+        println!(
+            "image {i}: class {} (logits {:?}, batch of {})",
+            r.argmax, r.logits, r.batch_size
+        );
+    }
 
-    // The accelerator's view: knead with stride 16 (the paper default).
-    let kneaded = knead_lane(&lane, 16, Mode::Fp16);
-    println!("lane weights:          {}", lane.len());
-    println!("kneaded weights:       {}", kneaded.kneaded_len());
+    // The compile-once plan behind the model registry.
+    let meta = &engine.models()[0];
+    let plan = meta.plan().expect("sac model");
     println!(
-        "kneading ratio:        {:.2}x  (cycles saved: {:.0}%)",
-        kneaded.ratio().unwrap(),
-        (1.0 - kneaded.kneaded_len() as f64 / lane.len() as f64) * 100.0
+        "model `{}` [{}]: {} source weights kneaded once into {} ({:.2}x compression), \
+         fused tile height {}",
+        meta.name(),
+        meta.backend(),
+        plan.source_weights(),
+        plan.kneaded_weights(),
+        plan.source_weights() as f64 / plan.kneaded_weights() as f64,
+        plan.tile_rows,
     );
 
-    // SAC: splitters route activations to segment adders; one rear
-    // shift-and-add finishes the partial sum.
-    let mut unit = SacUnit::new(Mode::Fp16);
-    let sac = unit.process_kneaded(&kneaded, &lane);
-    let mac = lane.mac_reference();
-    println!("SAC partial sum:       {sac}");
-    println!("MAC reference:         {mac}");
-    assert_eq!(sac, mac, "SAC must equal MAC bit-exactly");
-    println!("bit-exact:             true");
+    // Bit-exactness vs the legacy scalar pipeline (SAC ≡ MAC).
+    for (img, resp) in images.iter().zip(&responses) {
+        let mut x = img.clone();
+        let s = x.shape().to_vec();
+        x.reshape(&[1, s[0], s[1], s[2]]).expect("reshape");
+        let want = quantized::forward_scalar(&weights, &x).expect("scalar");
+        assert_eq!(resp.logits[..], want.data()[..], "engine must be bit-exact");
+    }
+    println!("bit-exact vs legacy scalar pipeline: true");
 
-    let a = unit.activity();
-    println!(
-        "activity: {} kneaded weights, {} segment adds, {} slot decodes, {} tree drain(s)",
-        a.kneaded_weights, a.segment_adds, a.slot_decodes, a.tree_drains
-    );
+    let metrics = engine.shutdown();
+    println!("{}", metrics.render());
 }

@@ -1,12 +1,14 @@
-//! Serving-load example: drive the coordinator with an open-loop
-//! arrival process and study batching behaviour under load.
+//! Serving-load example: drive the engine with an open-loop arrival
+//! process and study batching behaviour under load.
 //!
 //! Run: `cargo run --release --example serve -- --rps 2000 --seconds 3`
 
+use std::sync::mpsc::channel;
 use std::time::{Duration, Instant};
 
-use tetris::coordinator::{BatchPolicy, InferRequest, SacBackend, Server, ServerConfig};
-use tetris::model::Tensor;
+use tetris::coordinator::SacBackend;
+use tetris::engine::Engine;
+use tetris::model::{zoo, Tensor};
 use tetris::util::cli::Args;
 use tetris::util::rng::Rng;
 
@@ -36,33 +38,36 @@ fn main() {
          {workers} workers, weights: {}",
         if use_artifacts { "trained" } else { "synthetic" }
     );
-    // Compile the plan once; every worker clones the shared backend,
-    // so startup kneading is paid once regardless of `--workers`.
-    let prototype = if use_artifacts {
-        SacBackend::new(
-            tetris::model::read_weight_file(std::path::Path::new("artifacts/weights.bin"))
-                .expect("weights"),
-        )
-        .expect("backend")
+    // The engine compiles (kneads) the registered model once; every
+    // worker shares the plan, so startup cost ignores `--workers`.
+    let weights = if use_artifacts {
+        tetris::model::read_weight_file(std::path::Path::new("artifacts/weights.bin"))
+            .expect("weights")
     } else {
-        SacBackend::synthetic(0xACC).expect("backend")
+        SacBackend::synthetic_weights(0xACC).expect("weights")
     };
-    let server = Server::start_shared(
-        ServerConfig { policy: BatchPolicy { max_batch, max_wait }, workers },
-        prototype,
-    )
-    .expect("server");
+    let engine = Engine::builder()
+        .workers(workers)
+        .max_batch(max_batch)
+        .max_wait(max_wait)
+        .register("tiny", zoo::tiny_cnn(), weights)
+        .build()
+        .expect("engine");
+    let session = engine.session();
 
-    // Open loop: submit on schedule from this thread, drain from a
-    // consumer thread so response backpressure never throttles arrivals.
+    // Open loop: submit on schedule from this thread, redeem tickets
+    // from a consumer thread so response backpressure never throttles
+    // arrivals. Sessions clone cheaply and share the ticket store.
     let total = (rps * seconds) as u64;
     let interval = Duration::from_secs_f64(1.0 / rps);
     let start = Instant::now();
+    let (ticket_tx, ticket_rx) = channel();
     std::thread::scope(|scope| {
-        let server_ref = &server;
+        let consumer_session = session.clone();
         let consumer = scope.spawn(move || {
             for _ in 0..total {
-                server_ref.recv().expect("recv");
+                let ticket = ticket_rx.recv().expect("ticket");
+                consumer_session.wait(&ticket).expect("wait");
             }
         });
         let mut rng = Rng::new(seed);
@@ -75,12 +80,12 @@ fn main() {
             for v in t.data_mut() {
                 *v = rng.range_i64(-300, 300) as i32;
             }
-            server_ref.submit(InferRequest::new(id, t)).expect("submit");
+            ticket_tx.send(session.submit("tiny", t).expect("submit")).expect("send");
         }
         consumer.join().expect("consumer");
     });
     let wall = start.elapsed().as_secs_f64();
-    let metrics = server.shutdown();
+    let metrics = engine.shutdown();
     println!("{}", metrics.render());
     println!(
         "offered {rps:.0} req/s → achieved {:.0} req/s over {wall:.2}s",

@@ -10,6 +10,7 @@ use std::time::Duration;
 
 use tetris::config::Mode;
 use tetris::coordinator::{BatchPolicy, InferRequest, SacBackend, Server, ServerConfig};
+use tetris::engine::Engine;
 use tetris::kneading::{knead_group, knead_lane, Lane};
 use tetris::model::reference::forward_reference;
 use tetris::model::weights::{profile_with, synthetic_loaded, DensityCalibration};
@@ -78,7 +79,35 @@ fn main() {
         server.shutdown().requests_done
     });
 
-    // 5. Compile-once plan vs the legacy re-knead-per-call scalar path
+    // 5. Engine façade round trip: same 16-request load through the
+    //    typed builder + session surface (registry lookup + ticket
+    //    store on top of the same core — the overhead under test).
+    h.bench("engine/session-serve-16-requests", || {
+        let engine = Engine::builder()
+            .workers(2)
+            .max_batch(8)
+            .max_wait(Duration::from_micros(200))
+            .register("tiny", zoo::tiny_cnn(), SacBackend::synthetic_weights(1).unwrap())
+            .build()
+            .unwrap();
+        let session = engine.session();
+        let mut r = Rng::new(1);
+        let tickets: Vec<_> = (0..16)
+            .map(|_| {
+                let mut t = Tensor::zeros(&[1, 16, 16]);
+                for v in t.data_mut() {
+                    *v = r.range_i64(-300, 300) as i32;
+                }
+                session.submit("tiny", t).unwrap()
+            })
+            .collect();
+        for t in &tickets {
+            session.wait(t).unwrap();
+        }
+        engine.shutdown().requests_done
+    });
+
+    // 6. Compile-once plan vs the legacy re-knead-per-call scalar path
     //    (ISSUE 1 acceptance: ≥2× on a batch of ≥8 images). Same
     //    weights, same images, same logits — only the execution
     //    strategy differs: the plan kneads every lane once at build and
@@ -123,7 +152,7 @@ fn main() {
         ],
     );
 
-    // 6. A non-tiny zoo topology through the plan executor: VGG-16
+    // 7. A non-tiny zoo topology through the plan executor: VGG-16
     //    block 3, channels ÷8, at 16×16 — compile once, execute many.
     let block = zoo::vgg16_block(3).unwrap().scaled(8, 16);
     let bw = synthetic_loaded(&block, Mode::Fp16, 12, "vgg16", DensityCalibration::Fig2, 11)
@@ -145,7 +174,7 @@ fn main() {
         ],
     );
 
-    // 7. ISSUE 2: the declared-topology executor on the rest of the
+    // 8. ISSUE 2: the declared-topology executor on the rest of the
     //    zoo — scaled AlexNet (3×3 stride-2 pools) and a standalone
     //    inception module (four-arm branch + channel concat) — vs the
     //    plain-MAC scalar reference, bit-exactness asserted first.
@@ -195,7 +224,7 @@ fn main() {
         ],
     );
 
-    // 8. ISSUE 3: the tiled fused walk vs its own materializing
+    // 9. ISSUE 3: the tiled fused walk vs its own materializing
     //    baseline on the same plan — wall time per mode plus the
     //    measured peak feature-map bytes (the memory the fusion is
     //    for). Bit-exactness across tilings is pinned in
@@ -223,7 +252,7 @@ fn main() {
     );
 
     h.emit();
-    if let Ok(dir) = std::env::var("TETRIS_BENCH_CSV") {
-        h.write_csv(std::path::Path::new(&dir).join("hotpath.csv").as_path()).ok();
+    if let Some(dir) = tetris::engine::env::bench_csv_dir() {
+        h.write_csv(dir.join("hotpath.csv").as_path()).ok();
     }
 }

@@ -51,7 +51,7 @@ fn main() {
     });
 
     h.report();
-    if let Ok(dir) = std::env::var("TETRIS_BENCH_CSV") {
-        h.write_csv(std::path::Path::new(&dir).join("table1_bits.csv").as_path()).ok();
+    if let Some(dir) = tetris::engine::env::bench_csv_dir() {
+        h.write_csv(dir.join("table1_bits.csv").as_path()).ok();
     }
 }

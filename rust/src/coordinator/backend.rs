@@ -7,41 +7,32 @@
 //!   lane is kneaded exactly once, up front — so the per-batch serving
 //!   path performs **zero** kneading (pinned by
 //!   `rust/tests/plan_zero_knead.rs`). The plan is held behind an
-//!   [`Arc`], so cloning the backend *shares* it: a server with W
-//!   workers cloning one prototype (see
-//!   [`Server::start_shared`](super::server::Server::start_shared))
-//!   kneads one network total, not W.
-//! * `PjrtBackend` (constructed per-thread via
-//!   [`super::server::Server::serve_with_pjrt`]) — the AOT XLA golden
-//!   model; PJRT handles are thread-pinned.
+//!   [`Arc`], so cloning the backend *shares* it: an engine with W
+//!   workers cloning one prototype kneads one network total, not W.
+//! * [`PjrtBackend`] — the AOT XLA golden model through PJRT. Handles
+//!   are thread-pinned, so each worker constructs its own backend
+//!   (the engine's PJRT lane does exactly that).
 //!
-//! Both also report a *simulated* Tetris cycle cost per batch so the
-//! serving metrics reflect the accelerator, not the host.
+//! Callers should not pick between these by hand: the
+//! [`engine`](crate::engine) façade constructs either behind one
+//! [`BackendKind`](crate::engine::BackendKind) path.
+//!
+//! Both backends also report a *simulated* Tetris cycle cost per batch
+//! so the serving metrics reflect the accelerator, not the host.
 
+use std::path::Path;
 use std::sync::Arc;
 
 use crate::config::{AccelConfig, CalibConfig};
+use crate::engine::env;
 use crate::model::zoo;
 use crate::model::{LoadedWeights, Tensor};
 use crate::plan::CompiledNetwork;
+use crate::runtime::artifacts::ArtifactDir;
+use crate::runtime::pjrt::{Engine as PjrtClient, LoadedModel as PjrtModel};
 use crate::runtime::quantized;
 use crate::sim::{sample::samples_from_loaded, simulate_network_with_samples, tetris::TetrisSim};
 use crate::util::pool::worker_count;
-
-/// Per-worker feature-map memory budget for serving, in bytes:
-/// `TETRIS_MEM_BUDGET_MB` (default 256). Construction-time knob — the
-/// backend turns it into a fused-tile height via
-/// [`CompiledNetwork::tile_rows_for_budget`], so a tighter budget
-/// trades halo recompute for a lower resident peak instead of OOMing.
-fn serving_mem_budget_bytes() -> u64 {
-    std::env::var("TETRIS_MEM_BUDGET_MB")
-        .ok()
-        .and_then(|v| v.parse::<u64>().ok())
-        .unwrap_or(256)
-        .max(1)
-        * 1024
-        * 1024
-}
 
 /// A batch-inference backend.
 pub trait InferBackend {
@@ -54,44 +45,53 @@ pub trait InferBackend {
     fn name(&self) -> &'static str;
 }
 
+/// Simulated Tetris cycles for ONE image of the tiny CNN under the
+/// given weight set's bit statistics — shared by both backends so the
+/// serving metrics stay comparable across them.
+fn tiny_cnn_sim_cycles(weights: &LoadedWeights) -> crate::Result<u64> {
+    let net = zoo::tiny_cnn();
+    let cfg = AccelConfig::default();
+    let calib = CalibConfig::default();
+    let samples = samples_from_loaded(&net, weights)?;
+    Ok(simulate_network_with_samples(&TetrisSim, &net, &samples, &cfg, &calib).total_cycles())
+}
+
 /// Pure-rust kneaded-SAC backend over a compile-once execution plan.
 ///
 /// Cloning is cheap and *shares* the compiled plan (an `Arc`): clones
-/// never re-knead. Hand one prototype to
-/// [`Server::start_shared`](super::server::Server::start_shared) and
-/// every worker streams the same resident lanes.
+/// never re-knead. Hand one prototype to the engine (or the legacy
+/// `Server::start_shared` shim) and every worker streams the same
+/// resident lanes.
 #[derive(Clone)]
 pub struct SacBackend {
     /// Pre-kneaded network — built once, shared by every clone.
     plan: Arc<CompiledNetwork>,
-    /// Pre-simulated Tetris cycles for ONE image of the tiny CNN.
+    /// Pre-simulated Tetris cycles for ONE image.
     cycles_per_image: u64,
 }
 
 impl SacBackend {
     /// Build from loaded weights (tiny-CNN shaped). Kneading happens
-    /// here, once; `infer_batch` only streams the kneaded lanes.
+    /// here, once; `infer_batch` only streams the kneaded lanes. The
+    /// serving tile height comes from the `TETRIS_MEM_BUDGET_MB`
+    /// fallback ([`env::mem_budget_bytes`]) — engine-registered models
+    /// resolve their budget through the typed builder instead.
     pub fn new(weights: LoadedWeights) -> crate::Result<Self> {
-        let net = zoo::tiny_cnn();
-        let cfg = AccelConfig::default();
-        let calib = CalibConfig::default();
-        // Timing from the real weights' bit statistics.
-        let conv_only: Vec<_> = weights
-            .layers
-            .iter()
-            .filter(|l| l.name != "fc")
-            .cloned()
-            .collect();
-        let conv_weights = LoadedWeights { mode: weights.mode, layers: conv_only };
-        let samples = samples_from_loaded(&net, &conv_weights)?;
-        let sim = simulate_network_with_samples(&TetrisSim, &net, &samples, &cfg, &calib);
+        let cycles = tiny_cnn_sim_cycles(&weights)?;
         let mut plan = quantized::compile_tiny_cnn(&weights)?;
         // Serving picks its fused-tile height from the memory budget:
         // the largest tile whose estimated peak (per image, at the
-        // worker fan-out) stays inside TETRIS_MEM_BUDGET_MB.
-        plan.tile_rows = plan.tile_rows_for_budget(serving_mem_budget_bytes(), worker_count());
-        let plan = Arc::new(plan);
-        Ok(Self { plan, cycles_per_image: sim.total_cycles() })
+        // worker fan-out) stays inside the budget.
+        plan.tile_rows = plan.tile_rows_for_budget(env::mem_budget_bytes(), worker_count());
+        Ok(Self::from_parts(Arc::new(plan), cycles))
+    }
+
+    /// Wrap an already-compiled plan (any network, not just the tiny
+    /// CNN) plus its pre-simulated per-image cycle cost — the
+    /// constructor the engine's model registry uses. Performs no
+    /// kneading: the plan was compiled exactly once by the caller.
+    pub fn from_parts(plan: Arc<CompiledNetwork>, cycles_per_image: u64) -> Self {
+        Self { plan, cycles_per_image }
     }
 
     /// Synthetic-weight backend (no artifacts needed — demos/tests).
@@ -143,12 +143,15 @@ impl SacBackend {
 impl InferBackend for SacBackend {
     fn infer_batch(&mut self, images: &Tensor<i32>) -> crate::Result<Vec<Vec<i32>>> {
         // Zero kneading here: the plan streams lanes kneaded at build.
-        let logits = self.plan.execute(images)?;
-        let [n, c] = match *logits.shape() {
-            [n, c] => [n, c],
-            _ => return Err(crate::Error::Shape("logits must be 2-D".into())),
+        let out = self.plan.execute(images)?;
+        let n = match out.shape() {
+            [] => return Err(crate::Error::Shape("scalar plan output".into())),
+            s => s[0],
         };
-        Ok((0..n).map(|i| logits.data()[i * c..(i + 1) * c].to_vec()).collect())
+        // (N, classes) logits for classifier plans; conv-only plans
+        // yield a flattened per-image feature map instead.
+        let per = out.len() / n.max(1);
+        Ok((0..n).map(|i| out.data()[i * per..(i + 1) * per].to_vec()).collect())
     }
 
     fn sim_cycles(&self, n: usize) -> u64 {
@@ -157,6 +160,132 @@ impl InferBackend for SacBackend {
 
     fn name(&self) -> &'static str {
         "sac-rust"
+    }
+}
+
+/// The AOT XLA golden model served through PJRT.
+///
+/// Construct **per worker thread** — PJRT handles are thread-pinned,
+/// so this type is deliberately not `Clone`. The engine's
+/// [`BackendKind::Pjrt`](crate::engine::BackendKind) lane calls
+/// [`PjrtBackend::from_artifacts`] once per worker. The executable was
+/// AOT-lowered at a fixed batch size; incoming batches are chunked and
+/// zero-padded to it. The golden model computes in f32, so logits are
+/// requantized to Q8.8 on the way out — numerically faithful to the
+/// trained model, **not** bit-exact with the integer SAC pipeline.
+pub struct PjrtBackend {
+    /// Keeps the PJRT client alive for the executable's lifetime.
+    _client: PjrtClient,
+    model: PjrtModel,
+    /// AOT input shape, NCHW: `[batch, c, h, w]`.
+    in_shape: [usize; 4],
+    classes: usize,
+    cycles_per_image: u64,
+}
+
+impl PjrtBackend {
+    /// Load + compile `golden_cnn.hlo.txt` from an artifacts
+    /// directory, simulating the per-image cycle cost from the
+    /// directory's trained weights. Errors with [`crate::Error::Xla`]
+    /// when built without the `xla` + `xla-vendored` features, and
+    /// with an artifact error when the directory lacks the AOT
+    /// products.
+    pub fn from_artifacts(dir: &Path) -> crate::Result<Self> {
+        let cycles = tiny_cnn_sim_cycles(&ArtifactDir::open(dir)?.load_weights()?)?;
+        Self::from_artifacts_with_cycles(dir, cycles)
+    }
+
+    /// [`PjrtBackend::from_artifacts`] with a precomputed per-image
+    /// cycle cost — the engine's PJRT lane simulates once at build and
+    /// hands the value to every per-worker construction, so W workers
+    /// pay W executable compiles (unavoidable: handles are
+    /// thread-pinned) but only one weight load + simulation.
+    pub fn from_artifacts_with_cycles(dir: &Path, cycles_per_image: u64) -> crate::Result<Self> {
+        let client = PjrtClient::cpu()?;
+        let art = ArtifactDir::open(dir)?;
+        let model = client.load_hlo_text(&art.path("golden_cnn.hlo.txt"))?;
+        let in_shape: Vec<usize> =
+            art.shape("golden", "input_shape")?.iter().map(|&d| d as usize).collect();
+        let out_shape: Vec<usize> =
+            art.shape("golden", "output_shape")?.iter().map(|&d| d as usize).collect();
+        let in_shape: [usize; 4] = match in_shape[..] {
+            [n, c, h, w] => [n, c, h, w],
+            _ => {
+                return Err(crate::Error::Artifact(format!(
+                    "golden input_shape {in_shape:?} is not NCHW"
+                )))
+            }
+        };
+        let classes = match out_shape[..] {
+            [n, k] if n == in_shape[0] => k,
+            _ => {
+                return Err(crate::Error::Artifact(format!(
+                    "golden output_shape {out_shape:?} does not match batch {}",
+                    in_shape[0]
+                )))
+            }
+        };
+        Ok(Self { _client: client, model, in_shape, classes, cycles_per_image })
+    }
+
+    /// Input channels the executable expects (submission validation).
+    pub fn input_channels(&self) -> usize {
+        self.in_shape[1]
+    }
+
+    /// Input spatial size the executable expects (square).
+    pub fn input_hw(&self) -> usize {
+        self.in_shape[2]
+    }
+}
+
+impl InferBackend for PjrtBackend {
+    fn infer_batch(&mut self, images: &Tensor<i32>) -> crate::Result<Vec<Vec<i32>>> {
+        let (n, c, h, w) = match *images.shape() {
+            [n, c, h, w] => (n, c, h, w),
+            _ => return Err(crate::Error::Shape("batch must be 4-D NCHW".into())),
+        };
+        let [aot_n, ac, ah, aw] = self.in_shape;
+        if (c, h, w) != (ac, ah, aw) {
+            return Err(crate::Error::Shape(format!(
+                "golden model takes {ac}×{ah}×{aw} images, got {c}×{h}×{w}"
+            )));
+        }
+        let plane = c * h * w;
+        let dims: Vec<i64> = self.in_shape.iter().map(|&d| d as i64).collect();
+        let src = images.data();
+        let mut out = Vec::with_capacity(n);
+        // Chunk to the AOT batch, zero-padding the tail chunk.
+        let mut start = 0;
+        while start < n {
+            let m = (n - start).min(aot_n);
+            let mut buf = vec![0f32; aot_n * plane];
+            for (dst, &v) in buf.iter_mut().zip(&src[start * plane..(start + m) * plane]) {
+                *dst = v as f32 / 256.0; // Q8.8 → float
+            }
+            let logits = self.model.run_f32(&[(&buf, &dims)])?;
+            if logits.len() != aot_n * self.classes {
+                return Err(crate::Error::Xla(format!(
+                    "golden model returned {} logits for batch {aot_n}×{}",
+                    logits.len(),
+                    self.classes
+                )));
+            }
+            for row in logits.chunks(self.classes).take(m) {
+                // float → Q8.8
+                out.push(row.iter().map(|&v| (v * 256.0).round() as i32).collect());
+            }
+            start += m;
+        }
+        Ok(out)
+    }
+
+    fn sim_cycles(&self, n: usize) -> u64 {
+        self.cycles_per_image * n as u64
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-xla"
     }
 }
 
@@ -213,7 +342,7 @@ mod tests {
         assert!(rows >= 1);
         assert!(
             b.plan().peak_bytes_estimate(rows, crate::util::pool::worker_count())
-                <= serving_mem_budget_bytes()
+                <= env::mem_budget_bytes()
                 || rows == 1,
             "serving tile height blows the memory budget"
         );
@@ -222,7 +351,7 @@ mod tests {
     #[test]
     fn clones_share_one_compiled_plan() {
         // The clone must alias the prototype's plan, not re-compile it
-        // (what makes `Server::start_shared` knead once for W workers).
+        // (what makes shared serving knead once for W workers).
         let proto = SacBackend::synthetic(4).unwrap();
         let clone = proto.clone();
         assert!(Arc::ptr_eq(&proto.shared_plan(), &clone.shared_plan()));
@@ -230,5 +359,40 @@ mod tests {
         let mut b = clone.clone();
         let img = Tensor::zeros(&[1, 1, 16, 16]);
         assert_eq!(a.infer_batch(&img).unwrap(), b.infer_batch(&img).unwrap());
+    }
+
+    #[test]
+    fn from_parts_wraps_arbitrary_plans() {
+        // A non-tiny network through the generic constructor: logits
+        // rows must match the plan's own execute output.
+        use crate::config::Mode;
+        use crate::model::weights::{synthetic_loaded, DensityCalibration};
+        let net = zoo::nin().scaled(32, 64);
+        let w = synthetic_loaded(&net, Mode::Fp16, 10, "nin", DensityCalibration::Fig2, 5)
+            .unwrap();
+        let plan =
+            Arc::new(CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap());
+        let mut backend = SacBackend::from_parts(Arc::clone(&plan), 1000);
+        let mut x = Tensor::zeros(&[2, net.layers[0].in_c, 64, 64]);
+        for (i, v) in x.data_mut().iter_mut().enumerate() {
+            *v = (i as i32 % 401) - 200;
+        }
+        let rows = backend.infer_batch(&x).unwrap();
+        let want = plan.execute(&x).unwrap();
+        let per = want.len() / 2;
+        assert_eq!(rows.len(), 2);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row[..], want.data()[i * per..(i + 1) * per]);
+        }
+        assert_eq!(backend.sim_cycles(3), 3000);
+    }
+
+    #[cfg(not(all(feature = "xla", feature = "xla-vendored")))]
+    #[test]
+    fn pjrt_backend_reports_missing_runtime() {
+        match PjrtBackend::from_artifacts(Path::new("artifacts")) {
+            Err(crate::Error::Xla(msg)) => assert!(msg.contains("xla"), "{msg}"),
+            other => panic!("expected Xla error, got {:?}", other.map(|_| ())),
+        }
     }
 }

@@ -1,18 +1,24 @@
-//! Synthetic-load demo used by `tetris serve` and the serve example.
+//! Synthetic-load demo used by `tetris serve` and the serve example —
+//! driven entirely through the [`engine`](crate::engine) façade.
 
 use std::time::Duration;
 
 use super::backend::SacBackend;
-use super::batcher::BatchPolicy;
-use super::request::InferRequest;
-use super::server::{Server, ServerConfig};
-use crate::model::{Network, Tensor};
+use crate::config::Mode;
+use crate::engine::Engine;
+use crate::model::weights::{synthetic_loaded, DensityCalibration};
+use crate::model::{zoo, Network, Tensor};
 use crate::util::rng::Rng;
 
 /// Generate a synthetic Q8.8 image for the tiny CNN input shape
 /// (uniform noise — worst case for class agreement).
 pub fn synthetic_image(rng: &mut Rng) -> Tensor<i32> {
-    let mut t = Tensor::zeros(&[1, 16, 16]);
+    synthetic_image_shaped(rng, 1, 16)
+}
+
+/// Synthetic Q8.8 noise image of an arbitrary (C, hw, hw) shape.
+pub fn synthetic_image_shaped(rng: &mut Rng, c: usize, hw: usize) -> Tensor<i32> {
+    let mut t = Tensor::zeros(&[c, hw, hw]);
     for v in t.data_mut() {
         // Q8.8 values in roughly [-1.5, 1.5].
         *v = rng.range_i64(-384, 384) as i32;
@@ -47,59 +53,108 @@ pub fn dataset_image(rng: &mut Rng) -> (Tensor<i32>, usize) {
     (t, class)
 }
 
-/// Run `requests` synthetic requests through the coordinator with the
-/// SAC backend; prints metrics. (`network` is reported for context —
-/// the serving model is the tiny CNN whose weights come from artifacts
-/// if present, else a synthetic profile.)
+/// A channel-scaled copy of a zoo network small enough to serve as the
+/// demo's second registered model (the multi-model path).
+fn scaled_context(network: &Network) -> Network {
+    let hw = if network.name.starts_with("vgg") { 32 } else { 64 };
+    network.scaled(16, hw)
+}
+
+/// Run `requests` synthetic requests through the engine with the SAC
+/// backend; prints metrics (exact latency percentiles included).
+///
+/// The engine registers **two** models when `network` is not the tiny
+/// CNN — the tiny CNN (weights from artifacts if present, else a
+/// synthetic profile) plus a channel-scaled copy of `network` — and
+/// interleaves traffic across both, demonstrating multi-model serving
+/// from one worker pool with one compile per model.
 pub fn run_synthetic_load(
     network: &Network,
     requests: usize,
     max_batch: usize,
+    workers: usize,
     seed: u64,
 ) -> crate::Result<()> {
     let artifacts = std::path::Path::new("artifacts/weights.bin");
     let use_artifacts = artifacts.exists();
-    println!(
-        "serving tiny CNN ({} weights), context network {}, backend sac-rust, workers 2",
-        if use_artifacts { "trained" } else { "synthetic" },
-        network.name
-    );
-    let cfg = ServerConfig {
-        policy: BatchPolicy { max_batch, max_wait: Duration::from_millis(2) },
-        workers: 2,
-    };
-    // Compile (knead) once; both workers clone the shared plan.
-    let prototype = if use_artifacts {
-        SacBackend::new(crate::model::read_weight_file(artifacts)?)?
+    let tiny_weights = if use_artifacts {
+        crate::model::read_weight_file(artifacts)?
     } else {
-        SacBackend::synthetic(0xACC)?
+        SacBackend::synthetic_weights(0xACC)?
     };
-    let server = Server::start_shared(cfg, prototype)?;
+
+    let context =
+        if network.name == "tiny_cnn" { None } else { Some(scaled_context(network)) };
+    let mut builder = Engine::builder()
+        .workers(workers)
+        .max_batch(max_batch)
+        .max_wait(Duration::from_millis(2))
+        .register("tiny", zoo::tiny_cnn(), tiny_weights);
+    if let Some(ctx) = &context {
+        let w = synthetic_loaded(
+            ctx,
+            Mode::Fp16,
+            10,
+            &network.name,
+            DensityCalibration::Fig2,
+            seed,
+        )?;
+        builder = builder.register("context", ctx.clone(), w);
+    }
+    let engine = builder.build()?;
+    let session = engine.session();
+
+    println!(
+        "engine: {} worker(s), models: {}  (tiny weights: {})",
+        engine.workers(),
+        engine
+            .models()
+            .iter()
+            .map(|m| format!("{} [{}]", m.name(), m.backend()))
+            .collect::<Vec<_>>()
+            .join(", "),
+        if use_artifacts { "trained" } else { "synthetic" },
+    );
+
+    // Interleave: every 4th request goes to the context model.
     let mut rng = Rng::new(seed);
-    for id in 0..requests as u64 {
-        server.submit(InferRequest::new(id, synthetic_image(&mut rng)))?;
+    let mut tickets = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let ticket = match &context {
+            Some(ctx) if i % 4 == 3 => {
+                let c = ctx.layers[0].in_c;
+                let hw = ctx.layers[0].in_hw;
+                session.submit("context", synthetic_image_shaped(&mut rng, c, hw))?
+            }
+            _ => session.submit("tiny", synthetic_image(&mut rng))?,
+        };
+        tickets.push(ticket);
     }
     let mut class_counts = [0usize; 16];
-    for _ in 0..requests {
-        let resp = server.recv()?;
-        class_counts[resp.argmax.min(15)] += 1;
+    let tiny_id = session.model_id("tiny").expect("registered above");
+    for ticket in &tickets {
+        let resp = session.wait(ticket)?;
+        if ticket.model == tiny_id {
+            class_counts[resp.argmax.min(15)] += 1;
+        }
     }
-    let metrics = server.shutdown();
+    let metrics = engine.shutdown();
     println!("{}", metrics.render());
-    println!(
-        "class distribution: {:?}",
-        &class_counts[..4]
-    );
+    println!("tiny class distribution: {:?}", &class_counts[..4]);
     Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::zoo;
 
     #[test]
     fn demo_runs_end_to_end() {
-        run_synthetic_load(&zoo::tiny_cnn(), 12, 4, 9).unwrap();
+        run_synthetic_load(&zoo::tiny_cnn(), 12, 4, 2, 9).unwrap();
+    }
+
+    #[test]
+    fn demo_serves_two_models() {
+        run_synthetic_load(&zoo::nin(), 8, 4, 2, 5).unwrap();
     }
 }

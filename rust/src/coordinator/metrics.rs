@@ -1,10 +1,29 @@
-//! Serving metrics: latency histograms, throughput, batch-size stats.
+//! Serving metrics: latency histograms, exact percentiles, throughput,
+//! batch-size stats.
 
 use std::time::Instant;
 
-use crate::util::stats::{LatencyHistogram, Summary};
+use crate::util::stats::{percentile, LatencyHistogram, Summary};
 
-/// Aggregated serving metrics (owned by the server; snapshot to read).
+/// Exact latency percentiles computed from the recorded per-request
+/// latencies (not the power-of-two histogram buckets, whose
+/// [`LatencyHistogram::approx_percentile_us`] upper bounds can be ~2×
+/// off inside a bucket).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyPercentiles {
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+}
+
+/// Latency samples retained for exact percentiles. Below this many
+/// requests the percentiles are exact; past it, reservoir sampling
+/// keeps a uniform sample of everything seen, so percentiles stay
+/// unbiased while memory stays bounded (512 KiB) for the lifetime of
+/// a production engine.
+const LATENCY_SAMPLE_CAP: usize = 65_536;
+
+/// Aggregated serving metrics (owned by the engine; snapshot to read).
 #[derive(Debug, Clone)]
 pub struct Metrics {
     pub latency: LatencyHistogram,
@@ -12,6 +31,15 @@ pub struct Metrics {
     pub requests_done: u64,
     pub batches_done: u64,
     pub sim_cycles_total: u64,
+    /// Per-request wall-clock latencies in µs — the exact-percentile
+    /// source; a uniform reservoir once [`LATENCY_SAMPLE_CAP`] is hit.
+    latencies_us: Vec<f64>,
+    /// Observations offered to the reservoir (= requests recorded).
+    latency_seen: u64,
+    /// xorshift state for reservoir replacement (deterministic seed —
+    /// metrics snapshots stay reproducible under a fixed request
+    /// order).
+    reservoir_rng: u64,
     started: Instant,
 }
 
@@ -29,6 +57,9 @@ impl Metrics {
             requests_done: 0,
             batches_done: 0,
             sim_cycles_total: 0,
+            latencies_us: Vec::new(),
+            latency_seen: 0,
+            reservoir_rng: 0x9E37_79B9_7F4A_7C15,
             started: Instant::now(),
         }
     }
@@ -40,7 +71,45 @@ impl Metrics {
         self.sim_cycles_total += sim_cycles;
         for &l in latencies_us {
             self.latency.record_us(l);
+            self.record_latency_sample(l);
         }
+    }
+
+    /// Algorithm R: keep every sample until the cap, then replace a
+    /// uniformly random slot with probability cap/seen.
+    fn record_latency_sample(&mut self, l: f64) {
+        self.latency_seen += 1;
+        if self.latencies_us.len() < LATENCY_SAMPLE_CAP {
+            self.latencies_us.push(l);
+            return;
+        }
+        // xorshift64* step.
+        let mut x = self.reservoir_rng;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.reservoir_rng = x;
+        let slot = x % self.latency_seen;
+        if (slot as usize) < LATENCY_SAMPLE_CAP {
+            self.latencies_us[slot as usize] = l;
+        }
+    }
+
+    /// p50/p95/p99 over the recorded per-request latencies — exact up
+    /// to [`LATENCY_SAMPLE_CAP`] requests, computed over an unbiased
+    /// uniform reservoir beyond that; `None` before the first
+    /// completion.
+    pub fn latency_percentiles(&self) -> Option<LatencyPercentiles> {
+        if self.latencies_us.is_empty() {
+            return None;
+        }
+        let mut sorted = self.latencies_us.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        Some(LatencyPercentiles {
+            p50_us: percentile(&sorted, 0.50),
+            p95_us: percentile(&sorted, 0.95),
+            p99_us: percentile(&sorted, 0.99),
+        })
     }
 
     /// Requests per second since construction.
@@ -55,17 +124,24 @@ impl Metrics {
 
     /// Human summary block.
     pub fn render(&self) -> String {
+        let pct = match self.latency_percentiles() {
+            Some(p) => format!(
+                "latency: mean {:.1} µs  p50 {:.0} µs  p95 {:.0} µs  p99 {:.0} µs",
+                self.latency.mean_us(),
+                p.p50_us,
+                p.p95_us,
+                p.p99_us
+            ),
+            None => "latency: no completed requests".into(),
+        };
         format!(
             "requests: {}  batches: {}  mean batch: {:.2}\n\
-             latency: mean {:.1} µs  p50 ≤ {:.0} µs  p99 ≤ {:.0} µs\n\
+             {pct}\n\
              host throughput: {:.1} req/s\n\
              simulated Tetris cycles: {} ({:.3} ms @125MHz)",
             self.requests_done,
             self.batches_done,
             self.batch_sizes.mean(),
-            self.latency.mean_us(),
-            self.latency.approx_percentile_us(0.50),
-            self.latency.approx_percentile_us(0.99),
             self.throughput_rps(),
             self.sim_cycles_total,
             self.sim_cycles_total as f64 / 125e6 * 1e3,
@@ -88,5 +164,38 @@ mod tests {
         assert!((m.batch_sizes.mean() - 3.0).abs() < 1e-12);
         assert_eq!(m.latency.count(), 6);
         assert!(m.render().contains("requests: 6"));
+    }
+
+    #[test]
+    fn exact_percentiles_from_recorded_latencies() {
+        let mut m = Metrics::new();
+        assert!(m.latency_percentiles().is_none());
+        assert!(m.render().contains("no completed requests"));
+        // 1..=100 µs, recorded out of order across two batches.
+        let (a, b): (Vec<f64>, Vec<f64>) =
+            (1..=100).map(|i| i as f64).partition(|v| v % 2.0 == 0.0);
+        m.record_batch(a.len(), &a, 10);
+        m.record_batch(b.len(), &b, 10);
+        let p = m.latency_percentiles().unwrap();
+        assert!((p.p50_us - 50.5).abs() < 1e-9, "p50 {}", p.p50_us);
+        assert!((p.p95_us - 95.05).abs() < 1e-9, "p95 {}", p.p95_us);
+        assert!((p.p99_us - 99.01).abs() < 1e-9, "p99 {}", p.p99_us);
+        assert!(p.p50_us <= p.p95_us && p.p95_us <= p.p99_us);
+        assert!(m.render().contains("p95"));
+    }
+
+    #[test]
+    fn latency_reservoir_stays_bounded() {
+        let mut m = Metrics::new();
+        let batch: Vec<f64> = (0..1024).map(|i| i as f64).collect();
+        for _ in 0..80 {
+            m.record_batch(batch.len(), &batch, 1);
+        }
+        assert_eq!(m.requests_done, 80 * 1024);
+        assert!(m.latencies_us.len() <= LATENCY_SAMPLE_CAP);
+        // Percentiles still ordered and inside the observed range.
+        let p = m.latency_percentiles().unwrap();
+        assert!(p.p50_us <= p.p95_us && p.p95_us <= p.p99_us);
+        assert!(p.p99_us <= 1023.0 && p.p50_us >= 0.0);
     }
 }

@@ -1,13 +1,19 @@
-//! Serving coordinator — the L3 request path.
+//! Serving substrate — request types, dynamic batcher, metrics and
+//! backends the [`engine`](crate::engine) façade drives.
 //!
-//! A vLLM-router-shaped engine scaled to this paper's system: requests
-//! enter a queue, the *dynamic batcher* groups them (max batch size or
-//! deadline, whichever first), the *scheduler* dispatches batches to PE
-//! workers, and each worker runs an [`InferBackend`] — either the
-//! AOT-compiled XLA golden model (PJRT) or the pure-rust kneaded-SAC
-//! integer pipeline. A timing model attaches simulated accelerator
-//! latency so the serving metrics reflect the paper's hardware, not the
-//! host CPU.
+//! A vLLM-router-shaped pipeline scaled to this paper's system:
+//! requests enter a queue, the *dynamic batcher* groups them (max batch
+//! size or deadline, whichever first), the dispatcher routes batches to
+//! a shared worker pool, and each worker runs an [`InferBackend`] —
+//! either the pure-rust kneaded-SAC integer pipeline or the
+//! AOT-compiled XLA golden model (PJRT). A timing model attaches
+//! simulated accelerator latency so the serving metrics reflect the
+//! paper's hardware, not the host CPU.
+//!
+//! The routing loop itself lives in the engine
+//! (`engine::serve::EngineCore`, multi-model); [`Server`] remains as a
+//! thin single-model shim over it for the pre-engine API. New code
+//! should use [`Engine::builder`](crate::engine::Engine::builder).
 //!
 //! Python is never on this path: backends consume `artifacts/` products
 //! only.
@@ -19,8 +25,8 @@ pub mod metrics;
 pub mod request;
 pub mod server;
 
-pub use backend::{InferBackend, SacBackend};
+pub use backend::{InferBackend, PjrtBackend, SacBackend};
 pub use batcher::{BatchPolicy, Batcher};
-pub use metrics::Metrics;
+pub use metrics::{LatencyPercentiles, Metrics};
 pub use request::{InferRequest, InferResponse, RequestId};
 pub use server::{Server, ServerConfig};

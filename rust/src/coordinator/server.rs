@@ -1,15 +1,27 @@
-//! The serving loop: request channel → dynamic batcher → worker threads
-//! → response channel.
+//! Legacy single-model serving handle — a thin shim over the engine's
+//! shared core.
+//!
+//! The routing loop (request channel → dynamic batcher → worker pool →
+//! response channel) now lives in `engine::serve::EngineCore`, where it
+//! serves a whole model registry; `Server` wraps a single-lane core to
+//! keep the pre-engine API (and its behavior tests — exactly-once
+//! delivery, value transparency I6) working unchanged.
+//!
+//! **Deprecated surface**: new code should build an
+//! [`Engine`](crate::engine::Engine) via
+//! [`Engine::builder`](crate::engine::Engine::builder) and talk to it
+//! through [`InferSession`](crate::engine::InferSession) — see
+//! DESIGN.md §Engine API for the old-to-new mapping.
 
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+
+use crate::engine::serve::{BackendFactory, Completion, EngineCore, ModelLane};
 
 use super::backend::InferBackend;
-use super::batcher::{BatchPolicy, Batcher};
+use super::batcher::BatchPolicy;
 use super::metrics::Metrics;
 use super::request::{InferRequest, InferResponse};
-use crate::model::Tensor;
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -25,14 +37,14 @@ impl Default for ServerConfig {
     }
 }
 
-/// Handle to a running server: submit requests, receive responses.
+/// Handle to a running single-model server: submit requests, receive
+/// responses. Prefer [`Engine`](crate::engine::Engine) — this type
+/// remains as a compatibility shim over the same serving core.
 pub struct Server {
-    req_tx: Option<Sender<InferRequest>>,
+    core: EngineCore,
     /// Mutex so `recv` takes `&self` and `Server` stays `Sync` (drain
     /// from a different thread than the submitter).
-    resp_rx: Mutex<Receiver<InferResponse>>,
-    metrics: Arc<Mutex<Metrics>>,
-    dispatcher: Option<std::thread::JoinHandle<()>>,
+    resp_rx: Mutex<Receiver<Completion>>,
 }
 
 impl Server {
@@ -59,186 +71,52 @@ impl Server {
         B: InferBackend + 'static,
         F: Fn(usize) -> crate::Result<B> + Send + Sync + 'static,
     {
-        assert!(config.workers > 0);
-        let (req_tx, req_rx) = channel::<InferRequest>();
-        let (resp_tx, resp_rx) = channel::<InferResponse>();
-        let metrics = Arc::new(Mutex::new(Metrics::new()));
-
-        // Worker pool: each worker pulls batches from its own channel.
-        let mut batch_txs = Vec::new();
-        let mut worker_handles = Vec::new();
-        let make_backend = Arc::new(make_backend);
-        for w in 0..config.workers {
-            let (btx, brx) = channel::<Vec<InferRequest>>();
-            batch_txs.push(btx);
-            let resp_tx = resp_tx.clone();
-            let metrics = Arc::clone(&metrics);
-            let make_backend = Arc::clone(&make_backend);
-            worker_handles.push(std::thread::spawn(move || {
-                let mut backend = match make_backend(w) {
-                    Ok(b) => b,
-                    Err(e) => {
-                        eprintln!("worker {w}: backend init failed: {e}");
-                        return;
-                    }
-                };
-                while let Ok(batch) = brx.recv() {
-                    if let Err(e) = run_batch(&mut backend, batch, &resp_tx, &metrics) {
-                        eprintln!("worker {w}: batch failed: {e}");
-                    }
-                }
-            }));
-        }
-
-        // Dispatcher: batch incoming requests, round-robin to workers.
-        let policy = config.policy.clone();
-        let dispatcher = std::thread::spawn(move || {
-            let mut batcher = Batcher::new(policy);
-            let mut next_worker = 0usize;
-            let mut open = true;
-            while open || batcher.pending() > 0 {
-                // Drain the request channel without blocking past the
-                // batching deadline.
-                loop {
-                    match req_rx.try_recv() {
-                        Ok(r) => batcher.push(r),
-                        Err(TryRecvError::Empty) => break,
-                        Err(TryRecvError::Disconnected) => {
-                            open = false;
-                            break;
-                        }
-                    }
-                }
-                let release = if open {
-                    batcher.try_release(Instant::now())
-                } else {
-                    let all = batcher.flush();
-                    if all.is_empty() {
-                        None
-                    } else {
-                        Some(all)
-                    }
-                };
-                if let Some(batch) = release {
-                    // Flushes can exceed max_batch; split to respect it.
-                    for chunk in batch.chunks(16 * 1024) {
-                        let _ = batch_txs[next_worker % batch_txs.len()].send(chunk.to_vec());
-                        next_worker += 1;
-                    }
-                } else if open {
-                    std::thread::yield_now();
-                }
-            }
-            drop(batch_txs); // close workers
-            for h in worker_handles {
-                let _ = h.join();
-            }
-        });
-
-        Ok(Self { req_tx: Some(req_tx), resp_rx: Mutex::new(resp_rx), metrics, dispatcher: Some(dispatcher) })
+        let factory: BackendFactory =
+            Arc::new(move |w| make_backend(w).map(|b| Box::new(b) as Box<dyn InferBackend>));
+        let (core, resp_rx) =
+            EngineCore::start(config.workers, config.policy, vec![ModelLane { factory }])?;
+        Ok(Self { core, resp_rx: Mutex::new(resp_rx) })
     }
 
     /// Submit a request (non-blocking).
     pub fn submit(&self, req: InferRequest) -> crate::Result<()> {
-        self.req_tx
-            .as_ref()
-            .ok_or_else(|| crate::Error::Coordinator("server stopping".into()))?
-            .send(req)
-            .map_err(|_| crate::Error::Coordinator("server stopped".into()))
+        self.core.submit(0, req)
     }
 
-    /// Receive the next response (blocking).
+    /// Receive the next response (blocking). A request whose batch
+    /// failed at the backend surfaces as a typed error (historically
+    /// it was dropped and the caller hung).
     pub fn recv(&self) -> crate::Result<InferResponse> {
-        self.resp_rx
+        let completion = self
+            .resp_rx
             .lock()
             .unwrap()
             .recv()
-            .map_err(|_| crate::Error::Coordinator("server stopped".into()))
+            .map_err(|_| crate::Error::Coordinator("server stopped".into()))?;
+        match completion {
+            Completion::Done(r) => Ok(r),
+            Completion::Failed { id, error } => Err(crate::Error::Coordinator(format!(
+                "request {id} failed: {error}"
+            ))),
+        }
     }
 
     /// Snapshot metrics.
     pub fn metrics(&self) -> Metrics {
-        self.metrics.lock().unwrap().clone()
+        self.core.metrics()
     }
 
     /// Stop accepting requests, drain, and join all threads.
     pub fn shutdown(mut self) -> Metrics {
-        self.req_tx.take(); // close the request channel
-        if let Some(d) = self.dispatcher.take() {
-            let _ = d.join();
-        }
-        self.metrics.lock().unwrap().clone()
+        self.core.shutdown()
     }
-}
-
-impl Drop for Server {
-    fn drop(&mut self) {
-        self.req_tx.take();
-        if let Some(d) = self.dispatcher.take() {
-            let _ = d.join();
-        }
-    }
-}
-
-/// Execute one batch on a backend and fan out responses.
-fn run_batch<B: InferBackend>(
-    backend: &mut B,
-    batch: Vec<InferRequest>,
-    resp_tx: &Sender<InferResponse>,
-    metrics: &Arc<Mutex<Metrics>>,
-) -> crate::Result<()> {
-    let n = batch.len();
-    if n == 0 {
-        return Ok(());
-    }
-    // Stack images into (N, C, H, W).
-    let img_shape = batch[0].image.shape().to_vec();
-    let mut stacked_shape = vec![n];
-    stacked_shape.extend_from_slice(&img_shape);
-    let mut data = Vec::with_capacity(batch.iter().map(|r| r.image.len()).sum());
-    for r in &batch {
-        if r.image.shape() != img_shape.as_slice() {
-            return Err(crate::Error::Shape("heterogeneous image shapes in batch".into()));
-        }
-        data.extend_from_slice(r.image.data());
-    }
-    let images = Tensor::from_vec(&stacked_shape, data)?;
-    let logits = backend.infer_batch(&images)?;
-    if logits.len() != n {
-        return Err(crate::Error::Coordinator(format!(
-            "backend returned {} results for batch of {n}",
-            logits.len()
-        )));
-    }
-    let sim_cycles = backend.sim_cycles(n);
-    let done = Instant::now();
-    let mut latencies = Vec::with_capacity(n);
-    for (req, lg) in batch.into_iter().zip(logits) {
-        let latency_us = done.duration_since(req.enqueued).as_secs_f64() * 1e6;
-        latencies.push(latency_us);
-        let argmax = lg
-            .iter()
-            .enumerate()
-            .max_by_key(|(_, &v)| v)
-            .map(|(i, _)| i)
-            .unwrap_or(0);
-        let _ = resp_tx.send(InferResponse {
-            id: req.id,
-            logits: lg,
-            argmax,
-            latency_us,
-            sim_cycles: sim_cycles / n as u64,
-            batch_size: n,
-        });
-    }
-    metrics.lock().unwrap().record_batch(n, &latencies, sim_cycles);
-    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::backend::SacBackend;
+    use crate::model::Tensor;
     use std::collections::HashSet;
     use std::time::Duration;
 

@@ -1,0 +1,214 @@
+//! [`EngineBuilder`] — every serving knob as a typed option, resolved
+//! in one place.
+//!
+//! Environment variables are demoted to documented fallbacks (see
+//! [`env`](super::env)): an explicit builder option always wins, and
+//! the environment is read exactly once per `build`, here.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::model::{LoadedWeights, Network};
+use crate::runtime::quantized::PIPELINE_KS;
+use crate::util::pool::worker_count;
+
+use super::registry::{compile_sac, pjrt_lane, ModelSpec};
+use super::serve::{EngineCore, ModelLane};
+use super::{env, Engine};
+
+/// Which backend family serves every model of an engine. Callers pick
+/// a kind here and never branch on backend type again — the
+/// submit/poll surface is identical.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// The pure-rust kneaded-SAC plan executor: models are registered
+    /// as declared networks + weights, compiled once, and shared by
+    /// every worker through one `Arc`'d plan.
+    #[default]
+    Sac,
+    /// The AOT XLA golden model through PJRT. Serves the `golden`
+    /// model from the configured artifacts directory; PJRT handles
+    /// are thread-pinned, so each worker compiles its own executable.
+    /// Requires the `xla` + `xla-vendored` cargo features.
+    Pjrt,
+}
+
+/// Typed configuration + model registry for an [`Engine`].
+///
+/// ```no_run
+/// use tetris::coordinator::SacBackend;
+/// use tetris::engine::Engine;
+/// use tetris::model::zoo;
+///
+/// let weights = SacBackend::synthetic_weights(7)?;
+/// let engine = Engine::builder()
+///     .workers(4)
+///     .mem_budget_mb(128)
+///     .max_batch(8)
+///     .register("tiny", zoo::tiny_cnn(), weights)
+///     .build()?;
+/// # Ok::<(), tetris::Error>(())
+/// ```
+pub struct EngineBuilder {
+    backend: BackendKind,
+    workers: Option<usize>,
+    mem_budget_mb: Option<u64>,
+    tile_rows: Option<usize>,
+    policy: BatchPolicy,
+    ks: usize,
+    artifacts_dir: PathBuf,
+    specs: Vec<ModelSpec>,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EngineBuilder {
+    pub fn new() -> Self {
+        Self {
+            backend: BackendKind::Sac,
+            workers: None,
+            mem_budget_mb: None,
+            tile_rows: None,
+            policy: BatchPolicy::default(),
+            ks: PIPELINE_KS,
+            artifacts_dir: PathBuf::from("artifacts"),
+            specs: Vec::new(),
+        }
+    }
+
+    /// Backend family (default [`BackendKind::Sac`]).
+    pub fn backend(mut self, kind: BackendKind) -> Self {
+        self.backend = kind;
+        self
+    }
+
+    /// Worker threads. Fallback: `TETRIS_THREADS`, else the host
+    /// parallelism capped at 16 (see [`env::threads`]).
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = Some(workers.max(1));
+        self
+    }
+
+    /// Per-worker feature-map memory budget in MiB, which serving
+    /// turns into a fused-tile height per model. Fallback:
+    /// `TETRIS_MEM_BUDGET_MB`, else 256 (see [`env::mem_budget_mb`]).
+    pub fn mem_budget_mb(mut self, mb: u64) -> Self {
+        self.mem_budget_mb = Some(mb.max(1));
+        self
+    }
+
+    /// Pin the fused-tile height directly instead of deriving it from
+    /// the memory budget (0 = materialize full maps).
+    pub fn tile_rows(mut self, rows: usize) -> Self {
+        self.tile_rows = Some(rows);
+        self
+    }
+
+    /// Dynamic batching policy (bound + deadline together).
+    pub fn batch_policy(mut self, policy: BatchPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Dynamic batcher upper bound.
+    pub fn max_batch(mut self, max_batch: usize) -> Self {
+        self.policy.max_batch = max_batch;
+        self
+    }
+
+    /// Dynamic batcher deadline.
+    pub fn max_wait(mut self, max_wait: Duration) -> Self {
+        self.policy.max_wait = max_wait;
+        self
+    }
+
+    /// Kneading stride models are compiled with (default 16, the
+    /// paper setup; values are KS-invariant — see DESIGN.md I3).
+    pub fn kneading_stride(mut self, ks: usize) -> Self {
+        self.ks = ks;
+        self
+    }
+
+    /// Artifacts directory for [`BackendKind::Pjrt`] (default
+    /// `artifacts`).
+    pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts_dir = dir.into();
+        self
+    }
+
+    /// Register one model: a declared network plus its weight set,
+    /// compiled exactly once at [`EngineBuilder::build`]. SAC engines
+    /// only — the PJRT backend serves the AOT `golden` artifact.
+    pub fn register(
+        mut self,
+        name: impl Into<String>,
+        network: Network,
+        weights: LoadedWeights,
+    ) -> Self {
+        self.specs.push(ModelSpec::new(name, network, weights));
+        self
+    }
+
+    /// Register a prebuilt [`ModelSpec`].
+    pub fn register_spec(mut self, spec: ModelSpec) -> Self {
+        self.specs.push(spec);
+        self
+    }
+
+    /// Resolve every option (explicit value, else documented env
+    /// fallback), compile each registered model exactly once, spawn
+    /// the shared worker pool, and hand back the running [`Engine`].
+    pub fn build(self) -> crate::Result<Engine> {
+        if self.policy.max_batch == 0 {
+            return Err(crate::Error::Config("max_batch must be positive".into()));
+        }
+        let workers = self.workers.unwrap_or_else(worker_count).max(1);
+        let budget_bytes =
+            self.mem_budget_mb.unwrap_or_else(env::mem_budget_mb).max(1) * 1024 * 1024;
+
+        let mut metas = Vec::new();
+        let mut lanes = Vec::new();
+        match self.backend {
+            BackendKind::Sac => {
+                if self.specs.is_empty() {
+                    return Err(crate::Error::Config(
+                        "engine has no registered models — call `register` before `build`"
+                            .into(),
+                    ));
+                }
+                for spec in self.specs {
+                    if metas.iter().any(|m: &super::ModelMeta| m.name() == spec.name) {
+                        return Err(crate::Error::Config(format!(
+                            "model `{}` registered twice",
+                            spec.name
+                        )));
+                    }
+                    let (meta, factory) =
+                        compile_sac(spec, self.ks, budget_bytes, self.tile_rows, workers)?;
+                    lanes.push(ModelLane { factory });
+                    metas.push(meta);
+                }
+            }
+            BackendKind::Pjrt => {
+                if !self.specs.is_empty() {
+                    return Err(crate::Error::Config(
+                        "PJRT engines serve the AOT `golden` artifact model; \
+                         network registration is SAC-only"
+                            .into(),
+                    ));
+                }
+                let (meta, factory) = pjrt_lane(&self.artifacts_dir)?;
+                lanes.push(ModelLane { factory });
+                metas.push(meta);
+            }
+        }
+
+        let (core, resp_rx) = EngineCore::start(workers, self.policy, lanes)?;
+        Ok(Engine::from_parts(core, resp_rx, metas, workers))
+    }
+}

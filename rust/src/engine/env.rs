@@ -1,0 +1,165 @@
+//! The single place process environment is read.
+//!
+//! Every `TETRIS_*` knob used to be parsed ad hoc at its consumption
+//! site (`coordinator::backend`, `util::pool`, `util::bench`,
+//! `util::prop`, two bench targets), each with its own silent
+//! fallback-on-parse-error. They are now **documented fallbacks**
+//! resolved here, in exactly one place, with typed parsing; a value
+//! that is present but unparsable logs one warning per variable per
+//! process (instead of being silently swallowed) and then falls back.
+//!
+//! Typed [`EngineBuilder`](super::EngineBuilder) options take
+//! precedence over every variable below — the environment is only
+//! consulted where no explicit option was given.
+//!
+//! | Variable | Type | Default | Consumed by |
+//! |----------|------|---------|-------------|
+//! | `TETRIS_MEM_BUDGET_MB`  | `u64` (MiB, min 1)  | 256  | serving fused-tile height ([`EngineBuilder::mem_budget_mb`](super::EngineBuilder::mem_budget_mb) fallback; `coordinator::SacBackend::new`) |
+//! | `TETRIS_THREADS`        | `usize` (min 1)     | host parallelism, capped at 16 | `util::pool::worker_count` ([`EngineBuilder::workers`](super::EngineBuilder::workers) fallback) |
+//! | `TETRIS_BENCH_SECONDS`  | `f64` (seconds)     | 0.6  | `util::bench::BenchConfig` measurement window |
+//! | `TETRIS_BENCH_JSON`     | path                | none | `util::bench::Harness::json_target` sink (CLI `--json` wins) |
+//! | `TETRIS_BENCH_CSV`      | path (directory)    | none | per-bench CSV dumps (`benches/hotpath.rs`, `benches/table1_bits.rs`) |
+//! | `TETRIS_PROP_CASES`     | `usize`             | 256  | `util::prop::PropConfig` case count |
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::str::FromStr;
+use std::sync::Mutex;
+
+/// Default serving feature-map budget when `TETRIS_MEM_BUDGET_MB` is
+/// unset (mirrors the pre-engine hardcoded fallback).
+pub const DEFAULT_MEM_BUDGET_MB: u64 = 256;
+
+/// Default bench measurement window in seconds.
+pub const DEFAULT_BENCH_SECONDS: f64 = 0.6;
+
+/// Default property-test case count.
+pub const DEFAULT_PROP_CASES: usize = 256;
+
+/// Variables that already logged a parse warning this process.
+static WARNED: Mutex<BTreeSet<&'static str>> = Mutex::new(BTreeSet::new());
+
+/// Parse an *optional* raw value: `None` when the variable is unset or
+/// unparsable. Pure — unit-testable without touching the process
+/// environment; the warning side effect lives in [`warn_once`].
+fn parse_opt<T: FromStr>(var: &'static str, raw: Option<&str>) -> Result<Option<T>, String> {
+    match raw {
+        None => Ok(None),
+        Some(s) => match s.trim().parse::<T>() {
+            Ok(v) => Ok(Some(v)),
+            Err(_) => Err(format!(
+                "{var}={s:?} is not a valid {}; using the default",
+                std::any::type_name::<T>()
+            )),
+        },
+    }
+}
+
+/// Log a parse failure once per variable per process.
+fn warn_once(var: &'static str, msg: &str) {
+    if WARNED.lock().unwrap().insert(var) {
+        eprintln!("tetris: ignoring {msg}");
+    }
+}
+
+/// Read + parse one variable, warning once on a present-but-invalid
+/// value and returning `None` for it (callers supply the default).
+fn read<T: FromStr>(var: &'static str) -> Option<T> {
+    let raw = std::env::var(var).ok();
+    match parse_opt::<T>(var, raw.as_deref()) {
+        Ok(v) => v,
+        Err(msg) => {
+            warn_once(var, &msg);
+            None
+        }
+    }
+}
+
+/// `TETRIS_MEM_BUDGET_MB`: per-worker serving feature-map budget in
+/// MiB (minimum 1), defaulting to [`DEFAULT_MEM_BUDGET_MB`].
+pub fn mem_budget_mb() -> u64 {
+    read::<u64>("TETRIS_MEM_BUDGET_MB")
+        .unwrap_or(DEFAULT_MEM_BUDGET_MB)
+        .max(1)
+}
+
+/// [`mem_budget_mb`] in bytes.
+pub fn mem_budget_bytes() -> u64 {
+    mem_budget_mb() * 1024 * 1024
+}
+
+/// `TETRIS_THREADS`: explicit worker-thread override (minimum 1), or
+/// `None` to let `util::pool::worker_count` use the host parallelism.
+pub fn threads() -> Option<usize> {
+    read::<usize>("TETRIS_THREADS").map(|n| n.max(1))
+}
+
+/// `TETRIS_BENCH_SECONDS`: bench measurement window.
+pub fn bench_seconds() -> f64 {
+    read::<f64>("TETRIS_BENCH_SECONDS").unwrap_or(DEFAULT_BENCH_SECONDS)
+}
+
+/// `TETRIS_BENCH_JSON`: bench JSON sink (paths are not validated —
+/// the write reports its own error).
+pub fn bench_json() -> Option<PathBuf> {
+    std::env::var("TETRIS_BENCH_JSON").ok().map(PathBuf::from)
+}
+
+/// `TETRIS_BENCH_CSV`: directory for per-bench CSV dumps.
+pub fn bench_csv_dir() -> Option<PathBuf> {
+    std::env::var("TETRIS_BENCH_CSV").ok().map(PathBuf::from)
+}
+
+/// `TETRIS_PROP_CASES`: property-test case count.
+pub fn prop_cases() -> usize {
+    read::<usize>("TETRIS_PROP_CASES").unwrap_or(DEFAULT_PROP_CASES)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn absent_values_fall_back() {
+        assert_eq!(parse_opt::<u64>("X", None).unwrap(), None);
+        assert_eq!(parse_opt::<usize>("X", None).unwrap(), None);
+    }
+
+    #[test]
+    fn valid_values_parse_typed() {
+        assert_eq!(parse_opt::<u64>("X", Some("512")).unwrap(), Some(512));
+        assert_eq!(parse_opt::<usize>("X", Some(" 8 ")).unwrap(), Some(8));
+        assert_eq!(parse_opt::<f64>("X", Some("0.25")).unwrap(), Some(0.25));
+    }
+
+    #[test]
+    fn invalid_values_error_instead_of_silently_vanishing() {
+        let err = parse_opt::<u64>("TETRIS_MEM_BUDGET_MB", Some("lots")).unwrap_err();
+        assert!(err.contains("TETRIS_MEM_BUDGET_MB"), "{err}");
+        assert!(parse_opt::<usize>("T", Some("-3")).is_err());
+        assert!(parse_opt::<f64>("T", Some("")).is_err());
+    }
+
+    #[test]
+    fn warn_once_is_once() {
+        // Second warning for the same variable is suppressed; a
+        // different variable still warns. (Observable only via the
+        // WARNED set — stderr is not captured here.)
+        warn_once("TETRIS_TEST_ONLY_A", "a");
+        assert!(!WARNED.lock().unwrap().insert("TETRIS_TEST_ONLY_A"));
+        warn_once("TETRIS_TEST_ONLY_B", "b");
+        assert!(!WARNED.lock().unwrap().insert("TETRIS_TEST_ONLY_B"));
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        // These read the live environment; CI leaves the knobs unset,
+        // and when set they must still be ≥ the documented minima.
+        assert!(mem_budget_mb() >= 1);
+        assert!(prop_cases() >= 1);
+        assert!(bench_seconds() > 0.0);
+        if let Some(t) = threads() {
+            assert!(t >= 1);
+        }
+    }
+}

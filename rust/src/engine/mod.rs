@@ -1,0 +1,153 @@
+//! The engine façade — the crate's single serving entry point.
+//!
+//! The paper's pitch is that kneading + SAC pays off when the whole
+//! pipeline is organized around it: compile once (§III.B), stream the
+//! kneaded form, schedule in a front end rather than at call sites.
+//! This module is that front end for serving:
+//!
+//! * [`EngineBuilder`] — every knob as a typed option (memory budget,
+//!   tile rows, worker threads, batch policy, kneading stride),
+//!   resolved in one place; environment variables are demoted to
+//!   documented fallbacks ([`env`]).
+//! * [`Engine`] — owns a **model registry**: several networks (the
+//!   whole zoo, at any scale) are registered, compiled exactly once
+//!   each, and served concurrently from one shared worker pool.
+//! * [`InferSession`] — the uniform client surface:
+//!   `submit(model, image) → Ticket`, `poll`/`wait`, and a blocking
+//!   `infer_batch` convenience; `metrics()` reports throughput and
+//!   exact latency percentiles.
+//! * [`BackendKind`] — one constructor path over both backends: the
+//!   pure-rust kneaded-SAC plan executor and the PJRT/XLA golden
+//!   model. Callers never branch on backend type.
+//!
+//! The older entry points — `coordinator::Server::{start,
+//! start_shared}` and raw `CompiledNetwork` handles — remain as thin
+//! shims over this engine's core (see DESIGN.md §Engine API for the
+//! deprecation map).
+//!
+//! ```no_run
+//! use tetris::coordinator::SacBackend;
+//! use tetris::engine::Engine;
+//! use tetris::model::{zoo, Tensor};
+//!
+//! let engine = Engine::builder()
+//!     .workers(2)
+//!     .register("tiny", zoo::tiny_cnn(), SacBackend::synthetic_weights(7)?)
+//!     .build()?;
+//! let session = engine.session();
+//! let ticket = session.submit("tiny", Tensor::zeros(&[1, 16, 16]))?;
+//! let response = session.wait(&ticket)?;
+//! println!("class {} in {:.0} µs", response.argmax, response.latency_us);
+//! engine.shutdown();
+//! # Ok::<(), tetris::Error>(())
+//! ```
+
+pub mod env;
+
+mod builder;
+mod registry;
+pub(crate) mod serve;
+mod session;
+
+pub use builder::{BackendKind, EngineBuilder};
+pub use registry::{ModelId, ModelMeta, ModelSpec};
+pub use session::{InferSession, Ticket};
+
+use std::sync::atomic::AtomicU64;
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::metrics::Metrics;
+
+use serve::{Completion, EngineCore};
+use session::{ResponseHub, SessionModel, SessionShared};
+
+/// A running serving engine: model registry + shared worker pool.
+///
+/// Build with [`Engine::builder`]; talk to it through
+/// [`Engine::session`] handles. Dropping or [`Engine::shutdown`]ting
+/// the engine drains in-flight work and joins every thread;
+/// outstanding sessions then fail fast instead of hanging.
+pub struct Engine {
+    shared: Arc<SessionShared>,
+    models: Vec<ModelMeta>,
+    workers: usize,
+    core: EngineCore,
+}
+
+impl Engine {
+    /// Start configuring an engine.
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::new()
+    }
+
+    pub(crate) fn from_parts(
+        core: EngineCore,
+        resp_rx: Receiver<Completion>,
+        models: Vec<ModelMeta>,
+        workers: usize,
+    ) -> Self {
+        let shared = Arc::new(SessionShared {
+            req_tx: Mutex::new(Some(core.sender())),
+            hub: ResponseHub::new(resp_rx),
+            next_id: AtomicU64::new(0),
+            metrics: core.metrics_handle(),
+            models: models
+                .iter()
+                .map(|m| SessionModel {
+                    name: m.name().to_string(),
+                    in_c: m.in_c,
+                    in_hw: m.in_hw,
+                })
+                .collect(),
+        });
+        Self { shared, models, workers, core }
+    }
+
+    /// A client handle. Sessions are cheap clones; all of an engine's
+    /// sessions share one completion store, so tickets may be redeemed
+    /// from any of them.
+    pub fn session(&self) -> InferSession {
+        InferSession::new(Arc::clone(&self.shared))
+    }
+
+    /// Registered models, registration order (= [`ModelId`] order).
+    pub fn models(&self) -> &[ModelMeta] {
+        &self.models
+    }
+
+    /// Resolve a model name.
+    pub fn model_id(&self, name: &str) -> Option<ModelId> {
+        self.models.iter().position(|m| m.name() == name)
+    }
+
+    /// Worker threads serving the pool.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Snapshot aggregate serving metrics.
+    pub fn metrics(&self) -> Metrics {
+        self.core.metrics()
+    }
+
+    /// Stop accepting requests, drain every lane, join all threads,
+    /// and return the final metrics. In-flight responses remain
+    /// redeemable from the completion store until sessions drop.
+    pub fn shutdown(mut self) -> Metrics {
+        self.shutdown_inner()
+    }
+
+    fn shutdown_inner(&mut self) -> Metrics {
+        // Invalidate session submitters first: the dispatcher only
+        // sees a closed channel once every sender is gone.
+        *self.shared.req_tx.lock().unwrap() = None;
+        self.core.shutdown()
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}

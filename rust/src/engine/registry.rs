@@ -1,0 +1,161 @@
+//! The engine's model registry: named networks, each compiled exactly
+//! once at [`EngineBuilder::build`](super::EngineBuilder::build) time
+//! into the backend the engine's [`BackendKind`](super::BackendKind)
+//! selects.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::config::{AccelConfig, CalibConfig};
+use crate::coordinator::backend::{InferBackend, PjrtBackend, SacBackend};
+use crate::model::{LoadedWeights, Network, TopoOp};
+use crate::plan::CompiledNetwork;
+use crate::sim::{sample::samples_from_loaded, simulate_network_with_samples, tetris::TetrisSim};
+
+use super::serve::BackendFactory;
+
+/// Index of a registered model inside its engine — stable for the
+/// engine's lifetime, resolvable from the name via
+/// [`Engine::model_id`](super::Engine::model_id).
+pub type ModelId = usize;
+
+/// One model registration: a display name plus the declared network
+/// and its weight set. Compilation happens once, at engine build.
+pub struct ModelSpec {
+    pub name: String,
+    pub network: Network,
+    pub weights: LoadedWeights,
+}
+
+impl ModelSpec {
+    pub fn new(name: impl Into<String>, network: Network, weights: LoadedWeights) -> Self {
+        Self { name: name.into(), network, weights }
+    }
+}
+
+/// Compile-time product of one registration: what the engine exposes
+/// for introspection (the shared plan, simulated per-image cost) and
+/// what sessions validate submissions against.
+pub struct ModelMeta {
+    pub(crate) name: String,
+    pub(crate) backend: &'static str,
+    /// The one shared compiled plan (SAC models; PJRT executables are
+    /// thread-pinned and live inside the workers instead).
+    pub(crate) plan: Option<Arc<CompiledNetwork>>,
+    pub(crate) cycles_per_image: u64,
+    /// Input channel count submissions are validated against.
+    pub(crate) in_c: Option<usize>,
+    /// Declared input spatial size submissions are validated against.
+    /// Serving is fixed-shape per model (the executor itself accepts
+    /// other extents, but mixed shapes inside one dynamic batch would
+    /// poison co-batched requests — so sessions reject them up
+    /// front).
+    pub(crate) in_hw: Option<usize>,
+}
+
+impl ModelMeta {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Which backend serves this model (`"sac-rust"` / `"pjrt-xla"`).
+    pub fn backend(&self) -> &'static str {
+        self.backend
+    }
+
+    /// The shared compiled plan, for SAC models.
+    pub fn plan(&self) -> Option<&Arc<CompiledNetwork>> {
+        self.plan.as_ref()
+    }
+
+    /// Simulated Tetris cycles per image.
+    pub fn cycles_per_image(&self) -> u64 {
+        self.cycles_per_image
+    }
+}
+
+/// First scheduled conv's declared input shape — (channels, spatial
+/// size) submissions must match.
+fn entry_shape(net: &Network) -> Option<(usize, usize)> {
+    fn find(ops: &[TopoOp], net: &Network) -> Option<(usize, usize)> {
+        for op in ops {
+            match op {
+                TopoOp::Conv(i) => return net.layers.get(*i).map(|l| (l.in_c, l.in_hw)),
+                TopoOp::Branch(arms) => {
+                    if let Some(s) = arms.iter().find_map(|a| find(a, net)) {
+                        return Some(s);
+                    }
+                }
+                _ => {}
+            }
+        }
+        None
+    }
+    find(&net.schedule, net)
+}
+
+/// Compile one SAC registration: knead every lane once, pick the fused
+/// tile height from the resolved memory budget (unless overridden),
+/// pre-simulate the per-image accelerator cost, and return the lane
+/// metadata plus a factory whose per-worker "construction" is an
+/// `Arc`-sharing clone — W workers, one compile.
+pub(crate) fn compile_sac(
+    spec: ModelSpec,
+    ks: usize,
+    budget_bytes: u64,
+    tile_rows: Option<usize>,
+    workers: usize,
+) -> crate::Result<(ModelMeta, BackendFactory)> {
+    let ModelSpec { name, network, weights } = spec;
+    let mode = weights.mode;
+    let mut plan = CompiledNetwork::compile(&network, &weights, ks, mode)?;
+    plan.tile_rows =
+        tile_rows.unwrap_or_else(|| plan.tile_rows_for_budget(budget_bytes, workers));
+    // Timing from the registered weights' bit statistics, so serving
+    // metrics report the paper's accelerator rather than the host.
+    let cfg = AccelConfig { ks, mode, ..AccelConfig::default() };
+    let calib = CalibConfig::default();
+    let samples = samples_from_loaded(&network, &weights)?;
+    let sim = simulate_network_with_samples(&TetrisSim, &network, &samples, &cfg, &calib);
+    let cycles = sim.total_cycles();
+
+    let plan = Arc::new(plan);
+    let entry = entry_shape(&network);
+    let meta = ModelMeta {
+        name,
+        backend: "sac-rust",
+        plan: Some(Arc::clone(&plan)),
+        cycles_per_image: cycles,
+        in_c: entry.map(|(c, _)| c),
+        in_hw: entry.map(|(_, hw)| hw),
+    };
+    let prototype = SacBackend::from_parts(plan, cycles);
+    let factory: BackendFactory =
+        Arc::new(move |_w| Ok(Box::new(prototype.clone()) as Box<dyn InferBackend>));
+    Ok((meta, factory))
+}
+
+/// Build the PJRT lane for the AOT golden model: probe once on the
+/// calling thread (fail fast — without the `xla` + `xla-vendored`
+/// features, or without artifacts, this is where the error surfaces),
+/// then hand back a factory that compiles a thread-pinned executable
+/// per worker.
+pub(crate) fn pjrt_lane(artifacts: &Path) -> crate::Result<(ModelMeta, BackendFactory)> {
+    let probe = PjrtBackend::from_artifacts(artifacts)?;
+    let cycles = probe.sim_cycles(1);
+    let meta = ModelMeta {
+        name: "golden".into(),
+        backend: "pjrt-xla",
+        plan: None,
+        cycles_per_image: cycles,
+        in_c: Some(probe.input_channels()),
+        in_hw: Some(probe.input_hw()),
+    };
+    drop(probe);
+    let dir = artifacts.to_path_buf();
+    let factory: BackendFactory = Arc::new(move |_w| {
+        PjrtBackend::from_artifacts_with_cycles(&dir, cycles)
+            .map(|b| Box::new(b) as Box<dyn InferBackend>)
+    });
+    Ok((meta, factory))
+}

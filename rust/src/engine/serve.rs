@@ -1,0 +1,319 @@
+//! The engine's shared serving core: one request channel, one dynamic
+//! batcher **per registered model**, one worker pool serving every
+//! model.
+//!
+//! This is the routing loop that used to live inside
+//! `coordinator::Server`, generalized from one model to a registry:
+//! requests are tagged with a [`ModelId`](super::ModelId), the
+//! dispatcher batches each model's queue independently (same
+//! [`BatchPolicy`] bounds), and released batches round-robin across
+//! workers — so several compiled networks are served concurrently from
+//! one pool without per-model threads. `coordinator::Server` is now a
+//! thin shim over a single-lane core, which keeps its long-standing
+//! behavior tests (exactly-once delivery, value transparency I6)
+//! pinning this code.
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::backend::InferBackend;
+use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{InferRequest, InferResponse, RequestId};
+use crate::model::Tensor;
+
+/// Terminal outcome of one request. A batch that fails at the backend
+/// (a PJRT runtime error, a result-count mismatch) completes every
+/// one of its requests as [`Completion::Failed`] instead of silently
+/// dropping them — so a client blocked in `InferSession::wait` gets a
+/// typed error, never a permanent hang.
+pub(crate) enum Completion {
+    Done(InferResponse),
+    Failed { id: RequestId, error: String },
+}
+
+impl Completion {
+    pub fn id(&self) -> RequestId {
+        match self {
+            Completion::Done(r) => r.id,
+            Completion::Failed { id, .. } => *id,
+        }
+    }
+}
+
+/// Per-worker backend constructor for one model. Called once per
+/// worker thread, **on** that thread — so backends need not be `Send`
+/// (PJRT handles are thread-pinned). Cheap-clone backends (e.g.
+/// `SacBackend` over an `Arc`'d plan) should capture a prototype and
+/// clone it, so W workers share one compile.
+pub(crate) type BackendFactory =
+    Arc<dyn Fn(usize) -> crate::Result<Box<dyn InferBackend>> + Send + Sync>;
+
+/// One registered model's serving lane: the per-worker backend
+/// factory. Lane order is [`ModelId`](super::ModelId) order — display
+/// names live in the engine's `ModelMeta` registry.
+pub(crate) struct ModelLane {
+    pub factory: BackendFactory,
+}
+
+/// The running core: submit tagged requests, drain one response
+/// channel, snapshot metrics, shut down. The response receiver is
+/// returned by [`EngineCore::start`] so the owner decides how to drain
+/// it (the `Server` shim blocks on it directly; `engine::InferSession`
+/// parks out-of-order completions in a ticket store).
+pub(crate) struct EngineCore {
+    req_tx: Option<Sender<(usize, InferRequest)>>,
+    metrics: Arc<Mutex<Metrics>>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl EngineCore {
+    /// Spawn the worker pool and dispatcher. Every worker constructs
+    /// one backend per lane via the lane's factory, on the worker's
+    /// own thread.
+    pub fn start(
+        workers: usize,
+        policy: BatchPolicy,
+        lanes: Vec<ModelLane>,
+    ) -> crate::Result<(Self, Receiver<Completion>)> {
+        assert!(workers > 0, "engine needs at least one worker");
+        assert!(!lanes.is_empty(), "engine needs at least one model lane");
+        let models = lanes.len();
+        let (req_tx, req_rx) = channel::<(usize, InferRequest)>();
+        let (resp_tx, resp_rx) = channel::<Completion>();
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+
+        let factories: Arc<Vec<BackendFactory>> =
+            Arc::new(lanes.into_iter().map(|l| l.factory).collect());
+        let mut batch_txs = Vec::new();
+        let mut worker_handles = Vec::new();
+        // Workers report backend construction before entering their
+        // serve loop, so a failed factory (a per-thread PJRT compile,
+        // say) fails `start` instead of leaving a silently dead worker
+        // the dispatcher keeps routing ~1/W of all batches to.
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        for w in 0..workers {
+            let (btx, brx) = channel::<(usize, Vec<InferRequest>)>();
+            batch_txs.push(btx);
+            let resp_tx = resp_tx.clone();
+            let metrics = Arc::clone(&metrics);
+            let factories = Arc::clone(&factories);
+            let ready_tx = ready_tx.clone();
+            worker_handles.push(std::thread::spawn(move || {
+                let mut backends: Vec<Box<dyn InferBackend>> = Vec::with_capacity(factories.len());
+                for f in factories.iter() {
+                    match f(w) {
+                        Ok(b) => backends.push(b),
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(format!("worker {w}: {e}")));
+                            return;
+                        }
+                    }
+                }
+                let _ = ready_tx.send(Ok(()));
+                drop(ready_tx);
+                while let Ok((m, batch)) = brx.recv() {
+                    let ids: Vec<RequestId> = batch.iter().map(|r| r.id).collect();
+                    if let Err(e) = run_batch(&mut *backends[m], batch, &resp_tx, &metrics) {
+                        // Complete every co-batched request with the
+                        // error — clients get a typed failure instead
+                        // of waiting forever on a dropped batch.
+                        eprintln!("worker {w}: batch failed: {e}");
+                        for id in ids {
+                            let _ = resp_tx
+                                .send(Completion::Failed { id, error: e.to_string() });
+                        }
+                    }
+                }
+            }));
+        }
+        drop(ready_tx);
+        for _ in 0..workers {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(msg)) => {
+                    // Unwind: close every worker's batch channel and
+                    // join the ones that did come up.
+                    drop(batch_txs);
+                    for h in worker_handles {
+                        let _ = h.join();
+                    }
+                    return Err(crate::Error::Coordinator(format!(
+                        "backend init failed: {msg}"
+                    )));
+                }
+                Err(_) => {
+                    drop(batch_txs);
+                    for h in worker_handles {
+                        let _ = h.join();
+                    }
+                    return Err(crate::Error::Coordinator(
+                        "a worker died before reporting readiness".into(),
+                    ));
+                }
+            }
+        }
+
+        // Dispatcher: one batcher per model, releases round-robin to
+        // the shared worker pool.
+        let dispatcher = std::thread::spawn(move || {
+            let mut batchers: Vec<Batcher> =
+                (0..models).map(|_| Batcher::new(policy.clone())).collect();
+            let mut next_worker = 0usize;
+            let mut open = true;
+            while open || batchers.iter().map(Batcher::pending).sum::<usize>() > 0 {
+                // Drain the request channel without blocking past the
+                // batching deadline.
+                loop {
+                    match req_rx.try_recv() {
+                        Ok((m, r)) => batchers[m].push(r),
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => {
+                            open = false;
+                            break;
+                        }
+                    }
+                }
+                let mut released_any = false;
+                for (m, b) in batchers.iter_mut().enumerate() {
+                    let release = if open {
+                        b.try_release(Instant::now())
+                    } else {
+                        let all = b.flush();
+                        if all.is_empty() {
+                            None
+                        } else {
+                            Some(all)
+                        }
+                    };
+                    if let Some(batch) = release {
+                        released_any = true;
+                        // Flushes can exceed max_batch; split to
+                        // respect the channel payload bound.
+                        for chunk in batch.chunks(16 * 1024) {
+                            let _ = batch_txs[next_worker % batch_txs.len()]
+                                .send((m, chunk.to_vec()));
+                            next_worker += 1;
+                        }
+                    }
+                }
+                if !released_any && open {
+                    std::thread::yield_now();
+                }
+            }
+            drop(batch_txs); // close workers
+            for h in worker_handles {
+                let _ = h.join();
+            }
+        });
+
+        Ok((
+            Self { req_tx: Some(req_tx), metrics, dispatcher: Some(dispatcher) },
+            resp_rx,
+        ))
+    }
+
+    /// Submit a request to one model's lane (non-blocking).
+    pub fn submit(&self, model: usize, req: InferRequest) -> crate::Result<()> {
+        self.req_tx
+            .as_ref()
+            .ok_or_else(|| crate::Error::Coordinator("engine stopping".into()))?
+            .send((model, req))
+            .map_err(|_| crate::Error::Coordinator("engine stopped".into()))
+    }
+
+    /// Clone the raw request sender (sessions submit through this;
+    /// the core's own copy still controls channel closure — dropping
+    /// session clones never shuts the engine down, and
+    /// [`EngineCore::shutdown`] invalidates them via the owner).
+    /// Panics if called after shutdown.
+    pub fn sender(&self) -> Sender<(usize, InferRequest)> {
+        self.req_tx.as_ref().expect("engine core already shut down").clone()
+    }
+
+    /// Shared handle to the aggregate metrics (sessions snapshot it).
+    pub fn metrics_handle(&self) -> Arc<Mutex<Metrics>> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Snapshot aggregate metrics.
+    pub fn metrics(&self) -> Metrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    /// Stop accepting requests, drain every lane, join all threads.
+    pub fn shutdown(&mut self) -> Metrics {
+        self.req_tx.take(); // close the request channel
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        self.metrics.lock().unwrap().clone()
+    }
+}
+
+impl Drop for EngineCore {
+    fn drop(&mut self) {
+        self.req_tx.take();
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+    }
+}
+
+/// Execute one batch on a backend and fan out responses. (Moved here
+/// from `coordinator::server`, unchanged semantics: stack → infer →
+/// per-request latency + response, one metrics record per batch.)
+pub(crate) fn run_batch<B: InferBackend + ?Sized>(
+    backend: &mut B,
+    batch: Vec<InferRequest>,
+    resp_tx: &Sender<Completion>,
+    metrics: &Arc<Mutex<Metrics>>,
+) -> crate::Result<()> {
+    let n = batch.len();
+    if n == 0 {
+        return Ok(());
+    }
+    // Stack images into (N, C, H, W).
+    let img_shape = batch[0].image.shape().to_vec();
+    let mut stacked_shape = vec![n];
+    stacked_shape.extend_from_slice(&img_shape);
+    let mut data = Vec::with_capacity(batch.iter().map(|r| r.image.len()).sum());
+    for r in &batch {
+        if r.image.shape() != img_shape.as_slice() {
+            return Err(crate::Error::Shape("heterogeneous image shapes in batch".into()));
+        }
+        data.extend_from_slice(r.image.data());
+    }
+    let images = Tensor::from_vec(&stacked_shape, data)?;
+    let logits = backend.infer_batch(&images)?;
+    if logits.len() != n {
+        return Err(crate::Error::Coordinator(format!(
+            "backend returned {} results for batch of {n}",
+            logits.len()
+        )));
+    }
+    let sim_cycles = backend.sim_cycles(n);
+    let done = Instant::now();
+    let mut latencies = Vec::with_capacity(n);
+    for (req, lg) in batch.into_iter().zip(logits) {
+        let latency_us = done.duration_since(req.enqueued).as_secs_f64() * 1e6;
+        latencies.push(latency_us);
+        let argmax = lg
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &v)| v)
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        let _ = resp_tx.send(Completion::Done(InferResponse {
+            id: req.id,
+            logits: lg,
+            argmax,
+            latency_us,
+            sim_cycles: sim_cycles / n as u64,
+            batch_size: n,
+        }));
+    }
+    metrics.lock().unwrap().record_batch(n, &latencies, sim_cycles);
+    Ok(())
+}

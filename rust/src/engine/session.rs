@@ -1,0 +1,320 @@
+//! [`InferSession`] — the one client surface: `submit` returns a
+//! [`Ticket`], `poll`/`wait` redeem it, `infer_batch` is the blocking
+//! convenience. Sessions are cheap clones sharing the engine's
+//! request channel and a common completion store, so any number of
+//! submitter/drainer threads coexist.
+
+use std::collections::{BTreeSet, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{InferRequest, InferResponse, RequestId};
+use crate::model::Tensor;
+
+use super::registry::ModelId;
+use super::serve::Completion;
+
+/// Receipt for one submitted request: redeem with
+/// [`InferSession::poll`] or [`InferSession::wait`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Ticket {
+    /// The model the request was routed to.
+    pub model: ModelId,
+    /// Engine-unique request id.
+    pub id: RequestId,
+}
+
+/// Parked completions + redeemed-ticket bookkeeping, behind one lock.
+///
+/// Request ids are assigned sequentially per engine and mostly
+/// complete near submission order, so redeemed ids compress to a
+/// watermark (`all ids below are redeemed`) plus the out-of-order
+/// stragglers above it — bounded state, unlike a grow-forever set.
+struct HubStore {
+    parked: HashMap<RequestId, Completion>,
+    redeemed_below: RequestId,
+    redeemed: BTreeSet<RequestId>,
+}
+
+impl HubStore {
+    fn is_redeemed(&self, id: RequestId) -> bool {
+        id < self.redeemed_below || self.redeemed.contains(&id)
+    }
+
+    fn mark_redeemed(&mut self, id: RequestId) {
+        if id < self.redeemed_below {
+            return;
+        }
+        if id == self.redeemed_below {
+            self.redeemed_below += 1;
+            while self.redeemed.remove(&self.redeemed_below) {
+                self.redeemed_below += 1;
+            }
+        } else {
+            self.redeemed.insert(id);
+        }
+    }
+}
+
+/// Completions arriving out of submission order park here until their
+/// ticket is redeemed. One hub per engine, shared by all sessions.
+pub(crate) struct ResponseHub {
+    rx: Mutex<Receiver<Completion>>,
+    store: Mutex<HubStore>,
+    arrived: Condvar,
+}
+
+/// Unwrap a redeemed completion into the public result shape.
+fn into_result(c: Completion) -> crate::Result<InferResponse> {
+    match c {
+        Completion::Done(r) => Ok(r),
+        Completion::Failed { id, error } => Err(crate::Error::Coordinator(format!(
+            "request {id} failed: {error}"
+        ))),
+    }
+}
+
+impl ResponseHub {
+    pub fn new(rx: Receiver<Completion>) -> Self {
+        Self {
+            rx: Mutex::new(rx),
+            store: Mutex::new(HubStore {
+                parked: HashMap::new(),
+                redeemed_below: 0,
+                redeemed: BTreeSet::new(),
+            }),
+            arrived: Condvar::new(),
+        }
+    }
+
+    fn stash(&self, c: Completion) {
+        self.store.lock().unwrap().parked.insert(c.id(), c);
+        self.arrived.notify_all();
+    }
+
+    /// Take `id`'s completion if parked, marking it redeemed. `Err`
+    /// immediately on a double redeem.
+    fn take(&self, id: RequestId) -> crate::Result<Option<Completion>> {
+        let mut store = self.store.lock().unwrap();
+        if store.is_redeemed(id) {
+            return Err(crate::Error::Coordinator(format!(
+                "ticket {id} was already redeemed"
+            )));
+        }
+        match store.parked.remove(&id) {
+            Some(c) => {
+                store.mark_redeemed(id);
+                Ok(Some(c))
+            }
+            None => Ok(None),
+        }
+    }
+
+    fn mark_redeemed(&self, id: RequestId) {
+        self.store.lock().unwrap().mark_redeemed(id);
+    }
+
+    /// Non-blocking: drain whatever is on the channel, then check the
+    /// store. `Err` on a double redeem, a failed request, or when the
+    /// engine has stopped and the response can no longer arrive.
+    fn poll(&self, id: RequestId) -> crate::Result<Option<InferResponse>> {
+        let mut disconnected = false;
+        if let Ok(rx) = self.rx.try_lock() {
+            loop {
+                match rx.try_recv() {
+                    Ok(c) => self.stash(c),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        disconnected = true;
+                        break;
+                    }
+                }
+            }
+        }
+        match self.take(id)? {
+            Some(c) => into_result(c).map(Some),
+            None if disconnected => {
+                Err(crate::Error::Coordinator("engine stopped".into()))
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// Block until `id` completes. One caller at a time drains the
+    /// channel (stashing other tickets' completions); the rest wait on
+    /// the store's condvar, so concurrent waiters never starve.
+    fn wait(&self, id: RequestId) -> crate::Result<InferResponse> {
+        const TICK: Duration = Duration::from_millis(20);
+        loop {
+            if let Some(c) = self.take(id)? {
+                return into_result(c);
+            }
+            if let Ok(rx) = self.rx.try_lock() {
+                match rx.recv_timeout(TICK) {
+                    Ok(c) => {
+                        if c.id() == id {
+                            self.mark_redeemed(id);
+                            // Others may be parked on the condvar for
+                            // completions we have not drained yet.
+                            self.arrived.notify_all();
+                            return into_result(c);
+                        }
+                        self.stash(c);
+                    }
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => {
+                        // A racing drainer may have stashed it between
+                        // our `take` and the disconnect.
+                        return match self.take(id)? {
+                            Some(c) => into_result(c),
+                            None => Err(crate::Error::Coordinator(
+                                "engine stopped".into(),
+                            )),
+                        };
+                    }
+                }
+            } else {
+                let store = self.store.lock().unwrap();
+                if store.parked.contains_key(&id) || store.is_redeemed(id) {
+                    continue; // re-loop; take() resolves it
+                }
+                let (guard, _timed_out) = self.arrived.wait_timeout(store, TICK).unwrap();
+                drop(guard);
+            }
+        }
+    }
+}
+
+/// Per-model routing info sessions validate against.
+pub(crate) struct SessionModel {
+    pub name: String,
+    pub in_c: Option<usize>,
+    pub in_hw: Option<usize>,
+}
+
+/// State shared between an engine and every session it hands out.
+pub(crate) struct SessionShared {
+    /// `None` once the engine shut down — submissions then fail fast
+    /// instead of hanging.
+    pub req_tx: Mutex<Option<Sender<(usize, InferRequest)>>>,
+    pub hub: ResponseHub,
+    pub next_id: AtomicU64,
+    pub metrics: Arc<Mutex<Metrics>>,
+    pub models: Vec<SessionModel>,
+}
+
+/// Client handle to a running [`Engine`](super::Engine): one uniform
+/// submit/poll surface over every registered model, whatever backend
+/// serves it. Clone freely; clones share the ticket store.
+#[derive(Clone)]
+pub struct InferSession {
+    shared: Arc<SessionShared>,
+}
+
+impl InferSession {
+    pub(crate) fn new(shared: Arc<SessionShared>) -> Self {
+        Self { shared }
+    }
+
+    /// Resolve a model name to its engine-local id.
+    pub fn model_id(&self, name: &str) -> Option<ModelId> {
+        self.shared.models.iter().position(|m| m.name == name)
+    }
+
+    /// Submit one (C, H, W) Q8.8 image to a model by name.
+    pub fn submit(&self, model: &str, image: Tensor<i32>) -> crate::Result<Ticket> {
+        let id = self.model_id(model).ok_or_else(|| {
+            crate::Error::Config(format!("engine has no model `{model}`"))
+        })?;
+        self.submit_to(id, image)
+    }
+
+    /// Submit by [`ModelId`] (hot paths that resolved the name once).
+    ///
+    /// The full image shape is validated against the model's declared
+    /// input here, up front: a worker-side execution failure would
+    /// silently drop the whole dynamic batch (poisoning co-batched
+    /// requests and leaving their `wait` calls hanging), so malformed
+    /// submissions must never reach a lane.
+    pub fn submit_to(&self, model: ModelId, image: Tensor<i32>) -> crate::Result<Ticket> {
+        let meta = self.shared.models.get(model).ok_or_else(|| {
+            crate::Error::Config(format!("model id {model} out of range"))
+        })?;
+        match *image.shape() {
+            [c, h, w] => {
+                if let Some(want) = meta.in_c {
+                    if c != want {
+                        return Err(crate::Error::Shape(format!(
+                            "model `{}` takes {want} input channels, image has {c}",
+                            meta.name
+                        )));
+                    }
+                }
+                if let Some(hw) = meta.in_hw {
+                    if (h, w) != (hw, hw) {
+                        return Err(crate::Error::Shape(format!(
+                            "model `{}` takes {hw}×{hw} images, got {h}×{w}",
+                            meta.name
+                        )));
+                    }
+                }
+            }
+            _ => {
+                return Err(crate::Error::Shape(
+                    "submit takes one (C, H, W) image per request".into(),
+                ))
+            }
+        }
+        let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+        self.shared
+            .req_tx
+            .lock()
+            .unwrap()
+            .as_ref()
+            .ok_or_else(|| crate::Error::Coordinator("engine stopped".into()))?
+            .send((model, InferRequest::new(id, image)))
+            .map_err(|_| crate::Error::Coordinator("engine stopped".into()))?;
+        Ok(Ticket { model, id })
+    }
+
+    /// Non-blocking check for a ticket's completion. `Ok(None)` while
+    /// in flight; `Err` if the request failed at the backend, the
+    /// ticket was already redeemed, or the engine stopped.
+    pub fn poll(&self, ticket: &Ticket) -> crate::Result<Option<InferResponse>> {
+        self.shared.hub.poll(ticket.id)
+    }
+
+    /// Block until a ticket completes. A backend-side failure
+    /// completes the ticket with a typed error (never a hang), and
+    /// redeeming the same ticket twice errors immediately.
+    pub fn wait(&self, ticket: &Ticket) -> crate::Result<InferResponse> {
+        self.shared.hub.wait(ticket.id)
+    }
+
+    /// Blocking convenience: submit every image to one model and wait
+    /// for all of them, preserving submission order. The engine still
+    /// batches them dynamically under the hood.
+    pub fn infer_batch(
+        &self,
+        model: &str,
+        images: &[Tensor<i32>],
+    ) -> crate::Result<Vec<InferResponse>> {
+        let id = self.model_id(model).ok_or_else(|| {
+            crate::Error::Config(format!("engine has no model `{model}`"))
+        })?;
+        let tickets: Vec<Ticket> = images
+            .iter()
+            .map(|img| self.submit_to(id, img.clone()))
+            .collect::<crate::Result<_>>()?;
+        tickets.iter().map(|t| self.wait(t)).collect()
+    }
+
+    /// Snapshot the engine's aggregate serving metrics (latency
+    /// percentiles included — see `Metrics::latency_percentiles`).
+    pub fn metrics(&self) -> Metrics {
+        self.shared.metrics.lock().unwrap().clone()
+    }
+}

@@ -24,7 +24,13 @@
 //! * [`energy`] — 65nm component energy/area tables, power + EDP model.
 //! * [`latency`] — gate-delay model behind the paper's Figure 1.
 //! * [`analysis`] — bit-level statistics (Table 1, Figure 2).
-//! * [`coordinator`] — serving engine (router, batcher, workers).
+//! * [`engine`] — **the serving façade**: typed [`engine::EngineBuilder`]
+//!   options, a multi-model registry compiled once per model, and one
+//!   [`engine::InferSession`] submit/poll surface over both backends
+//!   (kneaded-SAC and PJRT). Start here for serving.
+//! * [`coordinator`] — serving substrate the engine drives (request
+//!   types, dynamic batcher, metrics, backends; the legacy `Server`
+//!   shim).
 //! * [`runtime`] — PJRT/XLA runtime that loads `artifacts/*.hlo.txt`
 //!   (behind the `xla` feature) plus the quantized SAC pipeline.
 //! * [`report`] — regenerates every table and figure of the paper.
@@ -36,6 +42,7 @@ pub mod analysis;
 pub mod config;
 pub mod coordinator;
 pub mod energy;
+pub mod engine;
 pub mod kneading;
 pub mod latency;
 pub mod model;

@@ -4,7 +4,7 @@
 //! tetris report <table1|fig1|fig2|fig8|fig9|fig10|fig11|table2|all> [--csv-dir D]
 //! tetris simulate --network vgg16 --accel tetris --mode fp16 --ks 16
 //! tetris knead    --network alexnet --ks 16 --mode fp16
-//! tetris serve    --requests 64 --max-batch 8 --network vgg16
+//! tetris serve    --requests 64 --max-batch 8 --workers 2 --network vgg16
 //! tetris golden   --dir artifacts
 //! ```
 
@@ -20,7 +20,8 @@ Subcommands:
                    fig8, fig9, fig10, fig11, table2, all)
   simulate         run one network through one accelerator timing model
   knead            print kneading statistics for a network
-  serve            start the serving coordinator with a synthetic load
+  serve            start the serving engine with a synthetic load
+                   (multi-model: tiny CNN + a scaled --network copy)
   golden           execute the AOT golden model from artifacts/ via PJRT
 
 Run `tetris <subcommand> --help` for options.
@@ -61,13 +62,20 @@ fn run() -> Result<(), String> {
                 .opt("mode", "fp16", "fp16|int8")
                 .opt("ks", "16", "kneading stride")
                 .opt("seed", "0x7e7215", "random seed")
+                .flag("include-fc", "also simulate the declared FC heads (VGG fc6-8, GoogleNet loss3)")
                 .parse_env(2)?;
             let net = zoo::by_name(args.get("network")).map_err(|e| e.to_string())?;
             let mode: Mode = args.get("mode").parse()?;
             let cfg = AccelConfig { ks: args.get_usize("ks")?, mode, ..AccelConfig::default() };
             cfg.validate()?;
-            let rep = tetris::report::simulate_one(&net, args.get("accel"), &cfg, args.get_u64("seed")?)
-                .map_err(|e| e.to_string())?;
+            let rep = tetris::report::simulate_one(
+                &net,
+                args.get("accel"),
+                &cfg,
+                args.get_u64("seed")?,
+                args.get_bool("include-fc"),
+            )
+            .map_err(|e| e.to_string())?;
             println!("{rep}");
             Ok(())
         }
@@ -84,10 +92,11 @@ fn run() -> Result<(), String> {
                 .map_err(|e| e.to_string())
         }
         Some("serve") => {
-            let args = Args::new("tetris serve — coordinator with synthetic load")
+            let args = Args::new("tetris serve — engine with synthetic multi-model load")
                 .opt("requests", "64", "number of requests to issue")
                 .opt("max-batch", "8", "dynamic batcher upper bound")
-                .opt("network", "vgg16", "network name")
+                .opt("workers", "2", "worker threads in the engine pool")
+                .opt("network", "vgg16", "second registered model (scaled copy); tiny CNN always serves")
                 .opt("seed", "0x7e7215", "random seed")
                 .parse_env(2)?;
             let net = zoo::by_name(args.get("network")).map_err(|e| e.to_string())?;
@@ -95,6 +104,7 @@ fn run() -> Result<(), String> {
                 &net,
                 args.get_usize("requests")?,
                 args.get_usize("max-batch")?,
+                args.get_usize("workers")?,
                 args.get_u64("seed")?,
             )
             .map_err(|e| e.to_string())

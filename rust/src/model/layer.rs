@@ -8,7 +8,7 @@
 //! recorded `in_hw` is the spatial size the declared schedule delivers
 //! to it, which the plan compiler cross-checks at lowering time.
 
-use super::topology::TopoOp;
+use super::topology::{FcSpec, TopoOp};
 
 /// One convolution layer's shape parameters.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -86,12 +86,52 @@ impl Network {
         Network { name: name.into(), layers, schedule }
     }
 
+    /// Conv MACs only — the paper's accounting ("convolutions take
+    /// nearly 98% of the computations"). Declared FC heads are summed
+    /// separately by [`Network::fc_macs`].
     pub fn total_macs(&self) -> u64 {
         self.layers.iter().map(ConvLayer::macs).sum()
     }
 
     pub fn total_weights(&self) -> u64 {
         self.layers.iter().map(ConvLayer::weight_count).sum()
+    }
+
+    /// Declared FC classifier layers, schedule order (empty for
+    /// conv-only schedules).
+    pub fn fc_specs(&self) -> Vec<&FcSpec> {
+        self.schedule
+            .iter()
+            .filter_map(|op| match op {
+                TopoOp::Fc(spec) => Some(spec),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Multiply-accumulates of the declared FC head (one image).
+    pub fn fc_macs(&self) -> u64 {
+        self.fc_specs().iter().map(|s| s.macs()).sum()
+    }
+
+    /// Each declared FC layer as an equivalent 1×1 conv over a 1×1
+    /// map (`in_c = in_features`, `out_c = out_features`) — exactly
+    /// `in·out` MACs, so the cycle simulators can account for FC
+    /// heads with the machinery they already have
+    /// (`report::simulate_one` with `include_fc`).
+    pub fn fc_as_conv_layers(&self) -> Vec<ConvLayer> {
+        self.fc_specs()
+            .iter()
+            .map(|s| ConvLayer {
+                name: s.name.clone(),
+                in_c: s.in_features,
+                out_c: s.out_features,
+                k: 1,
+                stride: 1,
+                pad: 0,
+                in_hw: 1,
+            })
+            .collect()
     }
 
     pub fn layer(&self, name: &str) -> Option<&ConvLayer> {
@@ -136,21 +176,25 @@ impl Network {
             })
             .unwrap_or(0);
         let in_c = (self.layers.get(entry).map_or(1, |l| l.in_c) / channel_div).max(1);
-        propagate(&self.schedule, &mut layers, in_c, in_hw, &self.name);
+        let mut schedule = self.schedule.clone();
+        propagate(&mut schedule, &mut layers, in_c, in_hw, &self.name);
         Network {
             name: format!("{}_div{channel_div}_hw{in_hw}", self.name),
             layers,
-            schedule: self.schedule.clone(),
+            schedule,
         }
     }
 }
 
 /// Walk `ops` assigning each conv layer the input shape the schedule
 /// delivers to it, starting from `c` channels at `hw`×`hw`; returns
-/// the schedule's output shape. Panics (test/bench helper semantics)
-/// on windows that don't fit.
+/// the schedule's output shape. Declared `Fc` entries have their
+/// `in_features` rewritten to the (flattened) shape the scaled trunk
+/// delivers, so scaled copies always re-validate at lowering;
+/// `out_features` is a class count and stays unscaled. Panics
+/// (test/bench helper semantics) on windows that don't fit.
 fn propagate(
-    ops: &[TopoOp],
+    ops: &mut [TopoOp],
     layers: &mut [ConvLayer],
     mut c: usize,
     mut hw: usize,
@@ -181,7 +225,7 @@ fn propagate(
             TopoOp::Branch(arms) => {
                 let mut out_c = 0usize;
                 let mut out_hw: Option<usize> = None;
-                for arm in arms {
+                for arm in arms.iter_mut() {
                     let (ac, ahw) = propagate(arm, layers, c, hw, net);
                     out_c += ac;
                     match out_hw {
@@ -195,7 +239,15 @@ fn propagate(
                 c = out_c;
                 hw = out_hw.expect("branch has at least one arm");
             }
-            TopoOp::GlobalAvgPool | TopoOp::Fc => hw = 1,
+            TopoOp::GlobalAvgPool => hw = 1,
+            TopoOp::Fc(spec) => {
+                // Flatten semantics: an FC after the trunk consumes
+                // C·H·W features (H = W = 1 after a GlobalAvgPool or
+                // a previous Fc).
+                spec.in_features = c * hw * hw;
+                c = spec.out_features;
+                hw = 1;
+            }
         }
     }
     (c, hw)
@@ -296,6 +348,39 @@ mod tests {
         assert_eq!(l.macs(), l.lane_count() * l.lane_len() as u64);
         // known value: 64*3*3*3*224*224 = 86,704,128
         assert_eq!(l.macs(), 86_704_128);
+    }
+
+    #[test]
+    fn fc_specs_account_macs_and_scale() {
+        // conv (16→32 at 32², pooled to 16²) → flatten fc → class fc.
+        let net = Network::with_schedule(
+            "with_head",
+            vec![ConvLayer { name: "a".into(), in_c: 16, out_c: 32, k: 3, stride: 1, pad: 1, in_hw: 32 }],
+            vec![
+                TopoOp::Conv(0),
+                TopoOp::Pool(PoolSpec::max(2, 2, 0)),
+                TopoOp::Fc(FcSpec::new("fc6", 32 * 16 * 16, 100)),
+                TopoOp::Fc(FcSpec::new("fc7", 100, 10)),
+            ],
+        );
+        assert_eq!(net.fc_specs().len(), 2);
+        assert_eq!(net.fc_macs(), (32 * 16 * 16 * 100 + 100 * 10) as u64);
+        // Conv accounting stays conv-only.
+        assert_eq!(net.total_macs(), net.layers[0].macs());
+        // The 1×1-conv equivalents carry exactly the FC MACs.
+        let eq = net.fc_as_conv_layers();
+        assert_eq!(eq.len(), 2);
+        assert_eq!(eq.iter().map(ConvLayer::macs).sum::<u64>(), net.fc_macs());
+        assert!(eq.iter().all(|l| l.k == 1 && l.in_hw == 1 && l.out_hw() == 1));
+        // Scaling rewrites in_features to what the scaled trunk
+        // delivers (out_c 32/4 = 8, pooled 8² map → 8·64) and chains
+        // through the head, leaving class counts alone.
+        let s = net.scaled(4, 16);
+        let specs = s.fc_specs();
+        assert_eq!(specs[0].in_features, 8 * 8 * 8);
+        assert_eq!(specs[0].out_features, 100);
+        assert_eq!(specs[1].in_features, 100);
+        assert_eq!(specs[1].out_features, 10);
     }
 
     #[test]

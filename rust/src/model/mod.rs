@@ -14,4 +14,4 @@ pub mod zoo;
 pub use io::{read_weight_file, write_weight_file, LoadedLayer, LoadedWeights};
 pub use layer::{ConvLayer, Network};
 pub use tensor::Tensor;
-pub use topology::{PoolKind, PoolSpec, TopoOp};
+pub use topology::{FcSpec, PoolKind, PoolSpec, TopoOp};

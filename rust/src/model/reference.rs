@@ -14,9 +14,12 @@
 //!
 //! Conv-only scope: every conv fuses ReLU + requantization (matching
 //! the lowered `Conv → ReluRequant` pair), pools follow the Caffe
-//! ceil-mode geometry, and a schedule-declared `Fc` panics — weight
-//! files with classifier heads are exercised through the tiny-CNN
-//! legacy reference (`runtime::quantized::forward_scalar`) instead.
+//! ceil-mode geometry, and schedule-declared `Fc` entries are treated
+//! as declaration-only accounting topology (skipped, like the plan
+//! compiler does for heads without weights — a weighted head panics).
+//! Weight files with classifier heads are exercised through the
+//! tiny-CNN legacy reference (`runtime::quantized::forward_scalar`)
+//! instead.
 
 use crate::quant::requantize;
 
@@ -186,7 +189,17 @@ fn ref_ops(ops: &[TopoOp], net: &Network, w: &LoadedWeights, mut h: Tensor<i32>)
                 ref_concat(&parts)
             }
             TopoOp::GlobalAvgPool => ref_gap(&h),
-            TopoOp::Fc => panic!("conv-only reference has no Fc"),
+            TopoOp::Fc(spec) => {
+                // Declaration-only heads (no weights) are accounting
+                // topology: the reference result is the conv trunk,
+                // mirroring the plan compiler's lowering.
+                assert!(
+                    w.layer(&spec.name).is_none(),
+                    "conv-only reference cannot execute fc `{}`",
+                    spec.name
+                );
+                h
+            }
         };
     }
     h

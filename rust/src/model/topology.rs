@@ -16,6 +16,11 @@
 //! * [`TopoOp::GlobalAvgPool`] / [`TopoOp::Fc`] — the classifier head
 //!   (NiN ends in a global average pool with no FC; chains whose weight
 //!   file carries an `fc` layer get the head appended at lowering).
+//!   `Fc` carries an [`FcSpec`] naming the weight layer and its
+//!   reduction shape, so the published FC heads (VGG fc6–8,
+//!   GoogleNet's loss3/classifier) are declared topology the MAC
+//!   accounting and simulators can see even though only the single
+//!   `fc` head is executable.
 //!
 //! The IR is *declared* topology only — validation (shape chaining,
 //! weight availability, one use per layer) happens when
@@ -93,6 +98,46 @@ impl PoolSpec {
     }
 }
 
+/// One declared fully-connected classifier layer: name + reduction
+/// shape. The zoo declares the published FC heads (VGG's fc6–fc8,
+/// GoogleNet's loss3/classifier) so MAC/weight accounting and the
+/// simulators can cover them (`Network::fc_macs`,
+/// `tetris simulate --include-fc`); lowering validates that
+/// `in_features` matches what the trunk delivers (flattened
+/// `C·H·W`, or `C` after a `GlobalAvgPool`/previous `Fc`).
+///
+/// Execution supports exactly one head: a weight layer named `fc`
+/// following a `GlobalAvgPool` (the tiny-CNN / NiN-with-head shape).
+/// Declared heads without a matching weight layer are
+/// declaration-only — the executor stops at the conv trunk, exactly
+/// as before they were declared.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FcSpec {
+    /// Weight-layer name, e.g. `fc6` or `loss3/classifier`.
+    pub name: String,
+    /// Input features (the flattened trunk: `C·H·W`).
+    pub in_features: usize,
+    /// Output features (next FC's input, or the class count).
+    pub out_features: usize,
+}
+
+impl FcSpec {
+    pub fn new(name: impl Into<String>, in_features: usize, out_features: usize) -> Self {
+        Self { name: name.into(), in_features, out_features }
+    }
+
+    /// Weights in this layer (= MACs per image: every weight is used
+    /// exactly once).
+    pub fn weight_count(&self) -> u64 {
+        (self.in_features * self.out_features) as u64
+    }
+
+    /// Multiply-accumulates for one input image.
+    pub fn macs(&self) -> u64 {
+        self.weight_count()
+    }
+}
+
 /// One node of a declared network schedule. See the module docs.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum TopoOp {
@@ -106,9 +151,10 @@ pub enum TopoOp {
     /// Global average pool: i64 sum then floor division, collapsing
     /// (N, C, H, W) → (N, C).
     GlobalAvgPool,
-    /// Fully connected classifier head over an `fc` weight layer.
-    /// Only valid after `GlobalAvgPool`.
-    Fc,
+    /// Fully connected classifier layer (see [`FcSpec`]). Only valid
+    /// at the schedule tail: after the last conv/pool stage, with
+    /// nothing but further `Fc` entries following.
+    Fc(FcSpec),
 }
 
 #[cfg(test)]
@@ -145,6 +191,14 @@ mod tests {
         for hw in [2usize, 7, 14, 28] {
             assert_eq!(same.out_hw(hw).unwrap(), hw);
         }
+    }
+
+    #[test]
+    fn fc_spec_counts_weights_as_macs() {
+        let fc6 = FcSpec::new("fc6", 512 * 7 * 7, 4096);
+        assert_eq!(fc6.weight_count(), 25_088 * 4096);
+        assert_eq!(fc6.macs(), fc6.weight_count());
+        assert_eq!(fc6.name, "fc6");
     }
 
     #[test]

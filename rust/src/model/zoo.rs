@@ -9,7 +9,7 @@
 //! pools (ceil mode) with its nine four-arm inception modules.
 
 use super::layer::{ConvLayer, Network};
-use super::topology::{PoolSpec, TopoOp};
+use super::topology::{FcSpec, PoolSpec, TopoOp};
 
 fn conv(name: &str, in_c: usize, out_c: usize, k: usize, stride: usize, pad: usize, in_hw: usize) -> ConvLayer {
     ConvLayer { name: name.to_string(), in_c, out_c, k, stride, pad, in_hw }
@@ -46,7 +46,11 @@ pub fn alexnet() -> Network {
 }
 
 /// The VGG conv stack shared by VGG-16 and VGG-19: `n` convs per block,
-/// a 2×2 stride-2 max pool after every block.
+/// a 2×2 stride-2 max pool after every block, then the published
+/// classifier head — fc6/fc7/fc8 over the flattened 512×7×7 block-5
+/// output. The head is declared topology ([`FcSpec`]) for MAC/weight
+/// accounting and shape validation; its weights only enter via weight
+/// files, so the executor serves the conv trunk as before.
 fn vgg(name: &str, blocks: &[(usize, usize, usize, usize, usize)]) -> Network {
     let mut layers = Vec::new();
     let mut schedule = Vec::new();
@@ -58,6 +62,9 @@ fn vgg(name: &str, blocks: &[(usize, usize, usize, usize, usize)]) -> Network {
         }
         schedule.push(TopoOp::Pool(PoolSpec::max(2, 2, 0)));
     }
+    schedule.push(TopoOp::Fc(FcSpec::new("fc6", 512 * 7 * 7, 4096)));
+    schedule.push(TopoOp::Fc(FcSpec::new("fc7", 4096, 4096)));
+    schedule.push(TopoOp::Fc(FcSpec::new("fc8", 4096, 1000)));
     Network::with_schedule(name, layers, schedule)
 }
 
@@ -208,6 +215,9 @@ pub fn googlenet() -> Network {
         }
     }
     schedule.push(TopoOp::GlobalAvgPool); // Caffe pool5: 7×7 global ave
+    // Declared classifier head (1024 pooled channels → 1000 classes);
+    // accounting topology — see the `vgg` head note.
+    schedule.push(TopoOp::Fc(FcSpec::new("loss3/classifier", 1024, 1000)));
     Network::with_schedule("googlenet", layers, schedule)
 }
 
@@ -296,6 +306,37 @@ mod tests {
         // AlexNet conv MACs ≈ 0.66 G (single-tower).
         let g = alexnet().total_macs() as f64 / 1e9;
         assert!((0.6..1.2).contains(&g), "AlexNet GMACs = {g}");
+    }
+
+    #[test]
+    fn declared_fc_heads_match_published_shapes() {
+        // VGG fc6–fc8: 25088→4096→4096→1000 ⇒ ≈123.6 M MACs.
+        for net in [vgg16(), vgg19()] {
+            let specs = net.fc_specs();
+            assert_eq!(specs.len(), 3, "{}", net.name);
+            assert_eq!(specs[0].in_features, 512 * 7 * 7);
+            assert_eq!(specs[2].out_features, 1000);
+            assert_eq!(net.fc_macs(), 123_633_664, "{}", net.name);
+        }
+        // GoogleNet loss3/classifier: 1024→1000.
+        let g = googlenet();
+        assert_eq!(g.fc_specs().len(), 1);
+        assert_eq!(g.fc_macs(), 1_024_000);
+        // Conv-only nets declare no head; conv accounting unchanged.
+        assert_eq!(nin().fc_macs(), 0);
+        assert_eq!(alexnet().fc_macs(), 0);
+        assert_eq!(tiny_cnn().fc_macs(), 0);
+    }
+
+    #[test]
+    fn scaled_zoo_heads_revalidate() {
+        // `scaled` rewrites each head's in_features to the scaled
+        // trunk's flattened output, so lowering keeps validating.
+        let s = vgg16().scaled(16, 32);
+        let specs = s.fc_specs();
+        // 512/16 = 32 channels at 1×1 after five pools from 32².
+        assert_eq!(specs[0].in_features, 32);
+        assert_eq!(specs[1].in_features, specs[0].out_features);
     }
 
     #[test]

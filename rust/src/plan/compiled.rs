@@ -130,18 +130,22 @@ impl CompiledNetwork {
                 lanes: knead_filter_lanes(wl, lane_len, ks, mode),
             });
         }
-        let fc = match weights.layer("fc") {
-            Some(fl) => {
-                let classes = fl.shape[0];
-                let feat_dim = fl.shape[1] * fl.shape[2] * fl.shape[3];
-                kneads_at_build += classes as u64;
-                Some(CompiledFc {
-                    classes,
-                    feat_dim,
-                    lanes: knead_filter_lanes(fl, feat_dim, ks, mode),
-                })
-            }
-            None => None,
+        // Compile the classifier head only when the lowered graph
+        // executes one — a zoo net with a declaration-only FC stack
+        // must not knead (or hold resident) lanes it will never
+        // stream.
+        let fc = if ops.iter().any(|op| matches!(op, PlanOp::Fc)) {
+            let fl = weights.layer("fc").expect("derive_graph bound the fc head");
+            let classes = fl.shape[0];
+            let feat_dim = fl.shape[1] * fl.shape[2] * fl.shape[3];
+            kneads_at_build += classes as u64;
+            Some(CompiledFc {
+                classes,
+                feat_dim,
+                lanes: knead_filter_lanes(fl, feat_dim, ks, mode),
+            })
+        } else {
+            None
         };
         let schedule = segment_plan(&ops, &net.layers);
         let declared_in = ops

@@ -211,7 +211,7 @@ impl Lowering<'_> {
     ) -> crate::Result<(Vec<PlanOp>, ShapeState)> {
         let mut out = Vec::with_capacity(3 * ops.len());
         for op in ops {
-            if self.saw_fc || (self.saw_gap && !matches!(op, TopoOp::Fc)) {
+            if (self.saw_fc || self.saw_gap) && !matches!(op, TopoOp::Fc(_)) {
                 return Err(crate::Error::Config(format!(
                     "{}: schedule continues after its classifier head",
                     self.net.name
@@ -341,36 +341,90 @@ impl Lowering<'_> {
                             self.net.name
                         )));
                     }
-                    state.ok_or_else(|| {
+                    let (c, _) = state.ok_or_else(|| {
                         crate::Error::Config(format!(
                             "{}: GlobalAvgPool before any conv layer",
                             self.net.name
                         ))
                     })?;
                     out.push(PlanOp::GlobalAvgPool);
+                    // Spatial extent collapses: downstream Fc entries
+                    // consume plain C features.
+                    state = Some((c, 1));
                     self.saw_gap = true;
                 }
-                TopoOp::Fc => {
+                TopoOp::Fc(spec) => {
                     if depth > 0 {
                         return Err(crate::Error::Config(format!(
                             "{}: Fc inside a branch arm",
                             self.net.name
                         )));
                     }
-                    if !self.saw_gap {
-                        return Err(crate::Error::Config(format!(
-                            "{}: a declared Fc must follow a GlobalAvgPool",
-                            self.net.name
-                        )));
-                    }
-                    let fl = self.weights.layer("fc").ok_or_else(|| {
-                        crate::Error::Artifact(format!(
-                            "{}: no weights for layer `fc`",
+                    let (c, hw) = state.ok_or_else(|| {
+                        crate::Error::Config(format!(
+                            "{}: schedule must open with a conv layer, not an fc head",
                             self.net.name
                         ))
                     })?;
-                    check_fc_fits(self.net, fl, state)?;
-                    out.push(PlanOp::Fc);
+                    // Flatten semantics: the head consumes C·H·W
+                    // (H = W = 1 after GlobalAvgPool / a previous Fc).
+                    let delivered = c * hw * hw;
+                    if spec.in_features != delivered {
+                        return Err(crate::Error::Shape(format!(
+                            "{}: fc `{}` declares {} input features but the \
+                             schedule delivers {delivered}",
+                            self.net.name, spec.name, spec.in_features
+                        )));
+                    }
+                    if spec.out_features == 0 {
+                        return Err(crate::Error::Config(format!(
+                            "{}: fc `{}` declares zero output features",
+                            self.net.name, spec.name
+                        )));
+                    }
+                    match self.weights.layer(&spec.name) {
+                        // Declaration-only head (the zoo's published
+                        // fc6–8 / loss3 entries): validated shape
+                        // chain for accounting, nothing to execute —
+                        // the plan serves the conv trunk exactly as
+                        // before the head was declared.
+                        None => {}
+                        Some(fl) => {
+                            // Executable head: the single `fc` layer
+                            // over a GlobalAvgPool-collapsed trunk is
+                            // what the executor supports.
+                            if spec.name != "fc" {
+                                return Err(crate::Error::Config(format!(
+                                    "{}: fc `{}` has weights, but only the single \
+                                     `fc` head is executable — named FC stacks are \
+                                     declaration-only topology",
+                                    self.net.name, spec.name
+                                )));
+                            }
+                            if !self.saw_gap {
+                                return Err(crate::Error::Config(format!(
+                                    "{}: a declared executable Fc must follow a \
+                                     GlobalAvgPool",
+                                    self.net.name
+                                )));
+                            }
+                            let want_out = fl.shape[0];
+                            let want_in = fl.shape[1] * fl.shape[2] * fl.shape[3];
+                            if (want_out, want_in) != (spec.out_features, spec.in_features)
+                            {
+                                return Err(crate::Error::Shape(format!(
+                                    "{}: fc weight shape {:?} != declared {}→{}",
+                                    self.net.name,
+                                    fl.shape,
+                                    spec.in_features,
+                                    spec.out_features
+                                )));
+                            }
+                            check_fc_fits(self.net, fl, state)?;
+                            out.push(PlanOp::Fc);
+                        }
+                    }
+                    state = Some((spec.out_features, 1));
                     self.saw_fc = true;
                 }
             }
@@ -388,10 +442,17 @@ impl Lowering<'_> {
 ///   must equal what the preceding ops deliver (pool output sizes use
 ///   [`PoolSpec::out_hw`]'s ceil-mode arithmetic), and branch arms must
 ///   agree on their output spatial size;
-/// * a weight layer named `fc` (absent from the zoo topology, which is
-///   conv-only) appends `GlobalAvgPool → Fc` as the classifier head —
-///   reusing a schedule-declared trailing `GlobalAvgPool` (NiN) rather
-///   than pooling twice.
+/// * declared [`TopoOp::Fc`] entries (VGG's fc6–8, GoogleNet's
+///   loss3/classifier) are shape-validated — `in_features` must equal
+///   the flattened `C·H·W` the trunk delivers, chained through the FC
+///   stack — but lower to an executable [`PlanOp::Fc`] only when the
+///   weight set carries the single supported `fc` head; otherwise they
+///   are declaration-only accounting topology and the plan serves the
+///   conv trunk;
+/// * a weight layer named `fc` with **no** declared head appends
+///   `GlobalAvgPool → Fc` as the classifier head — reusing a
+///   schedule-declared trailing `GlobalAvgPool` (NiN) rather than
+///   pooling twice.
 pub fn derive_graph(net: &Network, weights: &LoadedWeights) -> crate::Result<Vec<PlanOp>> {
     if net.layers.is_empty() {
         return Err(crate::Error::Config(format!(
@@ -630,6 +691,78 @@ mod tests {
         match derive_graph(&net, &w) {
             Err(crate::Error::Shape(msg)) => assert!(msg.contains("pooled trunk"), "{msg}"),
             other => panic!("expected Shape error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn declared_fc_heads_validate_but_stay_declaration_only() {
+        // VGG-16's declared fc6–8 chain must validate against the
+        // trunk (512·7·7 → 4096 → 4096 → 1000) without weights for
+        // them, and must emit no executable op.
+        let net = zoo::vgg16();
+        let w = weights_for(&net, None);
+        let ops = derive_graph(&net, &w).unwrap();
+        assert!(!ops.iter().any(|o| matches!(o, PlanOp::Fc)));
+        // Tampering with a declared reduction dim is rejected.
+        let mut bad = zoo::vgg16();
+        for op in bad.schedule.iter_mut() {
+            if let TopoOp::Fc(spec) = op {
+                spec.in_features = 9999;
+                break;
+            }
+        }
+        match derive_graph(&bad, &w) {
+            Err(crate::Error::Shape(msg)) => {
+                assert!(msg.contains("schedule delivers"), "{msg}")
+            }
+            other => panic!("expected Shape error, got {other:?}"),
+        }
+        // A conv after the declared head is rejected.
+        let mut cont = zoo::vgg16();
+        cont.schedule.push(TopoOp::Conv(0));
+        match derive_graph(&cont, &w) {
+            Err(crate::Error::Config(msg)) => {
+                assert!(msg.contains("classifier head"), "{msg}")
+            }
+            other => panic!("expected Config error, got {other:?}"),
+        }
+        // GoogleNet: loss3/classifier rides after the declared GAP.
+        let g = zoo::googlenet();
+        let gw = weights_for(&g, None);
+        let gops = derive_graph(&g, &gw).unwrap();
+        assert_eq!(gops.last(), Some(&PlanOp::GlobalAvgPool));
+    }
+
+    #[test]
+    fn declared_executable_fc_head_lowers() {
+        // A tiny CNN that *declares* its head: GAP + Fc over the `fc`
+        // weight layer lowers to an executable PlanOp::Fc.
+        use crate::model::topology::FcSpec;
+        let mut net = zoo::tiny_cnn();
+        net.schedule.push(TopoOp::GlobalAvgPool);
+        net.schedule.push(TopoOp::Fc(FcSpec::new("fc", 16, 4)));
+        let w = weights_for(&net, Some(4));
+        let ops = derive_graph(&net, &w).unwrap();
+        assert_eq!(ops.last(), Some(&PlanOp::Fc));
+        let gaps = ops.iter().filter(|o| **o == PlanOp::GlobalAvgPool).count();
+        assert_eq!(gaps, 1, "declared GAP must not be doubled");
+        // A named (non-`fc`) head with weights present is refused —
+        // named FC stacks are declaration-only.
+        let mut named = zoo::tiny_cnn();
+        named.schedule.push(TopoOp::GlobalAvgPool);
+        named.schedule.push(TopoOp::Fc(FcSpec::new("fc6", 16, 4)));
+        let mut nw = weights_for(&named, None);
+        nw.layers.push(crate::model::LoadedLayer {
+            name: "fc6".into(),
+            shape: [4, 16, 1, 1],
+            frac_bits: 8,
+            weights: vec![1; 64],
+        });
+        match derive_graph(&named, &nw) {
+            Err(crate::Error::Config(msg)) => {
+                assert!(msg.contains("declaration-only"), "{msg}")
+            }
+            other => panic!("expected Config error, got {other:?}"),
         }
     }
 

@@ -48,14 +48,29 @@ pub fn run(which: &str, seed: u64, csv_dir: Option<&std::path::Path>) -> crate::
 }
 
 /// One-off simulation for the `simulate` subcommand.
+///
+/// With `include_fc`, the network's declared FC heads (VGG fc6–8,
+/// GoogleNet's loss3/classifier — `Network::fc_as_conv_layers`) are
+/// simulated as 1×1-conv-equivalent layers after the conv trunk, so
+/// cycle/MAC totals cover the whole published model; without it the
+/// accounting stays conv-only, matching the paper's evaluation.
 pub fn simulate_one(
     net: &Network,
     accel: &str,
     cfg: &AccelConfig,
     seed: u64,
+    include_fc: bool,
 ) -> crate::Result<String> {
     let calib = CalibConfig::default();
     let a = accel_by_name(accel)?;
+    let sim_net = if include_fc {
+        let mut layers = net.layers.clone();
+        layers.extend(net.fc_as_conv_layers());
+        Network { name: net.name.clone(), layers, schedule: net.schedule.clone() }
+    } else {
+        net.clone()
+    };
+    let net = &sim_net;
     let sim = simulate_network(a.as_ref(), net, cfg, &calib, seed)?;
     let energy = crate::energy::network_energy(&sim, &calib);
     let mut out = String::new();

@@ -55,11 +55,9 @@ pub struct BenchConfig {
 impl Default for BenchConfig {
     fn default() -> Self {
         // Fast enough that the full paper-figure suite completes in
-        // minutes; override with TETRIS_BENCH_SECONDS for longer runs.
-        let secs: f64 = std::env::var("TETRIS_BENCH_SECONDS")
-            .ok()
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(0.6);
+        // minutes; override with TETRIS_BENCH_SECONDS (resolved via
+        // `engine::env`) for longer runs.
+        let secs: f64 = crate::engine::env::bench_seconds();
         Self {
             warmup: Duration::from_secs_f64(secs * 0.33),
             measure: Duration::from_secs_f64(secs),
@@ -210,7 +208,7 @@ impl Harness {
                 return Some(p.into());
             }
         }
-        std::env::var("TETRIS_BENCH_JSON").ok().map(Into::into)
+        crate::engine::env::bench_json()
     }
 
     /// Render the human report and honor the `--json` output mode —

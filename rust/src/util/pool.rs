@@ -11,15 +11,15 @@
 //! (image, tile) fan-outs never oversubscribe the host (DESIGN.md
 //! §Tiled fused execution).
 
-/// Number of worker threads to use: `TETRIS_THREADS` env var or the
-/// available parallelism, capped at 16.
+/// Number of worker threads to use: the `TETRIS_THREADS` fallback
+/// (resolved through [`engine::env`](crate::engine::env), the one
+/// place environment is read) or the available parallelism, capped
+/// at 16.
 pub fn worker_count() -> usize {
-    if let Ok(v) = std::env::var("TETRIS_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
-        }
+    match crate::engine::env::threads() {
+        Some(n) => n,
+        None => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16),
     }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
 }
 
 /// Parallel map over `items`, preserving order. `f` must be `Sync`; item

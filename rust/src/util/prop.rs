@@ -18,10 +18,7 @@ pub struct PropConfig {
 
 impl Default for PropConfig {
     fn default() -> Self {
-        let cases = std::env::var("TETRIS_PROP_CASES")
-            .ok()
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(256);
+        let cases = crate::engine::env::prop_cases();
         Self { cases, seed: 0xC0FF_EE00 }
     }
 }

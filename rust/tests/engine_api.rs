@@ -1,0 +1,445 @@
+//! ISSUE 4 acceptance: the unified `engine` façade is
+//! behavior-preserving and multi-model.
+//!
+//! Pins: (a) engine-served logits are bit-exact vs the legacy
+//! `Server::start_shared` path and vs direct plan execution across the
+//! (scaled) zoo, (b) one knead per lane per registered model under W
+//! workers, (c) two models served concurrently from one engine without
+//! cross-talk, plus builder/env-fallback behavior.
+//!
+//! All tests serialize on `SERIAL`: the knead counter
+//! (`kneading::knead_call_count`) is process-wide, and the env-fallback
+//! test mutates process environment (glibc `setenv` racing `getenv`
+//! from concurrent tests is undefined behavior).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use tetris::config::Mode;
+use tetris::coordinator::{BatchPolicy, SacBackend, Server, ServerConfig};
+use tetris::coordinator::{InferRequest, InferResponse};
+use tetris::engine::{BackendKind, Engine};
+use tetris::kneading::knead_call_count;
+use tetris::model::weights::{synthetic_loaded, DensityCalibration};
+use tetris::model::{zoo, Network, Tensor};
+use tetris::plan::CompiledNetwork;
+use tetris::util::rng::Rng;
+
+/// Serializes every test here (see module docs).
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn tiny_image(rng: &mut Rng) -> Tensor<i32> {
+    image_for(rng, 1, 16)
+}
+
+fn image_for(rng: &mut Rng, c: usize, hw: usize) -> Tensor<i32> {
+    let mut t = Tensor::zeros(&[c, hw, hw]);
+    for v in t.data_mut() {
+        *v = rng.range_i64(-400, 400) as i32;
+    }
+    t
+}
+
+/// The scaled evaluation zoo (same scaling plan_topology pins I5 with).
+fn scaled_zoo() -> Vec<(Network, &'static str, usize)> {
+    vec![
+        (zoo::alexnet().scaled(16, 64), "alexnet", 64),
+        (zoo::googlenet().scaled(16, 64), "googlenet", 64),
+        (zoo::vgg16().scaled(16, 32), "vgg16", 32),
+        (zoo::vgg19().scaled(16, 32), "vgg19", 32),
+        (zoo::nin().scaled(16, 64), "nin", 64),
+    ]
+}
+
+/// (a) Engine logits ≡ legacy `Server::start_shared` logits on the
+/// tiny CNN, request for request.
+#[test]
+fn engine_matches_legacy_shared_server() {
+    let _serial = SERIAL.lock().unwrap();
+    let weights = SacBackend::synthetic_weights(33).unwrap();
+    let total = 17u64;
+
+    // Legacy path.
+    let server = Server::start_shared(
+        ServerConfig {
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            workers: 2,
+        },
+        SacBackend::new(weights.clone()).unwrap(),
+    )
+    .unwrap();
+    let mut rng = Rng::new(12);
+    let images: Vec<Tensor<i32>> = (0..total).map(|_| tiny_image(&mut rng)).collect();
+    for (id, img) in images.iter().enumerate() {
+        server.submit(InferRequest::new(id as u64, img.clone())).unwrap();
+    }
+    let mut legacy: HashMap<u64, InferResponse> = HashMap::new();
+    for _ in 0..total {
+        let r = server.recv().unwrap();
+        legacy.insert(r.id, r);
+    }
+    server.shutdown();
+
+    // Engine path, same weights and images.
+    let engine = Engine::builder()
+        .workers(2)
+        .max_batch(4)
+        .max_wait(Duration::from_millis(1))
+        .register("tiny", zoo::tiny_cnn(), weights)
+        .build()
+        .unwrap();
+    let session = engine.session();
+    let responses = session.infer_batch("tiny", &images).unwrap();
+    for (i, resp) in responses.iter().enumerate() {
+        let want = &legacy[&(i as u64)];
+        assert_eq!(resp.logits, want.logits, "request {i} diverged from legacy path");
+        assert_eq!(resp.argmax, want.argmax);
+    }
+    let metrics = engine.shutdown();
+    assert_eq!(metrics.requests_done, total);
+}
+
+/// (a) Across the whole scaled zoo: engine-served logits are bit-exact
+/// vs the old `Server::start_shared` path over the same plan AND vs an
+/// independently compiled plan executed directly (I5 carries the chain
+/// back to the scalar reference).
+#[test]
+fn engine_serves_zoo_bit_exact() {
+    let _serial = SERIAL.lock().unwrap();
+    for (net, profile, hw) in scaled_zoo() {
+        let w = synthetic_loaded(&net, Mode::Fp16, 9, profile, DensityCalibration::Fig2, 21)
+            .unwrap();
+        let engine = Engine::builder()
+            .workers(2)
+            .max_batch(2)
+            .max_wait(Duration::from_micros(200))
+            .register(net.name.clone(), net.clone(), w.clone())
+            .build()
+            .unwrap();
+        let session = engine.session();
+        let mut rng = Rng::new(77);
+        let images: Vec<Tensor<i32>> =
+            (0..2).map(|_| image_for(&mut rng, net.layers[0].in_c, hw)).collect();
+        let responses = session.infer_batch(&net.name, &images).unwrap();
+        engine.shutdown();
+
+        // Old path: Server::start_shared over the same compiled plan.
+        let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+        let server = Server::start_shared(
+            ServerConfig {
+                policy: BatchPolicy { max_batch: 2, max_wait: Duration::from_micros(200) },
+                workers: 2,
+            },
+            SacBackend::from_parts(std::sync::Arc::new(plan.clone()), 1),
+        )
+        .unwrap();
+        for (id, img) in images.iter().enumerate() {
+            server.submit(InferRequest::new(id as u64, img.clone())).unwrap();
+        }
+        let mut legacy: HashMap<u64, InferResponse> = HashMap::new();
+        for _ in 0..images.len() {
+            let r = server.recv().unwrap();
+            legacy.insert(r.id, r);
+        }
+        server.shutdown();
+
+        for (i, img) in images.iter().enumerate() {
+            // Engine ≡ legacy server path.
+            assert_eq!(
+                responses[i].logits,
+                legacy[&(i as u64)].logits,
+                "{}: engine output diverged from the legacy Server path",
+                net.name
+            );
+            // Engine ≡ direct plan execution.
+            let mut x = img.clone();
+            let s = x.shape().to_vec();
+            x.reshape(&[1, s[0], s[1], s[2]]).unwrap();
+            let want = plan.execute(&x).unwrap();
+            assert_eq!(
+                responses[i].logits[..],
+                want.data()[..],
+                "{}: engine output diverged from direct plan execution",
+                net.name
+            );
+        }
+    }
+}
+
+/// (b) One knead per lane per registered model, independent of the
+/// worker count: building an engine with two models and W workers
+/// costs exactly the two solo compiles' worth of knead calls, and
+/// serving adds zero more.
+#[test]
+fn one_knead_per_lane_per_model_under_workers() {
+    let _serial = SERIAL.lock().unwrap();
+    let tiny_w = SacBackend::synthetic_weights(5).unwrap();
+    let nin = zoo::nin().scaled(32, 64);
+    let nin_w =
+        synthetic_loaded(&nin, Mode::Fp16, 9, "nin", DensityCalibration::Fig2, 6).unwrap();
+
+    // Measure each model's solo registration cost in knead calls
+    // (plan compile + the cycle simulation's sampled-lane kneading),
+    // via single-model engines with ONE worker.
+    let solo_cost = |name: &str, net: &Network, w| {
+        let before = knead_call_count();
+        let engine =
+            Engine::builder().workers(1).register(name, net.clone(), w).build().unwrap();
+        engine.shutdown();
+        knead_call_count() - before
+    };
+    let tiny_cost = solo_cost("tiny", &zoo::tiny_cnn(), tiny_w.clone());
+    let nin_cost = solo_cost("nin", &nin, nin_w.clone());
+    assert!(tiny_cost > 0 && nin_cost > 0, "registration must knead");
+
+    // Engine build with 4 workers: exactly one compile per model.
+    let workers = 4;
+    let before_build = knead_call_count();
+    let engine = Engine::builder()
+        .workers(workers)
+        .max_batch(3)
+        .max_wait(Duration::from_micros(200))
+        .register("tiny", zoo::tiny_cnn(), tiny_w)
+        .register("nin", nin.clone(), nin_w)
+        .build()
+        .unwrap();
+    let after_build = knead_call_count();
+    assert_eq!(
+        after_build - before_build,
+        tiny_cost + nin_cost,
+        "{workers} workers must share one compile per registered model"
+    );
+
+    // Serving both models kneads nothing further.
+    let session = engine.session();
+    let mut rng = Rng::new(3);
+    let mut tickets = Vec::new();
+    for i in 0..4 * workers {
+        tickets.push(if i % 2 == 0 {
+            session.submit("tiny", tiny_image(&mut rng)).unwrap()
+        } else {
+            session.submit("nin", image_for(&mut rng, nin.layers[0].in_c, 64)).unwrap()
+        });
+    }
+    for t in &tickets {
+        session.wait(t).unwrap();
+    }
+    let metrics = engine.shutdown();
+    assert_eq!(metrics.requests_done, 4 * workers as u64);
+    assert_eq!(
+        knead_call_count(),
+        after_build,
+        "serving path re-kneaded after engine build"
+    );
+}
+
+/// (c) Two models served concurrently from ONE engine produce exactly
+/// the logits each produces when served alone — no cross-talk through
+/// the shared pool, batcher, or response routing.
+#[test]
+fn two_models_interleaved_without_crosstalk() {
+    let _serial = SERIAL.lock().unwrap();
+    let tiny_w = SacBackend::synthetic_weights(8).unwrap();
+    let inception = zoo::inception_module("3a").unwrap().scaled(8, 8);
+    let inc_w =
+        synthetic_loaded(&inception, Mode::Fp16, 9, "googlenet", DensityCalibration::Fig2, 2)
+            .unwrap();
+
+    let mut rng = Rng::new(41);
+    let tiny_imgs: Vec<Tensor<i32>> = (0..6).map(|_| tiny_image(&mut rng)).collect();
+    let inc_imgs: Vec<Tensor<i32>> =
+        (0..6).map(|_| image_for(&mut rng, inception.layers[0].in_c, 8)).collect();
+
+    // Single-model baselines.
+    let solo = |name: &str, net: &Network, w, imgs: &[Tensor<i32>]| {
+        let engine = Engine::builder()
+            .workers(2)
+            .max_batch(4)
+            .max_wait(Duration::from_micros(200))
+            .register(name, net.clone(), w)
+            .build()
+            .unwrap();
+        let out: Vec<Vec<i32>> = engine
+            .session()
+            .infer_batch(name, imgs)
+            .unwrap()
+            .into_iter()
+            .map(|r| r.logits)
+            .collect();
+        engine.shutdown();
+        out
+    };
+    let tiny_solo = solo("tiny", &zoo::tiny_cnn(), tiny_w.clone(), &tiny_imgs);
+    let inc_solo = solo("inc", &inception, inc_w.clone(), &inc_imgs);
+
+    // One engine, both models, interleaved submissions.
+    let engine = Engine::builder()
+        .workers(3)
+        .max_batch(4)
+        .max_wait(Duration::from_micros(200))
+        .register("tiny", zoo::tiny_cnn(), tiny_w)
+        .register("inc", inception.clone(), inc_w)
+        .build()
+        .unwrap();
+    assert_eq!(engine.models().len(), 2);
+    let session = engine.session();
+    let mut tickets = Vec::new();
+    for i in 0..6 {
+        tickets.push(("tiny", i, session.submit("tiny", tiny_imgs[i].clone()).unwrap()));
+        tickets.push(("inc", i, session.submit("inc", inc_imgs[i].clone()).unwrap()));
+    }
+    for (model, i, ticket) in &tickets {
+        let resp = session.wait(ticket).unwrap();
+        let want = if *model == "tiny" { &tiny_solo[*i] } else { &inc_solo[*i] };
+        assert_eq!(
+            &resp.logits, want,
+            "{model} image {i}: multi-model serving changed the logits"
+        );
+    }
+    let metrics = engine.shutdown();
+    assert_eq!(metrics.requests_done, 12);
+    assert!(metrics.latency_percentiles().is_some());
+}
+
+/// Builder options override env fallbacks, and the memory budget
+/// drives each model's fused tile height exactly like
+/// `tile_rows_for_budget`.
+#[test]
+fn builder_options_resolve_budget_and_tiles() {
+    let _serial = SERIAL.lock().unwrap();
+    let w = SacBackend::synthetic_weights(13).unwrap();
+
+    // Explicit tile height wins over everything.
+    let engine = Engine::builder()
+        .workers(2)
+        .tile_rows(2)
+        .register("tiny", zoo::tiny_cnn(), w.clone())
+        .build()
+        .unwrap();
+    assert_eq!(engine.models()[0].plan().unwrap().tile_rows, 2);
+    engine.shutdown();
+
+    // Typed budget resolves to the same tile height the plan picks.
+    let budget_mb = 64u64;
+    let engine = Engine::builder()
+        .workers(2)
+        .mem_budget_mb(budget_mb)
+        .register("tiny", zoo::tiny_cnn(), w.clone())
+        .build()
+        .unwrap();
+    let plan = engine.models()[0].plan().unwrap().clone();
+    assert_eq!(
+        plan.tile_rows,
+        plan.tile_rows_for_budget(budget_mb * 1024 * 1024, engine.workers())
+    );
+    engine.shutdown();
+
+    // Env fallback: a typed option beats a (valid) env value; with no
+    // option, env::mem_budget_mb picks the env value up.
+    std::env::set_var("TETRIS_MEM_BUDGET_MB", "7");
+    assert_eq!(tetris::engine::env::mem_budget_mb(), 7);
+    std::env::set_var("TETRIS_MEM_BUDGET_MB", "not-a-number");
+    assert_eq!(
+        tetris::engine::env::mem_budget_mb(),
+        tetris::engine::env::DEFAULT_MEM_BUDGET_MB,
+        "unparsable env value must fall back to the documented default"
+    );
+    std::env::remove_var("TETRIS_MEM_BUDGET_MB");
+}
+
+/// Error surface: unknown models, wrong channel counts, empty
+/// registries, duplicate names — all typed errors, not hangs.
+#[test]
+fn engine_rejects_bad_configurations_and_submissions() {
+    let _serial = SERIAL.lock().unwrap();
+    // No models.
+    assert!(Engine::builder().build().is_err());
+    // Duplicate registration.
+    let w = SacBackend::synthetic_weights(1).unwrap();
+    assert!(Engine::builder()
+        .register("tiny", zoo::tiny_cnn(), w.clone())
+        .register("tiny", zoo::tiny_cnn(), w.clone())
+        .build()
+        .is_err());
+    // Zero max_batch.
+    assert!(Engine::builder()
+        .max_batch(0)
+        .register("tiny", zoo::tiny_cnn(), w.clone())
+        .build()
+        .is_err());
+
+    let engine = Engine::builder()
+        .workers(1)
+        .register("tiny", zoo::tiny_cnn(), w)
+        .build()
+        .unwrap();
+    let session = engine.session();
+    // Unknown model name.
+    assert!(session.submit("resnet50", Tensor::zeros(&[1, 16, 16])).is_err());
+    // Wrong channel count (engine validates instead of hanging).
+    assert!(session.submit("tiny", Tensor::zeros(&[3, 16, 16])).is_err());
+    // Wrong spatial size — a worker-side failure would silently drop
+    // the whole co-batched request set, so submit must reject it.
+    assert!(session.submit("tiny", Tensor::zeros(&[1, 20, 20])).is_err());
+    // Wrong rank.
+    assert!(session.submit("tiny", Tensor::zeros(&[16, 16])).is_err());
+    // Double redeem errors immediately instead of hanging forever.
+    let mut rng = Rng::new(2);
+    let ticket = session.submit("tiny", tiny_image(&mut rng)).unwrap();
+    session.wait(&ticket).unwrap();
+    assert!(session.wait(&ticket).is_err(), "double redeem must error");
+    assert!(session.poll(&ticket).is_err());
+    // Submissions after shutdown fail fast.
+    engine.shutdown();
+    assert!(session.submit("tiny", tiny_image(&mut rng)).is_err());
+}
+
+/// Session metrics surface exact latency percentiles once requests
+/// complete.
+#[test]
+fn session_metrics_expose_percentiles() {
+    let _serial = SERIAL.lock().unwrap();
+    let engine = Engine::builder()
+        .workers(2)
+        .max_batch(4)
+        .max_wait(Duration::from_micros(100))
+        .register("tiny", zoo::tiny_cnn(), SacBackend::synthetic_weights(3).unwrap())
+        .build()
+        .unwrap();
+    let session = engine.session();
+    assert!(session.metrics().latency_percentiles().is_none());
+    let mut rng = Rng::new(4);
+    let images: Vec<Tensor<i32>> = (0..9).map(|_| tiny_image(&mut rng)).collect();
+    session.infer_batch("tiny", &images).unwrap();
+    let m = session.metrics();
+    let p = m.latency_percentiles().expect("served requests must yield percentiles");
+    assert!(p.p50_us > 0.0);
+    assert!(p.p50_us <= p.p95_us && p.p95_us <= p.p99_us);
+    assert_eq!(m.requests_done, 9);
+    engine.shutdown();
+}
+
+/// The PJRT backend kind goes through the same constructor path and
+/// fails fast (typed error) when the runtime is not compiled in —
+/// callers never branch on backend type, even to handle its absence.
+#[cfg(not(all(feature = "xla", feature = "xla-vendored")))]
+#[test]
+fn pjrt_backend_kind_fails_fast_without_runtime() {
+    let _serial = SERIAL.lock().unwrap();
+    match Engine::builder().backend(BackendKind::Pjrt).build() {
+        Err(tetris::Error::Xla(msg)) => assert!(msg.contains("xla"), "{msg}"),
+        Err(other) => panic!("expected Xla error, got {other}"),
+        Ok(_) => panic!("stub build must not construct a PJRT engine"),
+    }
+    // Registering networks on a PJRT engine is a typed config error.
+    let w = SacBackend::synthetic_weights(1).unwrap();
+    match Engine::builder()
+        .backend(BackendKind::Pjrt)
+        .register("tiny", zoo::tiny_cnn(), w)
+        .build()
+    {
+        Err(tetris::Error::Config(msg)) => assert!(msg.contains("SAC-only"), "{msg}"),
+        other => panic!("expected Config error, got {:?}", other.map(|_| ())),
+    }
+}

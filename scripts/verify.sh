@@ -44,4 +44,10 @@ else
     echo "== rustfmt unavailable — skipped =="
 fi
 
+# The public API (the `engine` façade above all) must stay documented:
+# broken intra-doc links or missing docs on the redesigned surface fail
+# the build rather than rotting silently.
+echo "== cargo doc --no-deps (-D warnings) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 echo "verify OK"
