@@ -240,14 +240,88 @@ fn main() {
     h.bench("plan/execute-alexnet-materializing", || {
         aplan.execute_opts(&aimg, ExecOpts::materializing()).unwrap().len()
     });
-    let (_, peak_tiled) = aplan.execute_traced(&aimg, ExecOpts::tiled(4)).unwrap();
-    let (_, peak_full) = aplan.execute_traced(&aimg, ExecOpts::materializing()).unwrap();
+    let (_, trace_tiled) = aplan.execute_traced(&aimg, ExecOpts::tiled(4)).unwrap();
+    let (_, trace_full) = aplan.execute_traced(&aimg, ExecOpts::materializing()).unwrap();
+    let (peak_tiled, peak_full) = (trace_tiled.peak_bytes(), trace_full.peak_bytes());
     h.metric_row(
         "plan/alexnet-peak-feature-bytes",
         vec![
             ("tiled4".into(), peak_tiled as f64),
             ("materializing".into(), peak_full as f64),
             ("ratio".into(), peak_tiled as f64 / peak_full as f64),
+        ],
+    );
+
+    // 10. ISSUE 5: streaming vs tiled — the halo win. Same plan, a
+    //     batch that covers the worker budget (4 images, 2 workers, so
+    //     both walks keep every worker busy); the tiled walk
+    //     recomputes halo rows at every 4-row tile boundary while the
+    //     streaming walk's rolling rings retain them. Bit-exactness
+    //     asserted before timing, as always.
+    let mut simg = Tensor::zeros(&[4, anet.layers[0].in_c, 64, 64]);
+    for (i, v) in simg.data_mut().iter_mut().enumerate() {
+        *v = (i as i32 % 421) - 210;
+    }
+    let stream_opts = ExecOpts::streaming(4).with_workers(2);
+    let tiled_opts = ExecOpts::tiled(4).with_workers(2);
+    assert_eq!(
+        aplan.execute_opts(&simg, stream_opts).unwrap(),
+        aplan.execute_opts(&simg, tiled_opts).unwrap(),
+        "streaming and tiled walks must agree before being timed"
+    );
+    h.bench("plan/execute-alexnet-streaming4-batch4", || {
+        aplan.execute_opts(&simg, stream_opts).unwrap().len()
+    });
+    h.bench("plan/execute-alexnet-tiled4-batch4", || {
+        aplan.execute_opts(&simg, tiled_opts).unwrap().len()
+    });
+    let (_, ts) = aplan.execute_traced(&simg, stream_opts).unwrap();
+    let (_, tt) = aplan.execute_traced(&simg, tiled_opts).unwrap();
+    assert_eq!(ts.halo_recompute_rows(), 0, "streaming walk must not recompute halo rows");
+    let stream_median = median(h.results(), "plan/execute-alexnet-streaming4-batch4");
+    let tiled_median = median(h.results(), "plan/execute-alexnet-tiled4-batch4");
+    h.metric_row(
+        "plan/streaming-vs-tiled-batch4",
+        vec![
+            ("speedup_x".into(), tiled_median / stream_median),
+            ("halo_rows_tiled".into(), tt.halo_recompute_rows() as f64),
+            ("halo_rows_streaming".into(), ts.halo_recompute_rows() as f64),
+            ("peak_streaming".into(), ts.peak_bytes() as f64),
+            ("peak_tiled".into(), tt.peak_bytes() as f64),
+        ],
+    );
+
+    // 11. ISSUE 5: executable FC heads — VGG-16 runs image → logits
+    //     through its compiled fc6–8 lanes (flatten → fused heads →
+    //     classifier), pinned against the naive reference FC chain.
+    let vnet = zoo::vgg16().scaled(16, 32);
+    let vw = tetris::model::weights::synthetic_loaded_with_heads(
+        &vnet,
+        Mode::Fp16,
+        10,
+        "vgg16",
+        DensityCalibration::Fig2,
+        31,
+    )
+    .unwrap();
+    let vplan = CompiledNetwork::compile(&vnet, &vw, 16, Mode::Fp16).unwrap();
+    let mut vimg = Tensor::zeros(&[2, vnet.layers[0].in_c, 32, 32]);
+    for (i, v) in vimg.data_mut().iter_mut().enumerate() {
+        *v = (i as i32 % 397) - 198;
+    }
+    assert_eq!(
+        vplan.execute(&vimg).unwrap(),
+        forward_reference(&vnet, &vw, &vimg),
+        "vgg16 fc-head logits must match the reference before timing"
+    );
+    h.bench("plan/execute-vgg16-fc-heads-div16", || vplan.execute(&vimg).unwrap().len());
+    let head_lanes: f64 = vplan.fc_heads().iter().map(|f| f.classes as f64).sum();
+    h.metric_row(
+        "plan/vgg16-fc-heads",
+        vec![
+            ("heads".into(), vplan.fc_heads().len() as f64),
+            ("head_lanes".into(), head_lanes),
+            ("classes".into(), vplan.output_classes().unwrap_or(0) as f64),
         ],
     );
 

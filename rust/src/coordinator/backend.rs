@@ -73,9 +73,12 @@ pub struct SacBackend {
 impl SacBackend {
     /// Build from loaded weights (tiny-CNN shaped). Kneading happens
     /// here, once; `infer_batch` only streams the kneaded lanes. The
-    /// serving tile height comes from the `TETRIS_MEM_BUDGET_MB`
-    /// fallback ([`env::mem_budget_bytes`]) — engine-registered models
-    /// resolve their budget through the typed builder instead.
+    /// serving tile height — which doubles as the streaming walk's
+    /// ring-advance step, so one knob bounds the ring depth of
+    /// whichever walk `execute` picks — comes from the
+    /// `TETRIS_MEM_BUDGET_MB` fallback ([`env::mem_budget_bytes`]) —
+    /// engine-registered models resolve their budget through the typed
+    /// builder instead.
     pub fn new(weights: LoadedWeights) -> crate::Result<Self> {
         let cycles = tiny_cnn_sim_cycles(&weights)?;
         let mut plan = quantized::compile_tiny_cnn(&weights)?;

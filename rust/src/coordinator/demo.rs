@@ -6,7 +6,7 @@ use std::time::Duration;
 use super::backend::SacBackend;
 use crate::config::Mode;
 use crate::engine::Engine;
-use crate::model::weights::{synthetic_loaded, DensityCalibration};
+use crate::model::weights::{synthetic_loaded_with_heads, DensityCalibration};
 use crate::model::{zoo, Network, Tensor};
 use crate::util::rng::Rng;
 
@@ -91,7 +91,10 @@ pub fn run_synthetic_load(
         .max_wait(Duration::from_millis(2))
         .register("tiny", zoo::tiny_cnn(), tiny_weights);
     if let Some(ctx) = &context {
-        let w = synthetic_loaded(
+        // Heads included: a context model declaring a classifier stack
+        // (VGG fc6–8, GoogleNet loss3) serves image → logits end to
+        // end; conv-only declarations (AlexNet, NiN) serve the trunk.
+        let w = synthetic_loaded_with_heads(
             ctx,
             Mode::Fp16,
             10,
@@ -115,6 +118,16 @@ pub fn run_synthetic_load(
             .join(", "),
         if use_artifacts { "trained" } else { "synthetic" },
     );
+    for m in engine.models() {
+        if !m.head_cycles().is_empty() {
+            let heads: Vec<String> = m
+                .head_cycles()
+                .iter()
+                .map(|(name, cyc)| format!("{name} {cyc}cyc"))
+                .collect();
+            println!("  {} classifier heads (per image): {}", m.name(), heads.join(", "));
+        }
+    }
 
     // Interleave: every 4th request goes to the context model.
     let mut rng = Rng::new(seed);
@@ -156,5 +169,12 @@ mod tests {
     #[test]
     fn demo_serves_two_models() {
         run_synthetic_load(&zoo::nin(), 8, 4, 2, 5).unwrap();
+    }
+
+    #[test]
+    fn demo_serves_classifier_head_model_end_to_end() {
+        // VGG-16's scaled context model carries fc6–8 weights: the
+        // demo serves image → logits and reports per-head cycles.
+        run_synthetic_load(&zoo::vgg16(), 8, 4, 2, 3).unwrap();
     }
 }

@@ -14,6 +14,12 @@ pub struct LatencyPercentiles {
     pub p50_us: f64,
     pub p95_us: f64,
     pub p99_us: f64,
+    /// False while every recorded latency is retained (percentiles are
+    /// exact); true once the reservoir saturated and replacement
+    /// sampling began — the values are then unbiased estimates over a
+    /// uniform sample, not exact order statistics. Surfaced so p99
+    /// consumers (SLO dashboards, the demo) can tell the difference.
+    pub approx: bool,
 }
 
 /// Latency samples retained for exact percentiles. Below this many
@@ -97,7 +103,8 @@ impl Metrics {
 
     /// p50/p95/p99 over the recorded per-request latencies — exact up
     /// to [`LATENCY_SAMPLE_CAP`] requests, computed over an unbiased
-    /// uniform reservoir beyond that; `None` before the first
+    /// uniform reservoir beyond that (flagged via
+    /// [`LatencyPercentiles::approx`]); `None` before the first
     /// completion.
     pub fn latency_percentiles(&self) -> Option<LatencyPercentiles> {
         if self.latencies_us.is_empty() {
@@ -109,7 +116,26 @@ impl Metrics {
             p50_us: percentile(&sorted, 0.50),
             p95_us: percentile(&sorted, 0.95),
             p99_us: percentile(&sorted, 0.99),
+            approx: self.percentiles_approx(),
         })
+    }
+
+    /// Latency samples currently retained for the percentile
+    /// computation (≤ [`LATENCY_SAMPLE_CAP`]).
+    pub fn latency_sample_count(&self) -> usize {
+        self.latencies_us.len()
+    }
+
+    /// Latency observations offered to the reservoir over the
+    /// engine's lifetime (= requests recorded).
+    pub fn latency_observed(&self) -> u64 {
+        self.latency_seen
+    }
+
+    /// True once the reservoir saturated: percentiles are estimated
+    /// from a uniform sample rather than exact order statistics.
+    pub fn percentiles_approx(&self) -> bool {
+        self.latency_seen > LATENCY_SAMPLE_CAP as u64
     }
 
     /// Requests per second since construction.
@@ -125,13 +151,24 @@ impl Metrics {
     /// Human summary block.
     pub fn render(&self) -> String {
         let pct = match self.latency_percentiles() {
-            Some(p) => format!(
-                "latency: mean {:.1} µs  p50 {:.0} µs  p95 {:.0} µs  p99 {:.0} µs",
-                self.latency.mean_us(),
-                p.p50_us,
-                p.p95_us,
-                p.p99_us
-            ),
+            Some(p) => {
+                let exactness = if p.approx {
+                    format!(
+                        "  (~estimated: reservoir {}/{} requests)",
+                        self.latency_sample_count(),
+                        self.latency_observed()
+                    )
+                } else {
+                    String::new()
+                };
+                format!(
+                    "latency: mean {:.1} µs  p50 {:.0} µs  p95 {:.0} µs  p99 {:.0} µs{exactness}",
+                    self.latency.mean_us(),
+                    p.p50_us,
+                    p.p95_us,
+                    p.p99_us
+                )
+            }
             None => "latency: no completed requests".into(),
         };
         format!(
@@ -181,7 +218,11 @@ mod tests {
         assert!((p.p95_us - 95.05).abs() < 1e-9, "p95 {}", p.p95_us);
         assert!((p.p99_us - 99.01).abs() < 1e-9, "p99 {}", p.p99_us);
         assert!(p.p50_us <= p.p95_us && p.p95_us <= p.p99_us);
+        assert!(!p.approx, "100 samples fit the reservoir exactly");
+        assert_eq!(m.latency_sample_count(), 100);
+        assert_eq!(m.latency_observed(), 100);
         assert!(m.render().contains("p95"));
+        assert!(!m.render().contains("~estimated"));
     }
 
     #[test]
@@ -193,9 +234,15 @@ mod tests {
         }
         assert_eq!(m.requests_done, 80 * 1024);
         assert!(m.latencies_us.len() <= LATENCY_SAMPLE_CAP);
-        // Percentiles still ordered and inside the observed range.
+        // Percentiles still ordered and inside the observed range —
+        // and flagged as reservoir estimates now the cap is passed.
         let p = m.latency_percentiles().unwrap();
         assert!(p.p50_us <= p.p95_us && p.p95_us <= p.p99_us);
         assert!(p.p99_us <= 1023.0 && p.p50_us >= 0.0);
+        assert!(p.approx, "saturated reservoir must flag approximation");
+        assert!(m.percentiles_approx());
+        assert_eq!(m.latency_sample_count(), LATENCY_SAMPLE_CAP);
+        assert_eq!(m.latency_observed(), 80 * 1024);
+        assert!(m.render().contains("~estimated"));
     }
 }

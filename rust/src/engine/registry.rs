@@ -8,7 +8,7 @@ use std::sync::Arc;
 
 use crate::config::{AccelConfig, CalibConfig};
 use crate::coordinator::backend::{InferBackend, PjrtBackend, SacBackend};
-use crate::model::{LoadedWeights, Network, TopoOp};
+use crate::model::{ConvLayer, LoadedWeights, Network, TopoOp};
 use crate::plan::CompiledNetwork;
 use crate::sim::{sample::samples_from_loaded, simulate_network_with_samples, tetris::TetrisSim};
 
@@ -43,6 +43,10 @@ pub struct ModelMeta {
     /// thread-pinned and live inside the workers instead).
     pub(crate) plan: Option<Arc<CompiledNetwork>>,
     pub(crate) cycles_per_image: u64,
+    /// Simulated Tetris cycles per image for each **executable** FC
+    /// head (name, cycles), schedule order — empty when the model
+    /// serves a conv trunk only. Folded into `cycles_per_image`.
+    pub(crate) head_cycles: Vec<(String, u64)>,
     /// Input channel count submissions are validated against.
     pub(crate) in_c: Option<usize>,
     /// Declared input spatial size submissions are validated against.
@@ -68,9 +72,17 @@ impl ModelMeta {
         self.plan.as_ref()
     }
 
-    /// Simulated Tetris cycles per image.
+    /// Simulated Tetris cycles per image (conv trunk + executable FC
+    /// heads).
     pub fn cycles_per_image(&self) -> u64 {
         self.cycles_per_image
+    }
+
+    /// Per-head simulated cycles for the model's executable FC heads
+    /// (empty for conv-trunk models) — the serving-side counterpart of
+    /// `tetris simulate --include-fc`'s per-head rows.
+    pub fn head_cycles(&self) -> &[(String, u64)] {
+        &self.head_cycles
     }
 }
 
@@ -117,7 +129,38 @@ pub(crate) fn compile_sac(
     let calib = CalibConfig::default();
     let samples = samples_from_loaded(&network, &weights)?;
     let sim = simulate_network_with_samples(&TetrisSim, &network, &samples, &cfg, &calib);
-    let cycles = sim.total_cycles();
+    let trunk_cycles = sim.total_cycles();
+
+    // Every FC head the plan actually EXECUTES (`fc_heads` — declared
+    // stacks and the implicit appended `fc` alike) simulates as its
+    // 1×1-conv equivalent, the same lowering `Network::
+    // fc_as_conv_layers` / `tetris simulate --include-fc` use for
+    // declared specs, one head per row so serving can report per-head
+    // cost. Declaration-only heads cost nothing because the plan
+    // never streams them. Keying off the compiled heads (rather than
+    // the declared specs) keeps `cycles_per_image` head-inclusive for
+    // every model whose plan serves logits.
+    let mut head_cycles: Vec<(String, u64)> = Vec::new();
+    for head in plan.fc_heads() {
+        let head_net = Network {
+            name: network.name.clone(),
+            layers: vec![ConvLayer {
+                name: head.name.clone(),
+                in_c: head.feat_dim,
+                out_c: head.classes,
+                k: 1,
+                stride: 1,
+                pad: 0,
+                in_hw: 1,
+            }],
+            schedule: Vec::new(),
+        };
+        let head_samples = samples_from_loaded(&head_net, &weights)?;
+        let head_sim =
+            simulate_network_with_samples(&TetrisSim, &head_net, &head_samples, &cfg, &calib);
+        head_cycles.push((head.name.clone(), head_sim.total_cycles()));
+    }
+    let cycles = trunk_cycles + head_cycles.iter().map(|(_, c)| c).sum::<u64>();
 
     let plan = Arc::new(plan);
     let entry = entry_shape(&network);
@@ -126,6 +169,7 @@ pub(crate) fn compile_sac(
         backend: "sac-rust",
         plan: Some(Arc::clone(&plan)),
         cycles_per_image: cycles,
+        head_cycles,
         in_c: entry.map(|(c, _)| c),
         in_hw: entry.map(|(_, hw)| hw),
     };
@@ -148,6 +192,7 @@ pub(crate) fn pjrt_lane(artifacts: &Path) -> crate::Result<(ModelMeta, BackendFa
         backend: "pjrt-xla",
         plan: None,
         cycles_per_image: cycles,
+        head_cycles: Vec::new(),
         in_c: Some(probe.input_channels()),
         in_hw: Some(probe.input_hw()),
     };

@@ -177,6 +177,20 @@ impl Network {
             .unwrap_or(0);
         let in_c = (self.layers.get(entry).map_or(1, |l| l.in_c) / channel_div).max(1);
         let mut schedule = self.schedule.clone();
+        // Hidden FC widths scale with the trunk (a ÷16 VGG must not
+        // keep 4096-wide fc6/fc7 lanes); the stack's LAST head is a
+        // class count and stays unscaled. `in_features` is rewritten
+        // by the propagation below.
+        let fc_count = schedule.iter().filter(|op| matches!(op, TopoOp::Fc(_))).count();
+        let mut fc_i = 0usize;
+        for op in schedule.iter_mut() {
+            if let TopoOp::Fc(spec) = op {
+                fc_i += 1;
+                if fc_i < fc_count {
+                    spec.out_features = (spec.out_features / channel_div).max(1);
+                }
+            }
+        }
         propagate(&mut schedule, &mut layers, in_c, in_hw, &self.name);
         Network {
             name: format!("{}_div{channel_div}_hw{in_hw}", self.name),
@@ -373,13 +387,14 @@ mod tests {
         assert_eq!(eq.iter().map(ConvLayer::macs).sum::<u64>(), net.fc_macs());
         assert!(eq.iter().all(|l| l.k == 1 && l.in_hw == 1 && l.out_hw() == 1));
         // Scaling rewrites in_features to what the scaled trunk
-        // delivers (out_c 32/4 = 8, pooled 8² map → 8·64) and chains
-        // through the head, leaving class counts alone.
+        // delivers (out_c 32/4 = 8, pooled 8² map → 8·64), shrinks
+        // hidden widths with the trunk (100/4 = 25), and chains
+        // through the head — leaving the final class count alone.
         let s = net.scaled(4, 16);
         let specs = s.fc_specs();
         assert_eq!(specs[0].in_features, 8 * 8 * 8);
-        assert_eq!(specs[0].out_features, 100);
-        assert_eq!(specs[1].in_features, 100);
+        assert_eq!(specs[0].out_features, 25);
+        assert_eq!(specs[1].in_features, 25);
         assert_eq!(specs[1].out_features, 10);
     }
 

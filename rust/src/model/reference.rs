@@ -12,12 +12,16 @@
 //! shared reference for both consumers means the definition of
 //! "correct" cannot drift between the test suite and the bench.
 //!
-//! Conv-only scope: every conv fuses ReLU + requantization (matching
-//! the lowered `Conv → ReluRequant` pair), pools follow the Caffe
-//! ceil-mode geometry, and schedule-declared `Fc` entries are treated
-//! as declaration-only accounting topology (skipped, like the plan
-//! compiler does for heads without weights — a weighted head panics).
-//! Weight files with classifier heads are exercised through the
+//! Scope: every conv fuses ReLU + requantization (matching the
+//! lowered `Conv → ReluRequant` pair), pools follow the Caffe
+//! ceil-mode geometry, and schedule-declared `Fc` stacks execute
+//! naively when the weight set carries **every** head (flatten the
+//! trunk, i64 MAC per output feature, ReLU + requantization on every
+//! head but the last — exactly the plan compiler's lowering), so I5
+//! bit-exactness extends to logits-after-fc. A stack with **no**
+//! weighted head stays declaration-only accounting topology (skipped,
+//! like the plan compiler does); a mixed stack panics. Implicit `fc`
+//! weight layers with no declared head are exercised through the
 //! tiny-CNN legacy reference (`runtime::quantized::forward_scalar`)
 //! instead.
 
@@ -170,7 +174,46 @@ fn ref_gap(x: &Tensor<i32>) -> Tensor<i32> {
     out
 }
 
-fn ref_ops(ops: &[TopoOp], net: &Network, w: &LoadedWeights, mut h: Tensor<i32>) -> Tensor<i32> {
+/// Naive FC layer: flatten the input to (N, feat) if spatial, then one
+/// i64 MAC accumulation per output feature (row-major weight gather —
+/// the same order the plan's FC lanes were kneaded in), one truncating
+/// `as i32` cast, and — for every head but the stack's last — the same
+/// fused ReLU + requantization a conv applies.
+fn ref_fc(x: &Tensor<i32>, wl: &LoadedLayer, relu: bool) -> Tensor<i32> {
+    let (n, feat) = match *x.shape() {
+        [n, c, h, w] => (n, c * h * w),
+        [n, d] => (n, d),
+        _ => panic!("FC input must be 2-D or 4-D"),
+    };
+    let out_f = wl.shape[0];
+    let in_f = wl.shape[1] * wl.shape[2] * wl.shape[3];
+    assert_eq!(feat, in_f, "{}: trunk delivers {feat}, weights reduce {in_f}", wl.name);
+    let mut out: Tensor<i32> = Tensor::zeros(&[n, out_f]);
+    for b in 0..n {
+        let feats = &x.data()[b * feat..(b + 1) * feat];
+        for o in 0..out_f {
+            let mut acc = 0i64;
+            for (i, &a) in feats.iter().enumerate() {
+                acc += wl.weights[o * in_f + i] as i64 * a as i64;
+            }
+            let mut v = acc as i32;
+            if relu {
+                v = requantize(v, wl.frac_bits).max(0);
+            }
+            out.data_mut()[b * out_f + o] = v;
+        }
+    }
+    out
+}
+
+fn ref_ops(
+    ops: &[TopoOp],
+    net: &Network,
+    w: &LoadedWeights,
+    mut h: Tensor<i32>,
+    fc_seen: &mut usize,
+    fc_weighted: usize,
+) -> Tensor<i32> {
     for op in ops {
         h = match op {
             TopoOp::Conv(i) => {
@@ -184,29 +227,45 @@ fn ref_ops(ops: &[TopoOp], net: &Network, w: &LoadedWeights, mut h: Tensor<i32>)
             }
             TopoOp::Pool(p) => ref_pool(&h, *p),
             TopoOp::Branch(arms) => {
-                let parts: Vec<Tensor<i32>> =
-                    arms.iter().map(|a| ref_ops(a, net, w, h.clone())).collect();
+                let parts: Vec<Tensor<i32>> = arms
+                    .iter()
+                    .map(|a| ref_ops(a, net, w, h.clone(), fc_seen, fc_weighted))
+                    .collect();
                 ref_concat(&parts)
             }
             TopoOp::GlobalAvgPool => ref_gap(&h),
-            TopoOp::Fc(spec) => {
+            TopoOp::Fc(spec) => match w.layer(&spec.name) {
                 // Declaration-only heads (no weights) are accounting
                 // topology: the reference result is the conv trunk,
                 // mirroring the plan compiler's lowering.
-                assert!(
-                    w.layer(&spec.name).is_none(),
-                    "conv-only reference cannot execute fc `{}`",
-                    spec.name
-                );
-                h
-            }
+                None => {
+                    assert_eq!(
+                        fc_weighted, 0,
+                        "fc stack mixes weighted and weightless heads at `{}`",
+                        spec.name
+                    );
+                    h
+                }
+                Some(fl) => {
+                    *fc_seen += 1;
+                    ref_fc(&h, fl, *fc_seen < fc_weighted)
+                }
+            },
         };
     }
     h
 }
 
 /// Interpret `net`'s declared schedule naively over a Q8.8 batch.
-/// Conv-only weight sets (the zoo carries no `fc` layer).
+/// Weight sets are conv-only (the trunk is the result), or carry every
+/// declared FC head (image → logits); implicit appended `fc` heads go
+/// through the legacy tiny-CNN reference instead.
 pub fn forward_reference(net: &Network, w: &LoadedWeights, x: &Tensor<i32>) -> Tensor<i32> {
-    ref_ops(&net.schedule, net, w, x.clone())
+    let fc_weighted = net
+        .fc_specs()
+        .iter()
+        .filter(|s| w.layer(&s.name).is_some())
+        .count();
+    let mut fc_seen = 0usize;
+    ref_ops(&net.schedule, net, w, x.clone(), &mut fc_seen, fc_weighted)
 }

@@ -106,11 +106,13 @@ impl PoolSpec {
 /// `in_features` matches what the trunk delivers (flattened
 /// `C·H·W`, or `C` after a `GlobalAvgPool`/previous `Fc`).
 ///
-/// Execution supports exactly one head: a weight layer named `fc`
-/// following a `GlobalAvgPool` (the tiny-CNN / NiN-with-head shape).
-/// Declared heads without a matching weight layer are
-/// declaration-only — the executor stops at the conv trunk, exactly
-/// as before they were declared.
+/// Execution: when the weight set carries a layer for **every** head
+/// of the stack, each compiles into per-name FC lanes and the plan
+/// runs image → logits (a spatial trunk flattens first; every head
+/// but the last is activation-fused). A stack with no weighted head
+/// is declaration-only — the executor stops at the conv trunk,
+/// exactly as before it was declared — and a mixed stack is rejected
+/// at lowering.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct FcSpec {
     /// Weight-layer name, e.g. `fc6` or `loss3/classifier`.

@@ -250,6 +250,35 @@ pub fn synthetic_loaded(
     Ok(super::LoadedWeights { mode, layers })
 }
 
+/// [`synthetic_loaded`] plus one weight layer per **declared FC head**
+/// (`Network::fc_specs`), shaped `[out_features, in_features, 1, 1]` —
+/// the set that makes a zoo network with a published classifier stack
+/// (VGG fc6–8, GoogleNet loss3/classifier) compile into an executable
+/// image → logits plan. Conv layers draw the exact same weights as
+/// [`synthetic_loaded`] under the same seed (heads draw from a forked
+/// stream), so trunk-only results stay comparable across both sets.
+pub fn synthetic_loaded_with_heads(
+    net: &super::Network,
+    mode: Mode,
+    frac_bits: u32,
+    profile_name: &str,
+    calib: DensityCalibration,
+    seed: u64,
+) -> crate::Result<super::LoadedWeights> {
+    let mut loaded = synthetic_loaded(net, mode, frac_bits, profile_name, calib, seed)?;
+    let profile = profile_with(profile_name, mode, calib)?;
+    let mut rng = Rng::new(seed ^ 0xFC_4EAD);
+    for spec in net.fc_specs() {
+        loaded.layers.push(super::LoadedLayer {
+            name: spec.name.clone(),
+            shape: [spec.out_features, spec.in_features, 1, 1],
+            frac_bits,
+            weights: profile.generate(spec.weight_count() as usize, &mut rng),
+        });
+    }
+    Ok(loaded)
+}
+
 /// Value-realistic generator: Laplace(0, b) quantized to the mode's
 /// Q-format. Trained conv weights are empirically Laplacian with
 /// scale ≈ 0.03–0.06 of the weight range.
@@ -351,6 +380,45 @@ mod tests {
     #[test]
     fn unknown_network_is_error() {
         assert!(profile_for("resnet", Mode::Fp16).is_err());
+    }
+
+    #[test]
+    fn synthetic_heads_extend_the_conv_set_without_disturbing_it() {
+        let net = crate::model::zoo::vgg16().scaled(16, 32);
+        let plain =
+            synthetic_loaded(&net, Mode::Fp16, 10, "vgg16", DensityCalibration::Fig2, 9)
+                .unwrap();
+        let with = synthetic_loaded_with_heads(
+            &net,
+            Mode::Fp16,
+            10,
+            "vgg16",
+            DensityCalibration::Fig2,
+            9,
+        )
+        .unwrap();
+        // Conv layers identical; one extra layer per declared head.
+        assert_eq!(with.layers.len(), plain.layers.len() + 3);
+        for (a, b) in plain.layers.iter().zip(&with.layers) {
+            assert_eq!(a.weights, b.weights, "{}", a.name);
+        }
+        for (spec, wl) in net.fc_specs().iter().zip(&with.layers[plain.layers.len()..]) {
+            assert_eq!(wl.name, spec.name);
+            assert_eq!(wl.shape, [spec.out_features, spec.in_features, 1, 1]);
+            assert_eq!(wl.weights.len() as u64, spec.weight_count());
+        }
+        // Conv-only networks get no extra layers.
+        let nin = crate::model::zoo::nin().scaled(16, 64);
+        let nw = synthetic_loaded_with_heads(
+            &nin,
+            Mode::Fp16,
+            10,
+            "nin",
+            DensityCalibration::Fig2,
+            9,
+        )
+        .unwrap();
+        assert_eq!(nw.layers.len(), nin.layers.len());
     }
 
     #[test]

@@ -48,9 +48,11 @@ pub fn alexnet() -> Network {
 /// The VGG conv stack shared by VGG-16 and VGG-19: `n` convs per block,
 /// a 2×2 stride-2 max pool after every block, then the published
 /// classifier head — fc6/fc7/fc8 over the flattened 512×7×7 block-5
-/// output. The head is declared topology ([`FcSpec`]) for MAC/weight
-/// accounting and shape validation; its weights only enter via weight
-/// files, so the executor serves the conv trunk as before.
+/// output. The head is declared topology ([`FcSpec`]): MAC/weight
+/// accounting and shape validation always; executable image → logits
+/// when the weight set carries all three layers (e.g.
+/// `model::weights::synthetic_loaded_with_heads`), conv-trunk serving
+/// otherwise.
 fn vgg(name: &str, blocks: &[(usize, usize, usize, usize, usize)]) -> Network {
     let mut layers = Vec::new();
     let mut schedule = Vec::new();

@@ -11,7 +11,7 @@ use crate::kneading::{knead_lane, KneadedLane, Lane};
 use crate::model::{LoadedLayer, LoadedWeights, Network, Tensor};
 use crate::util::pool::{par_map, split_budget};
 
-use super::graph::{derive_graph, segment_plan, PlanOp, Segment};
+use super::graph::{derive_graph, segment_plan, FusedStage, PlanOp, Segment};
 
 /// Default output rows per fused tile (see [`CompiledNetwork::tile_rows`]).
 /// Small enough that conv→pool rings stay a few rows tall, large enough
@@ -40,11 +40,22 @@ impl CompiledConv {
     }
 }
 
-/// The classifier head: one pre-kneaded lane per class.
+/// One compiled fully-connected layer: one pre-kneaded lane per output
+/// feature. A plan holds one of these **per declared head name**
+/// (VGG's fc6/fc7/fc8 each compile their own lane set), in schedule
+/// order; the stack's last head emits raw logits, every earlier head
+/// is activation-fused like a conv.
 #[derive(Debug, Clone)]
 pub struct CompiledFc {
+    /// Weight-layer / head name (`fc`, `fc6`, `loss3/classifier`, …).
+    pub name: String,
+    /// Output features (classes for the stack's last head).
     pub classes: usize,
     pub feat_dim: usize,
+    /// Requantization shift applied when `relu` is set.
+    pub frac_bits: u32,
+    /// Activation-fused (every head but the stack's last).
+    pub relu: bool,
     pub lanes: Vec<KneadedLane>,
 }
 
@@ -62,7 +73,8 @@ pub struct CompiledNetwork {
     /// (see [`segment_plan`]).
     pub(crate) schedule: Vec<Segment>,
     pub(crate) convs: Vec<CompiledConv>,
-    pub(crate) fc: Option<CompiledFc>,
+    /// Compiled FC heads, schedule order (empty for conv-trunk plans).
+    pub(crate) fcs: Vec<CompiledFc>,
     /// Declared (channels, spatial size) of the first executed conv —
     /// the shape basis for [`Self::peak_bytes_estimate`].
     pub(crate) declared_in: (usize, usize),
@@ -130,23 +142,33 @@ impl CompiledNetwork {
                 lanes: knead_filter_lanes(wl, lane_len, ks, mode),
             });
         }
-        // Compile the classifier head only when the lowered graph
-        // executes one — a zoo net with a declaration-only FC stack
-        // must not knead (or hold resident) lanes it will never
-        // stream.
-        let fc = if ops.iter().any(|op| matches!(op, PlanOp::Fc)) {
-            let fl = weights.layer("fc").expect("derive_graph bound the fc head");
+        // Compile one lane set per executable FC head, in schedule
+        // order — a zoo net with a declaration-only FC stack must not
+        // knead (or hold resident) lanes it will never stream. Every
+        // head but the stack's last is activation-fused (the published
+        // VGG fc6/fc7 carry ReLUs; a lone head emits raw logits).
+        let fc_names: Vec<&str> = ops
+            .iter()
+            .filter_map(|op| match op {
+                PlanOp::Fc { name } => Some(name.as_str()),
+                _ => None,
+            })
+            .collect();
+        let mut fcs = Vec::with_capacity(fc_names.len());
+        for (i, name) in fc_names.iter().enumerate() {
+            let fl = weights.layer(name).expect("derive_graph bound every fc head");
             let classes = fl.shape[0];
             let feat_dim = fl.shape[1] * fl.shape[2] * fl.shape[3];
             kneads_at_build += classes as u64;
-            Some(CompiledFc {
+            fcs.push(CompiledFc {
+                name: (*name).to_string(),
                 classes,
                 feat_dim,
+                frac_bits: fl.frac_bits,
+                relu: i + 1 < fc_names.len(),
                 lanes: knead_filter_lanes(fl, feat_dim, ks, mode),
-            })
-        } else {
-            None
-        };
+            });
+        }
         let schedule = segment_plan(&ops, &net.layers);
         let declared_in = ops
             .iter()
@@ -161,7 +183,7 @@ impl CompiledNetwork {
             ops,
             schedule,
             convs,
-            fc,
+            fcs,
             declared_in,
             tile_rows: DEFAULT_TILE_ROWS,
             mode,
@@ -185,9 +207,20 @@ impl CompiledNetwork {
         &self.convs
     }
 
-    /// The classifier head, if the weight set carried an `fc` layer.
+    /// The final classifier head (the stack's last compiled FC), if
+    /// the plan executes one.
     pub fn fc(&self) -> Option<&CompiledFc> {
-        self.fc.as_ref()
+        self.fcs.last()
+    }
+
+    /// Every compiled FC head, schedule order.
+    pub fn fc_heads(&self) -> &[CompiledFc] {
+        &self.fcs
+    }
+
+    /// Look up a compiled FC head by name.
+    pub fn fc_head(&self, name: &str) -> Option<&CompiledFc> {
+        self.fcs.iter().find(|f| f.name == name)
     }
 
     /// Total kneaded weights across all lanes — the plan's resident
@@ -200,7 +233,7 @@ impl CompiledNetwork {
             .map(KneadedLane::kneaded_len)
             .sum();
         let fc: usize = self
-            .fc
+            .fcs
             .iter()
             .flat_map(|f| f.lanes.iter())
             .map(KneadedLane::kneaded_len)
@@ -217,7 +250,7 @@ impl CompiledNetwork {
             .map(KneadedLane::source_len)
             .sum();
         let fc: usize = self
-            .fc
+            .fcs
             .iter()
             .flat_map(|f| f.lanes.iter())
             .map(KneadedLane::source_len)
@@ -227,7 +260,7 @@ impl CompiledNetwork {
 
     /// Logit count per image (classifier plans only).
     pub fn output_classes(&self) -> Option<usize> {
-        self.fc.as_ref().map(|f| f.classes)
+        self.fcs.last().map(|f| f.classes)
     }
 
     /// Coarse peak feature-map bytes for ONE image at the declared
@@ -242,12 +275,36 @@ impl CompiledNetwork {
     /// accounting guarantee (the measured counterpart is
     /// `execute_traced`).
     pub fn peak_bytes_estimate(&self, tile_rows: usize, workers: usize) -> u64 {
+        self.estimate(tile_rows, workers, false)
+    }
+
+    /// [`Self::peak_bytes_estimate`]'s streaming-walk counterpart: one
+    /// rolling ring per intermediate stage per concurrently streamed
+    /// image, no per-tile output staging (final-stage rows stream
+    /// straight into the segment's output map). Structurally at or
+    /// below the tiled estimate for the same tile height — the
+    /// measured version of that claim (`execute_traced` peaks) is
+    /// property-tested across the zoo in `rust/tests/plan_streaming.rs`.
+    pub fn streaming_peak_bytes_estimate(&self, tile_rows: usize, workers: usize) -> u64 {
+        self.estimate(tile_rows, workers, true)
+    }
+
+    fn estimate(&self, tile_rows: usize, workers: usize, streaming: bool) -> u64 {
         let mut peak = 0u64;
         let (c, hw) = self.declared_in;
         if c == 0 || hw == 0 {
             return 0;
         }
-        self.estimate_segs(&self.schedule, c, hw, hw, tile_rows, workers.max(1), &mut peak);
+        self.estimate_segs(
+            &self.schedule,
+            c,
+            hw,
+            hw,
+            tile_rows,
+            workers.max(1),
+            streaming,
+            &mut peak,
+        );
         peak
     }
 
@@ -265,6 +322,7 @@ impl CompiledNetwork {
         mut w: usize,
         tile_rows: usize,
         workers: usize,
+        streaming: bool,
         peak: &mut u64,
     ) -> (usize, usize, usize) {
         const BYTES: u64 = 4; // i32 feature maps
@@ -314,19 +372,60 @@ impl CompiledNetwork {
                             let (o0, o1) = spans[i + 1];
                             spans[i] = stages[i].contract.in_span(o0, o1, dims[i].1);
                         }
-                        for i in 0..m {
-                            let (ic, _, iw, oc, ow) = dims[i];
-                            // Stage 0 reads the materialized input map
-                            // in place (already counted as in_bytes);
-                            // later stages read the previous ring.
-                            let in_rows =
-                                if i == 0 { 0 } else { spans[i].1 - spans[i].0 };
-                            let out_rows = spans[i + 1].1 - spans[i + 1].0;
-                            ring = ring
-                                .max((ic * in_rows * iw + oc * out_rows * ow) as u64 * BYTES);
+                        if streaming {
+                            // One rolling ring per intermediate
+                            // Conv/Pool stage, held for the whole
+                            // image walk, per concurrently streamed
+                            // image. Elementwise stages mutate their
+                            // producer's ring, and the SINK — the
+                            // last windowed stage — streams straight
+                            // into the output map, so neither owns a
+                            // ring (a Conv→ReluRequant segment has
+                            // none at all). The margin models the
+                            // retained halo rows: the window height
+                            // of the ring's next *windowed* reader —
+                            // the relu between a conv and its pool
+                            // retains nothing.
+                            let is_elem = |s: &FusedStage| {
+                                matches!(s.op, PlanOp::ReluRequant { .. })
+                            };
+                            let sink = stages
+                                .iter()
+                                .rposition(|s| !is_elem(s))
+                                .unwrap_or(0);
+                            let mut sum = 0u64;
+                            for i in 0..m {
+                                if i == sink || is_elem(&stages[i]) {
+                                    continue;
+                                }
+                                let (_, _, _, oc, ow) = dims[i];
+                                let stage_oh = dims[i + 1].1;
+                                let margin = stages[i + 1..]
+                                    .iter()
+                                    .find(|s| !is_elem(s))
+                                    .map_or(0, |s| s.contract.k);
+                                let rows = (spans[i + 1].1 - spans[i + 1].0 + margin)
+                                    .min(stage_oh);
+                                sum += (oc * rows * ow) as u64 * BYTES;
+                            }
+                            ring = sum * workers as u64;
+                        } else {
+                            for i in 0..m {
+                                let (ic, _, iw, oc, ow) = dims[i];
+                                // Stage 0 reads the materialized input
+                                // map in place (already counted as
+                                // in_bytes); later stages read the
+                                // previous ring.
+                                let in_rows =
+                                    if i == 0 { 0 } else { spans[i].1 - spans[i].0 };
+                                let out_rows = spans[i + 1].1 - spans[i + 1].0;
+                                ring = ring.max(
+                                    (ic * in_rows * iw + oc * out_rows * ow) as u64 * BYTES,
+                                );
+                            }
+                            let tiles_total = oh_final.div_ceil(tile).max(1);
+                            ring *= workers.clamp(1, tiles_total) as u64;
                         }
-                        let tiles_total = oh_final.div_ceil(tile).max(1);
-                        ring *= workers.clamp(1, tiles_total) as u64;
                     }
                     *peak = (*peak).max(in_bytes + out_bytes + ring);
                     (c, h, w) = (cc, hh, ww);
@@ -340,7 +439,7 @@ impl CompiledNetwork {
                     for (a, arm) in arms.iter().enumerate() {
                         let mut arm_peak = 0u64;
                         let (ac, ah, aw) = self.estimate_segs(
-                            arm, c, h, w, tile_rows, budgets[a], &mut arm_peak,
+                            arm, c, h, w, tile_rows, budgets[a], streaming, &mut arm_peak,
                         );
                         arm_sum += arm_peak;
                         total_c += ac;
@@ -354,10 +453,14 @@ impl CompiledNetwork {
                     *peak = (*peak).max(map_bytes(c, h, w) + c as u64 * BYTES);
                     (h, w) = (1, 1);
                 }
-                Segment::Fc => {
-                    if let Some(fc) = &self.fc {
-                        *peak = (*peak)
-                            .max((c + fc.classes) as u64 * BYTES);
+                Segment::Flatten => {
+                    // Pure reshape: (C, H, W) folds into C·H·W
+                    // features, no bytes move.
+                    (c, h, w) = (c * h * w, 1, 1);
+                }
+                Segment::Fc { name } => {
+                    if let Some(fc) = self.fc_head(name) {
+                        *peak = (*peak).max((c + fc.classes) as u64 * BYTES);
                         c = fc.classes;
                     }
                 }
@@ -371,6 +474,15 @@ impl CompiledNetwork {
     /// memory budget into a tile size. Falls back to single-row tiles
     /// when even they exceed the budget: the estimate then simply
     /// reports the floor the topology imposes.
+    ///
+    /// The tiled estimate is the sizing bound for **both** walks: a
+    /// streaming walk at the same tile height replaces each worker's
+    /// per-tile ring + output staging with one rolling ring of the
+    /// same span, so its peak sits at or below the tiled walk's
+    /// ([`Self::streaming_peak_bytes_estimate`]; the measured
+    /// counterpart is property-tested in `rust/tests/plan_streaming.rs`).
+    /// One budget therefore bounds the ring depth of whichever walk
+    /// `execute` picks.
     pub fn tile_rows_for_budget(&self, budget_bytes: u64, workers: usize) -> usize {
         for t in [64usize, 32, 16, 8, 4, 2] {
             if self.peak_bytes_estimate(t, workers) <= budget_bytes {
@@ -423,8 +535,10 @@ mod tests {
         assert_eq!(plan.convs[0].lanes.len(), 8);
         assert_eq!(plan.convs[1].lanes.len(), 16);
         assert_eq!(plan.convs[2].lanes.len(), 16);
-        let fc = plan.fc.as_ref().unwrap();
+        let fc = plan.fc().unwrap();
         assert_eq!((fc.classes, fc.feat_dim), (4, 16));
+        assert_eq!(fc.name, "fc");
+        assert!(!fc.relu, "a lone head emits raw logits");
         assert_eq!(plan.kneads_at_build, 8 + 16 + 16 + 4);
         assert!(plan.kneaded_weights() > 0);
         assert!(plan.kneaded_weights() <= plan.source_weights());
@@ -485,6 +599,44 @@ mod tests {
         assert!(big <= full, "8-row tiles {big} > materializing {full}");
         // More concurrent tiles → more live rings.
         assert!(plan.peak_bytes_estimate(2, 8) >= plan.peak_bytes_estimate(2, 1));
+        // The streaming estimate is non-trivial and grows with the
+        // tile height too (rings scale with the advance step).
+        let s_small = plan.streaming_peak_bytes_estimate(1, 1);
+        let s_big = plan.streaming_peak_bytes_estimate(8, 1);
+        assert!(s_small > 0);
+        assert!(s_small <= s_big);
+    }
+
+    #[test]
+    fn multi_head_plans_compile_per_name_lanes() {
+        use crate::model::weights::{synthetic_loaded_with_heads, DensityCalibration};
+        let net = zoo::vgg16().scaled(16, 32);
+        let w = synthetic_loaded_with_heads(
+            &net,
+            Mode::Fp16,
+            10,
+            "vgg16",
+            DensityCalibration::Fig2,
+            3,
+        )
+        .unwrap();
+        let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+        let heads = plan.fc_heads();
+        assert_eq!(heads.len(), 3);
+        assert_eq!(heads[0].name, "fc6");
+        assert_eq!(heads[2].name, "fc8");
+        // fc6/fc7 are activation-fused, fc8 emits the logits.
+        assert!(heads[0].relu && heads[1].relu && !heads[2].relu);
+        // The chain's dims link: classes of head i = feat_dim of i+1.
+        assert_eq!(heads[0].classes, heads[1].feat_dim);
+        assert_eq!(heads[1].classes, heads[2].feat_dim);
+        assert_eq!(plan.output_classes(), Some(1000));
+        assert_eq!(plan.fc_head("fc7").unwrap().classes, heads[1].classes);
+        assert!(plan.fc_head("fc9").is_none());
+        // Head lanes count toward the knead budget: convs + classes.
+        let conv_lanes: u64 = net.layers.iter().map(|l| l.out_c as u64).sum();
+        let head_lanes: u64 = heads.iter().map(|f| f.classes as u64).sum();
+        assert_eq!(plan.kneads_at_build, conv_lanes + head_lanes);
     }
 
     #[test]

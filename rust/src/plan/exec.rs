@@ -1,33 +1,46 @@
 //! The run-time half of the split: walk the tile schedule, stream the
 //! pre-kneaded lanes through SAC, never knead.
 //!
-//! Tiled fused execution (§Perf, DESIGN.md §Tiled fused execution):
-//! each `Conv → ReluRequant [→ Pool]` segment runs as one fused walk
-//! over row tiles of its *final* stage — a work item computes one
-//! (image, tile) stripe end to end through ring buffers holding only
-//! the tile's live rows (tile + halo, [`RowContract::in_span`]), so
-//! the conv's full-size pre-pool map never materializes. Halo rows at
-//! tile boundaries are recomputed (overlapped tiling); fusion stops at
-//! each pool on purpose — chaining walks across pools would grow the
-//! halo with the receptive field and turn the recompute quadratic.
+//! Two walks execute each fused `Conv → ReluRequant [→ Pool]` segment
+//! (DESIGN.md §Streaming segment pipeline):
 //!
-//! Parallelism: (image, tile) stripes fan out via
-//! `util::pool::par_map_with`, and `Branch` arms run **concurrently**,
-//! each arm handed a slice of the thread budget
-//! (`util::pool::split_budget`) so inception reduce convs overlap
-//! without oversubscribing the host. Striped assignment plus
-//! write-disjoint stitching keeps the output order deterministic: for
-//! any `TETRIS_THREADS`, any budget, and any tile height, results are
-//! bit-identical (invariant I5 extended over tilings).
+//! * **Streaming** ([`Walk::Streaming`], the default for batches that
+//!   cover the worker budget): each segment is a producer/consumer
+//!   pipeline over rolling `RingBuf` rings that slide down the
+//!   image. Input rows are fed `tile_rows` at a time; every stage's
+//!   `rows_ready → rows_emitted` advance
+//!   ([`RowContract::rows_emitted`](super::graph::RowContract::rows_emitted))
+//!   chains through the segment, new
+//!   rows land in the ring while the halo rows the next window needs
+//!   are *retained* across steps — so every row of every stage is
+//!   computed exactly once (`halo_recompute_rows == 0`) and the
+//!   final stage streams straight into the segment's output map. The
+//!   cost is a sequential row order per image; parallelism comes from
+//!   images and branch arms.
+//! * **Tiled** ([`Walk::Tiled`], PR 3's walk, kept as the explicit
+//!   baseline): stateless (image, row-tile) work items fan out via
+//!   `util::pool::par_map_with`, each recomputing its tile's halo
+//!   rows (overlapped tiling). More parallel slots for small batches;
+//!   `halo_recompute_rows` counts the duplicated stage rows.
+//!
+//! Both walks are bit-identical to each other and to the scalar
+//! references for every tile height, thread budget and input
+//! (invariant I5 over walks — `rust/tests/plan_streaming.rs`).
+//!
+//! Classifier heads execute for real: a [`Segment::Flatten`] reshapes
+//! the spatial trunk into feature rows (free in row-major NCHW), then
+//! each [`Segment::Fc`] streams its per-name compiled lanes —
+//! activation-fused for every head but the stack's last — so VGG-16
+//! and GoogleNet run image → logits end to end.
 //!
 //! Every arithmetic step mirrors a plain scalar reference exactly (same
 //! gather order, same group windows, same `i64 → i32` casts): the
 //! legacy `runtime::quantized::forward_scalar` pipeline for the tiny
 //! CNN, and the naive MAC interpreter `model::reference` for the full
-//! declared-topology zoo. Pool windows use Caffe ceil-mode sizing
-//! ([`PoolSpec::out_hw`]); max pools take the window's in-bounds
-//! maximum (padding never wins), average pools floor-divide the i64 sum
-//! by the in-bounds tap count.
+//! declared-topology zoo (FC stacks included). Pool windows use Caffe
+//! ceil-mode sizing ([`PoolSpec::out_hw`]); max pools take the
+//! window's in-bounds maximum (padding never wins), average pools
+//! floor-divide the i64 sum by the in-bounds tap count.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -39,28 +52,55 @@ use crate::util::pool::{par_map_with, split_budget, worker_count};
 use super::compiled::{CompiledConv, CompiledFc, CompiledNetwork};
 use super::graph::{FusedStage, PlanOp, Segment};
 
+/// Which dataflow executes fused segments (see the module docs).
+/// Results are bit-identical either way; the walk only moves wall
+/// time, memory and halo recompute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Walk {
+    /// Rolling-ring producer/consumer pipeline: zero halo recompute,
+    /// sequential row order per image (parallel across images/arms).
+    Streaming,
+    /// Stateless overlapped row tiles: halo rows recomputed per tile,
+    /// (image × tile) parallel slots.
+    Tiled,
+}
+
 /// Execution-time knobs for [`CompiledNetwork::execute_opts`].
 /// `None` fields fall back to the plan's compiled defaults.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ExecOpts {
-    /// Output rows per fused tile. `Some(0)` materializes — one tile
-    /// spans each fused chain's full height, so every stage's whole
-    /// map lives at once. `None` uses the plan's `tile_rows` and lets
-    /// the executor shrink tiles to keep every worker fed on small
-    /// batches (results are tile-invariant either way).
+    /// Row granularity. Tiled walk: output rows per fused tile.
+    /// Streaming walk: input rows fed per ring advance. `Some(0)`
+    /// materializes — one step/tile spans each fused chain's full
+    /// height. `None` uses the plan's `tile_rows` and (tiled walk
+    /// only) lets the executor shrink tiles to keep every worker fed
+    /// on small batches (results are tile-invariant either way).
     pub tile_rows: Option<usize>,
     /// Thread budget. `None` uses `util::pool::worker_count()`.
     pub workers: Option<usize>,
+    /// Dataflow. `None` picks [`Walk::Streaming`] when the batch
+    /// covers the worker budget (n ≥ workers) — serving batches
+    /// stream with zero halo recompute — and [`Walk::Tiled`]
+    /// otherwise, where per-tile fan-out keeps a lone image from
+    /// pinning all but one worker idle.
+    pub walk: Option<Walk>,
 }
 
 impl ExecOpts {
-    /// Exact tile height — no adaptive shrinking (tests and sweeps).
+    /// Exact tile height through the overlapped tiled walk — the PR 3
+    /// baseline (tests, sweeps, and the streaming-vs-tiled bench).
     pub fn tiled(tile_rows: usize) -> Self {
-        Self { tile_rows: Some(tile_rows), workers: None }
+        Self { tile_rows: Some(tile_rows), workers: None, walk: Some(Walk::Tiled) }
+    }
+
+    /// Streaming walk with an explicit advance step (input rows per
+    /// ring slide); `0` feeds the whole image in one step.
+    pub fn streaming(tile_rows: usize) -> Self {
+        Self { tile_rows: Some(tile_rows), workers: None, walk: Some(Walk::Streaming) }
     }
 
     /// One tile per fused chain: the materializing baseline the
-    /// peak-allocation tests compare the tiled walk against.
+    /// peak-allocation tests compare both walks against.
     pub fn materializing() -> Self {
         Self::tiled(0)
     }
@@ -70,18 +110,31 @@ impl ExecOpts {
         self.workers = Some(workers);
         self
     }
+
+    /// Pin the dataflow explicitly.
+    pub fn with_walk(mut self, walk: Walk) -> Self {
+        self.walk = Some(walk);
+        self
+    }
 }
 
-/// Peak intermediate-buffer accounting for one
-/// [`CompiledNetwork::execute_traced`] call: feature maps, branch-arm
-/// input clones and tile ring buffers enter `current` when allocated
-/// and leave when retired; `peak` is the high-water mark. Per-thread
-/// fixed scratch (the im2col gather row, segment registers) is
-/// excluded — it is O(lane length) and independent of tiling.
+/// Execution trace for one [`CompiledNetwork::execute_traced`] call:
+/// peak intermediate-buffer accounting plus the halo-recompute
+/// counter.
+///
+/// Feature maps, branch-arm input clones and ring buffers enter
+/// `current` when allocated and leave when retired; `peak` is the
+/// high-water mark. Per-thread fixed scratch (the im2col gather row,
+/// segment registers) is excluded — it is O(lane length) and
+/// independent of tiling. `halo_rows` counts stage-output rows
+/// computed more than once across tile boundaries: positive for the
+/// tiled walk (it grows with `k` and `1/tile_rows`), **always zero**
+/// for the streaming walk, whose rings retain halo rows instead.
 #[derive(Debug, Default)]
 pub struct AllocStats {
     current: AtomicU64,
     peak: AtomicU64,
+    halo_rows: AtomicU64,
 }
 
 impl AllocStats {
@@ -98,16 +151,23 @@ impl AllocStats {
     pub fn peak_bytes(&self) -> u64 {
         self.peak.load(Ordering::Relaxed)
     }
+
+    /// Stage-output rows computed more than once (tile-boundary halo
+    /// recompute). Zero under the streaming walk.
+    pub fn halo_recompute_rows(&self) -> u64 {
+        self.halo_rows.load(Ordering::Relaxed)
+    }
 }
 
 /// Per-call execution context threaded through the segment walk.
 struct Ctx<'a> {
     plan: &'a CompiledNetwork,
-    /// Output rows per fused tile; 0 = full height (materializing).
+    /// Row granularity; 0 = full height (materializing).
     tile_rows: usize,
-    /// Whether tiles may shrink for load balance (default path only —
-    /// explicit `ExecOpts::tiled` sizes are honored exactly).
+    /// Whether tiled-walk tiles may shrink for load balance (default
+    /// path only — explicit `ExecOpts` sizes are honored exactly).
     adaptive: bool,
+    walk: Walk,
     stats: Option<&'a AllocStats>,
 }
 
@@ -123,6 +183,12 @@ impl Ctx<'_> {
             s.free(bytes);
         }
     }
+
+    fn halo(&self, rows: u64) {
+        if let Some(s) = self.stats {
+            s.halo_rows.fetch_add(rows, Ordering::Relaxed);
+        }
+    }
 }
 
 fn tensor_bytes(t: &Tensor<i32>) -> u64 {
@@ -131,55 +197,69 @@ fn tensor_bytes(t: &Tensor<i32>) -> u64 {
 
 impl CompiledNetwork {
     /// Execute the plan on a Q8.8 input batch (N, C, H, W) with the
-    /// plan's default tile height and the global worker count.
+    /// plan's default tile height, the global worker count, and the
+    /// default walk policy (see [`ExecOpts::walk`]).
     ///
-    /// Returns int32 logits (N, classes) for classifier plans, or the
-    /// final feature map — (N, C', H', W'), or (N, C') after a declared
-    /// global-average head — for conv-only plans. The input spatial
-    /// size may differ from the zoo's recorded `in_hw` — the executor
-    /// derives all spatial extents from the tensor itself (used by
-    /// tests/benches to run scaled workloads).
+    /// Returns int32 logits (N, classes) for classifier plans — FC
+    /// stacks execute for real when compiled — or the final feature
+    /// map for conv-only plans. The input spatial size may differ
+    /// from the zoo's recorded `in_hw` — the executor derives all
+    /// spatial extents from the tensor itself (used by tests/benches
+    /// to run scaled workloads).
     pub fn execute(&self, x: &Tensor<i32>) -> crate::Result<Tensor<i32>> {
         self.execute_opts(x, ExecOpts::default())
     }
 
-    /// [`Self::execute`] with explicit tile height / thread budget.
-    /// Results are bit-identical for every option combination
-    /// (invariant I5); the options only move wall time and peak
-    /// memory.
+    /// [`Self::execute`] with explicit tile height / thread budget /
+    /// walk. Results are bit-identical for every option combination
+    /// (invariant I5); the options only move wall time, peak memory
+    /// and halo recompute.
     pub fn execute_opts(&self, x: &Tensor<i32>, opts: ExecOpts) -> crate::Result<Tensor<i32>> {
-        self.execute_inner(x, opts, None)
+        self.execute_inner(x, opts, None).map(|(t, _)| t)
     }
 
-    /// [`Self::execute_opts`] plus measured peak feature-map bytes —
-    /// the accounting the peak-allocation tests pin fused-vs-
-    /// materializing claims with.
+    /// [`Self::execute_opts`] plus the measured [`AllocStats`]: peak
+    /// feature-map bytes (the accounting the peak-allocation tests pin
+    /// fused-vs-materializing and streaming-vs-tiled claims with) and
+    /// the `halo_recompute_rows` counter (which must read 0 under the
+    /// streaming walk).
     pub fn execute_traced(
         &self,
         x: &Tensor<i32>,
         opts: ExecOpts,
-    ) -> crate::Result<(Tensor<i32>, u64)> {
-        let stats = AllocStats::default();
-        let out = self.execute_inner(x, opts, Some(&stats))?;
-        Ok((out, stats.peak_bytes()))
+    ) -> crate::Result<(Tensor<i32>, AllocStats)> {
+        self.execute_inner(x, opts, Some(()))
     }
 
     fn execute_inner(
         &self,
         x: &Tensor<i32>,
         opts: ExecOpts,
-        stats: Option<&AllocStats>,
-    ) -> crate::Result<Tensor<i32>> {
-        self.check_input(x)?;
+        trace: Option<()>,
+    ) -> crate::Result<(Tensor<i32>, AllocStats)> {
+        let n = self.check_input(x)?;
+        let stats = AllocStats::default();
         let (tile_rows, adaptive) = match opts.tile_rows {
             Some(t) => (t, false),
             None => (self.tile_rows, true),
         };
-        let ctx = Ctx { plan: self, tile_rows, adaptive, stats };
         let workers = opts.workers.unwrap_or_else(worker_count).max(1);
+        let walk = opts.walk.unwrap_or(if n >= workers {
+            Walk::Streaming
+        } else {
+            Walk::Tiled
+        });
+        let ctx = Ctx {
+            plan: self,
+            tile_rows,
+            adaptive,
+            walk,
+            stats: trace.map(|()| &stats),
+        };
         let input = x.clone();
         ctx.alloc(tensor_bytes(&input));
-        run_segments(&ctx, &self.schedule, input, workers)
+        let out = run_segments(&ctx, &self.schedule, input, workers)?;
+        Ok((out, stats))
     }
 }
 
@@ -191,6 +271,20 @@ fn run_segments(
     workers: usize,
 ) -> crate::Result<Tensor<i32>> {
     for seg in segs {
+        if matches!(seg, Segment::Flatten) {
+            // Pure reshape: row-major (N, C, H, W) → (N, C·H·W) —
+            // same buffer, no bytes move, no accounting churn.
+            let [n, c, hh, ww] = match *h.shape() {
+                [n, c, hh, ww] => [n, c, hh, ww],
+                _ => {
+                    return Err(crate::Error::Shape(
+                        "flatten input must be 4-D NCHW".into(),
+                    ))
+                }
+            };
+            h.reshape(&[n, c * hh * ww])?;
+            continue;
+        }
         let prev_bytes = tensor_bytes(&h);
         h = match seg {
             Segment::Fused(stages) => run_fused(ctx, stages, &h, workers)?,
@@ -200,13 +294,16 @@ fn run_segments(
                 ctx.alloc(tensor_bytes(&g));
                 g
             }
-            Segment::Fc => {
-                let fc = ctx.plan.fc.as_ref().ok_or_else(|| {
-                    crate::Error::Config("plan has an Fc op but no compiled head".into())
+            Segment::Flatten => unreachable!("handled above"),
+            Segment::Fc { name } => {
+                let fc = ctx.plan.fc_head(name).ok_or_else(|| {
+                    crate::Error::Config(format!(
+                        "plan has an Fc op for `{name}` but no compiled head"
+                    ))
                 })?;
-                let logits = fc_parallel(fc, &h, ctx.plan.mode, workers)?;
-                ctx.alloc(tensor_bytes(&logits));
-                logits
+                let out = fc_parallel(fc, &h, ctx.plan.mode, workers)?;
+                ctx.alloc(tensor_bytes(&out));
+                out
             }
         };
         // The consumed input retires once its consumer produced.
@@ -218,11 +315,10 @@ fn run_segments(
 /// Branch arms under a shared thread budget: up to `workers` scoped
 /// arm threads (they mostly sleep in their inner fan-out joins), each
 /// walking its segments with a `split_budget` slice — so the arms'
-/// (image, tile) stripes overlap without oversubscribing the host.
-/// With fewer workers than arms, striping makes one arm thread walk
-/// several arms in sequence, so live compute threads never exceed the
-/// budget. Outputs concatenate along channels in arm order, exactly
-/// as before.
+/// stripes overlap without oversubscribing the host. With fewer
+/// workers than arms, striping makes one arm thread walk several arms
+/// in sequence, so live compute threads never exceed the budget.
+/// Outputs concatenate along channels in arm order, exactly as before.
 fn run_branch(
     ctx: &Ctx,
     arms: &[Vec<Segment>],
@@ -259,8 +355,14 @@ struct StageDims {
     out_w: usize,
 }
 
-/// One fused `Conv → ReluRequant [→ Pool]` walk over row tiles of its
-/// final stage.
+fn is_elementwise(op: &PlanOp) -> bool {
+    matches!(op, PlanOp::ReluRequant { .. })
+}
+
+/// One fused `Conv → ReluRequant [→ Pool]` walk: resolve every
+/// stage's geometry from the tensor (not the declared topology —
+/// scaled/off-topology inputs are supported), then dispatch on the
+/// context's walk.
 fn run_fused(
     ctx: &Ctx,
     stages: &[FusedStage],
@@ -271,8 +373,6 @@ fn run_fused(
         [n, c, h, w] => (n, c, h, w),
         _ => return Err(crate::Error::Shape("fused segment input must be 4-D".into())),
     };
-    // Resolve every stage's geometry from the tensor (not the declared
-    // topology — scaled/off-topology inputs are supported).
     let mut dims: Vec<StageDims> = Vec::with_capacity(stages.len());
     let (mut c, mut h, mut w) = (c0, h0, w0);
     for st in stages {
@@ -311,6 +411,26 @@ fn run_fused(
         dims.push(StageDims { in_c: c, in_h: h, in_w: w, out_c: oc, out_h: oh, out_w: ow });
         (c, h, w) = (oc, oh, ow);
     }
+    match ctx.walk {
+        Walk::Streaming => run_fused_streaming(ctx, stages, &dims, x, n, workers),
+        Walk::Tiled => run_fused_tiled(ctx, stages, &dims, x, n, workers),
+    }
+}
+
+// ---------------------------------------------------------------- tiled walk
+
+/// PR 3's overlapped tiling: one work item per (image, output-row
+/// tile) of the final stage, each recomputing its halo rows. Kept as
+/// the explicit baseline walk; `halo_recompute_rows` counts the
+/// duplicated stage-output rows.
+fn run_fused_tiled(
+    ctx: &Ctx,
+    stages: &[FusedStage],
+    dims: &[StageDims],
+    x: &Tensor<i32>,
+    n: usize,
+    workers: usize,
+) -> crate::Result<Tensor<i32>> {
     let last = dims.last().expect("fused segments are non-empty");
     let (oc, oh, ow) = (last.out_c, last.out_h, last.out_w);
 
@@ -333,8 +453,43 @@ fn run_fused(
             t0 = t1;
         }
     }
+
+    // Halo accounting: rows of each stage's output that adjacent
+    // tiles both compute (backward spans overlap by up to k − stride
+    // rows per stage per boundary; summing adjacent-pair overlaps
+    // counts a row computed by j tiles exactly j−1 times). The tile
+    // sequence is identical for every image, so one image's boundary
+    // walk scales by the batch — and each boundary reuses the
+    // previous iteration's spans as its predecessor's.
+    if ctx.stats.is_some() && tile < oh && n > 0 {
+        let m = stages.len();
+        let spans_at = |t0: usize, t1: usize| -> Vec<(usize, usize)> {
+            let mut spans = vec![(0usize, 0usize); m + 1];
+            spans[m] = (t0, t1);
+            for i in (0..m).rev() {
+                spans[i] = stages[i].contract.in_span(spans[i + 1].0, spans[i + 1].1, dims[i].in_h);
+            }
+            spans
+        };
+        let mut per_image = 0u64;
+        let mut prev = spans_at(0, tile.min(oh));
+        let mut t0 = tile;
+        while t0 < oh {
+            let t1 = (t0 + tile).min(oh);
+            let cur = spans_at(t0, t1);
+            for i in 0..m {
+                let lo = cur[i + 1].0.max(prev[i + 1].0);
+                let hi = cur[i + 1].1.min(prev[i + 1].1);
+                per_image += hi.saturating_sub(lo) as u64;
+            }
+            prev = cur;
+            t0 = t1;
+        }
+        ctx.halo(per_image * n as u64);
+    }
+
     let tiles = par_map_with(workers, &items, |_, &(b, t0, t1)| {
-        run_tile(ctx, stages, &dims, x, b, t0, t1)
+        run_tile(ctx, stages, dims, x, b, t0, t1)
     });
 
     let mut out: Tensor<i32> = Tensor::zeros(&[n, oc, oh, ow]);
@@ -343,9 +498,8 @@ fn run_fused(
         let buf = res?;
         for f in 0..oc {
             for y in t0..t1 {
-                let src = buf.index(f, y, 0);
                 let dst = out.idx4(b, f, y, 0);
-                out.data_mut()[dst..dst + ow].copy_from_slice(&buf.data[src..src + ow]);
+                out.data_mut()[dst..dst + ow].copy_from_slice(buf.row(f, y));
             }
         }
         ctx.free(buf.bytes());
@@ -353,85 +507,12 @@ fn run_fused(
     Ok(out)
 }
 
-/// Rows `[y0, y1)` of a single image's (C, H, W) feature map — the
-/// live ring of a tile walk, addressed in global row coordinates.
-struct RowBuf {
-    c: usize,
-    y0: usize,
-    y1: usize,
-    w: usize,
-    data: Vec<i32>,
-}
-
-impl RowBuf {
-    fn new(c: usize, y0: usize, y1: usize, w: usize) -> Self {
-        Self { c, y0, y1, w, data: vec![0; c * (y1 - y0) * w] }
-    }
-
-    fn rows(&self) -> usize {
-        self.y1 - self.y0
-    }
-
-    #[inline]
-    fn index(&self, c: usize, y: usize, x: usize) -> usize {
-        debug_assert!(
-            y >= self.y0 && y < self.y1,
-            "row {y} outside ring [{}, {})",
-            self.y0,
-            self.y1
-        );
-        (c * self.rows() + (y - self.y0)) * self.w + x
-    }
-
-    #[inline]
-    fn get(&self, c: usize, y: usize, x: usize) -> i32 {
-        self.data[self.index(c, y, x)]
-    }
-
-    fn bytes(&self) -> u64 {
-        (self.data.len() * std::mem::size_of::<i32>()) as u64
-    }
-}
-
-/// Where a stage reads its input rows: stage 0 reads straight from
-/// the (already materialized) input tensor — no seed copy — and later
-/// stages read the previous stage's ring.
-enum RowSrc<'a> {
-    Tensor { x: &'a Tensor<i32>, b: usize },
-    Ring(&'a RowBuf),
-}
-
-impl RowSrc<'_> {
-    #[inline]
-    fn get(&self, c: usize, y: usize, xx: usize) -> i32 {
-        match self {
-            RowSrc::Tensor { x, b } => x.get4(*b, c, y, xx),
-            RowSrc::Ring(r) => r.get(c, y, xx),
-        }
-    }
-}
-
-fn row_src<'a>(buf: &'a Option<RowBuf>, x: &'a Tensor<i32>, b: usize) -> RowSrc<'a> {
-    match buf {
-        Some(r) => RowSrc::Ring(r),
-        None => RowSrc::Tensor { x, b },
-    }
-}
-
-/// Retire the previous ring (if any) in favor of its consumer's output.
-fn retire(ctx: &Ctx, buf: &mut Option<RowBuf>, next: RowBuf) {
-    ctx.alloc(next.bytes());
-    if let Some(old) = buf.replace(next) {
-        ctx.free(old.bytes());
-    }
-}
-
 /// One (image, tile) work item: produce final-stage rows `[t0, t1)` by
-/// walking the fused stages over ring buffers. The backward pass
-/// derives each stage's needed input span (tile + halo); the forward
-/// pass computes exactly those rows — stage 0 reading the input tensor
-/// in place, every later stage reading the previous ring — retiring
-/// each ring as its consumer finishes.
+/// walking the fused stages over span rings. The backward pass derives
+/// each stage's needed input span (tile + halo); the forward pass
+/// computes exactly those rows — stage 0 reading the input tensor in
+/// place, every later stage reading the previous ring — retiring each
+/// ring as its consumer finishes.
 fn run_tile(
     ctx: &Ctx,
     stages: &[FusedStage],
@@ -440,7 +521,7 @@ fn run_tile(
     b: usize,
     t0: usize,
     t1: usize,
-) -> crate::Result<RowBuf> {
+) -> crate::Result<RingBuf> {
     let m = stages.len();
     // spans[i] = rows of stage i's INPUT this tile needs; spans[m] is
     // the tile itself. (spans[0] is the tile's read window on the
@@ -452,7 +533,7 @@ fn run_tile(
         spans[i] = stages[i].contract.in_span(o0, o1, dims[i].in_h);
     }
 
-    let mut buf: Option<RowBuf> = None;
+    let mut buf: Option<RingBuf> = None;
     for (i, st) in stages.iter().enumerate() {
         let (o0, o1) = spans[i + 1];
         let d = &dims[i];
@@ -460,6 +541,7 @@ fn run_tile(
             PlanOp::Conv { layer, pad, stride } => {
                 let next = {
                     let src = row_src(&buf, x, b);
+                    let mut out = RingBuf::span(d.out_c, o0, o1, d.out_w);
                     conv_rows(
                         &ctx.plan.convs[*layer],
                         &src,
@@ -469,7 +551,9 @@ fn run_tile(
                         o0,
                         o1,
                         ctx.plan.mode,
-                    )
+                        &mut RowTarget::Ring(&mut out),
+                    );
+                    out
                 };
                 retire(ctx, &mut buf, next);
             }
@@ -478,12 +562,12 @@ fn run_tile(
                     // Lone elementwise segment (never produced by the
                     // zoo's lowering, but kept total): seed its rows
                     // from the input tensor once.
-                    let mut seeded = RowBuf::new(d.in_c, o0, o1, d.in_w);
+                    let mut seeded = RingBuf::span(d.in_c, o0, o1, d.in_w);
                     for cc in 0..d.in_c {
                         for y in o0..o1 {
                             let src = x.idx4(b, cc, y, 0);
-                            let dst = seeded.index(cc, y, 0);
-                            seeded.data[dst..dst + d.in_w]
+                            seeded
+                                .row_mut(cc, y)
                                 .copy_from_slice(&x.data()[src..src + d.in_w]);
                         }
                     }
@@ -499,7 +583,9 @@ fn run_tile(
             PlanOp::Pool(spec) => {
                 let next = {
                     let src = row_src(&buf, x, b);
-                    pool_rows(*spec, &src, d, o0, o1)
+                    let mut out = RingBuf::span(d.in_c, o0, o1, d.out_w);
+                    pool_rows(*spec, &src, d, o0, o1, &mut RowTarget::Ring(&mut out));
+                    out
                 };
                 retire(ctx, &mut buf, next);
             }
@@ -509,9 +595,494 @@ fn run_tile(
     Ok(buf.expect("fused segments are non-empty"))
 }
 
+/// Retire the previous ring (if any) in favor of its consumer's output.
+fn retire(ctx: &Ctx, buf: &mut Option<RingBuf>, next: RingBuf) {
+    ctx.alloc(next.bytes());
+    if let Some(old) = buf.replace(next) {
+        ctx.free(old.bytes());
+    }
+}
+
+// ------------------------------------------------------------ streaming walk
+
+/// Rolling-ring streaming: one producer/consumer pipeline per image,
+/// final-stage rows written straight into the output tensor's image
+/// plane. Images stripe across the worker budget.
+fn run_fused_streaming(
+    ctx: &Ctx,
+    stages: &[FusedStage],
+    dims: &[StageDims],
+    x: &Tensor<i32>,
+    n: usize,
+    workers: usize,
+) -> crate::Result<Tensor<i32>> {
+    let last = dims.last().expect("fused segments are non-empty");
+    let (oc, oh, ow) = (last.out_c, last.out_h, last.out_w);
+    let step = if ctx.tile_rows == 0 { dims[0].in_h } else { ctx.tile_rows.max(1) };
+
+    // Ring capacities depend only on the segment geometry and the
+    // advance step — compute them once, share across every image.
+    let caps = ring_caps(stages, dims, step);
+
+    let mut out: Tensor<i32> = Tensor::zeros(&[n, oc, oh, ow]);
+    ctx.alloc(tensor_bytes(&out));
+    let plane = oc * oh * ow;
+    let threads = workers.clamp(1, n.max(1));
+    let results: Vec<crate::Result<()>> = if threads <= 1 {
+        out.data_mut()
+            .chunks_mut(plane.max(1))
+            .enumerate()
+            .map(|(b, p)| stream_image(ctx, stages, dims, x, b, p, step, &caps))
+            .collect()
+    } else {
+        // Stripe images across scoped threads; each thread owns its
+        // images' disjoint output planes, so no synchronization beyond
+        // the scope join is needed and results are order-deterministic.
+        type ImagePlane<'p> = (usize, &'p mut [i32]);
+        let mut groups: Vec<Vec<ImagePlane>> = (0..threads).map(|_| Vec::new()).collect();
+        for (b, p) in out.data_mut().chunks_mut(plane.max(1)).enumerate() {
+            groups[b % threads].push((b, p));
+        }
+        let mut res: Vec<crate::Result<()>> = Vec::with_capacity(n);
+        std::thread::scope(|s| {
+            let caps = &caps;
+            let handles: Vec<_> = groups
+                .into_iter()
+                .map(|group| {
+                    s.spawn(move || {
+                        group
+                            .into_iter()
+                            .map(|(b, p)| stream_image(ctx, stages, dims, x, b, p, step, caps))
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            for h in handles {
+                res.extend(h.join().expect("stream worker panicked"));
+            }
+        });
+        res
+    };
+    for r in results {
+        r?;
+    }
+    Ok(out)
+}
+
+/// Per-stage advance state shared — in lock-step — by the capacity
+/// pre-pass and the compute pass, so ring capacities are exact.
+struct FlowState {
+    /// Output rows produced so far, per stage.
+    produced: Vec<usize>,
+    /// Retention floor of each stage's output: rows below are dead
+    /// (no remaining reader window reaches them).
+    floor: Vec<usize>,
+    /// Input rows fed to stage 0.
+    fed: usize,
+}
+
+impl FlowState {
+    fn new(m: usize) -> Self {
+        Self { produced: vec![0; m], floor: vec![0; m], fed: 0 }
+    }
+
+    /// Feed up to `step` more input rows and chain every stage's
+    /// `rows_ready → rows_emitted` advance; `writes[i]` receives the
+    /// new output rows `[w0, w1)` stage i computes this step. Floors
+    /// update to the lowest row any remaining reader window needs —
+    /// the reader walk skips past elementwise stages, which mutate
+    /// their producer's storage rather than owning rows. Returns true
+    /// once the input is exhausted (every stage fully produced).
+    fn advance(
+        &mut self,
+        stages: &[FusedStage],
+        dims: &[StageDims],
+        step: usize,
+        writes: &mut [(usize, usize)],
+    ) -> bool {
+        let m = stages.len();
+        let h0 = dims[0].in_h;
+        self.fed = (self.fed + step.max(1)).min(h0);
+        let mut avail = self.fed;
+        for i in 0..m {
+            let e = stages[i]
+                .contract
+                .rows_emitted(avail, dims[i].in_h, dims[i].out_h)
+                .max(self.produced[i]);
+            writes[i] = (self.produced[i], e);
+            self.produced[i] = e;
+            avail = e;
+        }
+        for i in 0..m {
+            let mut lo = self.produced[i];
+            let mut j = i + 1;
+            while j < m {
+                let c = &stages[j].contract;
+                let need = if self.produced[j] >= dims[j].out_h {
+                    self.produced[i] // reader finished: frees the ring
+                } else {
+                    (self.produced[j] * c.stride).saturating_sub(c.pad)
+                };
+                lo = lo.min(need);
+                if !is_elementwise(&stages[j].op) {
+                    break;
+                }
+                j += 1;
+            }
+            self.floor[i] = self.floor[i].max(lo.min(self.produced[i]));
+        }
+        self.fed >= h0
+    }
+}
+
+/// Shared plumbing of one streaming Conv/Pool stage: take the stage's
+/// ring out, resolve the row source (input tensor for stage 0, the
+/// producer's ring otherwise) and the row target (own ring grown to
+/// the new watermark, or the output plane for the sink), run the
+/// kernel, put the ring back. Conv and pool stages differ only in the
+/// kernel they pass.
+#[allow(clippy::too_many_arguments)]
+fn windowed_stage(
+    rings: &mut [Option<RingBuf>],
+    owner: &[usize],
+    i: usize,
+    x: &Tensor<i32>,
+    b: usize,
+    out_plane: &mut [i32],
+    d: &StageDims,
+    w1: usize,
+    kernel: impl FnOnce(&RowSrc, &mut RowTarget),
+) {
+    let mut dst = rings[i].take();
+    {
+        let src = if i == 0 {
+            RowSrc::Tensor { x, b }
+        } else {
+            RowSrc::Ring(rings[owner[i - 1]].as_ref().expect("producer ring"))
+        };
+        let mut target = match &mut dst {
+            Some(r) => {
+                r.grow_to(w1);
+                RowTarget::Ring(r)
+            }
+            None => RowTarget::Plane { data: &mut *out_plane, h: d.out_h, w: d.out_w },
+        };
+        kernel(&src, &mut target);
+    }
+    rings[i] = dst;
+}
+
+/// Exact per-stage ring capacities for one segment walk: run the
+/// advance arithmetic without computing anything, recording each
+/// ring's max live rows (produced watermark after a step minus the
+/// retention floor before it). Depends only on the segment geometry
+/// and the step, never on image contents.
+fn ring_caps(stages: &[FusedStage], dims: &[StageDims], step: usize) -> Vec<usize> {
+    let m = stages.len();
+    let mut caps = vec![0usize; m];
+    let mut floor_before = vec![0usize; m];
+    let mut flow = FlowState::new(m);
+    let mut writes = vec![(0usize, 0usize); m];
+    loop {
+        floor_before.copy_from_slice(&flow.floor);
+        let done = flow.advance(stages, dims, step, &mut writes);
+        for i in 0..m {
+            caps[i] = caps[i].max(flow.produced[i] - floor_before[i]);
+        }
+        if done {
+            return caps;
+        }
+    }
+}
+
+/// Stream one image through a fused segment: the compute pass slides
+/// the pre-sized rolling rings ([`ring_caps`]) down the image — halo
+/// rows are retained across steps, never recomputed — with the final
+/// stage writing straight into `out_plane` (the image's slice of the
+/// output tensor, (C, H, W) row-major).
+#[allow(clippy::too_many_arguments)]
+fn stream_image(
+    ctx: &Ctx,
+    stages: &[FusedStage],
+    dims: &[StageDims],
+    x: &Tensor<i32>,
+    b: usize,
+    out_plane: &mut [i32],
+    step: usize,
+    caps: &[usize],
+) -> crate::Result<()> {
+    let m = stages.len();
+    let Some(sink) = stages.iter().rposition(|s| !is_elementwise(&s.op)) else {
+        // Lone elementwise segment: seed from the input, mutate in
+        // place (never produced by the zoo's lowering, kept total).
+        let d = &dims[0];
+        for cc in 0..d.in_c {
+            for y in 0..d.in_h {
+                let src = x.idx4(b, cc, y, 0);
+                let dst = (cc * d.in_h + y) * d.in_w;
+                out_plane[dst..dst + d.in_w]
+                    .copy_from_slice(&x.data()[src..src + d.in_w]);
+            }
+        }
+        for st in stages {
+            if let PlanOp::ReluRequant { frac_bits } = &st.op {
+                for v in out_plane.iter_mut() {
+                    *v = requantize(*v, *frac_bits).max(0);
+                }
+            }
+        }
+        return Ok(());
+    };
+
+    // Storage owner per stage: elementwise stages mutate their
+    // producer's storage; the sink writes the output plane; every
+    // other Conv/Pool stage owns a rolling ring.
+    let mut owner = vec![0usize; m];
+    for i in 0..m {
+        owner[i] = if is_elementwise(&stages[i].op) {
+            debug_assert!(i > 0, "leading elementwise handled above");
+            owner[i - 1]
+        } else {
+            i
+        };
+    }
+
+    let mut rings: Vec<Option<RingBuf>> = (0..m)
+        .map(|i| {
+            if i != sink && !is_elementwise(&stages[i].op) {
+                Some(RingBuf::with_capacity(dims[i].out_c, caps[i].max(1), dims[i].out_w))
+            } else {
+                None
+            }
+        })
+        .collect();
+    for r in rings.iter().flatten() {
+        ctx.alloc(r.bytes());
+    }
+
+    // Compute pass, in lock-step with the pre-pass.
+    let mut flow = FlowState::new(m);
+    let mut writes = vec![(0usize, 0usize); m];
+    loop {
+        let done = flow.advance(stages, dims, step, &mut writes);
+        for (i, st) in stages.iter().enumerate() {
+            let (w0, w1) = writes[i];
+            if w0 >= w1 {
+                continue;
+            }
+            let d = &dims[i];
+            match &st.op {
+                PlanOp::Conv { layer, pad, stride } => {
+                    windowed_stage(&mut rings, &owner, i, x, b, out_plane, d, w1, |src, dst| {
+                        conv_rows(
+                            &ctx.plan.convs[*layer],
+                            src,
+                            d,
+                            *pad,
+                            *stride,
+                            w0,
+                            w1,
+                            ctx.plan.mode,
+                            dst,
+                        )
+                    });
+                }
+                PlanOp::Pool(spec) => {
+                    windowed_stage(&mut rings, &owner, i, x, b, out_plane, d, w1, |src, dst| {
+                        pool_rows(*spec, src, d, w0, w1, dst)
+                    });
+                }
+                PlanOp::ReluRequant { frac_bits } => {
+                    // Mutate the freshly produced rows of the owner's
+                    // storage in place — retained halo rows were
+                    // activated in earlier steps and must not be
+                    // re-requantized.
+                    let o = owner[i];
+                    if o == sink {
+                        for cc in 0..d.in_c {
+                            for y in w0..w1 {
+                                let s = (cc * d.in_h + y) * d.in_w;
+                                for v in &mut out_plane[s..s + d.in_w] {
+                                    *v = requantize(*v, *frac_bits).max(0);
+                                }
+                            }
+                        }
+                    } else {
+                        let r = rings[o].as_mut().expect("producer ring");
+                        for cc in 0..d.in_c {
+                            for y in w0..w1 {
+                                for v in r.row_mut(cc, y) {
+                                    *v = requantize(*v, *frac_bits).max(0);
+                                }
+                            }
+                        }
+                    }
+                }
+                _ => unreachable!("run_fused validated the stage ops"),
+            }
+        }
+        // Slide: drop rows no remaining reader window needs.
+        for i in 0..m {
+            if let Some(r) = rings[i].as_mut() {
+                r.retire_below(flow.floor[i]);
+            }
+        }
+        if done {
+            break;
+        }
+    }
+    for r in rings.iter().flatten() {
+        ctx.free(r.bytes());
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------- row storage
+
+/// Rows `[y0, y1)` of one image's (C, rows, W) feature map, stored
+/// modulo `cap` — the rolling ring of the streaming walk. With
+/// `cap == y1 − y0` it degenerates to the tiled walk's span buffer
+/// (global row coordinates, no wraparound in practice). Capacity is
+/// exact by construction (`y1 − y0 ≤ cap` always), so a retained row
+/// is never overwritten before its last reader: two live rows cannot
+/// collide modulo `cap`.
+struct RingBuf {
+    c: usize,
+    w: usize,
+    cap: usize,
+    /// Retention floor: rows below are dead.
+    y0: usize,
+    /// Produced watermark: rows `[y0, y1)` are live.
+    y1: usize,
+    data: Vec<i32>,
+}
+
+impl RingBuf {
+    /// Empty rolling ring holding at most `cap` rows at once.
+    fn with_capacity(c: usize, cap: usize, w: usize) -> Self {
+        debug_assert!(cap > 0);
+        Self { c, w, cap, y0: 0, y1: 0, data: vec![0; c * cap * w] }
+    }
+
+    /// Fully live span `[y0, y1)` (the tiled walk's buffer shape).
+    fn span(c: usize, y0: usize, y1: usize, w: usize) -> Self {
+        debug_assert!(y1 > y0, "empty span ring");
+        Self { c, w, cap: y1 - y0, y0, y1, data: vec![0; c * (y1 - y0) * w] }
+    }
+
+    #[inline]
+    fn slot(&self, c: usize, y: usize) -> usize {
+        (c * self.cap + y % self.cap) * self.w
+    }
+
+    #[inline]
+    fn get(&self, c: usize, y: usize, x: usize) -> i32 {
+        debug_assert!(
+            y >= self.y0 && y < self.y1,
+            "row {y} outside ring [{}, {})",
+            self.y0,
+            self.y1
+        );
+        self.data[self.slot(c, y) + x]
+    }
+
+    #[inline]
+    fn put(&mut self, c: usize, y: usize, x: usize, v: i32) {
+        debug_assert!(
+            y >= self.y0 && y < self.y0 + self.cap,
+            "row {y} outside ring window [{}, {})",
+            self.y0,
+            self.y0 + self.cap
+        );
+        let i = self.slot(c, y) + x;
+        self.data[i] = v;
+    }
+
+    #[inline]
+    fn row(&self, c: usize, y: usize) -> &[i32] {
+        debug_assert!(y >= self.y0 && y < self.y1);
+        let i = self.slot(c, y);
+        &self.data[i..i + self.w]
+    }
+
+    #[inline]
+    fn row_mut(&mut self, c: usize, y: usize) -> &mut [i32] {
+        debug_assert!(y >= self.y0 && y < self.y0 + self.cap);
+        let i = self.slot(c, y);
+        &mut self.data[i..i + self.w]
+    }
+
+    /// Raise the produced watermark (rows about to be written).
+    fn grow_to(&mut self, y1: usize) {
+        debug_assert!(
+            y1 >= self.y1 && y1 - self.y0 <= self.cap,
+            "grow to {y1} overflows ring [{}, +{}]",
+            self.y0,
+            self.cap
+        );
+        self.y1 = y1;
+    }
+
+    /// Raise the retention floor (halo rows below are dead).
+    fn retire_below(&mut self, y0: usize) {
+        debug_assert!(y0 >= self.y0 && y0 <= self.y1);
+        self.y0 = y0;
+    }
+
+    fn bytes(&self) -> u64 {
+        (self.data.len() * std::mem::size_of::<i32>()) as u64
+    }
+}
+
+/// Where a stage reads its input rows: stage 0 reads straight from
+/// the (already materialized) input tensor — no seed copy — and later
+/// stages read the previous stage's ring.
+enum RowSrc<'a> {
+    Tensor { x: &'a Tensor<i32>, b: usize },
+    Ring(&'a RingBuf),
+}
+
+impl RowSrc<'_> {
+    #[inline]
+    fn get(&self, c: usize, y: usize, xx: usize) -> i32 {
+        match self {
+            RowSrc::Tensor { x, b } => x.get4(*b, c, y, xx),
+            RowSrc::Ring(r) => r.get(c, y, xx),
+        }
+    }
+}
+
+fn row_src<'a>(buf: &'a Option<RingBuf>, x: &'a Tensor<i32>, b: usize) -> RowSrc<'a> {
+    match buf {
+        Some(r) => RowSrc::Ring(r),
+        None => RowSrc::Tensor { x, b },
+    }
+}
+
+/// Where a stage writes its output rows: a ring (tiled span or
+/// streaming rolling ring) or a full (C, H, W) plane — the streaming
+/// sink writes the output tensor's image slice directly, so no
+/// per-tile staging buffer ever exists.
+enum RowTarget<'a> {
+    Ring(&'a mut RingBuf),
+    Plane { data: &'a mut [i32], h: usize, w: usize },
+}
+
+impl RowTarget<'_> {
+    #[inline]
+    fn put(&mut self, c: usize, y: usize, x: usize, v: i32) {
+        match self {
+            RowTarget::Ring(r) => r.put(c, y, x, v),
+            RowTarget::Plane { data, h, w } => data[(c * *h + y) * *w + x] = v,
+        }
+    }
+}
+
+// ------------------------------------------------------------------ kernels
+
 /// Integer conv over pre-kneaded filter lanes, producing output rows
-/// `[o0, o1)` from its source (input tensor in place, or the previous
-/// ring). Identical arithmetic to the scalar references: same
+/// `[o0, o1)` from its source (input tensor in place, or a ring) into
+/// its target. Identical arithmetic to the scalar references: same
 /// (c, ky, kx) gather order, same group windows, same `i64 → i32`
 /// cast.
 #[allow(clippy::too_many_arguments)]
@@ -524,11 +1095,11 @@ fn conv_rows(
     o0: usize,
     o1: usize,
     mode: crate::config::Mode,
-) -> RowBuf {
+    out: &mut RowTarget,
+) {
     let (kh, kw) = (conv.kh, conv.kw);
     let lane_len = conv.lane_len();
     let ow = d.out_w;
-    let mut out = RowBuf::new(conv.out_c, o0, o1, ow);
     let mut acts = vec![0i32; lane_len];
     let mut segs = SegmentRegisters::new(mode.weight_bits());
     for oy in o0..o1 {
@@ -560,13 +1131,11 @@ fn conv_rows(
                     let end = (start + klane.ks).min(lane_len);
                     split_kneaded(group, &acts[start..end], &mut segs);
                 }
-                let oi = out.index(f, oy, ox);
-                out.data[oi] = rear_adder_tree(segs.values()) as i32;
+                out.put(f, oy, ox, rear_adder_tree(segs.values()) as i32);
                 segs.reset();
             }
         }
     }
-    out
 }
 
 // The pool/GAP/relu bodies below duplicate the scalar reference paths
@@ -576,12 +1145,18 @@ fn conv_rows(
 // shared half. The I5 suites exercise every one of these ops on both
 // paths, so any drift fails loudly.
 
-/// Parameterized integer pool (Caffe ceil-mode geometry) over a ring,
-/// producing output rows `[o0, o1)`.
-fn pool_rows(spec: PoolSpec, input: &RowSrc, d: &StageDims, o0: usize, o1: usize) -> RowBuf {
+/// Parameterized integer pool (Caffe ceil-mode geometry), producing
+/// output rows `[o0, o1)`.
+fn pool_rows(
+    spec: PoolSpec,
+    input: &RowSrc,
+    d: &StageDims,
+    o0: usize,
+    o1: usize,
+    out: &mut RowTarget,
+) {
     let (k, stride, pad) = (spec.k, spec.stride, spec.pad);
     let ow = d.out_w;
-    let mut out = RowBuf::new(d.in_c, o0, o1, ow);
     for cc in 0..d.in_c {
         for oy in o0..o1 {
             // Window rows clipped to the input (pad taps excluded).
@@ -611,12 +1186,10 @@ fn pool_rows(spec: PoolSpec, input: &RowSrc, d: &StageDims, o0: usize, o1: usize
                         s.div_euclid(taps) as i32
                     }
                 };
-                let oi = out.index(cc, oy, ox);
-                out.data[oi] = v;
+                out.put(cc, oy, ox, v);
             }
         }
     }
-    out
 }
 
 /// Concatenate feature maps along the channel axis (branch arm order).
@@ -673,8 +1246,10 @@ fn global_avg_pool(x: &Tensor<i32>) -> crate::Result<Tensor<i32>> {
     Ok(feats)
 }
 
-/// FC head over pre-kneaded class lanes, parallel across batch rows
-/// within the caller's thread budget.
+/// One FC layer over pre-kneaded lanes, parallel across batch rows
+/// within the caller's thread budget. Every head but the stack's last
+/// is activation-fused (`CompiledFc::relu`): ReLU + requantization by
+/// the head's `frac_bits`, mirroring the conv stages.
 fn fc_parallel(
     fc: &CompiledFc,
     x: &Tensor<i32>,
@@ -683,29 +1258,35 @@ fn fc_parallel(
 ) -> crate::Result<Tensor<i32>> {
     let [n, d] = match *x.shape() {
         [n, d] => [n, d],
-        _ => return Err(crate::Error::Shape("FC input must be 2-D (N, feat)".into())),
+        _ => {
+            return Err(crate::Error::Shape(format!(
+                "FC `{}` input must be 2-D (N, feat)",
+                fc.name
+            )))
+        }
     };
     if d != fc.feat_dim {
         return Err(crate::Error::Shape(format!(
-            "FC feature dim {d} != compiled {}",
-            fc.feat_dim
+            "FC `{}` feature dim {d} != compiled {}",
+            fc.name, fc.feat_dim
         )));
     }
     let items: Vec<usize> = (0..n).collect();
     let rows: Vec<Vec<i32>> = par_map_with(workers, &items, |_, &b| {
         let acts = &x.data()[b * d..(b + 1) * d];
         let mut segs = SegmentRegisters::new(mode.weight_bits());
-        let mut logits = vec![0i32; fc.classes];
+        let mut out_row = vec![0i32; fc.classes];
         for (k, klane) in fc.lanes.iter().enumerate() {
             for (g, group) in klane.groups.iter().enumerate() {
                 let start = g * klane.ks;
                 let end = (start + klane.ks).min(d);
                 split_kneaded(group, &acts[start..end], &mut segs);
             }
-            logits[k] = rear_adder_tree(segs.values()) as i32;
+            let v = rear_adder_tree(segs.values()) as i32;
+            out_row[k] = if fc.relu { requantize(v, fc.frac_bits).max(0) } else { v };
             segs.reset();
         }
-        logits
+        out_row
     });
     let mut out: Tensor<i32> = Tensor::zeros(&[n, fc.classes]);
     for (b, row) in rows.iter().enumerate() {
@@ -719,9 +1300,26 @@ mod tests {
     use super::*;
     use crate::config::Mode;
     use crate::coordinator::SacBackend;
-    use crate::model::zoo;
+    use crate::model::{zoo, Network, TopoOp};
     use crate::plan::CompiledNetwork;
     use crate::util::rng::Rng;
+
+    /// The tiny CNN with its 2×2 stride-2 pools swapped for 3×3
+    /// stride-2 (ceil mode keeps the exact same 16 → 8 → 4 spatial
+    /// chain, so the declared layer shapes still validate). With
+    /// k > stride the pools' input windows overlap across tiles, so
+    /// the tiled walk measurably recomputes halo rows — the recompute
+    /// the streaming walk exists to eliminate. (The stock tiny CNN's
+    /// k == stride pools have disjoint windows and no halo at all.)
+    fn tiny_with_overlapping_pools() -> Network {
+        let mut net = zoo::tiny_cnn();
+        for op in net.schedule.iter_mut() {
+            if let TopoOp::Pool(p) = op {
+                *p = PoolSpec::max(3, 2, 0);
+            }
+        }
+        net
+    }
 
     fn image_batch(n: usize, seed: u64) -> Tensor<i32> {
         let mut t = Tensor::zeros(&[n, 1, 16, 16]);
@@ -732,14 +1330,16 @@ mod tests {
         t
     }
 
-    /// Wrap a single-image NCHW tensor as a full-height ring.
-    fn buf_of(x: &Tensor<i32>) -> RowBuf {
+    /// Wrap a single-image NCHW tensor as a full-height span ring.
+    fn buf_of(x: &Tensor<i32>) -> RingBuf {
         let [n, c, h, w] = match *x.shape() {
             [n, c, h, w] => [n, c, h, w],
             _ => panic!("4-D input"),
         };
         assert_eq!(n, 1, "single image");
-        RowBuf { c, y0: 0, y1: h, w, data: x.data().to_vec() }
+        let mut r = RingBuf::span(c, 0, h, w);
+        r.data.copy_from_slice(x.data());
+        r
     }
 
     fn pool_dims(c: usize, h: usize, w: usize, spec: PoolSpec) -> StageDims {
@@ -751,6 +1351,12 @@ mod tests {
             out_h: spec.out_hw(h).unwrap(),
             out_w: spec.out_hw(w).unwrap(),
         }
+    }
+
+    fn pool_to_ring(spec: PoolSpec, src: &RowSrc, d: &StageDims, o0: usize, o1: usize) -> RingBuf {
+        let mut out = RingBuf::span(d.in_c, o0, o1, d.out_w);
+        pool_rows(spec, src, d, o0, o1, &mut RowTarget::Ring(&mut out));
+        out
     }
 
     #[test]
@@ -772,20 +1378,26 @@ mod tests {
     }
 
     #[test]
-    fn tile_height_and_budget_never_change_logits() {
-        // Invariant I5 over tilings: every tile height (dividing the
-        // output rows or not), the materializing baseline, and every
-        // thread budget produce bit-identical logits.
+    fn tile_height_budget_and_walk_never_change_logits() {
+        // Invariant I5 over tilings AND walks: every tile height
+        // (dividing the output rows or not), the materializing
+        // baseline, every thread budget, and both dataflows produce
+        // bit-identical logits.
         let w = SacBackend::synthetic_weights(9).unwrap();
         let plan = CompiledNetwork::compile(&zoo::tiny_cnn(), &w, 16, Mode::Fp16).unwrap();
         let x = image_batch(2, 3);
         let want = plan.execute_opts(&x, ExecOpts::materializing()).unwrap();
         for tile in [1usize, 2, 3, 5, 7, 100] {
             for workers in [1usize, 3, 8] {
-                let got = plan
-                    .execute_opts(&x, ExecOpts::tiled(tile).with_workers(workers))
-                    .unwrap();
-                assert_eq!(got, want, "tile={tile} workers={workers}");
+                for walk in [Walk::Tiled, Walk::Streaming] {
+                    let got = plan
+                        .execute_opts(
+                            &x,
+                            ExecOpts::tiled(tile).with_workers(workers).with_walk(walk),
+                        )
+                        .unwrap();
+                    assert_eq!(got, want, "tile={tile} workers={workers} walk={walk:?}");
+                }
             }
         }
         assert_eq!(plan.execute(&x).unwrap(), want, "default path drifted");
@@ -796,17 +1408,70 @@ mod tests {
         let w = SacBackend::synthetic_weights(4).unwrap();
         let plan = CompiledNetwork::compile(&zoo::tiny_cnn(), &w, 16, Mode::Fp16).unwrap();
         let x = image_batch(1, 7);
-        let (full, peak_full) = plan
+        let (full, t_full) = plan
             .execute_traced(&x, ExecOpts::materializing().with_workers(1))
             .unwrap();
-        let (tiled, peak_tiled) = plan
+        let (tiled, t_tiled) = plan
             .execute_traced(&x, ExecOpts::tiled(1).with_workers(1))
             .unwrap();
         assert_eq!(full, tiled);
         assert!(
-            peak_tiled < peak_full,
-            "tiled peak {peak_tiled} not below materializing peak {peak_full}"
+            t_tiled.peak_bytes() < t_full.peak_bytes(),
+            "tiled peak {} not below materializing peak {}",
+            t_tiled.peak_bytes(),
+            t_full.peak_bytes()
         );
+    }
+
+    #[test]
+    fn streaming_retains_halo_rows_instead_of_recomputing() {
+        let w = SacBackend::synthetic_weights(6).unwrap();
+        let plan =
+            CompiledNetwork::compile(&tiny_with_overlapping_pools(), &w, 16, Mode::Fp16)
+                .unwrap();
+        let x = image_batch(2, 11);
+        let (tiled, t_tiled) = plan
+            .execute_traced(&x, ExecOpts::tiled(2).with_workers(1))
+            .unwrap();
+        let (streamed, t_stream) = plan
+            .execute_traced(&x, ExecOpts::streaming(2).with_workers(1))
+            .unwrap();
+        assert_eq!(tiled, streamed, "walks diverged");
+        assert!(
+            t_tiled.halo_recompute_rows() > 0,
+            "2-row tiles over 3×3 stride-2 pools must recompute halo rows"
+        );
+        assert_eq!(
+            t_stream.halo_recompute_rows(),
+            0,
+            "streaming walk recomputed halo rows"
+        );
+        assert!(
+            t_stream.peak_bytes() <= t_tiled.peak_bytes(),
+            "streaming peak {} above tiled peak {}",
+            t_stream.peak_bytes(),
+            t_tiled.peak_bytes()
+        );
+    }
+
+    #[test]
+    fn default_walk_streams_covered_batches_and_tiles_lone_images() {
+        let w = SacBackend::synthetic_weights(8).unwrap();
+        let plan =
+            CompiledNetwork::compile(&tiny_with_overlapping_pools(), &w, 16, Mode::Fp16)
+                .unwrap();
+        // Batch ≥ workers → streaming → zero halo recompute.
+        let x2 = image_batch(2, 13);
+        let opts = ExecOpts { workers: Some(1), ..ExecOpts::default() };
+        let (_, t) = plan.execute_traced(&x2, opts).unwrap();
+        assert_eq!(t.halo_recompute_rows(), 0, "covered batch should stream");
+        // Lone image under a wide budget → tiled fan-out. The default
+        // 4-row tiles shrink adaptively to 1-row tiles to feed 8
+        // workers, so the overlapping pool windows recompute rows.
+        let x1 = image_batch(1, 13);
+        let opts = ExecOpts { workers: Some(8), ..ExecOpts::default() };
+        let (_, t) = plan.execute_traced(&x1, opts).unwrap();
+        assert!(t.halo_recompute_rows() > 0, "lone image should tile");
     }
 
     #[test]
@@ -814,11 +1479,11 @@ mod tests {
         let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1, 9, -4, 3]).unwrap();
         let spec = PoolSpec::max(2, 2, 0);
         let buf = buf_of(&x);
-        let p = pool_rows(spec, &RowSrc::Ring(&buf), &pool_dims(1, 2, 2, spec), 0, 1);
-        assert_eq!((p.c, p.rows(), p.w), (1, 1, 1));
+        let p = pool_to_ring(spec, &RowSrc::Ring(&buf), &pool_dims(1, 2, 2, spec), 0, 1);
+        assert_eq!((p.c, p.y1 - p.y0, p.w), (1, 1, 1));
         assert_eq!(p.data, &[9]);
         // Stage 0 reads the tensor in place — same values either way.
-        let q = pool_rows(
+        let q = pool_to_ring(
             spec,
             &RowSrc::Tensor { x: &x, b: 0 },
             &pool_dims(1, 2, 2, spec),
@@ -837,8 +1502,8 @@ mod tests {
         let x = Tensor::from_vec(&[1, 1, 1, 8], vec![0, 1, 2, 3, 4, 5, 6, -7]).unwrap();
         let spec = PoolSpec::max(3, 2, 1);
         let buf = buf_of(&x);
-        let p = pool_rows(spec, &RowSrc::Ring(&buf), &pool_dims(1, 1, 8, spec), 0, 1);
-        assert_eq!((p.c, p.rows(), p.w), (1, 1, 5));
+        let p = pool_to_ring(spec, &RowSrc::Ring(&buf), &pool_dims(1, 1, 8, spec), 0, 1);
+        assert_eq!((p.c, p.y1 - p.y0, p.w), (1, 1, 5));
         assert_eq!(p.data, &[1, 3, 5, 6, -7]);
     }
 
@@ -847,15 +1512,34 @@ mod tests {
         let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1, 2, 3, -5]).unwrap();
         let buf = buf_of(&x);
         let spec = PoolSpec::avg(2, 2, 0);
-        let p = pool_rows(spec, &RowSrc::Ring(&buf), &pool_dims(1, 2, 2, spec), 0, 1);
+        let p = pool_to_ring(spec, &RowSrc::Ring(&buf), &pool_dims(1, 2, 2, spec), 0, 1);
         // (1+2+3-5) = 1, 4 taps → 1.div_euclid(4) = 0.
         assert_eq!(p.data, &[0]);
         // Padded window clips to in-bounds taps: pad 1, k 2, stride 2 →
         // out 2×2, each window holds exactly one in-bounds value.
         let spec = PoolSpec::avg(2, 2, 1);
-        let p = pool_rows(spec, &RowSrc::Ring(&buf), &pool_dims(1, 2, 2, spec), 0, 2);
-        assert_eq!((p.c, p.rows(), p.w), (1, 2, 2));
+        let p = pool_to_ring(spec, &RowSrc::Ring(&buf), &pool_dims(1, 2, 2, spec), 0, 2);
+        assert_eq!((p.c, p.y1 - p.y0, p.w), (1, 2, 2));
         assert_eq!(p.data, &[1, 2, 3, -5]);
+    }
+
+    #[test]
+    fn ring_buf_wraps_rows_modulo_capacity() {
+        // A 3-row ring sliding down a 6-row map: writes land modulo
+        // cap, retained rows survive the slide, dead rows get reused.
+        let mut r = RingBuf::with_capacity(1, 3, 2);
+        r.grow_to(3);
+        for y in 0..3 {
+            r.row_mut(0, y).copy_from_slice(&[y as i32; 2]);
+        }
+        assert_eq!(r.row(0, 0), &[0, 0]);
+        r.retire_below(2); // rows 0–1 dead
+        r.grow_to(5); // rows 3–4 overwrite slots 0–1
+        r.row_mut(0, 3).copy_from_slice(&[3, 3]);
+        r.row_mut(0, 4).copy_from_slice(&[4, 4]);
+        assert_eq!(r.row(0, 2), &[2, 2], "retained row survived the slide");
+        assert_eq!(r.row(0, 3), &[3, 3]);
+        assert_eq!(r.row(0, 4), &[4, 4]);
     }
 
     #[test]
@@ -874,6 +1558,8 @@ mod tests {
     // Plan ≡ scalar-forward equivalence (invariant I5) lives in
     // rust/tests/plan_exec.rs (tiny CNN / VGG block) and
     // rust/tests/plan_topology.rs (full declared-topology zoo); the
-    // tile-sweep extension in rust/tests/plan_tiling.rs;
-    // zero-rekneading in plan_zero_knead.rs.
+    // tile-sweep extension in rust/tests/plan_tiling.rs; the
+    // streaming-vs-tiled property sweep and FC-stack logits pins in
+    // rust/tests/plan_streaming.rs; zero-rekneading in
+    // plan_zero_knead.rs.
 }

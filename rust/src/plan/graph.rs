@@ -33,8 +33,20 @@ pub enum PlanOp {
     /// Global average pool: i64 sum then floor division (matches the
     /// Python pipeline's `jnp` floor-divide), (N,C,H,W) → (N,C).
     GlobalAvgPool,
-    /// Fully connected head over the pre-kneaded class lanes.
-    Fc,
+    /// Flatten a (N, C, H, W) trunk into (N, C·H·W) feature rows — the
+    /// entry into an FC stack that does **not** follow a
+    /// `GlobalAvgPool` (VGG's fc6 consumes the raw 512×7×7 block-5
+    /// map). Row-major NCHW layout makes this a pure reshape: no data
+    /// moves, and the flattened order matches the OIHW order the FC
+    /// weight lanes were kneaded in.
+    Flatten,
+    /// One fully connected layer over the pre-kneaded lanes of the
+    /// weight layer `name`. Every head of a declared FC stack (VGG
+    /// fc6–8, GoogleNet loss3/classifier) lowers to its own op; all
+    /// but the stack's last head are activation-fused
+    /// (ReLU + requantization by the weight layer's `frac_bits`),
+    /// mirroring the published topologies.
+    Fc { name: String },
 }
 
 /// Per-op row-tile contract: how many input rows a span of output rows
@@ -71,6 +83,32 @@ impl RowContract {
             .clamp(lo, in_h);
         (lo, hi)
     }
+
+    /// The forward dual of [`RowContract::in_span`] — the per-stage
+    /// `rows_ready → rows_emitted` advance function the streaming
+    /// pipeline chains through a fused segment: given that the first
+    /// `ready` of `in_h` input rows exist, how many output rows (of
+    /// `out_h` total) are computable, i.e. have their whole (clipped)
+    /// window inside `[0, ready)`.
+    ///
+    /// Duality: for any output span `[o0, o1)`,
+    /// `rows_emitted(in_span(o0, o1).1) >= o1` — feeding a tile's halo
+    /// makes the tile emittable. Ceil-mode windows hanging off the
+    /// bottom edge only complete once the *entire* input has arrived
+    /// (`ready == in_h`), exactly when their clipped form is final.
+    pub fn rows_emitted(&self, ready: usize, in_h: usize, out_h: usize) -> usize {
+        debug_assert!(ready <= in_h, "ready {ready} beyond input {in_h}");
+        if ready == in_h {
+            return out_h;
+        }
+        // Output row o reads input rows [o·s − pad, o·s + k − pad)
+        // clipped to [0, in_h); with ready < in_h the clip cannot help,
+        // so o is emittable iff o·s + k − pad ≤ ready.
+        if ready + self.pad < self.k {
+            return 0;
+        }
+        (((ready + self.pad - self.k) / self.stride) + 1).min(out_h)
+    }
 }
 
 /// One stage of a fused tile walk: a fusable op plus the row contract
@@ -97,7 +135,11 @@ pub enum Segment {
     /// along channels in arm order.
     Branch(Vec<Vec<Segment>>),
     GlobalAvgPool,
-    Fc,
+    /// Reshape (N, C, H, W) → (N, C·H·W): free in row-major layout.
+    Flatten,
+    /// One compiled FC lane set, looked up by head name
+    /// ([`CompiledNetwork::fc_head`](super::CompiledNetwork::fc_head)).
+    Fc { name: String },
 }
 
 /// Group a lowered op list into the tile schedule the executor walks:
@@ -160,8 +202,12 @@ pub fn segment_plan(ops: &[PlanOp], layers: &[ConvLayer]) -> Vec<Segment> {
                 segs.push(Segment::GlobalAvgPool);
                 i += 1;
             }
-            PlanOp::Fc => {
-                segs.push(Segment::Fc);
+            PlanOp::Flatten => {
+                segs.push(Segment::Flatten);
+                i += 1;
+            }
+            PlanOp::Fc { name } => {
+                segs.push(Segment::Fc { name: name.clone() });
                 i += 1;
             }
         }
@@ -197,6 +243,12 @@ struct Lowering<'a> {
     used: Vec<bool>,
     saw_gap: bool,
     saw_fc: bool,
+    /// Whether the declared FC stack is executable (every head has a
+    /// weight layer) or declaration-only (none does). Set by the first
+    /// `TopoOp::Fc`; a stack mixing weighted and weightless heads is
+    /// rejected — executing half a classifier would serve neither the
+    /// trunk nor the logits.
+    fc_exec: Option<bool>,
 }
 
 impl Lowering<'_> {
@@ -382,48 +434,51 @@ impl Lowering<'_> {
                             self.net.name, spec.name
                         )));
                     }
-                    match self.weights.layer(&spec.name) {
-                        // Declaration-only head (the zoo's published
-                        // fc6–8 / loss3 entries): validated shape
-                        // chain for accounting, nothing to execute —
-                        // the plan serves the conv trunk exactly as
-                        // before the head was declared.
-                        None => {}
-                        Some(fl) => {
-                            // Executable head: the single `fc` layer
-                            // over a GlobalAvgPool-collapsed trunk is
-                            // what the executor supports.
-                            if spec.name != "fc" {
-                                return Err(crate::Error::Config(format!(
-                                    "{}: fc `{}` has weights, but only the single \
-                                     `fc` head is executable — named FC stacks are \
-                                     declaration-only topology",
-                                    self.net.name, spec.name
-                                )));
-                            }
-                            if !self.saw_gap {
-                                return Err(crate::Error::Config(format!(
-                                    "{}: a declared executable Fc must follow a \
-                                     GlobalAvgPool",
-                                    self.net.name
-                                )));
-                            }
-                            let want_out = fl.shape[0];
-                            let want_in = fl.shape[1] * fl.shape[2] * fl.shape[3];
-                            if (want_out, want_in) != (spec.out_features, spec.in_features)
-                            {
-                                return Err(crate::Error::Shape(format!(
-                                    "{}: fc weight shape {:?} != declared {}→{}",
-                                    self.net.name,
-                                    fl.shape,
-                                    spec.in_features,
-                                    spec.out_features
-                                )));
-                            }
-                            check_fc_fits(self.net, fl, state)?;
-                            out.push(PlanOp::Fc);
+                    let weighted = self.weights.layer(&spec.name).is_some();
+                    match self.fc_exec {
+                        None => self.fc_exec = Some(weighted),
+                        Some(prev) if prev != weighted => {
+                            return Err(crate::Error::Config(format!(
+                                "{}: fc stack mixes weighted and weightless heads \
+                                 (`{}` breaks the pattern) — a stack executes whole \
+                                 or not at all",
+                                self.net.name, spec.name
+                            )));
                         }
+                        Some(_) => {}
                     }
+                    if weighted {
+                        // Executable head: the per-name FC lanes are
+                        // compiled and streamed like conv lanes. Any
+                        // declared stack qualifies (VGG fc6–8 over the
+                        // flattened block-5 map, GoogleNet's
+                        // loss3/classifier after its GAP, the tiny
+                        // CNN's single `fc`).
+                        let fl = self.weights.layer(&spec.name).expect("checked above");
+                        let want_out = fl.shape[0];
+                        let want_in = fl.shape[1] * fl.shape[2] * fl.shape[3];
+                        if (want_out, want_in) != (spec.out_features, spec.in_features) {
+                            return Err(crate::Error::Shape(format!(
+                                "{}: fc `{}` weight shape {:?} != declared {}→{}",
+                                self.net.name,
+                                spec.name,
+                                fl.shape,
+                                spec.in_features,
+                                spec.out_features
+                            )));
+                        }
+                        // A spatial trunk flattens into feature rows
+                        // first; after a GlobalAvgPool (or a previous
+                        // Fc) the map is already (N, C).
+                        if !self.saw_fc && !self.saw_gap {
+                            out.push(PlanOp::Flatten);
+                        }
+                        out.push(PlanOp::Fc { name: spec.name.clone() });
+                    }
+                    // Declaration-only heads (a conv-only weight set)
+                    // stay validated accounting topology: the plan
+                    // serves the conv trunk exactly as before the head
+                    // was declared.
                     state = Some((spec.out_features, 1));
                     self.saw_fc = true;
                 }
@@ -445,10 +500,11 @@ impl Lowering<'_> {
 /// * declared [`TopoOp::Fc`] entries (VGG's fc6–8, GoogleNet's
 ///   loss3/classifier) are shape-validated — `in_features` must equal
 ///   the flattened `C·H·W` the trunk delivers, chained through the FC
-///   stack — but lower to an executable [`PlanOp::Fc`] only when the
-///   weight set carries the single supported `fc` head; otherwise they
-///   are declaration-only accounting topology and the plan serves the
-///   conv trunk;
+///   stack. When the weight set carries **every** head of the stack,
+///   each lowers to its own executable [`PlanOp::Fc`] (a spatial trunk
+///   gets a [`PlanOp::Flatten`] first); when it carries none, the
+///   stack is declaration-only accounting topology and the plan serves
+///   the conv trunk; a mixed stack is rejected;
 /// * a weight layer named `fc` with **no** declared head appends
 ///   `GlobalAvgPool → Fc` as the classifier head — reusing a
 ///   schedule-declared trailing `GlobalAvgPool` (NiN) rather than
@@ -472,6 +528,7 @@ pub fn derive_graph(net: &Network, weights: &LoadedWeights) -> crate::Result<Vec
         used: vec![false; net.layers.len()],
         saw_gap: false,
         saw_fc: false,
+        fc_exec: None,
     };
     let (mut ops, state) = lo.lower(&net.schedule, None, 0)?;
     if let Some(i) = lo.used.iter().position(|u| !u) {
@@ -486,7 +543,7 @@ pub fn derive_graph(net: &Network, weights: &LoadedWeights) -> crate::Result<Vec
             if !lo.saw_gap {
                 ops.push(PlanOp::GlobalAvgPool);
             }
-            ops.push(PlanOp::Fc);
+            ops.push(PlanOp::Fc { name: "fc".into() });
         }
     }
     Ok(ops)
@@ -553,7 +610,7 @@ mod tests {
                 PlanOp::Conv { layer: 2, pad: 1, stride: 1 },
                 PlanOp::ReluRequant { frac_bits: 8 },
                 PlanOp::GlobalAvgPool,
-                PlanOp::Fc,
+                PlanOp::Fc { name: "fc".into() },
             ]
         );
     }
@@ -567,8 +624,9 @@ mod tests {
         // block 5 the old spatial-ratio inference could never see.
         assert_eq!(pools_of(&ops).len(), 5);
         assert!(pools_of(&ops).iter().all(|p| *p == PoolSpec::max(2, 2, 0)));
-        // Conv-only weight set → no classifier head.
-        assert!(!ops.contains(&PlanOp::Fc));
+        // Conv-only weight set → no classifier head, no flatten.
+        assert!(!ops.iter().any(|o| matches!(o, PlanOp::Fc { .. })));
+        assert!(!ops.contains(&PlanOp::Flatten));
         assert!(!ops.contains(&PlanOp::GlobalAvgPool));
     }
 
@@ -702,7 +760,7 @@ mod tests {
         let net = zoo::vgg16();
         let w = weights_for(&net, None);
         let ops = derive_graph(&net, &w).unwrap();
-        assert!(!ops.iter().any(|o| matches!(o, PlanOp::Fc)));
+        assert!(!ops.iter().any(|o| matches!(o, PlanOp::Fc { .. })));
         // Tampering with a declared reduction dim is rejected.
         let mut bad = zoo::vgg16();
         for op in bad.schedule.iter_mut() {
@@ -743,11 +801,12 @@ mod tests {
         net.schedule.push(TopoOp::Fc(FcSpec::new("fc", 16, 4)));
         let w = weights_for(&net, Some(4));
         let ops = derive_graph(&net, &w).unwrap();
-        assert_eq!(ops.last(), Some(&PlanOp::Fc));
+        assert_eq!(ops.last(), Some(&PlanOp::Fc { name: "fc".into() }));
         let gaps = ops.iter().filter(|o| **o == PlanOp::GlobalAvgPool).count();
         assert_eq!(gaps, 1, "declared GAP must not be doubled");
-        // A named (non-`fc`) head with weights present is refused —
-        // named FC stacks are declaration-only.
+        // After a GAP the map is already (N, C): no flatten op.
+        assert!(!ops.contains(&PlanOp::Flatten));
+        // A *named* head with weights lowers too (per-name FC lanes).
         let mut named = zoo::tiny_cnn();
         named.schedule.push(TopoOp::GlobalAvgPool);
         named.schedule.push(TopoOp::Fc(FcSpec::new("fc6", 16, 4)));
@@ -758,12 +817,58 @@ mod tests {
             frac_bits: 8,
             weights: vec![1; 64],
         });
-        match derive_graph(&named, &nw) {
+        let nops = derive_graph(&named, &nw).unwrap();
+        assert_eq!(nops.last(), Some(&PlanOp::Fc { name: "fc6".into() }));
+    }
+
+    #[test]
+    fn weighted_fc_stack_lowers_with_flatten() {
+        // VGG-16's declared fc6–8 with weights for every head: a
+        // Flatten enters the stack (the trunk is a spatial map, not a
+        // GAP vector) and each head lowers to its own op. Channel-
+        // scaled so the synthetic head weights stay small — the full
+        // fc6 alone would be 25088×4096 values.
+        use crate::model::LoadedLayer;
+        let net = zoo::vgg16().scaled(16, 224);
+        let mut w = weights_for(&net, None);
+        for spec in net.fc_specs() {
+            w.layers.push(LoadedLayer {
+                name: spec.name.clone(),
+                shape: [spec.out_features, spec.in_features, 1, 1],
+                frac_bits: 8,
+                weights: vec![1; spec.in_features * spec.out_features],
+            });
+        }
+        let ops = derive_graph(&net, &w).unwrap();
+        let fcs: Vec<&str> = ops
+            .iter()
+            .filter_map(|o| match o {
+                PlanOp::Fc { name } => Some(name.as_str()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(fcs, ["fc6", "fc7", "fc8"]);
+        assert_eq!(
+            ops.iter().filter(|o| **o == PlanOp::Flatten).count(),
+            1,
+            "exactly one flatten, before the first head"
+        );
+        let flat_at = ops.iter().position(|o| *o == PlanOp::Flatten).unwrap();
+        assert!(matches!(ops[flat_at + 1], PlanOp::Fc { .. }));
+
+        // A stack with only *some* heads weighted is refused.
+        let mut mixed = w.clone();
+        mixed.layers.retain(|l| l.name != "fc7");
+        match derive_graph(&net, &mixed) {
             Err(crate::Error::Config(msg)) => {
-                assert!(msg.contains("declaration-only"), "{msg}")
+                assert!(msg.contains("mixes"), "{msg}")
             }
             other => panic!("expected Config error, got {other:?}"),
         }
+        // A weight shape disagreeing with the declared spec is refused.
+        let mut bad = w.clone();
+        bad.layers.iter_mut().find(|l| l.name == "fc7").unwrap().shape[1] = 999;
+        assert!(matches!(derive_graph(&net, &bad), Err(crate::Error::Shape(_))));
     }
 
     #[test]
@@ -773,7 +878,7 @@ mod tests {
         let net = zoo::nin();
         let w = weights_for(&net, Some(10));
         let ops = derive_graph(&net, &w).unwrap();
-        assert_eq!(ops.last(), Some(&PlanOp::Fc));
+        assert_eq!(ops.last(), Some(&PlanOp::Fc { name: "fc".into() }));
         let gaps = ops.iter().filter(|o| **o == PlanOp::GlobalAvgPool).count();
         assert_eq!(gaps, 1);
     }
@@ -810,6 +915,50 @@ mod tests {
     }
 
     #[test]
+    fn rows_emitted_is_the_forward_dual_of_in_span() {
+        // AlexNet conv1 geometry: 15 input rows complete exactly the
+        // first 2 output rows (in_span(0, 2) = (0, 15)).
+        let c = RowContract { k: 11, stride: 4, pad: 0 };
+        assert_eq!(c.rows_emitted(10, 64, 14), 0);
+        assert_eq!(c.rows_emitted(11, 64, 14), 1);
+        assert_eq!(c.rows_emitted(15, 64, 14), 2);
+        assert_eq!(c.rows_emitted(64, 64, 14), 14);
+        // Padded 3×3 stride-1 conv: the first row completes once two
+        // real rows exist (the top halo is padding).
+        let c = RowContract { k: 3, stride: 1, pad: 1 };
+        assert_eq!(c.rows_emitted(1, 16, 16), 0);
+        assert_eq!(c.rows_emitted(2, 16, 16), 1);
+        assert_eq!(c.rows_emitted(15, 16, 16), 14);
+        // The bottom row's clipped window only completes with the
+        // whole input.
+        assert_eq!(c.rows_emitted(16, 16, 16), 16);
+        // Ceil-mode pool: the hanging last window waits for the full
+        // input too (k=3 s=2 on 8 rows → 4 windows, last clipped).
+        let c = RowContract { k: 3, stride: 2, pad: 0 };
+        assert_eq!(c.rows_emitted(7, 8, 4), 3);
+        assert_eq!(c.rows_emitted(8, 8, 4), 4);
+        // Elementwise: ready maps 1:1.
+        let e = RowContract::elementwise();
+        assert_eq!(e.rows_emitted(5, 16, 16), 5);
+        // Duality across a sweep of geometries and spans.
+        for (k, s, p, in_h) in [(3, 1, 1, 16), (11, 4, 0, 35), (3, 2, 0, 8), (2, 2, 0, 16)] {
+            let c = RowContract { k, stride: s, pad: p };
+            let out_h = {
+                // largest o with window start inside input+pad
+                let padded = in_h + 2 * p;
+                (padded - k) / s + 1
+            };
+            for o1 in 1..=out_h {
+                let (_, hi) = c.in_span(0, o1, in_h);
+                assert!(
+                    c.rows_emitted(hi, in_h, out_h) >= o1,
+                    "k{k} s{s} p{p}: span hi {hi} does not emit {o1}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn segment_plan_fuses_conv_relu_pool_chains() {
         let net = zoo::tiny_cnn();
         let w = weights_for(&net, Some(4));
@@ -828,7 +977,7 @@ mod tests {
             other => panic!("expected fused segments, got {other:?}"),
         }
         assert_eq!(segs[3], Segment::GlobalAvgPool);
-        assert_eq!(segs[4], Segment::Fc);
+        assert_eq!(segs[4], Segment::Fc { name: "fc".into() });
     }
 
     #[test]

@@ -52,8 +52,12 @@ pub fn run(which: &str, seed: u64, csv_dir: Option<&std::path::Path>) -> crate::
 /// With `include_fc`, the network's declared FC heads (VGG fc6–8,
 /// GoogleNet's loss3/classifier — `Network::fc_as_conv_layers`) are
 /// simulated as 1×1-conv-equivalent layers after the conv trunk, so
-/// cycle/MAC totals cover the whole published model; without it the
-/// accounting stays conv-only, matching the paper's evaluation.
+/// cycle/MAC totals cover the whole published model. Each head gets
+/// its own `fc:`-tagged row in the per-layer table, and a
+/// `conv=…  fc=…` split line keeps the paper's conv-only accounting
+/// (`Network::total_macs`) visible next to the full-model totals;
+/// without the flag the accounting stays conv-only, matching the
+/// paper's evaluation.
 pub fn simulate_one(
     net: &Network,
     accel: &str,
@@ -63,6 +67,7 @@ pub fn simulate_one(
 ) -> crate::Result<String> {
     let calib = CalibConfig::default();
     let a = accel_by_name(accel)?;
+    let conv_layers = net.layers.len();
     let sim_net = if include_fc {
         let mut layers = net.layers.clone();
         layers.extend(net.fc_as_conv_layers());
@@ -97,10 +102,30 @@ pub fn simulate_one(
         crate::energy::edp(energy.total_j(), sim.time_s()),
     )
     .ok();
+    if include_fc {
+        // Trunk rows precede the appended head rows by construction,
+        // so the split is a prefix sum: conv-only = the paper's
+        // accounting, fc = the declared heads.
+        let (conv, fc) = sim.per_layer.split_at(conv_layers);
+        let sum = |ls: &[crate::sim::LayerSim]| {
+            ls.iter().fold((0u64, 0u64), |(c, m), l| (c + l.cycles, m + l.macs))
+        };
+        let (cc, cm) = sum(conv);
+        let (fc_c, fc_m) = sum(fc);
+        writeln!(
+            out,
+            "conv: cycles={cc} macs={cm} (paper accounting)  fc: cycles={fc_c} macs={fc_m} \
+             ({} declared head{})",
+            fc.len(),
+            if fc.len() == 1 { "" } else { "s" },
+        )
+        .ok();
+    }
     let mut table = fmt::Table::new(&["layer", "cycles", "macs", "bound"]);
-    for l in &sim.per_layer {
+    for (i, l) in sim.per_layer.iter().enumerate() {
+        let label = if i < conv_layers { l.layer.clone() } else { format!("fc:{}", l.layer) };
         table.row(&[
-            l.layer.clone(),
+            label,
             l.cycles.to_string(),
             l.macs.to_string(),
             if l.memory_bound { "memory" } else { "compute" }.to_string(),

@@ -395,6 +395,57 @@ fn engine_rejects_bad_configurations_and_submissions() {
     assert!(session.submit("tiny", tiny_image(&mut rng)).is_err());
 }
 
+/// ISSUE 5: VGG-16 with fc6–8 weights serves **image → logits** end
+/// to end through the engine — the served logits are bit-exact vs the
+/// reference interpreter's naive FC chain (I5 extended to
+/// logits-after-fc), and the model's meta reports per-head simulated
+/// cycles folded into the per-image total.
+#[test]
+fn engine_serves_vgg16_classifier_heads_end_to_end() {
+    use tetris::model::reference::forward_reference;
+    use tetris::model::weights::synthetic_loaded_with_heads;
+    let _serial = SERIAL.lock().unwrap();
+    let net = zoo::vgg16().scaled(16, 32);
+    let w = synthetic_loaded_with_heads(&net, Mode::Fp16, 10, "vgg16", DensityCalibration::Fig2, 6)
+        .unwrap();
+    let engine = Engine::builder()
+        .workers(2)
+        .max_batch(2)
+        .max_wait(Duration::from_micros(200))
+        .register("vgg16", net.clone(), w.clone())
+        .build()
+        .unwrap();
+    let meta = &engine.models()[0];
+    assert_eq!(meta.head_cycles().len(), 3, "fc6–8 must report cycles");
+    assert!(meta.head_cycles().iter().all(|(_, c)| *c > 0));
+    let head_sum: u64 = meta.head_cycles().iter().map(|(_, c)| c).sum();
+    assert!(
+        meta.cycles_per_image() > head_sum,
+        "per-image cycles must include trunk + heads"
+    );
+    assert_eq!(meta.head_cycles()[0].0, "fc6");
+
+    let session = engine.session();
+    let mut rng = Rng::new(61);
+    let images: Vec<Tensor<i32>> =
+        (0..2).map(|_| image_for(&mut rng, net.layers[0].in_c, 32)).collect();
+    let responses = session.infer_batch("vgg16", &images).unwrap();
+    engine.shutdown();
+
+    for (i, img) in images.iter().enumerate() {
+        let mut x = img.clone();
+        let s = x.shape().to_vec();
+        x.reshape(&[1, s[0], s[1], s[2]]).unwrap();
+        let want = forward_reference(&net, &w, &x);
+        assert_eq!(want.shape(), &[1, 1000], "reference must reach the logits");
+        assert_eq!(
+            responses[i].logits[..],
+            want.data()[..],
+            "image {i}: served logits diverged from the reference FC chain"
+        );
+    }
+}
+
 /// Session metrics surface exact latency percentiles once requests
 /// complete.
 #[test]

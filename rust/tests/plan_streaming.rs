@@ -1,0 +1,260 @@
+//! ISSUE 5 tentpole tests: the streaming segment pipeline — rolling
+//! rings that slide down the image with **zero halo recompute** — is
+//! bit-identical to the PR 3 tiled walk AND to the naive scalar MAC
+//! interpreter (`model::reference`) across the whole scaled zoo, and
+//! the executable FC stacks take VGG-16 and GoogleNet from image to
+//! logits for the first time (invariant I5 extended to
+//! logits-after-fc).
+//!
+//! Pinned here:
+//! * streaming ≡ tiled ≡ reference on every zoo network, over tile
+//!   heights and thread budgets;
+//! * a `util::prop` property: for random (network, tile-or-budget,
+//!   workers) cases, the streaming walk's measured peak bytes never
+//!   exceed the tiled walk's and its `halo_recompute_rows` reads 0,
+//!   while the tiled walk's is positive whenever it actually tiles;
+//! * VGG-16 fc6–8 and GoogleNet loss3/classifier execute through
+//!   their compiled per-name lanes (flatten → fused heads → logits),
+//!   bit-exact vs the reference interpreter's naive FC chain.
+
+use tetris::config::Mode;
+use tetris::model::reference::forward_reference;
+use tetris::model::weights::{
+    synthetic_loaded, synthetic_loaded_with_heads, DensityCalibration,
+};
+use tetris::model::{zoo, Network, Tensor};
+use tetris::plan::{CompiledNetwork, ExecOpts};
+use tetris::util::prop::{run_with, PropConfig};
+use tetris::util::rng::Rng;
+
+fn random_input(net: &Network, n: usize, hw: usize, rng: &mut Rng) -> Tensor<i32> {
+    let mut x = Tensor::zeros(&[n, net.layers[0].in_c, hw, hw]);
+    for v in x.data_mut() {
+        *v = rng.range_i64(-512, 512) as i32;
+    }
+    x
+}
+
+/// The scaled evaluation zoo (same scaling plan_topology pins I5
+/// with), conv-trunk weights.
+fn scaled_zoo() -> Vec<(Network, &'static str, usize)> {
+    vec![
+        (zoo::alexnet().scaled(16, 64), "alexnet", 64),
+        (zoo::googlenet().scaled(16, 64), "googlenet", 64),
+        (zoo::vgg16().scaled(16, 32), "vgg16", 32),
+        (zoo::vgg19().scaled(16, 32), "vgg19", 32),
+        (zoo::nin().scaled(16, 64), "nin", 64),
+    ]
+}
+
+// ---------------- acceptance: zoo-wide streaming ≡ tiled ≡ reference ----------------
+
+/// Every network of the paper's evaluation, channel-scaled, runs
+/// bit-exact through the streaming walk — against the tiled walk and
+/// against one naive-reference output — for dividing and non-dividing
+/// advance steps and several thread budgets.
+#[test]
+fn full_zoo_streaming_bit_exact_vs_tiled_and_reference() {
+    for (net, profile, hw) in scaled_zoo() {
+        let w = synthetic_loaded(&net, Mode::Fp16, 12, profile, DensityCalibration::Fig2, 0x57E4)
+            .unwrap();
+        let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+        let mut rng = Rng::new(47);
+        let x = random_input(&net, 2, hw, &mut rng);
+        let want = forward_reference(&net, &w, &x);
+        for tile in [2usize, 0] {
+            for workers in [1usize, 4] {
+                let got = plan
+                    .execute_opts(&x, ExecOpts::streaming(tile).with_workers(workers))
+                    .unwrap();
+                assert_eq!(got, want, "{}: streaming tile={tile} workers={workers}", net.name);
+                let tiled = plan
+                    .execute_opts(&x, ExecOpts::tiled(tile).with_workers(workers))
+                    .unwrap();
+                assert_eq!(tiled, want, "{}: tiled tile={tile} workers={workers}", net.name);
+            }
+        }
+        assert_eq!(plan.execute(&x).unwrap(), want, "{}: default path", net.name);
+    }
+}
+
+// ---------------- acceptance: zero halo recompute + peak ordering, property-swept ----------------
+
+/// `util::prop` sweep over (network, tile-height-or-memory-budget,
+/// workers): the streaming walk never recomputes a halo row and never
+/// allocates more than the tiled walk at the same settings, while
+/// producing identical bytes. Tile heights are drawn directly half
+/// the time and derived from a memory budget (the serving path's
+/// `tile_rows_for_budget`) the other half, so the budget knob is
+/// exercised too.
+#[test]
+fn streaming_never_recomputes_and_never_outallocates_tiled() {
+    // Compile each zoo plan once; the property draws cases over them.
+    let compiled: Vec<(Network, CompiledNetwork, Tensor<i32>)> = scaled_zoo()
+        .into_iter()
+        .map(|(net, profile, hw)| {
+            let w = synthetic_loaded(
+                &net,
+                Mode::Fp16,
+                12,
+                profile,
+                DensityCalibration::Fig2,
+                0xA110,
+            )
+            .unwrap();
+            let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+            let mut rng = Rng::new(7);
+            let x = random_input(&net, 1, hw, &mut rng);
+            (net, plan, x)
+        })
+        .collect();
+
+    run_with(
+        PropConfig { cases: 12, seed: 0x5EED_0005 },
+        "streaming peak ≤ tiled peak ∧ zero halo recompute",
+        |rng| {
+            let net_i = rng.below(compiled.len() as u64) as usize;
+            let workers = 1 + rng.below(4) as usize;
+            let tile = if rng.chance(0.5) {
+                // Direct tile height: 0 (materializing) or 1..=6.
+                rng.below(7) as usize
+            } else {
+                // Budget-derived, like serving: 1..=64 MiB.
+                let budget = (1u64 << rng.below(7)) * 1024 * 1024;
+                compiled[net_i].1.tile_rows_for_budget(budget, workers)
+            };
+            (net_i, tile, workers)
+        },
+        |&(net_i, tile, workers)| {
+            let (net, plan, x) = &compiled[net_i];
+            let (streamed, ts) = plan
+                .execute_traced(x, ExecOpts::streaming(tile).with_workers(workers))
+                .map_err(|e| e.to_string())?;
+            let (tiled, tt) = plan
+                .execute_traced(x, ExecOpts::tiled(tile).with_workers(workers))
+                .map_err(|e| e.to_string())?;
+            if streamed != tiled {
+                return Err(format!("{}: walks diverged", net.name));
+            }
+            if ts.halo_recompute_rows() != 0 {
+                return Err(format!(
+                    "{}: streaming recomputed {} halo rows",
+                    net.name,
+                    ts.halo_recompute_rows()
+                ));
+            }
+            if ts.peak_bytes() > tt.peak_bytes() {
+                return Err(format!(
+                    "{}: streaming peak {} exceeds tiled peak {}",
+                    net.name,
+                    ts.peak_bytes(),
+                    tt.peak_bytes()
+                ));
+            }
+            // The halo the streaming walk eliminates is real work on
+            // the tiled side whenever a fused pool's window overhangs
+            // its stride (k > s: the 3×3 stride-2 pools of AlexNet,
+            // GoogleNet and NiN — VGG's 2×2 stride-2 windows are
+            // disjoint, so its tiled halo is legitimately zero).
+            let has_overlapping_pools = matches!(net_i, 0 | 1 | 4);
+            if tile == 1 && has_overlapping_pools && tt.halo_recompute_rows() == 0 {
+                return Err(format!(
+                    "{}: tiled walk at 1-row tiles reported no halo recompute",
+                    net.name
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------- acceptance: executable FC stacks, image → logits ----------------
+
+/// VGG-16 with fc6–8 weights runs image → logits through the compiled
+/// flatten + per-name FC lanes, bit-exact vs the reference
+/// interpreter's naive FC chain, with zero halo recompute and the
+/// walks agreeing.
+#[test]
+fn vgg16_fc_stack_executes_to_logits() {
+    let net = zoo::vgg16().scaled(16, 32);
+    let w =
+        synthetic_loaded_with_heads(&net, Mode::Fp16, 10, "vgg16", DensityCalibration::Fig2, 0xF6)
+            .unwrap();
+    let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+    assert_eq!(plan.fc_heads().len(), 3, "fc6–8 must compile");
+    assert_eq!(plan.output_classes(), Some(1000));
+
+    let mut rng = Rng::new(0xF00D);
+    let x = random_input(&net, 2, 32, &mut rng);
+    let want = forward_reference(&net, &w, &x);
+    assert_eq!(want.shape(), &[2, 1000], "reference must reach the logits");
+
+    let (streamed, ts) = plan
+        .execute_traced(&x, ExecOpts::streaming(4))
+        .unwrap();
+    assert_eq!(streamed, want, "streaming logits diverged from the naive FC chain");
+    assert_eq!(ts.halo_recompute_rows(), 0);
+    let tiled = plan.execute_opts(&x, ExecOpts::tiled(4)).unwrap();
+    assert_eq!(tiled, want, "tiled logits diverged");
+    assert_eq!(plan.execute(&x).unwrap(), want, "default path diverged");
+    // Conv-trunk weights still serve the trunk (declaration-only).
+    let trunk_w =
+        synthetic_loaded(&net, Mode::Fp16, 10, "vgg16", DensityCalibration::Fig2, 0xF6).unwrap();
+    let trunk_plan = CompiledNetwork::compile(&net, &trunk_w, 16, Mode::Fp16).unwrap();
+    assert!(trunk_plan.fc_heads().is_empty());
+    assert_eq!(trunk_plan.execute(&x).unwrap().shape().len(), 4, "trunk output is a map");
+}
+
+/// GoogleNet's loss3/classifier — a single head after the declared
+/// global average pool — executes too, through the branch/concat
+/// trunk.
+#[test]
+fn googlenet_classifier_head_executes_to_logits() {
+    let net = zoo::googlenet().scaled(16, 64);
+    let w = synthetic_loaded_with_heads(
+        &net,
+        Mode::Fp16,
+        10,
+        "googlenet",
+        DensityCalibration::Fig2,
+        0x10553,
+    )
+    .unwrap();
+    let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+    assert_eq!(plan.fc_heads().len(), 1);
+    assert_eq!(plan.fc_heads()[0].name, "loss3/classifier");
+    assert!(!plan.fc_heads()[0].relu, "a lone head emits raw logits");
+
+    let mut rng = Rng::new(0x6006);
+    let x = random_input(&net, 1, 64, &mut rng);
+    let want = forward_reference(&net, &w, &x);
+    assert_eq!(want.shape(), &[1, 1000]);
+    let (got, trace) = plan
+        .execute_traced(&x, ExecOpts::streaming(4))
+        .unwrap();
+    assert_eq!(got, want, "googlenet logits diverged");
+    assert_eq!(trace.halo_recompute_rows(), 0);
+}
+
+/// The walks and the reference agree on a head-bearing network across
+/// modes and kneading strides (values are KS-invariant; the FC lanes
+/// ride the same kneaded-lane machinery as convs).
+#[test]
+fn fc_stacks_are_ks_and_mode_invariant() {
+    let net = zoo::vgg16().scaled(32, 32);
+    for (mode, frac) in [(Mode::Fp16, 10u32), (Mode::Int8, 5)] {
+        let w = synthetic_loaded_with_heads(&net, mode, frac, "vgg16", DensityCalibration::Fig2, 2)
+            .unwrap();
+        let mut rng = Rng::new(5);
+        let x = random_input(&net, 1, 32, &mut rng);
+        let want = forward_reference(&net, &w, &x);
+        for ks in [4usize, 64] {
+            let plan = CompiledNetwork::compile(&net, &w, ks, mode).unwrap();
+            assert_eq!(
+                plan.execute(&x).unwrap(),
+                want,
+                "{mode} ks={ks} diverged from the reference FC chain"
+            );
+        }
+    }
+}

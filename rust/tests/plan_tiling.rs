@@ -214,13 +214,14 @@ fn fused_walk_allocates_less_than_materializing_path() {
     let w = random_weights(&net, Mode::Fp16, &mut rng);
     let x = random_input(&net, 1, 32, &mut rng);
     let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
-    let (full, peak_full) = plan
+    let (full, trace_full) = plan
         .execute_traced(&x, ExecOpts::materializing().with_workers(1))
         .unwrap();
-    let (tiled, peak_tiled) = plan
+    let (tiled, trace_tiled) = plan
         .execute_traced(&x, ExecOpts::tiled(2).with_workers(1))
         .unwrap();
     assert_eq!(full, tiled, "peak probe paths diverged");
+    let (peak_tiled, peak_full) = (trace_tiled.peak_bytes(), trace_full.peak_bytes());
     assert!(
         peak_tiled < peak_full,
         "fused peak {peak_tiled} not below materializing peak {peak_full}"

@@ -4,6 +4,13 @@ committed baseline and fail on median regressions beyond tolerance.
 
 Usage:
     scripts/bench_compare.py BASELINE.json FRESH.json [--tolerance 0.30]
+    scripts/bench_compare.py --promote FRESH.json [--out BENCH_baseline.json]
+
+Promotion: `--promote` rewrites FRESH.json (a run from the CI runner
+class itself — use the `bench-baseline` workflow_dispatch job and
+download its artifact) as a gating baseline: provisional flipped to
+false, tolerance and provenance header attached. Commit the `--out`
+file and the bench-regression job starts failing on regressions.
 
 Both files are `util::bench::Harness` JSON reports
 (`cargo bench --bench hotpath -- --json <path>`). The baseline may
@@ -49,10 +56,41 @@ def load_report(path):
     return doc, medians
 
 
+def promote(fresh_path, out_path, tolerance):
+    doc, medians = load_report(fresh_path)
+    timed = sum(1 for m in medians.values() if m > 0.0)
+    if timed == 0:
+        print(f"bench_compare: {fresh_path} has no timed entries to promote", file=sys.stderr)
+        sys.exit(2)
+    doc.pop("provisional", None)
+    doc.pop("note", None)
+    file_tol = float(doc.pop("tolerance", 0.30))
+    tol = tolerance if tolerance is not None else file_tol
+    promoted = {
+        "note": (
+            "Bench-regression baseline for scripts/bench_compare.py, promoted "
+            f"from {fresh_path} via --promote. Re-promote from the SAME runner "
+            "class CI uses (the bench-baseline workflow_dispatch job) whenever "
+            "hot paths change shape; a baseline timed on a different machine "
+            "makes absolute-median comparison meaningless."
+        ),
+        "provisional": False,
+        "tolerance": tol,
+    }
+    promoted.update(doc)
+    with open(out_path, "w", encoding="utf-8") as f:
+        json.dump(promoted, f, indent=1)
+        f.write("\n")
+    print(
+        f"bench_compare: promoted {fresh_path} -> {out_path} "
+        f"({timed} timed entries, tolerance {promoted['tolerance']:.0%}, gating ON)"
+    )
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("baseline")
-    ap.add_argument("fresh")
+    ap.add_argument("baseline", nargs="?")
+    ap.add_argument("fresh", nargs="?")
     ap.add_argument(
         "--tolerance",
         type=float,
@@ -60,7 +98,23 @@ def main():
         help="allowed fractional slowdown (default: baseline's "
         "'tolerance' field, else 0.30)",
     )
+    ap.add_argument(
+        "--promote",
+        metavar="FRESH",
+        help="rewrite FRESH as a gating (non-provisional) baseline and exit",
+    )
+    ap.add_argument(
+        "--out",
+        default="BENCH_baseline.json",
+        help="output path for --promote (default: BENCH_baseline.json)",
+    )
     args = ap.parse_args()
+
+    if args.promote:
+        promote(args.promote, args.out, args.tolerance)
+        return
+    if not args.baseline or not args.fresh:
+        ap.error("BASELINE and FRESH are required unless --promote is given")
 
     base_doc, base = load_report(args.baseline)
     _, fresh = load_report(args.fresh)
