@@ -15,7 +15,7 @@ use tetris::kneading::{knead_group, knead_lane, Lane};
 use tetris::model::reference::forward_reference;
 use tetris::model::weights::{profile_with, synthetic_loaded, DensityCalibration};
 use tetris::model::{zoo, Tensor};
-use tetris::plan::{CompiledNetwork, ExecOpts};
+use tetris::plan::{CompiledNetwork, ExecOpts, Walk};
 use tetris::runtime::quantized;
 use tetris::sac::SacUnit;
 use tetris::util::bench::Harness;
@@ -322,6 +322,154 @@ fn main() {
             ("heads".into(), vplan.fc_heads().len() as f64),
             ("head_lanes".into(), head_lanes),
             ("classes".into(), vplan.output_classes().unwrap_or(0) as f64),
+        ],
+    );
+
+    // 12. ISSUE 6: whole-network streaming — the pipelined walk chains
+    //     the per-segment rolling rings across pool boundaries, so a
+    //     trunk of any depth streams with only the input map, one ring
+    //     set, and the trunk output live. Pipelined vs streaming vs
+    //     tiled on scaled VGG-16 (deep chain, fc heads included) and
+    //     GoogleNet (inception fan-out: one upstream ring feeding four
+    //     arms, one concat ring). Bit-exactness asserted before
+    //     timing; `*_peak_bytes` metric keys feed the CI peak-memory
+    //     gate (scripts/bench_compare.py).
+    let piped_opts = ExecOpts::pipelined(4).with_workers(2);
+    assert_eq!(
+        vplan.execute_opts(&vimg, piped_opts).unwrap(),
+        vplan.execute_opts(&vimg, stream_opts).unwrap(),
+        "pipelined and streaming walks must agree on vgg16 before timing"
+    );
+    h.bench("whole-network-streaming/vgg16-div16-pipelined4", || {
+        vplan.execute_opts(&vimg, piped_opts).unwrap().len()
+    });
+    h.bench("whole-network-streaming/vgg16-div16-streaming4", || {
+        vplan.execute_opts(&vimg, stream_opts).unwrap().len()
+    });
+    h.bench("whole-network-streaming/vgg16-div16-tiled4", || {
+        vplan.execute_opts(&vimg, tiled_opts).unwrap().len()
+    });
+    let (_, vp) = vplan.execute_traced(&vimg, piped_opts).unwrap();
+    let (_, vs) = vplan.execute_traced(&vimg, stream_opts).unwrap();
+    let (_, vt) = vplan.execute_traced(&vimg, tiled_opts).unwrap();
+    assert_eq!(vp.halo_recompute_rows(), 0, "pipelined walk must not recompute halo rows");
+    h.metric_row(
+        "whole-network-streaming/vgg16-div16-hw32",
+        vec![
+            ("pipelined_peak_bytes".into(), vp.peak_bytes() as f64),
+            ("streaming_peak_bytes".into(), vs.peak_bytes() as f64),
+            ("tiled_peak_bytes".into(), vt.peak_bytes() as f64),
+            ("halo_rows_pipelined".into(), vp.halo_recompute_rows() as f64),
+            ("halo_rows_tiled".into(), vt.halo_recompute_rows() as f64),
+            (
+                "speedup_vs_tiled_x".into(),
+                median(h.results(), "whole-network-streaming/vgg16-div16-tiled4")
+                    / median(h.results(), "whole-network-streaming/vgg16-div16-pipelined4"),
+            ),
+        ],
+    );
+
+    let gnet = zoo::googlenet().scaled(16, 64);
+    let gw = synthetic_loaded(&gnet, Mode::Fp16, 12, "googlenet", DensityCalibration::Fig2, 23)
+        .unwrap();
+    let gplan = CompiledNetwork::compile(&gnet, &gw, 16, Mode::Fp16).unwrap();
+    let mut gimg = Tensor::zeros(&[2, gnet.layers[0].in_c, 64, 64]);
+    for (i, v) in gimg.data_mut().iter_mut().enumerate() {
+        *v = (i as i32 % 419) - 209;
+    }
+    assert_eq!(
+        gplan.execute_opts(&gimg, piped_opts).unwrap(),
+        gplan.execute_opts(&gimg, stream_opts).unwrap(),
+        "pipelined and streaming walks must agree on googlenet before timing"
+    );
+    h.bench("whole-network-streaming/googlenet-div16-pipelined4", || {
+        gplan.execute_opts(&gimg, piped_opts).unwrap().len()
+    });
+    h.bench("whole-network-streaming/googlenet-div16-streaming4", || {
+        gplan.execute_opts(&gimg, stream_opts).unwrap().len()
+    });
+    h.bench("whole-network-streaming/googlenet-div16-tiled4", || {
+        gplan.execute_opts(&gimg, tiled_opts).unwrap().len()
+    });
+    let (_, gp) = gplan.execute_traced(&gimg, piped_opts).unwrap();
+    let (_, gs) = gplan.execute_traced(&gimg, stream_opts).unwrap();
+    let (_, gt) = gplan.execute_traced(&gimg, tiled_opts).unwrap();
+    assert_eq!(gp.halo_recompute_rows(), 0, "pipelined inception must not recompute halo");
+    h.metric_row(
+        "whole-network-streaming/googlenet-div16-hw64",
+        vec![
+            ("pipelined_peak_bytes".into(), gp.peak_bytes() as f64),
+            ("streaming_peak_bytes".into(), gs.peak_bytes() as f64),
+            ("tiled_peak_bytes".into(), gt.peak_bytes() as f64),
+            ("halo_rows_pipelined".into(), gp.halo_recompute_rows() as f64),
+            ("halo_rows_tiled".into(), gt.halo_recompute_rows() as f64),
+            (
+                "speedup_vs_tiled_x".into(),
+                median(h.results(), "whole-network-streaming/googlenet-div16-tiled4")
+                    / median(h.results(), "whole-network-streaming/googlenet-div16-pipelined4"),
+            ),
+        ],
+    );
+
+    // The budget demo (ISSUE 6 acceptance): full-resolution VGG-16
+    //     (channels ÷16, 224×224) under 1 MiB. The first conv pair's
+    //     in+out maps alone hold ~1.4 MB, so NO tile height fits the
+    //     per-segment streaming walk — while the whole-network
+    //     pipeline (input map + ring set + trunk output) fits with
+    //     room to spare, image → logits, bit-exact, zero halo rows.
+    //     One-shot executions: full resolution is too slow to sample
+    //     repeatedly, and peak bytes are deterministic anyway.
+    let fnet = zoo::vgg16().scaled(16, 224);
+    let fw = tetris::model::weights::synthetic_loaded_with_heads(
+        &fnet,
+        Mode::Fp16,
+        10,
+        "vgg16",
+        DensityCalibration::Fig2,
+        32,
+    )
+    .unwrap();
+    let fplan = CompiledNetwork::compile(&fnet, &fw, 16, Mode::Fp16).unwrap();
+    let budget: u64 = 1 << 20;
+    let stream_rows = fplan.tile_rows_for_budget_walk(budget, 1, Walk::Streaming);
+    assert!(
+        fplan.streaming_peak_bytes_estimate(stream_rows, 1) > budget,
+        "premise: no tile height fits full-res vgg16's streaming walk into 1 MiB"
+    );
+    let piped_rows = fplan.tile_rows_for_budget_walk(budget, 1, Walk::Pipelined);
+    let mut fimg = Tensor::zeros(&[1, fnet.layers[0].in_c, 224, 224]);
+    for (i, v) in fimg.data_mut().iter_mut().enumerate() {
+        *v = (i as i32 % 431) - 215;
+    }
+    let (fout, fp) = fplan
+        .execute_traced(&fimg, ExecOpts::pipelined(piped_rows).with_workers(1))
+        .unwrap();
+    let (sout, fs) = fplan
+        .execute_traced(&fimg, ExecOpts::streaming(stream_rows.max(1)).with_workers(1))
+        .unwrap();
+    assert_eq!(fout, sout, "full-res pipelined logits must match the streaming walk");
+    assert_eq!(fp.halo_recompute_rows(), 0, "full-res pipeline must not recompute halo");
+    assert!(
+        (fs.peak_bytes() as u64) > budget,
+        "premise: the streaming walk's measured peak must exceed the 1 MiB budget"
+    );
+    assert!(
+        (fp.peak_bytes() as u64) <= budget,
+        "whole-network streaming must fit full-res vgg16 into 1 MiB (measured {} B)",
+        fp.peak_bytes()
+    );
+    let summary = fplan.pipeline_summary(224, piped_rows).expect("vgg16 trunk must pipeline");
+    h.metric_row(
+        "whole-network-streaming/vgg16-div16-hw224-budget1mib",
+        vec![
+            ("budget_bytes".into(), budget as f64),
+            ("pipelined_peak_bytes".into(), fp.peak_bytes() as f64),
+            ("streaming_peak_bytes".into(), fs.peak_bytes() as f64),
+            ("halo_rows_pipelined".into(), fp.halo_recompute_rows() as f64),
+            ("pipelined_tile_rows".into(), piped_rows as f64),
+            ("chained_segments".into(), summary.segments as f64),
+            ("ring_bytes".into(), summary.ring_bytes as f64),
+            ("fill_rows".into(), summary.fill_rows as f64),
         ],
     );
 

@@ -10,6 +10,7 @@ use std::time::Duration;
 
 use crate::coordinator::batcher::BatchPolicy;
 use crate::model::{LoadedWeights, Network};
+use crate::plan::Walk;
 use crate::runtime::quantized::PIPELINE_KS;
 use crate::util::pool::worker_count;
 
@@ -55,6 +56,7 @@ pub struct EngineBuilder {
     workers: Option<usize>,
     mem_budget_mb: Option<u64>,
     tile_rows: Option<usize>,
+    walk: Option<Walk>,
     policy: BatchPolicy,
     ks: usize,
     artifacts_dir: PathBuf,
@@ -74,6 +76,7 @@ impl EngineBuilder {
             workers: None,
             mem_budget_mb: None,
             tile_rows: None,
+            walk: None,
             policy: BatchPolicy::default(),
             ks: PIPELINE_KS,
             artifacts_dir: PathBuf::from("artifacts"),
@@ -106,6 +109,17 @@ impl EngineBuilder {
     /// the memory budget (0 = materialize full maps).
     pub fn tile_rows(mut self, rows: usize) -> Self {
         self.tile_rows = Some(rows);
+        self
+    }
+
+    /// Pin every registered model to one executor walk instead of the
+    /// default policy (batch-vs-workers, with a budget-demanded
+    /// fallover to [`Walk::Pipelined`] when not even the streaming
+    /// walk's peak fits the memory budget). When a walk is pinned and
+    /// the tile height is not, the tile is sized with that walk's
+    /// peak-bytes estimator.
+    pub fn walk(mut self, walk: Walk) -> Self {
+        self.walk = Some(walk);
         self
     }
 
@@ -188,8 +202,14 @@ impl EngineBuilder {
                             spec.name
                         )));
                     }
-                    let (meta, factory) =
-                        compile_sac(spec, self.ks, budget_bytes, self.tile_rows, workers)?;
+                    let (meta, factory) = compile_sac(
+                        spec,
+                        self.ks,
+                        budget_bytes,
+                        self.tile_rows,
+                        workers,
+                        self.walk,
+                    )?;
                     lanes.push(ModelLane { factory });
                     metas.push(meta);
                 }

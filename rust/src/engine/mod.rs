@@ -6,9 +6,12 @@
 //! This module is that front end for serving:
 //!
 //! * [`EngineBuilder`] — every knob as a typed option (memory budget,
-//!   tile rows, worker threads, batch policy, kneading stride),
-//!   resolved in one place; environment variables are demoted to
-//!   documented fallbacks ([`env`]).
+//!   tile rows, executor walk, worker threads, batch policy, kneading
+//!   stride), resolved in one place; environment variables are demoted
+//!   to documented fallbacks ([`env`]). When the budget cannot hold
+//!   even the streaming walk's peak, compilation pins the model to the
+//!   whole-network **pipelined** walk (depth-independent peak memory)
+//!   and reports it via [`ModelMeta::walk`].
 //! * [`Engine`] — owns a **model registry**: several networks (the
 //!   whole zoo, at any scale) are registered, compiled exactly once
 //!   each, and served concurrently from one shared worker pool.

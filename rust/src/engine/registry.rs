@@ -9,7 +9,7 @@ use std::sync::Arc;
 use crate::config::{AccelConfig, CalibConfig};
 use crate::coordinator::backend::{InferBackend, PjrtBackend, SacBackend};
 use crate::model::{ConvLayer, LoadedWeights, Network, TopoOp};
-use crate::plan::CompiledNetwork;
+use crate::plan::{CompiledNetwork, Walk};
 use crate::sim::{sample::samples_from_loaded, simulate_network_with_samples, tetris::TetrisSim};
 
 use super::serve::BackendFactory;
@@ -47,6 +47,12 @@ pub struct ModelMeta {
     /// head (name, cycles), schedule order — empty when the model
     /// serves a conv trunk only. Folded into `cycles_per_image`.
     pub(crate) head_cycles: Vec<(String, u64)>,
+    /// The walk the plan is pinned to (`plan.walk_hint`): `Some` when
+    /// the caller pinned one or the memory budget demanded the
+    /// pipelined walk at compile time, `None` when the executor's
+    /// batch-vs-workers policy decides per call (and always `None` for
+    /// PJRT lanes, which have no plan).
+    pub(crate) walk: Option<Walk>,
     /// Input channel count submissions are validated against.
     pub(crate) in_c: Option<usize>,
     /// Declared input spatial size submissions are validated against.
@@ -84,6 +90,16 @@ impl ModelMeta {
     pub fn head_cycles(&self) -> &[(String, u64)] {
         &self.head_cycles
     }
+
+    /// The walk this model's plan is pinned to. `Some(Walk::Pipelined)`
+    /// means the registered memory budget could not hold even the
+    /// per-segment streaming walk's peak, so serving chains the rings
+    /// across segment boundaries ([`Walk::Pipelined`]) for
+    /// depth-independent peak memory. `None` leaves the executor's
+    /// batch-vs-workers default policy in charge.
+    pub fn walk(&self) -> Option<Walk> {
+        self.walk
+    }
 }
 
 /// First scheduled conv's declared input shape — (channels, spatial
@@ -111,18 +127,47 @@ fn entry_shape(net: &Network) -> Option<(usize, usize)> {
 /// pre-simulate the per-image accelerator cost, and return the lane
 /// metadata plus a factory whose per-worker "construction" is an
 /// `Arc`-sharing clone — W workers, one compile.
+///
+/// Walk selection: an explicit `walk` pins the plan to that dataflow
+/// and sizes the tile with the matching estimator. Without a pin, the
+/// tile is sized for the default walks first; if even the per-segment
+/// streaming walk's peak still exceeds the budget at that tile (deep
+/// trunks: peak grows with depth because inter-segment maps
+/// materialize), the plan falls over to [`Walk::Pipelined`] — rings
+/// chained across segment boundaries, peak flat in depth — and the
+/// tile is re-sized with the pipelined estimator.
 pub(crate) fn compile_sac(
     spec: ModelSpec,
     ks: usize,
     budget_bytes: u64,
     tile_rows: Option<usize>,
     workers: usize,
+    walk: Option<Walk>,
 ) -> crate::Result<(ModelMeta, BackendFactory)> {
     let ModelSpec { name, network, weights } = spec;
     let mode = weights.mode;
     let mut plan = CompiledNetwork::compile(&network, &weights, ks, mode)?;
-    plan.tile_rows =
-        tile_rows.unwrap_or_else(|| plan.tile_rows_for_budget(budget_bytes, workers));
+    plan.walk_hint = walk;
+    plan.tile_rows = match walk {
+        Some(w) => {
+            tile_rows.unwrap_or_else(|| plan.tile_rows_for_budget_walk(budget_bytes, workers, w))
+        }
+        None => tile_rows.unwrap_or_else(|| plan.tile_rows_for_budget(budget_bytes, workers)),
+    };
+    if walk.is_none() && tile_rows.is_none() {
+        // Budget-demanded fallover: neither default walk fits even at
+        // the budget-derived tile → pin the pipelined walk, whose peak
+        // does not grow with network depth, and re-size for it.
+        let tiled = plan.peak_bytes_estimate(plan.tile_rows, workers);
+        let streaming = plan.streaming_peak_bytes_estimate(plan.tile_rows, workers);
+        if tiled.min(streaming) > budget_bytes {
+            let rows = plan.tile_rows_for_budget_walk(budget_bytes, workers, Walk::Pipelined);
+            if plan.pipelined_peak_bytes_estimate(rows, workers) < tiled.min(streaming) {
+                plan.walk_hint = Some(Walk::Pipelined);
+                plan.tile_rows = rows;
+            }
+        }
+    }
     // Timing from the registered weights' bit statistics, so serving
     // metrics report the paper's accelerator rather than the host.
     let cfg = AccelConfig { ks, mode, ..AccelConfig::default() };
@@ -170,6 +215,7 @@ pub(crate) fn compile_sac(
         plan: Some(Arc::clone(&plan)),
         cycles_per_image: cycles,
         head_cycles,
+        walk: plan.walk_hint,
         in_c: entry.map(|(c, _)| c),
         in_hw: entry.map(|(_, hw)| hw),
     };
@@ -193,6 +239,7 @@ pub(crate) fn pjrt_lane(artifacts: &Path) -> crate::Result<(ModelMeta, BackendFa
         plan: None,
         cycles_per_image: cycles,
         head_cycles: Vec::new(),
+        walk: None,
         in_c: Some(probe.input_channels()),
         in_hw: Some(probe.input_hw()),
     };

@@ -11,6 +11,7 @@ use crate::kneading::{knead_lane, KneadedLane, Lane};
 use crate::model::{LoadedLayer, LoadedWeights, Network, Tensor};
 use crate::util::pool::{par_map, split_budget};
 
+use super::exec::{PipelineSummary, Walk};
 use super::graph::{derive_graph, segment_plan, FusedStage, PlanOp, Segment};
 
 /// Default output rows per fused tile (see [`CompiledNetwork::tile_rows`]).
@@ -83,6 +84,12 @@ pub struct CompiledNetwork {
     /// chain at once). Overridable per call via `ExecOpts`; serving
     /// picks it from a memory budget ([`Self::tile_rows_for_budget`]).
     pub tile_rows: usize,
+    /// Compiled walk preference, consulted by `execute` when
+    /// `ExecOpts::walk` is `None`: the engine registry pins
+    /// [`Walk::Pipelined`] here when its memory budget demands
+    /// whole-network streaming. `None` leaves the executor's
+    /// batch-vs-workers policy in charge.
+    pub walk_hint: Option<Walk>,
     pub mode: Mode,
     /// Kneading stride the lanes were compiled with. Values are
     /// invariant to KS (SAC ≡ MAC for any stride); KS only moves the
@@ -186,6 +193,7 @@ impl CompiledNetwork {
             fcs,
             declared_in,
             tile_rows: DEFAULT_TILE_ROWS,
+            walk_hint: None,
             mode,
             ks,
             kneads_at_build,
@@ -287,6 +295,43 @@ impl CompiledNetwork {
     /// property-tested across the zoo in `rust/tests/plan_streaming.rs`.
     pub fn streaming_peak_bytes_estimate(&self, tile_rows: usize, workers: usize) -> u64 {
         self.estimate(tile_rows, workers, true)
+    }
+
+    /// The pipelined-walk counterpart of the peak estimates: under
+    /// whole-network streaming the trunk never materializes its
+    /// intermediate maps, so the peak is the input map + one rolling
+    /// ring set per concurrently streamed image + the trunk output —
+    /// flat in network depth (±ring working set). The GAP/flatten/FC
+    /// tail walks over the (already counted) trunk output and only
+    /// adds feature vectors, so the trunk term dominates. Falls back
+    /// to the streaming estimate when fewer than two schedule segments
+    /// are pipeable (the pipelined walk degenerates there).
+    pub fn pipelined_peak_bytes_estimate(&self, tile_rows: usize, workers: usize) -> u64 {
+        const BYTES: u64 = 4;
+        let (c, hw) = self.declared_in;
+        if c == 0 || hw == 0 {
+            return 0;
+        }
+        match super::exec::pipeline_summary(self, c, hw, hw, tile_rows) {
+            Ok(Some(s)) => {
+                let in_bytes = (c * hw * hw) as u64 * BYTES;
+                in_bytes + s.out_bytes + s.ring_bytes * workers.max(1) as u64
+            }
+            _ => self.streaming_peak_bytes_estimate(tile_rows, workers),
+        }
+    }
+
+    /// Whole-network pipeline profile ([`PipelineSummary`]) at an
+    /// explicit input extent (benches run scaled workloads) and
+    /// advance step (`0` = whole image per feed). `None` when the
+    /// plan's pipeable prefix is shorter than two segments or the
+    /// geometry does not validate at that extent.
+    pub fn pipeline_summary(&self, in_hw: usize, step: usize) -> Option<PipelineSummary> {
+        let (c, _) = self.declared_in;
+        if c == 0 || in_hw == 0 {
+            return None;
+        }
+        super::exec::pipeline_summary(self, c, in_hw, in_hw, step).ok().flatten()
     }
 
     fn estimate(&self, tile_rows: usize, workers: usize, streaming: bool) -> u64 {
@@ -484,8 +529,27 @@ impl CompiledNetwork {
     /// One budget therefore bounds the ring depth of whichever walk
     /// `execute` picks.
     pub fn tile_rows_for_budget(&self, budget_bytes: u64, workers: usize) -> usize {
+        self.tile_rows_for_budget_walk(budget_bytes, workers, Walk::Tiled)
+    }
+
+    /// Walk-aware [`Self::tile_rows_for_budget`]: size the tile height
+    /// against the estimate of the walk that will actually run — the
+    /// pipelined walk's ring working set is far below a segment map,
+    /// so the same budget affords it much taller tiles (or fits at
+    /// all where the per-segment walks cannot).
+    pub fn tile_rows_for_budget_walk(
+        &self,
+        budget_bytes: u64,
+        workers: usize,
+        walk: Walk,
+    ) -> usize {
+        let est = |t: usize| match walk {
+            Walk::Tiled => self.peak_bytes_estimate(t, workers),
+            Walk::Streaming => self.streaming_peak_bytes_estimate(t, workers),
+            Walk::Pipelined => self.pipelined_peak_bytes_estimate(t, workers),
+        };
         for t in [64usize, 32, 16, 8, 4, 2] {
-            if self.peak_bytes_estimate(t, workers) <= budget_bytes {
+            if est(t) <= budget_bytes {
                 return t;
             }
         }
@@ -653,6 +717,32 @@ mod tests {
         let rows = plan.tile_rows_for_budget(budget, 4);
         assert!(rows >= 4, "budget sized for 4-row tiles picked {rows}");
         assert!(plan.peak_bytes_estimate(rows, 4) <= budget);
+    }
+
+    #[test]
+    fn pipelined_estimate_and_walk_aware_budget_sizing() {
+        let net = zoo::tiny_cnn();
+        let w = tiny_weights(11);
+        let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+        let p = plan.pipelined_peak_bytes_estimate(2, 1);
+        assert!(p > 0);
+        // More concurrently streamed images → more live ring sets.
+        assert!(plan.pipelined_peak_bytes_estimate(2, 8) >= p);
+        // Walk-aware sizing agrees with its own estimate.
+        let budget = plan.pipelined_peak_bytes_estimate(4, 2);
+        let rows = plan.tile_rows_for_budget_walk(budget, 2, Walk::Pipelined);
+        assert!(rows >= 4, "budget sized for 4-row feeds picked {rows}");
+        assert!(plan.pipelined_peak_bytes_estimate(rows, 2) <= budget);
+        // The tiled delegate is unchanged.
+        assert_eq!(
+            plan.tile_rows_for_budget(budget, 2),
+            plan.tile_rows_for_budget_walk(budget, 2, Walk::Tiled)
+        );
+        // The summary surfaces the chained-prefix geometry.
+        let s = plan.pipeline_summary(16, 2).unwrap();
+        assert_eq!(s.segments, 3);
+        assert!(s.ring_bytes > 0 && s.fill_rows > 0);
+        assert_eq!(s.out_bytes, (16 * 4 * 4 * 4) as u64);
     }
 
     #[test]

@@ -1,8 +1,8 @@
 //! The run-time half of the split: walk the tile schedule, stream the
 //! pre-kneaded lanes through SAC, never knead.
 //!
-//! Two walks execute each fused `Conv → ReluRequant [→ Pool]` segment
-//! (DESIGN.md §Streaming segment pipeline):
+//! Three walks execute the tile schedule (DESIGN.md §Streaming segment
+//! pipeline, §Whole-network streaming):
 //!
 //! * **Streaming** ([`Walk::Streaming`], the default for batches that
 //!   cover the worker budget): each segment is a producer/consumer
@@ -22,8 +22,17 @@
 //!   `util::pool::par_map_with`, each recomputing its tile's halo
 //!   rows (overlapped tiling). More parallel slots for small batches;
 //!   `halo_recompute_rows` counts the duplicated stage rows.
+//! * **Pipelined** ([`Walk::Pipelined`], the whole-network extension
+//!   of the streaming walk): the rings chain **across** segment
+//!   boundaries — a pool's emitted rows feed the next conv's input
+//!   ring directly, branch arms consume one upstream ring and write
+//!   disjoint channel blocks of one concat ring — so the entire conv
+//!   trunk streams as one pipeline and only the trunk output (what
+//!   the GAP/flatten/FC tail consumes) ever materializes. Peak memory
+//!   is input + Σ ring working sets + trunk output: flat in network
+//!   depth, with `halo_recompute_rows == 0` end to end.
 //!
-//! Both walks are bit-identical to each other and to the scalar
+//! All walks are bit-identical to each other and to the scalar
 //! references for every tile height, thread budget and input
 //! (invariant I5 over walks — `rust/tests/plan_streaming.rs`).
 //!
@@ -50,19 +59,26 @@ use crate::sac::{rear_adder_tree, split_kneaded, SegmentRegisters};
 use crate::util::pool::{par_map_with, split_budget, worker_count};
 
 use super::compiled::{CompiledConv, CompiledFc, CompiledNetwork};
-use super::graph::{FusedStage, PlanOp, Segment};
+use super::graph::{FusedStage, PlanOp, RowContract, Segment};
 
-/// Which dataflow executes fused segments (see the module docs).
-/// Results are bit-identical either way; the walk only moves wall
+/// Which dataflow executes the tile schedule (see the module docs).
+/// Results are bit-identical across walks; the walk only moves wall
 /// time, memory and halo recompute.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Walk {
-    /// Rolling-ring producer/consumer pipeline: zero halo recompute,
-    /// sequential row order per image (parallel across images/arms).
+    /// Per-segment rolling-ring producer/consumer pipeline: zero halo
+    /// recompute, sequential row order per image (parallel across
+    /// images/arms); each segment's output map still materializes.
     Streaming,
     /// Stateless overlapped row tiles: halo rows recomputed per tile,
     /// (image × tile) parallel slots.
     Tiled,
+    /// Whole-network streaming: the rings chain across segment
+    /// boundaries (pool rows feed the next conv's ring directly,
+    /// branch arms share one upstream ring and one concat ring), so
+    /// only the trunk output materializes and peak memory is flat in
+    /// network depth. Zero halo recompute end to end.
+    Pipelined,
 }
 
 /// Execution-time knobs for [`CompiledNetwork::execute_opts`].
@@ -78,11 +94,14 @@ pub struct ExecOpts {
     pub tile_rows: Option<usize>,
     /// Thread budget. `None` uses `util::pool::worker_count()`.
     pub workers: Option<usize>,
-    /// Dataflow. `None` picks [`Walk::Streaming`] when the batch
-    /// covers the worker budget (n ≥ workers) — serving batches
-    /// stream with zero halo recompute — and [`Walk::Tiled`]
-    /// otherwise, where per-tile fan-out keeps a lone image from
-    /// pinning all but one worker idle.
+    /// Dataflow. `None` first honors the plan's compiled `walk_hint`
+    /// (the registry pins [`Walk::Pipelined`] when the memory budget
+    /// demands whole-network streaming), then picks
+    /// [`Walk::Streaming`] when the batch covers the worker budget
+    /// (n ≥ workers) — serving batches stream with zero halo
+    /// recompute — and [`Walk::Tiled`] otherwise, where per-tile
+    /// fan-out keeps a lone image from pinning all but one worker
+    /// idle.
     pub walk: Option<Walk>,
 }
 
@@ -97,6 +116,14 @@ impl ExecOpts {
     /// ring slide); `0` feeds the whole image in one step.
     pub fn streaming(tile_rows: usize) -> Self {
         Self { tile_rows: Some(tile_rows), workers: None, walk: Some(Walk::Streaming) }
+    }
+
+    /// Whole-network pipelined walk with an explicit advance step —
+    /// rings chained across segment boundaries, only the trunk output
+    /// materializes (DESIGN.md §Whole-network streaming); `0` feeds
+    /// the whole image in one step.
+    pub fn pipelined(tile_rows: usize) -> Self {
+        Self { tile_rows: Some(tile_rows), workers: None, walk: Some(Walk::Pipelined) }
     }
 
     /// One tile per fused chain: the materializing baseline the
@@ -129,7 +156,8 @@ impl ExecOpts {
 /// independent of tiling. `halo_rows` counts stage-output rows
 /// computed more than once across tile boundaries: positive for the
 /// tiled walk (it grows with `k` and `1/tile_rows`), **always zero**
-/// for the streaming walk, whose rings retain halo rows instead.
+/// for the streaming and pipelined walks, whose rings retain halo
+/// rows instead.
 #[derive(Debug, Default)]
 pub struct AllocStats {
     current: AtomicU64,
@@ -244,7 +272,7 @@ impl CompiledNetwork {
             None => (self.tile_rows, true),
         };
         let workers = opts.workers.unwrap_or_else(worker_count).max(1);
-        let walk = opts.walk.unwrap_or(if n >= workers {
+        let walk = opts.walk.or(self.walk_hint).unwrap_or(if n >= workers {
             Walk::Streaming
         } else {
             Walk::Tiled
@@ -258,7 +286,10 @@ impl CompiledNetwork {
         };
         let input = x.clone();
         ctx.alloc(tensor_bytes(&input));
-        let out = run_segments(&ctx, &self.schedule, input, workers)?;
+        let out = match walk {
+            Walk::Pipelined => run_pipelined(&ctx, &self.schedule, input, workers)?,
+            _ => run_segments(&ctx, &self.schedule, input, workers)?,
+        };
         Ok((out, stats))
     }
 }
@@ -359,26 +390,23 @@ fn is_elementwise(op: &PlanOp) -> bool {
     matches!(op, PlanOp::ReluRequant { .. })
 }
 
-/// One fused `Conv → ReluRequant [→ Pool]` walk: resolve every
-/// stage's geometry from the tensor (not the declared topology —
-/// scaled/off-topology inputs are supported), then dispatch on the
-/// context's walk.
-fn run_fused(
-    ctx: &Ctx,
+/// Resolve every stage's geometry from the actual input extent (not
+/// the declared topology — scaled/off-topology inputs are supported),
+/// validating channels, strides and kernel fit. Shared by the fused
+/// segment walks and the whole-network pipeline builder.
+fn resolve_stage_dims(
+    plan: &CompiledNetwork,
     stages: &[FusedStage],
-    x: &Tensor<i32>,
-    workers: usize,
-) -> crate::Result<Tensor<i32>> {
-    let (n, c0, h0, w0) = match *x.shape() {
-        [n, c, h, w] => (n, c, h, w),
-        _ => return Err(crate::Error::Shape("fused segment input must be 4-D".into())),
-    };
+    c0: usize,
+    h0: usize,
+    w0: usize,
+) -> crate::Result<Vec<StageDims>> {
     let mut dims: Vec<StageDims> = Vec::with_capacity(stages.len());
     let (mut c, mut h, mut w) = (c0, h0, w0);
     for st in stages {
         let (oc, oh, ow) = match &st.op {
             PlanOp::Conv { layer, pad, stride } => {
-                let conv = &ctx.plan.convs[*layer];
+                let conv = &plan.convs[*layer];
                 if c != conv.in_c {
                     return Err(crate::Error::Shape(format!(
                         "{}: input channels {c} != weight channels {}",
@@ -411,8 +439,29 @@ fn run_fused(
         dims.push(StageDims { in_c: c, in_h: h, in_w: w, out_c: oc, out_h: oh, out_w: ow });
         (c, h, w) = (oc, oh, ow);
     }
+    Ok(dims)
+}
+
+/// One fused `Conv → ReluRequant [→ Pool]` walk: resolve every
+/// stage's geometry from the tensor, then dispatch on the context's
+/// walk. Under the pipelined walk this only runs for tail/degenerate
+/// segments (the pipeable prefix executes in [`run_pipelined`]), which
+/// stream per segment.
+fn run_fused(
+    ctx: &Ctx,
+    stages: &[FusedStage],
+    x: &Tensor<i32>,
+    workers: usize,
+) -> crate::Result<Tensor<i32>> {
+    let (n, c0, h0, w0) = match *x.shape() {
+        [n, c, h, w] => (n, c, h, w),
+        _ => return Err(crate::Error::Shape("fused segment input must be 4-D".into())),
+    };
+    let dims = resolve_stage_dims(ctx.plan, stages, c0, h0, w0)?;
     match ctx.walk {
-        Walk::Streaming => run_fused_streaming(ctx, stages, &dims, x, n, workers),
+        Walk::Streaming | Walk::Pipelined => {
+            run_fused_streaming(ctx, stages, &dims, x, n, workers)
+        }
         Walk::Tiled => run_fused_tiled(ctx, stages, &dims, x, n, workers),
     }
 }
@@ -937,6 +986,625 @@ fn stream_image(
     Ok(())
 }
 
+// ------------------------------------------------------------ pipelined walk
+//
+// PR 5's streaming walk still materializes every fused segment's full
+// output map before the next segment starts, so peak memory tracks the
+// largest feature map. The pipelined walk chains the rolling rings
+// ACROSS segment boundaries: a pool's emitted rows feed the next
+// conv's input ring directly, branch arms consume one upstream ring
+// and write disjoint channel blocks of one concat ring, and only the
+// trunk output — the map the GAP/flatten/FC tail consumes — ever
+// materializes. Peak memory is input + Σ ring working sets + trunk
+// output: flat in network depth (DESIGN.md §Whole-network streaming).
+
+/// Number of leading schedule segments the pipelined walk can chain:
+/// fused chains opening with a windowed (Conv/Pool) stage, and
+/// branches whose every arm is a non-empty list of such chains.
+/// `GlobalAvgPool`/`Flatten`/`Fc` end the prefix — they run as the
+/// tail over the materialized trunk output.
+fn pipeable_prefix(segs: &[Segment]) -> usize {
+    fn fused_ok(fs: &[FusedStage]) -> bool {
+        fs.first().is_some_and(|s| !is_elementwise(&s.op))
+    }
+    let mut k = 0;
+    for seg in segs {
+        let ok = match seg {
+            Segment::Fused(fs) => fused_ok(fs),
+            Segment::Branch(arms) => arms.iter().all(|arm| {
+                !arm.is_empty()
+                    && arm
+                        .iter()
+                        .all(|s| matches!(s, Segment::Fused(fs) if fused_ok(fs)))
+            }),
+            _ => false,
+        };
+        if !ok {
+            break;
+        }
+        k += 1;
+    }
+    k
+}
+
+/// One windowed stage (Conv or Pool) of the whole-network pipeline,
+/// with its fused activation and ring endpoints resolved.
+struct PipeStage {
+    /// `PlanOp::Conv { .. }` or `PlanOp::Pool(..)` only — elementwise
+    /// ops fold into `relu`, nothing else survives `pipeable_prefix`.
+    op: PlanOp,
+    contract: RowContract,
+    d: StageDims,
+    /// Fused `ReluRequant` applied to this stage's freshly produced
+    /// rows (its own channel block only).
+    relu: Option<u32>,
+    /// Ring the stage reads; ring 0 is the input tensor.
+    src: usize,
+    /// Ring the stage writes.
+    dst: usize,
+    /// Channel offset inside `dst` — branch arms share one concat
+    /// ring, each writing its own channel block.
+    dst_c0: usize,
+}
+
+/// One inter-stage ring of the pipeline DAG. Ring 0 is the input
+/// tensor (read in place, never copied); the sink ring (no consumers)
+/// is backed by the trunk-output plane. Concat rings have one producer
+/// per branch arm.
+struct PipeRing {
+    c: usize,
+    h: usize,
+    w: usize,
+    producers: Vec<usize>,
+    consumers: Vec<usize>,
+    /// Exact rolling capacity from the lock-step pre-pass; 0 for the
+    /// plane-backed input and sink rings.
+    cap: usize,
+}
+
+/// The whole-network pipeline over a pipeable schedule prefix. Stages
+/// are in topological order (build order guarantees every ring's
+/// producers were pushed before its first consumer), so one in-order
+/// sweep per advance step settles the whole DAG.
+struct PipePlan {
+    stages: Vec<PipeStage>,
+    rings: Vec<PipeRing>,
+    /// The trunk-output ring (plane-backed, no consumers).
+    sink: usize,
+}
+
+/// Incremental [`PipePlan`] builder: appends fused chains and branch
+/// fan-outs, wiring producer/consumer edges as it goes.
+struct PipeBuilder<'p> {
+    plan: &'p CompiledNetwork,
+    stages: Vec<PipeStage>,
+    rings: Vec<PipeRing>,
+}
+
+impl PipeBuilder<'_> {
+    fn new_ring(&mut self, c: usize, h: usize, w: usize) -> usize {
+        self.rings.push(PipeRing {
+            c,
+            h,
+            w,
+            producers: Vec::new(),
+            consumers: Vec::new(),
+            cap: 0,
+        });
+        self.rings.len() - 1
+    }
+
+    /// Append one fused chain reading ring `src`. Elementwise stages
+    /// fold into the preceding windowed stage's `relu`; each windowed
+    /// stage owns a fresh ring except the chain's last, which writes
+    /// `into` (a concat ring at a channel offset) when given. Returns
+    /// the ring the chain ends in.
+    fn chain(
+        &mut self,
+        fs: &[FusedStage],
+        src: usize,
+        into: Option<(usize, usize)>,
+    ) -> crate::Result<usize> {
+        let (c, h, w) = {
+            let r = &self.rings[src];
+            (r.c, r.h, r.w)
+        };
+        let dims = resolve_stage_dims(self.plan, fs, c, h, w)?;
+        let windowed: Vec<usize> = (0..fs.len())
+            .filter(|&i| !is_elementwise(&fs[i].op))
+            .collect();
+        if windowed.first() != Some(&0) {
+            return Err(crate::Error::Config(
+                "pipelined chain must open with a windowed stage".into(),
+            ));
+        }
+        let mut cur = src;
+        for (wi, &i) in windowed.iter().enumerate() {
+            let d = dims[i];
+            let last = wi + 1 == windowed.len();
+            let (dst, dst_c0) = match (last, into) {
+                (true, Some((ring, c0))) => (ring, c0),
+                _ => (self.new_ring(d.out_c, d.out_h, d.out_w), 0),
+            };
+            let relu = fs[i + 1..]
+                .iter()
+                .take_while(|s| is_elementwise(&s.op))
+                .find_map(|s| match &s.op {
+                    PlanOp::ReluRequant { frac_bits } => Some(*frac_bits),
+                    _ => None,
+                });
+            let id = self.stages.len();
+            self.stages.push(PipeStage {
+                op: fs[i].op.clone(),
+                contract: fs[i].contract,
+                d,
+                relu,
+                src: cur,
+                dst,
+                dst_c0,
+            });
+            self.rings[cur].consumers.push(id);
+            self.rings[dst].producers.push(id);
+            cur = dst;
+        }
+        Ok(cur)
+    }
+}
+
+/// Build the whole-network pipeline for a pipeable schedule prefix at
+/// the given input extent and advance step, including the exact ring
+/// capacities from the lock-step pre-pass.
+fn build_pipeline(
+    plan: &CompiledNetwork,
+    segs: &[Segment],
+    c0: usize,
+    h0: usize,
+    w0: usize,
+    step: usize,
+) -> crate::Result<PipePlan> {
+    let mut b = PipeBuilder { plan, stages: Vec::new(), rings: Vec::new() };
+    b.new_ring(c0, h0, w0); // ring 0: the input tensor, read in place
+    let mut cur = 0usize;
+    for seg in segs {
+        match seg {
+            Segment::Fused(fs) => cur = b.chain(fs, cur, None)?,
+            Segment::Branch(arms) => {
+                // Resolve every arm's output extent first to size the
+                // concat ring, then append each arm's chains ending in
+                // it at the arm's channel offset.
+                let src = cur;
+                let mut arm_out: Vec<(usize, usize, usize)> = Vec::with_capacity(arms.len());
+                for arm in arms {
+                    let (mut c, mut h, mut w) = {
+                        let r = &b.rings[src];
+                        (r.c, r.h, r.w)
+                    };
+                    for s in arm {
+                        let Segment::Fused(fs) = s else {
+                            return Err(crate::Error::Config(
+                                "pipelined branch arm holds a non-fused segment".into(),
+                            ));
+                        };
+                        let dims = resolve_stage_dims(plan, fs, c, h, w)?;
+                        let last = dims.last().expect("fused segments are non-empty");
+                        (c, h, w) = (last.out_c, last.out_h, last.out_w);
+                    }
+                    arm_out.push((c, h, w));
+                }
+                let (_, oh, ow) = arm_out[0];
+                if arm_out.iter().any(|&(_, h, w)| (h, w) != (oh, ow)) {
+                    return Err(crate::Error::Shape(
+                        "branch arms disagree on output extent".into(),
+                    ));
+                }
+                let total_c: usize = arm_out.iter().map(|&(c, _, _)| c).sum();
+                let concat = b.new_ring(total_c, oh, ow);
+                let mut c_off = 0usize;
+                for (arm, &(ac, _, _)) in arms.iter().zip(&arm_out) {
+                    let mut acur = src;
+                    for (si, s) in arm.iter().enumerate() {
+                        let Segment::Fused(fs) = s else { unreachable!("validated above") };
+                        let into = (si + 1 == arm.len()).then_some((concat, c_off));
+                        acur = b.chain(fs, acur, into)?;
+                    }
+                    debug_assert_eq!(acur, concat, "arm must end in the concat ring");
+                    c_off += ac;
+                }
+                cur = concat;
+            }
+            other => {
+                return Err(crate::Error::Config(format!(
+                    "non-pipeable segment {other:?} inside the pipelined prefix"
+                )))
+            }
+        }
+    }
+    let sink = cur;
+    let mut pp = PipePlan { stages: b.stages, rings: b.rings, sink };
+
+    // Exact ring capacities: run the identical lock-step advance the
+    // compute pass runs, recording each ring's MAX producer watermark
+    // minus the retention floor before the step. The max watermark
+    // (not the min the consumers see) is what bounds live slots: a
+    // fast concat arm writes rows beyond the ring's min-producer
+    // watermark, and those rows must not alias retained ones modulo
+    // the capacity.
+    let mut caps = vec![0usize; pp.rings.len()];
+    let mut floor_before = vec![0usize; pp.rings.len()];
+    let mut flow = PipeFlow::new(&pp);
+    let mut writes = vec![(0usize, 0usize); pp.stages.len()];
+    let max_iters = h0.div_ceil(step.max(1)) + pp.stages.len() + 2;
+    for _ in 0..max_iters {
+        floor_before.copy_from_slice(&flow.floor);
+        let done = flow.advance(&pp, step, &mut writes);
+        for (r, ring) in pp.rings.iter().enumerate() {
+            if r == 0 || ring.consumers.is_empty() {
+                continue; // plane-backed: input tensor / trunk output
+            }
+            caps[r] = caps[r].max(flow.ring_max[r] - floor_before[r]);
+        }
+        if done {
+            for (ring, cap) in pp.rings.iter_mut().zip(caps) {
+                ring.cap = cap;
+            }
+            return Ok(pp);
+        }
+    }
+    Err(crate::Error::Config(
+        "pipeline capacity pre-pass failed to converge".into(),
+    ))
+}
+
+/// Lock-step advance state of the whole-network pipeline, shared — in
+/// identical arithmetic — by the capacity pre-pass and the per-image
+/// compute pass (the cross-segment analogue of [`FlowState`]).
+struct PipeFlow {
+    /// Output rows produced so far, per stage.
+    produced: Vec<usize>,
+    /// Per ring: min over its producers' `produced` — the watermark
+    /// consumers may read (every channel block holds these rows).
+    ring_prod: Vec<usize>,
+    /// Per ring: max over its producers' `produced` — the write
+    /// watermark that bounds live slots (capacity pre-pass).
+    ring_max: Vec<usize>,
+    /// Per ring: retention floor — rows below are dead (no remaining
+    /// consumer window reaches them).
+    floor: Vec<usize>,
+    /// Input rows fed to ring 0.
+    fed: usize,
+}
+
+impl PipeFlow {
+    fn new(pp: &PipePlan) -> Self {
+        Self {
+            produced: vec![0; pp.stages.len()],
+            ring_prod: vec![0; pp.rings.len()],
+            ring_max: vec![0; pp.rings.len()],
+            floor: vec![0; pp.rings.len()],
+            fed: 0,
+        }
+    }
+
+    /// Feed up to `step` more input rows and sweep the stages in topo
+    /// order, chaining every `rows_ready → rows_emitted` advance
+    /// through the ring watermarks; `writes[i]` receives the new
+    /// output rows `[w0, w1)` stage i computes this step. Floors rise
+    /// to the lowest row any remaining consumer window needs. Returns
+    /// true once every stage has fully produced.
+    fn advance(&mut self, pp: &PipePlan, step: usize, writes: &mut [(usize, usize)]) -> bool {
+        let h0 = pp.rings[0].h;
+        self.fed = (self.fed + step.max(1)).min(h0);
+        self.ring_prod[0] = self.fed;
+        self.ring_max[0] = self.fed;
+        for (i, st) in pp.stages.iter().enumerate() {
+            let avail = self.ring_prod[st.src];
+            let e = st
+                .contract
+                .rows_emitted(avail, st.d.in_h, st.d.out_h)
+                .max(self.produced[i]);
+            writes[i] = (self.produced[i], e);
+            self.produced[i] = e;
+            let (mut mn, mut mx) = (usize::MAX, 0usize);
+            for &p in &pp.rings[st.dst].producers {
+                mn = mn.min(self.produced[p]);
+                mx = mx.max(self.produced[p]);
+            }
+            self.ring_prod[st.dst] = mn;
+            self.ring_max[st.dst] = mx;
+        }
+        for (r, ring) in pp.rings.iter().enumerate() {
+            if r == 0 || ring.consumers.is_empty() {
+                continue;
+            }
+            let mut lo = self.ring_prod[r];
+            for &ci in &ring.consumers {
+                let c = &pp.stages[ci];
+                let need = if self.produced[ci] >= c.d.out_h {
+                    self.ring_prod[r] // finished consumer frees the ring
+                } else {
+                    (self.produced[ci] * c.contract.stride).saturating_sub(c.contract.pad)
+                };
+                lo = lo.min(need);
+            }
+            self.floor[r] = self.floor[r].max(lo);
+        }
+        self.produced
+            .iter()
+            .zip(&pp.stages)
+            .all(|(&p, st)| p >= st.d.out_h)
+    }
+}
+
+/// Geometry profile of the whole-network pipeline a plan would run
+/// under [`Walk::Pipelined`]: how many schedule segments chain, the
+/// rolling-ring working set, the trunk-output bytes, and the fill
+/// depth. Produced by [`CompiledNetwork::pipeline_summary`]; feeds the
+/// pipelined peak estimate and the bench/report surfaces.
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineSummary {
+    /// Leading schedule segments chained into the pipeline.
+    pub segments: usize,
+    /// Σ intermediate ring bytes of ONE pipeline instance (one image
+    /// in flight) at the chosen advance step.
+    pub ring_bytes: u64,
+    /// Bytes of the materialized trunk output, per image.
+    pub out_bytes: u64,
+    /// Input rows that must arrive before the first trunk-output row
+    /// emerges — the pipeline's fill depth. Exact (from the lock-step
+    /// flow at 1-row feeds); the composed `RowContract` kernel height
+    /// bounds it from above.
+    pub fill_rows: usize,
+}
+
+/// Compute the [`PipelineSummary`] for a plan at the given input
+/// extent and advance step (`step == 0` feeds the whole image at
+/// once). `Ok(None)` when fewer than two schedule segments are
+/// pipeable — whole-network streaming degenerates to the per-segment
+/// streaming walk there.
+pub(crate) fn pipeline_summary(
+    plan: &CompiledNetwork,
+    c0: usize,
+    h0: usize,
+    w0: usize,
+    step: usize,
+) -> crate::Result<Option<PipelineSummary>> {
+    let prefix = pipeable_prefix(&plan.schedule);
+    if prefix < 2 {
+        return Ok(None);
+    }
+    let step = if step == 0 { h0 } else { step };
+    let pp = build_pipeline(plan, &plan.schedule[..prefix], c0, h0, w0, step)?;
+    let ring_bytes: u64 = pp
+        .rings
+        .iter()
+        .enumerate()
+        .filter(|&(r, ring)| r != 0 && !ring.consumers.is_empty())
+        .map(|(_, ring)| (ring.c * ring.cap * ring.w * std::mem::size_of::<i32>()) as u64)
+        .sum();
+    let sink = &pp.rings[pp.sink];
+    let out_bytes = (sink.c * sink.h * sink.w * std::mem::size_of::<i32>()) as u64;
+    // Fill depth: lock-step at 1-row feeds until the sink first emits.
+    let mut flow = PipeFlow::new(&pp);
+    let mut writes = vec![(0usize, 0usize); pp.stages.len()];
+    let mut fill_rows = h0;
+    for _ in 0..(h0 + pp.stages.len() + 2) {
+        let done = flow.advance(&pp, 1, &mut writes);
+        if flow.ring_prod[pp.sink] > 0 || done {
+            fill_rows = flow.fed;
+            break;
+        }
+    }
+    Ok(Some(PipelineSummary { segments: prefix, ring_bytes, out_bytes, fill_rows }))
+}
+
+/// Whole-network streaming: run the pipeable schedule prefix as ONE
+/// producer/consumer pipeline per image — rings chained across segment
+/// boundaries, branch arms fanning out from one upstream ring into one
+/// concat ring — materializing only the trunk output, then walk the
+/// tail (GAP → flatten → FC) over it. Images stripe across the worker
+/// budget exactly like the streaming walk; `halo_recompute_rows` stays
+/// 0 end to end by construction (rings retain, never recompute).
+fn run_pipelined(
+    ctx: &Ctx,
+    segs: &[Segment],
+    input: Tensor<i32>,
+    workers: usize,
+) -> crate::Result<Tensor<i32>> {
+    let (n, c0, h0, w0) = match *input.shape() {
+        [n, c, h, w] => (n, c, h, w),
+        _ => return run_segments(ctx, segs, input, workers),
+    };
+    let prefix = pipeable_prefix(segs);
+    if prefix < 2 {
+        // Nothing to chain across — fall back to the per-segment walk
+        // (run_fused maps the pipelined walk onto streaming).
+        return run_segments(ctx, segs, input, workers);
+    }
+    let step = if ctx.tile_rows == 0 { h0 } else { ctx.tile_rows.max(1) };
+    let pp = build_pipeline(ctx.plan, &segs[..prefix], c0, h0, w0, step)?;
+    let (oc, oh, ow) = {
+        let sink = &pp.rings[pp.sink];
+        (sink.c, sink.h, sink.w)
+    };
+    let mut out: Tensor<i32> = Tensor::zeros(&[n, oc, oh, ow]);
+    ctx.alloc(tensor_bytes(&out));
+    let plane = oc * oh * ow;
+    let threads = workers.clamp(1, n.max(1));
+    let results: Vec<crate::Result<()>> = if threads <= 1 {
+        out.data_mut()
+            .chunks_mut(plane.max(1))
+            .enumerate()
+            .map(|(b, p)| pipeline_image(ctx, &pp, &input, b, p, step))
+            .collect()
+    } else {
+        // Stripe images across scoped threads; each thread owns its
+        // images' disjoint output planes (same discipline as
+        // run_fused_streaming).
+        type ImagePlane<'p> = (usize, &'p mut [i32]);
+        let mut groups: Vec<Vec<ImagePlane>> = (0..threads).map(|_| Vec::new()).collect();
+        for (b, p) in out.data_mut().chunks_mut(plane.max(1)).enumerate() {
+            groups[b % threads].push((b, p));
+        }
+        let mut res: Vec<crate::Result<()>> = Vec::with_capacity(n);
+        std::thread::scope(|s| {
+            let pp = &pp;
+            let input = &input;
+            let handles: Vec<_> = groups
+                .into_iter()
+                .map(|group| {
+                    s.spawn(move || {
+                        group
+                            .into_iter()
+                            .map(|(b, p)| pipeline_image(ctx, pp, input, b, p, step))
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            for h in handles {
+                res.extend(h.join().expect("pipeline worker panicked"));
+            }
+        });
+        res
+    };
+    for r in results {
+        r?;
+    }
+    // The input retires once the whole trunk has streamed; the tail
+    // then walks the remaining segments over the trunk output.
+    ctx.free(tensor_bytes(&input));
+    drop(input);
+    run_segments(ctx, &segs[prefix..], out, workers)
+}
+
+/// Stream one image through the whole-network pipeline: every ring
+/// slides down its stage's map in lock-step with [`PipeFlow`], halo
+/// rows retained across steps (never recomputed), sink stages writing
+/// the trunk-output plane directly at their concat channel offsets.
+fn pipeline_image(
+    ctx: &Ctx,
+    pp: &PipePlan,
+    x: &Tensor<i32>,
+    b: usize,
+    out_plane: &mut [i32],
+    step: usize,
+) -> crate::Result<()> {
+    let mut rings: Vec<Option<RingBuf>> = pp
+        .rings
+        .iter()
+        .enumerate()
+        .map(|(r, ring)| {
+            (r != 0 && !ring.consumers.is_empty())
+                .then(|| RingBuf::with_capacity(ring.c, ring.cap.max(1), ring.w))
+        })
+        .collect();
+    for r in rings.iter().flatten() {
+        ctx.alloc(r.bytes());
+    }
+
+    let (sink_h, sink_w) = {
+        let s = &pp.rings[pp.sink];
+        (s.h, s.w)
+    };
+    let mut flow = PipeFlow::new(pp);
+    let mut writes = vec![(0usize, 0usize); pp.stages.len()];
+    let max_iters = pp.rings[0].h.div_ceil(step.max(1)) + pp.stages.len() + 2;
+    let mut converged = false;
+    for _ in 0..max_iters {
+        let done = flow.advance(pp, step, &mut writes);
+        for (i, st) in pp.stages.iter().enumerate() {
+            let (w0, w1) = writes[i];
+            if w0 >= w1 {
+                continue;
+            }
+            let d = &st.d;
+            // A stage never writes the ring it reads, so taking the
+            // destination out leaves the source borrowable.
+            let mut dst = rings[st.dst].take();
+            {
+                let src = if st.src == 0 {
+                    RowSrc::Tensor { x, b }
+                } else {
+                    RowSrc::Ring(rings[st.src].as_ref().expect("upstream ring"))
+                };
+                let mut target = match &mut dst {
+                    Some(r) => {
+                        r.grow_to(w1);
+                        RowTarget::RingAt { ring: r, c0: st.dst_c0 }
+                    }
+                    None => RowTarget::Plane {
+                        data: &mut out_plane[st.dst_c0 * sink_h * sink_w..],
+                        h: sink_h,
+                        w: sink_w,
+                    },
+                };
+                match &st.op {
+                    PlanOp::Conv { layer, pad, stride } => conv_rows(
+                        &ctx.plan.convs[*layer],
+                        &src,
+                        d,
+                        *pad,
+                        *stride,
+                        w0,
+                        w1,
+                        ctx.plan.mode,
+                        &mut target,
+                    ),
+                    PlanOp::Pool(spec) => pool_rows(*spec, &src, d, w0, w1, &mut target),
+                    _ => unreachable!("build_pipeline only emits windowed stages"),
+                }
+            }
+            rings[st.dst] = dst;
+            // Fused activation on the freshly produced rows of this
+            // stage's own channel block — retained halo rows were
+            // activated in earlier steps and must not be
+            // re-requantized.
+            if let Some(frac) = st.relu {
+                match rings[st.dst].as_mut() {
+                    Some(r) => {
+                        for cc in 0..d.out_c {
+                            for y in w0..w1 {
+                                for v in r.row_mut(st.dst_c0 + cc, y) {
+                                    *v = requantize(*v, frac).max(0);
+                                }
+                            }
+                        }
+                    }
+                    None => {
+                        for cc in 0..d.out_c {
+                            for y in w0..w1 {
+                                let s = ((st.dst_c0 + cc) * sink_h + y) * sink_w;
+                                for v in &mut out_plane[s..s + sink_w] {
+                                    *v = requantize(*v, frac).max(0);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // Slide: drop rows no remaining consumer window needs.
+        for (r, ring) in rings.iter_mut().enumerate() {
+            if let Some(ring) = ring.as_mut() {
+                ring.retire_below(flow.floor[r]);
+            }
+        }
+        if done {
+            converged = true;
+            break;
+        }
+    }
+    for r in rings.iter().flatten() {
+        ctx.free(r.bytes());
+    }
+    if converged {
+        Ok(())
+    } else {
+        Err(crate::Error::Config(
+            "pipeline compute pass failed to converge".into(),
+        ))
+    }
+}
+
 // ------------------------------------------------------------- row storage
 
 /// Rows `[y0, y1)` of one image's (C, rows, W) feature map, stored
@@ -1012,10 +1680,14 @@ impl RingBuf {
         &mut self.data[i..i + self.w]
     }
 
-    /// Raise the produced watermark (rows about to be written).
+    /// Raise the produced watermark (rows about to be written). The
+    /// watermark is monotone (max), not strictly increasing per call:
+    /// a concat ring's producers advance at different rates, so a slow
+    /// arm may grow to a watermark a fast arm already passed.
     fn grow_to(&mut self, y1: usize) {
+        let y1 = self.y1.max(y1);
         debug_assert!(
-            y1 >= self.y1 && y1 - self.y0 <= self.cap,
+            y1 - self.y0 <= self.cap,
             "grow to {y1} overflows ring [{}, +{}]",
             self.y0,
             self.cap
@@ -1065,6 +1737,9 @@ fn row_src<'a>(buf: &'a Option<RingBuf>, x: &'a Tensor<i32>, b: usize) -> RowSrc
 /// per-tile staging buffer ever exists.
 enum RowTarget<'a> {
     Ring(&'a mut RingBuf),
+    /// Ring write at a channel offset: branch arms of the pipelined
+    /// walk share one concat ring, each writing its own channel block.
+    RingAt { ring: &'a mut RingBuf, c0: usize },
     Plane { data: &'a mut [i32], h: usize, w: usize },
 }
 
@@ -1073,6 +1748,7 @@ impl RowTarget<'_> {
     fn put(&mut self, c: usize, y: usize, x: usize, v: i32) {
         match self {
             RowTarget::Ring(r) => r.put(c, y, x, v),
+            RowTarget::RingAt { ring, c0 } => ring.put(*c0 + c, y, x, v),
             RowTarget::Plane { data, h, w } => data[(c * *h + y) * *w + x] = v,
         }
     }
@@ -1553,6 +2229,159 @@ mod tests {
         let c = Tensor::from_vec(&[2, 1, 2, 1], vec![0; 4]).unwrap();
         let d = Tensor::from_vec(&[2, 1, 1, 2], vec![0; 4]).unwrap();
         assert!(concat_channels(&[c, d]).is_err());
+    }
+
+    // ------------------------------------------------ pipelined walk
+
+    use crate::model::{ConvLayer, LoadedLayer, LoadedWeights};
+
+    /// A small net exercising everything the pipeline must handle:
+    /// stem conv, a 3-arm branch whose arms advance at different rates
+    /// (1×1 fast arm, two-conv slow arm, ceil-mode-pool-led arm), a
+    /// conv consuming the concat ring, and a trailing overlapping
+    /// pool fused behind it.
+    fn tiny_branchy() -> Network {
+        let conv = |name: &str, in_c, out_c, k, stride, pad, in_hw| ConvLayer {
+            name: name.to_string(),
+            in_c,
+            out_c,
+            k,
+            stride,
+            pad,
+            in_hw,
+        };
+        Network::with_schedule(
+            "tiny_branchy",
+            vec![
+                conv("stem", 1, 4, 3, 1, 1, 16),
+                conv("arm1/1x1", 4, 3, 1, 1, 0, 16),
+                conv("arm2/3x3a", 4, 4, 3, 1, 1, 16),
+                conv("arm2/3x3b", 4, 5, 3, 1, 1, 16),
+                conv("arm3/proj", 4, 2, 1, 1, 0, 16),
+                conv("tail", 10, 6, 3, 1, 1, 16),
+            ],
+            vec![
+                TopoOp::Conv(0),
+                TopoOp::Branch(vec![
+                    vec![TopoOp::Conv(1)],
+                    vec![TopoOp::Conv(2), TopoOp::Conv(3)],
+                    vec![TopoOp::Pool(PoolSpec::max(3, 1, 1)), TopoOp::Conv(4)],
+                ]),
+                TopoOp::Conv(5),
+                TopoOp::Pool(PoolSpec::max(3, 2, 0)), // 16 → 8, overlapping
+            ],
+        )
+    }
+
+    /// Varied (non-constant) weights so channel-block misplacement in
+    /// the concat ring cannot cancel out.
+    fn varied_weights(net: &Network) -> LoadedWeights {
+        let layers = net
+            .layers
+            .iter()
+            .map(|l| LoadedLayer {
+                name: l.name.clone(),
+                shape: [l.out_c, l.in_c, l.k, l.k],
+                frac_bits: 8,
+                weights: (0..l.weight_count()).map(|i| ((i * 37) % 25) as i32 - 12).collect(),
+            })
+            .collect();
+        LoadedWeights { mode: Mode::Fp16, layers }
+    }
+
+    #[test]
+    fn pipelined_walk_matches_other_walks_bit_exact() {
+        let w = SacBackend::synthetic_weights(12).unwrap();
+        let plan =
+            CompiledNetwork::compile(&tiny_with_overlapping_pools(), &w, 16, Mode::Fp16)
+                .unwrap();
+        let x = image_batch(3, 17);
+        let want = plan.execute_opts(&x, ExecOpts::materializing()).unwrap();
+        for tile in [1usize, 2, 3, 5, 0] {
+            for workers in [1usize, 4] {
+                let (got, t) = plan
+                    .execute_traced(&x, ExecOpts::pipelined(tile).with_workers(workers))
+                    .unwrap();
+                assert_eq!(got, want, "pipelined tile={tile} workers={workers}");
+                assert_eq!(
+                    t.halo_recompute_rows(),
+                    0,
+                    "pipelined walk recomputed halo rows (tile={tile})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_walk_streams_branches_from_one_upstream_ring() {
+        let net = tiny_branchy();
+        let w = varied_weights(&net);
+        let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+        let x = image_batch(2, 23);
+        let want = plan.execute_opts(&x, ExecOpts::materializing()).unwrap();
+        for tile in [1usize, 2, 4, 7, 0] {
+            let (got, t) = plan
+                .execute_traced(&x, ExecOpts::pipelined(tile).with_workers(2))
+                .unwrap();
+            assert_eq!(got, want, "branchy pipeline diverged at tile={tile}");
+            assert_eq!(t.halo_recompute_rows(), 0);
+        }
+    }
+
+    #[test]
+    fn pipelined_peak_stays_below_materializing_peak() {
+        let w = SacBackend::synthetic_weights(3).unwrap();
+        let plan =
+            CompiledNetwork::compile(&tiny_with_overlapping_pools(), &w, 16, Mode::Fp16)
+                .unwrap();
+        let x = image_batch(1, 29);
+        let (full, t_full) = plan
+            .execute_traced(&x, ExecOpts::materializing().with_workers(1))
+            .unwrap();
+        let (piped, t_piped) = plan
+            .execute_traced(&x, ExecOpts::pipelined(2).with_workers(1))
+            .unwrap();
+        assert_eq!(full, piped);
+        assert!(
+            t_piped.peak_bytes() < t_full.peak_bytes(),
+            "pipelined peak {} not below materializing peak {}",
+            t_piped.peak_bytes(),
+            t_full.peak_bytes()
+        );
+    }
+
+    #[test]
+    fn pipeline_summary_profiles_rings_and_fill_depth() {
+        let w = SacBackend::synthetic_weights(7).unwrap();
+        let plan = CompiledNetwork::compile(&zoo::tiny_cnn(), &w, 16, Mode::Fp16).unwrap();
+        let s = pipeline_summary(&plan, 1, 16, 16, 2)
+            .unwrap()
+            .expect("tiny CNN trunk is pipeable");
+        // Three fused segments chain: conv1+pool, conv2+pool, conv3.
+        assert_eq!(s.segments, 3);
+        assert!(s.ring_bytes > 0, "chained rings must hold halo rows");
+        // Trunk output: 16 channels × 4×4 i32.
+        assert_eq!(s.out_bytes, (16 * 4 * 4 * 4) as u64);
+        // The composed contract bounds the exact fill depth from
+        // above: first composite window needs k − pad input rows.
+        let chain = [
+            RowContract { k: 3, stride: 1, pad: 1 },
+            RowContract { k: 2, stride: 2, pad: 0 },
+            RowContract { k: 3, stride: 1, pad: 1 },
+            RowContract { k: 2, stride: 2, pad: 0 },
+            RowContract { k: 3, stride: 1, pad: 1 },
+        ];
+        let c = RowContract::composed(chain.iter());
+        assert!(s.fill_rows >= 1 && s.fill_rows <= c.k - c.pad,
+            "fill depth {} outside (0, {}]", s.fill_rows, c.k - c.pad);
+    }
+
+    #[test]
+    fn pipeable_prefix_stops_at_the_classifier_tail() {
+        let w = SacBackend::synthetic_weights(2).unwrap();
+        let plan = CompiledNetwork::compile(&zoo::tiny_cnn(), &w, 16, Mode::Fp16).unwrap();
+        // tiny CNN: [Fused, Fused, Fused, GAP, Fc] → prefix 3.
+        assert_eq!(pipeable_prefix(&plan.schedule), 3);
     }
 
     // Plan ≡ scalar-forward equivalence (invariant I5) lives in

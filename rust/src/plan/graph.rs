@@ -109,6 +109,42 @@ impl RowContract {
         }
         (((ready + self.pad - self.k) / self.stride) + 1).min(out_h)
     }
+
+    /// Compose `self` (upstream) with `next` (downstream) into the
+    /// contract of the fused two-stage window: applying the composite
+    /// to final-output rows answers "which *original* input rows does
+    /// this span reach through both stages".
+    ///
+    /// The unclipped window algebra telescopes exactly — strides
+    /// multiply, kernels chain (`(k_next − 1)·s + k`), pads accumulate
+    /// (`p_next·s + p`). Clipping makes the composite *conservative*
+    /// rather than exact: [`in_span`](Self::in_span)'s `lo` always
+    /// matches the stage-by-stage backward chain (a span clipped to 0
+    /// stays 0 through every earlier stage), while `hi` matches unless
+    /// an intermediate stage's span clips at its own `in_h` (bottom
+    /// padding / ceil-mode overhang), in which case the composite span
+    /// is a superset of the chained one. Dually, the composite's
+    /// [`rows_emitted`](Self::rows_emitted) never exceeds the chained
+    /// per-stage advance, with equality at `ready == in_h`. Both
+    /// directions are safe for what the composite is used for: sizing
+    /// the whole-network pipeline's *fill depth* (how many input rows
+    /// must arrive before the first final-output row emerges) and
+    /// bounding receptive-field reach.
+    pub fn then(&self, next: &RowContract) -> RowContract {
+        RowContract {
+            k: (next.k - 1) * self.stride + self.k,
+            stride: self.stride * next.stride,
+            pad: next.pad * self.stride + self.pad,
+        }
+    }
+
+    /// Fold a stage chain (upstream first) into one composite contract
+    /// via [`then`](Self::then); identity contract for an empty chain.
+    pub fn composed<'a>(chain: impl IntoIterator<Item = &'a RowContract>) -> RowContract {
+        chain
+            .into_iter()
+            .fold(RowContract::elementwise(), |acc, c| acc.then(c))
+    }
 }
 
 /// One stage of a fused tile walk: a fusable op plus the row contract
@@ -954,6 +990,106 @@ mod tests {
                     c.rows_emitted(hi, in_h, out_h) >= o1,
                     "k{k} s{s} p{p}: span hi {hi} does not emit {o1}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn contract_composition_telescopes_the_window_algebra() {
+        // VGG block shape: 3×3 s1 p1 conv feeding a 2×2 s2 pool. The
+        // composite window is 4 rows every 2, pad 1 — the familiar
+        // "pool output row o reaches conv input rows [2o−1, 2o+3)".
+        let conv = RowContract { k: 3, stride: 1, pad: 1 };
+        let pool = RowContract { k: 2, stride: 2, pad: 0 };
+        let c = conv.then(&pool);
+        assert_eq!(c, RowContract { k: 4, stride: 2, pad: 1 });
+        assert_eq!(c.in_span(1, 2, 16), (1, 5));
+        // Elementwise is the identity on both sides.
+        let e = RowContract::elementwise();
+        assert_eq!(e.then(&c), c);
+        assert_eq!(c.then(&e), c);
+        // composed() folds upstream-first.
+        let relu = RowContract::elementwise();
+        assert_eq!(RowContract::composed([&conv, &relu, &pool]), c);
+        assert_eq!(RowContract::composed([]), e);
+    }
+
+    #[test]
+    fn composed_in_span_matches_the_backward_chain() {
+        // Sweep random-ish chains: the composite's lo always equals the
+        // stage-by-stage backward chain; hi equals it unless an
+        // intermediate span clips at its in_h, where the composite is a
+        // conservative superset. (Validated exhaustively by the
+        // pipeline-design simulation; pinned here on a sweep.)
+        let chains: &[&[(usize, usize, usize)]] = &[
+            &[(3, 1, 1), (2, 2, 0)],
+            &[(11, 4, 0), (3, 2, 0)],
+            &[(3, 1, 1), (3, 1, 1), (2, 2, 0)],
+            &[(1, 1, 0), (3, 2, 1), (3, 1, 2)],
+            &[(5, 2, 2), (3, 2, 0), (3, 1, 1)],
+        ];
+        for geo in chains {
+            for h0 in [7usize, 16, 33] {
+                // Forward-propagate floor-mode extents.
+                let mut hs = vec![h0];
+                let mut ok = true;
+                for &(k, s, p) in geo.iter() {
+                    let h = *hs.last().unwrap();
+                    if h + 2 * p < k {
+                        ok = false;
+                        break;
+                    }
+                    hs.push((h + 2 * p - k) / s + 1);
+                }
+                if !ok {
+                    continue;
+                }
+                let contracts: Vec<RowContract> = geo
+                    .iter()
+                    .map(|&(k, s, p)| RowContract { k, stride: s, pad: p })
+                    .collect();
+                let comp = RowContract::composed(contracts.iter());
+                let out_h = *hs.last().unwrap();
+                for o0 in 0..out_h {
+                    for o1 in (o0 + 1)..=out_h {
+                        let (mut lo, mut hi) = (o0, o1);
+                        let mut clipped = false;
+                        for (i, c) in contracts.iter().enumerate().rev() {
+                            let raw_hi = ((hi - 1) * c.stride + c.k).saturating_sub(c.pad);
+                            if raw_hi > hs[i] {
+                                clipped = true;
+                            }
+                            let (l, h) = c.in_span(lo, hi, hs[i]);
+                            lo = l;
+                            hi = h;
+                        }
+                        let got = comp.in_span(o0, o1, h0);
+                        assert_eq!(got.0, lo, "{geo:?} h0={h0} span [{o0},{o1}): lo");
+                        if clipped {
+                            assert!(
+                                got.1 >= hi,
+                                "{geo:?} h0={h0} span [{o0},{o1}): composite hi {} < chained {hi}",
+                                got.1
+                            );
+                        } else {
+                            assert_eq!(got.1, hi, "{geo:?} h0={h0} span [{o0},{o1}): hi");
+                        }
+                    }
+                }
+                // Dual: composed rows_emitted never exceeds the chained
+                // advance, and both finish at ready == h0.
+                for ready in 0..=h0 {
+                    let mut e = ready;
+                    for (i, c) in contracts.iter().enumerate() {
+                        e = c.rows_emitted(e, hs[i], hs[i + 1]);
+                    }
+                    let got = comp.rows_emitted(ready, h0, out_h);
+                    assert!(got <= e, "{geo:?} h0={h0} ready={ready}: composite {got} > chained {e}");
+                    if ready == h0 {
+                        assert_eq!(got, out_h);
+                        assert_eq!(e, out_h);
+                    }
+                }
             }
         }
     }

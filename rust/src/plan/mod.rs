@@ -22,20 +22,24 @@
 //!   records the tile schedule ([`graph::segment_plan`]) plus a
 //!   peak-bytes estimate serving uses to pick a tile height from a
 //!   memory budget.
-//! * [`exec`] — the segment executor, two dataflows over one tile
+//! * [`exec`] — the segment executor, three dataflows over one tile
 //!   schedule: the **streaming** walk (default for covered batches)
 //!   runs each fused `Conv → ReluRequant [→ Pool]` segment as a
 //!   producer/consumer pipeline over rolling rings that slide down
 //!   the image — halo rows are retained across steps
 //!   ([`graph::RowContract::rows_emitted`]), so every stage row is
-//!   computed exactly once (`halo_recompute_rows == 0`) — while the
+//!   computed exactly once (`halo_recompute_rows == 0`) — the
 //!   **tiled** walk fans (image, row-tile) stripes out with per-tile
-//!   halo recompute ([`graph::RowContract::in_span`] halo math).
-//!   Either way the conv's full-size pre-pool map never materializes,
-//!   `Branch` arms run concurrently under `util::pool::split_budget`
-//!   slices, compiled FC stacks execute through a flatten stage +
-//!   per-name lanes, and output order is deterministic for any tile
-//!   height, budget and walk.
+//!   halo recompute ([`graph::RowContract::in_span`] halo math), and
+//!   the **pipelined** walk chains the rings *across* segment
+//!   boundaries (pool rows feed the next conv's ring directly, branch
+//!   arms share one upstream ring and one concat ring), so only the
+//!   trunk output ever materializes and peak memory is flat in
+//!   network depth. Either way the conv's full-size pre-pool map
+//!   never materializes, `Branch` arms run concurrently under
+//!   `util::pool::split_budget` slices, compiled FC stacks execute
+//!   through a flatten stage + per-name lanes, and output order is
+//!   deterministic for any tile height, budget and walk.
 //!
 //! Losslessness invariant (DESIGN.md §I5): reusing kneaded lanes across
 //! calls never changes logits — the executor is bit-identical to a
@@ -54,5 +58,5 @@ pub mod exec;
 pub mod graph;
 
 pub use compiled::{CompiledConv, CompiledFc, CompiledNetwork, DEFAULT_TILE_ROWS};
-pub use exec::{AllocStats, ExecOpts, Walk};
+pub use exec::{AllocStats, ExecOpts, PipelineSummary, Walk};
 pub use graph::{derive_graph, segment_plan, FusedStage, PlanOp, RowContract, Segment};

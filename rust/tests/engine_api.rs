@@ -446,6 +446,82 @@ fn engine_serves_vgg16_classifier_heads_end_to_end() {
     }
 }
 
+/// ISSUE 6: the builder's walk pin reaches the compiled plan and the
+/// model meta; a pipelined-pinned engine serves the same logits as the
+/// default policy; and a memory budget too small for even the
+/// streaming walk makes compilation fall over to the pipelined walk
+/// on its own (whole-network streaming, depth-independent peak).
+#[test]
+fn builder_walk_pin_and_budget_fallover_pick_the_pipelined_walk() {
+    use tetris::plan::Walk;
+    let _serial = SERIAL.lock().unwrap();
+    let w = SacBackend::synthetic_weights(19).unwrap();
+    let mut rng = Rng::new(29);
+    let images: Vec<Tensor<i32>> = (0..5).map(|_| tiny_image(&mut rng)).collect();
+
+    // Default policy: nothing pinned, nothing surfaced.
+    let engine = Engine::builder()
+        .workers(2)
+        .register("tiny", zoo::tiny_cnn(), w.clone())
+        .build()
+        .unwrap();
+    assert_eq!(engine.models()[0].walk(), None);
+    let want: Vec<Vec<i32>> = engine
+        .session()
+        .infer_batch("tiny", &images)
+        .unwrap()
+        .into_iter()
+        .map(|r| r.logits)
+        .collect();
+    engine.shutdown();
+
+    // Pinned pipelined walk: surfaced in meta + plan, logits identical.
+    let engine = Engine::builder()
+        .workers(2)
+        .walk(Walk::Pipelined)
+        .register("tiny", zoo::tiny_cnn(), w)
+        .build()
+        .unwrap();
+    let meta = &engine.models()[0];
+    assert_eq!(meta.walk(), Some(Walk::Pipelined));
+    assert_eq!(meta.plan().unwrap().walk_hint, Some(Walk::Pipelined));
+    let got = engine.session().infer_batch("tiny", &images).unwrap();
+    for (i, resp) in got.iter().enumerate() {
+        assert_eq!(
+            resp.logits, want[i],
+            "image {i}: pinned pipelined walk changed the logits"
+        );
+    }
+    engine.shutdown();
+
+    // Budget-demanded fallover: at full 224² resolution the first
+    // conv pair of (scaled) VGG-16 alone holds ~1.4 MB of in+out
+    // maps, so no tile height fits the per-segment walks into 1 MiB —
+    // compilation must pin the pipelined walk without being asked and
+    // size its tile with the pipelined estimator.
+    let net = zoo::vgg16().scaled(16, 224);
+    let vw =
+        synthetic_loaded(&net, Mode::Fp16, 9, "vgg16", DensityCalibration::Fig2, 31).unwrap();
+    let engine = Engine::builder()
+        .workers(1)
+        .mem_budget_mb(1)
+        .register("vgg16", net, vw)
+        .build()
+        .unwrap();
+    let meta = &engine.models()[0];
+    assert_eq!(
+        meta.walk(),
+        Some(Walk::Pipelined),
+        "1 MiB cannot hold a 224² segment map — compile must fall over"
+    );
+    let plan = meta.plan().unwrap();
+    assert_eq!(
+        plan.tile_rows,
+        plan.tile_rows_for_budget_walk(1024 * 1024, 1, Walk::Pipelined)
+    );
+    engine.shutdown();
+}
+
 /// Session metrics surface exact latency percentiles once requests
 /// complete.
 #[test]

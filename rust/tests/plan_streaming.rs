@@ -16,6 +16,15 @@
 //! * VGG-16 fc6–8 and GoogleNet loss3/classifier execute through
 //!   their compiled per-name lanes (flatten → fused heads → logits),
 //!   bit-exact vs the reference interpreter's naive FC chain.
+//!
+//! ISSUE 6 extends the sweep to **whole-network streaming**: the
+//! pipelined walk — rings chained across segment boundaries — joins
+//! the equivalence class (`pipelined ≡ streaming ≡ tiled ≡ reference`,
+//! logits included) across tile heights × memory budgets × workers
+//! with `halo_recompute_rows == 0`, and on deep full(er)-resolution
+//! trunks its measured peak sits below the per-segment streaming
+//! walk's and stays flat in network depth (±the ring working set:
+//! VGG-16 vs VGG-19 at the same resolution).
 
 use tetris::config::Mode;
 use tetris::model::reference::forward_reference;
@@ -23,7 +32,7 @@ use tetris::model::weights::{
     synthetic_loaded, synthetic_loaded_with_heads, DensityCalibration,
 };
 use tetris::model::{zoo, Network, Tensor};
-use tetris::plan::{CompiledNetwork, ExecOpts};
+use tetris::plan::{CompiledNetwork, ExecOpts, Walk};
 use tetris::util::prop::{run_with, PropConfig};
 use tetris::util::rng::Rng;
 
@@ -166,6 +175,140 @@ fn streaming_never_recomputes_and_never_outallocates_tiled() {
             Ok(())
         },
     );
+}
+
+// ---------------- ISSUE 6: whole-network streaming, property-swept ----------------
+
+/// `util::prop` sweep over (network, tile-or-budget, workers): the
+/// pipelined walk — rings chained across every pool boundary of the
+/// trunk — produces byte-identical output to the streaming walk, the
+/// tiled walk, AND the naive reference (logits included: vgg16 runs
+/// through fc6–8, googlenet through loss3/classifier), with zero halo
+/// recompute. Tile heights are drawn directly half the time and
+/// derived from a memory budget through the walk-aware
+/// `tile_rows_for_budget_walk` the other half. The case count honors
+/// `TETRIS_PROP_CASES` (scripts/verify.sh runs this sweep under an
+/// explicit knob); unset, it defaults to the sibling sweep's 12.
+#[test]
+fn pipelined_walk_joins_the_equivalence_class_zoo_wide() {
+    let cases = std::env::var("TETRIS_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&c| c > 0)
+        .unwrap_or(12);
+    // Head-bearing weights wherever the zoo declares heads, so the
+    // equivalence covers image → logits, not just the conv trunk.
+    let compiled: Vec<(Network, CompiledNetwork, Tensor<i32>, Tensor<i32>)> = scaled_zoo()
+        .into_iter()
+        .map(|(net, profile, hw)| {
+            let w = synthetic_loaded_with_heads(
+                &net,
+                Mode::Fp16,
+                12,
+                profile,
+                DensityCalibration::Fig2,
+                0x6000 + hw as u64,
+            )
+            .unwrap();
+            let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+            let mut rng = Rng::new(0x9E + hw as u64);
+            let x = random_input(&net, 1, hw, &mut rng);
+            let want = forward_reference(&net, &w, &x);
+            (net, plan, x, want)
+        })
+        .collect();
+
+    run_with(
+        PropConfig { cases, seed: 0x5EED_0006 },
+        "pipelined ≡ streaming ≡ tiled ≡ reference ∧ zero halo recompute",
+        |rng| {
+            let net_i = rng.below(compiled.len() as u64) as usize;
+            let workers = 1 + rng.below(4) as usize;
+            let tile = if rng.chance(0.5) {
+                // Direct advance step: 0 (whole image per feed) or 1..=6.
+                rng.below(7) as usize
+            } else {
+                // Budget-derived, like serving under a pinned walk:
+                // 1..=64 MiB through the pipelined estimator.
+                let budget = (1u64 << rng.below(7)) * 1024 * 1024;
+                compiled[net_i].1.tile_rows_for_budget_walk(budget, workers, Walk::Pipelined)
+            };
+            (net_i, tile, workers)
+        },
+        |&(net_i, tile, workers)| {
+            let (net, plan, x, want) = &compiled[net_i];
+            let (piped, tp) = plan
+                .execute_traced(x, ExecOpts::pipelined(tile).with_workers(workers))
+                .map_err(|e| e.to_string())?;
+            if &piped != want {
+                return Err(format!(
+                    "{}: pipelined tile={tile} workers={workers} diverged from the reference",
+                    net.name
+                ));
+            }
+            if tp.halo_recompute_rows() != 0 {
+                return Err(format!(
+                    "{}: pipelined walk recomputed {} halo rows",
+                    net.name,
+                    tp.halo_recompute_rows()
+                ));
+            }
+            let streamed = plan
+                .execute_opts(x, ExecOpts::streaming(tile).with_workers(workers))
+                .map_err(|e| e.to_string())?;
+            let tiled = plan
+                .execute_opts(x, ExecOpts::tiled(tile).with_workers(workers))
+                .map_err(|e| e.to_string())?;
+            if piped != streamed || piped != tiled {
+                return Err(format!("{}: the three walks diverged", net.name));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// On a deep trunk at fuller resolution the chained pipeline's peak is
+/// strictly below the per-segment streaming walk's (whose floor is the
+/// largest segment's in+out maps), and ADDING DEPTH — VGG-16 → VGG-19,
+/// three more convs at the same resolution — moves the pipelined peak
+/// by no more than the ring working set: depth-independent peak
+/// memory, measured, not estimated.
+#[test]
+fn pipelined_peak_beats_streaming_and_stays_flat_in_depth() {
+    let hw = 128;
+    let run = |net: Network, profile: &str| {
+        let w = synthetic_loaded(&net, Mode::Fp16, 12, profile, DensityCalibration::Fig2, 0xDEE)
+            .unwrap();
+        let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+        let mut rng = Rng::new(0xD0);
+        let x = random_input(&net, 1, hw, &mut rng);
+        let (_, trace) = plan.execute_traced(&x, ExecOpts::pipelined(1)).unwrap();
+        assert_eq!(trace.halo_recompute_rows(), 0, "{profile}: pipelined halo must be 0");
+        let summary = plan.pipeline_summary(hw, 1).expect("deep trunk must pipeline");
+        (plan, x, trace.peak_bytes(), summary)
+    };
+    let (plan16, x16, peak16, sum16) = run(zoo::vgg16().scaled(16, hw), "vgg16");
+    let (_, _, peak19, sum19) = run(zoo::vgg19().scaled(16, hw), "vgg19");
+
+    // Ordering vs the per-segment streaming walk, measured on VGG-16.
+    let (_, ts) = plan16.execute_traced(&x16, ExecOpts::streaming(1)).unwrap();
+    assert!(
+        peak16 < ts.peak_bytes(),
+        "pipelined peak {peak16} must undercut the streaming walk's {} at {hw}²",
+        ts.peak_bytes()
+    );
+
+    // Depth flatness: VGG-19's three extra convs may only add ring
+    // working set, never another live feature map.
+    let ring_slack = sum16.ring_bytes.max(sum19.ring_bytes);
+    assert!(
+        peak19 <= peak16 + ring_slack && peak16 <= peak19 + ring_slack,
+        "depth moved the pipelined peak beyond the ring working set: \
+         vgg16 {peak16} B vs vgg19 {peak19} B (ring slack {ring_slack} B)"
+    );
+    // Both chain the full 13/16-segment trunk.
+    assert_eq!(sum16.segments, 13);
+    assert_eq!(sum19.segments, 16);
 }
 
 // ---------------- acceptance: executable FC stacks, image → logits ----------------

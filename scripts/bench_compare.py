@@ -1,6 +1,7 @@
 #!/usr/bin/env python3
 """Bench-regression gate: diff a fresh hot-path bench JSON against the
-committed baseline and fail on median regressions beyond tolerance.
+committed baseline and fail on median or peak-memory regressions beyond
+tolerance.
 
 Usage:
     scripts/bench_compare.py BASELINE.json FRESH.json [--tolerance 0.30]
@@ -17,23 +18,40 @@ Both files are `util::bench::Harness` JSON reports
 additionally carry:
 
     "provisional": true   # bootstrap mode: report, never fail
-    "tolerance": 0.30     # default tolerance (CLI flag overrides)
+    "tolerance": 0.30     # default timing tolerance (CLI flag overrides)
+    "peak_tolerance": 0.10  # allowed fractional peak-bytes growth
 
 Rules, per baseline entry with a positive median (metric-only rows have
-median 0 and are skipped):
+median 0 and are skipped by the timing gate):
 
   * fresh median  >  baseline * (1 + tolerance)  ->  REGRESSION (fails)
   * entry missing from the fresh report          ->  MISSING    (fails)
-  * fresh-only entries                           ->  listed as new, pass
+  * fresh-only entries (timed or metric-only)    ->  listed as new, pass
+
+Peak-memory gate, per metric key ending in `_peak_bytes` that both the
+baseline and the fresh entry carry (memory is deterministic, so the
+tolerance is tight — default 10%):
+
+  * fresh peak  >  baseline peak * 1.10  ->  PEAK REGRESSION (fails)
+  * peak metric present only in one side ->  listed, never fails
+
+Sections and metrics that exist only in the fresh report NEVER fail the
+gate: new benches land before their baseline is re-promoted, and the
+gate must not punish adding coverage.
 
 Exit codes: 0 ok / 1 regressions or missing entries / 2 usage or parse
 errors. Timing gates are inherently noisy — the tolerance is the knob;
-keep it generous (>=0.25) for shared CI runners.
+keep it generous (>=0.25) for shared CI runners. Peak-bytes gates are
+NOT noisy (allocation arithmetic is deterministic), hence the separate,
+tight peak tolerance.
 """
 
 import argparse
 import json
 import sys
+
+PEAK_SUFFIX = "_peak_bytes"
+DEFAULT_PEAK_TOLERANCE = 0.10
 
 
 def load_report(path):
@@ -47,17 +65,22 @@ def load_report(path):
     if not isinstance(results, list):
         print(f"bench_compare: {path} has no 'results' array", file=sys.stderr)
         sys.exit(2)
-    medians = {}
+    medians, metrics = {}, {}
     for entry in results:
         name = entry.get("name")
         median = entry.get("median_s")
         if isinstance(name, str) and isinstance(median, (int, float)):
             medians[name] = float(median)
-    return doc, medians
+        m = entry.get("metrics")
+        if isinstance(name, str) and isinstance(m, dict):
+            metrics[name] = {
+                k: float(v) for k, v in m.items() if isinstance(v, (int, float))
+            }
+    return doc, medians, metrics
 
 
 def promote(fresh_path, out_path, tolerance):
-    doc, medians = load_report(fresh_path)
+    doc, medians, _ = load_report(fresh_path)
     timed = sum(1 for m in medians.values() if m > 0.0)
     if timed == 0:
         print(f"bench_compare: {fresh_path} has no timed entries to promote", file=sys.stderr)
@@ -65,6 +88,7 @@ def promote(fresh_path, out_path, tolerance):
     doc.pop("provisional", None)
     doc.pop("note", None)
     file_tol = float(doc.pop("tolerance", 0.30))
+    peak_tol = float(doc.pop("peak_tolerance", DEFAULT_PEAK_TOLERANCE))
     tol = tolerance if tolerance is not None else file_tol
     promoted = {
         "note": (
@@ -76,6 +100,7 @@ def promote(fresh_path, out_path, tolerance):
         ),
         "provisional": False,
         "tolerance": tol,
+        "peak_tolerance": peak_tol,
     }
     promoted.update(doc)
     with open(out_path, "w", encoding="utf-8") as f:
@@ -83,7 +108,8 @@ def promote(fresh_path, out_path, tolerance):
         f.write("\n")
     print(
         f"bench_compare: promoted {fresh_path} -> {out_path} "
-        f"({timed} timed entries, tolerance {promoted['tolerance']:.0%}, gating ON)"
+        f"({timed} timed entries, tolerance {promoted['tolerance']:.0%}, "
+        f"peak tolerance {peak_tol:.0%}, gating ON)"
     )
 
 
@@ -97,6 +123,13 @@ def main():
         default=None,
         help="allowed fractional slowdown (default: baseline's "
         "'tolerance' field, else 0.30)",
+    )
+    ap.add_argument(
+        "--peak-tolerance",
+        type=float,
+        default=None,
+        help="allowed fractional growth of *_peak_bytes metrics "
+        "(default: baseline's 'peak_tolerance' field, else 0.10)",
     )
     ap.add_argument(
         "--promote",
@@ -116,12 +149,15 @@ def main():
     if not args.baseline or not args.fresh:
         ap.error("BASELINE and FRESH are required unless --promote is given")
 
-    base_doc, base = load_report(args.baseline)
-    _, fresh = load_report(args.fresh)
+    base_doc, base, base_metrics = load_report(args.baseline)
+    _, fresh, fresh_metrics = load_report(args.fresh)
     provisional = bool(base_doc.get("provisional", False))
     tolerance = args.tolerance
     if tolerance is None:
         tolerance = float(base_doc.get("tolerance", 0.30))
+    peak_tolerance = args.peak_tolerance
+    if peak_tolerance is None:
+        peak_tolerance = float(base_doc.get("peak_tolerance", DEFAULT_PEAK_TOLERANCE))
 
     timed = {n: m for n, m in base.items() if m > 0.0}
     regressions, missing, ok = [], [], []
@@ -137,15 +173,60 @@ def main():
         else:
             ok.append(line)
 
-    new = sorted(n for n, m in fresh.items() if m > 0.0 and n not in timed)
+    # Peak-bytes gate: any metric key ending in `_peak_bytes` present
+    # on BOTH sides of an entry gates at peak_tolerance. One-sided
+    # peaks are informational only — new sections/metrics never fail.
+    peak_regressions, peak_ok, peak_new = [], [], []
+    for name in sorted(set(base_metrics) | set(fresh_metrics)):
+        b = base_metrics.get(name, {})
+        f = fresh_metrics.get(name, {})
+        for key in sorted(set(b) | set(f)):
+            if not key.endswith(PEAK_SUFFIX):
+                continue
+            label = f"{name} :: {key}"
+            if key in b and key in f:
+                ratio = f[key] / b[key] if b[key] else float("inf")
+                line = (
+                    f"{label:<60} base {b[key] / 1e6:10.3f} MB  "
+                    f"fresh {f[key] / 1e6:10.3f} MB  x{ratio:5.2f}"
+                )
+                if b[key] > 0.0 and f[key] > b[key] * (1.0 + peak_tolerance):
+                    peak_regressions.append(line)
+                else:
+                    peak_ok.append(line)
+            elif key in f:
+                peak_new.append(f"{label} (no baseline yet)")
+            # Baseline-only peak metrics ride on the MISSING entry
+            # check when the whole section vanished; a renamed metric
+            # inside a surviving section is a baseline-refresh matter,
+            # not a gate failure.
 
-    print(f"bench_compare: {len(timed)} baseline entries, tolerance {tolerance:.0%}" + (" (provisional baseline: never fails)" if provisional else ""))
+    # Fresh-only sections — timed or metric-only — are reported and
+    # always pass: baselines trail new benches by one promotion.
+    known = set(base) | set(base_metrics)
+    new = sorted(
+        n
+        for n in set(fresh) | set(fresh_metrics)
+        if n not in known and (fresh.get(n, 0.0) > 0.0 or fresh_metrics.get(n))
+    )
+
+    print(
+        f"bench_compare: {len(timed)} baseline entries, tolerance {tolerance:.0%}, "
+        f"peak tolerance {peak_tolerance:.0%}"
+        + (" (provisional baseline: never fails)" if provisional else "")
+    )
     for line in ok:
         print(f"  ok          {line}")
     for line in regressions:
         print(f"  REGRESSION  {line}")
+    for line in peak_ok:
+        print(f"  peak ok     {line}")
+    for line in peak_regressions:
+        print(f"  PEAK REGR   {line}")
     for name in missing:
         print(f"  MISSING     {name} (in baseline, absent from fresh run)")
+    for name in peak_new:
+        print(f"  new         {name}")
     for name in new:
         print(f"  new         {name} (no baseline yet)")
 
@@ -156,9 +237,10 @@ def main():
             "-- --json ../BENCH_baseline.json\nthen set \"provisional\": false."
         )
 
-    if (regressions or missing) and not provisional:
+    if (regressions or peak_regressions or missing) and not provisional:
         print(
-            f"bench_compare: FAIL — {len(regressions)} regression(s), "
+            f"bench_compare: FAIL — {len(regressions)} timing regression(s), "
+            f"{len(peak_regressions)} peak-memory regression(s), "
             f"{len(missing)} missing hot path(s)",
             file=sys.stderr,
         )

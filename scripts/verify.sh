@@ -30,6 +30,16 @@ fi
 echo "== cargo test -q =="
 cargo test -q
 
+# The whole-network streaming sweep (ISSUE 6) at an explicit case
+# count: `pipelined ≡ streaming ≡ tiled ≡ reference` across the zoo
+# with zero halo recompute. The suite above already runs it at the
+# default 12 cases; this leg widens the draw under the documented
+# TETRIS_PROP_CASES knob so the budget/tile/worker space gets real
+# coverage on every verify.
+echo "== streaming sweep (TETRIS_PROP_CASES=24) =="
+TETRIS_PROP_CASES=24 cargo test -q --test plan_streaming \
+    pipelined_walk_joins_the_equivalence_class_zoo_wide
+
 if cargo clippy --version >/dev/null 2>&1; then
     echo "== cargo clippy (all targets, -D warnings) =="
     cargo clippy --all-targets -- -D warnings
