@@ -15,7 +15,7 @@ use tetris::kneading::{knead_group, knead_lane, Lane};
 use tetris::model::reference::forward_reference;
 use tetris::model::weights::{profile_with, synthetic_loaded, DensityCalibration};
 use tetris::model::{zoo, Tensor};
-use tetris::plan::{CompiledNetwork, ExecOpts, Walk};
+use tetris::plan::{CompiledNetwork, ExecOpts, Walk, DEFAULT_TILE_ROWS};
 use tetris::runtime::quantized;
 use tetris::sac::SacUnit;
 use tetris::util::bench::Harness;
@@ -472,6 +472,79 @@ fn main() {
             ("fill_rows".into(), summary.fill_rows as f64),
         ],
     );
+
+    // 13. ISSUE 7: the schedule auto-tuner vs the hand-picked default
+    //     (`DEFAULT_TILE_ROWS`, walk left to the batch rule) across
+    //     the zoo. Each model's budget is set to the hand-picked
+    //     schedule's own tiled estimate, so the tuner must find a
+    //     schedule at least as tight — tuned peak ≤ hand peak by
+    //     construction of the feasibility-first selection rule — and
+    //     bit-exactness of the tuned schedule is asserted before
+    //     timing. The `*_peak_bytes` metric keys feed the CI
+    //     peak-memory gate (scripts/bench_compare.py).
+    let v19net = zoo::vgg19().scaled(16, 32);
+    let v19w =
+        synthetic_loaded(&v19net, Mode::Fp16, 12, "vgg19", DensityCalibration::Fig2, 24).unwrap();
+    let v19plan = CompiledNetwork::compile(&v19net, &v19w, 16, Mode::Fp16).unwrap();
+    let mut v19img = Tensor::zeros(&[2, v19net.layers[0].in_c, 32, 32]);
+    for (i, v) in v19img.data_mut().iter_mut().enumerate() {
+        *v = (i as i32 % 383) - 191;
+    }
+    let nnet = zoo::nin().scaled(16, 64);
+    let nw = synthetic_loaded(&nnet, Mode::Fp16, 12, "nin", DensityCalibration::Fig2, 25).unwrap();
+    let nplan = CompiledNetwork::compile(&nnet, &nw, 16, Mode::Fp16).unwrap();
+    let mut nimg = Tensor::zeros(&[2, nnet.layers[0].in_c, 64, 64]);
+    for (i, v) in nimg.data_mut().iter_mut().enumerate() {
+        *v = (i as i32 % 379) - 189;
+    }
+    let tuner_models: Vec<(&str, &CompiledNetwork, &Tensor<i32>)> = vec![
+        ("alexnet", &aplan, &aimg),
+        ("googlenet", &gplan, &gimg),
+        ("vgg16", &vplan, &vimg),
+        ("vgg19", &v19plan, &v19img),
+        ("nin", &nplan, &nimg),
+    ];
+    for (name, plan, img) in tuner_models {
+        let budget = plan.peak_bytes_estimate(DEFAULT_TILE_ROWS, 2);
+        let tuned = tetris::plan::tune(plan, budget, 2);
+        let hand = ExecOpts {
+            tile_rows: Some(DEFAULT_TILE_ROWS),
+            workers: Some(2),
+            walk: None,
+            arm_threads: None,
+        };
+        let tuned_opts = ExecOpts {
+            tile_rows: Some(tuned.tile_rows),
+            workers: Some(2),
+            walk: tuned.walk,
+            arm_threads: tuned.arm_threads,
+        };
+        assert_eq!(
+            plan.execute_opts(img, tuned_opts).unwrap(),
+            plan.execute_opts(img, hand).unwrap(),
+            "{name}: tuned and hand-picked schedules must agree before being timed"
+        );
+        h.bench(&format!("auto-tuner/{name}-tuned"), || {
+            plan.execute_opts(img, tuned_opts).unwrap().len()
+        });
+        h.bench(&format!("auto-tuner/{name}-hand"), || {
+            plan.execute_opts(img, hand).unwrap().len()
+        });
+        let (_, t_trace) = plan.execute_traced(img, tuned_opts).unwrap();
+        let (_, h_trace) = plan.execute_traced(img, hand).unwrap();
+        let speedup = median(h.results(), &format!("auto-tuner/{name}-hand"))
+            / median(h.results(), &format!("auto-tuner/{name}-tuned"));
+        h.metric_row(
+            &format!("auto-tuner/{name}"),
+            vec![
+                ("tuned_peak_bytes".into(), t_trace.peak_bytes() as f64),
+                ("hand_peak_bytes".into(), h_trace.peak_bytes() as f64),
+                ("tuned_tile_rows".into(), tuned.tile_rows as f64),
+                ("predicted_peak_bytes".into(), tuned.predicted_peak_bytes as f64),
+                ("speedup_vs_hand_x".into(), speedup),
+            ],
+        );
+    }
 
     h.emit();
     if let Some(dir) = tetris::engine::env::bench_csv_dir() {

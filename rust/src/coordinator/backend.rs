@@ -82,10 +82,12 @@ impl SacBackend {
     pub fn new(weights: LoadedWeights) -> crate::Result<Self> {
         let cycles = tiny_cnn_sim_cycles(&weights)?;
         let mut plan = quantized::compile_tiny_cnn(&weights)?;
-        // Serving picks its fused-tile height from the memory budget:
-        // the largest tile whose estimated peak (per image, at the
-        // worker fan-out) stays inside the budget.
-        plan.tile_rows = plan.tile_rows_for_budget(env::mem_budget_bytes(), worker_count());
+        // Serving schedules through the same auto-tuner entry point as
+        // the engine registry (`plan::tune`, memoized), so the legacy
+        // path and the engine façade can never disagree on the
+        // walk/tile a given (budget, workers) pair yields.
+        let tuned = crate::plan::tune::tune(&plan, env::mem_budget_bytes(), worker_count());
+        tuned.apply(&mut plan);
         Ok(Self::from_parts(Arc::new(plan), cycles))
     }
 

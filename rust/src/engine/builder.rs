@@ -59,6 +59,7 @@ pub struct EngineBuilder {
     walk: Option<Walk>,
     policy: BatchPolicy,
     ks: usize,
+    auto_tune: bool,
     artifacts_dir: PathBuf,
     specs: Vec<ModelSpec>,
 }
@@ -79,6 +80,7 @@ impl EngineBuilder {
             walk: None,
             policy: BatchPolicy::default(),
             ks: PIPELINE_KS,
+            auto_tune: true,
             artifacts_dir: PathBuf::from("artifacts"),
             specs: Vec::new(),
         }
@@ -148,6 +150,19 @@ impl EngineBuilder {
         self
     }
 
+    /// Schedule auto-tuning (default **on**): each registration's
+    /// walk/tile schedule comes from the memoized `plan::tune` search
+    /// — feasibility-first over walk × tile candidates, with the
+    /// budget-demanded [`Walk::Pipelined`] fallover and an explicit
+    /// over-budget diagnostic. `auto_tune(false)` reverts to plain
+    /// budget-ladder sizing: the walk is never pinned for you and no
+    /// fallover runs (explicit [`EngineBuilder::walk`] /
+    /// [`EngineBuilder::tile_rows`] pins are honored either way).
+    pub fn auto_tune(mut self, enabled: bool) -> Self {
+        self.auto_tune = enabled;
+        self
+    }
+
     /// Artifacts directory for [`BackendKind::Pjrt`] (default
     /// `artifacts`).
     pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Self {
@@ -209,6 +224,7 @@ impl EngineBuilder {
                         self.tile_rows,
                         workers,
                         self.walk,
+                        self.auto_tune,
                     )?;
                     lanes.push(ModelLane { factory });
                     metas.push(meta);

@@ -9,7 +9,7 @@ use std::sync::Arc;
 use crate::config::{AccelConfig, CalibConfig};
 use crate::coordinator::backend::{InferBackend, PjrtBackend, SacBackend};
 use crate::model::{ConvLayer, LoadedWeights, Network, TopoOp};
-use crate::plan::{CompiledNetwork, Walk};
+use crate::plan::{tune, CompiledNetwork, Walk};
 use crate::sim::{sample::samples_from_loaded, simulate_network_with_samples, tetris::TetrisSim};
 
 use super::serve::BackendFactory;
@@ -128,14 +128,16 @@ fn entry_shape(net: &Network) -> Option<(usize, usize)> {
 /// metadata plus a factory whose per-worker "construction" is an
 /// `Arc`-sharing clone — W workers, one compile.
 ///
-/// Walk selection: an explicit `walk` pins the plan to that dataflow
-/// and sizes the tile with the matching estimator. Without a pin, the
-/// tile is sized for the default walks first; if even the per-segment
-/// streaming walk's peak still exceeds the budget at that tile (deep
-/// trunks: peak grows with depth because inter-segment maps
-/// materialize), the plan falls over to [`Walk::Pipelined`] — rings
-/// chained across segment boundaries, peak flat in depth — and the
-/// tile is re-sized with the pipelined estimator.
+/// Walk/tile selection routes through the schedule auto-tuner
+/// (`plan::tune`, memoized per plan fingerprint × budget × workers):
+/// an explicit `walk` pins the plan to that dataflow and sizes the
+/// tile with the matching estimator; an explicit `tile_rows` is
+/// honored verbatim. With neither pin (and `auto_tune` on), the tuner
+/// searches the walk × tile space — including the budget-demanded
+/// [`Walk::Pipelined`] fallover for deep trunks whose per-segment
+/// peaks exceed the budget — and warns once when not even the 1-row
+/// floor fits. `auto_tune` off reverts to plain budget-ladder sizing.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn compile_sac(
     spec: ModelSpec,
     ks: usize,
@@ -143,31 +145,13 @@ pub(crate) fn compile_sac(
     tile_rows: Option<usize>,
     workers: usize,
     walk: Option<Walk>,
+    auto_tune: bool,
 ) -> crate::Result<(ModelMeta, BackendFactory)> {
     let ModelSpec { name, network, weights } = spec;
     let mode = weights.mode;
     let mut plan = CompiledNetwork::compile(&network, &weights, ks, mode)?;
-    plan.walk_hint = walk;
-    plan.tile_rows = match walk {
-        Some(w) => {
-            tile_rows.unwrap_or_else(|| plan.tile_rows_for_budget_walk(budget_bytes, workers, w))
-        }
-        None => tile_rows.unwrap_or_else(|| plan.tile_rows_for_budget(budget_bytes, workers)),
-    };
-    if walk.is_none() && tile_rows.is_none() {
-        // Budget-demanded fallover: neither default walk fits even at
-        // the budget-derived tile → pin the pipelined walk, whose peak
-        // does not grow with network depth, and re-size for it.
-        let tiled = plan.peak_bytes_estimate(plan.tile_rows, workers);
-        let streaming = plan.streaming_peak_bytes_estimate(plan.tile_rows, workers);
-        if tiled.min(streaming) > budget_bytes {
-            let rows = plan.tile_rows_for_budget_walk(budget_bytes, workers, Walk::Pipelined);
-            if plan.pipelined_peak_bytes_estimate(rows, workers) < tiled.min(streaming) {
-                plan.walk_hint = Some(Walk::Pipelined);
-                plan.tile_rows = rows;
-            }
-        }
-    }
+    let tuned = tune::tune_pinned(&plan, budget_bytes, workers, walk, tile_rows, auto_tune);
+    tuned.apply(&mut plan);
     // Timing from the registered weights' bit statistics, so serving
     // metrics report the paper's accelerator rather than the host.
     let cfg = AccelConfig { ks, mode, ..AccelConfig::default() };

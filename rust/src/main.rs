@@ -2,7 +2,8 @@
 //!
 //! ```text
 //! tetris report <table1|fig1|fig2|fig8|fig9|fig10|fig11|table2|all> [--csv-dir D]
-//! tetris simulate --network vgg16 --accel tetris --mode fp16 --ks 16
+//! tetris simulate --network vgg16 --accel tetris --mode fp16 --ks 16 [--schedule]
+//! tetris tune     --network vgg16 --budget-mb 1 --workers 2 [--measure]
 //! tetris knead    --network alexnet --ks 16 --mode fp16
 //! tetris serve    --requests 64 --max-batch 8 --workers 2 --network vgg16
 //! tetris golden   --dir artifacts
@@ -19,6 +20,8 @@ Subcommands:
   report <which>   regenerate a paper table/figure (table1, fig1, fig2,
                    fig8, fig9, fig10, fig11, table2, all)
   simulate         run one network through one accelerator timing model
+  tune             run the schedule auto-tuner: scored walk × tile
+                   candidates and the chosen schedule for a budget
   knead            print kneading statistics for a network
   serve            start the serving engine with a synthetic load
                    (multi-model: tiny CNN + a scaled --network copy)
@@ -63,20 +66,65 @@ fn run() -> Result<(), String> {
                 .opt("ks", "16", "kneading stride")
                 .opt("seed", "0x7e7215", "random seed")
                 .flag("include-fc", "also simulate the declared FC heads (VGG fc6-8, GoogleNet loss3)")
+                .flag("schedule", "also print the auto-tuner's schedule line (walk, tile, predicted peak) for this network under the process budget")
                 .parse_env(2)?;
             let net = zoo::by_name(args.get("network")).map_err(|e| e.to_string())?;
             let mode: Mode = args.get("mode").parse()?;
             let cfg = AccelConfig { ks: args.get_usize("ks")?, mode, ..AccelConfig::default() };
             cfg.validate()?;
+            let seed = args.get_u64("seed")?;
             let rep = tetris::report::simulate_one(
                 &net,
                 args.get("accel"),
                 &cfg,
-                args.get_u64("seed")?,
+                seed,
                 args.get_bool("include-fc"),
             )
             .map_err(|e| e.to_string())?;
             println!("{rep}");
+            if args.get_bool("schedule") {
+                let line = tetris::report::schedule_line(&net, &cfg, seed)
+                    .map_err(|e| e.to_string())?;
+                println!("{line}");
+            }
+            Ok(())
+        }
+        Some("tune") => {
+            let args = Args::new("tetris tune — schedule auto-tuner report")
+                .opt("network", "vgg16", "alexnet|googlenet|vgg16|vgg19|nin")
+                .opt("budget-mb", "256", "per-worker feature-map memory budget in MiB")
+                .opt("workers", "0", "worker fan-out to tune for (0 = host default)")
+                .opt("scale", "1", "channel divisor for a scaled-down copy (1 = full size)")
+                .opt("hw", "0", "input spatial size override (0 = declared size)")
+                .opt("ks", "16", "kneading stride")
+                .opt("mode", "fp16", "fp16|int8")
+                .opt("seed", "0x7e7215", "random seed for synthetic weights")
+                .flag("measure", "execute one traced image with the chosen schedule and print measured vs predicted peak")
+                .parse_env(2)?;
+            let mut net = zoo::by_name(args.get("network")).map_err(|e| e.to_string())?;
+            let scale = args.get_usize("scale")?.max(1);
+            let hw = args.get_usize("hw")?;
+            if scale != 1 || hw != 0 {
+                let hw = if hw == 0 { net.layers[0].in_hw } else { hw };
+                net = net.scaled(scale, hw);
+            }
+            let mode: Mode = args.get("mode").parse()?;
+            let cfg = AccelConfig { ks: args.get_usize("ks")?, mode, ..AccelConfig::default() };
+            cfg.validate()?;
+            let workers = match args.get_usize("workers")? {
+                0 => tetris::util::pool::worker_count(),
+                n => n,
+            };
+            let rep = tetris::report::tune_report(
+                &net,
+                &cfg,
+                args.get_u64("budget-mb")? * 1024 * 1024,
+                workers,
+                args.get_u64("seed")?,
+                args.get_bool("measure"),
+            )
+            .map_err(|e| e.to_string())?;
+            print!("{rep}");
             Ok(())
         }
         Some("knead") => {

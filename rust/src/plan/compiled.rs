@@ -231,6 +231,32 @@ impl CompiledNetwork {
         self.fcs.iter().find(|f| f.name == name)
     }
 
+    /// Stable identity of this plan for the auto-tuner's memoization
+    /// key (`plan::tune`): hashes the lowered op graph, every layer's
+    /// geometry (names, channel/kernel extents, head widths), the
+    /// kneading stride, precision mode and declared input extent —
+    /// everything the schedule search depends on, and nothing it does
+    /// not (weights don't move the memory model, so two weight sets
+    /// over the same topology share tuning results).
+    pub fn fingerprint(&self) -> u64 {
+        use std::collections::hash_map::DefaultHasher;
+        use std::hash::{Hash, Hasher};
+        let mut h = DefaultHasher::new();
+        format!("{:?}", self.ops).hash(&mut h);
+        for c in &self.convs {
+            c.name.hash(&mut h);
+            (c.out_c, c.in_c, c.kh, c.kw).hash(&mut h);
+        }
+        for f in &self.fcs {
+            f.name.hash(&mut h);
+            (f.classes, f.feat_dim).hash(&mut h);
+        }
+        self.ks.hash(&mut h);
+        format!("{:?}", self.mode).hash(&mut h);
+        self.declared_in.hash(&mut h);
+        h.finish()
+    }
+
     /// Total kneaded weights across all lanes — the plan's resident
     /// "eDRAM" footprint in kneaded-weight units.
     pub fn kneaded_weights(&self) -> usize {
@@ -518,7 +544,10 @@ impl CompiledNetwork {
     /// (per image, `workers` concurrent tiles) — how serving turns a
     /// memory budget into a tile size. Falls back to single-row tiles
     /// when even they exceed the budget: the estimate then simply
-    /// reports the floor the topology imposes.
+    /// reports the floor the topology imposes — a silent clamp at this
+    /// layer, surfaced as an explicit warn-once diagnostic (and the
+    /// `TunedSchedule::over_budget` flag) by the schedule auto-tuner
+    /// every serving path now sizes through (`plan::tune`).
     ///
     /// The tiled estimate is the sizing bound for **both** walks: a
     /// streaming walk at the same tile height replaces each worker's

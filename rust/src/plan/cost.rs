@@ -1,0 +1,358 @@
+//! Roofline-style analytical cost model for the schedule auto-tuner
+//! (`plan::tune`).
+//!
+//! Every candidate schedule — a (walk, tile height) pair against a
+//! compiled plan — gets a [`CostEstimate`] with three legs:
+//!
+//! * **memory**: predicted peak feature-map bytes, reusing the plan's
+//!   walk-matched estimators (`peak_bytes_estimate` /
+//!   `streaming_peak_bytes_estimate` / `pipelined_peak_bytes_estimate`)
+//!   — the same arithmetic the budget ladder sizes tiles with;
+//! * **traffic**: DRAM-equivalent bytes moved per image. Every segment
+//!   boundary map is written once by its producer and read once by its
+//!   consumer (branch concat adds one write of the concatenated map);
+//!   the tiled walk additionally pays for its recomputed halo rows
+//!   (re-emitted stage-output bytes), and the pipelined walk skips the
+//!   whole trunk prefix — over the pipeable segments only the input
+//!   map is read and the trunk output written, exactly the dataflow
+//!   [`run_pipelined`](super::exec) executes;
+//! * **compute**: simulated SAC cycles per image (walk-invariant — the
+//!   walks move the same MACs — so it is supplied by the caller: the
+//!   engine already simulates every registration, `tetris tune`
+//!   simulates on demand, and `0` means "traffic-led scoring").
+//!
+//! [`CostEstimate::score`] is the roofline bound:
+//! `max(compute_cycles, traffic_bytes / DRAM_BYTES_PER_CYCLE)`.
+//!
+//! **Validation contract** (pinned by `tests/plan_tune.rs`): across
+//! the zoo × walks × tile heights × budgets, `execute_traced`'s
+//! measured peak brackets the predicted peak within
+//! [`PEAK_BRACKET_FACTOR`] on both sides, and the predicted tiled halo
+//! rows equal the measured `halo_recompute_rows` **exactly** — the
+//! halo arithmetic below is a line-for-line replica of the executor's
+//! boundary walk over the same `resolve_stage_dims` geometry.
+
+use super::compiled::CompiledNetwork;
+use super::exec::{self, StageDims, Walk};
+use super::graph::{FusedStage, Segment};
+
+/// DRAM-equivalent bandwidth normalizer: bytes the accelerator's
+/// eDRAM/DRAM interface moves per cycle (DaDianNao-class nodes stream
+/// one 16-lane fp16 word group per cycle ≈ 16 B). Converts the traffic
+/// leg into cycles so it lands on the same axis as the compute leg.
+pub const DRAM_BYTES_PER_CYCLE: u64 = 16;
+
+/// Two-sided tolerance of the peak-bytes validation contract: the
+/// measured peak must lie within `[predicted / 4, predicted × 4]`.
+/// The estimators are per-image worst-case concurrency bounds (ring
+/// bytes scale with the worker budget; a short batch stripes fewer
+/// threads), so they may over-predict by up to the worker fan-out —
+/// the bracket is pinned wide enough to hold zoo-wide and tight
+/// enough to catch a wrong ring formula, which is off by O(depth).
+pub const PEAK_BRACKET_FACTOR: u64 = 4;
+
+/// Feature-map element width (Q8.8 stored as i32), matching both the
+/// executor's `tensor_bytes` accounting and the plan estimators.
+const BYTES: u64 = 4;
+
+/// One scored schedule candidate: the cost model's three legs for a
+/// (walk, tile height) pair. Produced by [`CostModel::estimate`].
+#[derive(Debug, Clone, Copy)]
+pub struct CostEstimate {
+    /// The dataflow this candidate runs.
+    pub walk: Walk,
+    /// Tile height (tiled walk) / ring-advance step (streaming walks).
+    pub tile_rows: usize,
+    /// Predicted peak feature-map bytes per image at the model's
+    /// worker fan-out (the walk-matched plan estimator).
+    pub peak_bytes: u64,
+    /// Predicted DRAM-equivalent bytes moved per image.
+    pub traffic_bytes: u64,
+    /// Predicted halo-recompute rows per image (tiled walk only;
+    /// always 0 for the streaming and pipelined walks).
+    pub halo_rows: u64,
+    /// Simulated SAC cycles per image (0 = unknown / traffic-led).
+    pub compute_cycles: u64,
+}
+
+impl CostEstimate {
+    /// Roofline latency bound in cycles:
+    /// `max(compute, traffic / DRAM_BYTES_PER_CYCLE)`.
+    pub fn score(&self) -> u64 {
+        self.compute_cycles.max(self.traffic_bytes.div_ceil(DRAM_BYTES_PER_CYCLE))
+    }
+
+    /// Whether the predicted peak stays inside a memory budget.
+    pub fn fits(&self, budget_bytes: u64) -> bool {
+        self.peak_bytes <= budget_bytes
+    }
+}
+
+/// Traffic/halo accumulator for one schedule sweep.
+#[derive(Default)]
+struct Acc {
+    traffic: u64,
+    halo_rows: u64,
+}
+
+/// Analytical cost model over one compiled plan at a fixed worker
+/// fan-out. Stateless and cheap — every estimate is pure arithmetic
+/// over the plan's segment geometry; nothing executes and nothing
+/// kneads.
+pub struct CostModel<'a> {
+    plan: &'a CompiledNetwork,
+    workers: usize,
+    compute_cycles: u64,
+}
+
+impl<'a> CostModel<'a> {
+    /// Model `plan` at `workers` concurrent workers (clamped to ≥ 1).
+    pub fn new(plan: &'a CompiledNetwork, workers: usize) -> Self {
+        Self { plan, workers: workers.max(1), compute_cycles: 0 }
+    }
+
+    /// Attach the simulated per-image SAC cycle count (the compute
+    /// leg). Without it, scores are traffic-led — fine for ranking
+    /// within one model, where the compute leg is walk-invariant.
+    pub fn with_compute_cycles(mut self, cycles: u64) -> Self {
+        self.compute_cycles = cycles;
+        self
+    }
+
+    /// Score one (walk, tile height) candidate. Errors only if the
+    /// plan's geometry fails to resolve at its declared input extent
+    /// (which `compile` already validated, so this is effectively
+    /// infallible for zoo plans).
+    pub fn estimate(&self, walk: Walk, tile_rows: usize) -> crate::Result<CostEstimate> {
+        let peak_bytes = match walk {
+            Walk::Tiled => self.plan.peak_bytes_estimate(tile_rows, self.workers),
+            Walk::Streaming => self.plan.streaming_peak_bytes_estimate(tile_rows, self.workers),
+            Walk::Pipelined => self.plan.pipelined_peak_bytes_estimate(tile_rows, self.workers),
+        };
+        let (traffic_bytes, halo_rows) = self.traffic(walk, tile_rows)?;
+        Ok(CostEstimate {
+            walk,
+            tile_rows,
+            peak_bytes,
+            traffic_bytes,
+            halo_rows,
+            compute_cycles: self.compute_cycles,
+        })
+    }
+
+    /// Predicted tiled-walk halo-recompute rows **per image** at an
+    /// explicit tile height — must equal `execute_traced`'s
+    /// `halo_recompute_rows` divided by the batch size exactly (the
+    /// executor disables adaptive tile shrinking under explicit
+    /// `ExecOpts::tile_rows`, so the boundary walk is deterministic).
+    pub fn predicted_halo_rows(&self, tile_rows: usize) -> crate::Result<u64> {
+        self.traffic(Walk::Tiled, tile_rows).map(|(_, h)| h)
+    }
+
+    /// Traffic + halo legs for one candidate, per image at the plan's
+    /// declared input extent.
+    fn traffic(&self, walk: Walk, tile_rows: usize) -> crate::Result<(u64, u64)> {
+        let (c0, hw) = self.plan.declared_in;
+        let mut acc = Acc::default();
+        if walk == Walk::Pipelined {
+            let step = if tile_rows == 0 { hw } else { tile_rows };
+            if let Some(s) = exec::pipeline_summary(self.plan, c0, hw, hw, step.max(1))? {
+                if s.segments > 0 {
+                    // Trunk prefix maps never materialize: the input
+                    // map is read and the trunk output written, full
+                    // stop. Chain dims through the prefix (discarding
+                    // its would-be traffic), then charge the tail.
+                    acc.traffic += map_bytes(c0, hw, hw) + s.out_bytes;
+                    let sched = self.plan.schedule();
+                    let mut cur = (c0, hw, hw);
+                    let mut scratch = Acc::default();
+                    for seg in &sched[..s.segments] {
+                        cur = self.seg_pass(seg, cur, Walk::Streaming, tile_rows, &mut scratch)?;
+                    }
+                    for seg in &sched[s.segments..] {
+                        cur = self.seg_pass(seg, cur, Walk::Streaming, tile_rows, &mut acc)?;
+                    }
+                    return Ok((acc.traffic, acc.halo_rows));
+                }
+            }
+            // Nothing pipeable — the pipelined walk degenerates to the
+            // per-segment streaming dataflow, so charge that.
+            return self.traffic(Walk::Streaming, tile_rows);
+        }
+        let mut cur = (c0, hw, hw);
+        for seg in self.plan.schedule() {
+            cur = self.seg_pass(seg, cur, walk, tile_rows, &mut acc)?;
+        }
+        Ok((acc.traffic, acc.halo_rows))
+    }
+
+    /// Charge one segment's traffic (and, tiled walk, halo) and return
+    /// its output extent.
+    fn seg_pass(
+        &self,
+        seg: &Segment,
+        cur: (usize, usize, usize),
+        walk: Walk,
+        tile_rows: usize,
+        acc: &mut Acc,
+    ) -> crate::Result<(usize, usize, usize)> {
+        let (c, h, w) = cur;
+        match seg {
+            Segment::Fused(stages) => {
+                let dims = exec::resolve_stage_dims(self.plan, stages, c, h, w)?;
+                let last = dims.last().expect("fused segments are non-empty");
+                acc.traffic +=
+                    map_bytes(c, h, w) + map_bytes(last.out_c, last.out_h, last.out_w);
+                if walk == Walk::Tiled {
+                    let (rows, bytes) = fused_halo(stages, &dims, tile_rows);
+                    acc.halo_rows += rows;
+                    acc.traffic += bytes;
+                }
+                Ok((last.out_c, last.out_h, last.out_w))
+            }
+            Segment::Branch(arms) => {
+                let mut out_c = 0;
+                let (mut oh, mut ow) = (h, w);
+                for arm in arms {
+                    let mut a = (c, h, w);
+                    for s in arm {
+                        a = self.seg_pass(s, a, walk, tile_rows, acc)?;
+                    }
+                    out_c += a.0;
+                    (oh, ow) = (a.1, a.2);
+                }
+                // Channel concat writes the joined map once.
+                acc.traffic += map_bytes(out_c, oh, ow);
+                Ok((out_c, oh, ow))
+            }
+            Segment::GlobalAvgPool => {
+                acc.traffic += map_bytes(c, h, w) + c as u64 * BYTES;
+                Ok((c, 1, 1))
+            }
+            Segment::Flatten => Ok((c * h * w, 1, 1)),
+            Segment::Fc { name } => {
+                let fc = self.plan.fc_head(name).ok_or_else(|| {
+                    crate::Error::Config(format!(
+                        "plan has an Fc op for `{name}` but no compiled head"
+                    ))
+                })?;
+                acc.traffic += (fc.feat_dim + fc.classes) as u64 * BYTES;
+                Ok((fc.classes, 1, 1))
+            }
+        }
+    }
+}
+
+fn map_bytes(c: usize, h: usize, w: usize) -> u64 {
+    (c * h * w) as u64 * BYTES
+}
+
+/// Tiled-walk halo prediction for one fused segment, per image:
+/// line-for-line the executor's boundary walk (`run_fused_tiled`) —
+/// adjacent tiles' backward spans overlap by up to `k − stride` rows
+/// per stage per boundary; summing adjacent-pair overlaps counts a row
+/// computed by `j` tiles exactly `j − 1` times. Also returns the
+/// recomputed stage-output **bytes** for the traffic leg.
+fn fused_halo(stages: &[FusedStage], dims: &[StageDims], tile_rows: usize) -> (u64, u64) {
+    let last = dims.last().expect("fused segments are non-empty");
+    let oh = last.out_h;
+    if oh == 0 {
+        return (0, 0);
+    }
+    let tile = if tile_rows == 0 { oh } else { tile_rows.clamp(1, oh) };
+    if tile >= oh {
+        return (0, 0);
+    }
+    let m = stages.len();
+    let spans_at = |t0: usize, t1: usize| -> Vec<(usize, usize)> {
+        let mut spans = vec![(0usize, 0usize); m + 1];
+        spans[m] = (t0, t1);
+        for i in (0..m).rev() {
+            spans[i] = stages[i].contract.in_span(spans[i + 1].0, spans[i + 1].1, dims[i].in_h);
+        }
+        spans
+    };
+    let mut rows = 0u64;
+    let mut bytes = 0u64;
+    let mut prev = spans_at(0, tile.min(oh));
+    let mut t0 = tile;
+    while t0 < oh {
+        let t1 = (t0 + tile).min(oh);
+        let cur = spans_at(t0, t1);
+        for i in 0..m {
+            let lo = cur[i + 1].0.max(prev[i + 1].0);
+            let hi = cur[i + 1].1.min(prev[i + 1].1);
+            let overlap = hi.saturating_sub(lo) as u64;
+            rows += overlap;
+            bytes += overlap * (dims[i].out_c * dims[i].out_w) as u64 * BYTES;
+        }
+        prev = cur;
+        t0 = t1;
+    }
+    (rows, bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Mode;
+    use crate::model::weights::{synthetic_loaded, DensityCalibration};
+    use crate::model::zoo;
+
+    fn tiny_plan() -> CompiledNetwork {
+        let net = zoo::tiny_cnn();
+        let w = synthetic_loaded(&net, Mode::Fp16, 12, "tiny_cnn", DensityCalibration::Fig2, 7)
+            .unwrap();
+        CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap()
+    }
+
+    #[test]
+    fn tiled_pays_halo_streaming_does_not() {
+        let plan = tiny_plan();
+        let model = CostModel::new(&plan, 1);
+        let tiled = model.estimate(Walk::Tiled, 2).unwrap();
+        let streaming = model.estimate(Walk::Streaming, 2).unwrap();
+        // tiny_cnn's k=3 s=1 convs overlap at tile boundaries.
+        assert!(tiled.halo_rows > 0, "tiled tile=2 must recompute halo rows");
+        assert_eq!(streaming.halo_rows, 0);
+        assert!(
+            tiled.traffic_bytes > streaming.traffic_bytes,
+            "halo recompute must show up as extra tiled traffic"
+        );
+    }
+
+    #[test]
+    fn materializing_tile_has_zero_halo() {
+        let plan = tiny_plan();
+        let model = CostModel::new(&plan, 1);
+        assert_eq!(model.predicted_halo_rows(0).unwrap(), 0);
+    }
+
+    #[test]
+    fn pipelined_traffic_skips_trunk_boundary_maps() {
+        let plan = tiny_plan();
+        let model = CostModel::new(&plan, 1);
+        let streaming = model.estimate(Walk::Streaming, 2).unwrap();
+        let pipelined = model.estimate(Walk::Pipelined, 2).unwrap();
+        assert!(
+            pipelined.traffic_bytes < streaming.traffic_bytes,
+            "pipelined must not re-materialize trunk boundary maps \
+             ({} !< {})",
+            pipelined.traffic_bytes,
+            streaming.traffic_bytes
+        );
+    }
+
+    #[test]
+    fn score_is_the_roofline_max() {
+        let plan = tiny_plan();
+        let model = CostModel::new(&plan, 1).with_compute_cycles(u64::MAX / 2);
+        let e = model.estimate(Walk::Streaming, 2).unwrap();
+        assert_eq!(e.score(), u64::MAX / 2, "compute-bound candidate scores its cycle count");
+        let traffic_led = CostModel::new(&plan, 1).estimate(Walk::Streaming, 2).unwrap();
+        assert_eq!(
+            traffic_led.score(),
+            traffic_led.traffic_bytes.div_ceil(DRAM_BYTES_PER_CYCLE)
+        );
+    }
+}

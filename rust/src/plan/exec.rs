@@ -103,19 +103,27 @@ pub struct ExecOpts {
     /// fan-out keeps a lone image from pinning all but one worker
     /// idle.
     pub walk: Option<Walk>,
+    /// Branch-arm thread split: caps how many branch arms run
+    /// concurrently (`Some(1)` walks arms in sequence, so at most one
+    /// arm's rings + input clone are live on top of the kept arm
+    /// outputs — the auto-tuner's over-budget lever). `None` keeps the
+    /// default: one arm thread per arm up to the worker budget.
+    /// Scheduling only — results are bit-identical for every split
+    /// (invariant I5).
+    pub arm_threads: Option<usize>,
 }
 
 impl ExecOpts {
     /// Exact tile height through the overlapped tiled walk — the PR 3
     /// baseline (tests, sweeps, and the streaming-vs-tiled bench).
     pub fn tiled(tile_rows: usize) -> Self {
-        Self { tile_rows: Some(tile_rows), workers: None, walk: Some(Walk::Tiled) }
+        Self { tile_rows: Some(tile_rows), walk: Some(Walk::Tiled), ..Self::default() }
     }
 
     /// Streaming walk with an explicit advance step (input rows per
     /// ring slide); `0` feeds the whole image in one step.
     pub fn streaming(tile_rows: usize) -> Self {
-        Self { tile_rows: Some(tile_rows), workers: None, walk: Some(Walk::Streaming) }
+        Self { tile_rows: Some(tile_rows), walk: Some(Walk::Streaming), ..Self::default() }
     }
 
     /// Whole-network pipelined walk with an explicit advance step —
@@ -123,7 +131,7 @@ impl ExecOpts {
     /// materializes (DESIGN.md §Whole-network streaming); `0` feeds
     /// the whole image in one step.
     pub fn pipelined(tile_rows: usize) -> Self {
-        Self { tile_rows: Some(tile_rows), workers: None, walk: Some(Walk::Pipelined) }
+        Self { tile_rows: Some(tile_rows), walk: Some(Walk::Pipelined), ..Self::default() }
     }
 
     /// One tile per fused chain: the materializing baseline the
@@ -141,6 +149,12 @@ impl ExecOpts {
     /// Pin the dataflow explicitly.
     pub fn with_walk(mut self, walk: Walk) -> Self {
         self.walk = Some(walk);
+        self
+    }
+
+    /// Cap concurrent branch-arm threads (see [`ExecOpts::arm_threads`]).
+    pub fn with_arm_threads(mut self, arm_threads: usize) -> Self {
+        self.arm_threads = Some(arm_threads);
         self
     }
 }
@@ -196,6 +210,8 @@ struct Ctx<'a> {
     /// path only — explicit `ExecOpts` sizes are honored exactly).
     adaptive: bool,
     walk: Walk,
+    /// Branch-arm concurrency cap ([`ExecOpts::arm_threads`]).
+    arm_threads: Option<usize>,
     stats: Option<&'a AllocStats>,
 }
 
@@ -282,6 +298,7 @@ impl CompiledNetwork {
             tile_rows,
             adaptive,
             walk,
+            arm_threads: opts.arm_threads,
             stats: trace.map(|()| &stats),
         };
         let input = x.clone();
@@ -356,7 +373,7 @@ fn run_branch(
     x: &Tensor<i32>,
     workers: usize,
 ) -> crate::Result<Tensor<i32>> {
-    let outer = workers.clamp(1, arms.len());
+    let outer = ctx.arm_threads.unwrap_or(workers).min(workers).clamp(1, arms.len());
     let budgets = split_budget(workers, outer);
     let idx: Vec<usize> = (0..arms.len()).collect();
     let parts = par_map_with(outer, &idx, |i, &a| {
@@ -376,14 +393,16 @@ fn run_branch(
 }
 
 /// Resolved geometry of one fused stage against the actual input.
+/// Crate-visible so the auto-tuner's cost model (`plan::cost`) can
+/// replicate the executor's halo arithmetic over the exact same dims.
 #[derive(Debug, Clone, Copy)]
-struct StageDims {
-    in_c: usize,
-    in_h: usize,
-    in_w: usize,
-    out_c: usize,
-    out_h: usize,
-    out_w: usize,
+pub(crate) struct StageDims {
+    pub(crate) in_c: usize,
+    pub(crate) in_h: usize,
+    pub(crate) in_w: usize,
+    pub(crate) out_c: usize,
+    pub(crate) out_h: usize,
+    pub(crate) out_w: usize,
 }
 
 fn is_elementwise(op: &PlanOp) -> bool {
@@ -394,7 +413,7 @@ fn is_elementwise(op: &PlanOp) -> bool {
 /// the declared topology — scaled/off-topology inputs are supported),
 /// validating channels, strides and kernel fit. Shared by the fused
 /// segment walks and the whole-network pipeline builder.
-fn resolve_stage_dims(
+pub(crate) fn resolve_stage_dims(
     plan: &CompiledNetwork,
     stages: &[FusedStage],
     c0: usize,

@@ -40,6 +40,19 @@
 //!   `util::pool::split_budget` slices, compiled FC stacks execute
 //!   through a flatten stage + per-name lanes, and output order is
 //!   deterministic for any tile height, budget and walk.
+//! * [`cost`] — the roofline-style analytical cost model behind the
+//!   auto-tuner: per-candidate predicted peak bytes (the plan's
+//!   walk-matched estimators), DRAM-equivalent traffic (boundary maps
+//!   + tiled halo recompute; the pipelined walk skips the trunk
+//!   prefix) and simulated compute cycles, validated against
+//!   `execute_traced` ground truth (`tests/plan_tune.rs`).
+//! * [`tune`] — the compile-time schedule auto-tuner:
+//!   [`tune::tune`] turns (plan × memory budget × workers) into the
+//!   [`TunedSchedule`] serving installs — walk, tile height,
+//!   branch-arm thread split — memoized per plan fingerprint, with an
+//!   explicit over-budget diagnostic when nothing fits. Both the
+//!   engine registry and the legacy `SacBackend` path route through
+//!   it, so the two serving surfaces can never disagree on a schedule.
 //!
 //! Losslessness invariant (DESIGN.md §I5): reusing kneaded lanes across
 //! calls never changes logits — the executor is bit-identical to a
@@ -54,9 +67,13 @@
 //! `rust/tests/plan_zero_knead.rs` via `kneading::knead_call_count`.
 
 pub mod compiled;
+pub mod cost;
 pub mod exec;
 pub mod graph;
+pub mod tune;
 
 pub use compiled::{CompiledConv, CompiledFc, CompiledNetwork, DEFAULT_TILE_ROWS};
+pub use cost::{CostEstimate, CostModel, DRAM_BYTES_PER_CYCLE, PEAK_BRACKET_FACTOR};
 pub use exec::{AllocStats, ExecOpts, PipelineSummary, Walk};
 pub use graph::{derive_graph, segment_plan, FusedStage, PlanOp, RowContract, Segment};
+pub use tune::{tune, tune_pinned, TunedSchedule, TILE_LADDER};

@@ -1,0 +1,373 @@
+//! Compile-time schedule auto-tuner: one entry point that turns
+//! (compiled plan × memory budget × worker count) into the
+//! [`TunedSchedule`] serving runs with — walk, tile height, branch-arm
+//! thread split — replacing the tile/walk selection that used to live
+//! twice (in the engine registry's fallover block and the legacy
+//! `SacBackend` path) with a single, memoized decision.
+//!
+//! ## Search space and selection rule
+//!
+//! Candidates are enumerated over walk ∈ {tiled, streaming, pipelined}
+//! × the budget ladder's tile heights ([`TILE_LADDER`]) and scored by
+//! the [`cost`](super::cost) model ([`candidates`] exposes the scored
+//! table — `tetris tune` renders it). Selection is lexicographic:
+//!
+//! 1. **predicted-feasible first** — a candidate whose walk-matched
+//!    peak estimate fits the budget always beats one that does not;
+//! 2. **unpinned before pinned** — when either per-segment walk fits,
+//!    the schedule leaves the walk unpinned (`walk: None`) so the
+//!    executor's batch rule still picks streaming for covering batches
+//!    and tiled for short ones; the pipelined walk is pinned only when
+//!    the budget demands whole-network streaming;
+//! 3. **lowest roofline score, largest tile on ties** — within the
+//!    chosen family the compute leg is walk-invariant and the traffic
+//!    leg shrinks as tiles grow (less halo recompute), so this
+//!    resolves to the largest tile height that fits: exactly the
+//!    budget ladder's answer, which keeps the tuner bit-compatible
+//!    with the previous heuristic in every in-budget configuration.
+//!
+//! When **nothing** fits, the tuner serves the minimum-predicted-peak
+//! schedule, sets [`TunedSchedule::over_budget`], and warns once per
+//! (plan, budget, workers) — the budget ladder's silent clamp-to-1-row
+//! now has an explicit diagnostic.
+//!
+//! ## Memoization
+//!
+//! `tune` results are cached per ([`CompiledNetwork::fingerprint`],
+//! budget bytes, workers) in a process-wide map, so re-registering the
+//! same model (engine rebuilds, multi-engine tests) never re-searches.
+//!
+//! ## Axes reported but not pinned
+//!
+//! Batch policy and kneading stride are part of the searched space but
+//! advisory in the result: the executor's streaming pivot is reported
+//! as [`TunedSchedule::streaming_batch_pivot`] (the walk rule is
+//! already optimal under the cost model — streaming strictly dominates
+//! tiled on traffic once a batch covers the workers), and re-kneading
+//! at a different `ks` would violate the compile-once contract
+//! (`kneads_at_build` pins), so `tetris tune` sweeps `ks` in the
+//! report instead of mutating the plan.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Mutex;
+
+use super::compiled::CompiledNetwork;
+use super::cost::{CostEstimate, CostModel};
+use super::exec::Walk;
+use super::graph::Segment;
+
+/// The tile heights the budget ladder tries, largest first, before
+/// falling back to 1 row — the same ladder `tile_rows_for_budget_walk`
+/// walks, exposed so the tuner's candidate table and the sizing logic
+/// can never drift apart.
+pub const TILE_LADDER: [usize; 7] = [64, 32, 16, 8, 4, 2, 1];
+
+/// The tuner's pick for one (plan, budget, workers) triple — the
+/// single schedule entry point both the engine registry and the legacy
+/// `SacBackend` path apply via [`TunedSchedule::apply`].
+#[derive(Debug, Clone)]
+pub struct TunedSchedule {
+    /// Pinned walk, or `None` to let the executor's batch rule choose
+    /// between the per-segment walks at each call.
+    pub walk: Option<Walk>,
+    /// Tile height / ring-advance step.
+    pub tile_rows: usize,
+    /// Branch-arm thread split: `Some(n)` caps concurrent arm threads
+    /// (the tuner serializes arms — `Some(1)` — when the budget is
+    /// blown and the plan branches, shaving the concurrent arm working
+    /// sets); `None` keeps the executor default (one thread per arm up
+    /// to the worker budget).
+    pub arm_threads: Option<usize>,
+    /// Predicted peak bytes of the chosen schedule (for an unpinned
+    /// walk: the better of the two per-segment estimates — the bound
+    /// the executor's batch rule can land on).
+    pub predicted_peak_bytes: u64,
+    /// No candidate fit the budget; the minimum-footprint schedule is
+    /// served and a one-time diagnostic was emitted.
+    pub over_budget: bool,
+    /// The budget this schedule was tuned for.
+    pub budget_bytes: u64,
+    /// The worker fan-out this schedule was tuned for.
+    pub workers: usize,
+    /// Smallest batch size at which an unpinned schedule streams
+    /// (the executor picks the streaming walk once n ≥ workers).
+    pub streaming_batch_pivot: usize,
+}
+
+impl TunedSchedule {
+    /// Install this schedule as the plan's compiled defaults (the
+    /// `walk_hint` + `tile_rows` every `execute` call falls back to).
+    pub fn apply(&self, plan: &mut CompiledNetwork) {
+        plan.walk_hint = self.walk;
+        plan.tile_rows = self.tile_rows;
+    }
+}
+
+/// Memoized tune results, keyed by (plan fingerprint, budget bytes,
+/// workers). `BTreeMap::new` is const, so no lazy-init dance.
+static CACHE: Mutex<BTreeMap<(u64, u64, usize), TunedSchedule>> = Mutex::new(BTreeMap::new());
+
+/// One-shot over-budget diagnostics, same key as the cache (the
+/// pinned-entry path bypasses the cache but must not spam).
+static WARNED: Mutex<BTreeSet<(u64, u64, usize)>> = Mutex::new(BTreeSet::new());
+
+/// Tune `plan` for a memory budget and worker fan-out: the full
+/// search, memoized per ([`CompiledNetwork::fingerprint`], budget,
+/// workers). This is the schedule the engine installs by default.
+pub fn tune(plan: &CompiledNetwork, budget_bytes: u64, workers: usize) -> TunedSchedule {
+    let workers = workers.max(1);
+    let key = (plan.fingerprint(), budget_bytes, workers);
+    if let Some(hit) = CACHE.lock().unwrap().get(&key) {
+        return hit.clone();
+    }
+    let sched = search(plan, budget_bytes, workers);
+    CACHE.lock().unwrap().insert(key, sched.clone());
+    sched
+}
+
+/// [`tune`] with caller pins, the registry's full option surface:
+///
+/// * `walk: Some(_)` — the walk is pinned; only the tile is sized
+///   (budget ladder under that walk's estimator) unless `tile_rows`
+///   pins that too.
+/// * `tile_rows: Some(_)` — honored verbatim, walk as given (no
+///   fallover: an explicit tile is the caller's informed choice, so no
+///   over-budget warning either).
+/// * both `None` with `fallover` — the full memoized search.
+/// * both `None` without `fallover` (`EngineBuilder::auto_tune(false)`)
+///   — plain ladder sizing, never pins a walk, still warns when even
+///   the 1-row floor blows the budget.
+pub fn tune_pinned(
+    plan: &CompiledNetwork,
+    budget_bytes: u64,
+    workers: usize,
+    walk: Option<Walk>,
+    tile_rows: Option<usize>,
+    fallover: bool,
+) -> TunedSchedule {
+    let workers = workers.max(1);
+    if walk.is_none() && tile_rows.is_none() && fallover {
+        return tune(plan, budget_bytes, workers);
+    }
+    let tile = match (walk, tile_rows) {
+        (_, Some(t)) => t,
+        (Some(w), None) => plan.tile_rows_for_budget_walk(budget_bytes, workers, w),
+        (None, None) => plan.tile_rows_for_budget(budget_bytes, workers),
+    };
+    let peak = predicted_peak(plan, walk, tile, workers);
+    let over_budget = peak > budget_bytes;
+    if over_budget && tile_rows.is_none() {
+        warn_over_budget(plan, budget_bytes, workers, peak);
+    }
+    TunedSchedule {
+        walk,
+        tile_rows: tile,
+        arm_threads: arm_threads_for(plan, workers, over_budget),
+        predicted_peak_bytes: peak,
+        over_budget,
+        budget_bytes,
+        workers,
+        streaming_batch_pivot: workers,
+    }
+}
+
+/// The full scored candidate table the selection rule ranges over —
+/// walk × [`TILE_LADDER`] — for `tetris tune`'s report and the
+/// validation sweep. `compute_cycles` feeds the roofline's compute
+/// leg (0 = traffic-led).
+pub fn candidates(
+    plan: &CompiledNetwork,
+    workers: usize,
+    compute_cycles: u64,
+) -> crate::Result<Vec<CostEstimate>> {
+    let model = CostModel::new(plan, workers).with_compute_cycles(compute_cycles);
+    let mut out = Vec::with_capacity(3 * TILE_LADDER.len());
+    for walk in [Walk::Tiled, Walk::Streaming, Walk::Pipelined] {
+        for &t in &TILE_LADDER {
+            out.push(model.estimate(walk, t)?);
+        }
+    }
+    Ok(out)
+}
+
+/// The selection rule (module docs): feasible-first, unpinned-first,
+/// then lowest score / largest tile — which in-budget collapses to the
+/// budget ladder's answer, and over-budget to the minimum-footprint
+/// candidate, pinning the pipelined walk exactly when its depth-flat
+/// peak undercuts both per-segment walks.
+fn search(plan: &CompiledNetwork, budget_bytes: u64, workers: usize) -> TunedSchedule {
+    let t_def = plan.tile_rows_for_budget(budget_bytes, workers);
+    let tiled = plan.peak_bytes_estimate(t_def, workers);
+    let streaming = plan.streaming_peak_bytes_estimate(t_def, workers);
+    let default_peak = tiled.min(streaming);
+    let (walk, tile, peak) = if default_peak <= budget_bytes {
+        (None, t_def, default_peak)
+    } else {
+        let rows = plan.tile_rows_for_budget_walk(budget_bytes, workers, Walk::Pipelined);
+        let pip = plan.pipelined_peak_bytes_estimate(rows, workers);
+        if pip < default_peak {
+            (Some(Walk::Pipelined), rows, pip)
+        } else {
+            (None, t_def, default_peak)
+        }
+    };
+    let over_budget = peak > budget_bytes;
+    if over_budget {
+        warn_over_budget(plan, budget_bytes, workers, peak);
+    }
+    TunedSchedule {
+        walk,
+        tile_rows: tile,
+        arm_threads: arm_threads_for(plan, workers, over_budget),
+        predicted_peak_bytes: peak,
+        over_budget,
+        budget_bytes,
+        workers,
+        streaming_batch_pivot: workers,
+    }
+}
+
+/// Predicted peak of a chosen schedule: walk-matched estimate when
+/// pinned, the better per-segment estimate when unpinned (the bound
+/// the executor's batch rule can land on).
+fn predicted_peak(
+    plan: &CompiledNetwork,
+    walk: Option<Walk>,
+    tile_rows: usize,
+    workers: usize,
+) -> u64 {
+    match walk {
+        Some(Walk::Tiled) => plan.peak_bytes_estimate(tile_rows, workers),
+        Some(Walk::Streaming) => plan.streaming_peak_bytes_estimate(tile_rows, workers),
+        Some(Walk::Pipelined) => plan.pipelined_peak_bytes_estimate(tile_rows, workers),
+        None => plan
+            .peak_bytes_estimate(tile_rows, workers)
+            .min(plan.streaming_peak_bytes_estimate(tile_rows, workers)),
+    }
+}
+
+/// Branch-arm thread split: serialize arms when the budget is already
+/// blown and the plan branches — `par_map_with(1, …)` walks the arms
+/// in sequence, so at most one arm's rings + input clone are live on
+/// top of the kept arm outputs (bit-exact either way; scheduling
+/// only).
+fn arm_threads_for(plan: &CompiledNetwork, workers: usize, over_budget: bool) -> Option<usize> {
+    if over_budget && workers > 1 && max_branch_arms(plan.schedule()) > 1 {
+        Some(1)
+    } else {
+        None
+    }
+}
+
+/// Widest branch fan-out anywhere in a segment schedule.
+fn max_branch_arms(segs: &[Segment]) -> usize {
+    let mut widest = 0;
+    for seg in segs {
+        if let Segment::Branch(arms) = seg {
+            widest = widest.max(arms.len());
+            for arm in arms {
+                widest = widest.max(max_branch_arms(arm));
+            }
+        }
+    }
+    widest
+}
+
+fn warn_over_budget(plan: &CompiledNetwork, budget_bytes: u64, workers: usize, peak: u64) {
+    let key = (plan.fingerprint(), budget_bytes, workers);
+    if WARNED.lock().unwrap().insert(key) {
+        eprintln!(
+            "tetris: no schedule fits the {budget_bytes}-byte memory budget at \
+             {workers} workers — serving the minimum-footprint schedule \
+             (predicted peak {peak} bytes); raise the budget or shrink the model"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Mode;
+    use crate::model::weights::{synthetic_loaded, DensityCalibration};
+    use crate::model::zoo;
+
+    fn tiny_plan() -> CompiledNetwork {
+        let net = zoo::tiny_cnn();
+        let w = synthetic_loaded(&net, Mode::Fp16, 12, "tiny_cnn", DensityCalibration::Fig2, 7)
+            .unwrap();
+        CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap()
+    }
+
+    #[test]
+    fn generous_budget_reproduces_the_ladder_unpinned() {
+        let plan = tiny_plan();
+        let tuned = tune(&plan, u64::MAX, 4);
+        assert_eq!(tuned.walk, None, "in-budget schedules stay unpinned");
+        assert_eq!(tuned.tile_rows, plan.tile_rows_for_budget(u64::MAX, 4));
+        assert!(!tuned.over_budget);
+        assert_eq!(tuned.streaming_batch_pivot, 4);
+    }
+
+    #[test]
+    fn zero_budget_flags_over_budget_and_serves_min_footprint() {
+        let plan = tiny_plan();
+        let tuned = tune(&plan, 0, 2);
+        assert!(tuned.over_budget, "nothing fits a zero budget");
+        assert!(tuned.predicted_peak_bytes > 0);
+        // The pick is still the minimum of the enumerated footprints.
+        let floor = predicted_peak(&plan, None, plan.tile_rows_for_budget(0, 2), 2).min(
+            predicted_peak(
+                &plan,
+                Some(Walk::Pipelined),
+                plan.tile_rows_for_budget_walk(0, 2, Walk::Pipelined),
+                2,
+            ),
+        );
+        assert_eq!(tuned.predicted_peak_bytes, floor);
+    }
+
+    #[test]
+    fn memoized_results_are_stable() {
+        let plan = tiny_plan();
+        let a = tune(&plan, 64 * 1024 * 1024, 3);
+        let b = tune(&plan, 64 * 1024 * 1024, 3);
+        assert_eq!(a.walk, b.walk);
+        assert_eq!(a.tile_rows, b.tile_rows);
+        assert_eq!(a.predicted_peak_bytes, b.predicted_peak_bytes);
+    }
+
+    #[test]
+    fn pins_are_honored_verbatim() {
+        let plan = tiny_plan();
+        let t = tune_pinned(&plan, u64::MAX, 2, Some(Walk::Pipelined), None, true);
+        assert_eq!(t.walk, Some(Walk::Pipelined));
+        assert_eq!(
+            t.tile_rows,
+            plan.tile_rows_for_budget_walk(u64::MAX, 2, Walk::Pipelined)
+        );
+        let t = tune_pinned(&plan, u64::MAX, 2, None, Some(3), true);
+        assert_eq!(t.walk, None);
+        assert_eq!(t.tile_rows, 3);
+        let t = tune_pinned(&plan, u64::MAX, 2, None, None, false);
+        assert_eq!(t.walk, None, "auto_tune(false) never pins a walk");
+        assert_eq!(t.tile_rows, plan.tile_rows_for_budget(u64::MAX, 2));
+    }
+
+    #[test]
+    fn candidate_table_covers_every_walk_and_ladder_tile() {
+        let plan = tiny_plan();
+        let table = candidates(&plan, 2, 1000).unwrap();
+        assert_eq!(table.len(), 3 * TILE_LADDER.len());
+        assert!(table.iter().all(|c| c.compute_cycles == 1000));
+        // The chosen in-budget schedule matches the best unpinned
+        // candidate's tile (largest feasible = lowest traffic).
+        let tuned = tune(&plan, u64::MAX, 2);
+        let best_tile = table
+            .iter()
+            .filter(|c| c.walk == Walk::Tiled && c.fits(u64::MAX))
+            .max_by_key(|c| c.tile_rows)
+            .unwrap()
+            .tile_rows;
+        assert_eq!(tuned.tile_rows, best_tile);
+    }
+}

@@ -15,9 +15,12 @@ pub use tables::{table1, table2};
 
 use crate::config::{AccelConfig, CalibConfig, Mode};
 use crate::kneading::stats::KneadStats;
-use crate::model::weights::{profile_with, DensityCalibration};
-use crate::model::Network;
-use crate::sim::{accel_by_name, simulate_network};
+use crate::model::weights::{profile_with, synthetic_loaded_with_heads, DensityCalibration};
+use crate::model::{Network, Tensor};
+use crate::plan::{tune, CompiledNetwork, CostModel, ExecOpts, Walk, DRAM_BYTES_PER_CYCLE};
+use crate::sim::sample::samples_from_loaded;
+use crate::sim::tetris::TetrisSim;
+use crate::sim::{accel_by_name, simulate_network, simulate_network_with_samples};
 use crate::util::rng::Rng;
 
 /// Dispatch a report by name (`table1|fig1|fig2|fig8|fig9|fig10|fig11|
@@ -133,6 +136,152 @@ pub fn simulate_one(
     }
     out.push_str(&table.render());
     Ok(out)
+}
+
+/// Human-readable label for a tuned schedule's walk pin.
+fn walk_label(walk: Option<Walk>) -> String {
+    match walk {
+        Some(w) => format!("{w:?}").to_lowercase(),
+        None => "auto (batch rule)".into(),
+    }
+}
+
+/// `tetris tune` report: the auto-tuner's full scored candidate table
+/// for one network at one (budget, workers) point, the schedule it
+/// picks, and an advisory kneading-stride sweep. With `measure`, the
+/// chosen schedule also executes one traced image so predicted and
+/// measured peak bytes sit side by side.
+pub fn tune_report(
+    net: &Network,
+    cfg: &AccelConfig,
+    budget_bytes: u64,
+    workers: usize,
+    seed: u64,
+    measure: bool,
+) -> crate::Result<String> {
+    use std::fmt::Write;
+    let weights =
+        synthetic_loaded_with_heads(net, cfg.mode, 12, &net.name, DensityCalibration::Fig2, seed)?;
+    let plan = CompiledNetwork::compile(net, &weights, cfg.ks, cfg.mode)?;
+    let calib = CalibConfig::default();
+    let samples = samples_from_loaded(net, &weights)?;
+    let cycles =
+        simulate_network_with_samples(&TetrisSim, net, &samples, cfg, &calib).total_cycles();
+
+    let tuned = tune::tune(&plan, budget_bytes, workers);
+    let cands = tune::candidates(&plan, workers, cycles)?;
+
+    let mut out = String::new();
+    writeln!(
+        out,
+        "network={} ks={} mode={} budget={} B workers={}",
+        net.name, cfg.ks, cfg.mode, budget_bytes, workers
+    )
+    .ok();
+    let mut table = fmt::Table::new(&[
+        "walk", "tile", "peak B", "traffic B", "halo rows", "score", "fits", "chosen",
+    ]);
+    for c in &cands {
+        // An unpinned pick leaves the executor's batch rule choosing
+        // between the two per-segment walks, so both rows are "chosen".
+        let chosen = c.tile_rows == tuned.tile_rows
+            && match tuned.walk {
+                Some(w) => c.walk == w,
+                None => matches!(c.walk, Walk::Tiled | Walk::Streaming),
+            };
+        table.row(&[
+            format!("{:?}", c.walk).to_lowercase(),
+            c.tile_rows.to_string(),
+            c.peak_bytes.to_string(),
+            c.traffic_bytes.to_string(),
+            c.halo_rows.to_string(),
+            c.score().to_string(),
+            if c.fits(budget_bytes) { "yes" } else { "no" }.to_string(),
+            if chosen { "*" } else { "" }.to_string(),
+        ]);
+    }
+    out.push_str(&table.render());
+    writeln!(
+        out,
+        "chosen: walk={} tile_rows={} predicted_peak={} B{}",
+        walk_label(tuned.walk),
+        tuned.tile_rows,
+        tuned.predicted_peak_bytes,
+        if tuned.over_budget { " (OVER BUDGET — minimum-footprint schedule)" } else { "" },
+    )
+    .ok();
+    writeln!(
+        out,
+        "arm_threads={} streaming_batch_pivot={} (unpinned batches of >= pivot stream)",
+        match tuned.arm_threads {
+            Some(n) => n.to_string(),
+            None => "default".into(),
+        },
+        tuned.streaming_batch_pivot,
+    )
+    .ok();
+
+    // Advisory kneading-stride sweep: re-kneading would break the
+    // compile-once contract, so alternate strides are scored without
+    // mutating the plan — the compute leg re-simulates per stride, the
+    // traffic leg is the chosen schedule's (walk-invariant MACs).
+    let walk_eff = tuned.walk.unwrap_or(Walk::Streaming);
+    let traffic = CostModel::new(&plan, workers)
+        .estimate(walk_eff, tuned.tile_rows)?
+        .traffic_bytes;
+    let mut ks_table = fmt::Table::new(&["ks", "sim cycles", "roofline score"]);
+    for ks in [8usize, 16, 32] {
+        let alt = AccelConfig { ks, mode: cfg.mode, ..AccelConfig::default() };
+        let c = simulate_network_with_samples(&TetrisSim, net, &samples, &alt, &calib)
+            .total_cycles();
+        let score = c.max(traffic.div_ceil(DRAM_BYTES_PER_CYCLE));
+        ks_table.row(&[ks.to_string(), c.to_string(), score.to_string()]);
+    }
+    writeln!(out, "\nkneading-stride sweep (advisory — the plan compiled at ks={}):", cfg.ks)
+        .ok();
+    out.push_str(&ks_table.render());
+
+    if measure {
+        let l0 = &net.layers[0];
+        let x = Tensor::zeros(&[1, l0.in_c, l0.in_hw, l0.in_hw]);
+        let opts = ExecOpts {
+            tile_rows: Some(tuned.tile_rows),
+            workers: Some(workers),
+            walk: tuned.walk,
+            arm_threads: tuned.arm_threads,
+        };
+        let (_, stats) = plan.execute_traced(&x, opts)?;
+        writeln!(
+            out,
+            "\nmeasured (1 traced image): peak={} B (predicted {} B) halo_rows={}",
+            stats.peak_bytes(),
+            tuned.predicted_peak_bytes,
+            stats.halo_recompute_rows(),
+        )
+        .ok();
+    }
+    Ok(out)
+}
+
+/// The `tetris simulate --schedule` line: the schedule the auto-tuner
+/// would serve this network with under the process memory budget
+/// (`TETRIS_MEM_BUDGET_MB`) and worker count.
+pub fn schedule_line(net: &Network, cfg: &AccelConfig, seed: u64) -> crate::Result<String> {
+    let weights =
+        synthetic_loaded_with_heads(net, cfg.mode, 12, &net.name, DensityCalibration::Fig2, seed)?;
+    let plan = CompiledNetwork::compile(net, &weights, cfg.ks, cfg.mode)?;
+    let budget = crate::engine::env::mem_budget_bytes();
+    let workers = crate::util::pool::worker_count();
+    let tuned = tune::tune(&plan, budget, workers);
+    Ok(format!(
+        "schedule: walk={} tile_rows={} predicted_peak={} B budget={} B workers={}{}",
+        walk_label(tuned.walk),
+        tuned.tile_rows,
+        tuned.predicted_peak_bytes,
+        budget,
+        workers,
+        if tuned.over_budget { " OVER-BUDGET" } else { "" },
+    ))
 }
 
 /// Kneading statistics for the `knead` subcommand.

@@ -1,0 +1,308 @@
+//! ISSUE 7 tentpole tests: the schedule auto-tuner (`plan::tune`) and
+//! its roofline cost model (`plan::cost`), validated against ground
+//! truth.
+//!
+//! Pinned here:
+//! * **peak bracket** — across the zoo × walks × tile heights ×
+//!   budgets, `execute_traced`'s measured peak bytes and the cost
+//!   model's predicted peak bracket each other within
+//!   `PEAK_BRACKET_FACTOR` on both sides (a `util::prop` sweep whose
+//!   case count honors `TETRIS_PROP_CASES`);
+//! * **exact halo** — the model's predicted tiled-walk halo-recompute
+//!   rows equal the measured `halo_recompute_rows` exactly (per image,
+//!   explicit tiles disable adaptive shrink);
+//! * **budget contract** — the tuner never flags `over_budget` when
+//!   any in-budget candidate exists, honors explicit walk/tile pins,
+//!   and its in-budget picks reproduce the budget ladder unpinned;
+//! * **I5 under tuning** — every tuner-selected schedule (walk, tile,
+//!   arm split) executes bit-identical to the scalar MAC reference,
+//!   logits included;
+//! * **arm serialization** — `ExecOpts::arm_threads = Some(1)` is
+//!   bit-exact on a branchy trunk and never raises the measured peak.
+
+use tetris::config::Mode;
+use tetris::model::reference::forward_reference;
+use tetris::model::weights::{synthetic_loaded_with_heads, DensityCalibration};
+use tetris::model::{zoo, Network, Tensor};
+use tetris::plan::{tune, CompiledNetwork, CostModel, ExecOpts, Walk, PEAK_BRACKET_FACTOR};
+use tetris::util::prop::{run_with, PropConfig};
+use tetris::util::rng::Rng;
+
+fn random_input(net: &Network, n: usize, hw: usize, rng: &mut Rng) -> Tensor<i32> {
+    let mut x = Tensor::zeros(&[n, net.layers[0].in_c, hw, hw]);
+    for v in x.data_mut() {
+        *v = rng.range_i64(-512, 512) as i32;
+    }
+    x
+}
+
+/// The scaled evaluation zoo (same scaling the I5 suites pin), with
+/// head-bearing weights so tuner-selected schedules cover image →
+/// logits.
+fn scaled_zoo() -> Vec<(Network, &'static str, usize)> {
+    vec![
+        (zoo::alexnet().scaled(16, 64), "alexnet", 64),
+        (zoo::googlenet().scaled(16, 64), "googlenet", 64),
+        (zoo::vgg16().scaled(16, 32), "vgg16", 32),
+        (zoo::vgg19().scaled(16, 32), "vgg19", 32),
+        (zoo::nin().scaled(16, 64), "nin", 64),
+    ]
+}
+
+fn compiled_zoo(seed: u64) -> Vec<(Network, CompiledNetwork, Tensor<i32>, usize)> {
+    scaled_zoo()
+        .into_iter()
+        .map(|(net, profile, hw)| {
+            let w = synthetic_loaded_with_heads(
+                &net,
+                Mode::Fp16,
+                12,
+                profile,
+                DensityCalibration::Fig2,
+                seed + hw as u64,
+            )
+            .unwrap();
+            let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+            let mut rng = Rng::new(seed ^ 0x11 ^ hw as u64);
+            let x = random_input(&net, 1, hw, &mut rng);
+            (net, plan, x, hw)
+        })
+        .collect()
+}
+
+fn prop_cases(default: usize) -> usize {
+    std::env::var("TETRIS_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&c| c > 0)
+        .unwrap_or(default)
+}
+
+// ---------------- validation contract: predicted peak brackets measured peak ----------------
+
+/// `util::prop` sweep over (network, walk, tile-or-budget, workers):
+/// the cost model's predicted peak and the traced measured peak
+/// bracket each other within [`PEAK_BRACKET_FACTOR`] on both sides.
+/// Workers cap at 2 because the estimators are concurrency bounds (a
+/// 1-image batch stripes one thread while the estimate scales rings by
+/// the worker budget) — the bracket absorbs that slack, and a wrong
+/// ring formula (off by O(depth)) still blows it.
+#[test]
+fn cost_model_peak_estimates_bracket_traced_ground_truth_zoo_wide() {
+    let compiled = compiled_zoo(0x7A11);
+
+    run_with(
+        PropConfig { cases: prop_cases(10), seed: 0x5EED_0007 },
+        "measured peak within [predicted/F, predicted×F]",
+        |rng| {
+            let net_i = rng.below(compiled.len() as u64) as usize;
+            let workers = 1 + rng.below(2) as usize;
+            let walk = match rng.below(3) {
+                0 => Walk::Tiled,
+                1 => Walk::Streaming,
+                _ => Walk::Pipelined,
+            };
+            let tile = if rng.chance(0.5) {
+                1 + rng.below(6) as usize
+            } else {
+                // Budget-derived through the walk-matched ladder,
+                // exactly like serving: 1..=64 MiB.
+                let budget = (1u64 << rng.below(7)) * 1024 * 1024;
+                compiled[net_i].1.tile_rows_for_budget_walk(budget, workers, walk)
+            };
+            (net_i, walk, tile, workers)
+        },
+        |&(net_i, walk, tile, workers)| {
+            let (net, plan, x, _) = &compiled[net_i];
+            let predicted =
+                CostModel::new(plan, workers).estimate(walk, tile).map_err(|e| e.to_string())?;
+            let opts = ExecOpts {
+                tile_rows: Some(tile),
+                workers: Some(workers),
+                walk: Some(walk),
+                arm_threads: None,
+            };
+            let (_, stats) = plan.execute_traced(x, opts).map_err(|e| e.to_string())?;
+            let (m, p) = (stats.peak_bytes(), predicted.peak_bytes);
+            if m > p.saturating_mul(PEAK_BRACKET_FACTOR) || p > m.saturating_mul(PEAK_BRACKET_FACTOR)
+            {
+                return Err(format!(
+                    "{}: {walk:?} tile={tile} workers={workers}: measured peak {m} B vs \
+                     predicted {p} B escapes the ×{PEAK_BRACKET_FACTOR} bracket",
+                    net.name
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The cost model's tiled-walk halo prediction is a line-for-line
+/// replica of the executor's boundary walk, so it must match the
+/// traced `halo_recompute_rows` **exactly** — per image (explicit
+/// `ExecOpts::tile_rows` disables adaptive tile shrinking, so a batch
+/// of n recomputes exactly n× the per-image rows).
+#[test]
+fn predicted_halo_rows_match_traced_exactly() {
+    for (net, profile, hw) in scaled_zoo() {
+        let w = synthetic_loaded_with_heads(
+            &net,
+            Mode::Fp16,
+            12,
+            profile,
+            DensityCalibration::Fig2,
+            0x4A10,
+        )
+        .unwrap();
+        let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+        let mut rng = Rng::new(0xA10);
+        let n = 2usize;
+        let x = random_input(&net, n, hw, &mut rng);
+        for tile in [2usize, 3, 5] {
+            let predicted = CostModel::new(&plan, 1).predicted_halo_rows(tile).unwrap();
+            for workers in [1usize, 2] {
+                let opts = ExecOpts::tiled(tile).with_workers(workers);
+                let (_, stats) = plan.execute_traced(&x, opts).unwrap();
+                assert_eq!(
+                    stats.halo_recompute_rows(),
+                    predicted * n as u64,
+                    "{}: tile={tile} workers={workers}: measured halo rows diverged from \
+                     the model ({} per-image predicted)",
+                    net.name,
+                    predicted
+                );
+            }
+        }
+    }
+}
+
+// ---------------- budget contract ----------------
+
+/// The tuner's feasibility pin: whenever **any** enumerated candidate
+/// fits the budget, the chosen schedule is in budget (`!over_budget`
+/// and predicted peak ≤ budget); in-budget unpinned picks reproduce
+/// the budget ladder; a zero budget flags `over_budget`; branchy plans
+/// get the arm-serialization lever only when over budget.
+#[test]
+fn tuner_never_over_budget_when_a_candidate_fits() {
+    for (net, plan, _, _) in compiled_zoo(0xB4D6) {
+        for budget in [1u64 << 20, 4 << 20, 64 << 20, u64::MAX] {
+            let tuned = tune::tune(&plan, budget, 2);
+            let any_fits = tune::candidates(&plan, 2, 0)
+                .unwrap()
+                .iter()
+                .any(|c| c.fits(budget));
+            if any_fits {
+                assert!(
+                    !tuned.over_budget,
+                    "{}: budget {budget} has a fitting candidate but the tuner flagged \
+                     over_budget",
+                    net.name
+                );
+                assert!(
+                    tuned.predicted_peak_bytes <= budget,
+                    "{}: chosen schedule's predicted peak {} blows the {budget}-byte budget",
+                    net.name,
+                    tuned.predicted_peak_bytes
+                );
+            }
+            if !tuned.over_budget && tuned.walk.is_none() {
+                assert_eq!(
+                    tuned.tile_rows,
+                    plan.tile_rows_for_budget(budget, 2),
+                    "{}: in-budget unpinned pick must reproduce the budget ladder",
+                    net.name
+                );
+            }
+            assert_eq!(tuned.streaming_batch_pivot, 2);
+        }
+
+        let broke = tune::tune(&plan, 0, 4);
+        assert!(broke.over_budget, "{}: nothing fits a zero budget", net.name);
+        let branchy = net.name.contains("googlenet");
+        assert_eq!(
+            broke.arm_threads,
+            if branchy { Some(1) } else { None },
+            "{}: arm serialization is the over-budget lever for branchy plans only",
+            net.name
+        );
+    }
+}
+
+// ---------------- I5 under tuner-selected schedules ----------------
+
+/// Every schedule the tuner selects — across budgets that land on the
+/// unpinned ladder, the pipelined fallover, and the over-budget
+/// minimum-footprint floor — executes bit-identical to the scalar MAC
+/// reference, logits included.
+#[test]
+fn i5_holds_under_tuner_selected_schedules() {
+    for (net, profile, hw) in scaled_zoo() {
+        let w = synthetic_loaded_with_heads(
+            &net,
+            Mode::Fp16,
+            12,
+            profile,
+            DensityCalibration::Fig2,
+            0x15 + hw as u64,
+        )
+        .unwrap();
+        let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+        let mut rng = Rng::new(0x15E5);
+        let x = random_input(&net, 2, hw, &mut rng);
+        let want = forward_reference(&net, &w, &x);
+        for budget in [1u64 << 20, 8 << 20, u64::MAX] {
+            let tuned = tune::tune(&plan, budget, 2);
+            let opts = ExecOpts {
+                tile_rows: Some(tuned.tile_rows),
+                workers: Some(2),
+                walk: tuned.walk,
+                arm_threads: tuned.arm_threads,
+            };
+            let got = plan.execute_opts(&x, opts).unwrap();
+            assert_eq!(
+                got, want,
+                "{}: tuner schedule for budget {budget} (walk {:?}, tile {}) diverged from \
+                 the reference",
+                net.name, tuned.walk, tuned.tile_rows
+            );
+        }
+    }
+}
+
+// ---------------- arm serialization lever ----------------
+
+/// Serializing branch arms (`ExecOpts::arm_threads = Some(1)`) on the
+/// branchy GoogleNet trunk is bit-exact vs the default arm fan-out and
+/// never raises the measured peak — at most one arm's rings + input
+/// clone are live on top of the kept arm outputs.
+#[test]
+fn arm_threads_serializes_branch_arms_bit_exact_and_no_worse_peak() {
+    let net = zoo::googlenet().scaled(16, 64);
+    let w = synthetic_loaded_with_heads(
+        &net,
+        Mode::Fp16,
+        12,
+        "googlenet",
+        DensityCalibration::Fig2,
+        0xA53,
+    )
+    .unwrap();
+    let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+    let mut rng = Rng::new(0xA54);
+    let x = random_input(&net, 1, 64, &mut rng);
+    let want = forward_reference(&net, &w, &x);
+
+    let base = ExecOpts::streaming(4).with_workers(4);
+    let serial = ExecOpts::streaming(4).with_workers(4).with_arm_threads(1);
+    let (got_base, tb) = plan.execute_traced(&x, base).unwrap();
+    let (got_serial, ts) = plan.execute_traced(&x, serial).unwrap();
+    assert_eq!(got_base, want, "default arm fan-out diverged from the reference");
+    assert_eq!(got_serial, want, "serialized arms diverged from the reference");
+    assert!(
+        ts.peak_bytes() <= tb.peak_bytes(),
+        "serializing arms raised the peak: {} B (serial) > {} B (fan-out)",
+        ts.peak_bytes(),
+        tb.peak_bytes()
+    );
+}

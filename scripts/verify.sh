@@ -40,6 +40,21 @@ echo "== streaming sweep (TETRIS_PROP_CASES=24) =="
 TETRIS_PROP_CASES=24 cargo test -q --test plan_streaming \
     pipelined_walk_joins_the_equivalence_class_zoo_wide
 
+# The auto-tuner validation sweep (ISSUE 7) under the same knob: the
+# cost model's predicted peaks must bracket execute_traced's measured
+# peaks across zoo × walks × tiles × budgets, and the tuner must never
+# pick an over-budget schedule when an in-budget candidate exists.
+echo "== auto-tuner sweep (TETRIS_PROP_CASES=24) =="
+TETRIS_PROP_CASES=24 cargo test -q --test plan_tune
+
+if [ "$QUICK" -eq 0 ]; then
+    # Tune smoke on a small model: the full candidate table, the chosen
+    # schedule, and measured-vs-predicted peak from one traced image.
+    echo "== tetris tune smoke (nin ÷16 @64², 8 MiB) =="
+    cargo run --release --quiet -- tune --network nin --scale 16 --hw 64 \
+        --budget-mb 8 --workers 2 --measure
+fi
+
 if cargo clippy --version >/dev/null 2>&1; then
     echo "== cargo clippy (all targets, -D warnings) =="
     cargo clippy --all-targets -- -D warnings
