@@ -8,7 +8,7 @@
 
 use std::time::Duration;
 
-use tetris::config::Mode;
+use tetris::config::{AccelConfig, CalibConfig, Mode};
 use tetris::coordinator::{BatchPolicy, InferRequest, SacBackend, Server, ServerConfig};
 use tetris::engine::Engine;
 use tetris::kneading::{knead_group, knead_lane, Lane};
@@ -512,12 +512,14 @@ fn main() {
             workers: Some(2),
             walk: None,
             arm_threads: None,
+            skip_zero_activations: None,
         };
         let tuned_opts = ExecOpts {
             tile_rows: Some(tuned.tile_rows),
             workers: Some(2),
             walk: tuned.walk,
             arm_threads: tuned.arm_threads,
+            skip_zero_activations: None,
         };
         assert_eq!(
             plan.execute_opts(img, tuned_opts).unwrap(),
@@ -542,6 +544,107 @@ fn main() {
                 ("tuned_tile_rows".into(), tuned.tile_rows as f64),
                 ("predicted_peak_bytes".into(), tuned.predicted_peak_bytes as f64),
                 ("speedup_vs_hand_x".into(), speedup),
+            ],
+        );
+    }
+
+    // 14. ISSUE 8: the activation-aware skip lane. A zero-banded batch
+    //     (top quarter of every channel zero — the band survives every
+    //     conv/pool, so post-ReLU zero rows exist at every depth) runs
+    //     skip-on vs skip-off, bit-exactness asserted before timing;
+    //     then the measured activation profile feeds the three-way
+    //     simulated comparison. In scripts/bench_compare.py the
+    //     `*_skipped_rows` / `*_skipped_windows` keys gate as
+    //     exact-or-better (a drop means the lane lost skips) and the
+    //     `*_sim_cycles` keys gate as at-most (a rise is a
+    //     timing-model regression); both sides are deterministic.
+    let mut zimg = Tensor::zeros(&[4, anet.layers[0].in_c, 64, 64]);
+    for (i, v) in zimg.data_mut().iter_mut().enumerate() {
+        if (i / 64) % 64 >= 16 {
+            *v = (i as i32 % 421) - 210;
+        }
+    }
+    let skip_on = ExecOpts::streaming(4).with_workers(2).with_skip_zero_activations(true);
+    let skip_off = ExecOpts::streaming(4).with_workers(2).with_skip_zero_activations(false);
+    assert_eq!(
+        aplan.execute_opts(&zimg, skip_on).unwrap(),
+        aplan.execute_opts(&zimg, skip_off).unwrap(),
+        "skip lane must be bit-exact before being timed"
+    );
+    h.bench("activation-skipping/alexnet-div16-skip-on", || {
+        aplan.execute_opts(&zimg, skip_on).unwrap().len()
+    });
+    h.bench("activation-skipping/alexnet-div16-skip-off", || {
+        aplan.execute_opts(&zimg, skip_off).unwrap().len()
+    });
+    let (_, zt) = aplan.execute_traced(&zimg, skip_on).unwrap();
+    assert!(zt.skipped_windows() > 0, "zero-banded batch must produce skips");
+    h.metric_row(
+        "activation-skipping/alexnet-div16-hw64",
+        vec![
+            ("alexnet_skipped_rows".into(), zt.skipped_rows() as f64),
+            ("alexnet_skipped_windows".into(), zt.skipped_windows() as f64),
+            ("total_windows".into(), zt.total_windows() as f64),
+            ("window_skip_pct".into(), zt.window_skip_fraction() * 100.0),
+            ("zero_pct".into(), zt.activation_zero_fraction() * 100.0),
+            (
+                "speedup_vs_skip_off_x".into(),
+                median(h.results(), "activation-skipping/alexnet-div16-skip-off")
+                    / median(h.results(), "activation-skipping/alexnet-div16-skip-on"),
+            ),
+        ],
+    );
+
+    //     Simulated three-way (dense DaDN / Tetris / Tetris+skip) per
+    //     full-size model, paired on one sampling seed; the measured
+    //     profile comes from one traced image on a channel-scaled copy
+    //     (deterministic, so the cycle counts are bit-stable run to
+    //     run).
+    let sim_cfg = AccelConfig::default();
+    let sim_calib = CalibConfig::default();
+    for name in ["alexnet", "vgg16"] {
+        let net = zoo::by_name(name).unwrap();
+        let profile =
+            tetris::sim::activation::measure_activation_profile(&net, &sim_cfg, 0x7E).unwrap();
+        let dense = tetris::sim::simulate_network(
+            &tetris::sim::dadn::DadnSim,
+            &net,
+            &sim_cfg,
+            &sim_calib,
+            5,
+        )
+        .unwrap()
+        .total_cycles();
+        let tet = tetris::sim::simulate_network(
+            &tetris::sim::tetris::TetrisSim,
+            &net,
+            &sim_cfg,
+            &sim_calib,
+            5,
+        )
+        .unwrap()
+        .total_cycles();
+        let skip = tetris::sim::simulate_network(
+            &tetris::sim::activation::TetrisSkipSim { profile },
+            &net,
+            &sim_cfg,
+            &sim_calib,
+            5,
+        )
+        .unwrap()
+        .total_cycles();
+        assert!(
+            skip < tet && tet < dense,
+            "{name}: simulated ordering skip {skip} < tetris {tet} < dense {dense} violated"
+        );
+        h.metric_row(
+            &format!("activation-skipping/{name}-simulated"),
+            vec![
+                (format!("{name}_dense_sim_cycles"), dense as f64),
+                (format!("{name}_tetris_sim_cycles"), tet as f64),
+                (format!("{name}_skip_sim_cycles"), skip as f64),
+                ("zero_pct".into(), profile.zero_fraction * 100.0),
+                ("essential_bits_mean".into(), profile.essential_bits_mean),
             ],
         );
     }

@@ -42,6 +42,15 @@ pub trait InferBackend {
     /// Simulated accelerator cycles for a batch of `n` images.
     fn sim_cycles(&self, n: usize) -> u64;
 
+    /// Cumulative activation-skip counters — `(skipped rows, skipped
+    /// windows, total windows)` over every batch this backend (and,
+    /// for `Arc`-sharing clones, its siblings) has served. `None` for
+    /// backends whose plan does not run the zero-activation skip lane
+    /// (the default, and always for PJRT).
+    fn skip_counters(&self) -> Option<(u64, u64, u64)> {
+        None
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -68,6 +77,18 @@ pub struct SacBackend {
     plan: Arc<CompiledNetwork>,
     /// Pre-simulated Tetris cycles for ONE image.
     cycles_per_image: u64,
+    /// Engine-wide activation-skip totals, shared (like the plan) by
+    /// every clone — W workers accumulate into one set of counters,
+    /// so `skip_counters` reports the whole engine's skip rate.
+    skip_totals: Arc<SkipTotals>,
+}
+
+/// Cumulative zero-activation skip counters for one shared plan.
+#[derive(Default)]
+struct SkipTotals {
+    rows: std::sync::atomic::AtomicU64,
+    windows: std::sync::atomic::AtomicU64,
+    total_windows: std::sync::atomic::AtomicU64,
 }
 
 impl SacBackend {
@@ -96,7 +117,7 @@ impl SacBackend {
     /// constructor the engine's model registry uses. Performs no
     /// kneading: the plan was compiled exactly once by the caller.
     pub fn from_parts(plan: Arc<CompiledNetwork>, cycles_per_image: u64) -> Self {
-        Self { plan, cycles_per_image }
+        Self { plan, cycles_per_image, skip_totals: Arc::new(SkipTotals::default()) }
     }
 
     /// Synthetic-weight backend (no artifacts needed — demos/tests).
@@ -147,8 +168,21 @@ impl SacBackend {
 
 impl InferBackend for SacBackend {
     fn infer_batch(&mut self, images: &Tensor<i32>) -> crate::Result<Vec<Vec<i32>>> {
+        use std::sync::atomic::Ordering::Relaxed;
         // Zero kneading here: the plan streams lanes kneaded at build.
-        let out = self.plan.execute(images)?;
+        // A skip-armed plan executes traced so the zero-activation
+        // counters surface in the serving metrics (the trace costs a
+        // handful of atomics, no extra feature-map allocation); logits
+        // are bit-identical either way (I5 — skipping is exact).
+        let out = if self.plan.skip_zero_activations {
+            let (out, stats) = self.plan.execute_traced(images, crate::plan::ExecOpts::default())?;
+            self.skip_totals.rows.fetch_add(stats.skipped_rows(), Relaxed);
+            self.skip_totals.windows.fetch_add(stats.skipped_windows(), Relaxed);
+            self.skip_totals.total_windows.fetch_add(stats.total_windows(), Relaxed);
+            out
+        } else {
+            self.plan.execute(images)?
+        };
         let n = match out.shape() {
             [] => return Err(crate::Error::Shape("scalar plan output".into())),
             s => s[0],
@@ -161,6 +195,18 @@ impl InferBackend for SacBackend {
 
     fn sim_cycles(&self, n: usize) -> u64 {
         self.cycles_per_image * n as u64
+    }
+
+    fn skip_counters(&self) -> Option<(u64, u64, u64)> {
+        use std::sync::atomic::Ordering::Relaxed;
+        if !self.plan.skip_zero_activations {
+            return None;
+        }
+        Some((
+            self.skip_totals.rows.load(Relaxed),
+            self.skip_totals.windows.load(Relaxed),
+            self.skip_totals.total_windows.load(Relaxed),
+        ))
     }
 
     fn name(&self) -> &'static str {

@@ -37,6 +37,14 @@ pub struct Metrics {
     pub requests_done: u64,
     pub batches_done: u64,
     pub sim_cycles_total: u64,
+    /// Cumulative zero-activation skip counters from skip-armed SAC
+    /// backends (`InferBackend::skip_counters`): rows and conv windows
+    /// whose SAC work the executor elided, and the total window count
+    /// they are measured against. All zero while no skip-armed model
+    /// has served a batch.
+    pub skipped_rows_total: u64,
+    pub skipped_windows_total: u64,
+    pub total_windows: u64,
     /// Per-request wall-clock latencies in µs — the exact-percentile
     /// source; a uniform reservoir once [`LATENCY_SAMPLE_CAP`] is hit.
     latencies_us: Vec<f64>,
@@ -63,6 +71,9 @@ impl Metrics {
             requests_done: 0,
             batches_done: 0,
             sim_cycles_total: 0,
+            skipped_rows_total: 0,
+            skipped_windows_total: 0,
+            total_windows: 0,
             latencies_us: Vec::new(),
             latency_seen: 0,
             reservoir_rng: 0x9E37_79B9_7F4A_7C15,
@@ -78,6 +89,27 @@ impl Metrics {
         for &l in latencies_us {
             self.latency.record_us(l);
             self.record_latency_sample(l);
+        }
+    }
+
+    /// Install the latest cumulative skip counters from a skip-armed
+    /// backend. The counters arrive as engine-wide running totals
+    /// (every `SacBackend` clone shares one atomic set), so this
+    /// overwrites rather than accumulates — recording after each batch
+    /// keeps the snapshot fresh without double counting.
+    pub fn set_skip_counters(&mut self, rows: u64, windows: u64, total_windows: u64) {
+        self.skipped_rows_total = self.skipped_rows_total.max(rows);
+        self.skipped_windows_total = self.skipped_windows_total.max(windows);
+        self.total_windows = self.total_windows.max(total_windows);
+    }
+
+    /// Fraction of conv windows served with their SAC work skipped
+    /// (0.0 before any skip-armed batch completes).
+    pub fn window_skip_fraction(&self) -> f64 {
+        if self.total_windows == 0 {
+            0.0
+        } else {
+            self.skipped_windows_total as f64 / self.total_windows as f64
         }
     }
 
@@ -171,11 +203,22 @@ impl Metrics {
             }
             None => "latency: no completed requests".into(),
         };
+        let skip = if self.total_windows > 0 {
+            format!(
+                "\nactivation skip: rows={} windows={}/{} ({:.1}%)",
+                self.skipped_rows_total,
+                self.skipped_windows_total,
+                self.total_windows,
+                self.window_skip_fraction() * 100.0,
+            )
+        } else {
+            String::new()
+        };
         format!(
             "requests: {}  batches: {}  mean batch: {:.2}\n\
              {pct}\n\
              host throughput: {:.1} req/s\n\
-             simulated Tetris cycles: {} ({:.3} ms @125MHz)",
+             simulated Tetris cycles: {} ({:.3} ms @125MHz){skip}",
             self.requests_done,
             self.batches_done,
             self.batch_sizes.mean(),
@@ -223,6 +266,22 @@ mod tests {
         assert_eq!(m.latency_observed(), 100);
         assert!(m.render().contains("p95"));
         assert!(!m.render().contains("~estimated"));
+    }
+
+    #[test]
+    fn skip_counters_snapshot_running_totals() {
+        let mut m = Metrics::new();
+        assert_eq!(m.window_skip_fraction(), 0.0);
+        assert!(!m.render().contains("activation skip"));
+        // Counters arrive as engine-wide running totals: a later,
+        // larger snapshot replaces the earlier one.
+        m.set_skip_counters(5, 100, 1_000);
+        m.set_skip_counters(8, 150, 2_000);
+        assert_eq!(m.skipped_rows_total, 8);
+        assert_eq!(m.skipped_windows_total, 150);
+        assert_eq!(m.total_windows, 2_000);
+        assert!((m.window_skip_fraction() - 0.075).abs() < 1e-12);
+        assert!(m.render().contains("activation skip"), "{}", m.render());
     }
 
     #[test]

@@ -60,6 +60,7 @@ pub struct EngineBuilder {
     policy: BatchPolicy,
     ks: usize,
     auto_tune: bool,
+    skip_zero_activations: bool,
     artifacts_dir: PathBuf,
     specs: Vec<ModelSpec>,
 }
@@ -81,6 +82,7 @@ impl EngineBuilder {
             policy: BatchPolicy::default(),
             ks: PIPELINE_KS,
             auto_tune: true,
+            skip_zero_activations: false,
             artifacts_dir: PathBuf::from("artifacts"),
             specs: Vec::new(),
         }
@@ -163,6 +165,18 @@ impl EngineBuilder {
         self
     }
 
+    /// Activation-aware SAC skipping (default **off**): every
+    /// registered plan executes with the zero-activation skip lane
+    /// armed — all-zero post-ReLU input rows/windows skip their SAC
+    /// walk and are counted in the serving skip metrics
+    /// ([`InferSession::metrics`](super::InferSession::metrics)).
+    /// Bit-exact by construction (DESIGN.md §Activation skipping):
+    /// logits never change, only cycles and counters do.
+    pub fn skip_zero_activations(mut self, enabled: bool) -> Self {
+        self.skip_zero_activations = enabled;
+        self
+    }
+
     /// Artifacts directory for [`BackendKind::Pjrt`] (default
     /// `artifacts`).
     pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Self {
@@ -225,6 +239,7 @@ impl EngineBuilder {
                         workers,
                         self.walk,
                         self.auto_tune,
+                        self.skip_zero_activations,
                     )?;
                     lanes.push(ModelLane { factory });
                     metas.push(meta);

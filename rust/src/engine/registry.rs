@@ -146,12 +146,17 @@ pub(crate) fn compile_sac(
     workers: usize,
     walk: Option<Walk>,
     auto_tune: bool,
+    skip_zero_activations: bool,
 ) -> crate::Result<(ModelMeta, BackendFactory)> {
     let ModelSpec { name, network, weights } = spec;
     let mode = weights.mode;
     let mut plan = CompiledNetwork::compile(&network, &weights, ks, mode)?;
     let tuned = tune::tune_pinned(&plan, budget_bytes, workers, walk, tile_rows, auto_tune);
     tuned.apply(&mut plan);
+    // A scheduling default like walk_hint/tile_rows: callers of
+    // `execute` get the skip lane without threading ExecOpts, and an
+    // explicit ExecOpts::skip_zero_activations still overrides.
+    plan.skip_zero_activations = skip_zero_activations;
     // Timing from the registered weights' bit statistics, so serving
     // metrics report the paper's accelerator rather than the host.
     let cfg = AccelConfig { ks, mode, ..AccelConfig::default() };

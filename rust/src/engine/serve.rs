@@ -314,6 +314,10 @@ pub(crate) fn run_batch<B: InferBackend + ?Sized>(
             batch_size: n,
         }));
     }
-    metrics.lock().unwrap().record_batch(n, &latencies, sim_cycles);
+    let mut m = metrics.lock().unwrap();
+    m.record_batch(n, &latencies, sim_cycles);
+    if let Some((rows, windows, total)) = backend.skip_counters() {
+        m.set_skip_counters(rows, windows, total);
+    }
     Ok(())
 }

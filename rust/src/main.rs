@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! tetris report <table1|fig1|fig2|fig8|fig9|fig10|fig11|table2|all> [--csv-dir D]
-//! tetris simulate --network vgg16 --accel tetris --mode fp16 --ks 16 [--schedule]
+//! tetris simulate --network vgg16 --accel tetris --mode fp16 --ks 16 [--activations] [--schedule]
 //! tetris tune     --network vgg16 --budget-mb 1 --workers 2 [--measure]
 //! tetris knead    --network alexnet --ks 16 --mode fp16
 //! tetris serve    --requests 64 --max-batch 8 --workers 2 --network vgg16
@@ -66,6 +66,7 @@ fn run() -> Result<(), String> {
                 .opt("ks", "16", "kneading stride")
                 .opt("seed", "0x7e7215", "random seed")
                 .flag("include-fc", "also simulate the declared FC heads (VGG fc6-8, GoogleNet loss3)")
+                .flag("activations", "measure the post-ReLU activation profile on a traced scaled copy and report dense vs tetris vs tetris+skip cycles")
                 .flag("schedule", "also print the auto-tuner's schedule line (walk, tile, predicted peak) for this network under the process budget")
                 .parse_env(2)?;
             let net = zoo::by_name(args.get("network")).map_err(|e| e.to_string())?;
@@ -79,6 +80,7 @@ fn run() -> Result<(), String> {
                 &cfg,
                 seed,
                 args.get_bool("include-fc"),
+                args.get_bool("activations"),
             )
             .map_err(|e| e.to_string())?;
             println!("{rep}");

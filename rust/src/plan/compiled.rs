@@ -90,6 +90,13 @@ pub struct CompiledNetwork {
     /// whole-network streaming. `None` leaves the executor's
     /// batch-vs-workers policy in charge.
     pub walk_hint: Option<Walk>,
+    /// Default for the activation-aware skip lane, consulted by
+    /// `execute` when `ExecOpts::skip_zero_activations` is `None`
+    /// (set by `EngineBuilder::skip_zero_activations`). Off by
+    /// default — the lane is bit-exact (I5) but adds mask upkeep to
+    /// every walk. Like `walk_hint`/`tile_rows` this is a scheduling
+    /// knob, not plan identity: it stays out of [`Self::fingerprint`].
+    pub skip_zero_activations: bool,
     pub mode: Mode,
     /// Kneading stride the lanes were compiled with. Values are
     /// invariant to KS (SAC ≡ MAC for any stride); KS only moves the
@@ -194,6 +201,7 @@ impl CompiledNetwork {
             declared_in,
             tile_rows: DEFAULT_TILE_ROWS,
             walk_hint: None,
+            skip_zero_activations: false,
             mode,
             ks,
             kneads_at_build,

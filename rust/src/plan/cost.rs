@@ -103,12 +103,13 @@ pub struct CostModel<'a> {
     plan: &'a CompiledNetwork,
     workers: usize,
     compute_cycles: u64,
+    sparsity_survival: Option<f64>,
 }
 
 impl<'a> CostModel<'a> {
     /// Model `plan` at `workers` concurrent workers (clamped to ≥ 1).
     pub fn new(plan: &'a CompiledNetwork, workers: usize) -> Self {
-        Self { plan, workers: workers.max(1), compute_cycles: 0 }
+        Self { plan, workers: workers.max(1), compute_cycles: 0, sparsity_survival: None }
     }
 
     /// Attach the simulated per-image SAC cycle count (the compute
@@ -116,6 +117,22 @@ impl<'a> CostModel<'a> {
     /// within one model, where the compute leg is walk-invariant.
     pub fn with_compute_cycles(mut self, cycles: u64) -> Self {
         self.compute_cycles = cycles;
+        self
+    }
+
+    /// Attach a **measured** activation-sparsity survival fraction —
+    /// the fraction of conv windows the skip lane actually executes
+    /// (`1 − AllocStats::window_skip_fraction()`, captured from a
+    /// traced run with `ExecOpts::skip_zero_activations` on). The
+    /// compute leg is scaled by it, so the roofline can price the
+    /// activation-skipping lane: a plan that skips 40% of its windows
+    /// scores `max(0.6 × compute, traffic)`. Clamped to `[0, 1]`;
+    /// traffic and peak legs are unchanged (skipped windows still move
+    /// their input rows — the masks only gate SAC work). Like the
+    /// compute leg itself, the survival fraction is walk-invariant:
+    /// the walks visit the same windows over the same activations.
+    pub fn with_measured_sparsity(mut self, survival: f64) -> Self {
+        self.sparsity_survival = Some(survival.clamp(0.0, 1.0));
         self
     }
 
@@ -130,14 +147,11 @@ impl<'a> CostModel<'a> {
             Walk::Pipelined => self.plan.pipelined_peak_bytes_estimate(tile_rows, self.workers),
         };
         let (traffic_bytes, halo_rows) = self.traffic(walk, tile_rows)?;
-        Ok(CostEstimate {
-            walk,
-            tile_rows,
-            peak_bytes,
-            traffic_bytes,
-            halo_rows,
-            compute_cycles: self.compute_cycles,
-        })
+        let compute_cycles = match self.sparsity_survival {
+            Some(s) => (self.compute_cycles as f64 * s).round() as u64,
+            None => self.compute_cycles,
+        };
+        Ok(CostEstimate { walk, tile_rows, peak_bytes, traffic_bytes, halo_rows, compute_cycles })
     }
 
     /// Predicted tiled-walk halo-recompute rows **per image** at an
@@ -341,6 +355,31 @@ mod tests {
             pipelined.traffic_bytes,
             streaming.traffic_bytes
         );
+    }
+
+    #[test]
+    fn measured_sparsity_scales_the_compute_leg_only() {
+        let plan = tiny_plan();
+        let dense = CostModel::new(&plan, 1)
+            .with_compute_cycles(1_000_000)
+            .estimate(Walk::Streaming, 2)
+            .unwrap();
+        let sparse = CostModel::new(&plan, 1)
+            .with_compute_cycles(1_000_000)
+            .with_measured_sparsity(0.6)
+            .estimate(Walk::Streaming, 2)
+            .unwrap();
+        assert_eq!(sparse.compute_cycles, 600_000, "compute leg scales by window survival");
+        assert_eq!(sparse.traffic_bytes, dense.traffic_bytes, "traffic leg is mask-invariant");
+        assert_eq!(sparse.peak_bytes, dense.peak_bytes, "peak leg is mask-invariant");
+        // Out-of-range survivals clamp instead of inflating/negating
+        // the compute leg.
+        let clamped = CostModel::new(&plan, 1)
+            .with_compute_cycles(1_000)
+            .with_measured_sparsity(7.5)
+            .estimate(Walk::Streaming, 2)
+            .unwrap();
+        assert_eq!(clamped.compute_cycles, 1_000);
     }
 
     #[test]

@@ -111,6 +111,17 @@ pub struct ExecOpts {
     /// Scheduling only — results are bit-identical for every split
     /// (invariant I5).
     pub arm_threads: Option<usize>,
+    /// Activation-aware SAC skipping: detect all-zero input rows and
+    /// im2col windows in the conv inner loops and skip the SAC work
+    /// (the per-filter splitter/adder walk), writing the zeros the
+    /// arithmetic would have produced. Bit-exact by construction — a
+    /// zero operand contributes nothing to any partial sum, so
+    /// skipping changes cycles and the trace counters
+    /// ([`AllocStats::skipped_windows`]), never logits (invariant I5
+    /// with skipping enabled is property-swept in
+    /// `rust/tests/plan_skip.rs`). `None` falls back to the plan's
+    /// compiled `skip_zero_activations` default.
+    pub skip_zero_activations: Option<bool>,
 }
 
 impl ExecOpts {
@@ -157,6 +168,13 @@ impl ExecOpts {
         self.arm_threads = Some(arm_threads);
         self
     }
+
+    /// Toggle the activation-aware skip lane explicitly (see
+    /// [`ExecOpts::skip_zero_activations`]).
+    pub fn with_skip_zero_activations(mut self, skip: bool) -> Self {
+        self.skip_zero_activations = Some(skip);
+        self
+    }
 }
 
 /// Execution trace for one [`CompiledNetwork::execute_traced`] call:
@@ -177,6 +195,12 @@ pub struct AllocStats {
     current: AtomicU64,
     peak: AtomicU64,
     halo_rows: AtomicU64,
+    skipped_rows: AtomicU64,
+    skipped_windows: AtomicU64,
+    total_windows: AtomicU64,
+    act_zero: AtomicU64,
+    act_total: AtomicU64,
+    act_essential: AtomicU64,
 }
 
 impl AllocStats {
@@ -199,6 +223,112 @@ impl AllocStats {
     pub fn halo_recompute_rows(&self) -> u64 {
         self.halo_rows.load(Ordering::Relaxed)
     }
+
+    /// Conv output rows skipped wholesale because every in-bounds
+    /// input row under them carried an all-zero mask. Always 0 with
+    /// skipping off. Under the tiled walk, halo rows a tile skips are
+    /// counted per tile that visits them — the counter reflects SAC
+    /// work actually avoided, not distinct map rows.
+    pub fn skipped_rows(&self) -> u64 {
+        self.skipped_rows.load(Ordering::Relaxed)
+    }
+
+    /// Conv output windows whose SAC walk (splitter + rear adder tree
+    /// per filter) was skipped; row-level skips count every window in
+    /// the row. Always 0 with skipping off.
+    pub fn skipped_windows(&self) -> u64 {
+        self.skipped_windows.load(Ordering::Relaxed)
+    }
+
+    /// Conv output windows visited in total — the denominator for
+    /// [`Self::window_skip_fraction`], counted whenever the call is
+    /// traced (skipping on or off).
+    pub fn total_windows(&self) -> u64 {
+        self.total_windows.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of conv windows the skip lane eliminated (0.0 when
+    /// nothing was counted).
+    pub fn window_skip_fraction(&self) -> f64 {
+        let total = self.total_windows();
+        if total == 0 {
+            0.0
+        } else {
+            self.skipped_windows() as f64 / total as f64
+        }
+    }
+
+    /// Post-activation values observed at the ReLU seal points (the
+    /// sample size behind the two distribution statistics below).
+    pub fn activation_values(&self) -> u64 {
+        self.act_total.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of post-activation values that are exactly zero — the
+    /// dynamic ineffectual-activation supply (Cnvlutin2's quantity),
+    /// measured on the real streams this execution produced.
+    pub fn activation_zero_fraction(&self) -> f64 {
+        let total = self.act_total.load(Ordering::Relaxed);
+        if total == 0 {
+            0.0
+        } else {
+            self.act_zero.load(Ordering::Relaxed) as f64 / total as f64
+        }
+    }
+
+    /// Mean essential (nonzero) bits per post-activation value, zeros
+    /// included — the operand-width quantity a Laconic-style
+    /// bit-serial activation model charges cycles for.
+    pub fn activation_essential_bits_mean(&self) -> f64 {
+        let total = self.act_total.load(Ordering::Relaxed);
+        if total == 0 {
+            0.0
+        } else {
+            self.act_essential.load(Ordering::Relaxed) as f64 / total as f64
+        }
+    }
+}
+
+/// Activations carry Q8.8 magnitudes; 16 bits bounds every essential
+/// bit position the seal scans may observe.
+const ACT_BITS: u32 = 16;
+
+/// Local accumulator for the post-activation distribution one seal
+/// pass observes (zeros, values, essential bits), flushed to the
+/// shared [`AllocStats`] atomics once per pass.
+#[derive(Default)]
+struct ActTally {
+    zeros: u64,
+    total: u64,
+    essential: u64,
+}
+
+impl ActTally {
+    /// Scan one freshly sealed post-activation row: tally its values
+    /// and return whether the row is all-zero (the row mask bit).
+    fn seal_row(&mut self, row: &[i32]) -> bool {
+        let mut all_zero = true;
+        for &v in row {
+            if v == 0 {
+                self.zeros += 1;
+            } else {
+                all_zero = false;
+                self.essential += u64::from(crate::quant::essential_bits(v, ACT_BITS));
+            }
+        }
+        self.total += row.len() as u64;
+        all_zero
+    }
+
+    fn flush(self, stats: Option<&AllocStats>) {
+        if let Some(s) = stats {
+            if self.total > 0 {
+                s.act_zero.fetch_add(self.zeros, Ordering::Relaxed);
+                s.act_total.fetch_add(self.total, Ordering::Relaxed);
+                s.act_essential.fetch_add(self.essential, Ordering::Relaxed);
+            }
+        }
+    }
 }
 
 /// Per-call execution context threaded through the segment walk.
@@ -212,6 +342,9 @@ struct Ctx<'a> {
     walk: Walk,
     /// Branch-arm concurrency cap ([`ExecOpts::arm_threads`]).
     arm_threads: Option<usize>,
+    /// Activation-aware skip lane on: maintain zero masks at the seal
+    /// points and skip all-zero rows/windows in `conv_rows`.
+    skip: bool,
     stats: Option<&'a AllocStats>,
 }
 
@@ -299,6 +432,7 @@ impl CompiledNetwork {
             adaptive,
             walk,
             arm_threads: opts.arm_threads,
+            skip: opts.skip_zero_activations.unwrap_or(self.skip_zero_activations),
             stats: trace.map(|()| &stats),
         };
         let input = x.clone();
@@ -477,11 +611,18 @@ fn run_fused(
         _ => return Err(crate::Error::Shape("fused segment input must be 4-D".into())),
     };
     let dims = resolve_stage_dims(ctx.plan, stages, c0, h0, w0)?;
+    // One linear scan of the segment's (materialized) input map hands
+    // stage 0 the same row-level zero masks the rings maintain for the
+    // later stages — inter-segment maps are post-ReLU, so all-zero
+    // rows are common and the scan is where tiled/streaming walks earn
+    // their row skips.
+    let zeros = if ctx.skip { ZeroMap::scan(x) } else { None };
+    let zeros = zeros.as_ref();
     match ctx.walk {
         Walk::Streaming | Walk::Pipelined => {
-            run_fused_streaming(ctx, stages, &dims, x, n, workers)
+            run_fused_streaming(ctx, stages, &dims, x, zeros, n, workers)
         }
-        Walk::Tiled => run_fused_tiled(ctx, stages, &dims, x, n, workers),
+        Walk::Tiled => run_fused_tiled(ctx, stages, &dims, x, zeros, n, workers),
     }
 }
 
@@ -491,11 +632,13 @@ fn run_fused(
 /// tile) of the final stage, each recomputing its halo rows. Kept as
 /// the explicit baseline walk; `halo_recompute_rows` counts the
 /// duplicated stage-output rows.
+#[allow(clippy::too_many_arguments)]
 fn run_fused_tiled(
     ctx: &Ctx,
     stages: &[FusedStage],
     dims: &[StageDims],
     x: &Tensor<i32>,
+    zeros: Option<&ZeroMap>,
     n: usize,
     workers: usize,
 ) -> crate::Result<Tensor<i32>> {
@@ -557,7 +700,7 @@ fn run_fused_tiled(
     }
 
     let tiles = par_map_with(workers, &items, |_, &(b, t0, t1)| {
-        run_tile(ctx, stages, dims, x, b, t0, t1)
+        run_tile(ctx, stages, dims, x, zeros, b, t0, t1)
     });
 
     let mut out: Tensor<i32> = Tensor::zeros(&[n, oc, oh, ow]);
@@ -581,11 +724,13 @@ fn run_fused_tiled(
 /// computes exactly those rows — stage 0 reading the input tensor in
 /// place, every later stage reading the previous ring — retiring each
 /// ring as its consumer finishes.
+#[allow(clippy::too_many_arguments)]
 fn run_tile(
     ctx: &Ctx,
     stages: &[FusedStage],
     dims: &[StageDims],
     x: &Tensor<i32>,
+    zeros: Option<&ZeroMap>,
     b: usize,
     t0: usize,
     t1: usize,
@@ -608,7 +753,7 @@ fn run_tile(
         match &st.op {
             PlanOp::Conv { layer, pad, stride } => {
                 let next = {
-                    let src = row_src(&buf, x, b);
+                    let src = row_src(&buf, x, b, zeros);
                     let mut out = RingBuf::span(d.out_c, o0, o1, d.out_w);
                     conv_rows(
                         &ctx.plan.convs[*layer],
@@ -619,6 +764,8 @@ fn run_tile(
                         o0,
                         o1,
                         ctx.plan.mode,
+                        ctx.skip,
+                        ctx.stats,
                         &mut RowTarget::Ring(&mut out),
                     );
                     out
@@ -643,14 +790,30 @@ fn run_tile(
                     buf = Some(seeded);
                 }
                 let r = buf.as_mut().expect("seeded above");
-                // Elementwise: same span, mutate the ring in place.
-                for v in r.data.iter_mut() {
-                    *v = requantize(*v, *frac_bits).max(0);
+                if ctx.skip {
+                    // Requantize row by row so each row can be sealed
+                    // with its zero mask (and tallied) as it finishes.
+                    let mut tally = ActTally::default();
+                    for cc in 0..r.c {
+                        for y in r.y0..r.y1 {
+                            for v in r.row_mut(cc, y) {
+                                *v = requantize(*v, *frac_bits).max(0);
+                            }
+                            let zero = tally.seal_row(r.row(cc, y));
+                            r.seal_zero(cc, y, zero);
+                        }
+                    }
+                    tally.flush(ctx.stats);
+                } else {
+                    // Elementwise: same span, mutate the ring in place.
+                    for v in r.data.iter_mut() {
+                        *v = requantize(*v, *frac_bits).max(0);
+                    }
                 }
             }
             PlanOp::Pool(spec) => {
                 let next = {
-                    let src = row_src(&buf, x, b);
+                    let src = row_src(&buf, x, b, zeros);
                     let mut out = RingBuf::span(d.in_c, o0, o1, d.out_w);
                     pool_rows(*spec, &src, d, o0, o1, &mut RowTarget::Ring(&mut out));
                     out
@@ -676,11 +839,13 @@ fn retire(ctx: &Ctx, buf: &mut Option<RingBuf>, next: RingBuf) {
 /// Rolling-ring streaming: one producer/consumer pipeline per image,
 /// final-stage rows written straight into the output tensor's image
 /// plane. Images stripe across the worker budget.
+#[allow(clippy::too_many_arguments)]
 fn run_fused_streaming(
     ctx: &Ctx,
     stages: &[FusedStage],
     dims: &[StageDims],
     x: &Tensor<i32>,
+    zeros: Option<&ZeroMap>,
     n: usize,
     workers: usize,
 ) -> crate::Result<Tensor<i32>> {
@@ -700,7 +865,7 @@ fn run_fused_streaming(
         out.data_mut()
             .chunks_mut(plane.max(1))
             .enumerate()
-            .map(|(b, p)| stream_image(ctx, stages, dims, x, b, p, step, &caps))
+            .map(|(b, p)| stream_image(ctx, stages, dims, x, zeros, b, p, step, &caps))
             .collect()
     } else {
         // Stripe images across scoped threads; each thread owns its
@@ -720,7 +885,9 @@ fn run_fused_streaming(
                     s.spawn(move || {
                         group
                             .into_iter()
-                            .map(|(b, p)| stream_image(ctx, stages, dims, x, b, p, step, caps))
+                            .map(|(b, p)| {
+                                stream_image(ctx, stages, dims, x, zeros, b, p, step, caps)
+                            })
                             .collect::<Vec<_>>()
                     })
                 })
@@ -816,6 +983,7 @@ fn windowed_stage(
     i: usize,
     x: &Tensor<i32>,
     b: usize,
+    zeros: Option<&ZeroMap>,
     out_plane: &mut [i32],
     d: &StageDims,
     w1: usize,
@@ -824,7 +992,7 @@ fn windowed_stage(
     let mut dst = rings[i].take();
     {
         let src = if i == 0 {
-            RowSrc::Tensor { x, b }
+            RowSrc::Tensor { x, b, zeros }
         } else {
             RowSrc::Ring(rings[owner[i - 1]].as_ref().expect("producer ring"))
         };
@@ -874,6 +1042,7 @@ fn stream_image(
     stages: &[FusedStage],
     dims: &[StageDims],
     x: &Tensor<i32>,
+    zeros: Option<&ZeroMap>,
     b: usize,
     out_plane: &mut [i32],
     step: usize,
@@ -941,24 +1110,46 @@ fn stream_image(
             let d = &dims[i];
             match &st.op {
                 PlanOp::Conv { layer, pad, stride } => {
-                    windowed_stage(&mut rings, &owner, i, x, b, out_plane, d, w1, |src, dst| {
-                        conv_rows(
-                            &ctx.plan.convs[*layer],
-                            src,
-                            d,
-                            *pad,
-                            *stride,
-                            w0,
-                            w1,
-                            ctx.plan.mode,
-                            dst,
-                        )
-                    });
+                    windowed_stage(
+                        &mut rings,
+                        &owner,
+                        i,
+                        x,
+                        b,
+                        zeros,
+                        out_plane,
+                        d,
+                        w1,
+                        |src, dst| {
+                            conv_rows(
+                                &ctx.plan.convs[*layer],
+                                src,
+                                d,
+                                *pad,
+                                *stride,
+                                w0,
+                                w1,
+                                ctx.plan.mode,
+                                ctx.skip,
+                                ctx.stats,
+                                dst,
+                            )
+                        },
+                    );
                 }
                 PlanOp::Pool(spec) => {
-                    windowed_stage(&mut rings, &owner, i, x, b, out_plane, d, w1, |src, dst| {
-                        pool_rows(*spec, src, d, w0, w1, dst)
-                    });
+                    windowed_stage(
+                        &mut rings,
+                        &owner,
+                        i,
+                        x,
+                        b,
+                        zeros,
+                        out_plane,
+                        d,
+                        w1,
+                        |src, dst| pool_rows(*spec, src, d, w0, w1, dst),
+                    );
                 }
                 PlanOp::ReluRequant { frac_bits } => {
                     // Mutate the freshly produced rows of the owner's
@@ -966,12 +1157,19 @@ fn stream_image(
                     // activated in earlier steps and must not be
                     // re-requantized.
                     let o = owner[i];
+                    let mut tally = ActTally::default();
                     if o == sink {
                         for cc in 0..d.in_c {
                             for y in w0..w1 {
                                 let s = (cc * d.in_h + y) * d.in_w;
                                 for v in &mut out_plane[s..s + d.in_w] {
                                     *v = requantize(*v, *frac_bits).max(0);
+                                }
+                                if ctx.skip {
+                                    // The sink plane materializes — its
+                                    // masks come from the next segment's
+                                    // ZeroMap scan; only tally here.
+                                    tally.seal_row(&out_plane[s..s + d.in_w]);
                                 }
                             }
                         }
@@ -982,9 +1180,14 @@ fn stream_image(
                                 for v in r.row_mut(cc, y) {
                                     *v = requantize(*v, *frac_bits).max(0);
                                 }
+                                if ctx.skip {
+                                    let zero = tally.seal_row(r.row(cc, y));
+                                    r.seal_zero(cc, y, zero);
+                                }
                             }
                         }
                     }
+                    tally.flush(ctx.stats);
                 }
                 _ => unreachable!("run_fused validated the stage ops"),
             }
@@ -1441,6 +1644,9 @@ fn run_pipelined(
     }
     let step = if ctx.tile_rows == 0 { h0 } else { ctx.tile_rows.max(1) };
     let pp = build_pipeline(ctx.plan, &segs[..prefix], c0, h0, w0, step)?;
+    // Ring 0 is the input tensor read in place; scan it once so stage
+    // 0's convs get row masks like every ring-fed stage downstream.
+    let zeros = if ctx.skip { ZeroMap::scan(&input) } else { None };
     let (oc, oh, ow) = {
         let sink = &pp.rings[pp.sink];
         (sink.c, sink.h, sink.w)
@@ -1453,7 +1659,7 @@ fn run_pipelined(
         out.data_mut()
             .chunks_mut(plane.max(1))
             .enumerate()
-            .map(|(b, p)| pipeline_image(ctx, &pp, &input, b, p, step))
+            .map(|(b, p)| pipeline_image(ctx, &pp, &input, zeros.as_ref(), b, p, step))
             .collect()
     } else {
         // Stripe images across scoped threads; each thread owns its
@@ -1468,13 +1674,14 @@ fn run_pipelined(
         std::thread::scope(|s| {
             let pp = &pp;
             let input = &input;
+            let zeros = zeros.as_ref();
             let handles: Vec<_> = groups
                 .into_iter()
                 .map(|group| {
                     s.spawn(move || {
                         group
                             .into_iter()
-                            .map(|(b, p)| pipeline_image(ctx, pp, input, b, p, step))
+                            .map(|(b, p)| pipeline_image(ctx, pp, input, zeros, b, p, step))
                             .collect::<Vec<_>>()
                     })
                 })
@@ -1499,10 +1706,12 @@ fn run_pipelined(
 /// slides down its stage's map in lock-step with [`PipeFlow`], halo
 /// rows retained across steps (never recomputed), sink stages writing
 /// the trunk-output plane directly at their concat channel offsets.
+#[allow(clippy::too_many_arguments)]
 fn pipeline_image(
     ctx: &Ctx,
     pp: &PipePlan,
     x: &Tensor<i32>,
+    zeros: Option<&ZeroMap>,
     b: usize,
     out_plane: &mut [i32],
     step: usize,
@@ -1541,7 +1750,7 @@ fn pipeline_image(
             let mut dst = rings[st.dst].take();
             {
                 let src = if st.src == 0 {
-                    RowSrc::Tensor { x, b }
+                    RowSrc::Tensor { x, b, zeros }
                 } else {
                     RowSrc::Ring(rings[st.src].as_ref().expect("upstream ring"))
                 };
@@ -1566,6 +1775,8 @@ fn pipeline_image(
                         w0,
                         w1,
                         ctx.plan.mode,
+                        ctx.skip,
+                        ctx.stats,
                         &mut target,
                     ),
                     PlanOp::Pool(spec) => pool_rows(*spec, &src, d, w0, w1, &mut target),
@@ -1578,12 +1789,17 @@ fn pipeline_image(
             // activated in earlier steps and must not be
             // re-requantized.
             if let Some(frac) = st.relu {
+                let mut tally = ActTally::default();
                 match rings[st.dst].as_mut() {
                     Some(r) => {
                         for cc in 0..d.out_c {
                             for y in w0..w1 {
                                 for v in r.row_mut(st.dst_c0 + cc, y) {
                                     *v = requantize(*v, frac).max(0);
+                                }
+                                if ctx.skip {
+                                    let zero = tally.seal_row(r.row(st.dst_c0 + cc, y));
+                                    r.seal_zero(st.dst_c0 + cc, y, zero);
                                 }
                             }
                         }
@@ -1595,7 +1811,30 @@ fn pipeline_image(
                                 for v in &mut out_plane[s..s + sink_w] {
                                     *v = requantize(*v, frac).max(0);
                                 }
+                                if ctx.skip {
+                                    // The sink plane materializes; its
+                                    // masks come from the tail segment's
+                                    // ZeroMap scan. Tally only.
+                                    tally.seal_row(&out_plane[s..s + sink_w]);
+                                }
                             }
+                        }
+                    }
+                }
+                tally.flush(ctx.stats);
+            } else if ctx.skip {
+                // No fused activation (pool stages, mostly): still seal
+                // the freshly produced ring rows — a pool window over
+                // all-zero post-ReLU rows emits zero, and the scan
+                // grounds every mask in the actual row contents, so
+                // masks survive pool stages and concat channel blocks
+                // by construction. No tally: these values derive from
+                // already-tallied activations.
+                if let Some(r) = rings[st.dst].as_mut() {
+                    for cc in 0..d.out_c {
+                        for y in w0..w1 {
+                            let zero = r.row(st.dst_c0 + cc, y).iter().all(|&v| v == 0);
+                            r.seal_zero(st.dst_c0 + cc, y, zero);
                         }
                     }
                 }
@@ -1642,19 +1881,51 @@ struct RingBuf {
     /// Produced watermark: rows `[y0, y1)` are live.
     y1: usize,
     data: Vec<i32>,
+    /// Row-level zero masks for the activation-skipping lane, one slot
+    /// per (channel, row-mod-cap) like `data`. Slot value `y + 1`
+    /// means "row y of this channel was sealed all-zero"; anything
+    /// else means "not known zero". Tagging by row id instead of a
+    /// bare bool makes wraparound self-invalidating: when row
+    /// `y + cap` reuses the slot, its stale tag no longer matches, so
+    /// masks never need clearing as the ring slides. A missed or stale
+    /// mask only disables a skip — never a correctness input.
+    zrow: Vec<usize>,
 }
 
 impl RingBuf {
     /// Empty rolling ring holding at most `cap` rows at once.
     fn with_capacity(c: usize, cap: usize, w: usize) -> Self {
         debug_assert!(cap > 0);
-        Self { c, w, cap, y0: 0, y1: 0, data: vec![0; c * cap * w] }
+        Self { c, w, cap, y0: 0, y1: 0, data: vec![0; c * cap * w], zrow: vec![0; c * cap] }
     }
 
     /// Fully live span `[y0, y1)` (the tiled walk's buffer shape).
     fn span(c: usize, y0: usize, y1: usize, w: usize) -> Self {
         debug_assert!(y1 > y0, "empty span ring");
-        Self { c, w, cap: y1 - y0, y0, y1, data: vec![0; c * (y1 - y0) * w] }
+        Self {
+            c,
+            w,
+            cap: y1 - y0,
+            y0,
+            y1,
+            data: vec![0; c * (y1 - y0) * w],
+            zrow: vec![0; c * (y1 - y0)],
+        }
+    }
+
+    /// Record whether row `y` of channel `c` is all-zero (sealed at
+    /// the activation points once the row's values are final).
+    #[inline]
+    fn seal_zero(&mut self, c: usize, y: usize, zero: bool) {
+        self.zrow[c * self.cap + y % self.cap] = if zero { y + 1 } else { 0 };
+    }
+
+    /// Whether row `y` of channel `c` was sealed all-zero. `false`
+    /// means unknown — skipping is an optimization, so conservative
+    /// answers are always safe.
+    #[inline]
+    fn row_zero(&self, c: usize, y: usize) -> bool {
+        self.zrow[c * self.cap + y % self.cap] == y + 1
     }
 
     #[inline]
@@ -1725,11 +1996,44 @@ impl RingBuf {
     }
 }
 
+/// Per-(image, channel, row) all-zero flags for a materialized
+/// feature map, scanned once per fused-segment input when activation
+/// skipping is on. Inter-segment maps are post-ReLU (or pools of
+/// post-ReLU rows), so whole zero rows are common; one linear scan
+/// here gives stage-0 convs the same O(channels × kernel rows)
+/// row-band check the rings hand every downstream stage.
+struct ZeroMap {
+    c: usize,
+    h: usize,
+    zero: Vec<bool>,
+}
+
+impl ZeroMap {
+    /// Scan a 4-D NCHW map; `None` for other ranks (a flattened
+    /// classifier tail never feeds a conv stage).
+    fn scan(x: &Tensor<i32>) -> Option<ZeroMap> {
+        let [n, c, h, w] = match *x.shape() {
+            [n, c, h, w] => [n, c, h, w],
+            _ => return None,
+        };
+        let mut zero = vec![false; n * c * h];
+        for (row, flag) in x.data().chunks(w.max(1)).zip(zero.iter_mut()) {
+            *flag = row.iter().all(|&v| v == 0);
+        }
+        Some(ZeroMap { c, h, zero })
+    }
+
+    #[inline]
+    fn row_zero(&self, b: usize, c: usize, y: usize) -> bool {
+        self.zero[(b * self.c + c) * self.h + y]
+    }
+}
+
 /// Where a stage reads its input rows: stage 0 reads straight from
 /// the (already materialized) input tensor — no seed copy — and later
 /// stages read the previous stage's ring.
 enum RowSrc<'a> {
-    Tensor { x: &'a Tensor<i32>, b: usize },
+    Tensor { x: &'a Tensor<i32>, b: usize, zeros: Option<&'a ZeroMap> },
     Ring(&'a RingBuf),
 }
 
@@ -1737,16 +2041,32 @@ impl RowSrc<'_> {
     #[inline]
     fn get(&self, c: usize, y: usize, xx: usize) -> i32 {
         match self {
-            RowSrc::Tensor { x, b } => x.get4(*b, c, y, xx),
+            RowSrc::Tensor { x, b, .. } => x.get4(*b, c, y, xx),
             RowSrc::Ring(r) => r.get(c, y, xx),
+        }
+    }
+
+    /// Whether input row `y` of channel `c` is known all-zero (ring
+    /// seal or tensor scan). `false` means unknown, which only costs a
+    /// missed skip.
+    #[inline]
+    fn row_zero(&self, c: usize, y: usize) -> bool {
+        match self {
+            RowSrc::Tensor { b, zeros, .. } => zeros.is_some_and(|z| z.row_zero(*b, c, y)),
+            RowSrc::Ring(r) => r.row_zero(c, y),
         }
     }
 }
 
-fn row_src<'a>(buf: &'a Option<RingBuf>, x: &'a Tensor<i32>, b: usize) -> RowSrc<'a> {
+fn row_src<'a>(
+    buf: &'a Option<RingBuf>,
+    x: &'a Tensor<i32>,
+    b: usize,
+    zeros: Option<&'a ZeroMap>,
+) -> RowSrc<'a> {
     match buf {
         Some(r) => RowSrc::Ring(r),
-        None => RowSrc::Tensor { x, b },
+        None => RowSrc::Tensor { x, b, zeros },
     }
 }
 
@@ -1790,14 +2110,42 @@ fn conv_rows(
     o0: usize,
     o1: usize,
     mode: crate::config::Mode,
+    skip: bool,
+    stats: Option<&AllocStats>,
     out: &mut RowTarget,
 ) {
     let (kh, kw) = (conv.kh, conv.kw);
     let lane_len = conv.lane_len();
     let ow = d.out_w;
+    let nf = conv.lanes.len();
+    // The row-band an output row reads, clipped to the input — the
+    // same contract the tile/streaming walks size halos with.
+    let band = RowContract { k: kh, stride, pad };
     let mut acts = vec![0i32; lane_len];
     let mut segs = SegmentRegisters::new(mode.weight_bits());
+    let (mut skipped_rows, mut skipped_windows) = (0u64, 0u64);
     for oy in o0..o1 {
+        // Row-level skip: if every in-bounds input row under this
+        // output row carries an all-zero mask, every window in the row
+        // is all-zero (the out-of-band taps are padding). Write the
+        // zeros SAC would have produced and move on. Bit-exact by
+        // construction: convs have no bias, `split_kneaded` over an
+        // all-zero window leaves every segment register 0, and
+        // `rear_adder_tree` of zeros is 0 for every filter. The writes
+        // are required — ring slots may hold stale wrapped-around rows.
+        if skip {
+            let (iy0, iy1) = band.in_band(oy, d.in_h);
+            if (iy0..iy1).all(|iy| (0..d.in_c).all(|cc| input.row_zero(cc, iy))) {
+                for f in 0..nf {
+                    for ox in 0..ow {
+                        out.put(f, oy, ox, 0);
+                    }
+                }
+                skipped_rows += 1;
+                skipped_windows += ow as u64;
+                continue;
+            }
+        }
         for ox in 0..ow {
             // Gather the activation window (im2col row) in OIHW weight
             // order: (c, ky, kx) — once, shared by every filter.
@@ -1820,6 +2168,18 @@ fn conv_rows(
                     }
                 }
             }
+            // Window-level skip: the gathered window is all-zero even
+            // though its rows weren't (sparse bands the row masks
+            // can't see). Same bit-exact zero writes, window at a
+            // time — the gather already happened, only the per-filter
+            // SAC walk (the expensive part) is saved.
+            if skip && acts.iter().all(|&a| a == 0) {
+                for f in 0..nf {
+                    out.put(f, oy, ox, 0);
+                }
+                skipped_windows += 1;
+                continue;
+            }
             for (f, klane) in conv.lanes.iter().enumerate() {
                 for (g, group) in klane.groups.iter().enumerate() {
                     let start = g * klane.ks;
@@ -1829,6 +2189,13 @@ fn conv_rows(
                 out.put(f, oy, ox, rear_adder_tree(segs.values()) as i32);
                 segs.reset();
             }
+        }
+    }
+    if let Some(s) = stats {
+        s.total_windows.fetch_add(((o1 - o0) * ow) as u64, Ordering::Relaxed);
+        if skipped_windows > 0 {
+            s.skipped_windows.fetch_add(skipped_windows, Ordering::Relaxed);
+            s.skipped_rows.fetch_add(skipped_rows, Ordering::Relaxed);
         }
     }
 }
@@ -2180,7 +2547,7 @@ mod tests {
         // Stage 0 reads the tensor in place — same values either way.
         let q = pool_to_ring(
             spec,
-            &RowSrc::Tensor { x: &x, b: 0 },
+            &RowSrc::Tensor { x: &x, b: 0, zeros: None },
             &pool_dims(1, 2, 2, spec),
             0,
             1,
@@ -2403,11 +2770,128 @@ mod tests {
         assert_eq!(pipeable_prefix(&plan.schedule), 3);
     }
 
+    // ------------------------------------------- activation skipping
+
+    /// Images whose top ten rows are exactly zero. Convs have no bias
+    /// and ReLU fixes zero, so the band survives every stage of these
+    /// nets — the skip lane gets real all-zero rows to elide at every
+    /// depth, not just at the input.
+    fn zero_banded_batch(n: usize, seed: u64) -> Tensor<i32> {
+        let mut t = Tensor::zeros(&[n, 1, 16, 16]);
+        let mut rng = Rng::new(seed);
+        for (i, v) in t.data_mut().iter_mut().enumerate() {
+            if (i / 16) % 16 >= 10 {
+                *v = rng.range_i64(-400, 400) as i32;
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn ring_buf_zero_flags_invalidate_on_wraparound() {
+        let mut r = RingBuf::with_capacity(1, 3, 2);
+        r.grow_to(3);
+        r.seal_zero(0, 1, true);
+        assert!(r.row_zero(0, 1));
+        assert!(!r.row_zero(0, 0), "unsealed row must read not-known-zero");
+        // Row 4 reuses row 1's slot (4 % 3 == 1): the stale tag no
+        // longer matches the new row id, so the flag self-invalidates
+        // without any explicit clearing as the ring slides.
+        r.retire_below(2);
+        r.grow_to(5);
+        assert!(!r.row_zero(0, 4), "stale zero flag leaked across wraparound");
+        r.seal_zero(0, 4, true);
+        assert!(r.row_zero(0, 4));
+        r.seal_zero(0, 4, false);
+        assert!(!r.row_zero(0, 4), "non-zero seal must clear the flag");
+    }
+
+    #[test]
+    fn all_zero_input_skips_every_conv_window() {
+        let net = tiny_with_overlapping_pools();
+        let w = varied_weights(&net);
+        let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+        let x = Tensor::zeros(&[1, 1, 16, 16]);
+        let (want, off) = plan
+            .execute_traced(&x, ExecOpts::streaming(2).with_skip_zero_activations(false))
+            .unwrap();
+        assert_eq!(off.skipped_windows(), 0, "skip-off must never skip");
+        assert_eq!(off.skipped_rows(), 0);
+        assert!(off.total_windows() > 0, "traced runs count the denominator");
+        for opts in [ExecOpts::tiled(2), ExecOpts::streaming(2), ExecOpts::pipelined(2)] {
+            let (got, on) = plan
+                .execute_traced(&x, opts.with_skip_zero_activations(true))
+                .unwrap();
+            assert_eq!(got, want, "skipping changed all-zero logits");
+            assert_eq!(
+                on.skipped_windows(),
+                on.total_windows(),
+                "an all-zero image must skip every conv window"
+            );
+            assert!((on.window_skip_fraction() - 1.0).abs() < 1e-12);
+            assert!(on.activation_values() > 0, "seal points tallied nothing");
+            assert!((on.activation_zero_fraction() - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn skip_lane_is_bit_exact_across_walks_and_counts_its_work() {
+        let net = tiny_with_overlapping_pools();
+        let w = varied_weights(&net);
+        let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+        let x = zero_banded_batch(2, 19);
+        let want = plan.execute_opts(&x, ExecOpts::materializing()).unwrap();
+        for opts in [
+            ExecOpts::materializing(),
+            ExecOpts::tiled(2).with_workers(2),
+            ExecOpts::streaming(2).with_workers(2),
+            ExecOpts::pipelined(2).with_workers(2),
+        ] {
+            let (got, t) = plan
+                .execute_traced(&x, opts.with_skip_zero_activations(true))
+                .unwrap();
+            assert_eq!(got, want, "skip lane changed logits");
+            assert!(t.skipped_windows() > 0, "zero band produced no skips");
+            assert!(t.skipped_windows() <= t.total_windows());
+            let f = t.window_skip_fraction();
+            assert!(f > 0.0 && f <= 1.0, "skip fraction {f} out of range");
+            assert!(t.activation_values() > 0, "seal points tallied nothing");
+            assert!(t.activation_zero_fraction() > 0.0, "zero band not observed");
+            let eb = t.activation_essential_bits_mean();
+            assert!(eb > 0.0 && eb < ACT_BITS as f64, "essential bits {eb} out of range");
+        }
+    }
+
+    #[test]
+    fn pipelined_masks_survive_pool_and_concat_boundaries() {
+        // tiny_branchy routes the zero band through a pool-led arm, a
+        // two-conv arm, a 1×1 arm, a channel concat, and a trailing
+        // overlapping pool — row masks must survive `RowContract`
+        // composition and the concat's channel-block offsets for the
+        // tail conv to land row-level skips.
+        let net = tiny_branchy();
+        let w = varied_weights(&net);
+        let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+        let x = zero_banded_batch(2, 31);
+        let want = plan.execute_opts(&x, ExecOpts::materializing()).unwrap();
+        let (got, t) = plan
+            .execute_traced(
+                &x,
+                ExecOpts::pipelined(2).with_workers(2).with_skip_zero_activations(true),
+            )
+            .unwrap();
+        assert_eq!(got, want, "pipelined skip lane changed logits");
+        assert!(t.skipped_rows() > 0, "row masks lost crossing branch/pool stages");
+        assert!(t.skipped_windows() >= t.skipped_rows(), "row skips count their windows");
+        assert_eq!(t.halo_recompute_rows(), 0);
+    }
+
     // Plan ≡ scalar-forward equivalence (invariant I5) lives in
     // rust/tests/plan_exec.rs (tiny CNN / VGG block) and
     // rust/tests/plan_topology.rs (full declared-topology zoo); the
     // tile-sweep extension in rust/tests/plan_tiling.rs; the
     // streaming-vs-tiled property sweep and FC-stack logits pins in
     // rust/tests/plan_streaming.rs; zero-rekneading in
-    // plan_zero_knead.rs.
+    // plan_zero_knead.rs; the skip-on ≡ skip-off ≡ reference property
+    // sweep in rust/tests/plan_skip.rs.
 }

@@ -84,6 +84,18 @@ impl RowContract {
         (lo, hi)
     }
 
+    /// The clipped input-row band ONE output row reads — the
+    /// single-row case of [`RowContract::in_span`]. This is the
+    /// row-level zero-mask check of the activation-skipping lane: if
+    /// every row in the band is a known all-zero row, every window
+    /// under output row `o` is all-zero (rows the unclipped window
+    /// reads outside the band are padding and contribute zeros
+    /// regardless), so the whole row's SAC work can be skipped
+    /// bit-exactly.
+    pub fn in_band(&self, o: usize, in_h: usize) -> (usize, usize) {
+        self.in_span(o, o + 1, in_h)
+    }
+
     /// The forward dual of [`RowContract::in_span`] — the per-stage
     /// `rows_ready → rows_emitted` advance function the streaming
     /// pipeline chains through a fused segment: given that the first

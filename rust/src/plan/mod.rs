@@ -39,7 +39,13 @@
 //!   never materializes, `Branch` arms run concurrently under
 //!   `util::pool::split_budget` slices, compiled FC stacks execute
 //!   through a flatten stage + per-name lanes, and output order is
-//!   deterministic for any tile height, budget and walk.
+//!   deterministic for any tile height, budget and walk. All three
+//!   walks optionally run the **activation-aware skip lane**
+//!   (`ExecOpts::skip_zero_activations`): row-level zero masks sealed
+//!   at the ReLU points ride the rings (and one scan per materialized
+//!   segment input) so all-zero rows/windows skip their SAC walk —
+//!   bit-exact (I5), with skip counters and the measured
+//!   post-activation distribution in [`AllocStats`].
 //! * [`cost`] — the roofline-style analytical cost model behind the
 //!   auto-tuner: per-candidate predicted peak bytes (the plan's
 //!   walk-matched estimators), DRAM-equivalent traffic (boundary maps

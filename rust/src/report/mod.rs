@@ -61,16 +61,32 @@ pub fn run(which: &str, seed: u64, csv_dir: Option<&std::path::Path>) -> crate::
 /// (`Network::total_macs`) visible next to the full-model totals;
 /// without the flag the accounting stays conv-only, matching the
 /// paper's evaluation.
+///
+/// With `activations`, one traced image runs through a channel-scaled
+/// copy with the executor's zero-activation skip lane armed
+/// ([`measure_activation_profile`](crate::sim::activation)), and the
+/// report appends the measured post-ReLU profile plus the three-way
+/// cycle comparison — dense baseline (DaDN) vs Tetris vs Tetris with
+/// activation skipping — and the Laconic essential-bit bound. The
+/// comparison simulates the same layer set as the main table, so
+/// `--include-fc --activations` applies the activation model to the
+/// FC heads too.
 pub fn simulate_one(
     net: &Network,
     accel: &str,
     cfg: &AccelConfig,
     seed: u64,
     include_fc: bool,
+    activations: bool,
 ) -> crate::Result<String> {
     let calib = CalibConfig::default();
     let a = accel_by_name(accel)?;
     let conv_layers = net.layers.len();
+    let profile = if activations {
+        Some(crate::sim::activation::measure_activation_profile(net, cfg, seed)?)
+    } else {
+        None
+    };
     let sim_net = if include_fc {
         let mut layers = net.layers.clone();
         layers.extend(net.fc_as_conv_layers());
@@ -135,6 +151,40 @@ pub fn simulate_one(
         ]);
     }
     out.push_str(&table.render());
+    if let Some(p) = profile {
+        use crate::sim::activation::{TetrisSkipSim, ACT_OPERAND_BITS};
+        use crate::sim::dadn::DadnSim;
+        writeln!(
+            out,
+            "\nactivation profile (1 traced image, channel-scaled copy): zeros={:.1}% \
+             window-skip={:.1}% essential-bits={:.2}/{} skipped rows={} windows={}/{}",
+            p.zero_fraction * 100.0,
+            p.window_skip_fraction * 100.0,
+            p.essential_bits_mean,
+            ACT_OPERAND_BITS,
+            p.skipped_rows,
+            p.skipped_windows,
+            p.total_windows,
+        )
+        .ok();
+        let dense = simulate_network(&DadnSim, net, cfg, &calib, seed)?.total_cycles();
+        let tet = simulate_network(&TetrisSim, net, cfg, &calib, seed)?.total_cycles();
+        let skip = simulate_network(&TetrisSkipSim { profile: p }, net, cfg, &calib, seed)?
+            .total_cycles();
+        let speed = |c: u64| dense as f64 / c.max(1) as f64;
+        let mut cmp = fmt::Table::new(&["model", "cycles", "speedup vs dense"]);
+        cmp.row(&["dense (dadn)".into(), dense.to_string(), "1.00x".into()]);
+        cmp.row(&["tetris".into(), tet.to_string(), format!("{:.2}x", speed(tet))]);
+        cmp.row(&["tetris+skip".into(), skip.to_string(), format!("{:.2}x", speed(skip))]);
+        out.push_str(&cmp.render());
+        writeln!(
+            out,
+            "laconic essential-bit bound: {} cycles (dense x {:.3}; optimistic, not gated)",
+            p.laconic_bound_cycles(dense),
+            p.essential_bits_mean / ACT_OPERAND_BITS,
+        )
+        .ok();
+    }
     Ok(out)
 }
 
@@ -249,6 +299,7 @@ pub fn tune_report(
             workers: Some(workers),
             walk: tuned.walk,
             arm_threads: tuned.arm_threads,
+            skip_zero_activations: None,
         };
         let (_, stats) = plan.execute_traced(&x, opts)?;
         writeln!(

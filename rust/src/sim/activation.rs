@@ -1,0 +1,238 @@
+//! Activation-aware timing: measured post-ReLU sparsity feeding the
+//! Tetris cycle model.
+//!
+//! The related work (Cnvlutin2, Laconic) shows that the bigger prize
+//! beyond static weight sparsity is *dynamic* activation sparsity —
+//! post-ReLU feature maps are mostly zeros, and an accelerator that
+//! skips ineffectual activation operands (or processes only their
+//! essential bits) wins cycles the weight-kneading side cannot see.
+//! Our plan executor observes the real activation streams of every
+//! walk, so this module closes the loop:
+//!
+//! 1. [`measure_activation_profile`] runs one traced image through a
+//!    channel-scaled copy of the network with the executor's
+//!    zero-activation skip lane armed
+//!    (`ExecOpts::skip_zero_activations`) and reads the measured
+//!    distribution out of `AllocStats` — the fraction of activation
+//!    values that are exactly zero, the fraction of conv windows whose
+//!    operands were *all* zero (what the executor's window skip
+//!    actually elides), and the mean essential-bit count of the
+//!    surviving values (Laconic's operand cost).
+//! 2. [`TetrisSkipSim`] is the Tetris timing model with that profile
+//!    applied: zero operands are squashed before the splitter array
+//!    (compute scales by value survival), wholly-zero windows never
+//!    drain the rear tree, and zero activation words are never
+//!    fetched. `profile = dense` (no zeros) reproduces [`TetrisSim`]
+//!    exactly.
+//!
+//! `tetris simulate --activations` reports the three-way comparison —
+//! dense baseline (DaDN) vs Tetris vs Tetris+skip — plus the Laconic
+//! essential-bit lower bound, per zoo model.
+
+use super::sample::LayerSample;
+use super::tetris::{simulate_layer_core, TetrisSim};
+use super::{Accelerator, LayerSim};
+use crate::config::{AccelConfig, CalibConfig};
+use crate::model::weights::{synthetic_loaded_with_heads, DensityCalibration};
+use crate::model::{ConvLayer, Network, Tensor};
+use crate::plan::{CompiledNetwork, ExecOpts};
+use crate::util::rng::Rng;
+
+/// Activation operand width the essential-bit accounting is measured
+/// against: Q8.8 fixed-point activations occupy 16-bit operands, the
+/// same width `plan::exec`'s `ACT_BITS` tallies with.
+pub const ACT_OPERAND_BITS: f64 = 16.0;
+
+/// Channel divisor for the profile-capture copy: sparsity fractions
+/// are ratios, so they transfer from a thin copy to the full-width
+/// model, and a ÷16 copy keeps one traced image cheap even for VGG.
+const PROFILE_CHANNEL_DIV: usize = 16;
+
+/// Input extent cap for the profile-capture copy (declared extents
+/// below the cap are kept).
+const PROFILE_MAX_HW: usize = 64;
+
+/// Measured post-activation distribution of one network, captured from
+/// a traced plan execution with the skip lane armed.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ActivationProfile {
+    /// Fraction of post-activation values that are exactly zero.
+    pub zero_fraction: f64,
+    /// Fraction of conv windows skipped outright (every operand of
+    /// every input channel zero) — what the executor's skip lane
+    /// actually elides.
+    pub window_skip_fraction: f64,
+    /// Mean essential bits per activation value (zeros included), out
+    /// of [`ACT_OPERAND_BITS`].
+    pub essential_bits_mean: f64,
+    /// Raw trace counters behind the fractions, for display.
+    pub skipped_rows: u64,
+    pub skipped_windows: u64,
+    pub total_windows: u64,
+}
+
+impl ActivationProfile {
+    /// A profile with no zeros at all — [`TetrisSkipSim`] under it is
+    /// cycle-identical to [`TetrisSim`].
+    pub fn dense() -> Self {
+        Self { essential_bits_mean: ACT_OPERAND_BITS, ..Self::default() }
+    }
+
+    /// Fraction of activation values the skip machinery must still
+    /// process (`1 − zero_fraction`).
+    pub fn value_survival(&self) -> f64 {
+        (1.0 - self.zero_fraction).clamp(0.0, 1.0)
+    }
+
+    /// Fraction of conv windows that actually execute
+    /// (`1 − window_skip_fraction`).
+    pub fn window_survival(&self) -> f64 {
+        (1.0 - self.window_skip_fraction).clamp(0.0, 1.0)
+    }
+
+    /// Laconic-style essential-bit lower bound on a cycle count: an
+    /// activation-bit-serial machine processes only the essential bits
+    /// of each operand, so its best case is the dense count scaled by
+    /// `essential_bits_mean / ACT_OPERAND_BITS`. An optimistic bound
+    /// (it assumes perfect lane balance), printed for context next to
+    /// the three-way comparison, never a gating metric.
+    pub fn laconic_bound_cycles(&self, dense_cycles: u64) -> u64 {
+        let f = (self.essential_bits_mean / ACT_OPERAND_BITS).clamp(0.0, 1.0);
+        (dense_cycles as f64 * f).ceil() as u64
+    }
+}
+
+/// The Tetris timing model with a measured [`ActivationProfile`]
+/// applied — see the module docs for exactly which legs scale. Not
+/// constructible via `accel_by_name` (it needs a profile); `tetris
+/// simulate --activations` and the hotpath bench build it from
+/// [`measure_activation_profile`].
+pub struct TetrisSkipSim {
+    pub profile: ActivationProfile,
+}
+
+impl Accelerator for TetrisSkipSim {
+    fn name(&self) -> &'static str {
+        "tetris+skip"
+    }
+
+    fn simulate_layer(
+        &self,
+        layer: &ConvLayer,
+        sample: &LayerSample,
+        cfg: &AccelConfig,
+        calib: &CalibConfig,
+    ) -> LayerSim {
+        simulate_layer_core(layer, sample, cfg, calib, Some(&self.profile))
+    }
+}
+
+/// Capture a network's post-activation distribution by executing one
+/// traced image through a channel-scaled copy with the skip lane
+/// armed.
+///
+/// The copy compiles with the same synthetic calibrated weights the
+/// reports use, and the input image is signed noise so ReLU produces
+/// a realistic zero population. Ratios (not absolute counts) feed the
+/// timing model, so the thin copy stands in for the full-width
+/// network; the raw counters are kept for display only.
+pub fn measure_activation_profile(
+    net: &Network,
+    cfg: &AccelConfig,
+    seed: u64,
+) -> crate::Result<ActivationProfile> {
+    let hw = net.layers[0].in_hw.min(PROFILE_MAX_HW);
+    let prof_net = net.scaled(PROFILE_CHANNEL_DIV, hw);
+    let weights = synthetic_loaded_with_heads(
+        &prof_net,
+        cfg.mode,
+        12,
+        &prof_net.name,
+        DensityCalibration::Fig2,
+        seed,
+    )?;
+    let plan = CompiledNetwork::compile(&prof_net, &weights, cfg.ks, cfg.mode)?;
+    let mut rng = Rng::new(seed ^ 0xAC71_0000);
+    let mut x = Tensor::zeros(&[1, prof_net.layers[0].in_c, hw, hw]);
+    for v in x.data_mut() {
+        *v = rng.range_i64(-400, 400) as i32;
+    }
+    let opts = ExecOpts { skip_zero_activations: Some(true), ..ExecOpts::default() };
+    let (_, stats) = plan.execute_traced(&x, opts)?;
+    Ok(ActivationProfile {
+        zero_fraction: stats.activation_zero_fraction(),
+        window_skip_fraction: stats.window_skip_fraction(),
+        essential_bits_mean: stats.activation_essential_bits_mean(),
+        skipped_rows: stats.skipped_rows(),
+        skipped_windows: stats.skipped_windows(),
+        total_windows: stats.total_windows(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Mode;
+    use crate::model::zoo;
+    use crate::sim::sample::sample_network;
+    use crate::sim::simulate_network;
+
+    #[test]
+    fn measured_profile_is_sane_and_sees_relu_zeros() {
+        let net = zoo::alexnet();
+        let cfg = AccelConfig::default();
+        let p = measure_activation_profile(&net, &cfg, 7).unwrap();
+        assert!((0.0..=1.0).contains(&p.zero_fraction), "{p:?}");
+        assert!((0.0..=1.0).contains(&p.window_skip_fraction), "{p:?}");
+        assert!((0.0..=ACT_OPERAND_BITS).contains(&p.essential_bits_mean), "{p:?}");
+        assert!(p.total_windows > 0, "{p:?}");
+        // Signed noise through ReLU must leave a real zero population.
+        assert!(p.zero_fraction > 0.05, "post-ReLU zeros missing: {p:?}");
+        // Zeros carry no essential bits, so the mean must sit strictly
+        // below the full operand width.
+        assert!(p.essential_bits_mean < ACT_OPERAND_BITS, "{p:?}");
+    }
+
+    #[test]
+    fn skip_model_strictly_beats_dense_tetris_when_zeros_exist() {
+        let net = zoo::alexnet();
+        let cfg = AccelConfig::default();
+        let calib = CalibConfig::default();
+        let profile = ActivationProfile {
+            zero_fraction: 0.45,
+            window_skip_fraction: 0.10,
+            essential_bits_mean: 4.0,
+            ..ActivationProfile::default()
+        };
+        let dense = simulate_network(&TetrisSim, &net, &cfg, &calib, 3).unwrap();
+        let skip = simulate_network(&TetrisSkipSim { profile }, &net, &cfg, &calib, 3).unwrap();
+        assert!(
+            skip.total_cycles() < dense.total_cycles(),
+            "skip {} !< dense {}",
+            skip.total_cycles(),
+            dense.total_cycles()
+        );
+    }
+
+    #[test]
+    fn dense_profile_reproduces_tetris_exactly() {
+        let net = zoo::alexnet();
+        let cfg = AccelConfig::default();
+        let calib = CalibConfig::default();
+        let samples = sample_network(&net, Mode::Fp16, 5).unwrap();
+        let skip = TetrisSkipSim { profile: ActivationProfile::dense() };
+        for (i, l) in net.layers.iter().enumerate() {
+            let a = TetrisSim.simulate_layer(l, &samples[i], &cfg, &calib);
+            let b = skip.simulate_layer(l, &samples[i], &cfg, &calib);
+            assert_eq!(a.cycles, b.cycles, "layer {}", l.name);
+            assert_eq!(a.activity, b.activity, "layer {}", l.name);
+        }
+    }
+
+    #[test]
+    fn laconic_bound_scales_by_essential_fraction() {
+        let p = ActivationProfile { essential_bits_mean: 4.0, ..ActivationProfile::default() };
+        assert_eq!(p.laconic_bound_cycles(1600), 400);
+        assert_eq!(ActivationProfile::dense().laconic_bound_cycles(1600), 1600);
+    }
+}

@@ -21,6 +21,7 @@
 //!   eDRAM bandwidth model (`edram`), and fixed pipeline overheads are
 //!   charged per layer.
 
+pub mod activation;
 pub mod dadn;
 pub mod edram;
 pub mod pra;

@@ -8,6 +8,7 @@
 //! (weights are reused at every output position, so each filter's
 //! kneaded stream length is exact).
 
+use super::activation::ActivationProfile;
 use super::edram::{memory_cycles, Traffic};
 use super::{Accelerator, ChipActivity, LayerSample, LayerSim};
 use crate::config::{AccelConfig, CalibConfig, Mode};
@@ -45,6 +46,91 @@ pub fn measure_kneading(sample: &LayerSample, ks: usize) -> KneadMeasure {
     }
 }
 
+/// Shared cycle/activity core behind [`TetrisSim`] and the
+/// activation-aware [`TetrisSkipSim`](super::activation::TetrisSkipSim):
+/// with `profile = None` every conv window streams its kneaded weights
+/// (the paper's dense-activation machine); with a measured
+/// [`ActivationProfile`], kneaded weights paired with a zero
+/// activation operand are squashed at the throttle buffer
+/// (Cnvlutin2-style — compute and segment-adder activity scale by the
+/// activation **value** survival fraction, which subsumes the
+/// executor's coarser all-zero-window skip), whole skipped windows
+/// additionally never drain the rear adder tree (tree activity scales
+/// by the **window** survival fraction), and zero activation words are
+/// never fetched (the activation traffic leg scales by the value
+/// survival fraction). Weight traffic is left dense — the kneaded
+/// stream prefetches per output row regardless of which windows in
+/// the row survive.
+pub(crate) fn simulate_layer_core(
+    layer: &ConvLayer,
+    sample: &LayerSample,
+    cfg: &AccelConfig,
+    calib: &CalibConfig,
+    profile: Option<&ActivationProfile>,
+) -> LayerSim {
+    assert_eq!(sample.mode, cfg.mode, "sample precision != config mode");
+    let m = measure_kneading(sample, cfg.ks);
+    let out_pix = (layer.out_hw() * layer.out_hw()) as f64;
+    let filters = layer.out_c as f64;
+    let window_survival = profile.map_or(1.0, ActivationProfile::window_survival);
+    let act_survival = profile.map_or(1.0, ActivationProfile::value_survival);
+
+    // Total kneaded weights the splitter array must consume — slots
+    // whose activation operand is zero are squashed before the
+    // splitters ever see them.
+    let total_kneaded = m.mean_kneaded_per_lane * filters * out_pix * act_survival;
+    let throughput = cfg.kneaded_throughput() as f64;
+    let mut compute = (total_kneaded / throughput).ceil();
+    if cfg.mode == Mode::Int8 {
+        // Halved splitters double kneaded-weight intake but double
+        // the activation-window port pressure on the throttle
+        // buffer — the measured gap to "2× in theory" (§III.C.3).
+        compute /= calib.timing.int8_supply_derate;
+    }
+    let compute = compute as u64;
+
+    // Memory: the kneaded stream is wider than raw weights — each
+    // kneaded weight stores (1 + ⌈log2 KS⌉) bits per slot — and the
+    // 5 KB throttle buffer cannot hold whole kneaded filters, so the
+    // stream re-fetches from eDRAM once per output *row* (DaDN's
+    // per-PE synapse eDRAM holds raw weights resident instead; the
+    // asymmetry is the cost of the pointer metadata).
+    let slot_bits = (1 + cfg.pointer_bits()) as f64;
+    let kneaded_words_per_lane =
+        m.mean_kneaded_per_lane * (cfg.mode.weight_bits() as f64 * slot_bits / 16.0);
+    let traffic = Traffic {
+        weight_words: kneaded_words_per_lane * filters * layer.out_hw() as f64,
+        act_words: (layer.in_c * layer.in_hw * layer.in_hw) as f64 * act_survival,
+    };
+    let memory = memory_cycles(&traffic, cfg);
+
+    let cycles = compute.max(memory) + calib.timing.pipeline_fill + calib.timing.tree_drain;
+
+    // Activity: splitters decode every surviving slot of every kneaded
+    // weight; segment adders fire once per essential bit of a
+    // surviving slot; the rear tree drains once per surviving lane
+    // (per output pixel per filter — wholly-skipped windows never
+    // drain).
+    let lanes = filters * out_pix;
+    let activity = ChipActivity {
+        adds: m.mean_essential_per_lane * lanes * act_survival,
+        splitter_decodes: total_kneaded * cfg.mode.weight_bits() as f64,
+        tree_drains: lanes * window_survival,
+        sram_reads: layer.macs() as f64 * act_survival, // activation operand reads
+        edram_reads: traffic.total(),
+        fifo_ops: total_kneaded, // throttle-buffer pops
+        reg_writes: m.mean_essential_per_lane * lanes * act_survival, // segment regs
+        ..ChipActivity::default()
+    };
+    LayerSim {
+        layer: layer.name.clone(),
+        cycles,
+        macs: layer.macs(),
+        activity,
+        memory_bound: memory > compute,
+    }
+}
+
 impl Accelerator for TetrisSim {
     fn name(&self) -> &'static str {
         "tetris"
@@ -57,62 +143,7 @@ impl Accelerator for TetrisSim {
         cfg: &AccelConfig,
         calib: &CalibConfig,
     ) -> LayerSim {
-        assert_eq!(sample.mode, cfg.mode, "sample precision != config mode");
-        let m = measure_kneading(sample, cfg.ks);
-        let out_pix = (layer.out_hw() * layer.out_hw()) as f64;
-        let filters = layer.out_c as f64;
-
-        // Total kneaded weights the splitter array must consume.
-        let total_kneaded = m.mean_kneaded_per_lane * filters * out_pix;
-        let throughput = cfg.kneaded_throughput() as f64;
-        let mut compute = (total_kneaded / throughput).ceil();
-        if cfg.mode == Mode::Int8 {
-            // Halved splitters double kneaded-weight intake but double
-            // the activation-window port pressure on the throttle
-            // buffer — the measured gap to "2× in theory" (§III.C.3).
-            compute /= calib.timing.int8_supply_derate;
-        }
-        let compute = compute as u64;
-
-        // Memory: the kneaded stream is wider than raw weights — each
-        // kneaded weight stores (1 + ⌈log2 KS⌉) bits per slot — and the
-        // 5 KB throttle buffer cannot hold whole kneaded filters, so the
-        // stream re-fetches from eDRAM once per output *row* (DaDN's
-        // per-PE synapse eDRAM holds raw weights resident instead; the
-        // asymmetry is the cost of the pointer metadata).
-        let slot_bits = (1 + cfg.pointer_bits()) as f64;
-        let kneaded_words_per_lane =
-            m.mean_kneaded_per_lane * (cfg.mode.weight_bits() as f64 * slot_bits / 16.0);
-        let traffic = Traffic {
-            weight_words: kneaded_words_per_lane * filters * layer.out_hw() as f64,
-            act_words: (layer.in_c * layer.in_hw * layer.in_hw) as f64,
-        };
-        let memory = memory_cycles(&traffic, cfg);
-
-        let cycles =
-            compute.max(memory) + calib.timing.pipeline_fill + calib.timing.tree_drain;
-
-        // Activity: splitters decode every slot of every kneaded weight;
-        // segment adders fire once per essential bit; the rear tree
-        // drains once per lane (per output pixel per filter).
-        let lanes = filters * out_pix;
-        let activity = ChipActivity {
-            adds: m.mean_essential_per_lane * lanes,
-            splitter_decodes: total_kneaded * cfg.mode.weight_bits() as f64,
-            tree_drains: lanes,
-            sram_reads: layer.macs() as f64, // activation operand reads
-            edram_reads: traffic.total(),
-            fifo_ops: total_kneaded, // throttle-buffer pops
-            reg_writes: m.mean_essential_per_lane * lanes, // segment regs
-            ..ChipActivity::default()
-        };
-        LayerSim {
-            layer: layer.name.clone(),
-            cycles,
-            macs: layer.macs(),
-            activity,
-            memory_bound: memory > compute,
-        }
+        simulate_layer_core(layer, sample, cfg, calib, None)
     }
 }
 

@@ -547,6 +547,61 @@ fn session_metrics_expose_percentiles() {
     engine.shutdown();
 }
 
+/// ISSUE 8: the builder's `skip_zero_activations` toggle reaches the
+/// compiled plan, the served logits stay bit-exact vs a skip-off
+/// engine (I5 — skipping a zero operand changes cycles, never
+/// logits), and the skip counters surface in
+/// `InferSession::metrics()` alongside the latency percentiles.
+#[test]
+fn skip_armed_engine_is_bit_exact_and_surfaces_counters() {
+    let _serial = SERIAL.lock().unwrap();
+    let w = SacBackend::synthetic_weights(23).unwrap();
+    let mut rng = Rng::new(57);
+    let images: Vec<Tensor<i32>> = (0..8).map(|_| tiny_image(&mut rng)).collect();
+
+    let engine = Engine::builder()
+        .workers(2)
+        .max_batch(4)
+        .max_wait(Duration::from_micros(200))
+        .register("tiny", zoo::tiny_cnn(), w.clone())
+        .build()
+        .unwrap();
+    let want: Vec<Vec<i32>> = engine
+        .session()
+        .infer_batch("tiny", &images)
+        .unwrap()
+        .into_iter()
+        .map(|r| r.logits)
+        .collect();
+    let off = engine.shutdown();
+    assert_eq!(off.total_windows, 0, "skip-off engines must not report skip counters");
+
+    let engine = Engine::builder()
+        .workers(2)
+        .max_batch(4)
+        .max_wait(Duration::from_micros(200))
+        .skip_zero_activations(true)
+        .register("tiny", zoo::tiny_cnn(), w)
+        .build()
+        .unwrap();
+    assert!(
+        engine.models()[0].plan().unwrap().skip_zero_activations,
+        "builder toggle must reach the compiled plan"
+    );
+    let session = engine.session();
+    let responses = session.infer_batch("tiny", &images).unwrap();
+    for (i, resp) in responses.iter().enumerate() {
+        assert_eq!(resp.logits, want[i], "image {i}: skip lane changed the logits");
+    }
+    let m = session.metrics();
+    assert!(m.total_windows > 0, "skip-armed serving must count conv windows");
+    assert!(m.skipped_windows_total <= m.total_windows);
+    assert!((0.0..=1.0).contains(&m.window_skip_fraction()));
+    assert!(m.render().contains("activation skip"), "{}", m.render());
+    assert!(m.latency_percentiles().is_some());
+    engine.shutdown();
+}
+
 /// The PJRT backend kind goes through the same constructor path and
 /// fails fast (typed error) when the runtime is not compiled in —
 /// callers never branch on backend type, even to handle its absence.

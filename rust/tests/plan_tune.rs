@@ -121,6 +121,7 @@ fn cost_model_peak_estimates_bracket_traced_ground_truth_zoo_wide() {
                 workers: Some(workers),
                 walk: Some(walk),
                 arm_threads: None,
+                skip_zero_activations: None,
             };
             let (_, stats) = plan.execute_traced(x, opts).map_err(|e| e.to_string())?;
             let (m, p) = (stats.peak_bytes(), predicted.peak_bytes);
@@ -258,6 +259,7 @@ fn i5_holds_under_tuner_selected_schedules() {
                 workers: Some(2),
                 walk: tuned.walk,
                 arm_threads: tuned.arm_threads,
+                skip_zero_activations: None,
             };
             let got = plan.execute_opts(&x, opts).unwrap();
             assert_eq!(

@@ -35,15 +35,28 @@ tolerance is tight — default 10%):
   * fresh peak  >  baseline peak * 1.10  ->  PEAK REGRESSION (fails)
   * peak metric present only in one side ->  listed, never fails
 
+Activation-skipping gates (ISSUE 8), same both-sides rule but ZERO
+tolerance — skip counters and simulated cycle counts are deterministic
+(fixed seeds, integer arithmetic), so any movement in the bad direction
+is a real regression:
+
+  * metric key ending `_skipped_rows` or `_skipped_windows`:
+      fresh < baseline  ->  SKIP REGRESSION (fails: the lane lost skips)
+  * metric key ending `_sim_cycles`:
+      fresh > baseline  ->  SIM REGRESSION (fails: simulated cycles rose)
+
+Moving the *good* way (more skips, fewer cycles) passes and shows in
+the log — re-promote the baseline to bank the improvement.
+
 Sections and metrics that exist only in the fresh report NEVER fail the
 gate: new benches land before their baseline is re-promoted, and the
 gate must not punish adding coverage.
 
 Exit codes: 0 ok / 1 regressions or missing entries / 2 usage or parse
 errors. Timing gates are inherently noisy — the tolerance is the knob;
-keep it generous (>=0.25) for shared CI runners. Peak-bytes gates are
-NOT noisy (allocation arithmetic is deterministic), hence the separate,
-tight peak tolerance.
+keep it generous (>=0.25) for shared CI runners. Peak-bytes, skip and
+sim-cycle gates are NOT noisy, hence their separate tight/zero
+tolerances.
 """
 
 import argparse
@@ -51,6 +64,8 @@ import json
 import sys
 
 PEAK_SUFFIX = "_peak_bytes"
+SKIP_SUFFIXES = ("_skipped_rows", "_skipped_windows")
+SIM_SUFFIX = "_sim_cycles"
 DEFAULT_PEAK_TOLERANCE = 0.10
 
 
@@ -173,30 +188,65 @@ def main():
         else:
             ok.append(line)
 
-    # Peak-bytes gate: any metric key ending in `_peak_bytes` present
-    # on BOTH sides of an entry gates at peak_tolerance. One-sided
-    # peaks are informational only — new sections/metrics never fail.
-    peak_regressions, peak_ok, peak_new = [], [], []
+    # Deterministic metric gates, keyed by suffix, gating only when a
+    # key is present on BOTH sides of an entry. One-sided metrics are
+    # informational only — new sections/metrics never fail.
+    #   *_peak_bytes      : at most baseline * (1 + peak_tolerance)
+    #   *_skipped_rows /
+    #   *_skipped_windows : at least baseline (exact-or-better)
+    #   *_sim_cycles      : at most baseline (exact-or-better)
+    peak_regressions, peak_ok, metric_new = [], [], []
+    skip_regressions, skip_ok = [], []
+    sim_regressions, sim_ok = [], []
     for name in sorted(set(base_metrics) | set(fresh_metrics)):
         b = base_metrics.get(name, {})
         f = fresh_metrics.get(name, {})
         for key in sorted(set(b) | set(f)):
-            if not key.endswith(PEAK_SUFFIX):
+            if key.endswith(PEAK_SUFFIX):
+                gate = "peak"
+            elif key.endswith(SKIP_SUFFIXES):
+                gate = "skip"
+            elif key.endswith(SIM_SUFFIX):
+                gate = "sim"
+            else:
                 continue
             label = f"{name} :: {key}"
             if key in b and key in f:
                 ratio = f[key] / b[key] if b[key] else float("inf")
-                line = (
-                    f"{label:<60} base {b[key] / 1e6:10.3f} MB  "
-                    f"fresh {f[key] / 1e6:10.3f} MB  x{ratio:5.2f}"
-                )
-                if b[key] > 0.0 and f[key] > b[key] * (1.0 + peak_tolerance):
-                    peak_regressions.append(line)
+                if gate == "peak":
+                    line = (
+                        f"{label:<60} base {b[key] / 1e6:10.3f} MB  "
+                        f"fresh {f[key] / 1e6:10.3f} MB  x{ratio:5.2f}"
+                    )
+                    if b[key] > 0.0 and f[key] > b[key] * (1.0 + peak_tolerance):
+                        peak_regressions.append(line)
+                    else:
+                        peak_ok.append(line)
+                elif gate == "skip":
+                    line = (
+                        f"{label:<60} base {b[key]:14.0f}  "
+                        f"fresh {f[key]:14.0f}  x{ratio:5.2f}"
+                    )
+                    # Skip counters are deterministic: any drop means
+                    # the lane stopped eliding work it used to elide.
+                    if f[key] < b[key]:
+                        skip_regressions.append(line)
+                    else:
+                        skip_ok.append(line)
                 else:
-                    peak_ok.append(line)
+                    line = (
+                        f"{label:<60} base {b[key]:14.0f}  "
+                        f"fresh {f[key]:14.0f}  x{ratio:5.2f}"
+                    )
+                    # Simulated cycles are deterministic: any rise is a
+                    # timing-model regression.
+                    if f[key] > b[key]:
+                        sim_regressions.append(line)
+                    else:
+                        sim_ok.append(line)
             elif key in f:
-                peak_new.append(f"{label} (no baseline yet)")
-            # Baseline-only peak metrics ride on the MISSING entry
+                metric_new.append(f"{label} (no baseline yet)")
+            # Baseline-only gated metrics ride on the MISSING entry
             # check when the whole section vanished; a renamed metric
             # inside a surviving section is a baseline-refresh matter,
             # not a gate failure.
@@ -223,9 +273,17 @@ def main():
         print(f"  peak ok     {line}")
     for line in peak_regressions:
         print(f"  PEAK REGR   {line}")
+    for line in skip_ok:
+        print(f"  skip ok     {line}")
+    for line in skip_regressions:
+        print(f"  SKIP REGR   {line}")
+    for line in sim_ok:
+        print(f"  sim ok      {line}")
+    for line in sim_regressions:
+        print(f"  SIM REGR    {line}")
     for name in missing:
         print(f"  MISSING     {name} (in baseline, absent from fresh run)")
-    for name in peak_new:
+    for name in metric_new:
         print(f"  new         {name}")
     for name in new:
         print(f"  new         {name} (no baseline yet)")
@@ -237,10 +295,13 @@ def main():
             "-- --json ../BENCH_baseline.json\nthen set \"provisional\": false."
         )
 
-    if (regressions or peak_regressions or missing) and not provisional:
+    failures = regressions or peak_regressions or skip_regressions or sim_regressions or missing
+    if failures and not provisional:
         print(
             f"bench_compare: FAIL — {len(regressions)} timing regression(s), "
             f"{len(peak_regressions)} peak-memory regression(s), "
+            f"{len(skip_regressions)} skip-counter regression(s), "
+            f"{len(sim_regressions)} simulated-cycle regression(s), "
             f"{len(missing)} missing hot path(s)",
             file=sys.stderr,
         )

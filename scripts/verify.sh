@@ -47,6 +47,14 @@ TETRIS_PROP_CASES=24 cargo test -q --test plan_streaming \
 echo "== auto-tuner sweep (TETRIS_PROP_CASES=24) =="
 TETRIS_PROP_CASES=24 cargo test -q --test plan_tune
 
+# The activation-skipping sweep (ISSUE 8) under the same knob:
+# skip-on ≡ skip-off ≡ reference across networks × walks × tiles ×
+# budgets, with the trace counters proving the lane actually elided
+# SAC work on every drawn case, plus the three-way simulated-cycle
+# ordering (Tetris+skip < Tetris < DaDN) per zoo model.
+echo "== activation-skipping sweep (TETRIS_PROP_CASES=24) =="
+TETRIS_PROP_CASES=24 cargo test -q --test plan_skip
+
 if [ "$QUICK" -eq 0 ]; then
     # Tune smoke on a small model: the full candidate table, the chosen
     # schedule, and measured-vs-predicted peak from one traced image.
