@@ -649,6 +649,116 @@ fn main() {
         );
     }
 
+    // 15. ISSUE 9: cluster serving. In-process shard servers over
+    //     loopback (a bench binary cannot spawn `tetris` children),
+    //     the consistent-hash router, and the closed-loop loadgen at
+    //     1, 2 and 4 shards — every shard built from the same model
+    //     spec + seed, so routing is load-bearing but the answers are
+    //     identical. Loadgen throughput and exact percentiles are
+    //     one-shot measurements reported as metric rows; the key names
+    //     avoid every gated suffix in scripts/bench_compare.py, so on
+    //     first sight they report as `new` (informational) and later
+    //     runs track them without failing the job on wall-clock noise.
+    //     Scaling expectations (≥1.7x at 2 shards, ≥3x at 4, p99
+    //     within 2x) are soft-checked with warnings for the same
+    //     reason.
+    {
+        use tetris::cluster::wire::Message;
+        use tetris::cluster::{loadgen, ModelSetSpec, Router, RouterConfig, ShardServer};
+
+        const SPEC: &str = "alexnet:16:64,googlenet:16:64,nin:16:64,vgg19:16:32";
+        const SEED: u64 = 0x7e7215;
+        let spec = ModelSetSpec::parse(SPEC).unwrap();
+        let requests = 96;
+        let mut observed: Vec<(usize, f64, f64)> = Vec::new(); // (shards, rps, p99)
+        for shards in [1usize, 2, 4] {
+            let mut handles = Vec::new();
+            let mut addrs = Vec::new();
+            for i in 0..shards {
+                let engine = spec.build_engine(1, SEED, 8).unwrap();
+                let handle = ShardServer::spawn(
+                    format!("shard-{i}"),
+                    engine,
+                    "127.0.0.1:0".parse().unwrap(),
+                )
+                .unwrap();
+                addrs.push(handle.addr());
+                handles.push(handle);
+            }
+            let router = Router::connect(
+                &addrs,
+                RouterConfig { timeout: Duration::from_secs(120), ..RouterConfig::default() },
+            )
+            .unwrap();
+            let report = loadgen::run(
+                &router,
+                &loadgen::LoadgenConfig { requests, clients: 8, seed: SEED, models: vec![] },
+            )
+            .unwrap();
+            assert_eq!(
+                report.done, requests,
+                "{shards}-shard run: healthy shards must complete every request"
+            );
+            let reroutes: u64 = router.metrics().shards.iter().map(|s| s.reroutes).sum();
+            h.metric_row(
+                &format!("cluster-serving/{shards}-shard"),
+                vec![
+                    ("throughput_rps".into(), report.throughput_rps),
+                    ("p50_us".into(), report.p50_us),
+                    ("p95_us".into(), report.p95_us),
+                    ("p99_us".into(), report.p99_us),
+                    ("completed".into(), report.done as f64),
+                    ("failed".into(), report.failed as f64),
+                    ("reroutes".into(), reroutes as f64),
+                ],
+            );
+            observed.push((shards, report.throughput_rps, report.p99_us));
+            router.close();
+            for handle in handles {
+                handle.shutdown();
+            }
+        }
+        let rps = |n: usize| observed.iter().find(|o| o.0 == n).unwrap().1;
+        let p99 = |n: usize| observed.iter().find(|o| o.0 == n).unwrap().2.max(1e-9);
+        let speedup_2 = rps(2) / rps(1);
+        let speedup_4 = rps(4) / rps(1);
+        h.metric_row(
+            "cluster-serving/scaling",
+            vec![
+                ("speedup_2x".into(), speedup_2),
+                ("speedup_4x".into(), speedup_4),
+                ("p99_ratio_2x".into(), p99(2) / p99(1)),
+                ("p99_ratio_4x".into(), p99(4) / p99(1)),
+            ],
+        );
+        if speedup_2 < 1.7 || speedup_4 < 3.0 {
+            eprintln!(
+                "warning: cluster scaling below target (2 shards {speedup_2:.2}x, \
+                 4 shards {speedup_4:.2}x) — expected ≥1.7x / ≥3x on an unloaded host"
+            );
+        }
+        if p99(2) / p99(1) > 2.0 || p99(4) / p99(1) > 2.0 {
+            eprintln!("warning: sharded p99 more than 2x the single-shard p99");
+        }
+
+        // The codec itself, timed: one maximal-ish Done frame
+        // round-tripped (encode + decode + checksum both ways).
+        let frame = Message::Done {
+            seq: 1,
+            argmax: 7,
+            latency_us: 123.5,
+            sim_cycles: 99_999,
+            batch_size: 8,
+            logits: (0..4096u32).map(|i| i.wrapping_mul(2_654_435_761) as i32).collect(),
+        };
+        h.bench("cluster-serving/wire-roundtrip-4k", || {
+            let bytes = frame.encode();
+            let back = Message::decode_from(&mut &bytes[..]).unwrap();
+            assert!(matches!(back, Message::Done { .. }));
+            bytes.len()
+        });
+    }
+
     h.emit();
     if let Some(dir) = tetris::engine::env::bench_csv_dir() {
         h.write_csv(dir.join("hotpath.csv").as_path()).ok();

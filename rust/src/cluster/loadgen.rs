@@ -1,0 +1,185 @@
+//! Fault-tolerant closed-loop load generator for a shard cluster.
+//!
+//! N client threads each run a closed loop — submit one request, wait
+//! for its terminal state, repeat — against a [`Router`], round-robin
+//! over the advertised models. **Every** outcome is terminal by the
+//! router's contract, so the loop never hangs: successes are timed,
+//! typed failures ([`ClusterError`]) are *counted by kind* and the
+//! loop keeps going — which is exactly what makes the kill-a-shard
+//! drill observable as `shard-down: K` in the report instead of a
+//! wedged benchmark.
+//!
+//! Latency percentiles are exact (every sample kept and sorted, the
+//! same `util::stats::percentile` the engine metrics use), and
+//! throughput is completed requests over wall time.
+
+use std::time::{Duration, Instant};
+
+use crate::model::Tensor;
+use crate::util::rng::Rng;
+use crate::util::stats::percentile;
+
+use super::router::Router;
+
+/// Loadgen configuration.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Total requests across all clients.
+    pub requests: usize,
+    /// Concurrent closed-loop client threads.
+    pub clients: usize,
+    pub seed: u64,
+    /// Models to round-robin over; empty = every model the router's
+    /// shards advertise.
+    pub models: Vec<String>,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        Self { requests: 64, clients: 4, seed: 0x7e7215, models: Vec::new() }
+    }
+}
+
+/// One loadgen run's outcome.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    pub requests: usize,
+    pub done: usize,
+    pub failed: usize,
+    /// Failure counts grouped by [`FailKind`](super::wire::FailKind)
+    /// display name, sorted by name.
+    pub failed_by_kind: Vec<(String, usize)>,
+    pub elapsed: Duration,
+    /// Completed requests per wall-clock second.
+    pub throughput_rps: f64,
+    /// Exact client-observed latency percentiles, µs (0 when nothing
+    /// completed).
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+}
+
+impl LoadgenReport {
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "loadgen: {}/{} ok, {} failed in {:.2}s — {:.1} req/s",
+            self.done,
+            self.requests,
+            self.failed,
+            self.elapsed.as_secs_f64(),
+            self.throughput_rps
+        );
+        if self.done > 0 {
+            let _ = writeln!(
+                out,
+                "  latency p50 {:.0} µs · p95 {:.0} µs · p99 {:.0} µs",
+                self.p50_us, self.p95_us, self.p99_us
+            );
+        }
+        for (kind, n) in &self.failed_by_kind {
+            let _ = writeln!(out, "  failed {kind}: {n}");
+        }
+        out
+    }
+}
+
+/// Drive `config.requests` closed-loop requests through the router.
+/// Fails only on configuration errors (no models, no image shapes) —
+/// runtime failures are data, not errors.
+pub fn run(router: &Router, config: &LoadgenConfig) -> crate::Result<LoadgenReport> {
+    let models = if config.models.is_empty() {
+        router.model_names()
+    } else {
+        config.models.clone()
+    };
+    if models.is_empty() {
+        return Err(crate::Error::Config("loadgen: the router advertises no models".into()));
+    }
+    // Resolve every model's input shape up front from the Hello data.
+    let shapes: Vec<(usize, usize)> = models
+        .iter()
+        .map(|m| {
+            router.model_shape(m).ok_or_else(|| {
+                crate::Error::Config(format!(
+                    "loadgen: no shard advertises an input shape for model `{m}`"
+                ))
+            })
+        })
+        .collect::<crate::Result<_>>()?;
+
+    let clients = config.clients.max(1);
+    let start = Instant::now();
+    // Per-client results: (latencies_us, failures by kind name).
+    let mut per_client: Vec<(Vec<f64>, Vec<(String, usize)>)> = Vec::with_capacity(clients);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(clients);
+        for c in 0..clients {
+            let share = config.requests / clients
+                + if c < config.requests % clients { 1 } else { 0 };
+            let models = &models;
+            let shapes = &shapes;
+            let seed = config.seed;
+            handles.push(scope.spawn(move || {
+                let mut rng = Rng::new(seed ^ (0x9E37_79B9_7F4A_7C15u64.wrapping_mul(c as u64 + 1)));
+                let mut latencies = Vec::with_capacity(share);
+                let mut failures: Vec<(String, usize)> = Vec::new();
+                for k in 0..share {
+                    let m = (c + k * clients) % models.len();
+                    let (in_c, in_hw) = shapes[m];
+                    let mut image = Tensor::zeros(&[in_c, in_hw, in_hw]);
+                    for v in image.data_mut() {
+                        // Q8.8 noise in roughly [-1.5, 1.5].
+                        *v = rng.range_i64(-384, 384) as i32;
+                    }
+                    let t0 = Instant::now();
+                    match router.infer(&models[m], &image) {
+                        Ok(_) => latencies.push(t0.elapsed().as_secs_f64() * 1e6),
+                        Err(e) => {
+                            let kind = e.kind().to_string();
+                            match failures.iter_mut().find(|(k, _)| *k == kind) {
+                                Some((_, n)) => *n += 1,
+                                None => failures.push((kind, 1)),
+                            }
+                        }
+                    }
+                }
+                (latencies, failures)
+            }));
+        }
+        for h in handles {
+            per_client.push(h.join().expect("loadgen client panicked"));
+        }
+    });
+    let elapsed = start.elapsed();
+
+    let mut latencies: Vec<f64> = Vec::with_capacity(config.requests);
+    let mut failed_by_kind: Vec<(String, usize)> = Vec::new();
+    for (lats, fails) in per_client {
+        latencies.extend(lats);
+        for (kind, n) in fails {
+            match failed_by_kind.iter_mut().find(|(k, _)| *k == kind) {
+                Some((_, total)) => *total += n,
+                None => failed_by_kind.push((kind, n)),
+            }
+        }
+    }
+    failed_by_kind.sort();
+    latencies.sort_by(f64::total_cmp);
+    let done = latencies.len();
+    let failed: usize = failed_by_kind.iter().map(|(_, n)| n).sum();
+    debug_assert_eq!(done + failed, config.requests, "every request must reach a terminal state");
+    Ok(LoadgenReport {
+        requests: config.requests,
+        done,
+        failed,
+        failed_by_kind,
+        elapsed,
+        throughput_rps: done as f64 / elapsed.as_secs_f64().max(1e-9),
+        p50_us: if done > 0 { percentile(&latencies, 0.5) } else { 0.0 },
+        p95_us: if done > 0 { percentile(&latencies, 0.95) } else { 0.0 },
+        p99_us: if done > 0 { percentile(&latencies, 0.99) } else { 0.0 },
+    })
+}

@@ -1,0 +1,311 @@
+//! Cluster serving: shard the engine registry across processes.
+//!
+//! The engine façade (PR 4) serves every model from one process; this
+//! subsystem is the multi-process layer the ROADMAP's scale-out story
+//! plugs into — model *sharding* by consistent hashing (model
+//! partitioning across workers stays an open item). Dependency-free,
+//! `std`-only, like everything else in the crate:
+//!
+//! * [`wire`] — length-prefixed, checksummed binary frames carrying
+//!   the submit/poll/wait ticket protocol over a socket.
+//! * [`shard`] — one engine behind a `TcpListener`, readiness
+//!   handshake included.
+//! * [`router`] — client-side bounded rendezvous hashing over the
+//!   shard set, per-request deadlines, typed fail-fast when a shard
+//!   dies mid-batch (zero hangs).
+//! * [`supervisor`] — spawn/monitor N `tetris shard` children,
+//!   restart-on-crash behind a [`supervisor::CrashLoopBreaker`].
+//! * [`loadgen`] — fault-tolerant closed-loop load with exact
+//!   percentiles.
+//!
+//! Every shard is spawned from the same [`ModelSetSpec`] and seed, so
+//! all shards carry identical models with identical synthetic weights
+//! — which is what makes routed logits bit-exact against a single
+//! in-process engine (`tests/cluster.rs` pins this zoo-wide).
+//!
+//! CLI: `tetris cluster --shards 4` (supervisor + router + loadgen in
+//! one command) and `tetris shard --listen 127.0.0.1:0` (one shard,
+//! standalone or under a supervisor).
+
+pub mod loadgen;
+pub mod router;
+pub mod shard;
+pub mod supervisor;
+pub mod wire;
+
+pub use router::{
+    rendezvous_rank, ClusterError, ClusterResponse, ClusterTicket, Router, RouterConfig,
+};
+pub use shard::{ShardHandle, ShardServer};
+pub use supervisor::{CrashLoopBreaker, Supervisor, SupervisorConfig};
+pub use wire::{FailKind, Message, WireModel};
+
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crate::config::Mode;
+use crate::coordinator::backend::SacBackend;
+use crate::engine::Engine;
+use crate::model::weights::{synthetic_loaded_with_heads, DensityCalibration};
+use crate::model::zoo;
+
+/// One model in a shard's registry: a zoo name plus the channel
+/// divisor / spatial size of its scaled serving copy (`tiny` is the
+/// un-scaled tiny CNN and ignores both).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelEntry {
+    pub name: String,
+    pub scale: usize,
+    pub hw: usize,
+}
+
+/// A parsed `--models` spec: a comma list of `name[:scale[:hw]]`
+/// entries, e.g. `tiny,nin:16:64,vgg16:16:32`. Defaults: scale 16;
+/// hw 32 for the VGGs, 64 otherwise — the same scaled-zoo sizes the
+/// engine tests serve.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSetSpec {
+    pub entries: Vec<ModelEntry>,
+}
+
+impl ModelSetSpec {
+    pub fn parse(spec: &str) -> crate::Result<Self> {
+        let mut entries = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let mut fields = part.split(':');
+            let name = fields.next().unwrap_or_default().to_string();
+            if name != "tiny" {
+                // Validate the name now — a shard child failing later
+                // with an opaque exit is much harder to diagnose.
+                zoo::by_name(&name)?;
+            }
+            let default_hw = if name.starts_with("vgg") { 32 } else { 64 };
+            let scale = match fields.next() {
+                None => 16,
+                Some(s) => s.parse::<usize>().map_err(|_| {
+                    crate::Error::Config(format!("model spec `{part}`: bad scale `{s}`"))
+                })?,
+            }
+            .max(1);
+            let hw = match fields.next() {
+                None => default_hw,
+                Some(s) => s.parse::<usize>().map_err(|_| {
+                    crate::Error::Config(format!("model spec `{part}`: bad hw `{s}`"))
+                })?,
+            }
+            .max(1);
+            if let Some(extra) = fields.next() {
+                return Err(crate::Error::Config(format!(
+                    "model spec `{part}`: unexpected `:{extra}` (want name[:scale[:hw]])"
+                )));
+            }
+            entries.push(ModelEntry { name, scale, hw });
+        }
+        if entries.is_empty() {
+            return Err(crate::Error::Config(
+                "model set is empty (want e.g. `tiny,nin:16:64`)".into(),
+            ));
+        }
+        Ok(Self { entries })
+    }
+
+    /// Build one engine carrying every entry. Weights are synthetic
+    /// and **deterministic in `seed`** — every shard built from the
+    /// same spec + seed serves bit-identical models.
+    pub fn build_engine(
+        &self,
+        workers: usize,
+        seed: u64,
+        max_batch: usize,
+    ) -> crate::Result<Engine> {
+        let mut b = Engine::builder().workers(workers).max_batch(max_batch);
+        for e in &self.entries {
+            if e.name == "tiny" {
+                b = b.register("tiny", zoo::tiny_cnn(), SacBackend::synthetic_weights(seed)?);
+            } else {
+                let net = zoo::by_name(&e.name)?.scaled(e.scale, e.hw);
+                let w = synthetic_loaded_with_heads(
+                    &net,
+                    Mode::Fp16,
+                    10,
+                    &e.name,
+                    DensityCalibration::Fig2,
+                    seed,
+                )?;
+                b = b.register(e.name.clone(), net, w);
+            }
+        }
+        b.build()
+    }
+}
+
+/// `tetris shard` options (see `main.rs` for the flag surface).
+#[derive(Debug, Clone)]
+pub struct ShardCliOpts {
+    pub name: String,
+    pub listen: SocketAddr,
+    pub models: String,
+    pub workers: usize,
+    pub seed: u64,
+    pub max_batch: usize,
+    /// Supervised children exit when stdin closes, so no shard
+    /// outlives a dead supervisor.
+    pub supervised: bool,
+}
+
+/// Run one shard until stopped: build the engine, bind, announce
+/// readiness on stdout, serve.
+pub fn shard_main(opts: ShardCliOpts) -> crate::Result<()> {
+    use std::io::{Read, Write};
+    let spec = ModelSetSpec::parse(&opts.models)?;
+    let engine = spec.build_engine(opts.workers, opts.seed, opts.max_batch)?;
+    let handle = ShardServer::spawn(opts.name, engine, opts.listen)?;
+    // The process-level readiness handshake the supervisor blocks on.
+    println!("{}{}", supervisor::READY_PREFIX, handle.addr());
+    std::io::stdout().flush().ok();
+    if opts.supervised {
+        // Serve until the supervisor hangs up.
+        let mut sink = [0u8; 256];
+        let mut stdin = std::io::stdin();
+        loop {
+            match stdin.read(&mut sink) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {}
+            }
+        }
+        handle.shutdown();
+        Ok(())
+    } else {
+        eprintln!("tetris shard: serving on {} (ctrl-C to stop)", handle.addr());
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+}
+
+/// `tetris cluster` options.
+#[derive(Debug, Clone)]
+pub struct ClusterCliOpts {
+    pub shards: usize,
+    pub models: String,
+    pub requests: usize,
+    pub clients: usize,
+    pub workers: usize,
+    pub seed: u64,
+    pub max_batch: usize,
+    pub timeout: Duration,
+    /// The drill: kill one shard after ~¼ of the load completed and
+    /// prove every outstanding ticket still terminates (typed, no
+    /// hangs) while the survivors keep serving.
+    pub kill_one: bool,
+    /// Binary for shard children (tests pass the built CLI; `None` =
+    /// current executable).
+    pub program: Option<PathBuf>,
+}
+
+/// Supervisor + router + loadgen in one command: spawn the shards,
+/// drive closed-loop load, print the loadgen and router reports.
+pub fn cluster_main(opts: ClusterCliOpts) -> crate::Result<()> {
+    ModelSetSpec::parse(&opts.models)?; // fail before spawning children
+    let sup = Supervisor::start(SupervisorConfig {
+        program: opts.program.clone(),
+        shards: opts.shards,
+        models: opts.models.clone(),
+        workers: opts.workers,
+        seed: opts.seed,
+        max_batch: opts.max_batch,
+        ..SupervisorConfig::default()
+    })?;
+    let addrs = sup.addrs();
+    println!(
+        "cluster: {} shard(s) ready: {}",
+        addrs.len(),
+        addrs.iter().map(|a| a.to_string()).collect::<Vec<_>>().join(", ")
+    );
+    let router = Router::connect(
+        &addrs,
+        RouterConfig { timeout: opts.timeout, ..RouterConfig::default() },
+    )?;
+
+    let report = std::thread::scope(|scope| {
+        if opts.kill_one {
+            let router = router.clone();
+            let sup = &sup;
+            let quarter = (opts.requests / 4).max(1) as u64;
+            scope.spawn(move || {
+                loop {
+                    let m = router.metrics();
+                    let settled: u64 = m.shards.iter().map(|s| s.completed + s.failed).sum();
+                    if settled >= quarter {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                eprintln!("drill: killing shard-0 mid-flight");
+                sup.kill_shard(0);
+            });
+        }
+        loadgen::run(
+            &router,
+            &loadgen::LoadgenConfig {
+                requests: opts.requests,
+                clients: opts.clients,
+                seed: opts.seed,
+                models: Vec::new(),
+            },
+        )
+    })?;
+
+    print!("{}", report.render());
+    print!("{}", router.metrics().render());
+    router.close();
+    sup.shutdown();
+
+    // Zero-hang accounting: loadgen returning at all means every
+    // request reached a terminal state; make the arithmetic explicit.
+    if report.done + report.failed != report.requests {
+        return Err(crate::Error::Coordinator(format!(
+            "cluster: {} + {} settled of {} submitted — some request never terminated",
+            report.done, report.failed, report.requests
+        )));
+    }
+    if opts.kill_one && report.done == 0 {
+        return Err(crate::Error::Coordinator(
+            "cluster: kill drill left no surviving completions — survivors did not serve".into(),
+        ));
+    }
+    println!("cluster OK ({} ok / {} failed)", report.done, report.failed);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_set_spec_parses_defaults_and_explicit_fields() {
+        let s = ModelSetSpec::parse("tiny,nin:16:64,vgg16:16:32").unwrap();
+        assert_eq!(s.entries.len(), 3);
+        assert_eq!(s.entries[0].name, "tiny");
+        assert_eq!(s.entries[1], ModelEntry { name: "nin".into(), scale: 16, hw: 64 });
+        assert_eq!(s.entries[2], ModelEntry { name: "vgg16".into(), scale: 16, hw: 32 });
+        // Defaults: scale 16, hw 64 (32 for the VGGs).
+        let d = ModelSetSpec::parse("alexnet,vgg19").unwrap();
+        assert_eq!(d.entries[0], ModelEntry { name: "alexnet".into(), scale: 16, hw: 64 });
+        assert_eq!(d.entries[1], ModelEntry { name: "vgg19".into(), scale: 16, hw: 32 });
+    }
+
+    #[test]
+    fn model_set_spec_rejects_junk() {
+        assert!(ModelSetSpec::parse("").is_err());
+        assert!(ModelSetSpec::parse("resnet50").is_err(), "unknown zoo name");
+        assert!(ModelSetSpec::parse("nin:x").is_err(), "bad scale");
+        assert!(ModelSetSpec::parse("nin:16:y").is_err(), "bad hw");
+        assert!(ModelSetSpec::parse("nin:16:64:9").is_err(), "trailing field");
+    }
+}

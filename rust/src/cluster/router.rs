@@ -1,0 +1,700 @@
+//! Client-side consistent-hash router over a set of shard servers.
+//!
+//! Routing is **bounded rendezvous hashing**: every (model, shard)
+//! pair gets a stable FNV-1a score ([`rendezvous_rank`]) and a
+//! submission walks the model's ranked shard list — so adding or
+//! removing a shard only moves the keys that hashed to it (ring
+//! stability, pinned in `tests/cluster.rs`). The *bounded* part is a
+//! consistent-hashing-with-bounded-loads spill: when the top-ranked
+//! shard already carries more than its fair share of the router's
+//! in-flight requests, the submission spills to the next-ranked shard
+//! and counts a **reroute** — one hot model cannot starve the pool.
+//!
+//! Failure semantics extend the engine's typed-completion contract
+//! (PR 4) across the socket, which is the part nothing owned before
+//! this PR: a shard that dies with tickets outstanding would leave
+//! `wait()` blocked forever. The router's per-shard reader thread
+//! turns the connection's EOF into [`ClusterError::ShardDown`] for
+//! **every** pending ticket on that shard, and a per-request deadline
+//! ([`RouterConfig::timeout`]) converts a silent stall (network
+//! partition, wedged shard) into [`ClusterError::Timeout`]. Every
+//! submitted ticket reaches exactly one terminal state — zero hangs.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::Metrics;
+use crate::engine::env;
+use crate::model::Tensor;
+
+use super::wire::{fnv1a64, FailKind, Message, WireModel};
+
+/// Router configuration. `Default` resolves the deadline from
+/// `TETRIS_RPC_TIMEOUT_MS` (see [`env::rpc_timeout`]).
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Per-request deadline: `wait` returns [`ClusterError::Timeout`]
+    /// once it expires, whatever the shard is doing.
+    pub timeout: Duration,
+    /// Connection attempts per shard (bounded exponential backoff).
+    pub connect_attempts: u32,
+    /// First retry delay; doubles per attempt, capped at 500 ms.
+    pub connect_base_delay: Duration,
+    /// Bounded-load spill factor, percent of the fair share (125 =
+    /// a shard may run 25% above the mean in-flight load before
+    /// submissions spill past it). `0` disables spilling.
+    pub load_factor_pct: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self {
+            timeout: env::rpc_timeout(),
+            connect_attempts: 6,
+            connect_base_delay: Duration::from_millis(10),
+            load_factor_pct: 125,
+        }
+    }
+}
+
+/// Receipt for one routed submission; redeem with [`Router::wait`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClusterTicket {
+    /// Router-unique sequence number (the wire `seq`).
+    pub seq: u64,
+    /// Index of the shard the request was routed to.
+    pub shard: usize,
+}
+
+/// One completed remote inference.
+#[derive(Debug, Clone)]
+pub struct ClusterResponse {
+    pub seq: u64,
+    /// Name of the shard that served the request.
+    pub shard: String,
+    pub logits: Vec<i32>,
+    pub argmax: usize,
+    /// Engine-side latency as the shard reported it.
+    pub latency_us: f64,
+    pub sim_cycles: u64,
+    pub batch_size: usize,
+}
+
+/// Typed routing/transport failure. Remote engine failures arrive as
+/// [`ClusterError::Remote`] with the shard's [`FailKind`]; everything
+/// else is raised by the router itself.
+#[derive(Debug, Clone)]
+pub enum ClusterError {
+    /// No live shard serves the model.
+    NoShards { model: String },
+    /// The shard's connection died with this request outstanding.
+    ShardDown { shard: String, detail: String },
+    /// The per-request deadline expired.
+    Timeout { shard: String, waited: Duration },
+    /// The shard completed the request as a typed failure.
+    Remote { shard: String, kind: FailKind, message: String },
+    /// The shard violated the wire protocol.
+    Protocol { shard: String, detail: String },
+    /// Connecting to a shard failed after every backoff attempt.
+    Connect { addr: String, detail: String },
+}
+
+impl ClusterError {
+    /// The failure's wire-level kind (router-raised errors map onto
+    /// the matching [`FailKind`]) — what loadgen groups failures by.
+    pub fn kind(&self) -> FailKind {
+        match self {
+            ClusterError::NoShards { .. } => FailKind::Config,
+            ClusterError::ShardDown { .. } => FailKind::ShardDown,
+            ClusterError::Timeout { .. } => FailKind::Timeout,
+            ClusterError::Remote { kind, .. } => *kind,
+            ClusterError::Protocol { .. } => FailKind::Protocol,
+            ClusterError::Connect { .. } => FailKind::ShardDown,
+        }
+    }
+}
+
+impl std::fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClusterError::NoShards { model } => {
+                write!(f, "no live shard serves model `{model}`")
+            }
+            ClusterError::ShardDown { shard, detail } => {
+                write!(f, "shard `{shard}` went down with the request outstanding: {detail}")
+            }
+            ClusterError::Timeout { shard, waited } => {
+                write!(f, "request to shard `{shard}` timed out after {waited:?}")
+            }
+            ClusterError::Remote { shard, kind, message } => {
+                write!(f, "shard `{shard}` failed the request ({kind}): {message}")
+            }
+            ClusterError::Protocol { shard, detail } => {
+                write!(f, "shard `{shard}` broke the wire protocol: {detail}")
+            }
+            ClusterError::Connect { addr, detail } => {
+                write!(f, "connecting to shard at {addr} failed: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ClusterError {}
+
+impl From<ClusterError> for crate::Error {
+    fn from(e: ClusterError) -> Self {
+        crate::Error::Coordinator(format!("cluster: {e}"))
+    }
+}
+
+/// Rank shard identities for one model by rendezvous (highest-random-
+/// weight) hashing: stable scores, so removing one shard leaves every
+/// other shard's relative order — and therefore every key that did
+/// not map to the removed shard — unchanged.
+pub fn rendezvous_rank(model: &str, shards: &[impl AsRef<str>]) -> Vec<usize> {
+    let mut scored: Vec<(u64, usize)> = shards
+        .iter()
+        .enumerate()
+        .map(|(i, s)| (fnv1a64(&[model.as_bytes(), s.as_ref().as_bytes()]), i))
+        .collect();
+    scored.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    scored.into_iter().map(|(_, i)| i).collect()
+}
+
+/// One connected shard's client-side state.
+struct ShardConn {
+    name: String,
+    addr: SocketAddr,
+    writer: Mutex<TcpStream>,
+    models: Vec<WireModel>,
+    alive: AtomicBool,
+    inflight: AtomicUsize,
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    connect_retries: u64,
+    reroutes: AtomicU64,
+}
+
+/// A routed request between submit and its terminal state.
+enum Pending {
+    Waiting { shard: usize, since: Instant },
+    Done(Box<Result<ClusterResponse, ClusterError>>),
+}
+
+/// Completion state shared by router clones **and** reader threads.
+struct RouterShared {
+    shards: Vec<ShardConn>,
+    pending: Mutex<HashMap<u64, Pending>>,
+    arrived: Condvar,
+    next_seq: AtomicU64,
+    timeout: Duration,
+    load_factor_pct: usize,
+    /// Router-observed round-trip latencies, aggregated with the same
+    /// reservoir + exact-percentile machinery the engine uses.
+    rtt: Mutex<Metrics>,
+}
+
+/// Held by router clones only (never by reader threads): when the last
+/// clone drops, sockets close, readers unblock on EOF and are joined —
+/// no thread or socket outlives the router.
+struct Lifecycle {
+    shared: Arc<RouterShared>,
+    readers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Drop for Lifecycle {
+    fn drop(&mut self) {
+        for conn in &self.shared.shards {
+            if let Ok(s) = conn.writer.lock() {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+        for h in self.readers.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The consistent-hash router: connect once, then submit/wait (or
+/// [`Router::infer`]) from any number of threads — clones share the
+/// connections, the pending-ticket store, and the metrics.
+#[derive(Clone)]
+pub struct Router {
+    shared: Arc<RouterShared>,
+    lifecycle: Arc<Lifecycle>,
+}
+
+impl Router {
+    /// Connect to every shard address (bounded exponential-backoff
+    /// retry per shard), read each shard's `Hello`, and start the
+    /// per-shard reader threads. Fails if **any** shard stays
+    /// unreachable — a cluster with silently missing shards would
+    /// misroute.
+    pub fn connect(addrs: &[SocketAddr], config: RouterConfig) -> Result<Router, ClusterError> {
+        let mut shards = Vec::with_capacity(addrs.len());
+        let mut read_halves = Vec::with_capacity(addrs.len());
+        for &addr in addrs {
+            let (mut stream, retries) = connect_backoff(addr, &config)?;
+            let _ = stream.set_nodelay(true);
+            let _ = stream.set_write_timeout(Some(config.timeout));
+            // Readiness handshake: the Hello must arrive within the
+            // deadline; afterwards the reader blocks indefinitely
+            // (shard death reads as EOF, stalls are the waiter
+            // deadline's job).
+            let _ = stream.set_read_timeout(Some(config.timeout));
+            let (name, models) = match Message::decode_from(&mut stream) {
+                Ok(Message::Hello { shard, models }) => (shard, models),
+                Ok(other) => {
+                    return Err(ClusterError::Protocol {
+                        shard: addr.to_string(),
+                        detail: format!("expected Hello, got {other:?}"),
+                    })
+                }
+                Err(e) => {
+                    return Err(ClusterError::Protocol {
+                        shard: addr.to_string(),
+                        detail: format!("handshake failed: {e}"),
+                    })
+                }
+            };
+            let _ = stream.set_read_timeout(None);
+            let writer = stream.try_clone().map_err(|e| ClusterError::Connect {
+                addr: addr.to_string(),
+                detail: format!("socket clone failed: {e}"),
+            })?;
+            shards.push(ShardConn {
+                name,
+                addr,
+                writer: Mutex::new(writer),
+                models,
+                alive: AtomicBool::new(true),
+                inflight: AtomicUsize::new(0),
+                submitted: AtomicU64::new(0),
+                completed: AtomicU64::new(0),
+                failed: AtomicU64::new(0),
+                connect_retries: retries,
+                reroutes: AtomicU64::new(0),
+            });
+            read_halves.push(stream);
+        }
+        let shared = Arc::new(RouterShared {
+            shards,
+            pending: Mutex::new(HashMap::new()),
+            arrived: Condvar::new(),
+            next_seq: AtomicU64::new(0),
+            timeout: config.timeout,
+            load_factor_pct: config.load_factor_pct,
+            rtt: Mutex::new(Metrics::new()),
+        });
+        let readers = read_halves
+            .into_iter()
+            .enumerate()
+            .map(|(i, stream)| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || read_loop(&shared, i, stream))
+            })
+            .collect();
+        let lifecycle = Arc::new(Lifecycle {
+            shared: Arc::clone(&shared),
+            readers: Mutex::new(readers),
+        });
+        Ok(Router { shared, lifecycle })
+    }
+
+    /// Route one (C, H, W) Q8.8 image to `model`'s shard and return a
+    /// ticket. Never blocks past the socket write.
+    pub fn submit(&self, model: &str, image: &Tensor<i32>) -> Result<ClusterTicket, ClusterError> {
+        let shard_idx = self.route(model)?;
+        let conn = &self.shared.shards[shard_idx];
+        let seq = self.shared.next_seq.fetch_add(1, Ordering::Relaxed);
+        let shape = match *image.shape() {
+            [c, h, w] => [c as u32, h as u32, w as u32],
+            _ => {
+                return Err(ClusterError::Remote {
+                    shard: conn.name.clone(),
+                    kind: FailKind::Shape,
+                    message: "submit takes one (C, H, W) image".into(),
+                })
+            }
+        };
+        // Park the pending entry before the bytes leave, so a fast
+        // completion always finds it.
+        self.shared.pending.lock().unwrap().insert(
+            seq,
+            Pending::Waiting { shard: shard_idx, since: Instant::now() },
+        );
+        conn.inflight.fetch_add(1, Ordering::SeqCst);
+        conn.submitted.fetch_add(1, Ordering::Relaxed);
+        let frame = Message::Submit {
+            seq,
+            model: model.to_string(),
+            shape,
+            image: image.data().to_vec(),
+        };
+        let write = {
+            let mut w = conn.writer.lock().unwrap();
+            frame.encode_to(&mut *w).and_then(|()| w.flush())
+        };
+        if let Err(e) = write {
+            // The shard is unreachable: fail it, which completes this
+            // seq (and every other pending seq on it) as ShardDown —
+            // the ticket stays redeemable, typed, hang-free.
+            fail_shard(&self.shared, shard_idx, &format!("write failed: {e}"));
+        }
+        Ok(ClusterTicket { seq, shard: shard_idx })
+    }
+
+    /// Block until the ticket's terminal state, bounded by the
+    /// configured deadline. Exactly one of: the shard's response, the
+    /// shard's typed failure, [`ClusterError::ShardDown`], or
+    /// [`ClusterError::Timeout`] — never a hang.
+    pub fn wait(&self, ticket: &ClusterTicket) -> Result<ClusterResponse, ClusterError> {
+        let deadline = Instant::now() + self.shared.timeout;
+        let mut pending = self.shared.pending.lock().unwrap();
+        loop {
+            match pending.get(&ticket.seq) {
+                Some(Pending::Done(_)) => {
+                    let Some(Pending::Done(result)) = pending.remove(&ticket.seq) else {
+                        unreachable!("entry vanished under the lock");
+                    };
+                    return *result;
+                }
+                Some(Pending::Waiting { shard, .. }) => {
+                    let shard = *shard;
+                    let now = Instant::now();
+                    if now >= deadline {
+                        pending.remove(&ticket.seq);
+                        drop(pending);
+                        let conn = &self.shared.shards[shard];
+                        conn.inflight.fetch_sub(1, Ordering::SeqCst);
+                        conn.failed.fetch_add(1, Ordering::Relaxed);
+                        return Err(ClusterError::Timeout {
+                            shard: conn.name.clone(),
+                            waited: self.shared.timeout,
+                        });
+                    }
+                    let (guard, _) = self
+                        .shared
+                        .arrived
+                        .wait_timeout(pending, deadline - now)
+                        .unwrap();
+                    pending = guard;
+                }
+                None => {
+                    return Err(ClusterError::Protocol {
+                        shard: "router".into(),
+                        detail: format!("ticket {} unknown or already redeemed", ticket.seq),
+                    })
+                }
+            }
+        }
+    }
+
+    /// Blocking convenience: submit + wait.
+    pub fn infer(&self, model: &str, image: &Tensor<i32>) -> Result<ClusterResponse, ClusterError> {
+        let t = self.submit(model, image)?;
+        self.wait(&t)
+    }
+
+    /// Pick a shard for `model`: rendezvous order over live shards
+    /// serving it, with the bounded-load spill.
+    fn route(&self, model: &str) -> Result<usize, ClusterError> {
+        let candidates: Vec<usize> = self
+            .shared
+            .shards
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| {
+                s.alive.load(Ordering::SeqCst) && s.models.iter().any(|m| m.name == model)
+            })
+            .map(|(i, _)| i)
+            .collect();
+        if candidates.is_empty() {
+            return Err(ClusterError::NoShards { model: model.to_string() });
+        }
+        let names: Vec<&str> =
+            candidates.iter().map(|&i| self.shared.shards[i].name.as_str()).collect();
+        let ranked = rendezvous_rank(model, &names);
+        let first = candidates[ranked[0]];
+        if self.shared.load_factor_pct == 0 || candidates.len() == 1 {
+            return Ok(first);
+        }
+        let total: usize = candidates
+            .iter()
+            .map(|&i| self.shared.shards[i].inflight.load(Ordering::SeqCst))
+            .sum();
+        let bound = (((total + 1) * self.shared.load_factor_pct) as u64)
+            .div_ceil((100 * candidates.len()) as u64)
+            .max(1) as usize;
+        for &r in &ranked {
+            let idx = candidates[r];
+            if self.shared.shards[idx].inflight.load(Ordering::SeqCst) < bound {
+                if idx != first {
+                    self.shared.shards[idx].reroutes.fetch_add(1, Ordering::Relaxed);
+                }
+                return Ok(idx);
+            }
+        }
+        Ok(first) // every candidate at the bound: honor the hash
+    }
+
+    /// The declared input shape for a model, from the shards' Hello
+    /// frames (`None` when unknown or the shard declared no extent).
+    pub fn model_shape(&self, model: &str) -> Option<(usize, usize)> {
+        self.shared.shards.iter().find_map(|s| {
+            s.models
+                .iter()
+                .find(|m| m.name == model && m.in_c > 0 && m.in_hw > 0)
+                .map(|m| (m.in_c as usize, m.in_hw as usize))
+        })
+    }
+
+    /// Every model name any connected shard advertises (sorted,
+    /// deduplicated).
+    pub fn model_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self
+            .shared
+            .shards
+            .iter()
+            .flat_map(|s| s.models.iter().map(|m| m.name.clone()))
+            .collect();
+        names.sort();
+        names.dedup();
+        names
+    }
+
+    /// Shards still considered live.
+    pub fn alive_count(&self) -> usize {
+        self.shared
+            .shards
+            .iter()
+            .filter(|s| s.alive.load(Ordering::SeqCst))
+            .count()
+    }
+
+    /// Snapshot per-shard counters + aggregate round-trip latency
+    /// percentiles.
+    pub fn metrics(&self) -> RouterMetrics {
+        RouterMetrics {
+            shards: self
+                .shared
+                .shards
+                .iter()
+                .map(|s| ShardStats {
+                    name: s.name.clone(),
+                    addr: s.addr,
+                    alive: s.alive.load(Ordering::SeqCst),
+                    submitted: s.submitted.load(Ordering::Relaxed),
+                    completed: s.completed.load(Ordering::Relaxed),
+                    failed: s.failed.load(Ordering::Relaxed),
+                    connect_retries: s.connect_retries,
+                    reroutes: s.reroutes.load(Ordering::Relaxed),
+                    inflight: s.inflight.load(Ordering::SeqCst),
+                })
+                .collect(),
+            rtt: self.shared.rtt.lock().unwrap().clone(),
+        }
+    }
+
+    /// Close every connection and join the reader threads. (Dropping
+    /// the last router clone does the same.)
+    pub fn close(self) {
+        drop(self);
+    }
+}
+
+/// Connect with bounded exponential backoff, returning the stream and
+/// how many retries it took.
+fn connect_backoff(
+    addr: SocketAddr,
+    config: &RouterConfig,
+) -> Result<(TcpStream, u64), ClusterError> {
+    let attempts = config.connect_attempts.max(1);
+    let mut delay = config.connect_base_delay;
+    let mut last = String::new();
+    for attempt in 0..attempts {
+        match TcpStream::connect_timeout(&addr, config.timeout) {
+            Ok(s) => return Ok((s, attempt as u64)),
+            Err(e) => last = e.to_string(),
+        }
+        if attempt + 1 < attempts {
+            std::thread::sleep(delay);
+            delay = (delay * 2).min(Duration::from_millis(500));
+        }
+    }
+    Err(ClusterError::Connect {
+        addr: addr.to_string(),
+        detail: format!("{last} (after {attempts} attempts)"),
+    })
+}
+
+/// Per-shard reader: decode completions until the connection dies,
+/// then fail everything still pending on this shard.
+fn read_loop(shared: &Arc<RouterShared>, shard_idx: usize, mut stream: TcpStream) {
+    loop {
+        match Message::decode_from(&mut stream) {
+            Ok(Message::Done { seq, argmax, latency_us, sim_cycles, batch_size, logits }) => {
+                let resp = ClusterResponse {
+                    seq,
+                    shard: shared.shards[shard_idx].name.clone(),
+                    logits,
+                    argmax: argmax as usize,
+                    latency_us,
+                    sim_cycles,
+                    batch_size: batch_size as usize,
+                };
+                complete(shared, shard_idx, seq, Ok(resp));
+            }
+            Ok(Message::Failed { seq, kind, error }) => {
+                let err = ClusterError::Remote {
+                    shard: shared.shards[shard_idx].name.clone(),
+                    kind,
+                    message: error,
+                };
+                complete(shared, shard_idx, seq, Err(err));
+            }
+            Ok(Message::Shutdown) => {
+                fail_shard(shared, shard_idx, "shard asked to shut down");
+                break;
+            }
+            Ok(other) => {
+                fail_shard(shared, shard_idx, &format!("unexpected frame {other:?}"));
+                break;
+            }
+            Err(e) => {
+                let detail = if e.is_disconnect() {
+                    "connection closed".to_string()
+                } else {
+                    e.to_string()
+                };
+                fail_shard(shared, shard_idx, &detail);
+                break;
+            }
+        }
+    }
+}
+
+/// Deliver one terminal state. A seq no longer pending already timed
+/// out at the waiter — the late completion is dropped on the floor.
+fn complete(
+    shared: &RouterShared,
+    shard_idx: usize,
+    seq: u64,
+    result: Result<ClusterResponse, ClusterError>,
+) {
+    let mut pending = shared.pending.lock().unwrap();
+    let Some(Pending::Waiting { since, .. }) = pending.get(&seq) else {
+        return;
+    };
+    let rtt_us = since.elapsed().as_secs_f64() * 1e6;
+    let conn = &shared.shards[shard_idx];
+    conn.inflight.fetch_sub(1, Ordering::SeqCst);
+    match &result {
+        Ok(resp) => {
+            conn.completed.fetch_add(1, Ordering::Relaxed);
+            shared.rtt.lock().unwrap().record_batch(1, &[rtt_us], resp.sim_cycles);
+        }
+        Err(_) => {
+            conn.failed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    pending.insert(seq, Pending::Done(Box::new(result)));
+    shared.arrived.notify_all();
+}
+
+/// Mark a shard dead and complete **every** ticket pending on it as
+/// [`ClusterError::ShardDown`] — the satellite bugfix: without this
+/// sweep, a shard dying mid-batch leaves its waiters blocked forever.
+fn fail_shard(shared: &RouterShared, shard_idx: usize, detail: &str) {
+    let conn = &shared.shards[shard_idx];
+    if !conn.alive.swap(false, Ordering::SeqCst) {
+        return; // already swept
+    }
+    let _ = conn.writer.lock().unwrap().shutdown(Shutdown::Both);
+    let mut pending = shared.pending.lock().unwrap();
+    let seqs: Vec<u64> = pending
+        .iter()
+        .filter_map(|(&seq, p)| match p {
+            Pending::Waiting { shard, .. } if *shard == shard_idx => Some(seq),
+            _ => None,
+        })
+        .collect();
+    for seq in seqs {
+        conn.inflight.fetch_sub(1, Ordering::SeqCst);
+        conn.failed.fetch_add(1, Ordering::Relaxed);
+        pending.insert(
+            seq,
+            Pending::Done(Box::new(Err(ClusterError::ShardDown {
+                shard: conn.name.clone(),
+                detail: detail.to_string(),
+            }))),
+        );
+    }
+    shared.arrived.notify_all();
+}
+
+/// One shard's router-side counters.
+#[derive(Debug, Clone)]
+pub struct ShardStats {
+    pub name: String,
+    pub addr: SocketAddr,
+    pub alive: bool,
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub connect_retries: u64,
+    pub reroutes: u64,
+    pub inflight: usize,
+}
+
+/// Router metrics snapshot: per-shard counters plus aggregate
+/// router-observed round-trip latency percentiles (same machinery as
+/// the engine's serving metrics).
+#[derive(Debug, Clone)]
+pub struct RouterMetrics {
+    pub shards: Vec<ShardStats>,
+    pub rtt: Metrics,
+}
+
+impl RouterMetrics {
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::from("router:\n");
+        let _ = writeln!(
+            out,
+            "  {:<12} {:>6} {:>9} {:>9} {:>7} {:>8} {:>8} {:>8}",
+            "shard", "alive", "submitted", "completed", "failed", "retries", "reroutes", "inflight"
+        );
+        for s in &self.shards {
+            let _ = writeln!(
+                out,
+                "  {:<12} {:>6} {:>9} {:>9} {:>7} {:>8} {:>8} {:>8}",
+                s.name,
+                if s.alive { "yes" } else { "DOWN" },
+                s.submitted,
+                s.completed,
+                s.failed,
+                s.connect_retries,
+                s.reroutes,
+                s.inflight
+            );
+        }
+        if let Some(p) = self.rtt.latency_percentiles() {
+            let _ = writeln!(
+                out,
+                "  rtt p50 {:.0} µs · p95 {:.0} µs · p99 {:.0} µs{}",
+                p.p50_us,
+                p.p95_us,
+                p.p99_us,
+                if p.approx { " (~estimated)" } else { "" }
+            );
+        }
+        out
+    }
+}

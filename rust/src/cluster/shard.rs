@@ -1,0 +1,287 @@
+//! One cluster shard: an [`Engine`] behind a TCP listener speaking the
+//! [`wire`](super::wire) protocol.
+//!
+//! The readiness handshake mirrors the engine's worker handshake
+//! (PR 4): [`ShardServer::spawn`] returns only after the engine is
+//! built (every worker reported its backends up) **and** the listener
+//! is bound — so a caller holding a [`ShardHandle`] knows the shard
+//! serves, the same way `EngineBuilder::build` returning `Ok` means
+//! every lane serves. Over a socket the same promise is the `Hello`
+//! frame: it is written first on every connection, so a client that
+//! has read it knows the models behind the wire are compiled and
+//! their workers are up.
+//!
+//! Per connection, a reader thread decodes `Submit` frames and turns
+//! them into engine tickets; a completer thread redeems the tickets in
+//! submission order and writes each one's terminal `Done`/`Failed`
+//! frame. Submissions the engine rejects up front (shape, unknown
+//! model) complete as `Failed` with the engine's typed kind — the
+//! in-process "typed completion, never a hang" contract, frame for
+//! frame.
+
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::engine::{Engine, InferSession, Ticket};
+
+use super::wire::{FailKind, Message, WireModel};
+
+/// A running shard server. Dropping the handle performs a graceful
+/// [`ShardHandle::shutdown`].
+pub struct ShardServer;
+
+/// Control handle for one spawned shard.
+pub struct ShardHandle {
+    name: String,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ShardServer {
+    /// Bind `listen` and serve `engine` over it. The engine is moved
+    /// into the accept thread (engines are `Send` but not `Sync`);
+    /// connection threads hold cheap [`InferSession`] clones.
+    pub fn spawn(
+        name: impl Into<String>,
+        engine: Engine,
+        listen: SocketAddr,
+    ) -> crate::Result<ShardHandle> {
+        let name = name.into();
+        let listener = TcpListener::bind(listen).map_err(|e| {
+            crate::Error::Coordinator(format!("shard `{name}` cannot bind {listen}: {e}"))
+        })?;
+        let addr = listener.local_addr().map_err(|e| {
+            crate::Error::Coordinator(format!("shard `{name}`: local_addr failed: {e}"))
+        })?;
+        let hello = Message::Hello {
+            shard: name.clone(),
+            models: engine
+                .models()
+                .iter()
+                .map(|m| WireModel {
+                    name: m.name().to_string(),
+                    in_c: m.input_channels().unwrap_or(0) as u32,
+                    in_hw: m.input_hw().unwrap_or(0) as u32,
+                })
+                .collect(),
+        };
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let stop = Arc::clone(&stop);
+            let conns = Arc::clone(&conns);
+            let shard = name.clone();
+            std::thread::spawn(move || {
+                let mut workers: Vec<JoinHandle<()>> = Vec::new();
+                while !stop.load(Ordering::SeqCst) {
+                    let stream = match listener.accept() {
+                        Ok((s, _)) => s,
+                        Err(e) => {
+                            if stop.load(Ordering::SeqCst) {
+                                break;
+                            }
+                            eprintln!("shard `{shard}`: accept failed: {e}");
+                            continue;
+                        }
+                    };
+                    if stop.load(Ordering::SeqCst) {
+                        break; // the unblocking self-connect
+                    }
+                    conns.lock().unwrap().push(match stream.try_clone() {
+                        Ok(c) => c,
+                        Err(e) => {
+                            eprintln!("shard `{shard}`: clone failed: {e}");
+                            continue;
+                        }
+                    });
+                    match serve_connection(&shard, stream, engine.session(), &hello) {
+                        Ok(mut handles) => workers.append(&mut handles),
+                        Err(e) => eprintln!("shard `{shard}`: connection setup failed: {e}"),
+                    }
+                }
+                // Connection threads first (their completers may still
+                // be redeeming tickets from the live engine), then the
+                // engine itself (drains lanes, joins workers).
+                for h in workers {
+                    let _ = h.join();
+                }
+                drop(engine);
+            })
+        };
+        Ok(ShardHandle { name, addr, stop, conns, accept: Some(accept) })
+    }
+}
+
+/// Set up one connection's reader + completer threads. The reader owns
+/// the read half, the completer the write half; only the completer
+/// writes after the `Hello` below, so frames never interleave.
+fn serve_connection(
+    shard: &str,
+    stream: TcpStream,
+    session: InferSession,
+    hello: &Message,
+) -> std::io::Result<Vec<JoinHandle<()>>> {
+    let _ = stream.set_nodelay(true);
+    let mut write_half = stream.try_clone()?;
+    hello.encode_to(&mut write_half)?;
+    write_half.flush()?;
+
+    // Reader → completer: submission order, ticket or up-front typed
+    // rejection.
+    type Slot = (u64, Result<Ticket, (FailKind, String)>);
+    let (tx, rx) = channel::<Slot>();
+
+    let reader = {
+        let session = session.clone();
+        let shard = shard.to_string();
+        std::thread::spawn(move || read_loop(&shard, stream, &session, &tx))
+    };
+    let completer = {
+        let shard = shard.to_string();
+        std::thread::spawn(move || complete_loop(&shard, write_half, &session, &rx))
+    };
+    Ok(vec![reader, completer])
+}
+
+/// Decode submissions until the peer hangs up (or violates the
+/// protocol) and hand each one to the completer.
+fn read_loop(
+    shard: &str,
+    mut stream: TcpStream,
+    session: &InferSession,
+    tx: &Sender<(u64, Result<Ticket, (FailKind, String)>)>,
+) {
+    loop {
+        match Message::decode_from(&mut stream) {
+            Ok(Message::Submit { seq, model, shape, image }) => {
+                let slot = submit_one(session, &model, shape, image);
+                if tx.send((seq, slot)).is_err() {
+                    break; // completer died (socket gone)
+                }
+            }
+            Ok(Message::Shutdown) => break,
+            Ok(other) => {
+                eprintln!("shard `{shard}`: client sent unexpected {other:?}; closing");
+                break;
+            }
+            Err(e) => {
+                if !e.is_disconnect() {
+                    eprintln!("shard `{shard}`: dropping connection: {e}");
+                }
+                break;
+            }
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Read);
+}
+
+/// One submission → engine ticket, or its typed up-front rejection.
+fn submit_one(
+    session: &InferSession,
+    model: &str,
+    shape: [u32; 3],
+    image: Vec<i32>,
+) -> Result<Ticket, (FailKind, String)> {
+    let dims: Vec<usize> = shape.iter().map(|&d| d as usize).collect();
+    let tensor = crate::model::Tensor::from_vec(&dims, image)
+        .map_err(|e| (FailKind::from_engine_error(&e), e.to_string()))?;
+    session
+        .submit(model, tensor)
+        .map_err(|e| (FailKind::from_engine_error(&e), e.to_string()))
+}
+
+/// Redeem tickets in submission order and write each terminal frame.
+/// An engine-side failure (the PR 4 `Completion::Failed` path) crosses
+/// the wire as a typed `Failed`, never a dropped seq.
+fn complete_loop(
+    shard: &str,
+    mut stream: TcpStream,
+    session: &InferSession,
+    rx: &Receiver<(u64, Result<Ticket, (FailKind, String)>)>,
+) {
+    while let Ok((seq, slot)) = rx.recv() {
+        let frame = match slot {
+            Ok(ticket) => match session.wait(&ticket) {
+                Ok(resp) => Message::Done {
+                    seq,
+                    argmax: resp.argmax as u32,
+                    latency_us: resp.latency_us,
+                    sim_cycles: resp.sim_cycles,
+                    batch_size: resp.batch_size as u32,
+                    logits: resp.logits,
+                },
+                Err(e) => Message::Failed {
+                    seq,
+                    kind: FailKind::from_engine_error(&e),
+                    error: e.to_string(),
+                },
+            },
+            Err((kind, error)) => Message::Failed { seq, kind, error },
+        };
+        if frame.encode_to(&mut stream).is_err() {
+            // Client is gone; drain remaining tickets so the engine's
+            // completion store does not accumulate unredeemed entries.
+            for (_, slot) in rx.try_iter() {
+                if let Ok(t) = slot {
+                    let _ = session.wait(&t);
+                }
+            }
+            break;
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Write);
+    let _ = shard; // name kept for symmetry with read_loop diagnostics
+}
+
+impl ShardHandle {
+    /// The bound address (resolves `:0` requests to the real port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Graceful stop: refuse new connections, half-close every open
+    /// connection's read side (clients' in-flight requests still
+    /// complete and their frames still flush), drain the engine, join
+    /// every thread.
+    pub fn shutdown(mut self) {
+        self.stop_with(Shutdown::Read);
+    }
+
+    /// Abrupt stop — the kill drill. Both socket halves close
+    /// immediately, so clients see EOF *while requests are
+    /// outstanding*; the router must complete every one of them as a
+    /// typed failure (`tests/cluster.rs` pins this).
+    pub fn kill(mut self) {
+        self.stop_with(Shutdown::Both);
+    }
+
+    fn stop_with(&mut self, how: Shutdown) {
+        self.stop.store(true, Ordering::SeqCst);
+        for c in self.conns.lock().unwrap().iter() {
+            let _ = c.shutdown(how);
+        }
+        // Unblock the accept loop.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ShardHandle {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.stop_with(Shutdown::Read);
+        }
+    }
+}

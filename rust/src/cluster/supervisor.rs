@@ -1,0 +1,410 @@
+//! Shard process supervision: spawn N `tetris shard` children, watch
+//! them, restart crashes — bounded by a [`CrashLoopBreaker`].
+//!
+//! Each child is spawned with `--supervised` (it exits when its stdin
+//! closes, so no shard outlives a dead supervisor) and announces
+//! readiness by printing `tetris-shard ready addr=<ip:port>` on
+//! stdout — the process-level readiness handshake, mirroring the
+//! in-process worker handshake: [`Supervisor::start`] returns only
+//! after **every** shard printed it, so the returned addresses are
+//! live listeners. First spawns bind port 0 and report the kernel's
+//! pick; restarts re-bind the same port when the kernel has released
+//! it (falling back to a fresh port otherwise — `Supervisor::addrs`
+//! always reports the current one). A restarted shard serves *new*
+//! connections — routers are fail-fast by contract and do not
+//! resubscribe.
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader};
+use std::net::SocketAddr;
+use std::path::{Path, PathBuf};
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// The stdout line a shard prints once it serves (keep in sync with
+/// `cluster::shard_main`).
+pub const READY_PREFIX: &str = "tetris-shard ready addr=";
+
+/// Supervisor configuration.
+#[derive(Debug, Clone)]
+pub struct SupervisorConfig {
+    /// Binary to exec. `None` = the current executable — tests
+    /// override this with `env!("CARGO_BIN_EXE_tetris")` because their
+    /// own `current_exe` is the test binary.
+    pub program: Option<PathBuf>,
+    /// Shard process count.
+    pub shards: usize,
+    /// Model-set spec forwarded verbatim to every shard (same spec +
+    /// same seed ⇒ identical weights on every shard — what makes
+    /// routed logits bit-exact against a single engine).
+    pub models: String,
+    /// Worker threads per shard engine.
+    pub workers: usize,
+    pub seed: u64,
+    pub max_batch: usize,
+    /// Crash-loop breaker: more than `max_restarts` crashes of one
+    /// shard inside `restart_window` stops restarting it.
+    pub max_restarts: usize,
+    pub restart_window: Duration,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        Self {
+            program: None,
+            shards: crate::engine::env::shards(),
+            models: "tiny".into(),
+            workers: 1,
+            seed: 0x7e7215,
+            max_batch: 8,
+            max_restarts: 3,
+            restart_window: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Sliding-window crash counter. `record_crash` returns `false` once
+/// the window holds more than the allowed number of crashes — the
+/// breaker has tripped and the shard stays down.
+#[derive(Debug)]
+pub struct CrashLoopBreaker {
+    max_restarts: usize,
+    window: Duration,
+    crashes: VecDeque<Instant>,
+}
+
+impl CrashLoopBreaker {
+    pub fn new(max_restarts: usize, window: Duration) -> Self {
+        Self { max_restarts, window, crashes: VecDeque::new() }
+    }
+
+    /// Record a crash at `now`; `true` = restart, `false` = tripped.
+    pub fn record_crash(&mut self, now: Instant) -> bool {
+        self.crashes.push_back(now);
+        while let Some(&front) = self.crashes.front() {
+            if now.duration_since(front) > self.window {
+                self.crashes.pop_front();
+            } else {
+                break;
+            }
+        }
+        self.crashes.len() <= self.max_restarts
+    }
+}
+
+/// The current child process of one slot (also holds its stdin: drop
+/// it and a `--supervised` shard exits).
+struct ChildProc {
+    child: Child,
+    stdin: Option<ChildStdin>,
+}
+
+/// One shard slot's state, shared between the supervisor handle and
+/// the slot's monitor thread.
+struct SlotShared {
+    name: String,
+    /// Current listen address. Restarts try to re-bind the same port;
+    /// when the kernel still holds it (TIME_WAIT from the dead child's
+    /// connections — `std` exposes no `SO_REUSEADDR`), the respawn
+    /// falls back to a fresh port and this updates.
+    addr: Mutex<SocketAddr>,
+    child: Mutex<Option<ChildProc>>,
+    restarts: AtomicU64,
+    broken: AtomicBool,
+}
+
+/// Running supervisor: N shard children + one monitor thread each.
+pub struct Supervisor {
+    stop: Arc<AtomicBool>,
+    slots: Vec<Arc<SlotShared>>,
+    monitors: Vec<JoinHandle<()>>,
+}
+
+impl Supervisor {
+    /// Spawn every shard and block until each printed its ready line.
+    pub fn start(config: SupervisorConfig) -> crate::Result<Supervisor> {
+        if config.shards == 0 {
+            return Err(crate::Error::Config("supervisor needs at least one shard".into()));
+        }
+        let program = match &config.program {
+            Some(p) => p.clone(),
+            None => std::env::current_exe().map_err(|e| {
+                crate::Error::Coordinator(format!("cannot resolve current executable: {e}"))
+            })?,
+        };
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut slots = Vec::with_capacity(config.shards);
+        let mut monitors = Vec::with_capacity(config.shards);
+        for i in 0..config.shards {
+            let name = format!("shard-{i}");
+            let (proc_, reader, addr) = spawn_shard(&program, &name, None, &config)?;
+            let slot = Arc::new(SlotShared {
+                name: name.clone(),
+                addr: Mutex::new(addr),
+                child: Mutex::new(Some(proc_)),
+                restarts: AtomicU64::new(0),
+                broken: AtomicBool::new(false),
+            });
+            slots.push(Arc::clone(&slot));
+            let stop = Arc::clone(&stop);
+            let program = program.clone();
+            let config = config.clone();
+            monitors.push(std::thread::spawn(move || {
+                monitor_slot(&slot, reader, &program, &config, &stop);
+            }));
+        }
+        Ok(Supervisor { stop, slots, monitors })
+    }
+
+    /// Every slot's current listen address, slot order. Stable across
+    /// restarts except when the old port was still held by the kernel.
+    pub fn addrs(&self) -> Vec<SocketAddr> {
+        self.slots.iter().map(|s| *s.addr.lock().unwrap()).collect()
+    }
+
+    /// Kill one shard's current child (the drill). The monitor sees
+    /// the exit and restarts it on the same port unless the breaker
+    /// trips. Returns `false` when the slot has no live child.
+    pub fn kill_shard(&self, slot: usize) -> bool {
+        let Some(slot) = self.slots.get(slot) else {
+            return false;
+        };
+        let mut guard = slot.child.lock().unwrap();
+        match guard.as_mut() {
+            Some(p) => {
+                let _ = p.child.kill();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// How many times a slot has been restarted.
+    pub fn restarts(&self, slot: usize) -> u64 {
+        self.slots.get(slot).map_or(0, |s| s.restarts.load(Ordering::SeqCst))
+    }
+
+    /// Whether a slot's crash-loop breaker tripped.
+    pub fn is_broken(&self, slot: usize) -> bool {
+        self.slots.get(slot).is_some_and(|s| s.broken.load(Ordering::SeqCst))
+    }
+
+    /// Stop every shard: close its stdin (graceful `--supervised`
+    /// exit), escalate to kill after a grace period, join monitors.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let taken: Vec<Option<ChildProc>> =
+            self.slots.iter().map(|s| s.child.lock().unwrap().take()).collect();
+        for proc_ in taken.into_iter().flatten() {
+            reap(proc_, Duration::from_secs(5));
+        }
+        for m in self.monitors.drain(..) {
+            let _ = m.join();
+        }
+    }
+}
+
+impl Drop for Supervisor {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let taken: Vec<Option<ChildProc>> =
+            self.slots.iter().map(|s| s.child.lock().unwrap().take()).collect();
+        for proc_ in taken.into_iter().flatten() {
+            reap(proc_, Duration::from_secs(5));
+        }
+        for m in self.monitors.drain(..) {
+            let _ = m.join();
+        }
+    }
+}
+
+/// Close stdin, give the child a grace period, then kill.
+fn reap(mut proc_: ChildProc, grace: Duration) {
+    drop(proc_.stdin.take()); // --supervised children exit on stdin EOF
+    let deadline = Instant::now() + grace;
+    loop {
+        match proc_.child.try_wait() {
+            Ok(Some(_)) => return,
+            Ok(None) => {
+                if Instant::now() >= deadline {
+                    let _ = proc_.child.kill();
+                    let _ = proc_.child.wait();
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+/// Spawn one shard child and block until its ready line. `port: None`
+/// binds port 0 (kernel-assigned); `Some(p)` re-binds a known port.
+fn spawn_shard(
+    program: &Path,
+    name: &str,
+    port: Option<u16>,
+    config: &SupervisorConfig,
+) -> crate::Result<(ChildProc, BufReader<ChildStdout>, SocketAddr)> {
+    let listen = format!("127.0.0.1:{}", port.unwrap_or(0));
+    let mut child = Command::new(program)
+        .args([
+            "shard",
+            "--listen",
+            &listen,
+            "--name",
+            name,
+            "--models",
+            &config.models,
+            "--workers",
+            &config.workers.to_string(),
+            "--seed",
+            &format!("{:#x}", config.seed),
+            "--max-batch",
+            &config.max_batch.to_string(),
+            "--supervised",
+        ])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .map_err(|e| {
+            crate::Error::Coordinator(format!(
+                "spawning `{}` for {name} failed: {e}",
+                program.display()
+            ))
+        })?;
+    let stdin = child.stdin.take();
+    let stdout = child.stdout.take().ok_or_else(|| {
+        crate::Error::Coordinator(format!("{name}: child stdout was not captured"))
+    })?;
+    let mut reader = BufReader::new(stdout);
+    // The readiness handshake: forward lines until the ready
+    // announcement. EOF first means the child died during startup.
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line).map_err(|e| {
+            crate::Error::Coordinator(format!("{name}: reading child stdout failed: {e}"))
+        })?;
+        if n == 0 {
+            let status = child.wait().ok();
+            return Err(crate::Error::Coordinator(format!(
+                "{name} exited before reporting readiness (status {status:?})"
+            )));
+        }
+        let trimmed = line.trim();
+        if let Some(addr) = trimmed.strip_prefix(READY_PREFIX) {
+            let addr: SocketAddr = addr.parse().map_err(|e| {
+                crate::Error::Coordinator(format!("{name}: bad ready line {trimmed:?}: {e}"))
+            })?;
+            return Ok((ChildProc { child, stdin }, reader, addr));
+        }
+        println!("{name}| {trimmed}");
+    }
+}
+
+/// One slot's monitor loop: forward the child's stdout, reap it on
+/// exit, restart on the same port until asked to stop or the breaker
+/// trips.
+fn monitor_slot(
+    slot: &Arc<SlotShared>,
+    mut reader: BufReader<ChildStdout>,
+    program: &Path,
+    config: &SupervisorConfig,
+    stop: &Arc<AtomicBool>,
+) {
+    let mut breaker = CrashLoopBreaker::new(config.max_restarts, config.restart_window);
+    loop {
+        // Forward output until EOF (child exited or was killed).
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match reader.read_line(&mut line) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => println!("{}| {}", slot.name, line.trim_end()),
+            }
+        }
+        // Reap whatever child the slot still holds (shutdown may have
+        // taken it already).
+        let status = {
+            let mut guard = slot.child.lock().unwrap();
+            guard.take().map(|mut p| p.child.wait())
+        };
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        eprintln!(
+            "supervisor: {} exited unexpectedly ({:?})",
+            slot.name,
+            status.map(|s| s.map(|st| st.to_string()))
+        );
+        if !breaker.record_crash(Instant::now()) {
+            eprintln!(
+                "supervisor: {} crash-loop breaker tripped ({} crashes in {:?}); not restarting",
+                slot.name, config.max_restarts + 1, config.restart_window
+            );
+            slot.broken.store(true, Ordering::SeqCst);
+            break;
+        }
+        // Give the kernel a beat to release the port, then respawn —
+        // same port when possible, a fresh one when the kernel still
+        // holds it (dead child's TIME_WAIT connections).
+        std::thread::sleep(Duration::from_millis(50));
+        let port = slot.addr.lock().unwrap().port();
+        let respawn = spawn_shard(program, &slot.name, Some(port), config).or_else(|e| {
+            eprintln!(
+                "supervisor: re-binding {} on port {port} failed ({e}); taking a fresh port",
+                slot.name
+            );
+            spawn_shard(program, &slot.name, None, config)
+        });
+        match respawn {
+            Ok((proc_, new_reader, addr)) => {
+                *slot.addr.lock().unwrap() = addr;
+                *slot.child.lock().unwrap() = Some(proc_);
+                slot.restarts.fetch_add(1, Ordering::SeqCst);
+                eprintln!("supervisor: {} restarted on {addr}", slot.name);
+                reader = new_reader;
+            }
+            Err(e) => {
+                eprintln!("supervisor: restarting {} failed: {e}", slot.name);
+                if !breaker.record_crash(Instant::now()) {
+                    slot.broken.store(true, Ordering::SeqCst);
+                    break;
+                }
+                // Leave an empty reader so the next loop iteration
+                // falls straight through to another restart attempt.
+                continue;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breaker_allows_spaced_crashes_and_trips_on_bursts() {
+        let t0 = Instant::now();
+        let mut b = CrashLoopBreaker::new(3, Duration::from_secs(10));
+        // Three crashes inside the window: still restarting.
+        assert!(b.record_crash(t0));
+        assert!(b.record_crash(t0 + Duration::from_secs(1)));
+        assert!(b.record_crash(t0 + Duration::from_secs(2)));
+        // Fourth inside the window trips it.
+        assert!(!b.record_crash(t0 + Duration::from_secs(3)));
+
+        // Crashes spaced wider than the window never accumulate.
+        let mut s = CrashLoopBreaker::new(1, Duration::from_secs(5));
+        assert!(s.record_crash(t0));
+        assert!(s.record_crash(t0 + Duration::from_secs(6)));
+        assert!(s.record_crash(t0 + Duration::from_secs(12)));
+        // ...but two in quick succession do.
+        assert!(!s.record_crash(t0 + Duration::from_secs(12) + Duration::from_millis(1)));
+    }
+}

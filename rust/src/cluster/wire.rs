@@ -1,0 +1,675 @@
+//! Length-prefixed binary wire codec for the cluster serving protocol.
+//!
+//! The engine's submit/poll/wait ticket contract (PR 4), flattened
+//! onto a byte stream: a client sends [`Message::Submit`] frames and
+//! the shard answers each `seq` with exactly one terminal
+//! [`Message::Done`] or [`Message::Failed`] — the same
+//! "typed completion, never a hang" contract `engine::serve::
+//! Completion` enforces in-process, extended across a socket. A shard
+//! opens every connection with a [`Message::Hello`] advertising its
+//! registered models (the readiness handshake, mirroring the engine's
+//! worker handshake: a client that read `Hello` knows the engine
+//! behind the socket compiled and came up).
+//!
+//! ## Frame layout (little-endian)
+//!
+//! ```text
+//! byte 0      MAGIC (0x54, 'T')
+//! byte 1      VERSION (1)
+//! byte 2      message kind
+//! bytes 3..7  payload length, u32
+//! bytes 7..   payload
+//! last 4      FNV-1a-32 checksum of the payload
+//! ```
+//!
+//! Every decode failure is a typed [`WireError`] — truncation, a
+//! corrupt checksum, an unknown version or kind, an oversize length —
+//! so a router never trusts a damaged frame and a shard never executes
+//! one. The codec is pure `std` over `Read`/`Write`, unit-testable on
+//! in-memory buffers, and property-swept in `tests/cluster.rs`.
+
+use std::io::{Read, Write};
+
+/// Protocol magic byte (`'T'` for Tetris).
+pub const MAGIC: u8 = 0x54;
+
+/// Wire protocol version. Bump on any frame- or payload-layout change;
+/// decoders reject every other version with [`WireError::BadVersion`].
+pub const WIRE_VERSION: u8 = 1;
+
+/// Upper bound on one frame's payload (64 MiB). A corrupt or hostile
+/// length prefix is rejected before any allocation happens.
+pub const MAX_PAYLOAD: u32 = 64 << 20;
+
+/// Typed decode failure. `Io` covers transport errors (a peer that
+/// vanished mid-frame reads as `Io(UnexpectedEof)`).
+#[derive(Debug)]
+pub enum WireError {
+    Io(std::io::Error),
+    BadMagic(u8),
+    BadVersion(u8),
+    BadKind(u8),
+    BadChecksum { want: u32, got: u32 },
+    Oversize(u32),
+    Malformed(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "wire I/O: {e}"),
+            WireError::BadMagic(b) => write!(f, "bad frame magic 0x{b:02x}"),
+            WireError::BadVersion(v) => {
+                write!(f, "wire version {v} (this build speaks {WIRE_VERSION})")
+            }
+            WireError::BadKind(k) => write!(f, "unknown message kind {k}"),
+            WireError::BadChecksum { want, got } => {
+                write!(f, "frame checksum mismatch (want {want:#010x}, got {got:#010x})")
+            }
+            WireError::Oversize(n) => {
+                write!(f, "frame payload {n} bytes exceeds the {MAX_PAYLOAD}-byte bound")
+            }
+            WireError::Malformed(msg) => write!(f, "malformed payload: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+impl From<WireError> for crate::Error {
+    fn from(e: WireError) -> Self {
+        crate::Error::Coordinator(format!("cluster wire: {e}"))
+    }
+}
+
+impl WireError {
+    /// True when the failure is a clean end-of-stream *between* frames
+    /// (the peer hung up) rather than damage inside one.
+    pub fn is_disconnect(&self) -> bool {
+        matches!(self, WireError::Io(e)
+            if e.kind() == std::io::ErrorKind::UnexpectedEof
+            || e.kind() == std::io::ErrorKind::ConnectionReset
+            || e.kind() == std::io::ErrorKind::BrokenPipe)
+    }
+}
+
+/// Why a request failed, preserved across the wire so the router can
+/// surface the same typed error the engine raised — plus the
+/// router-side kinds (`ShardDown`, `Timeout`) that only exist once a
+/// network sits between submit and completion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailKind {
+    /// Submission rejected up front (bad image shape).
+    Shape,
+    /// No such model / configuration rejection.
+    Config,
+    /// The batch failed at the backend (the PR 4 typed batch-failure
+    /// contract, forwarded).
+    Backend,
+    /// The shard's connection died with this request outstanding —
+    /// raised by the *router*, never sent by a healthy shard.
+    ShardDown,
+    /// The router-side deadline expired before a completion arrived.
+    Timeout,
+    /// The peer violated the wire protocol.
+    Protocol,
+}
+
+impl FailKind {
+    fn to_u8(self) -> u8 {
+        match self {
+            FailKind::Shape => 0,
+            FailKind::Config => 1,
+            FailKind::Backend => 2,
+            FailKind::ShardDown => 3,
+            FailKind::Timeout => 4,
+            FailKind::Protocol => 5,
+        }
+    }
+
+    fn from_u8(b: u8) -> Result<Self, WireError> {
+        Ok(match b {
+            0 => FailKind::Shape,
+            1 => FailKind::Config,
+            2 => FailKind::Backend,
+            3 => FailKind::ShardDown,
+            4 => FailKind::Timeout,
+            5 => FailKind::Protocol,
+            other => return Err(WireError::Malformed(format!("failure kind {other}"))),
+        })
+    }
+
+    /// Classify an engine-side error for the wire (`Shape`/`Config`
+    /// rejections keep their kind; everything else is a backend
+    /// failure).
+    pub fn from_engine_error(e: &crate::Error) -> Self {
+        match e {
+            crate::Error::Shape(_) => FailKind::Shape,
+            crate::Error::Config(_) => FailKind::Config,
+            _ => FailKind::Backend,
+        }
+    }
+}
+
+impl std::fmt::Display for FailKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            FailKind::Shape => "shape",
+            FailKind::Config => "config",
+            FailKind::Backend => "backend",
+            FailKind::ShardDown => "shard-down",
+            FailKind::Timeout => "timeout",
+            FailKind::Protocol => "protocol",
+        };
+        f.write_str(s)
+    }
+}
+
+/// One model a shard advertises in its [`Message::Hello`]: the name
+/// plus the input shape submissions are validated against (0 = the
+/// model declared no fixed extent).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireModel {
+    pub name: String,
+    pub in_c: u32,
+    pub in_hw: u32,
+}
+
+/// One protocol message. `Submit` → exactly one `Done` | `Failed` per
+/// `seq`; `Hello` opens every shard→client stream; `Shutdown` asks the
+/// peer to close cleanly after draining.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Shard → client readiness handshake: identity + registered
+    /// models.
+    Hello { shard: String, models: Vec<WireModel> },
+    /// Client → shard: one (C, H, W) Q8.8 image for `model`.
+    Submit { seq: u64, model: String, shape: [u32; 3], image: Vec<i32> },
+    /// Shard → client: the request's terminal success (logits +
+    /// engine-side latency/cycle accounting).
+    Done {
+        seq: u64,
+        argmax: u32,
+        latency_us: f64,
+        sim_cycles: u64,
+        batch_size: u32,
+        logits: Vec<i32>,
+    },
+    /// Shard → client (or router-internal): the request's terminal
+    /// typed failure.
+    Failed { seq: u64, kind: FailKind, error: String },
+    /// Either direction: drain and close.
+    Shutdown,
+}
+
+impl Message {
+    fn kind_byte(&self) -> u8 {
+        match self {
+            Message::Hello { .. } => 1,
+            Message::Submit { .. } => 2,
+            Message::Done { .. } => 3,
+            Message::Failed { .. } => 4,
+            Message::Shutdown => 5,
+        }
+    }
+
+    /// Encode one frame onto a writer (header + payload + checksum).
+    pub fn encode_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        let payload = self.payload();
+        debug_assert!(payload.len() <= MAX_PAYLOAD as usize);
+        let mut frame = Vec::with_capacity(payload.len() + 11);
+        frame.push(MAGIC);
+        frame.push(WIRE_VERSION);
+        frame.push(self.kind_byte());
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        frame.extend_from_slice(&fnv1a32(&payload).to_le_bytes());
+        w.write_all(&frame)
+    }
+
+    /// Encode into a fresh byte vector (tests, buffered writers).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        self.encode_to(&mut buf).expect("Vec<u8> writes are infallible");
+        buf
+    }
+
+    /// Decode exactly one frame from a reader. Blocks until the frame
+    /// is complete; any damage or truncation is a typed [`WireError`].
+    pub fn decode_from(r: &mut impl Read) -> Result<Message, WireError> {
+        let mut head = [0u8; 7];
+        r.read_exact(&mut head)?;
+        if head[0] != MAGIC {
+            return Err(WireError::BadMagic(head[0]));
+        }
+        if head[1] != WIRE_VERSION {
+            return Err(WireError::BadVersion(head[1]));
+        }
+        let kind = head[2];
+        let len = u32::from_le_bytes([head[3], head[4], head[5], head[6]]);
+        if len > MAX_PAYLOAD {
+            return Err(WireError::Oversize(len));
+        }
+        let mut payload = vec![0u8; len as usize];
+        r.read_exact(&mut payload)?;
+        let mut sum = [0u8; 4];
+        r.read_exact(&mut sum)?;
+        let got = u32::from_le_bytes(sum);
+        let want = fnv1a32(&payload);
+        if got != want {
+            return Err(WireError::BadChecksum { want, got });
+        }
+        Self::from_payload(kind, &payload)
+    }
+
+    fn payload(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        match self {
+            Message::Hello { shard, models } => {
+                e.str(shard);
+                e.u32(models.len() as u32);
+                for m in models {
+                    e.str(&m.name);
+                    e.u32(m.in_c);
+                    e.u32(m.in_hw);
+                }
+            }
+            Message::Submit { seq, model, shape, image } => {
+                e.u64(*seq);
+                e.str(model);
+                for d in shape {
+                    e.u32(*d);
+                }
+                e.u32(image.len() as u32);
+                for v in image {
+                    e.i32(*v);
+                }
+            }
+            Message::Done { seq, argmax, latency_us, sim_cycles, batch_size, logits } => {
+                e.u64(*seq);
+                e.u32(*argmax);
+                e.u64(latency_us.to_bits());
+                e.u64(*sim_cycles);
+                e.u32(*batch_size);
+                e.u32(logits.len() as u32);
+                for v in logits {
+                    e.i32(*v);
+                }
+            }
+            Message::Failed { seq, kind, error } => {
+                e.u64(*seq);
+                e.u8(kind.to_u8());
+                e.str(error);
+            }
+            Message::Shutdown => {}
+        }
+        e.buf
+    }
+
+    fn from_payload(kind: u8, payload: &[u8]) -> Result<Message, WireError> {
+        let mut d = Dec::new(payload);
+        let msg = match kind {
+            1 => {
+                let shard = d.str()?;
+                let n = d.u32()? as usize;
+                let mut models = Vec::with_capacity(n.min(1024));
+                for _ in 0..n {
+                    models.push(WireModel { name: d.str()?, in_c: d.u32()?, in_hw: d.u32()? });
+                }
+                Message::Hello { shard, models }
+            }
+            2 => {
+                let seq = d.u64()?;
+                let model = d.str()?;
+                let shape = [d.u32()?, d.u32()?, d.u32()?];
+                let n = d.u32()? as usize;
+                let want: usize = shape.iter().map(|&x| x as usize).product();
+                if n != want {
+                    return Err(WireError::Malformed(format!(
+                        "submit image carries {n} values for shape {shape:?} ({want})"
+                    )));
+                }
+                let mut image = Vec::with_capacity(n);
+                for _ in 0..n {
+                    image.push(d.i32()?);
+                }
+                Message::Submit { seq, model, shape, image }
+            }
+            3 => {
+                let seq = d.u64()?;
+                let argmax = d.u32()?;
+                let latency_us = f64::from_bits(d.u64()?);
+                let sim_cycles = d.u64()?;
+                let batch_size = d.u32()?;
+                let n = d.u32()? as usize;
+                let mut logits = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    logits.push(d.i32()?);
+                }
+                Message::Done { seq, argmax, latency_us, sim_cycles, batch_size, logits }
+            }
+            4 => {
+                let seq = d.u64()?;
+                let kind = FailKind::from_u8(d.u8()?)?;
+                let error = d.str()?;
+                Message::Failed { seq, kind, error }
+            }
+            5 => Message::Shutdown,
+            other => return Err(WireError::BadKind(other)),
+        };
+        d.finish()?;
+        Ok(msg)
+    }
+}
+
+/// FNV-1a 32-bit over a byte slice — cheap, dependency-free, and
+/// plenty for catching torn/corrupt frames (this is an integrity
+/// check, not an authenticity one).
+pub fn fnv1a32(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811C_9DC5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// 64-bit FNV-1a over several byte slices — the rendezvous-hash score
+/// primitive (`router::rendezvous_rank`).
+pub fn fnv1a64(parts: &[&[u8]]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for part in parts {
+        for &b in *part {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        // Delimit parts so ("ab","c") never collides with ("a","bc").
+        h ^= 0xFF;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Little-endian payload encoder.
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+}
+
+/// Little-endian payload decoder over a checksum-verified slice.
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len()).ok_or_else(|| {
+            WireError::Malformed(format!(
+                "payload ends at {} but field wants bytes {}..{}",
+                self.buf.len(),
+                self.pos,
+                self.pos.saturating_add(n)
+            ))
+        })?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn i32(&mut self) -> Result<i32, WireError> {
+        let b = self.take(4)?;
+        Ok(i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn str(&mut self) -> Result<String, WireError> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| WireError::Malformed("string field is not UTF-8".into()))
+    }
+
+    /// Reject trailing garbage: a payload must be consumed exactly.
+    fn finish(self) -> Result<(), WireError> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(WireError::Malformed(format!(
+                "{} trailing bytes after the message",
+                self.buf.len() - self.pos
+            )))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(m: &Message) -> Message {
+        let bytes = m.encode();
+        let mut cur = &bytes[..];
+        let back = Message::decode_from(&mut cur).expect("decode");
+        assert!(cur.is_empty(), "decode must consume the whole frame");
+        back
+    }
+
+    #[test]
+    fn all_message_kinds_roundtrip() {
+        let msgs = vec![
+            Message::Hello {
+                shard: "shard-0".into(),
+                models: vec![
+                    WireModel { name: "tiny".into(), in_c: 1, in_hw: 16 },
+                    WireModel { name: "vgg16".into(), in_c: 3, in_hw: 32 },
+                ],
+            },
+            Message::Submit {
+                seq: 42,
+                model: "tiny".into(),
+                shape: [1, 2, 3],
+                image: vec![-5, 0, 7, 123, -999, 4],
+            },
+            Message::Done {
+                seq: 42,
+                argmax: 3,
+                latency_us: 123.5,
+                sim_cycles: 99_999,
+                batch_size: 8,
+                logits: vec![i32::MIN, -1, 0, 1, i32::MAX],
+            },
+            Message::Failed { seq: 7, kind: FailKind::Backend, error: "boom".into() },
+            Message::Shutdown,
+        ];
+        for m in &msgs {
+            assert_eq!(&roundtrip(m), m);
+        }
+    }
+
+    #[test]
+    fn truncated_frames_are_rejected_at_every_length() {
+        let full = Message::Submit {
+            seq: 1,
+            model: "m".into(),
+            shape: [1, 2, 2],
+            image: vec![1, 2, 3, 4],
+        }
+        .encode();
+        for cut in 0..full.len() {
+            let mut r = &full[..cut];
+            let err = Message::decode_from(&mut r).expect_err("truncation must fail");
+            assert!(
+                matches!(err, WireError::Io(_)),
+                "cut at {cut}: got {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn corruption_is_rejected_at_every_byte() {
+        let full = Message::Failed { seq: 9, kind: FailKind::Shape, error: "bad".into() }
+            .encode();
+        for i in 0..full.len() {
+            let mut bytes = full.clone();
+            bytes[i] ^= 0x40;
+            let mut r = &bytes[..];
+            match Message::decode_from(&mut r) {
+                // A flipped payload/checksum byte must be caught by the
+                // checksum; header flips by their own typed checks; a
+                // flipped length reads the checksum from the wrong
+                // offset (mismatch) or runs off the buffer (Io).
+                Err(_) => {}
+                Ok(m) => panic!("flip at byte {i} decoded as {m:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn future_versions_and_kinds_are_rejected() {
+        let mut bytes = Message::Shutdown.encode();
+        bytes[1] = WIRE_VERSION + 1;
+        assert!(matches!(
+            Message::decode_from(&mut &bytes[..]),
+            Err(WireError::BadVersion(_))
+        ));
+        let mut bytes = Message::Shutdown.encode();
+        bytes[0] = 0x00;
+        assert!(matches!(
+            Message::decode_from(&mut &bytes[..]),
+            Err(WireError::BadMagic(0))
+        ));
+    }
+
+    #[test]
+    fn oversize_length_is_rejected_before_allocation() {
+        let mut bytes = Message::Shutdown.encode();
+        bytes[3..7].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        assert!(matches!(
+            Message::decode_from(&mut &bytes[..]),
+            Err(WireError::Oversize(_))
+        ));
+    }
+
+    #[test]
+    fn submit_shape_and_payload_must_agree() {
+        // Hand-build a Submit whose element count contradicts its
+        // shape: the decoder must reject it even though the frame
+        // checksum is valid.
+        let lying = Message::Submit {
+            seq: 1,
+            model: "m".into(),
+            shape: [1, 1, 1],
+            image: vec![1],
+        };
+        let mut bytes = lying.encode();
+        // Patch shape W from 1 to 2 inside the payload (offset: 7-byte
+        // header + 8 seq + 4 strlen + 1 "m" + 4 c + 4 h = 28), then
+        // re-checksum so only the semantic check can catch it.
+        bytes[28] = 2;
+        let len = bytes.len();
+        let payload = bytes[7..len - 4].to_vec();
+        let sum = fnv1a32(&payload).to_le_bytes();
+        bytes[len - 4..].copy_from_slice(&sum);
+        assert!(matches!(
+            Message::decode_from(&mut &bytes[..]),
+            Err(WireError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn fail_kinds_roundtrip_and_classify_engine_errors() {
+        for kind in [
+            FailKind::Shape,
+            FailKind::Config,
+            FailKind::Backend,
+            FailKind::ShardDown,
+            FailKind::Timeout,
+            FailKind::Protocol,
+        ] {
+            assert_eq!(FailKind::from_u8(kind.to_u8()).unwrap(), kind);
+        }
+        assert!(FailKind::from_u8(99).is_err());
+        assert_eq!(
+            FailKind::from_engine_error(&crate::Error::Shape("x".into())),
+            FailKind::Shape
+        );
+        assert_eq!(
+            FailKind::from_engine_error(&crate::Error::Config("x".into())),
+            FailKind::Config
+        );
+        assert_eq!(
+            FailKind::from_engine_error(&crate::Error::Coordinator("x".into())),
+            FailKind::Backend
+        );
+    }
+
+    #[test]
+    fn fnv_hashes_are_stable_and_part_delimited() {
+        // Pinned values keep the ring assignment stable across builds.
+        assert_eq!(fnv1a32(b""), 0x811C_9DC5);
+        assert_ne!(fnv1a64(&[b"ab", b"c"]), fnv1a64(&[b"a", b"bc"]));
+        assert_eq!(fnv1a64(&[b"model", b"shard"]), fnv1a64(&[b"model", b"shard"]));
+    }
+
+    #[test]
+    fn multiple_frames_stream_back_to_back() {
+        let a = Message::Submit { seq: 1, model: "x".into(), shape: [1, 1, 2], image: vec![4, 5] };
+        let b = Message::Shutdown;
+        let mut stream = a.encode();
+        stream.extend_from_slice(&b.encode());
+        let mut r = &stream[..];
+        assert_eq!(Message::decode_from(&mut r).unwrap(), a);
+        assert_eq!(Message::decode_from(&mut r).unwrap(), b);
+        assert!(r.is_empty());
+    }
+}

@@ -20,11 +20,16 @@
 //! | `TETRIS_BENCH_JSON`     | path                | none | `util::bench::Harness::json_target` sink (CLI `--json` wins) |
 //! | `TETRIS_BENCH_CSV`      | path (directory)    | none | per-bench CSV dumps (`benches/hotpath.rs`, `benches/table1_bits.rs`) |
 //! | `TETRIS_PROP_CASES`     | `usize`             | 256  | `util::prop::PropConfig` case count |
+//! | `TETRIS_LISTEN`         | `SocketAddr`        | none | `tetris shard` bind address (CLI `--listen` wins) |
+//! | `TETRIS_SHARDS`         | `usize` (min 1)     | 2    | `cluster::SupervisorConfig::default` shard count |
+//! | `TETRIS_RPC_TIMEOUT_MS` | `u64` (ms, min 1)   | 5000 | `cluster::RouterConfig::default` per-request deadline |
 
 use std::collections::BTreeSet;
+use std::net::SocketAddr;
 use std::path::PathBuf;
 use std::str::FromStr;
 use std::sync::Mutex;
+use std::time::Duration;
 
 /// Default serving feature-map budget when `TETRIS_MEM_BUDGET_MB` is
 /// unset (mirrors the pre-engine hardcoded fallback).
@@ -35,6 +40,13 @@ pub const DEFAULT_BENCH_SECONDS: f64 = 0.6;
 
 /// Default property-test case count.
 pub const DEFAULT_PROP_CASES: usize = 256;
+
+/// Default shard count when `TETRIS_SHARDS` is unset.
+pub const DEFAULT_SHARDS: usize = 2;
+
+/// Default router per-request deadline when `TETRIS_RPC_TIMEOUT_MS`
+/// is unset.
+pub const DEFAULT_RPC_TIMEOUT_MS: u64 = 5000;
 
 /// Variables that already logged a parse warning this process.
 static WARNED: Mutex<BTreeSet<&'static str>> = Mutex::new(BTreeSet::new());
@@ -115,6 +127,32 @@ pub fn prop_cases() -> usize {
     read::<usize>("TETRIS_PROP_CASES").unwrap_or(DEFAULT_PROP_CASES)
 }
 
+/// `TETRIS_LISTEN`: default bind address for `tetris shard` when no
+/// `--listen` flag is given. `None` when unset or unparsable (same
+/// warn-once contract as the numeric knobs).
+pub fn listen() -> Option<SocketAddr> {
+    read::<SocketAddr>("TETRIS_LISTEN")
+}
+
+/// `TETRIS_SHARDS`: supervisor shard count (minimum 1), defaulting to
+/// [`DEFAULT_SHARDS`].
+pub fn shards() -> usize {
+    read::<usize>("TETRIS_SHARDS").unwrap_or(DEFAULT_SHARDS).max(1)
+}
+
+/// `TETRIS_RPC_TIMEOUT_MS`: router per-request deadline in
+/// milliseconds (minimum 1), defaulting to [`DEFAULT_RPC_TIMEOUT_MS`].
+pub fn rpc_timeout_ms() -> u64 {
+    read::<u64>("TETRIS_RPC_TIMEOUT_MS")
+        .unwrap_or(DEFAULT_RPC_TIMEOUT_MS)
+        .max(1)
+}
+
+/// [`rpc_timeout_ms`] as a [`Duration`].
+pub fn rpc_timeout() -> Duration {
+    Duration::from_millis(rpc_timeout_ms())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,6 +168,10 @@ mod tests {
         assert_eq!(parse_opt::<u64>("X", Some("512")).unwrap(), Some(512));
         assert_eq!(parse_opt::<usize>("X", Some(" 8 ")).unwrap(), Some(8));
         assert_eq!(parse_opt::<f64>("X", Some("0.25")).unwrap(), Some(0.25));
+        assert_eq!(
+            parse_opt::<SocketAddr>("X", Some("127.0.0.1:7000")).unwrap(),
+            Some("127.0.0.1:7000".parse().unwrap())
+        );
     }
 
     #[test]
@@ -138,6 +180,8 @@ mod tests {
         assert!(err.contains("TETRIS_MEM_BUDGET_MB"), "{err}");
         assert!(parse_opt::<usize>("T", Some("-3")).is_err());
         assert!(parse_opt::<f64>("T", Some("")).is_err());
+        assert!(parse_opt::<SocketAddr>("TETRIS_LISTEN", Some("not-an-addr")).is_err());
+        assert!(parse_opt::<SocketAddr>("TETRIS_LISTEN", Some("127.0.0.1")).is_err(), "no port");
     }
 
     #[test]
@@ -158,6 +202,9 @@ mod tests {
         assert!(mem_budget_mb() >= 1);
         assert!(prop_cases() >= 1);
         assert!(bench_seconds() > 0.0);
+        assert!(shards() >= 1);
+        assert!(rpc_timeout_ms() >= 1);
+        assert_eq!(rpc_timeout(), Duration::from_millis(rpc_timeout_ms()));
         if let Some(t) = threads() {
             assert!(t >= 1);
         }

@@ -100,6 +100,17 @@ impl ModelMeta {
     pub fn walk(&self) -> Option<Walk> {
         self.walk
     }
+
+    /// Input channel count submissions are validated against (`None`
+    /// when the model declares no entry conv — nothing to validate).
+    pub fn input_channels(&self) -> Option<usize> {
+        self.in_c
+    }
+
+    /// Declared input spatial size submissions are validated against.
+    pub fn input_hw(&self) -> Option<usize> {
+        self.in_hw
+    }
 }
 
 /// First scheduled conv's declared input shape — (channels, spatial

@@ -13,9 +13,9 @@
 //! behavior tests (exactly-once delivery, value transparency I6)
 //! pinning this code.
 
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::backend::InferBackend;
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
@@ -199,7 +199,21 @@ impl EngineCore {
                     }
                 }
                 if !released_any && open {
-                    std::thread::yield_now();
+                    if batchers.iter().map(Batcher::pending).sum::<usize>() == 0 {
+                        // Fully idle: block on the channel instead of
+                        // spinning a core. 1 ms bounds the wait so a
+                        // max-wait deadline armed by a race is still
+                        // honored promptly.
+                        match req_rx.recv_timeout(Duration::from_millis(1)) {
+                            Ok((m, r)) => batchers[m].push(r),
+                            Err(RecvTimeoutError::Timeout) => {}
+                            Err(RecvTimeoutError::Disconnected) => open = false,
+                        }
+                    } else {
+                        // A batch is pending its max-wait deadline;
+                        // stay responsive.
+                        std::thread::yield_now();
+                    }
                 }
             }
             drop(batch_txs); // close workers

@@ -28,6 +28,9 @@
 //!   options, a multi-model registry compiled once per model, and one
 //!   [`engine::InferSession`] submit/poll surface over both backends
 //!   (kneaded-SAC and PJRT). Start here for serving.
+//! * [`cluster`] — scale-out on top of the engine: wire protocol,
+//!   TCP shard servers, a consistent-hash router, a crash-restarting
+//!   supervisor, and a fault-tolerant load generator.
 //! * [`coordinator`] — serving substrate the engine drives (request
 //!   types, dynamic batcher, metrics, backends; the legacy `Server`
 //!   shim).
@@ -39,6 +42,7 @@
 //!   these are built from scratch rather than pulled from crates.io.
 
 pub mod analysis;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod energy;

@@ -6,6 +6,8 @@
 //! tetris tune     --network vgg16 --budget-mb 1 --workers 2 [--measure]
 //! tetris knead    --network alexnet --ks 16 --mode fp16
 //! tetris serve    --requests 64 --max-batch 8 --workers 2 --network vgg16
+//! tetris shard    --listen 127.0.0.1:0 --models tiny,nin:16:64
+//! tetris cluster  --shards 2 --models tiny --requests 64 [--kill-one]
 //! tetris golden   --dir artifacts
 //! ```
 
@@ -25,6 +27,9 @@ Subcommands:
   knead            print kneading statistics for a network
   serve            start the serving engine with a synthetic load
                    (multi-model: tiny CNN + a scaled --network copy)
+  shard            serve one engine over TCP (cluster wire protocol)
+  cluster          spawn N supervised shards, route closed-loop load
+                   through the consistent-hash router, print reports
   golden           execute the AOT golden model from artifacts/ via PJRT
 
 Run `tetris <subcommand> --help` for options.
@@ -157,6 +162,66 @@ fn run() -> Result<(), String> {
                 args.get_usize("workers")?,
                 args.get_u64("seed")?,
             )
+            .map_err(|e| e.to_string())
+        }
+        Some("shard") => {
+            let args = Args::new("tetris shard — one engine behind a TCP listener")
+                .opt("listen", "", "bind address (empty = TETRIS_LISTEN, else 127.0.0.1:0)")
+                .opt("name", "shard", "shard name advertised in the Hello frame")
+                .opt("models", "tiny", "comma list of name[:scale[:hw]] entries, e.g. tiny,nin:16:64")
+                .opt("workers", "2", "worker threads in the shard's engine pool")
+                .opt("seed", "0x7e7215", "synthetic-weight seed (same seed on every shard = bit-identical models)")
+                .opt("max-batch", "8", "dynamic batcher upper bound")
+                .flag("supervised", "exit when stdin closes (set by the cluster supervisor)")
+                .parse_env(2)?;
+            let listen = match args.get("listen") {
+                "" => tetris::engine::env::listen()
+                    .unwrap_or_else(|| "127.0.0.1:0".parse().expect("static addr")),
+                s => s.parse().map_err(|e| format!("shard: bad --listen `{s}`: {e}"))?,
+            };
+            tetris::cluster::shard_main(tetris::cluster::ShardCliOpts {
+                name: args.get("name").to_string(),
+                listen,
+                models: args.get("models").to_string(),
+                workers: args.get_usize("workers")?.max(1),
+                seed: args.get_u64("seed")?,
+                max_batch: args.get_usize("max-batch")?.max(1),
+                supervised: args.get_bool("supervised"),
+            })
+            .map_err(|e| e.to_string())
+        }
+        Some("cluster") => {
+            let args = Args::new("tetris cluster — supervised shards + router + loadgen")
+                .opt("shards", "0", "shard process count (0 = TETRIS_SHARDS, default 2)")
+                .opt("models", "tiny", "comma list of name[:scale[:hw]] entries registered on every shard")
+                .opt("requests", "64", "total closed-loop requests across all clients")
+                .opt("clients", "4", "concurrent closed-loop client threads")
+                .opt("workers", "2", "worker threads per shard engine")
+                .opt("seed", "0x7e7215", "synthetic-weight + loadgen seed")
+                .opt("max-batch", "8", "per-shard dynamic batcher upper bound")
+                .opt("timeout-ms", "0", "router per-request deadline (0 = TETRIS_RPC_TIMEOUT_MS, default 5000)")
+                .flag("kill-one", "kill shard-0 mid-flight and prove typed completion of every outstanding ticket")
+                .parse_env(2)?;
+            let shards = match args.get_usize("shards")? {
+                0 => tetris::engine::env::shards(),
+                n => n,
+            };
+            let timeout = match args.get_u64("timeout-ms")? {
+                0 => tetris::engine::env::rpc_timeout(),
+                ms => std::time::Duration::from_millis(ms),
+            };
+            tetris::cluster::cluster_main(tetris::cluster::ClusterCliOpts {
+                shards,
+                models: args.get("models").to_string(),
+                requests: args.get_usize("requests")?,
+                clients: args.get_usize("clients")?.max(1),
+                workers: args.get_usize("workers")?.max(1),
+                seed: args.get_u64("seed")?,
+                max_batch: args.get_usize("max-batch")?.max(1),
+                timeout,
+                kill_one: args.get_bool("kill-one"),
+                program: None,
+            })
             .map_err(|e| e.to_string())
         }
         Some("golden") => {

@@ -1,0 +1,410 @@
+//! ISSUE 9 acceptance: cluster serving — wire codec, consistent-hash
+//! router, shard fault tolerance, supervisor restart.
+//!
+//! Pins: (a) the wire codec round-trips every message kind and rejects
+//! truncated/corrupt frames (property-swept under `TETRIS_PROP_CASES`),
+//! (b) routed logits are **bit-exact** against a single in-process
+//! engine across the scaled zoo (same model spec + seed on every
+//! shard ⇒ identical weights), (c) the rendezvous ring moves only the
+//! keys of an added/removed shard, (d) killing a shard mid-flight
+//! completes every outstanding ticket as a *typed* failure within the
+//! deadline — zero hangs — while survivors keep serving, (e) a shard
+//! that accepts but never answers is converted to `Timeout`, (f) the
+//! supervisor restarts a killed `tetris shard` child end-to-end.
+//!
+//! Tests serialize on `SERIAL`: each spins up engines/sockets and the
+//! heavier ones are wall-clock sensitive under contention.
+
+use std::io::{Read, Write};
+use std::net::TcpListener;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use tetris::cluster::wire::{FailKind, Message, WireModel};
+use tetris::cluster::{
+    loadgen, rendezvous_rank, ClusterError, ModelSetSpec, Router, RouterConfig, ShardServer,
+    Supervisor, SupervisorConfig,
+};
+use tetris::model::Tensor;
+use tetris::util::prop;
+use tetris::util::rng::Rng;
+
+/// Serializes every test here (see module docs).
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn image_for(rng: &mut Rng, c: usize, hw: usize) -> Tensor<i32> {
+    let mut t = Tensor::zeros(&[c, hw, hw]);
+    for v in t.data_mut() {
+        *v = rng.range_i64(-400, 400) as i32;
+    }
+    t
+}
+
+/// Draw one arbitrary protocol message.
+fn gen_message(rng: &mut Rng) -> Message {
+    fn gen_str(rng: &mut Rng, max: u64) -> String {
+        let len = rng.below(max);
+        (0..len).map(|_| (b'a' + rng.below(26) as u8) as char).collect()
+    }
+    match rng.below(5) {
+        0 => Message::Hello {
+            shard: gen_str(rng, 12),
+            models: (0..rng.below(4))
+                .map(|_| WireModel {
+                    name: gen_str(rng, 10),
+                    in_c: rng.below(16) as u32,
+                    in_hw: rng.below(64) as u32,
+                })
+                .collect(),
+        },
+        1 => {
+            let shape =
+                [rng.below(3) as u32 + 1, rng.below(5) as u32 + 1, rng.below(5) as u32 + 1];
+            let n = shape.iter().map(|&d| d as usize).product();
+            Message::Submit {
+                seq: rng.below(u64::MAX),
+                model: gen_str(rng, 10),
+                shape,
+                image: (0..n).map(|_| rng.range_i64(i32::MIN as i64, i32::MAX as i64) as i32).collect(),
+            }
+        }
+        2 => Message::Done {
+            seq: rng.below(u64::MAX),
+            argmax: rng.below(1000) as u32,
+            latency_us: rng.below(1 << 30) as f64 / 7.0,
+            sim_cycles: rng.below(u64::MAX),
+            batch_size: rng.below(64) as u32,
+            logits: (0..rng.below(32))
+                .map(|_| rng.range_i64(i32::MIN as i64, i32::MAX as i64) as i32)
+                .collect(),
+        },
+        3 => Message::Failed {
+            seq: rng.below(u64::MAX),
+            kind: [
+                FailKind::Shape,
+                FailKind::Config,
+                FailKind::Backend,
+                FailKind::ShardDown,
+                FailKind::Timeout,
+                FailKind::Protocol,
+            ][rng.below(6) as usize],
+            error: gen_str(rng, 40),
+        },
+        _ => Message::Shutdown,
+    }
+}
+
+/// (a) Every arbitrary message round-trips bit-exactly through the
+/// codec, consuming the frame completely.
+#[test]
+fn wire_codec_roundtrips_arbitrary_messages() {
+    let _serial = SERIAL.lock().unwrap();
+    prop::run("wire-roundtrip", gen_message, |m| {
+        let bytes = m.encode();
+        let mut r = &bytes[..];
+        let back = Message::decode_from(&mut r)
+            .map_err(|e| format!("decode failed on a clean frame: {e}"))?;
+        if !r.is_empty() {
+            return Err(format!("{} bytes of the frame were left unread", r.len()));
+        }
+        if &back != m {
+            return Err(format!("round-trip changed the message: {back:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// (a) Truncating or corrupting an arbitrary frame anywhere is always
+/// rejected — never silently decoded.
+#[test]
+fn wire_codec_rejects_truncated_and_corrupt_frames() {
+    let _serial = SERIAL.lock().unwrap();
+    prop::run(
+        "wire-damage-rejected",
+        |rng| {
+            let bytes = gen_message(rng).encode();
+            let cut = rng.below(bytes.len() as u64) as usize;
+            let flip_at = rng.below(bytes.len() as u64) as usize;
+            let flip_bits = (rng.below(255) + 1) as u8; // never 0 = identity
+            (bytes, cut, flip_at, flip_bits)
+        },
+        |(bytes, cut, flip_at, flip_bits)| {
+            if Message::decode_from(&mut &bytes[..*cut]).is_ok() {
+                return Err(format!("truncation to {cut} bytes decoded"));
+            }
+            let mut bad = bytes.clone();
+            bad[*flip_at] ^= flip_bits;
+            if let Ok(m) = Message::decode_from(&mut &bad[..]) {
+                return Err(format!("flip at {flip_at} (^{flip_bits:#04x}) decoded as {m:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (c) Rendezvous ring stability: removing a shard only moves the keys
+/// that mapped to it; adding one only pulls keys onto the newcomer.
+#[test]
+fn rendezvous_ring_moves_only_the_affected_keys() {
+    let _serial = SERIAL.lock().unwrap();
+    let shards = ["shard-0", "shard-1", "shard-2", "shard-3"];
+    let models: Vec<String> = (0..200).map(|i| format!("model-{i}")).collect();
+
+    let pick = |names: &[&str], model: &str| -> String {
+        names[rendezvous_rank(model, names)[0]].to_string()
+    };
+
+    // Remove shard-1: every key that chose another shard keeps it.
+    let without: Vec<&str> =
+        shards.iter().copied().filter(|s| *s != "shard-1").collect();
+    let mut moved = 0;
+    for m in &models {
+        let before = pick(&shards, m);
+        let after = pick(&without, m);
+        if before == "shard-1" {
+            moved += 1;
+            assert_ne!(after, "shard-1");
+        } else {
+            assert_eq!(before, after, "key `{m}` moved although its shard survived");
+        }
+    }
+    assert!(moved > 0, "no key ever mapped to the removed shard — hash is degenerate");
+
+    // Add shard-4: keys either stay put or move onto the newcomer.
+    let grown = ["shard-0", "shard-1", "shard-2", "shard-3", "shard-4"];
+    let mut gained = 0;
+    for m in &models {
+        let before = pick(&shards, m);
+        let after = pick(&grown, m);
+        if after != before {
+            assert_eq!(after, "shard-4", "key `{m}` moved between surviving shards");
+            gained += 1;
+        }
+    }
+    assert!(gained > 0, "the added shard attracted no keys");
+
+    // The full ranking is deterministic.
+    assert_eq!(rendezvous_rank("m", &shards), rendezvous_rank("m", &shards));
+}
+
+/// (b) Routed logits ≡ a single in-process engine, bit for bit, across
+/// the scaled zoo — same model spec + seed on both shards and the
+/// reference engine.
+#[test]
+fn routed_logits_match_single_engine_zoo_wide() {
+    let _serial = SERIAL.lock().unwrap();
+    const SPEC: &str =
+        "tiny,alexnet:16:64,googlenet:16:64,vgg16:16:32,vgg19:16:32,nin:16:64";
+    const SEED: u64 = 0x7e7215;
+    let spec = ModelSetSpec::parse(SPEC).unwrap();
+
+    let mut handles = Vec::new();
+    let mut addrs = Vec::new();
+    for i in 0..2 {
+        let engine = spec.build_engine(1, SEED, 2).unwrap();
+        let h = ShardServer::spawn(
+            format!("shard-{i}"),
+            engine,
+            "127.0.0.1:0".parse().unwrap(),
+        )
+        .unwrap();
+        addrs.push(h.addr());
+        handles.push(h);
+    }
+    let router = Router::connect(
+        &addrs,
+        RouterConfig { timeout: Duration::from_secs(60), ..RouterConfig::default() },
+    )
+    .unwrap();
+    let reference = spec.build_engine(1, SEED, 2).unwrap();
+    let session = reference.session();
+
+    let mut names = router.model_names();
+    names.sort();
+    assert_eq!(names, ["alexnet", "googlenet", "nin", "tiny", "vgg16", "vgg19"]);
+
+    let mut rng = Rng::new(41);
+    for model in &names {
+        let (c, hw) = router.model_shape(model).expect("Hello advertises the shape");
+        for k in 0..2 {
+            let image = image_for(&mut rng, c, hw);
+            let routed = router.infer(model, &image).unwrap();
+            let local = session.infer_batch(model, &[image]).unwrap();
+            assert_eq!(
+                routed.logits, local[0].logits,
+                "model `{model}` image {k}: routed logits diverged from the single engine"
+            );
+            assert_eq!(routed.argmax, local[0].argmax);
+        }
+    }
+
+    // Router accounting: everything submitted completed, nothing is
+    // still in flight, and no shard died.
+    let m = router.metrics();
+    let submitted: u64 = m.shards.iter().map(|s| s.submitted).sum();
+    let completed: u64 = m.shards.iter().map(|s| s.completed).sum();
+    assert_eq!(submitted, completed);
+    assert_eq!(submitted, 2 * names.len() as u64);
+    assert!(m.shards.iter().all(|s| s.alive && s.inflight == 0 && s.failed == 0));
+
+    router.close();
+    reference.shutdown();
+    for h in handles {
+        h.shutdown();
+    }
+}
+
+/// (d) The kill drill: a shard dying with tickets outstanding fails
+/// every one of them *typed* within the deadline (no hangs), and the
+/// surviving shard keeps serving.
+#[test]
+fn killed_shard_fails_outstanding_tickets_and_survivors_serve() {
+    let _serial = SERIAL.lock().unwrap();
+    const SEED: u64 = 0x7e7215;
+    let spec = ModelSetSpec::parse("tiny").unwrap();
+    let timeout = Duration::from_secs(5);
+
+    let mut handles = Vec::new();
+    let mut addrs = Vec::new();
+    for i in 0..2 {
+        let engine = spec.build_engine(1, SEED, 4).unwrap();
+        let h = ShardServer::spawn(
+            format!("shard-{i}"),
+            engine,
+            "127.0.0.1:0".parse().unwrap(),
+        )
+        .unwrap();
+        addrs.push(h.addr());
+        handles.push(Some(h));
+    }
+    let router =
+        Router::connect(&addrs, RouterConfig { timeout, ..RouterConfig::default() }).unwrap();
+
+    // Flood the primary with submissions, then kill it immediately —
+    // the engine cannot have drained them all.
+    let mut rng = Rng::new(17);
+    let tickets: Vec<_> = (0..64)
+        .map(|_| router.submit("tiny", &image_for(&mut rng, 1, 16)).unwrap())
+        .collect();
+    let primary = tickets[0].shard;
+    handles[primary].take().unwrap().kill();
+
+    let t0 = Instant::now();
+    let mut ok = 0usize;
+    let mut down = 0usize;
+    for t in &tickets {
+        match router.wait(t) {
+            Ok(_) => ok += 1,
+            Err(ClusterError::ShardDown { .. }) | Err(ClusterError::Timeout { .. }) => down += 1,
+            Err(other) => panic!("ticket {} got a non-drill error: {other}", t.seq),
+        }
+    }
+    let waited = t0.elapsed();
+    assert_eq!(ok + down, tickets.len(), "every ticket must reach a terminal state");
+    assert!(down > 0, "the kill caught no outstanding ticket — drill did not exercise the sweep");
+    assert!(
+        waited < timeout + Duration::from_secs(5),
+        "draining 64 tickets took {waited:?} — the sweep must not serialize on the deadline"
+    );
+    assert_eq!(router.alive_count(), 1);
+
+    // The survivor serves: the router routes around the dead shard.
+    for _ in 0..4 {
+        let resp = router.infer("tiny", &image_for(&mut rng, 1, 16)).unwrap();
+        assert_eq!(resp.shard, format!("shard-{}", 1 - primary));
+    }
+
+    // And the loadgen sees typed failures as data, not a wedge.
+    let report = loadgen::run(
+        &router,
+        &loadgen::LoadgenConfig { requests: 8, clients: 2, seed: 3, models: vec![] },
+    )
+    .unwrap();
+    assert_eq!(report.done + report.failed, 8);
+    assert_eq!(report.done, 8, "survivor-only load must fully succeed");
+
+    router.close();
+    if let Some(h) = handles[1 - primary].take() {
+        h.shutdown();
+    }
+}
+
+/// (e) A shard that accepts and says Hello but never answers converts
+/// to `Timeout` at the deadline — a stall is never a hang.
+#[test]
+fn black_hole_shard_times_out_at_the_deadline() {
+    let _serial = SERIAL.lock().unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let hole = std::thread::spawn(move || {
+        let (mut stream, _) = listener.accept().unwrap();
+        let hello = Message::Hello {
+            shard: "black-hole".into(),
+            models: vec![WireModel { name: "tiny".into(), in_c: 1, in_hw: 16 }],
+        };
+        hello.encode_to(&mut stream).unwrap();
+        stream.flush().unwrap();
+        // Swallow everything until the router hangs up.
+        let mut sink = [0u8; 4096];
+        while matches!(stream.read(&mut sink), Ok(n) if n > 0) {}
+    });
+
+    let timeout = Duration::from_millis(300);
+    let router =
+        Router::connect(&[addr], RouterConfig { timeout, ..RouterConfig::default() }).unwrap();
+    let mut rng = Rng::new(5);
+    let t0 = Instant::now();
+    let err = router.infer("tiny", &image_for(&mut rng, 1, 16)).unwrap_err();
+    let waited = t0.elapsed();
+    assert!(
+        matches!(err, ClusterError::Timeout { .. }),
+        "expected Timeout, got: {err}"
+    );
+    assert_eq!(err.kind(), FailKind::Timeout);
+    assert!(waited >= timeout, "returned before the deadline: {waited:?}");
+    assert!(waited < timeout + Duration::from_secs(5), "deadline overshot: {waited:?}");
+
+    router.close();
+    hole.join().unwrap();
+}
+
+/// (f) Supervisor end-to-end over real `tetris shard` child processes:
+/// ready handshake, serving, kill → restart, shutdown.
+#[test]
+fn supervisor_restarts_a_killed_shard_process() {
+    let _serial = SERIAL.lock().unwrap();
+    let sup = Supervisor::start(SupervisorConfig {
+        program: Some(env!("CARGO_BIN_EXE_tetris").into()),
+        shards: 2,
+        models: "tiny".into(),
+        workers: 1,
+        seed: 0x7e7215,
+        max_batch: 4,
+        ..SupervisorConfig::default()
+    })
+    .unwrap();
+    let addrs = sup.addrs();
+    assert_eq!(addrs.len(), 2);
+
+    let config = RouterConfig { timeout: Duration::from_secs(30), ..RouterConfig::default() };
+    let router = Router::connect(&addrs, config.clone()).unwrap();
+    let mut rng = Rng::new(23);
+    router.infer("tiny", &image_for(&mut rng, 1, 16)).unwrap();
+    router.close();
+
+    // The drill: kill child 0 and wait for the monitor to respawn it.
+    assert!(sup.kill_shard(0), "slot 0 had no live child");
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while sup.restarts(0) == 0 {
+        assert!(!sup.is_broken(0), "breaker tripped on a single kill");
+        assert!(Instant::now() < deadline, "shard-0 was not restarted in time");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // A fresh router reaches the restarted cluster and serving works.
+    let router = Router::connect(&sup.addrs(), config).unwrap();
+    let resp = router.infer("tiny", &image_for(&mut rng, 1, 16)).unwrap();
+    assert!(!resp.logits.is_empty());
+    router.close();
+    sup.shutdown();
+}

@@ -55,12 +55,28 @@ TETRIS_PROP_CASES=24 cargo test -q --test plan_tune
 echo "== activation-skipping sweep (TETRIS_PROP_CASES=24) =="
 TETRIS_PROP_CASES=24 cargo test -q --test plan_skip
 
+# The cluster wire-codec sweep (ISSUE 9) under the same knob: arbitrary
+# messages round-trip bit-exactly, and truncating or corrupting a frame
+# anywhere is always rejected.
+echo "== cluster wire sweep (TETRIS_PROP_CASES=24) =="
+TETRIS_PROP_CASES=24 cargo test -q --test cluster wire_codec
+
 if [ "$QUICK" -eq 0 ]; then
     # Tune smoke on a small model: the full candidate table, the chosen
     # schedule, and measured-vs-predicted peak from one traced image.
     echo "== tetris tune smoke (nin ÷16 @64², 8 MiB) =="
     cargo run --release --quiet -- tune --network nin --scale 16 --hw 64 \
         --budget-mb 8 --workers 2 --measure
+
+    # Cluster smoke (ISSUE 9): two supervised shard processes on
+    # loopback, closed-loop load through the consistent-hash router,
+    # and the kill-one drill — shard-0 dies mid-flight, every
+    # outstanding ticket must complete as a typed failure (zero
+    # hangs) while the survivor keeps serving. Exit status is the
+    # gate: cluster_main fails unless the accounting closes.
+    echo "== tetris cluster smoke (2 shards, kill-one drill) =="
+    cargo run --release --quiet -- cluster --shards 2 --models tiny \
+        --requests 48 --clients 4 --workers 1 --kill-one
 fi
 
 if cargo clippy --version >/dev/null 2>&1; then
