@@ -15,7 +15,7 @@ use tetris::kneading::{knead_group, knead_lane, Lane};
 use tetris::model::reference::forward_reference;
 use tetris::model::weights::{profile_with, synthetic_loaded, DensityCalibration};
 use tetris::model::{zoo, Tensor};
-use tetris::plan::{CompiledNetwork, ExecOpts, Walk, DEFAULT_TILE_ROWS};
+use tetris::plan::{CompiledNetwork, ExecOpts, Kernel, Walk, DEFAULT_TILE_ROWS};
 use tetris::runtime::quantized;
 use tetris::sac::SacUnit;
 use tetris::util::bench::Harness;
@@ -513,6 +513,7 @@ fn main() {
             walk: None,
             arm_threads: None,
             skip_zero_activations: None,
+            kernel: None,
         };
         let tuned_opts = ExecOpts {
             tile_rows: Some(tuned.tile_rows),
@@ -520,6 +521,7 @@ fn main() {
             walk: tuned.walk,
             arm_threads: tuned.arm_threads,
             skip_zero_activations: None,
+            kernel: None,
         };
         assert_eq!(
             plan.execute_opts(img, tuned_opts).unwrap(),
@@ -757,6 +759,61 @@ fn main() {
             assert!(matches!(back, Message::Done { .. }));
             bytes.len()
         });
+    }
+
+    // 16. ISSUE 10: the decoded-lane conv kernel. Every zoo model runs
+    //     the same streaming schedule under both conv inner loops —
+    //     the compile-time decoded schedule (the default) and the
+    //     legacy per-pixel splitter walk — with bit-exactness asserted
+    //     before timing. The traced runs also pin the energy
+    //     accounting: both kernels must report identical slot-decode /
+    //     segment-add totals (the decoded path charges the precomputed
+    //     per-window constants; the legacy path counts as it splits).
+    //     Key names avoid every gated suffix in
+    //     scripts/bench_compare.py (`_peak_bytes`, `_skipped_rows`,
+    //     `_skipped_windows`, `_sim_cycles`), so these rows report as
+    //     informational and later runs track throughput without
+    //     failing CI on wall-clock noise.
+    let kernel_models: Vec<(&str, &CompiledNetwork, &Tensor<i32>)> = vec![
+        ("alexnet", &aplan, &aimg),
+        ("googlenet", &gplan, &gimg),
+        ("vgg16", &vplan, &vimg),
+        ("vgg19", &v19plan, &v19img),
+        ("nin", &nplan, &nimg),
+    ];
+    for (name, plan, img) in kernel_models {
+        let decoded = ExecOpts::streaming(4).with_workers(2).with_kernel(Kernel::Decoded);
+        let legacy = ExecOpts::streaming(4).with_workers(2).with_kernel(Kernel::Legacy);
+        assert_eq!(
+            plan.execute_opts(img, decoded).unwrap(),
+            plan.execute_opts(img, legacy).unwrap(),
+            "{name}: decoded and legacy kernels must agree before being timed"
+        );
+        h.bench(&format!("decoded-kernel/{name}-decoded"), || {
+            plan.execute_opts(img, decoded).unwrap().len()
+        });
+        h.bench(&format!("decoded-kernel/{name}-legacy"), || {
+            plan.execute_opts(img, legacy).unwrap().len()
+        });
+        let (_, dt) = plan.execute_traced(img, decoded).unwrap();
+        let (_, lt) = plan.execute_traced(img, legacy).unwrap();
+        assert_eq!(
+            (dt.slot_decodes(), dt.segment_adds()),
+            (lt.slot_decodes(), lt.segment_adds()),
+            "{name}: kernels must charge identical decode/add energy counters"
+        );
+        let d_med = median(h.results(), &format!("decoded-kernel/{name}-decoded"));
+        let l_med = median(h.results(), &format!("decoded-kernel/{name}-legacy"));
+        h.metric_row(
+            &format!("decoded-kernel/{name}"),
+            vec![
+                ("decoded_windows_per_sec".into(), dt.total_windows() as f64 / d_med),
+                ("legacy_windows_per_sec".into(), lt.total_windows() as f64 / l_med),
+                ("speedup_vs_legacy_x".into(), l_med / d_med),
+                ("slot_decodes".into(), dt.slot_decodes() as f64),
+                ("segment_adds".into(), dt.segment_adds() as f64),
+            ],
+        );
     }
 
     h.emit();

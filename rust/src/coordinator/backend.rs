@@ -51,6 +51,15 @@ pub trait InferBackend {
         None
     }
 
+    /// Cumulative SAC energy counters — `(splitter slot decodes,
+    /// segment-register adds)` over every traced batch this backend
+    /// (and its `Arc`-sharing clones) has served, matching `sim`'s
+    /// activity accounting for the conv trunk. `None` for backends
+    /// that don't execute traced (the default, and always for PJRT).
+    fn sac_counters(&self) -> Option<(u64, u64)> {
+        None
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -83,12 +92,15 @@ pub struct SacBackend {
     skip_totals: Arc<SkipTotals>,
 }
 
-/// Cumulative zero-activation skip counters for one shared plan.
+/// Cumulative zero-activation skip + SAC energy counters for one
+/// shared plan (populated by traced execution — skip-armed serving).
 #[derive(Default)]
 struct SkipTotals {
     rows: std::sync::atomic::AtomicU64,
     windows: std::sync::atomic::AtomicU64,
     total_windows: std::sync::atomic::AtomicU64,
+    slot_decodes: std::sync::atomic::AtomicU64,
+    segment_adds: std::sync::atomic::AtomicU64,
 }
 
 impl SacBackend {
@@ -179,6 +191,8 @@ impl InferBackend for SacBackend {
             self.skip_totals.rows.fetch_add(stats.skipped_rows(), Relaxed);
             self.skip_totals.windows.fetch_add(stats.skipped_windows(), Relaxed);
             self.skip_totals.total_windows.fetch_add(stats.total_windows(), Relaxed);
+            self.skip_totals.slot_decodes.fetch_add(stats.slot_decodes(), Relaxed);
+            self.skip_totals.segment_adds.fetch_add(stats.segment_adds(), Relaxed);
             out
         } else {
             self.plan.execute(images)?
@@ -206,6 +220,19 @@ impl InferBackend for SacBackend {
             self.skip_totals.rows.load(Relaxed),
             self.skip_totals.windows.load(Relaxed),
             self.skip_totals.total_windows.load(Relaxed),
+        ))
+    }
+
+    fn sac_counters(&self) -> Option<(u64, u64)> {
+        use std::sync::atomic::Ordering::Relaxed;
+        // Populated by the same traced branch as the skip counters —
+        // untraced serving (skip lane off) has nothing to report.
+        if !self.plan.skip_zero_activations {
+            return None;
+        }
+        Some((
+            self.skip_totals.slot_decodes.load(Relaxed),
+            self.skip_totals.segment_adds.load(Relaxed),
         ))
     }
 

@@ -45,6 +45,13 @@ pub struct Metrics {
     pub skipped_rows_total: u64,
     pub skipped_windows_total: u64,
     pub total_windows: u64,
+    /// Cumulative SAC energy counters from traced SAC backends
+    /// (`InferBackend::sac_counters`): splitter slot decodes and
+    /// segment-register adds the conv trunks performed, matching
+    /// `sim`'s activity accounting. Zero while no traced model has
+    /// served a batch.
+    pub slot_decodes_total: u64,
+    pub segment_adds_total: u64,
     /// Per-request wall-clock latencies in µs — the exact-percentile
     /// source; a uniform reservoir once [`LATENCY_SAMPLE_CAP`] is hit.
     latencies_us: Vec<f64>,
@@ -74,6 +81,8 @@ impl Metrics {
             skipped_rows_total: 0,
             skipped_windows_total: 0,
             total_windows: 0,
+            slot_decodes_total: 0,
+            segment_adds_total: 0,
             latencies_us: Vec::new(),
             latency_seen: 0,
             reservoir_rng: 0x9E37_79B9_7F4A_7C15,
@@ -101,6 +110,14 @@ impl Metrics {
         self.skipped_rows_total = self.skipped_rows_total.max(rows);
         self.skipped_windows_total = self.skipped_windows_total.max(windows);
         self.total_windows = self.total_windows.max(total_windows);
+    }
+
+    /// Install the latest cumulative SAC energy counters from a traced
+    /// backend — running totals like the skip counters, so this
+    /// overwrites (monotone max) rather than accumulates.
+    pub fn set_sac_counters(&mut self, slot_decodes: u64, segment_adds: u64) {
+        self.slot_decodes_total = self.slot_decodes_total.max(slot_decodes);
+        self.segment_adds_total = self.segment_adds_total.max(segment_adds);
     }
 
     /// Fraction of conv windows served with their SAC work skipped
@@ -214,11 +231,19 @@ impl Metrics {
         } else {
             String::new()
         };
+        let sac = if self.slot_decodes_total > 0 || self.segment_adds_total > 0 {
+            format!(
+                "\nSAC activity: slot decodes={} segment adds={}",
+                self.slot_decodes_total, self.segment_adds_total,
+            )
+        } else {
+            String::new()
+        };
         format!(
             "requests: {}  batches: {}  mean batch: {:.2}\n\
              {pct}\n\
              host throughput: {:.1} req/s\n\
-             simulated Tetris cycles: {} ({:.3} ms @125MHz){skip}",
+             simulated Tetris cycles: {} ({:.3} ms @125MHz){skip}{sac}",
             self.requests_done,
             self.batches_done,
             self.batch_sizes.mean(),
@@ -282,6 +307,20 @@ mod tests {
         assert_eq!(m.total_windows, 2_000);
         assert!((m.window_skip_fraction() - 0.075).abs() < 1e-12);
         assert!(m.render().contains("activation skip"), "{}", m.render());
+    }
+
+    #[test]
+    fn sac_counters_snapshot_running_totals() {
+        let mut m = Metrics::new();
+        assert!(!m.render().contains("SAC activity"));
+        // Same overwrite-with-running-totals contract as the skip
+        // counters: a later, larger snapshot replaces the earlier one.
+        m.set_sac_counters(1_000, 400);
+        m.set_sac_counters(2_500, 900);
+        assert_eq!(m.slot_decodes_total, 2_500);
+        assert_eq!(m.segment_adds_total, 900);
+        assert!(m.render().contains("SAC activity"), "{}", m.render());
+        assert!(m.render().contains("slot decodes=2500"), "{}", m.render());
     }
 
     #[test]

@@ -10,7 +10,7 @@ use std::time::Duration;
 
 use crate::coordinator::batcher::BatchPolicy;
 use crate::model::{LoadedWeights, Network};
-use crate::plan::Walk;
+use crate::plan::{Kernel, Walk};
 use crate::runtime::quantized::PIPELINE_KS;
 use crate::util::pool::worker_count;
 
@@ -61,6 +61,7 @@ pub struct EngineBuilder {
     ks: usize,
     auto_tune: bool,
     skip_zero_activations: bool,
+    kernel: Option<Kernel>,
     artifacts_dir: PathBuf,
     specs: Vec<ModelSpec>,
 }
@@ -83,6 +84,7 @@ impl EngineBuilder {
             ks: PIPELINE_KS,
             auto_tune: true,
             skip_zero_activations: false,
+            kernel: None,
             artifacts_dir: PathBuf::from("artifacts"),
             specs: Vec::new(),
         }
@@ -177,6 +179,19 @@ impl EngineBuilder {
         self
     }
 
+    /// Pin every registered plan's conv inner loop
+    /// ([`Kernel::Decoded`] is the compiled default — the compile-time
+    /// decoded schedule with register-blocked strips;
+    /// [`Kernel::Legacy`] reverts to the per-pixel splitter walk).
+    /// Bit-exact either way (DESIGN.md §Decoded-lane kernel): the
+    /// kernel moves host wall time only, never logits or the serving
+    /// skip/energy counters. An explicit `ExecOpts::kernel` still
+    /// overrides per call.
+    pub fn kernel(mut self, kernel: Kernel) -> Self {
+        self.kernel = Some(kernel);
+        self
+    }
+
     /// Artifacts directory for [`BackendKind::Pjrt`] (default
     /// `artifacts`).
     pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Self {
@@ -240,6 +255,7 @@ impl EngineBuilder {
                         self.walk,
                         self.auto_tune,
                         self.skip_zero_activations,
+                        self.kernel,
                     )?;
                     lanes.push(ModelLane { factory });
                     metas.push(meta);

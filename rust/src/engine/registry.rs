@@ -9,7 +9,7 @@ use std::sync::Arc;
 use crate::config::{AccelConfig, CalibConfig};
 use crate::coordinator::backend::{InferBackend, PjrtBackend, SacBackend};
 use crate::model::{ConvLayer, LoadedWeights, Network, TopoOp};
-use crate::plan::{tune, CompiledNetwork, Walk};
+use crate::plan::{tune, CompiledNetwork, Kernel, Walk};
 use crate::sim::{sample::samples_from_loaded, simulate_network_with_samples, tetris::TetrisSim};
 
 use super::serve::BackendFactory;
@@ -158,6 +158,7 @@ pub(crate) fn compile_sac(
     walk: Option<Walk>,
     auto_tune: bool,
     skip_zero_activations: bool,
+    kernel: Option<Kernel>,
 ) -> crate::Result<(ModelMeta, BackendFactory)> {
     let ModelSpec { name, network, weights } = spec;
     let mode = weights.mode;
@@ -168,6 +169,11 @@ pub(crate) fn compile_sac(
     // `execute` get the skip lane without threading ExecOpts, and an
     // explicit ExecOpts::skip_zero_activations still overrides.
     plan.skip_zero_activations = skip_zero_activations;
+    // Same contract for the conv kernel: a builder pin replaces the
+    // compiled default (Decoded); ExecOpts::kernel still overrides.
+    if let Some(k) = kernel {
+        plan.kernel = k;
+    }
     // Timing from the registered weights' bit statistics, so serving
     // metrics report the paper's accelerator rather than the host.
     let cfg = AccelConfig { ks, mode, ..AccelConfig::default() };

@@ -333,5 +333,8 @@ pub(crate) fn run_batch<B: InferBackend + ?Sized>(
     if let Some((rows, windows, total)) = backend.skip_counters() {
         m.set_skip_counters(rows, windows, total);
     }
+    if let Some((decodes, adds)) = backend.sac_counters() {
+        m.set_sac_counters(decodes, adds);
+    }
     Ok(())
 }

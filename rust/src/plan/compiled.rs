@@ -11,7 +11,7 @@ use crate::kneading::{knead_lane, KneadedLane, Lane};
 use crate::model::{LoadedLayer, LoadedWeights, Network, Tensor};
 use crate::util::pool::{par_map, split_budget};
 
-use super::exec::{PipelineSummary, Walk};
+use super::exec::{Kernel, PipelineSummary, Walk};
 use super::graph::{derive_graph, segment_plan, FusedStage, PlanOp, Segment};
 
 /// Default output rows per fused tile (see [`CompiledNetwork::tile_rows`]).
@@ -19,6 +19,47 @@ use super::graph::{derive_graph, segment_plan, FusedStage, PlanOp, Segment};
 /// that the per-tile halo recompute (≤ `pool.k − pool.stride` conv rows
 /// per boundary) stays a small fraction of the tile.
 pub const DEFAULT_TILE_ROWS: usize = 4;
+
+/// One decoded SAC operation of a [`DecodedConv`] schedule: accumulate
+/// `sign × acts[slot]` into segment register `seg`. The slot-decode
+/// work the splitter performs per pixel under the legacy kernel
+/// (walking each kneaded weight's occupied mask and pointer table)
+/// happened exactly once, here, at plan compile — the executor's hot
+/// loop just streams these 8-byte entries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DecodedEntry {
+    /// Activation index into the filter's full im2col lane —
+    /// *absolute* (`group × ks + pointer`), so the executor indexes
+    /// one gathered window without per-group re-slicing.
+    pub slot: u32,
+    /// Destination segment register (the essential bit's position).
+    pub seg: u8,
+    /// `±1`, the kneaded weight's sign for this slot.
+    pub sign: i8,
+}
+
+/// Compile-time decoded schedule for one conv layer: every filter's
+/// kneaded lanes lowered into one flat entry array with CSR-style
+/// per-filter offsets, plus the per-window energy counts the schedule
+/// replaces — so the decoded kernel charges exactly what the legacy
+/// splitter walk would have counted.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DecodedConv {
+    /// All filters' entries, filter-major; within a filter the order
+    /// is group-ascending, kneaded-weight-in-order, occupied-bit-
+    /// ascending — the exact order `split_kneaded` accumulates in,
+    /// which is what makes the decoded kernel bit-exact (I5).
+    pub entries: Vec<DecodedEntry>,
+    /// CSR offsets into `entries`, length `filters + 1`: filter `f`
+    /// owns `entries[offsets[f]..offsets[f + 1]]`.
+    pub offsets: Vec<u32>,
+    /// Splitter slot decodes one executed window costs across all
+    /// filters (Σ `kw.slots().len()` — what the legacy kernel counts).
+    pub decodes_per_window: u64,
+    /// Segment-adder accumulations one executed window costs across
+    /// all filters (= `entries.len()`, one per essential bit).
+    pub adds_per_window: u64,
+}
 
 /// One conv layer's compile-time product: per-filter pre-kneaded lanes
 /// plus the shape metadata the executor needs (weights themselves are
@@ -32,6 +73,10 @@ pub struct CompiledConv {
     pub kw: usize,
     /// One kneaded weight lane per output filter, OIHW filter order.
     pub lanes: Vec<KneadedLane>,
+    /// The lanes lowered into the decoded-lane kernel's flat schedule
+    /// (DESIGN.md §Decoded-lane kernel). Derived from `lanes` at
+    /// compile — pure lowering, no re-kneading.
+    pub decoded: DecodedConv,
 }
 
 impl CompiledConv {
@@ -39,6 +84,41 @@ impl CompiledConv {
     pub fn lane_len(&self) -> usize {
         self.in_c * self.kh * self.kw
     }
+}
+
+/// Lower pre-kneaded filter lanes into the decoded kernel's flat
+/// schedule. Reads the kneaded form only (the zero-knead invariant
+/// holds: compile kneads once, this pass just re-indexes it), visiting
+/// slots in the same order `split_kneaded` does so the executor's
+/// accumulation order — and therefore every i64 partial sum — is
+/// identical to the legacy walk's.
+fn decode_conv_schedule(lanes: &[KneadedLane]) -> DecodedConv {
+    let mut entries = Vec::new();
+    let mut offsets = Vec::with_capacity(lanes.len() + 1);
+    offsets.push(0u32);
+    let mut decodes = 0u64;
+    for lane in lanes {
+        for (g, group) in lane.groups.iter().enumerate() {
+            let base = g * lane.ks;
+            for kw in &group.kneaded {
+                decodes += kw.slots().len() as u64;
+                let mut mask = kw.occupied_mask();
+                while mask != 0 {
+                    let b = mask.trailing_zeros() as usize;
+                    mask &= mask - 1;
+                    let p = kw.pointer(b);
+                    entries.push(DecodedEntry {
+                        slot: (base + p as usize) as u32,
+                        seg: b as u8,
+                        sign: group.sign_of(p) as i8,
+                    });
+                }
+            }
+        }
+        offsets.push(entries.len() as u32);
+    }
+    let adds = entries.len() as u64;
+    DecodedConv { entries, offsets, decodes_per_window: decodes, adds_per_window: adds }
 }
 
 /// One compiled fully-connected layer: one pre-kneaded lane per output
@@ -97,6 +177,12 @@ pub struct CompiledNetwork {
     /// every walk. Like `walk_hint`/`tile_rows` this is a scheduling
     /// knob, not plan identity: it stays out of [`Self::fingerprint`].
     pub skip_zero_activations: bool,
+    /// Default conv inner loop, consulted by `execute` when
+    /// `ExecOpts::kernel` is `None` — [`Kernel::Decoded`] unless a
+    /// caller (`EngineBuilder::kernel`) pins the legacy walk. Like
+    /// `walk_hint` this moves host time only, never logits or
+    /// counters, so it stays out of [`Self::fingerprint`].
+    pub kernel: Kernel,
     pub mode: Mode,
     /// Kneading stride the lanes were compiled with. Values are
     /// invariant to KS (SAC ≡ MAC for any stride); KS only moves the
@@ -147,13 +233,16 @@ impl CompiledNetwork {
             let wl = weights.layer(&l.name).expect("derive_graph validated layers");
             let lane_len = l.in_c * l.k * l.k;
             kneads_at_build += l.out_c as u64;
+            let lanes = knead_filter_lanes(wl, lane_len, ks, mode);
+            let decoded = decode_conv_schedule(&lanes);
             convs.push(CompiledConv {
                 name: l.name.clone(),
                 out_c: l.out_c,
                 in_c: l.in_c,
                 kh: l.k,
                 kw: l.k,
-                lanes: knead_filter_lanes(wl, lane_len, ks, mode),
+                lanes,
+                decoded,
             });
         }
         // Compile one lane set per executable FC head, in schedule
@@ -202,6 +291,7 @@ impl CompiledNetwork {
             tile_rows: DEFAULT_TILE_ROWS,
             walk_hint: None,
             skip_zero_activations: false,
+            kernel: Kernel::default(),
             mode,
             ks,
             kneads_at_build,
@@ -663,6 +753,83 @@ mod tests {
                     back,
                     &wl.weights[f * lane_len..(f + 1) * lane_len],
                     "{} filter {f}",
+                    conv.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn decoded_schedule_counts_match_kneaded_lanes() {
+        // The schedule's precomputed per-window energy constants must
+        // equal what the legacy splitter walk counts: one decode per
+        // slot of every kneaded weight, one add per essential bit.
+        let net = zoo::tiny_cnn();
+        let w = tiny_weights(4);
+        let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+        for conv in &plan.convs {
+            let sched = &conv.decoded;
+            let mut want_decodes = 0u64;
+            let mut want_adds = 0u64;
+            for lane in &conv.lanes {
+                for g in &lane.groups {
+                    for kw in &g.kneaded {
+                        want_decodes += kw.slots().len() as u64;
+                        want_adds += kw.occupancy() as u64;
+                    }
+                }
+            }
+            assert_eq!(sched.decodes_per_window, want_decodes, "{}", conv.name);
+            assert_eq!(sched.adds_per_window, want_adds, "{}", conv.name);
+            assert_eq!(sched.adds_per_window, sched.entries.len() as u64);
+            // CSR offsets: one span per filter, covering all entries.
+            assert_eq!(sched.offsets.len(), conv.lanes.len() + 1);
+            assert_eq!(sched.offsets[0], 0);
+            assert_eq!(*sched.offsets.last().unwrap() as usize, sched.entries.len());
+            assert!(sched.offsets.windows(2).all(|p| p[0] <= p[1]));
+            // Every slot indexes inside the gathered window.
+            let lane_len = conv.lane_len();
+            assert!(sched.entries.iter().all(|e| (e.slot as usize) < lane_len));
+            assert!(sched.entries.iter().all(|e| e.sign == 1 || e.sign == -1));
+        }
+    }
+
+    #[test]
+    fn decoded_schedule_replays_split_kneaded() {
+        // Replaying a filter's decoded entries over one gathered
+        // window produces the same partial sum as the legacy
+        // per-group splitter walk — the per-filter statement of the
+        // decoded kernel's bit-exactness (the executor-level sweep
+        // lives in rust/tests/plan_kernel.rs).
+        use crate::sac::{rear_adder_tree, split_kneaded, SegmentRegisters};
+        let net = zoo::tiny_cnn();
+        let w = tiny_weights(8);
+        let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+        for conv in &plan.convs {
+            let lane_len = conv.lane_len();
+            // A ramp with signs: distinct magnitudes catch slot
+            // permutation bugs the all-ones vector would hide.
+            let acts: Vec<i32> =
+                (0..lane_len).map(|i| (i as i32 % 97) - 48).collect();
+            let sched = &conv.decoded;
+            for (f, lane) in conv.lanes.iter().enumerate() {
+                let mut segs = SegmentRegisters::new(Mode::Fp16.weight_bits());
+                for (g, group) in lane.groups.iter().enumerate() {
+                    let start = g * lane.ks;
+                    let end = (start + lane.ks).min(lane_len);
+                    split_kneaded(group, &acts[start..end], &mut segs);
+                }
+                let want = rear_adder_tree(segs.values());
+                let mut banks = vec![0i64; Mode::Fp16.weight_bits()];
+                let lo = sched.offsets[f] as usize;
+                let hi = sched.offsets[f + 1] as usize;
+                for e in &sched.entries[lo..hi] {
+                    banks[e.seg as usize] += e.sign as i64 * acts[e.slot as usize] as i64;
+                }
+                assert_eq!(
+                    rear_adder_tree(&banks),
+                    want,
+                    "{} filter {f}: decoded replay diverged",
                     conv.name
                 );
             }

@@ -33,7 +33,7 @@
 //! boundary walk over the same `resolve_stage_dims` geometry.
 
 use super::compiled::CompiledNetwork;
-use super::exec::{self, StageDims, Walk};
+use super::exec::{self, Kernel, StageDims, Walk};
 use super::graph::{FusedStage, Segment};
 
 /// DRAM-equivalent bandwidth normalizer: bytes the accelerator's
@@ -104,12 +104,22 @@ pub struct CostModel<'a> {
     workers: usize,
     compute_cycles: u64,
     sparsity_survival: Option<f64>,
+    kernel: Kernel,
 }
 
 impl<'a> CostModel<'a> {
     /// Model `plan` at `workers` concurrent workers (clamped to ≥ 1).
+    /// The conv kernel defaults to [`Kernel::Legacy`]'s per-window
+    /// constant — attach the plan's actual kernel with
+    /// [`CostModel::with_kernel`].
     pub fn new(plan: &'a CompiledNetwork, workers: usize) -> Self {
-        Self { plan, workers: workers.max(1), compute_cycles: 0, sparsity_survival: None }
+        Self {
+            plan,
+            workers: workers.max(1),
+            compute_cycles: 0,
+            sparsity_survival: None,
+            kernel: Kernel::Legacy,
+        }
     }
 
     /// Attach the simulated per-image SAC cycle count (the compute
@@ -136,6 +146,39 @@ impl<'a> CostModel<'a> {
         self
     }
 
+    /// Attach the conv kernel the plan will execute with. The decoded
+    /// kernel retired the per-window slot-decode work to compile time,
+    /// so its per-window compute constant is lower: the compute leg is
+    /// scaled by the plan's add share — `Σ adds / (Σ decodes + Σ adds)`
+    /// over every conv's decoded schedule (1.0 when the plan has no
+    /// conv work to scale). Composes with
+    /// [`CostModel::with_measured_sparsity`]; like that factor it is
+    /// walk-invariant, so candidate *ranking* within one kernel is
+    /// unchanged — this keeps the tuner's absolute scores honest when
+    /// serving compares them against measured runs.
+    pub fn with_kernel(mut self, kernel: Kernel) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    /// The decoded kernel's compute-leg scale factor for this plan
+    /// (1.0 under [`Kernel::Legacy`]).
+    fn kernel_factor(&self) -> f64 {
+        if self.kernel == Kernel::Legacy {
+            return 1.0;
+        }
+        let (mut decodes, mut adds) = (0u64, 0u64);
+        for conv in self.plan.convs() {
+            decodes += conv.decoded.decodes_per_window;
+            adds += conv.decoded.adds_per_window;
+        }
+        if decodes + adds == 0 {
+            1.0
+        } else {
+            adds as f64 / (decodes + adds) as f64
+        }
+    }
+
     /// Score one (walk, tile height) candidate. Errors only if the
     /// plan's geometry fails to resolve at its declared input extent
     /// (which `compile` already validated, so this is effectively
@@ -147,9 +190,12 @@ impl<'a> CostModel<'a> {
             Walk::Pipelined => self.plan.pipelined_peak_bytes_estimate(tile_rows, self.workers),
         };
         let (traffic_bytes, halo_rows) = self.traffic(walk, tile_rows)?;
-        let compute_cycles = match self.sparsity_survival {
-            Some(s) => (self.compute_cycles as f64 * s).round() as u64,
-            None => self.compute_cycles,
+        let survival = self.sparsity_survival.unwrap_or(1.0);
+        let scale = survival * self.kernel_factor();
+        let compute_cycles = if scale == 1.0 {
+            self.compute_cycles
+        } else {
+            (self.compute_cycles as f64 * scale).round() as u64
         };
         Ok(CostEstimate { walk, tile_rows, peak_bytes, traffic_bytes, halo_rows, compute_cycles })
     }
@@ -380,6 +426,41 @@ mod tests {
             .estimate(Walk::Streaming, 2)
             .unwrap();
         assert_eq!(clamped.compute_cycles, 1_000);
+    }
+
+    #[test]
+    fn decoded_kernel_scales_the_compute_leg_only() {
+        let plan = tiny_plan();
+        let legacy = CostModel::new(&plan, 1)
+            .with_compute_cycles(1_000_000)
+            .estimate(Walk::Streaming, 2)
+            .unwrap();
+        let decoded = CostModel::new(&plan, 1)
+            .with_compute_cycles(1_000_000)
+            .with_kernel(Kernel::Decoded)
+            .estimate(Walk::Streaming, 2)
+            .unwrap();
+        // The factor is the plan's add share: adds / (decodes + adds),
+        // strictly inside (0, 1) for any real kneaded plan — decodes
+        // are width × kneaded weights, adds are the essential bits.
+        let (mut d, mut a) = (0u64, 0u64);
+        for conv in plan.convs() {
+            d += conv.decoded.decodes_per_window;
+            a += conv.decoded.adds_per_window;
+        }
+        assert!(d > 0 && a > 0);
+        let want = (1_000_000f64 * a as f64 / (d + a) as f64).round() as u64;
+        assert_eq!(decoded.compute_cycles, want, "compute leg scales by the add share");
+        assert!(decoded.compute_cycles < legacy.compute_cycles);
+        assert_eq!(decoded.traffic_bytes, legacy.traffic_bytes, "traffic is kernel-invariant");
+        assert_eq!(decoded.peak_bytes, legacy.peak_bytes, "peak is kernel-invariant");
+        // Explicitly pinning Legacy is the identity.
+        let pinned = CostModel::new(&plan, 1)
+            .with_compute_cycles(1_000_000)
+            .with_kernel(Kernel::Legacy)
+            .estimate(Walk::Streaming, 2)
+            .unwrap();
+        assert_eq!(pinned.compute_cycles, 1_000_000);
     }
 
     #[test]

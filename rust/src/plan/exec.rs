@@ -81,6 +81,31 @@ pub enum Walk {
     Pipelined,
 }
 
+/// Which conv inner loop runs inside [`conv_rows`] (shared by every
+/// walk). Results are bit-identical across kernels (invariant I5,
+/// property-swept in `rust/tests/plan_kernel.rs`); the kernel only
+/// moves host wall time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Kernel {
+    /// The decoded-lane fast path (the default): executes the flat
+    /// `(act_slot, segment, sign)` schedule lowered at plan compile
+    /// ([`CompiledConv::decoded`](super::DecodedConv)), processing a
+    /// strip of adjacent output pixels per decoded entry
+    /// (weight-stationary register blocking) over per-output-row
+    /// row-band gathers. The slot-decode work happened once at
+    /// compile, so the hot loop is a flat scan — but the energy
+    /// counters still charge the schedule's precomputed per-window
+    /// decode/add counts, keeping accounting identical to the legacy
+    /// walk.
+    #[default]
+    Decoded,
+    /// The original per-pixel walk: gather one im2col window, then
+    /// [`split_kneaded`] re-decodes every kneaded weight's occupied
+    /// slots for every output pixel of every filter. Kept as the
+    /// bit-exact reference the decoded path is swept against.
+    Legacy,
+}
+
 /// Execution-time knobs for [`CompiledNetwork::execute_opts`].
 /// `None` fields fall back to the plan's compiled defaults.
 #[derive(Debug, Clone, Copy, Default)]
@@ -122,6 +147,12 @@ pub struct ExecOpts {
     /// `rust/tests/plan_skip.rs`). `None` falls back to the plan's
     /// compiled `skip_zero_activations` default.
     pub skip_zero_activations: Option<bool>,
+    /// Conv inner-loop selection: the decoded-lane fast path or the
+    /// legacy per-pixel splitter walk (see [`Kernel`]). `None` falls
+    /// back to the plan's compiled `kernel` default
+    /// ([`Kernel::Decoded`]). Bit-exact either way — the kernel moves
+    /// host time only, never logits or energy counters.
+    pub kernel: Option<Kernel>,
 }
 
 impl ExecOpts {
@@ -175,6 +206,12 @@ impl ExecOpts {
         self.skip_zero_activations = Some(skip);
         self
     }
+
+    /// Pin the conv inner loop explicitly (see [`ExecOpts::kernel`]).
+    pub fn with_kernel(mut self, kernel: Kernel) -> Self {
+        self.kernel = Some(kernel);
+        self
+    }
 }
 
 /// Execution trace for one [`CompiledNetwork::execute_traced`] call:
@@ -198,6 +235,8 @@ pub struct AllocStats {
     skipped_rows: AtomicU64,
     skipped_windows: AtomicU64,
     total_windows: AtomicU64,
+    slot_decodes: AtomicU64,
+    segment_adds: AtomicU64,
     act_zero: AtomicU64,
     act_total: AtomicU64,
     act_essential: AtomicU64,
@@ -245,6 +284,24 @@ impl AllocStats {
     /// traced (skipping on or off).
     pub fn total_windows(&self) -> u64 {
         self.total_windows.load(Ordering::Relaxed)
+    }
+
+    /// Splitter slot decodes the conv trunk performed (legacy kernel)
+    /// or charged from the compile-time schedule (decoded kernel) —
+    /// one per slot of every kneaded weight of every executed window
+    /// × filter, exactly what `sim`'s SAC activity model counts.
+    /// Identical across kernels for the same input (skipped windows
+    /// are charged by neither). FC heads run their own splitter walk
+    /// and are not counted here — the counter covers the conv trunk.
+    pub fn slot_decodes(&self) -> u64 {
+        self.slot_decodes.load(Ordering::Relaxed)
+    }
+
+    /// Sign-adjusted segment-register accumulations the conv trunk
+    /// performed — one per essential bit routed, the paper's SAC add
+    /// count. Identical across kernels for the same input.
+    pub fn segment_adds(&self) -> u64 {
+        self.segment_adds.load(Ordering::Relaxed)
     }
 
     /// Fraction of conv windows the skip lane eliminated (0.0 when
@@ -345,6 +402,8 @@ struct Ctx<'a> {
     /// Activation-aware skip lane on: maintain zero masks at the seal
     /// points and skip all-zero rows/windows in `conv_rows`.
     skip: bool,
+    /// Conv inner-loop selection ([`ExecOpts::kernel`], resolved).
+    kernel: Kernel,
     stats: Option<&'a AllocStats>,
 }
 
@@ -433,6 +492,7 @@ impl CompiledNetwork {
             walk,
             arm_threads: opts.arm_threads,
             skip: opts.skip_zero_activations.unwrap_or(self.skip_zero_activations),
+            kernel: opts.kernel.unwrap_or(self.kernel),
             stats: trace.map(|()| &stats),
         };
         let input = x.clone();
@@ -765,6 +825,7 @@ fn run_tile(
                         o1,
                         ctx.plan.mode,
                         ctx.skip,
+                        ctx.kernel,
                         ctx.stats,
                         &mut RowTarget::Ring(&mut out),
                     );
@@ -1131,6 +1192,7 @@ fn stream_image(
                                 w1,
                                 ctx.plan.mode,
                                 ctx.skip,
+                                ctx.kernel,
                                 ctx.stats,
                                 dst,
                             )
@@ -1776,6 +1838,7 @@ fn pipeline_image(
                         w1,
                         ctx.plan.mode,
                         ctx.skip,
+                        ctx.kernel,
                         ctx.stats,
                         &mut target,
                     ),
@@ -2056,6 +2119,20 @@ impl RowSrc<'_> {
             RowSrc::Ring(r) => r.row_zero(c, y),
         }
     }
+
+    /// The first `w` values of input row `(c, y)` as one contiguous
+    /// slice — the decoded kernel's row-band gather hoists these once
+    /// per output row instead of calling [`RowSrc::get`] per tap.
+    #[inline]
+    fn row(&self, c: usize, y: usize, w: usize) -> &[i32] {
+        match self {
+            RowSrc::Tensor { x, b, .. } => {
+                let i = x.idx4(*b, c, y, 0);
+                &x.data()[i..i + w]
+            }
+            RowSrc::Ring(r) => &r.row(c, y)[..w],
+        }
+    }
 }
 
 fn row_src<'a>(
@@ -2095,11 +2172,30 @@ impl RowTarget<'_> {
 
 // ------------------------------------------------------------------ kernels
 
+/// Output-pixel strip width of the decoded kernel's register blocking
+/// (the `P` of DESIGN.md §Decoded-lane kernel): each decoded entry is
+/// read once and accumulated into `P` segment-register banks, SCNN
+/// style, before one rear-adder drain per pixel.
+const DECODE_BLOCK: usize = 4;
+
+/// Per-call counters one conv kernel invocation produced, flushed to
+/// the shared [`AllocStats`] atomics once by the [`conv_rows`]
+/// dispatcher.
+#[derive(Default)]
+struct ConvTally {
+    skipped_rows: u64,
+    skipped_windows: u64,
+    slot_decodes: u64,
+    segment_adds: u64,
+}
+
 /// Integer conv over pre-kneaded filter lanes, producing output rows
 /// `[o0, o1)` from its source (input tensor in place, or a ring) into
-/// its target. Identical arithmetic to the scalar references: same
-/// (c, ky, kx) gather order, same group windows, same `i64 → i32`
-/// cast.
+/// its target. Dispatches to the decoded-lane fast path or the legacy
+/// per-pixel splitter walk ([`Kernel`]); both produce identical
+/// arithmetic to the scalar references — same (c, ky, kx) gather
+/// order, same group windows, same `i64 → i32` cast — and identical
+/// skip/energy counters.
 #[allow(clippy::too_many_arguments)]
 fn conv_rows(
     conv: &CompiledConv,
@@ -2111,9 +2207,45 @@ fn conv_rows(
     o1: usize,
     mode: crate::config::Mode,
     skip: bool,
+    kernel: Kernel,
     stats: Option<&AllocStats>,
     out: &mut RowTarget,
 ) {
+    let tally = match kernel {
+        Kernel::Decoded => conv_rows_decoded(conv, input, d, pad, stride, o0, o1, mode, skip, out),
+        Kernel::Legacy => conv_rows_legacy(conv, input, d, pad, stride, o0, o1, mode, skip, out),
+    };
+    if let Some(s) = stats {
+        s.total_windows.fetch_add(((o1 - o0) * d.out_w) as u64, Ordering::Relaxed);
+        if tally.skipped_windows > 0 {
+            s.skipped_windows.fetch_add(tally.skipped_windows, Ordering::Relaxed);
+            s.skipped_rows.fetch_add(tally.skipped_rows, Ordering::Relaxed);
+        }
+        if tally.slot_decodes > 0 {
+            s.slot_decodes.fetch_add(tally.slot_decodes, Ordering::Relaxed);
+        }
+        if tally.segment_adds > 0 {
+            s.segment_adds.fetch_add(tally.segment_adds, Ordering::Relaxed);
+        }
+    }
+}
+
+/// The original per-pixel walk, kept verbatim as the bit-exact
+/// reference the decoded path is swept against: gather one im2col
+/// window, then re-decode every kneaded weight's slots per filter.
+#[allow(clippy::too_many_arguments)]
+fn conv_rows_legacy(
+    conv: &CompiledConv,
+    input: &RowSrc,
+    d: &StageDims,
+    pad: usize,
+    stride: usize,
+    o0: usize,
+    o1: usize,
+    mode: crate::config::Mode,
+    skip: bool,
+    out: &mut RowTarget,
+) -> ConvTally {
     let (kh, kw) = (conv.kh, conv.kw);
     let lane_len = conv.lane_len();
     let ow = d.out_w;
@@ -2123,7 +2255,7 @@ fn conv_rows(
     let band = RowContract { k: kh, stride, pad };
     let mut acts = vec![0i32; lane_len];
     let mut segs = SegmentRegisters::new(mode.weight_bits());
-    let (mut skipped_rows, mut skipped_windows) = (0u64, 0u64);
+    let mut tally = ConvTally::default();
     for oy in o0..o1 {
         // Row-level skip: if every in-bounds input row under this
         // output row carries an all-zero mask, every window in the row
@@ -2141,8 +2273,8 @@ fn conv_rows(
                         out.put(f, oy, ox, 0);
                     }
                 }
-                skipped_rows += 1;
-                skipped_windows += ow as u64;
+                tally.skipped_rows += 1;
+                tally.skipped_windows += ow as u64;
                 continue;
             }
         }
@@ -2177,27 +2309,178 @@ fn conv_rows(
                 for f in 0..nf {
                     out.put(f, oy, ox, 0);
                 }
-                skipped_windows += 1;
+                tally.skipped_windows += 1;
                 continue;
             }
             for (f, klane) in conv.lanes.iter().enumerate() {
                 for (g, group) in klane.groups.iter().enumerate() {
                     let start = g * klane.ks;
                     let end = (start + klane.ks).min(lane_len);
-                    split_kneaded(group, &acts[start..end], &mut segs);
+                    tally.slot_decodes += split_kneaded(group, &acts[start..end], &mut segs);
                 }
+                tally.segment_adds += segs.add_count();
                 out.put(f, oy, ox, rear_adder_tree(segs.values()) as i32);
                 segs.reset();
             }
         }
     }
-    if let Some(s) = stats {
-        s.total_windows.fetch_add(((o1 - o0) * ow) as u64, Ordering::Relaxed);
-        if skipped_windows > 0 {
-            s.skipped_windows.fetch_add(skipped_windows, Ordering::Relaxed);
-            s.skipped_rows.fetch_add(skipped_rows, Ordering::Relaxed);
+    tally
+}
+
+/// The decoded-lane fast path: executes the compile-time schedule
+/// [`CompiledConv::decoded`] over a strip of [`DECODE_BLOCK`] adjacent
+/// output pixels, with the per-output-row gather hoisted into
+/// row-band slices.
+///
+/// Bit-exact vs the legacy walk (invariant I5) because per (window,
+/// filter) every segment bank receives the identical addend sequence:
+/// the schedule was lowered group-ascending, kneaded-weight-in-order,
+/// occupied-bit-ascending — exactly the order `split_kneaded` visits —
+/// and i64 addition per bank is order-preserved across the strip (each
+/// pixel owns its own bank). Skip behaviour is also identical: the
+/// same row masks and the same per-pixel window-zero check run before
+/// any SAC work, so the skip counters match the legacy kernel's
+/// exactly.
+#[allow(clippy::too_many_arguments)]
+fn conv_rows_decoded(
+    conv: &CompiledConv,
+    input: &RowSrc,
+    d: &StageDims,
+    pad: usize,
+    stride: usize,
+    o0: usize,
+    o1: usize,
+    mode: crate::config::Mode,
+    skip: bool,
+    out: &mut RowTarget,
+) -> ConvTally {
+    let (kh, kw) = (conv.kh, conv.kw);
+    let lane_len = conv.lane_len();
+    let ow = d.out_w;
+    let nf = conv.lanes.len();
+    let bits = mode.weight_bits();
+    let sched = &conv.decoded;
+    let band = RowContract { k: kh, stride, pad };
+    // Strip scratch, allocated once per call: DECODE_BLOCK gathered
+    // windows side by side and DECODE_BLOCK segment-register banks.
+    let mut acts = vec![0i32; DECODE_BLOCK * lane_len];
+    let mut banks = vec![0i64; DECODE_BLOCK * bits];
+    let mut live = [0usize; DECODE_BLOCK];
+    // Row-band slices for the current output row: one per (channel,
+    // kernel row) tap, `None` when the tap row is padding. Hoisted out
+    // of the per-pixel gather — the interior columns then copy
+    // contiguous sub-slices with no bounds branching per tap.
+    let mut rows: Vec<Option<&[i32]>> = vec![None; d.in_c * kh];
+    // Output columns whose horizontal taps are all in-bounds:
+    // `ox * stride >= pad` and `ox * stride + kw - 1 - pad < in_w`.
+    // Everything outside is a pad-clipped prologue/epilogue column
+    // that takes the per-tap clipped path (identical to legacy).
+    let ox_lo = pad.div_ceil(stride.max(1));
+    let ox_hi = if d.in_w + pad >= kw { (d.in_w + pad - kw) / stride.max(1) } else { 0 };
+    let interior_ok = d.in_w + pad >= kw && ox_lo <= ox_hi;
+    let mut tally = ConvTally::default();
+    for oy in o0..o1 {
+        // Row-level skip — same mask walk and zero writes as legacy.
+        if skip {
+            let (iy0, iy1) = band.in_band(oy, d.in_h);
+            if (iy0..iy1).all(|iy| (0..d.in_c).all(|cc| input.row_zero(cc, iy))) {
+                for f in 0..nf {
+                    for ox in 0..ow {
+                        out.put(f, oy, ox, 0);
+                    }
+                }
+                tally.skipped_rows += 1;
+                tally.skipped_windows += ow as u64;
+                continue;
+            }
+        }
+        // Hoist this output row's row-band once.
+        for cc in 0..d.in_c {
+            for ky in 0..kh {
+                let iy = oy * stride + ky;
+                rows[cc * kh + ky] = if iy < pad || iy - pad >= d.in_h {
+                    None
+                } else {
+                    Some(input.row(cc, iy - pad, d.in_w))
+                };
+            }
+        }
+        let mut ox = 0;
+        while ox < ow {
+            let p = DECODE_BLOCK.min(ow - ox);
+            // Gather up to P adjacent windows into the strip buffer,
+            // compacting out the ones the window-level skip eliminates
+            // (zero writes now, no bank assigned) so the decoded pass
+            // below only touches live pixels — the skip counters stay
+            // identical to the legacy kernel's.
+            let mut n_live = 0;
+            for j in 0..p {
+                let oxx = ox + j;
+                let w0 = n_live * lane_len;
+                if interior_ok && oxx >= ox_lo && oxx <= ox_hi {
+                    // Branch-free interior: every horizontal tap is
+                    // in-bounds, so each (channel, kernel-row) tap is
+                    // one contiguous copy from the row-band.
+                    let x0 = oxx * stride - pad;
+                    for (t, row) in rows.iter().enumerate() {
+                        let dst = &mut acts[w0 + t * kw..w0 + (t + 1) * kw];
+                        match row {
+                            Some(r) => dst.copy_from_slice(&r[x0..x0 + kw]),
+                            None => dst.fill(0),
+                        }
+                    }
+                } else {
+                    // Pad-clipped prologue/epilogue column: per-tap
+                    // clip, replicating the legacy gather exactly.
+                    for (t, row) in rows.iter().enumerate() {
+                        for kx in 0..kw {
+                            let ix = oxx * stride + kx;
+                            acts[w0 + t * kw + kx] = match row {
+                                Some(r) if ix >= pad && ix - pad < d.in_w => r[ix - pad],
+                                _ => 0,
+                            };
+                        }
+                    }
+                }
+                if skip && acts[w0..w0 + lane_len].iter().all(|&a| a == 0) {
+                    for f in 0..nf {
+                        out.put(f, oy, oxx, 0);
+                    }
+                    tally.skipped_windows += 1;
+                } else {
+                    live[n_live] = oxx;
+                    n_live += 1;
+                }
+            }
+            if n_live > 0 {
+                // Energy accounting from the schedule's precomputed
+                // per-window constants — numerically identical to what
+                // the legacy splitter walk counts per executed window.
+                tally.slot_decodes += sched.decodes_per_window * n_live as u64;
+                tally.segment_adds += sched.adds_per_window * n_live as u64;
+                for f in 0..nf {
+                    banks[..n_live * bits].fill(0);
+                    let lo = sched.offsets[f] as usize;
+                    let hi = sched.offsets[f + 1] as usize;
+                    // Weight-stationary: read each decoded triple once,
+                    // accumulate it into every live pixel's bank.
+                    for e in &sched.entries[lo..hi] {
+                        let (slot, seg) = (e.slot as usize, e.seg as usize);
+                        let sign = e.sign as i64;
+                        for l in 0..n_live {
+                            banks[l * bits + seg] += sign * acts[l * lane_len + slot] as i64;
+                        }
+                    }
+                    for (l, &oxx) in live[..n_live].iter().enumerate() {
+                        let drained = rear_adder_tree(&banks[l * bits..(l + 1) * bits]);
+                        out.put(f, oy, oxx, drained as i32);
+                    }
+                }
+            }
+            ox += p;
         }
     }
+    tally
 }
 
 // The pool/GAP/relu bodies below duplicate the scalar reference paths
@@ -2886,6 +3169,73 @@ mod tests {
         assert_eq!(t.halo_recompute_rows(), 0);
     }
 
+    // ------------------------------------------- decoded-lane kernel
+
+    #[test]
+    fn decoded_kernel_is_bit_exact_across_walks_and_matches_legacy_counters() {
+        let net = tiny_with_overlapping_pools();
+        let w = varied_weights(&net);
+        let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+        let x = zero_banded_batch(2, 23);
+        let want =
+            plan.execute_opts(&x, ExecOpts::materializing().with_kernel(Kernel::Legacy)).unwrap();
+        for opts in [
+            ExecOpts::materializing(),
+            ExecOpts::tiled(2).with_workers(2),
+            ExecOpts::streaming(2).with_workers(2),
+            ExecOpts::pipelined(2).with_workers(2),
+        ] {
+            for skip in [false, true] {
+                let opts = opts.with_skip_zero_activations(skip);
+                let (dec, td) = plan
+                    .execute_traced(&x, opts.with_kernel(Kernel::Decoded))
+                    .unwrap();
+                let (leg, tl) = plan
+                    .execute_traced(&x, opts.with_kernel(Kernel::Legacy))
+                    .unwrap();
+                assert_eq!(dec, want, "decoded kernel changed logits (skip={skip})");
+                assert_eq!(leg, want, "legacy kernel changed logits (skip={skip})");
+                assert!(td.slot_decodes() > 0, "decoded run charged no decodes");
+                assert!(td.segment_adds() > 0, "decoded run charged no adds");
+                assert_eq!(
+                    (td.slot_decodes(), td.segment_adds()),
+                    (tl.slot_decodes(), tl.segment_adds()),
+                    "kernels disagree on decode/add energy (skip={skip})"
+                );
+                assert_eq!(
+                    (td.skipped_rows(), td.skipped_windows(), td.total_windows()),
+                    (tl.skipped_rows(), tl.skipped_windows(), tl.total_windows()),
+                    "kernels disagree on the skip counters (skip={skip})"
+                );
+                if skip {
+                    assert!(td.skipped_windows() > 0, "zero band produced no skips");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decoded_kernel_is_the_default_and_survives_branches() {
+        // tiny_branchy routes a pool-led arm, a two-conv arm, a 1×1
+        // arm, a concat, and a trailing overlapping pool through the
+        // decoded path (no kernel pinned anywhere → Decoded default);
+        // the legacy splitter walk must agree byte-for-byte and
+        // counter-for-counter across the branch fan-out.
+        let net = tiny_branchy();
+        let w = varied_weights(&net);
+        let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+        assert_eq!(plan.kernel, Kernel::Decoded, "compile must default to the fast path");
+        let x = zero_banded_batch(2, 37);
+        let opts = ExecOpts::pipelined(2).with_workers(2);
+        let (dec, td) = plan.execute_traced(&x, opts).unwrap();
+        let (leg, tl) = plan.execute_traced(&x, opts.with_kernel(Kernel::Legacy)).unwrap();
+        assert_eq!(dec, leg, "default (decoded) kernel diverged from legacy");
+        assert!(td.slot_decodes() > 0 && td.segment_adds() > 0);
+        assert_eq!(td.slot_decodes(), tl.slot_decodes());
+        assert_eq!(td.segment_adds(), tl.segment_adds());
+        assert_eq!(td.total_windows(), tl.total_windows());
+    }
+
     // Plan ≡ scalar-forward equivalence (invariant I5) lives in
     // rust/tests/plan_exec.rs (tiny CNN / VGG block) and
     // rust/tests/plan_topology.rs (full declared-topology zoo); the
@@ -2893,5 +3243,6 @@ mod tests {
     // streaming-vs-tiled property sweep and FC-stack logits pins in
     // rust/tests/plan_streaming.rs; zero-rekneading in
     // plan_zero_knead.rs; the skip-on ≡ skip-off ≡ reference property
-    // sweep in rust/tests/plan_skip.rs.
+    // sweep in rust/tests/plan_skip.rs; the decoded ≡ legacy ≡
+    // reference kernel sweep in rust/tests/plan_kernel.rs.
 }

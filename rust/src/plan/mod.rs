@@ -45,7 +45,14 @@
 //!   at the ReLU points ride the rings (and one scan per materialized
 //!   segment input) so all-zero rows/windows skip their SAC walk —
 //!   bit-exact (I5), with skip counters and the measured
-//!   post-activation distribution in [`AllocStats`].
+//!   post-activation distribution in [`AllocStats`]. The conv inner
+//!   loop itself comes in two bit-identical kernels
+//!   ([`ExecOpts::kernel`]): the **decoded-lane** fast path (default)
+//!   executes the flat compile-time schedule
+//!   ([`compiled::DecodedConv`]) over register-blocked strips of
+//!   output pixels with row-band gather reuse, and the **legacy**
+//!   per-pixel splitter walk is kept as the reference it is
+//!   property-swept against (`rust/tests/plan_kernel.rs`).
 //! * [`cost`] — the roofline-style analytical cost model behind the
 //!   auto-tuner: per-candidate predicted peak bytes (the plan's
 //!   walk-matched estimators), DRAM-equivalent traffic (boundary maps
@@ -78,8 +85,10 @@ pub mod exec;
 pub mod graph;
 pub mod tune;
 
-pub use compiled::{CompiledConv, CompiledFc, CompiledNetwork, DEFAULT_TILE_ROWS};
+pub use compiled::{
+    CompiledConv, CompiledFc, CompiledNetwork, DecodedConv, DecodedEntry, DEFAULT_TILE_ROWS,
+};
 pub use cost::{CostEstimate, CostModel, DRAM_BYTES_PER_CYCLE, PEAK_BRACKET_FACTOR};
-pub use exec::{AllocStats, ExecOpts, PipelineSummary, Walk};
+pub use exec::{AllocStats, ExecOpts, Kernel, PipelineSummary, Walk};
 pub use graph::{derive_graph, segment_plan, FusedStage, PlanOp, RowContract, Segment};
 pub use tune::{tune, tune_pinned, TunedSchedule, TILE_LADDER};

@@ -180,7 +180,14 @@ pub fn candidates(
     workers: usize,
     compute_cycles: u64,
 ) -> crate::Result<Vec<CostEstimate>> {
-    let model = CostModel::new(plan, workers).with_compute_cycles(compute_cycles);
+    // The compute leg prices the kernel the plan will actually run:
+    // the decoded kernel's per-window constant is lower (slot decodes
+    // retired to compile time), so its absolute scores stay honest
+    // against measured runs. Kernel-invariant legs are untouched, so
+    // candidate ranking never depends on this.
+    let model = CostModel::new(plan, workers)
+        .with_compute_cycles(compute_cycles)
+        .with_kernel(plan.kernel);
     let mut out = Vec::with_capacity(3 * TILE_LADDER.len());
     for walk in [Walk::Tiled, Walk::Streaming, Walk::Pipelined] {
         for &t in &TILE_LADDER {
@@ -358,7 +365,17 @@ mod tests {
         let plan = tiny_plan();
         let table = candidates(&plan, 2, 1000).unwrap();
         assert_eq!(table.len(), 3 * TILE_LADDER.len());
-        assert!(table.iter().all(|c| c.compute_cycles == 1000));
+        // The compute leg is priced for the plan's kernel (Decoded by
+        // default): 1000 scaled by the plan's add share, identical for
+        // every candidate because the factor is walk/tile-invariant.
+        let want = CostModel::new(&plan, 2)
+            .with_compute_cycles(1000)
+            .with_kernel(plan.kernel)
+            .estimate(Walk::Tiled, 1)
+            .unwrap()
+            .compute_cycles;
+        assert!(want < 1000, "the decoded kernel's per-window constant is lower");
+        assert!(table.iter().all(|c| c.compute_cycles == want));
         // The chosen in-budget schedule matches the best unpinned
         // candidate's tile (largest feasible = lowest traffic).
         let tuned = tune(&plan, u64::MAX, 2);

@@ -300,6 +300,7 @@ pub fn tune_report(
             walk: tuned.walk,
             arm_threads: tuned.arm_threads,
             skip_zero_activations: None,
+            kernel: None,
         };
         let (_, stats) = plan.execute_traced(&x, opts)?;
         writeln!(

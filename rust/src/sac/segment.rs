@@ -53,6 +53,16 @@ impl SegmentRegisters {
         out
     }
 
+    /// Allocation-free [`SegmentRegisters::drain`]: copy the segment
+    /// values into a caller-owned buffer (which must hold exactly
+    /// [`SegmentRegisters::bits`] values) and reset. The hot-path form
+    /// — `drain` clones a fresh `Vec` per call, which on the serving
+    /// path would mean one allocation per output pixel per filter.
+    pub fn drain_into(&mut self, dst: &mut [i64]) {
+        dst.copy_from_slice(&self.regs);
+        self.reset();
+    }
+
     /// Zero all registers without allocating (hot-path drain).
     pub fn reset(&mut self) {
         self.regs.iter_mut().for_each(|r| *r = 0);
@@ -78,6 +88,27 @@ mod tests {
         assert_eq!(drained[15], -3);
         assert!(s.values().iter().all(|&v| v == 0));
         assert_eq!(s.add_count(), 0);
+    }
+
+    #[test]
+    fn drain_into_matches_drain() {
+        let mut a = SegmentRegisters::new(16);
+        let mut b = SegmentRegisters::new(16);
+        for (bit, v) in [(0usize, 5i64), (0, 7), (3, -2), (15, -3)] {
+            a.accumulate(bit, v);
+            b.accumulate(bit, v);
+        }
+        let want = a.drain();
+        let mut got = vec![0i64; 16];
+        b.drain_into(&mut got);
+        assert_eq!(got, want);
+        assert!(b.values().iter().all(|&v| v == 0));
+        assert_eq!(b.add_count(), 0);
+        // Reusable: a stale buffer is fully overwritten.
+        b.accumulate(1, 9);
+        b.drain_into(&mut got);
+        assert_eq!(got[0], 0);
+        assert_eq!(got[1], 9);
     }
 
     #[test]

@@ -30,6 +30,9 @@ pub struct SacUnit {
     mode: Mode,
     segs: SegmentRegisters,
     activity: SacActivity,
+    /// Drain buffer reused across lanes (`drain_into`) — a unit that
+    /// processes a lane per output pixel must not allocate per drain.
+    scratch: Vec<i64>,
 }
 
 impl SacUnit {
@@ -38,6 +41,7 @@ impl SacUnit {
             mode,
             segs: SegmentRegisters::new(mode.weight_bits()),
             activity: SacActivity::default(),
+            scratch: vec![0; mode.weight_bits()],
         }
     }
 
@@ -66,8 +70,8 @@ impl SacUnit {
             self.activity.segment_adds += self.segs.add_count() - before;
         }
         self.activity.tree_drains += 1;
-        let drained = self.segs.drain();
-        super::adder_tree::rear_adder_tree(&drained)
+        self.segs.drain_into(&mut self.scratch);
+        super::adder_tree::rear_adder_tree(&self.scratch)
     }
 
     /// Knead + process in one step.

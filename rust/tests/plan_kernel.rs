@@ -1,0 +1,284 @@
+//! ISSUE 10: the decoded-lane conv kernel joins the I5 equivalence
+//! class, zoo-wide and property-swept.
+//!
+//! Pinned here:
+//! * a `util::prop` sweep over (network, walk, tile-or-budget,
+//!   workers, skip on/off): executing with `Kernel::Decoded` (the
+//!   default) is byte-identical to `Kernel::Legacy` and to the naive
+//!   scalar reference (logits included where the zoo declares heads),
+//!   and the two kernels report identical trace counters — slot
+//!   decodes, segment adds, skipped rows/windows, total windows — so
+//!   the decoded fast path can never drift from the paper's energy
+//!   accounting or from the PR 8 skip lane's CI-gated metrics;
+//! * the compile-time decoded schedule's precomputed per-window
+//!   constants equal what the legacy kneaded walk actually counts:
+//!   decodes = Σ slot-table lengths, adds = Σ essential-bit occupancy,
+//!   checked both statically (against the kneaded lanes) and
+//!   dynamically (traced counters agree kernel-vs-kernel).
+//!
+//! The case count honors `TETRIS_PROP_CASES` (scripts/verify.sh and CI
+//! run the sweep under an explicit knob); unset, it defaults to 12
+//! like the sibling sweeps in plan_skip.rs / plan_streaming.rs.
+
+use tetris::config::Mode;
+use tetris::model::reference::forward_reference;
+use tetris::model::weights::{synthetic_loaded_with_heads, DensityCalibration};
+use tetris::model::{zoo, Network, Tensor};
+use tetris::plan::{CompiledNetwork, ExecOpts, Kernel, Walk};
+use tetris::util::prop::{run_with, PropConfig};
+use tetris::util::rng::Rng;
+
+/// Signed noise with the top quarter of every channel zeroed (same
+/// construction as plan_skip.rs): the band survives every conv/pool,
+/// so the skip-armed cases in the sweep exercise the decoded kernel's
+/// window-zero lane compaction against real skips, not vacuously.
+fn banded_input(net: &Network, n: usize, hw: usize, rng: &mut Rng) -> Tensor<i32> {
+    let mut x = Tensor::zeros(&[n, net.layers[0].in_c, hw, hw]);
+    let band = hw / 4;
+    for (i, v) in x.data_mut().iter_mut().enumerate() {
+        if (i / hw) % hw >= band {
+            *v = rng.range_i64(-512, 512) as i32;
+        }
+    }
+    x
+}
+
+/// The scaled evaluation zoo (same scaling the other I5 suites pin),
+/// with head weights wherever the zoo declares heads so the
+/// equivalence covers image → logits.
+fn scaled_zoo() -> Vec<(Network, &'static str, usize)> {
+    vec![
+        (zoo::alexnet().scaled(16, 64), "alexnet", 64),
+        (zoo::googlenet().scaled(16, 64), "googlenet", 64),
+        (zoo::vgg16().scaled(16, 32), "vgg16", 32),
+        (zoo::vgg19().scaled(16, 32), "vgg19", 32),
+        (zoo::nin().scaled(16, 64), "nin", 64),
+    ]
+}
+
+fn prop_cases() -> usize {
+    std::env::var("TETRIS_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&c| c > 0)
+        .unwrap_or(12)
+}
+
+// ---------------- acceptance: decoded ≡ legacy ≡ reference, property-swept ----------------
+
+#[test]
+fn decoded_kernel_joins_the_equivalence_class_zoo_wide() {
+    let compiled: Vec<(Network, CompiledNetwork, Tensor<i32>, Tensor<i32>)> = scaled_zoo()
+        .into_iter()
+        .map(|(net, profile, hw)| {
+            let w = synthetic_loaded_with_heads(
+                &net,
+                Mode::Fp16,
+                12,
+                profile,
+                DensityCalibration::Fig2,
+                0x8000 + hw as u64,
+            )
+            .unwrap();
+            let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+            let mut rng = Rng::new(0x5C1B + hw as u64);
+            let x = banded_input(&net, 1, hw, &mut rng);
+            let want = forward_reference(&net, &w, &x);
+            (net, plan, x, want)
+        })
+        .collect();
+
+    run_with(
+        PropConfig { cases: prop_cases(), seed: 0x5EED_0010 },
+        "decoded ≡ legacy ≡ reference ∧ counters agree",
+        |rng| {
+            let net_i = rng.below(compiled.len() as u64) as usize;
+            let walk = match rng.below(3) {
+                0 => Walk::Tiled,
+                1 => Walk::Streaming,
+                _ => Walk::Pipelined,
+            };
+            let workers = 1 + rng.below(4) as usize;
+            let tile = if rng.chance(0.5) {
+                // Direct tile/advance step: 0 (whole image) or 1..=6.
+                rng.below(7) as usize
+            } else {
+                // Budget-derived, like serving: 1..=64 MiB through the
+                // walk-aware estimator.
+                let budget = (1u64 << rng.below(7)) * 1024 * 1024;
+                compiled[net_i].1.tile_rows_for_budget_walk(budget, workers, walk)
+            };
+            let skip = rng.chance(0.5);
+            (net_i, walk, tile, workers, skip)
+        },
+        |&(net_i, walk, tile, workers, skip)| {
+            let (net, plan, x, want) = &compiled[net_i];
+            let opts = ExecOpts::tiled(tile)
+                .with_workers(workers)
+                .with_walk(walk)
+                .with_skip_zero_activations(skip);
+            let (dec, t_dec) = plan
+                .execute_traced(x, opts.with_kernel(Kernel::Decoded))
+                .map_err(|e| e.to_string())?;
+            let (leg, t_leg) = plan
+                .execute_traced(x, opts.with_kernel(Kernel::Legacy))
+                .map_err(|e| e.to_string())?;
+            if &leg != want {
+                return Err(format!(
+                    "{}: legacy {walk:?} tile={tile} workers={workers} skip={skip} \
+                     diverged from reference",
+                    net.name
+                ));
+            }
+            if dec != leg {
+                return Err(format!(
+                    "{}: decoded {walk:?} tile={tile} workers={workers} skip={skip} \
+                     changed the bytes",
+                    net.name
+                ));
+            }
+            let dc = (
+                t_dec.slot_decodes(),
+                t_dec.segment_adds(),
+                t_dec.skipped_rows(),
+                t_dec.skipped_windows(),
+                t_dec.total_windows(),
+            );
+            let lc = (
+                t_leg.slot_decodes(),
+                t_leg.segment_adds(),
+                t_leg.skipped_rows(),
+                t_leg.skipped_windows(),
+                t_leg.total_windows(),
+            );
+            if dc != lc {
+                return Err(format!(
+                    "{}: kernel counters diverged ({walk:?} tile={tile} workers={workers} \
+                     skip={skip}) — decoded {dc:?} vs legacy {lc:?}",
+                    net.name
+                ));
+            }
+            if t_dec.slot_decodes() == 0 || t_dec.segment_adds() == 0 {
+                return Err(format!(
+                    "{}: conv trunk executed but charged no decode/add energy — \
+                     the counter equality is vacuous",
+                    net.name
+                ));
+            }
+            if skip && t_dec.skipped_windows() == 0 {
+                return Err(format!(
+                    "{}: zero-banded input produced no skips under the decoded kernel \
+                     ({walk:?} tile={tile})",
+                    net.name
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------- the decoded schedule's counts equal the kneaded walk's ----------------
+
+/// Static half: for every compiled zoo conv, the schedule lowered at
+/// compile time charges exactly what the legacy splitter walk counts —
+/// `decodes_per_window` = Σ slot-table lengths and `adds_per_window` =
+/// Σ essential-bit occupancy = entry count, over the conv's kneaded
+/// lanes. This is the per-window constant the executor multiplies by
+/// executed windows, so it IS the energy model.
+#[test]
+fn decoded_schedule_constants_match_the_kneaded_lanes_zoo_wide() {
+    for (net, profile, hw) in scaled_zoo() {
+        let w = synthetic_loaded_with_heads(
+            &net,
+            Mode::Fp16,
+            12,
+            profile,
+            DensityCalibration::Fig2,
+            0x8000 + hw as u64,
+        )
+        .unwrap();
+        let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+        for conv in plan.convs() {
+            let mut decodes = 0u64;
+            let mut adds = 0u64;
+            for lane in &conv.lanes {
+                for group in &lane.groups {
+                    for kw in &group.kneaded {
+                        decodes += kw.slots().len() as u64;
+                        adds += kw.occupancy() as u64;
+                    }
+                }
+            }
+            assert_eq!(
+                conv.decoded.decodes_per_window, decodes,
+                "{}/{}: decoded schedule under/over-counts slot decodes",
+                net.name, conv.name
+            );
+            assert_eq!(
+                conv.decoded.adds_per_window, adds,
+                "{}/{}: decoded schedule under/over-counts segment adds",
+                net.name, conv.name
+            );
+            assert_eq!(
+                conv.decoded.entries.len() as u64,
+                adds,
+                "{}/{}: one decoded entry per essential bit",
+                net.name, conv.name
+            );
+            assert_eq!(
+                conv.decoded.offsets.len(),
+                conv.lanes.len() + 1,
+                "{}/{}: CSR offsets must cover every filter",
+                net.name, conv.name
+            );
+        }
+    }
+}
+
+/// Dynamic half: one pinned single-worker run per zoo model, both
+/// kernels, skip off — the decoded path's `constant × executed
+/// windows` charge equals the legacy path's counted-as-it-splits
+/// totals exactly (not just statistically), and both are non-zero.
+#[test]
+fn traced_energy_counters_agree_kernel_vs_kernel_zoo_wide() {
+    for (net, profile, hw) in scaled_zoo() {
+        let w = synthetic_loaded_with_heads(
+            &net,
+            Mode::Fp16,
+            12,
+            profile,
+            DensityCalibration::Fig2,
+            0x8000 + hw as u64,
+        )
+        .unwrap();
+        let plan = CompiledNetwork::compile(&net, &w, 16, Mode::Fp16).unwrap();
+        let mut rng = Rng::new(0xE7E7 + hw as u64);
+        let x = banded_input(&net, 1, hw, &mut rng);
+        let opts = ExecOpts::streaming(4).with_workers(1);
+        let (dec, t_dec) =
+            plan.execute_traced(&x, opts.with_kernel(Kernel::Decoded)).unwrap();
+        let (leg, t_leg) =
+            plan.execute_traced(&x, opts.with_kernel(Kernel::Legacy)).unwrap();
+        assert_eq!(dec, leg, "{}: kernels disagree on bytes", net.name);
+        assert!(t_dec.slot_decodes() > 0, "{}: no decodes charged", net.name);
+        assert!(t_dec.segment_adds() > 0, "{}: no adds charged", net.name);
+        assert_eq!(
+            t_dec.slot_decodes(),
+            t_leg.slot_decodes(),
+            "{}: slot-decode totals diverged",
+            net.name
+        );
+        assert_eq!(
+            t_dec.segment_adds(),
+            t_leg.segment_adds(),
+            "{}: segment-add totals diverged",
+            net.name
+        );
+        assert_eq!(
+            t_dec.total_windows(),
+            t_leg.total_windows(),
+            "{}: window totals diverged",
+            net.name
+        );
+    }
+}

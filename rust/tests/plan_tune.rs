@@ -122,6 +122,7 @@ fn cost_model_peak_estimates_bracket_traced_ground_truth_zoo_wide() {
                 walk: Some(walk),
                 arm_threads: None,
                 skip_zero_activations: None,
+                kernel: None,
             };
             let (_, stats) = plan.execute_traced(x, opts).map_err(|e| e.to_string())?;
             let (m, p) = (stats.peak_bytes(), predicted.peak_bytes);
@@ -260,6 +261,7 @@ fn i5_holds_under_tuner_selected_schedules() {
                 walk: tuned.walk,
                 arm_threads: tuned.arm_threads,
                 skip_zero_activations: None,
+                kernel: None,
             };
             let got = plan.execute_opts(&x, opts).unwrap();
             assert_eq!(

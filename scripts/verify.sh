@@ -55,6 +55,13 @@ TETRIS_PROP_CASES=24 cargo test -q --test plan_tune
 echo "== activation-skipping sweep (TETRIS_PROP_CASES=24) =="
 TETRIS_PROP_CASES=24 cargo test -q --test plan_skip
 
+# The decoded-lane kernel sweep (ISSUE 10) under the same knob:
+# decoded ≡ legacy ≡ reference across networks × walks × tiles ×
+# budgets × skip on/off, with identical slot-decode / segment-add /
+# skip counters between the two kernels on every drawn case.
+echo "== decoded-kernel sweep (TETRIS_PROP_CASES=24) =="
+TETRIS_PROP_CASES=24 cargo test -q --test plan_kernel
+
 # The cluster wire-codec sweep (ISSUE 9) under the same knob: arbitrary
 # messages round-trip bit-exactly, and truncating or corrupting a frame
 # anywhere is always rejected.
